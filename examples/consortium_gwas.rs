@@ -1,0 +1,97 @@
+//! Genetic-consortium scenario: wide data, feature selection via the
+//! regularization path, and the privacy failure mode that motivates
+//! the paper.
+//!
+//!     cargo run --release --example consortium_gwas
+//!
+//! A GWAS-like consortium has FEW samples per site and MANY genetic
+//! covariates — exactly the regime where a leaked per-site gradient
+//! lets an attacker solve for every participant's case/control status
+//! (the inference attacks of [13, 25, 26]). This example:
+//!
+//!  1. fits an L2 path (λ sweep) securely and reports the effect-size
+//!     ranking a geneticist would read off;
+//!  2. runs the gradient inversion attack against a DataSHIELD-style
+//!     plaintext exchange of the same study — full recovery;
+//!  3. shows the secure protocol's shares are useless to the attacker.
+
+use privlr::attack::{center_view_gradient_error, response_recovery_accuracy};
+use privlr::baseline::datashield_fit;
+use privlr::config::ExperimentConfig;
+use privlr::coordinator::secure_fit;
+use privlr::data::synthetic;
+use privlr::fixed::FixedCodec;
+use privlr::shamir::ShamirParams;
+use privlr::util::rng::ChaCha20Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 4 sites × 12 participants, 16 variant covariates: wide data.
+    let mut ds = synthetic("gwas", 48, 16, 4, 0.0, 1.0, 2024);
+    ds.partition(4);
+    println!(
+        "consortium: {} participants across {} sites, {} covariates\n",
+        ds.n(),
+        ds.num_institutions(),
+        ds.d()
+    );
+
+    // ---- 1. secure regularization path ----
+    println!("secure λ-path (effect-size shrinkage):");
+    println!("{:>8}  {:>10}  {:>6}", "λ", "‖β‖₂", "iters");
+    let mut last_beta = Vec::new();
+    for lambda in [10.0, 3.0, 1.0, 0.3, 0.1] {
+        let cfg = ExperimentConfig {
+            lambda,
+            max_iters: 60,
+            ..Default::default()
+        };
+        let fit = secure_fit(&ds, &cfg)?;
+        let norm = fit.beta.iter().map(|b| b * b).sum::<f64>().sqrt();
+        println!("{lambda:>8}  {norm:>10.4}  {:>6}", fit.metrics.iterations);
+        last_beta = fit.beta;
+    }
+    // Rank top effects at the loosest penalty.
+    let mut ranked: Vec<(usize, f64)> = last_beta
+        .iter()
+        .enumerate()
+        .skip(1) // intercept
+        .map(|(i, b)| (i, b.abs()))
+        .collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\ntop-5 variants by |effect| at λ=0.1:");
+    for (i, mag) in ranked.iter().take(5) {
+        println!("  variant {i:>2}: |β| = {mag:.4}");
+    }
+
+    // ---- 2. the leak the paper prevents ----
+    println!("\n--- plaintext-summary exchange (DataSHIELD-style [6]) ---");
+    let (_, leaks) = datashield_fit(&ds, 1.0, 1e-10, 2)?;
+    let mut recovered_total = 0.0;
+    for site in 0..4 {
+        let (x, y) = ds.shard_data(site);
+        // 12 rows ≤ 16 covariates → the gradient is invertible.
+        let leak = &leaks[site];
+        let acc = response_recovery_accuracy(leak, &x, &y)?;
+        recovered_total += acc;
+        println!(
+            "  site {site}: attacker recovers {:.0}% of participants' case/control status",
+            acc * 100.0
+        );
+    }
+    assert!(recovered_total / 4.0 > 0.99, "attack should succeed");
+
+    // ---- 3. the same attacker against THIS protocol ----
+    println!("\n--- Shamir-protected exchange (this work) ---");
+    let params = ShamirParams::new(3, 5)?;
+    let codec = FixedCodec::default();
+    let mut rng = ChaCha20Rng::seed_from_u64(7);
+    let (x0, y0) = ds.shard_data(0);
+    let g0 = privlr::model::local_stats(&x0, &y0, &vec![0.0; ds.d()]).g;
+    let err = center_view_gradient_error(params, &codec, &g0, &mut rng);
+    println!(
+        "  curious center's best estimate of site 0's gradient is off by {err:.3e}\n  \
+         (a uniform field element — carries zero information below the 3-center threshold)"
+    );
+    println!("\nOK — identical science, none of the leakage.");
+    Ok(())
+}

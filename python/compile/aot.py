@@ -1,0 +1,109 @@
+"""AOT pipeline: lower the L2 model to HLO text artifacts for rust.
+
+Usage (normally via `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces one `local_stats_n{N}_d{D}.hlo.txt` per shape bucket plus
+`manifest.json` describing them. The rust runtime pads each
+institution's shard into the smallest bucket that fits (masked rows
+contribute zero), so a handful of buckets covers all workloads:
+
+    (2048,  85)  Insurance shards      (9822/5 ~ 1965 rows, 84+1 features)
+    (2048,  21)  Parkinsons shards     (5875/5 = 1175 rows, 20+1)
+    (262144, 6)  Synthetic-1M shards   (1e6/6 ~ 166667 rows, 6)
+    (16384,  6)  Fig-4 scaling shards  (10000 rows/institution)
+    (1024,   6)  quickstart/small runs
+    (128,    8)  integration-test bucket
+
+INTERCHANGE FORMAT: HLO *text*, not serialized HloModuleProto — the
+xla_extension 0.5.1 linked by the rust `xla` crate rejects jax>=0.5
+protos (64-bit instruction ids); the text parser reassigns ids and
+round-trips cleanly. Lowered with return_tuple=True; rust unpacks the
+1-tuple-of-3 via to_tuple3.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# (rows, features-incl-intercept) shape buckets — see module docstring.
+DEFAULT_BUCKETS = [
+    (2048, 85),
+    (2048, 21),
+    (262144, 6),
+    (16384, 6),
+    (1024, 6),
+    (128, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, d: int) -> str:
+    """Lower `local_stats` for one (n, d) bucket to HLO text."""
+    args = model.make_example_args(n, d)
+    lowered = jax.jit(model.local_stats).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, buckets=None, force: bool = False) -> dict:
+    """Build all artifacts; skips buckets whose file already exists
+    unless `force`. Returns the manifest dict."""
+    buckets = buckets or DEFAULT_BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for n, d in buckets:
+        name = f"local_stats_n{n}_d{d}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        if force or not os.path.exists(path):
+            t0 = time.time()
+            text = lower_bucket(n, d)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  lowered ({n:>7}, {d:>3}) -> {name}: "
+                  f"{len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s")
+        else:
+            print(f"  cached  ({n:>7}, {d:>3}) -> {name}")
+        entries.append({"path": name, "n": n, "d": d})
+    manifest = {"artifacts": entries, "dtype": "f64",
+                "format": "hlo-text/return-tuple"}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')} "
+          f"({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if artifact files exist")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated n:d pairs, e.g. 1024:6,2048:21")
+    args = ap.parse_args()
+    buckets = None
+    if args.buckets:
+        buckets = [tuple(int(v) for v in b.split(":")) for b in args.buckets.split(",")]
+    build(args.out_dir, buckets=buckets, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

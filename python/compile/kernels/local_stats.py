@@ -1,0 +1,150 @@
+"""Pallas kernel: blocked local-statistics accumulation (Layer 1).
+
+The hot spot of the whole protocol is the per-institution pass over the
+shard: `H_j = X^T diag(w) X` plus the gradient and deviance rides. This
+kernel tiles the row dimension into `(BLOCK_N, d)` VMEM blocks and, per
+grid step,
+
+  1. computes `z = X_b @ beta` (a `(BLOCK_N, d) @ (d,)` matvec),
+  2. derives `p`, `w = p(1-p)*mask`, the residual and the log-likelihood
+     elementwise on the VPU,
+  3. performs the rank-d update `X_b^T (w . X_b)` as a single
+     `(d, BLOCK_N) @ (BLOCK_N, d)` matmul — the MXU-shaped op —
+  4. accumulates H/g/dev into output refs that map every grid step to
+     the same block (the classic reduction-output pattern).
+
+TPU mapping notes (DESIGN.md "Hardware adaptation"): the accumulators
+live in the output VMEM block across grid steps; X streams HBM->VMEM
+once per iteration; per-tile VMEM = BLOCK_N*d*8 + d*d*8 + O(d) bytes,
+so BLOCK_N=512 at d=85 is ~3.6 MB f64 (~1.8 MB bf16/f32 on real TPU) —
+comfortably inside a 16 MB VMEM budget.
+
+interpret=True is REQUIRED here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers
+to plain HLO so the same artifact runs under the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import log_sigmoid
+
+# Default row-tile height. 512 keeps the f64 VMEM estimate under 4 MB
+# at the widest paper workload (d=85) while giving the MXU a deep
+# contraction dimension; see DESIGN.md for the sweep.
+DEFAULT_BLOCK_N = 512
+
+# Per-tile VMEM budget for auto block sizing (f64 CPU artifacts). A real
+# TPU has ~16 MB VMEM/core; we budget 4 MB for the X tile so the H
+# accumulator, vectors and double-buffering headroom fit comfortably.
+AUTO_VMEM_TILE_BYTES = 4 * 2**20
+
+
+def auto_block_n(n: int, d: int, itemsize: int = 8) -> int:
+    """Pick the largest power-of-two row tile that (a) divides n when
+    n is a power-of-two bucket, (b) keeps the X tile within the VMEM
+    budget, and (c) is at least 512 rows for MXU contraction depth.
+
+    Perf note (EXPERIMENTS.md §Perf): interpret-mode grid steps carry a
+    fixed per-step overhead, so narrow workloads (small d) want TALL
+    tiles — switching the 262144×6 bucket from 512-row tiles (512
+    steps) to 16384-row tiles (16 steps) cut end-to-end Synthetic-1M
+    runtime ~6×. On real TPU the same rule holds until the tile
+    approaches the VMEM budget.
+    """
+    budget_rows = max(1, AUTO_VMEM_TILE_BYTES // (d * itemsize))
+    bn = 512
+    while bn * 2 <= budget_rows and bn * 2 <= n:
+        bn *= 2
+    return min(bn, n)
+
+
+def _kernel(x_ref, y_ref, m_ref, beta_ref, h_ref, g_ref, dev_ref):
+    """One grid step over a (BLOCK_N, d) row tile."""
+    i = pl.program_id(0)
+    x = x_ref[...]  # (bn, d)
+    y = y_ref[...]  # (bn,)
+    m = m_ref[...]  # (bn,)
+    beta = beta_ref[...]  # (d,)
+
+    z = x @ beta  # (bn,)
+    p = jax.nn.sigmoid(z)
+    w = p * (1.0 - p) * m
+    # MXU-shaped rank-d update: (d, bn) @ (bn, d).
+    h = (x * w[:, None]).T @ x
+    r = m * (y - p)
+    g = r @ x
+    ll = y * log_sigmoid(z) + (1.0 - y) * log_sigmoid(-z)
+    dev = -2.0 * jnp.sum(m * ll)
+
+    @pl.when(i == 0)
+    def _init():
+        h_ref[...] = h
+        g_ref[...] = g
+        dev_ref[...] = dev.reshape(1)
+
+    @pl.when(i > 0)
+    def _accum():
+        h_ref[...] += h
+        g_ref[...] += g
+        dev_ref[...] += dev.reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def local_stats_kernel(x, y, mask, beta, *, block_n=None):
+    """Blocked Pallas computation of (H_j, g_j, dev_j) for one shard.
+
+    `block_n=None` picks the tile height via [`auto_block_n`].
+    Requires `x.shape[0] % min(block_n, n) == 0`; the AOT shape buckets
+    are powers of two so this always holds for artifact shapes.
+    """
+    n, d = x.shape
+    if block_n is None:
+        block_n = auto_block_n(n, d)
+    bn = min(block_n, n)
+    if n % bn != 0:
+        raise ValueError(f"rows {n} not divisible by block {bn}")
+    grid = (n // bn,)
+    dtype = x.dtype
+    out_shapes = (
+        jax.ShapeDtypeStruct((d, d), dtype),
+        jax.ShapeDtypeStruct((d,), dtype),
+        jax.ShapeDtypeStruct((1,), dtype),
+    )
+    h, g, dev = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),  # X row tiles
+            pl.BlockSpec((bn,), lambda i: (i,)),  # y row tiles
+            pl.BlockSpec((bn,), lambda i: (i,)),  # mask row tiles
+            pl.BlockSpec((d,), lambda i: (0,)),  # beta, replicated
+        ],
+        out_specs=(
+            pl.BlockSpec((d, d), lambda i: (0, 0)),  # H accumulator
+            pl.BlockSpec((d,), lambda i: (0,)),  # g accumulator
+            pl.BlockSpec((1,), lambda i: (0,)),  # dev accumulator
+        ),
+        out_shape=out_shapes,
+        interpret=True,  # CPU-PJRT compatibility; see module docstring
+    )(x, y, mask, beta)
+    return h, g, dev[0]
+
+
+def vmem_bytes(block_n: int, d: int, itemsize: int = 8) -> int:
+    """Estimated per-step VMEM footprint of the kernel (DESIGN.md/EXPERIMENTS.md
+    use this for the TPU feasibility analysis): X tile + H/g accumulators +
+    y/mask/beta vectors + the w/r temporaries."""
+    x_tile = block_n * d
+    h_acc = d * d
+    vectors = 2 * block_n + d + d  # y, mask, beta, g
+    temps = 4 * block_n  # z, p, w, r
+    return (x_tile + h_acc + vectors + temps) * itemsize
+
+
+def mxu_flops_per_step(block_n: int, d: int) -> int:
+    """MXU flops per grid step (the rank-d update dominates)."""
+    return 2 * block_n * d * d

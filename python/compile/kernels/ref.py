@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the local-statistics computation (L1 ground truth).
+
+The distributed Newton-Raphson protocol needs, per institution and per
+iteration (paper Eqs. 4-6, in 0/1 response coding):
+
+    H_j   = sum_i  m_i * w_i * x_i x_i^T        (w_i = p_i (1 - p_i))
+    g_j   = sum_i  m_i * (y_i - p_i) * x_i
+    dev_j = -2 sum_i m_i * (y_i log p_i + (1 - y_i) log(1 - p_i))
+
+`mask` (m) carries the row-padding scheme used by the AOT shape
+buckets: padded rows have m_i = 0 and contribute exactly zero to all
+three statistics. The Pallas kernel in `local_stats.py` must match
+this function elementwise (pytest enforces it); the rust twin is
+`rust/src/model.rs::local_stats`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def log_sigmoid(z):
+    """Numerically stable log(sigmoid(z)) = -softplus(-z)."""
+    return -jax.nn.softplus(-z)
+
+
+def local_stats_ref(x, y, mask, beta):
+    """Reference local statistics.
+
+    Args:
+      x:    (n, d) design matrix (leading intercept column by convention).
+      y:    (n,) 0/1 responses.
+      mask: (n,) 1.0 for real rows, 0.0 for padding.
+      beta: (d,) current coefficient estimate.
+
+    Returns:
+      (h, g, dev): (d, d) Hessian part, (d,) gradient part, () deviance.
+    """
+    z = x @ beta
+    p = jax.nn.sigmoid(z)
+    w = p * (1.0 - p) * mask
+    h = (x * w[:, None]).T @ x
+    r = mask * (y - p)
+    g = r @ x
+    # Stable deviance: y*log p + (1-y)*log(1-p) via log-sigmoid.
+    ll = y * log_sigmoid(z) + (1.0 - y) * log_sigmoid(-z)
+    dev = -2.0 * jnp.sum(mask * ll)
+    return h, g, dev

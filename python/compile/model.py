@@ -1,0 +1,71 @@
+"""Layer 2: the JAX compute graph the rust coordinator executes.
+
+`local_stats` is the function that gets AOT-lowered (one HLO artifact
+per shape bucket) and called from `rust/src/runtime.rs` on every
+institution, every Newton iteration. It delegates the heavy pass to
+the Pallas kernel (Layer 1) and is numerically identical to
+`kernels.ref.local_stats_ref` and to the rust twin in
+`rust/src/model.rs`.
+
+Everything here is build-time only: python never runs on the request
+path. f64 is enabled because the protocol's R^2 = 1.00 exactness claim
+(paper Fig 2) is checked at ~1e-9 against the centralized gold
+standard, beyond f32 resolution on ill-conditioned workloads.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels.local_stats import local_stats_kernel  # noqa: E402
+from .kernels.ref import local_stats_ref  # noqa: E402
+
+
+def local_stats(x, y, mask, beta, *, block_n=None):
+    """Per-institution summary statistics (H_j, g_j, dev_j).
+
+    This is the exported artifact entrypoint (`block_n=None` →
+    VMEM-budgeted auto tile, see `kernels.local_stats.auto_block_n`).
+    Returns a 3-tuple; the AOT pipeline lowers it with
+    return_tuple=True so the rust side unpacks with `to_tuple3`.
+    """
+    return local_stats_kernel(x, y, mask, beta, block_n=block_n)
+
+
+def local_stats_jnp(x, y, mask, beta):
+    """Pure-jnp variant (no Pallas) — used for L2-level A/B testing and
+    as a lowering fallback."""
+    return local_stats_ref(x, y, mask, beta)
+
+
+def newton_direction(h, g, beta, lam):
+    """Regularized Newton direction (Eq. 3): solve (H + lam I) delta =
+    g - lam*beta.
+
+    The production protocol performs this solve in rust on the
+    reconstructed global aggregates (the d x d system is tiny); this JAX
+    twin exists for end-to-end testing of the compute graph and for the
+    future fully-secure variant the paper sketches (secure matrix
+    inversion), where the solve itself would be lowered too.
+    """
+    d = beta.shape[0]
+    a = h + lam * jnp.eye(d, dtype=h.dtype)
+    rhs = g - lam * beta
+    return jnp.linalg.solve(a, rhs)
+
+
+def predict_proba(x, beta):
+    """sigma(X beta) — inference-time scoring."""
+    return jax.nn.sigmoid(x @ beta)
+
+
+def make_example_args(n, d, dtype=jnp.float64):
+    """ShapeDtypeStructs for AOT lowering of `local_stats` at (n, d)."""
+    return (
+        jax.ShapeDtypeStruct((n, d), dtype),  # x
+        jax.ShapeDtypeStruct((n,), dtype),  # y
+        jax.ShapeDtypeStruct((n,), dtype),  # mask
+        jax.ShapeDtypeStruct((d,), dtype),  # beta
+    )

@@ -1,0 +1,6 @@
+"""Make `import compile` work when pytest is invoked from the repo root
+(e.g. `pytest python/tests/ -q`) as well as from python/."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

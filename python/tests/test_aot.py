@@ -1,0 +1,100 @@
+"""AOT pipeline tests: lowering, manifest, HLO-text format contract."""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_bucket_produces_parseable_hlo_text():
+    text = aot.lower_bucket(32, 4)
+    # The rust loader's contract: HLO text with an ENTRY computation and
+    # an f64 tuple result of (d,d), (d,), scalar-ish shapes.
+    assert "ENTRY" in text
+    assert "f64[32,4]" in text
+    assert "f64[4,4]" in text
+    # return_tuple=True => tuple root
+    assert "tuple" in text.lower()
+
+
+def test_build_writes_manifest_and_is_idempotent(tmp_path):
+    out = str(tmp_path / "arts")
+    manifest = aot.build(out, buckets=[(32, 4), (64, 3)])
+    files = sorted(os.listdir(out))
+    assert "manifest.json" in files
+    assert "local_stats_n32_d4.hlo.txt" in files
+    assert "local_stats_n64_d3.hlo.txt" in files
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["artifacts"] == [
+        {"path": "local_stats_n32_d4.hlo.txt", "n": 32, "d": 4},
+        {"path": "local_stats_n64_d3.hlo.txt", "n": 64, "d": 3},
+    ]
+    # Second build with identical buckets skips lowering (cache check:
+    # mtimes must not change).
+    mtimes = {f: os.path.getmtime(os.path.join(out, f)) for f in files}
+    aot.build(out, buckets=[(32, 4), (64, 3)])
+    for f in files:
+        if f.endswith(".hlo.txt"):
+            assert os.path.getmtime(os.path.join(out, f)) == mtimes[f]
+
+
+def test_force_rebuild_rewrites(tmp_path):
+    out = str(tmp_path / "arts")
+    aot.build(out, buckets=[(32, 4)])
+    path = os.path.join(out, "local_stats_n32_d4.hlo.txt")
+    before = os.path.getmtime(path)
+    os.utime(path, (before - 100, before - 100))
+    aot.build(out, buckets=[(32, 4)], force=True)
+    assert os.path.getmtime(path) > before - 100
+
+
+def test_lowered_function_numerics_via_jit():
+    # The exact function being lowered (jitted local_stats at a bucket
+    # shape) must equal the reference on padded data -- this is what the
+    # rust runtime executes.
+    import jax.numpy as jnp
+
+    from compile.kernels.ref import local_stats_ref
+
+    n, d, real = 64, 4, 39
+    rng = np.random.default_rng(5)
+    x = np.zeros((n, d))
+    x[:real] = rng.normal(size=(real, d))
+    y = np.zeros(n)
+    y[:real] = (rng.random(real) < 0.5).astype(float)
+    mask = np.zeros(n)
+    mask[:real] = 1.0
+    beta = rng.normal(size=d) * 0.2
+
+    fitted = jax.jit(model.local_stats)(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask), jnp.asarray(beta)
+    )
+    expect = local_stats_ref(
+        jnp.asarray(x[:real]),
+        jnp.asarray(y[:real]),
+        jnp.ones(real),
+        jnp.asarray(beta),
+    )
+    for got, ref in zip(fitted, expect):
+        np.testing.assert_allclose(got, ref, atol=1e-10)
+
+
+def test_default_buckets_cover_paper_workloads():
+    buckets = set(aot.DEFAULT_BUCKETS)
+    # Insurance: 9822/5 institutions = 1965 rows max, d=85.
+    assert any(n >= 1965 and d == 85 for n, d in buckets)
+    # Parkinsons: 1175 rows, d=21.
+    assert any(n >= 1175 and d == 21 for n, d in buckets)
+    # Synthetic 1M over 6 institutions: 166667 rows, d=6.
+    assert any(n >= 166667 and d == 6 for n, d in buckets)
+    # Fig 4 scaling: 10000 rows/institution, d=6.
+    assert any(n >= 10000 and d == 6 for n, d in buckets)

@@ -1,0 +1,152 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, masks and dtypes; exact paper
+shapes are pinned as regression cases. This is the build-time gate
+that guards the artifact the rust runtime will execute.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.local_stats import (
+    auto_block_n,
+    local_stats_kernel,
+    mxu_flops_per_step,
+    vmem_bytes,
+)
+from compile.kernels.ref import local_stats_ref
+
+
+def make_case(n, d, seed, mask_tail=0, x_scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)) * x_scale
+    x[:, 0] = 1.0
+    y = (rng.random(n) < 0.4).astype(np.float64)
+    mask = np.ones(n)
+    if mask_tail:
+        mask[n - mask_tail:] = 0.0
+    beta = rng.normal(size=d) * 0.5
+    return (jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask), jnp.asarray(beta))
+
+
+def assert_matches_ref(args, block_n, atol=1e-10):
+    h_k, g_k, dev_k = local_stats_kernel(*args, block_n=block_n)
+    h_r, g_r, dev_r = local_stats_ref(*args)
+    np.testing.assert_allclose(h_k, h_r, atol=atol, rtol=1e-12)
+    np.testing.assert_allclose(g_k, g_r, atol=atol, rtol=1e-12)
+    np.testing.assert_allclose(dev_k, dev_r, atol=atol, rtol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=6),
+    block=st.sampled_from([8, 16, 32]),
+    d=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+    mask_frac=st.floats(min_value=0.0, max_value=0.9),
+)
+def test_kernel_matches_ref_hypothesis(n_blocks, block, d, seed, mask_frac):
+    n = n_blocks * block
+    mask_tail = int(n * mask_frac)
+    args = make_case(n, d, seed, mask_tail=mask_tail)
+    assert_matches_ref(args, block_n=block)
+
+
+@pytest.mark.parametrize(
+    "n,d",
+    [
+        (2048, 85),   # Insurance bucket
+        (2048, 21),   # Parkinsons bucket
+        (1024, 6),    # small synthetic bucket
+        (128, 8),     # integration-test bucket
+    ],
+)
+def test_kernel_paper_buckets(n, d):
+    args = make_case(n, d, seed=7, mask_tail=n // 3)
+    assert_matches_ref(args, block_n=512, atol=1e-9)
+
+
+def test_kernel_single_block_degenerate():
+    # n smaller than block_n: kernel must clamp the block.
+    args = make_case(8, 3, seed=1)
+    assert_matches_ref(args, block_n=512)
+
+
+def test_kernel_rejects_ragged_grid():
+    args = make_case(100, 4, seed=2)
+    with pytest.raises(ValueError, match="not divisible"):
+        local_stats_kernel(*args, block_n=64)
+
+
+def test_fully_masked_shard_is_zero():
+    x, y, _, beta = make_case(64, 5, seed=3)
+    mask = jnp.zeros(64, dtype=jnp.float64)
+    h, g, dev = local_stats_kernel(x, y, mask, beta, block_n=32)
+    assert float(jnp.abs(h).max()) == 0.0
+    assert float(jnp.abs(g).max()) == 0.0
+    assert float(dev) == 0.0
+
+
+def test_extreme_beta_is_stable():
+    # Saturated sigmoids must not produce NaN/inf (stable log-sigmoid).
+    x, y, mask, _ = make_case(64, 4, seed=4, x_scale=10.0)
+    beta = jnp.asarray([50.0, -50.0, 30.0, -30.0])
+    h, g, dev = local_stats_kernel(x, y, mask, beta, block_n=32)
+    assert bool(jnp.isfinite(h).all())
+    assert bool(jnp.isfinite(g).all())
+    assert bool(jnp.isfinite(dev))
+
+
+@given(dtype=st.sampled_from([jnp.float32, jnp.float64]))
+@settings(max_examples=4, deadline=None)
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(32, 4)), dtype=dtype)
+    y = jnp.asarray((rng.random(32) < 0.5), dtype=dtype)
+    mask = jnp.ones(32, dtype=dtype)
+    beta = jnp.asarray(rng.normal(size=4) * 0.3, dtype=dtype)
+    h, g, dev = local_stats_kernel(x, y, mask, beta, block_n=16)
+    h_r, g_r, dev_r = local_stats_ref(x, y, mask, beta)
+    atol = 1e-4 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(h, h_r, atol=atol)
+    np.testing.assert_allclose(g, g_r, atol=atol)
+    np.testing.assert_allclose(dev, dev_r, atol=atol)
+    assert h.dtype == dtype
+
+
+def test_vmem_estimate_within_tpu_budget():
+    # The widest paper workload must fit a 16 MB VMEM at the default tile.
+    assert vmem_bytes(512, 85) < 16 * 2**20
+    # And the flops estimate is the rank-d update.
+    assert mxu_flops_per_step(512, 85) == 2 * 512 * 85 * 85
+
+
+def test_auto_block_properties():
+    # Auto tiles: power-of-two-friendly, >=512 when possible, within the
+    # VMEM budget, never taller than the bucket.
+    from compile.kernels.local_stats import AUTO_VMEM_TILE_BYTES
+
+    for n, d in [(262144, 6), (16384, 6), (2048, 85), (2048, 21), (1024, 6), (128, 8)]:
+        bn = auto_block_n(n, d)
+        assert bn <= n
+        assert n % bn == 0, f"({n},{d}): tile {bn} must divide the bucket"
+        if bn < n:  # whenever the bucket is tiled, each tile fits the budget
+            assert bn * d * 8 <= AUTO_VMEM_TILE_BYTES
+    # narrow data gets tall tiles (the §Perf fix: fewer grid steps)
+    assert auto_block_n(262144, 6) > auto_block_n(262144, 85)
+
+
+def test_auto_block_matches_ref_numerically():
+    # The tile height must not change the answer.
+    args = make_case(1024, 6, seed=11, mask_tail=100)
+    h_a, g_a, dev_a = local_stats_kernel(*args)  # auto
+    h_b, g_b, dev_b = local_stats_kernel(*args, block_n=128)
+    np.testing.assert_allclose(h_a, h_b, atol=1e-10)
+    np.testing.assert_allclose(g_a, g_b, atol=1e-10)
+    np.testing.assert_allclose(dev_a, dev_b, atol=1e-10)

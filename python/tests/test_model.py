@@ -1,0 +1,88 @@
+"""L2 correctness: the exported model function and Newton math."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def make_problem(n=400, d=5, seed=0, lam=1.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    x[:, 0] = 1.0
+    beta_true = rng.uniform(-1, 1, size=d)
+    p = 1.0 / (1.0 + np.exp(-(x @ beta_true)))
+    y = (rng.random(n) < p).astype(np.float64)
+    return (
+        jnp.asarray(x),
+        jnp.asarray(y),
+        jnp.ones(n, dtype=jnp.float64),
+        lam,
+    )
+
+
+def test_local_stats_equals_jnp_variant():
+    x, y, mask, _ = make_problem()
+    beta = jnp.zeros(x.shape[1], dtype=jnp.float64)
+    a = model.local_stats(x, y, mask, beta, block_n=100)
+    b = model.local_stats_jnp(x, y, mask, beta)
+    for u, v in zip(a, b):
+        np.testing.assert_allclose(u, v, atol=1e-10)
+
+
+def test_newton_iteration_converges_and_is_stationary():
+    x, y, mask, lam = make_problem()
+    d = x.shape[1]
+    beta = jnp.zeros(d, dtype=jnp.float64)
+    for _ in range(25):
+        h, g, _ = model.local_stats(x, y, mask, beta, block_n=100)
+        delta = model.newton_direction(h, g, beta, lam)
+        beta = beta + delta
+    # KKT: g - lam*beta == 0 at the optimum.
+    _, g, _ = model.local_stats(x, y, mask, beta, block_n=100)
+    np.testing.assert_allclose(np.asarray(g), lam * np.asarray(beta), atol=1e-8)
+
+
+def test_newton_matches_two_institution_decomposition():
+    # Fitting on the pooled data == fitting on summed shard stats
+    # (Eqs. 4-6): the algebraic core of the paper.
+    x, y, mask, lam = make_problem(n=300)
+    beta = jnp.asarray([0.1, -0.2, 0.3, 0.0, 0.05])
+    h_all, g_all, dev_all = model.local_stats(x, y, mask, beta, block_n=150)
+    h1, g1, dev1 = model.local_stats(x[:100], y[:100], mask[:100], beta, block_n=50)
+    h2, g2, dev2 = model.local_stats(x[100:], y[100:], mask[100:], beta, block_n=50)
+    np.testing.assert_allclose(h1 + h2, h_all, atol=1e-10)
+    np.testing.assert_allclose(g1 + g2, g_all, atol=1e-10)
+    np.testing.assert_allclose(dev1 + dev2, dev_all, atol=1e-10)
+
+
+def test_predict_proba_bounds():
+    x, _, _, _ = make_problem()
+    beta = jnp.asarray([5.0, -3.0, 2.0, 0.0, 1.0])
+    p = model.predict_proba(x, beta)
+    assert float(p.min()) >= 0.0 and float(p.max()) <= 1.0
+
+
+def test_example_args_shapes():
+    args = model.make_example_args(128, 8)
+    assert args[0].shape == (128, 8)
+    assert args[1].shape == (128,)
+    assert args[2].shape == (128,)
+    assert args[3].shape == (8,)
+    assert all(a.dtype == jnp.float64 for a in args)
+
+
+def test_x64_is_enabled():
+    # The artifact contract is f64; a silent x32 downgrade would break
+    # the rust runtime's to_vec::<f64>().
+    assert jax.config.jax_enable_x64
+    x, y, mask, _ = make_problem(n=64)
+    h, g, dev = model.local_stats(x, y, mask, jnp.zeros(5, dtype=jnp.float64), block_n=64)
+    assert h.dtype == jnp.float64
+    assert g.dtype == jnp.float64
+    assert dev.dtype == jnp.float64

@@ -1,0 +1,126 @@
+//! Micro-benchmarks of every substrate on the protocol's hot path,
+//! plus the pragmatic-vs-full ablation and the naive-secure cost-model
+//! comparison. Feeds EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench micro_substrates
+
+use privlr::bench::{black_box, print_kv_table, print_table, run_bench, run_micro, BenchConfig};
+use privlr::config::{ExperimentConfig, SecurityMode};
+use privlr::coordinator::secure_fit;
+use privlr::field::{add_assign_slice, Fp};
+use privlr::fixed::FixedCodec;
+use privlr::linalg::Matrix;
+use privlr::model::local_stats;
+use privlr::shamir::{lagrange_at_zero, reconstruct_batch, share_batch, ShamirParams};
+use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rows = Vec::new();
+
+    // ---- field arithmetic ----
+    let mut rng = SplitMix64::new(1);
+    let a: Vec<Fp> = (0..4096).map(|_| Fp::random(&mut rng)).collect();
+    let b: Vec<Fp> = (0..4096).map(|_| Fp::random(&mut rng)).collect();
+    rows.push(run_micro("field: 4096-elt secure add (slice)", cfg, 256, || {
+        let mut acc = a.clone();
+        add_assign_slice(&mut acc, &b);
+        acc[0]
+    }));
+    let x = Fp::new(123_456_789_012_345);
+    rows.push(run_micro("field: mul", cfg, 65536, || {
+        black_box(x).mul(black_box(x))
+    }));
+    rows.push(run_micro("field: inv (Fermat pow)", cfg, 4096, || {
+        black_box(x).inv()
+    }));
+
+    // ---- shamir ----
+    let params = ShamirParams::new(3, 5).unwrap();
+    let codec = FixedCodec::default();
+    let mut crng = ChaCha20Rng::seed_from_u64(2);
+    let secrets: Vec<Fp> = (0..3655).map(|_| Fp::random(&mut crng)).collect(); // d=85 packed H
+    rows.push(run_bench("shamir: share 3655 elts (d=85 packed H), 3-of-5", cfg, || {
+        share_batch(params, &secrets, &mut crng)
+    }));
+    let batch = share_batch(params, &secrets, &mut crng);
+    let quorum: Vec<(usize, &[Fp])> = (0..3).map(|j| (j, batch.per_holder[j].as_slice())).collect();
+    rows.push(run_bench("shamir: reconstruct 3655 elts from 3 shares", cfg, || {
+        reconstruct_batch(params, &quorum).unwrap()
+    }));
+    rows.push(run_micro("shamir: lagrange coefficients (t=3)", cfg, 4096, || {
+        lagrange_at_zero(params, &[0, 2, 4]).unwrap()
+    }));
+
+    // ---- fixed point ----
+    let vals: Vec<f64> = (0..3655).map(|i| (i as f64) * 0.37 - 512.0).collect();
+    rows.push(run_micro("fixed: encode 3655 f64", cfg, 64, || {
+        codec.encode_slice(&vals).unwrap()
+    }));
+    let enc = codec.encode_slice(&vals).unwrap();
+    rows.push(run_micro("fixed: decode 3655 Fp", cfg, 64, || {
+        codec.decode_slice(&enc)
+    }));
+
+    // ---- local stats kernel (rust twin), paper shard shapes ----
+    for (n, d, label) in [
+        (1965usize, 85usize, "local_stats rust: Insurance shard 1965×85"),
+        (1175, 21, "local_stats rust: Parkinsons shard 1175×21"),
+        (166_667, 6, "local_stats rust: Synthetic-1M shard 166667×6"),
+    ] {
+        let mut drng = SplitMix64::new(n as u64);
+        let mut x = Matrix::zeros(n, d);
+        for v in x.data.iter_mut() {
+            *v = drng.next_gaussian();
+        }
+        let y: Vec<f64> = (0..n).map(|_| f64::from(drng.next_bernoulli(0.3))).collect();
+        let beta = vec![0.1; d];
+        rows.push(run_bench(label, cfg, || local_stats(&x, &y, &beta)));
+    }
+
+    print_table("micro: substrate hot paths", &rows);
+
+    // ---- ablation: pragmatic vs full security ----
+    let ds = privlr::data::synthetic("abl", 20_000, 21, 5, 0.0, 1.0, 7);
+    let mut ab_rows = Vec::new();
+    for mode in [SecurityMode::Pragmatic, SecurityMode::Full] {
+        let ecfg = ExperimentConfig {
+            mode,
+            max_iters: 50,
+            ..Default::default()
+        };
+        let fit = secure_fit(&ds, &ecfg).unwrap();
+        ab_rows.push(vec![
+            mode.name().to_string(),
+            format!("{:.3}", fit.metrics.total_secs),
+            format!("{:.4}", fit.metrics.central_secs),
+            format!("{:.4}", fit.metrics.protect_secs),
+            format!("{:.2}", fit.metrics.traffic.total_bytes as f64 / 1e6),
+            fit.metrics.iterations.to_string(),
+        ]);
+    }
+    print_kv_table(
+        "ablation: pragmatic vs full security (20k×20, 5 institutions)",
+        &["mode", "total (s)", "central (s)", "protect (s)", "Tx (MB)", "iters"],
+        &ab_rows,
+    );
+
+    // ---- cost model: hybrid vs naive centralized-secure ----
+    let mut cm_rows = Vec::new();
+    for (n, d, s) in [(1_000_000usize, 6usize, 6usize), (9_822, 85, 5), (5_875, 21, 5)] {
+        let naive = privlr::baseline::naive_secure_op_count(n, d);
+        let hybrid = privlr::baseline::hybrid_secure_op_count(s, d, true);
+        cm_rows.push(vec![
+            format!("{n}×{d}"),
+            naive.to_string(),
+            hybrid.to_string(),
+            format!("{:.1e}×", naive as f64 / hybrid as f64),
+        ]);
+    }
+    print_kv_table(
+        "cost model: secure ops/iteration, naive centralized-secure vs hybrid",
+        &["workload", "naive MPC ops", "hybrid secure ops", "reduction"],
+        &cm_rows,
+    );
+    println!("\n(The orders-of-magnitude op reduction is the paper's core efficiency argument.)");
+}

@@ -1,0 +1,102 @@
+//! Regenerates **Table 1** — computational efficiency on the four
+//! evaluation datasets: samples, features, iterations, central
+//! runtime, total runtime, data transmitted.
+//!
+//!     cargo bench --bench table1_efficiency
+//!
+//! Set `PRIVLR_BENCH_FAST=1` to shrink the 1M synthetic workload to
+//! 100k rows for smoke runs. Expected *shape* vs the paper: identical
+//! iteration counts (6–8), central runtime a small fraction of total,
+//! seconds-scale totals; absolute values differ (different hardware
+//! and languages — see EXPERIMENTS.md).
+
+use privlr::bench::{print_kv_table, BenchConfig};
+use privlr::config::{EngineKind, ExperimentConfig};
+use privlr::coordinator::secure_fit;
+use privlr::data::{insurance_like, paper_synthetic, parkinsons_like, synthetic, Dataset, ParkinsonsTarget};
+use privlr::util::stats::mean;
+
+fn bench_dataset(ds: &Dataset, cfg: &ExperimentConfig, iters: usize) -> Vec<String> {
+    let mut totals = Vec::new();
+    let mut centrals = Vec::new();
+    let mut mb = 0.0;
+    let mut newton_iters = 0;
+    let mut wan_secs = 0.0;
+    for _ in 0..iters {
+        let fit = secure_fit(ds, cfg).expect("secure fit");
+        totals.push(fit.metrics.total_secs);
+        centrals.push(fit.metrics.central_secs);
+        mb = fit.metrics.traffic.total_bytes as f64 / 1e6;
+        newton_iters = fit.metrics.iterations;
+        wan_secs = privlr::transport::WanModel::internet()
+            .estimate_network_secs(&fit.metrics.traffic, fit.metrics.iterations);
+    }
+    vec![
+        ds.name.clone(),
+        ds.n().to_string(),
+        ds.paper_features().to_string(),
+        newton_iters.to_string(),
+        format!("{:.3}", mean(&centrals)),
+        format!("{:.3}", mean(&totals)),
+        format!("{:.2}", mb),
+        format!("{:.2}%", 100.0 * mean(&centrals) / mean(&totals)),
+        format!("{:.2}", wan_secs),
+    ]
+}
+
+fn main() {
+    let bcfg = BenchConfig::from_env();
+    let fast = std::env::var("PRIVLR_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = ExperimentConfig {
+        engine: EngineKind::Auto,
+        max_iters: 50,
+        ..Default::default()
+    };
+    let reps = bcfg.measure_iters.max(2);
+
+    let mut rows = Vec::new();
+    eprintln!("table1: Insurance …");
+    rows.push(bench_dataset(&insurance_like(42), &cfg, reps));
+    eprintln!("table1: Parkinsons.Motor …");
+    rows.push(bench_dataset(
+        &parkinsons_like(ParkinsonsTarget::Motor, 42),
+        &cfg,
+        reps,
+    ));
+    eprintln!("table1: Parkinsons.Total …");
+    rows.push(bench_dataset(
+        &parkinsons_like(ParkinsonsTarget::Total, 42),
+        &cfg,
+        reps,
+    ));
+    if fast {
+        eprintln!("table1: Synthetic 100k (PRIVLR_BENCH_FAST) …");
+        rows.push(bench_dataset(
+            &synthetic("Synthetic", 100_000, 6, 6, 0.0, 1.0, 42),
+            &cfg,
+            reps,
+        ));
+    } else {
+        eprintln!("table1: Synthetic 1M …");
+        rows.push(bench_dataset(&paper_synthetic(42), &cfg, 2));
+    }
+
+    print_kv_table(
+        "TABLE 1 — computational efficiency (secure protocol)",
+        &[
+            "Dataset",
+            "# samples",
+            "# features",
+            "# iterations",
+            "Central (s)",
+            "Total (s)",
+            "Tx (MB)",
+            "central/total",
+            "est. WAN net (s)",
+        ],
+        &rows,
+    );
+    println!("\npaper reference: Insurance 8 iters (0.42s central / 3.77s total, 80 MB);");
+    println!("Parkinsons 6 iters (~0.25s / ~2.2s, 492 MB); Synthetic-1M 6 iters (0.076s / 12.76s, 612 MB).");
+    println!("shape checks: iterations within 6–8, central ≪ total. Absolute times differ by design.");
+}

@@ -1,0 +1,245 @@
+//! Baselines the paper compares against (explicitly or implicitly).
+//!
+//! * [`centralized_fit`] — pool all raw data and run textbook
+//!   regularized Newton-Raphson. This is the *gold standard* whose β
+//!   the secure protocol must match exactly (Fig 2), and the privacy
+//!   anti-pattern the paper argues against (raw records leave their
+//!   institutions).
+//! * [`datashield_fit`] — DataSHIELD-style distributed estimation
+//!   (Wolfson et al. [6]): identical decomposition, but local
+//!   summaries travel **in plaintext**; no protection of intermediate
+//!   data. Fast, accurate — and vulnerable (see `attack`).
+//! * [`obfuscated_fit`] — Wu et al. [23]-style additive obfuscation: a
+//!   designated noise generator hands each institution a blinding term
+//!   that cancels in the aggregate. Exact results, but a collusion of
+//!   the noise generator with any single institution unmasks the
+//!   others (see `attack::collusion_recovers_obfuscated_summaries`).
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::model::{converged, local_stats, newton_update, LocalStats};
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Result of a baseline fit.
+#[derive(Clone, Debug)]
+pub struct BaselineFit {
+    pub beta: Vec<f64>,
+    pub iterations: u32,
+    pub deviance_trace: Vec<f64>,
+}
+
+/// Pooled/centralized regularized Newton-Raphson (gold standard).
+pub fn centralized_fit(
+    ds: &Dataset,
+    lambda: f64,
+    tol: f64,
+    max_iters: usize,
+) -> anyhow::Result<BaselineFit> {
+    let d = ds.d();
+    let mut beta = vec![0.0; d];
+    let mut dev_prev = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut iterations = 0;
+    for _ in 0..max_iters {
+        iterations += 1;
+        let st = local_stats(&ds.x, &ds.y, &beta);
+        let step = newton_update(&st.h, &st.g, st.dev, &beta, lambda)?;
+        trace.push(step.penalized_dev);
+        if converged(dev_prev, step.penalized_dev, tol) {
+            break;
+        }
+        dev_prev = step.penalized_dev;
+        beta = step.beta_new;
+    }
+    Ok(BaselineFit {
+        beta,
+        iterations,
+        deviance_trace: trace,
+    })
+}
+
+/// A captured plaintext exchange from the DataSHIELD-style protocol:
+/// what a network observer (or honest-but-curious center) sees.
+#[derive(Clone, Debug)]
+pub struct PlaintextLeak {
+    pub institution: usize,
+    pub iter: u32,
+    pub h: Matrix,
+    pub g: Vec<f64>,
+    pub beta_at: Vec<f64>,
+}
+
+/// DataSHIELD-style distributed fit: same decomposition as the secure
+/// protocol but summaries travel unprotected. Returns the fit plus the
+/// full transcript of leaked summaries (input to `attack`).
+pub fn datashield_fit(
+    ds: &Dataset,
+    lambda: f64,
+    tol: f64,
+    max_iters: usize,
+) -> anyhow::Result<(BaselineFit, Vec<PlaintextLeak>)> {
+    let d = ds.d();
+    let s = ds.num_institutions();
+    let shards: Vec<(Matrix, Vec<f64>)> = (0..s).map(|j| ds.shard_data(j)).collect();
+    let mut beta = vec![0.0; d];
+    let mut dev_prev = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut leaks = Vec::new();
+    let mut iterations = 0;
+    for iter in 0..max_iters as u32 {
+        iterations += 1;
+        let mut agg = LocalStats::zeros(d);
+        for (j, (x, y)) in shards.iter().enumerate() {
+            let st = local_stats(x, y, &beta);
+            leaks.push(PlaintextLeak {
+                institution: j,
+                iter,
+                h: st.h.clone(),
+                g: st.g.clone(),
+                beta_at: beta.clone(),
+            });
+            agg.merge(&st);
+        }
+        let step = newton_update(&agg.h, &agg.g, agg.dev, &beta, lambda)?;
+        trace.push(step.penalized_dev);
+        if converged(dev_prev, step.penalized_dev, tol) {
+            break;
+        }
+        dev_prev = step.penalized_dev;
+        beta = step.beta_new;
+    }
+    Ok((
+        BaselineFit {
+            beta,
+            iterations,
+            deviance_trace: trace,
+        },
+        leaks,
+    ))
+}
+
+/// One obfuscated submission under the Wu et al. [23] scheme, plus the
+/// information each party retains (for the collusion demonstration).
+#[derive(Clone, Debug)]
+pub struct ObfuscatedExchange {
+    /// What institution j actually sends: g_j + r_j (elementwise).
+    pub blinded_g: Vec<Vec<f64>>,
+    /// The noise the *generator* handed out — it knows all of these.
+    pub noise: Vec<Vec<f64>>,
+    /// The true local gradients (ground truth for the attack check).
+    pub true_g: Vec<Vec<f64>>,
+}
+
+/// Wu et al. [23]-style obfuscated aggregation of local gradients at a
+/// fixed β. Noise terms sum to zero so the aggregate is exact.
+///
+/// Returns the exchange transcript; `attack` shows that the noise
+/// generator + any one institution can strip every other institution's
+/// blinding, while the Shamir scheme has no such single point of
+/// failure.
+pub fn obfuscated_exchange(ds: &Dataset, beta: &[f64], seed: u64) -> ObfuscatedExchange {
+    let s = ds.num_institutions();
+    let d = ds.d();
+    let mut rng = SplitMix64::new(seed);
+    // Noise generator draws r_1..r_{S-1} at random; r_S = -Σ r_j.
+    let mut noise: Vec<Vec<f64>> = (0..s - 1)
+        .map(|_| (0..d).map(|_| rng.next_gaussian() * 100.0).collect())
+        .collect();
+    let last: Vec<f64> = (0..d)
+        .map(|k| -noise.iter().map(|r| r[k]).sum::<f64>())
+        .collect();
+    noise.push(last);
+    let mut blinded = Vec::with_capacity(s);
+    let mut true_g = Vec::with_capacity(s);
+    for j in 0..s {
+        let (x, y) = ds.shard_data(j);
+        let st = local_stats(&x, &y, beta);
+        blinded.push(
+            st.g.iter()
+                .zip(&noise[j])
+                .map(|(g, r)| g + r)
+                .collect::<Vec<f64>>(),
+        );
+        true_g.push(st.g);
+    }
+    ObfuscatedExchange {
+        blinded_g: blinded,
+        noise,
+        true_g,
+    }
+}
+
+/// Cost model for a fully-centralized *secure* implementation (the
+/// strawman the paper argues is impractical): every raw record would be
+/// encrypted and every Newton flop done under secure computation.
+/// Returns estimated secure-operation count per iteration; used by the
+/// ablation bench to show the orders-of-magnitude gap the hybrid
+/// architecture avoids.
+pub fn naive_secure_op_count(n: usize, d: usize) -> u64 {
+    // XᵀWX: n·d² multiply-adds; Xᵀr: n·d; solve: d³/3 — all under MPC.
+    (n as u64) * (d as u64) * (d as u64) + (n as u64) * (d as u64) + (d as u64).pow(3) / 3
+}
+
+/// Secure-operation count per iteration for the hybrid protocol:
+/// only the aggregation of S summaries is secure work.
+pub fn hybrid_secure_op_count(s: usize, d: usize, full_mode: bool) -> u64 {
+    let packed = (d * (d + 1) / 2) as u64;
+    let per_institution = if full_mode { packed + d as u64 + 1 } else { d as u64 + 1 };
+    s as u64 * per_institution
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn centralized_and_datashield_agree() {
+        let ds = synthetic("t", 1000, 5, 4, 0.0, 1.0, 21);
+        let a = centralized_fit(&ds, 1.0, 1e-10, 30).unwrap();
+        let (b, leaks) = datashield_fit(&ds, 1.0, 1e-10, 30).unwrap();
+        for (x, y) in a.beta.iter().zip(&b.beta) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        assert_eq!(a.iterations, b.iterations);
+        // one leak per institution per iteration
+        assert_eq!(leaks.len(), 4 * b.iterations as usize);
+    }
+
+    #[test]
+    fn obfuscation_cancels_in_aggregate() {
+        let ds = synthetic("t", 500, 4, 5, 0.0, 1.0, 22);
+        let beta = vec![0.1, -0.2, 0.0, 0.3];
+        let ex = obfuscated_exchange(&ds, &beta, 77);
+        let d = 4;
+        for k in 0..d {
+            let blinded_sum: f64 = ex.blinded_g.iter().map(|g| g[k]).sum();
+            let true_sum: f64 = ex.true_g.iter().map(|g| g[k]).sum();
+            assert!((blinded_sum - true_sum).abs() < 1e-9, "noise must cancel");
+        }
+        // but individual submissions are far from the truth
+        let dist: f64 = ex.blinded_g[0]
+            .iter()
+            .zip(&ex.true_g[0])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(dist > 1.0, "blinding should actually blind");
+    }
+
+    #[test]
+    fn op_count_gap_is_orders_of_magnitude() {
+        // 1M × 6 workload: hybrid secure ops should be ~10^5× fewer.
+        let naive = naive_secure_op_count(1_000_000, 6);
+        let hybrid = hybrid_secure_op_count(6, 6, true);
+        assert!(naive / hybrid > 100_000, "{naive} vs {hybrid}");
+    }
+
+    #[test]
+    fn deviance_trace_decreases() {
+        let ds = synthetic("t", 800, 4, 2, 0.0, 1.0, 23);
+        let fit = centralized_fit(&ds, 0.5, 1e-10, 30).unwrap();
+        for w in fit.deviance_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+}

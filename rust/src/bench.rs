@@ -1,0 +1,185 @@
+//! Criterion-lite benchmark harness (criterion is not in the offline
+//! vendor set). Provides warmup, repeated timed runs, summary stats,
+//! and aligned table output shared by all `rust/benches/*` targets.
+
+use crate::util::stats::{fmt_duration, mean, median, percentile, stddev};
+use std::time::Instant;
+
+/// One benchmark measurement summary.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub p95_s: f64,
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            measure_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Honor `PRIVLR_BENCH_FAST=1` for CI smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("PRIVLR_BENCH_FAST").as_deref() == Ok("1") {
+            Self {
+                warmup_iters: 1,
+                measure_iters: 2,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Time `f` under the config; `f` is called once per iteration.
+pub fn run_bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    for _ in 0..cfg.measure_iters {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary {
+        name: name.to_string(),
+        iters: cfg.measure_iters,
+        mean_s: mean(&samples),
+        median_s: median(&samples),
+        std_s: stddev(&samples),
+        p95_s: percentile(&samples, 0.95),
+    }
+}
+
+/// Micro-bench variant: runs `f` in a tight loop `batch` times per
+/// sample and divides, for sub-microsecond operations.
+pub fn run_micro<T>(
+    name: &str,
+    cfg: BenchConfig,
+    batch: usize,
+    mut f: impl FnMut() -> T,
+) -> Summary {
+    for _ in 0..cfg.warmup_iters * batch {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    for _ in 0..cfg.measure_iters {
+        let t = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    Summary {
+        name: name.to_string(),
+        iters: cfg.measure_iters * batch,
+        mean_s: mean(&samples),
+        median_s: median(&samples),
+        std_s: stddev(&samples),
+        p95_s: percentile(&samples, 0.95),
+    }
+}
+
+/// Print a results table.
+pub fn print_table(title: &str, rows: &[Summary]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>8}",
+        "benchmark", "mean", "median", "p95", "iters"
+    );
+    for r in rows {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8}",
+            r.name,
+            fmt_duration(r.mean_s),
+            fmt_duration(r.median_s),
+            fmt_duration(r.p95_s),
+            r.iters
+        );
+    }
+}
+
+/// Print an arbitrary key/value table (for paper-table reproductions
+/// where columns are not timings).
+pub fn print_kv_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i.min(widths.len() - 1)]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&header.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(
+        &widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 3,
+        };
+        let s = run_bench("spin", cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_s > 0.0);
+        assert_eq!(s.iters, 3);
+    }
+
+    #[test]
+    fn micro_divides_by_batch() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 2,
+        };
+        let s = run_micro("noop", cfg, 1000, || 1u64 + 1);
+        assert!(s.mean_s < 1e-3, "noop should be far below 1ms: {}", s.mean_s);
+    }
+}

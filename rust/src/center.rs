@@ -1,0 +1,323 @@
+//! Computation-center node.
+//!
+//! A center is one of the w independent share holders. Per iteration
+//! it folds each institution's submission into a streaming
+//! [`SecureAccumulator`] (secure addition — Algorithm 2), and when the
+//! coordinator requests the aggregate after all S institutions have
+//! submitted, it answers with its share of the GLOBAL sums. It never
+//! holds, sees, or transmits a reconstructable view of any single
+//! institution's summaries — that is the whole point of the scheme,
+//! and `attack::below_threshold_views_are_uniform` verifies it.
+
+use crate::protocol::{HessianPayload, Message, NodeId};
+use crate::secure::SecureAccumulator;
+use crate::transport::Endpoint;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Static parameters a center needs.
+#[derive(Clone, Debug)]
+pub struct CenterConfig {
+    pub center_id: u16,
+    /// Model dimension d.
+    pub d: usize,
+    /// Packed Hessian length d(d+1)/2.
+    pub packed_h: usize,
+    /// Full-security mode (Hessian also arrives as shares).
+    pub full_security: bool,
+    /// Out-of-band telemetry: nanoseconds this center spent doing
+    /// secure-aggregation work (folds + response assembly). Feeds the
+    /// paper's "central runtime" metric; not part of the protocol.
+    pub busy_ns: Arc<AtomicU64>,
+}
+
+impl CenterConfig {
+    pub fn new(center_id: u16, d: usize, full_security: bool) -> Self {
+        Self {
+            center_id,
+            d,
+            packed_h: d * (d + 1) / 2,
+            full_security,
+            busy_ns: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Per-iteration center state.
+struct IterState {
+    acc: SecureAccumulator,
+    /// Pending aggregate request: expected submission count.
+    pending_request: Option<u16>,
+}
+
+/// Run the center event loop until `Shutdown`.
+///
+/// Owns its endpoint; spawn on a dedicated thread. Fatal errors are
+/// reported to the coordinator before returning.
+pub fn run_center(cfg: CenterConfig, ep: Endpoint) -> anyhow::Result<()> {
+    let id = cfg.center_id;
+    match run_center_inner(cfg, &ep) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = ep.send(
+                NodeId::Coordinator,
+                &Message::NodeError {
+                    node: id,
+                    is_center: true,
+                    error: format!("{e:#}"),
+                },
+            );
+            Err(e)
+        }
+    }
+}
+
+fn run_center_inner(cfg: CenterConfig, ep: &Endpoint) -> anyhow::Result<()> {
+    let mut iters: HashMap<u32, IterState> = HashMap::new();
+    loop {
+        let (from, msg) = ep.recv()?;
+        match msg {
+            Message::ShareSubmission {
+                iter,
+                institution: _,
+                hessian,
+                g_share,
+                dev_share,
+            } => {
+                anyhow::ensure!(
+                    matches!(from, NodeId::Institution(_)),
+                    "submission from non-institution {from}"
+                );
+                let st = iters.entry(iter).or_insert_with(|| IterState {
+                    acc: SecureAccumulator::new(cfg.d, cfg.packed_h, cfg.full_security),
+                    pending_request: None,
+                });
+                let t = std::time::Instant::now();
+                st.acc.fold(&g_share, dev_share, &hessian)?;
+                maybe_respond(&cfg, &ep, iter, st)?;
+                cfg.busy_ns
+                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if iters
+                    .get(&iter)
+                    .map(|s| s.pending_request.is_none() && s.acc.count == 0)
+                    .unwrap_or(false)
+                {
+                    iters.remove(&iter);
+                }
+            }
+            Message::AggregateRequest { iter, expected } => {
+                anyhow::ensure!(
+                    from == NodeId::Coordinator,
+                    "aggregate request from non-coordinator {from}"
+                );
+                let st = iters.entry(iter).or_insert_with(|| IterState {
+                    acc: SecureAccumulator::new(cfg.d, cfg.packed_h, cfg.full_security),
+                    pending_request: None,
+                });
+                st.pending_request = Some(expected);
+                let t = std::time::Instant::now();
+                maybe_respond(&cfg, &ep, iter, st)?;
+                cfg.busy_ns
+                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            Message::Finished { iter, .. } => {
+                // Convergence: drop any state at or before this iteration.
+                iters.retain(|&k, _| k > iter);
+            }
+            Message::Shutdown => return Ok(()),
+            other => anyhow::bail!("center {} got unexpected {}", cfg.center_id, other.kind()),
+        }
+        // Garbage-collect answered iterations.
+        iters.retain(|_, st| st.pending_request.is_some() || st.acc.count > 0);
+    }
+}
+
+/// If an aggregate request is pending and all submissions arrived,
+/// reply with this center's share of the global sums and clear state.
+fn maybe_respond(
+    cfg: &CenterConfig,
+    ep: &&Endpoint,
+    iter: u32,
+    st: &mut IterState,
+) -> anyhow::Result<()> {
+    let Some(expected) = st.pending_request else {
+        return Ok(());
+    };
+    if st.acc.count < expected as usize {
+        return Ok(());
+    }
+    let hessian = if cfg.full_security {
+        HessianPayload::Shared(st.acc.h_shared.clone().unwrap())
+    } else if cfg.center_id == 0 {
+        // Pragmatic mode: only the lead center carries the plaintext H.
+        HessianPayload::Plain(st.acc.h_plain.clone().unwrap())
+    } else {
+        HessianPayload::Absent
+    };
+    ep.send(
+        NodeId::Coordinator,
+        &Message::AggregateResponse {
+            iter,
+            center: cfg.center_id,
+            hessian,
+            g_share: st.acc.g.clone(),
+            dev_share: st.acc.dev,
+        },
+    )?;
+    // Reset so the retain() in the loop drops this iteration.
+    st.pending_request = None;
+    st.acc = SecureAccumulator::new(cfg.d, cfg.packed_h, cfg.full_security);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Fp;
+    use crate::fixed::FixedCodec;
+    use crate::shamir::ShamirParams;
+    use crate::transport::Network;
+    use crate::util::rng::ChaCha20Rng;
+
+    /// Drive one center thread through a full aggregate round.
+    #[test]
+    fn center_aggregates_and_responds() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst0 = net.register(NodeId::Institution(0));
+        let inst1 = net.register(NodeId::Institution(1));
+        let cep = net.register(NodeId::Center(0));
+        let cfg = CenterConfig::new(0, 2, false);
+        let th = std::thread::spawn(move || run_center(cfg, cep).unwrap());
+
+        let params = ShamirParams::new(1, 1).unwrap(); // single-holder degenerate scheme
+        let codec = FixedCodec::default();
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        // Two institutions submit g=[1,2] dev=3 h=[1,1,1] and g=[4,5] dev=6 h=[2,2,2].
+        for (j, (g, dev, h)) in [
+            (vec![1.0, 2.0], 3.0, vec![1.0, 1.0, 1.0]),
+            (vec![4.0, 5.0], 6.0, vec![2.0, 2.0, 2.0]),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let shared =
+                crate::secure::share_local_stats(params, &codec, &g, dev, &h, false, &mut rng)
+                    .unwrap();
+            let ep = if j == 0 { &inst0 } else { &inst1 };
+            ep.send(
+                NodeId::Center(0),
+                &Message::ShareSubmission {
+                    iter: 0,
+                    institution: j as u16,
+                    hessian: HessianPayload::Plain(h),
+                    g_share: shared.g.per_holder[0].clone(),
+                    dev_share: shared.dev.per_holder[0][0],
+                },
+            )
+            .unwrap();
+        }
+        coord
+            .send(NodeId::Center(0), &Message::AggregateRequest { iter: 0, expected: 2 })
+            .unwrap();
+        let (_, resp) = coord.recv().unwrap();
+        match resp {
+            Message::AggregateResponse {
+                iter,
+                center,
+                hessian,
+                g_share,
+                dev_share,
+            } => {
+                assert_eq!(iter, 0);
+                assert_eq!(center, 0);
+                // t=1: shares are the secrets themselves.
+                let g = codec.decode_slice(&g_share);
+                assert!((g[0] - 5.0).abs() < 1e-4 && (g[1] - 7.0).abs() < 1e-4);
+                assert!((codec.decode(dev_share) - 9.0).abs() < 1e-4);
+                match hessian {
+                    HessianPayload::Plain(h) => {
+                        assert_eq!(h, vec![3.0, 3.0, 3.0]);
+                    }
+                    _ => panic!("expected plain hessian"),
+                }
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Aggregate request arriving BEFORE all submissions must wait.
+    #[test]
+    fn request_before_submissions_waits() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        let cep = net.register(NodeId::Center(1));
+        let cfg = CenterConfig::new(1, 1, false);
+        let th = std::thread::spawn(move || run_center(cfg, cep).unwrap());
+        coord
+            .send(NodeId::Center(1), &Message::AggregateRequest { iter: 0, expected: 1 })
+            .unwrap();
+        // No response yet.
+        assert!(coord
+            .recv_timeout(std::time::Duration::from_millis(50))
+            .unwrap()
+            .is_none());
+        inst.send(
+            NodeId::Center(1),
+            &Message::ShareSubmission {
+                iter: 0,
+                institution: 0,
+                hessian: HessianPayload::Plain(vec![1.0]),
+                g_share: vec![Fp::new(1)],
+                dev_share: Fp::new(2),
+            },
+        )
+        .unwrap();
+        let (_, resp) = coord.recv().unwrap();
+        assert!(matches!(resp, Message::AggregateResponse { .. }));
+        coord.send(NodeId::Center(1), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Submissions for different iterations don't bleed into each other.
+    #[test]
+    fn iterations_are_isolated() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        // center 0 (the lead) so pragmatic-mode responses carry Plain H
+        let cep = net.register(NodeId::Center(2));
+        let cfg = CenterConfig::new(0, 1, false);
+        let th = std::thread::spawn(move || run_center(cfg, cep).unwrap());
+        for (iter, v) in [(0u32, 10.0f64), (1, 20.0)] {
+            inst.send(
+                NodeId::Center(2),
+                &Message::ShareSubmission {
+                    iter,
+                    institution: 0,
+                    hessian: HessianPayload::Plain(vec![v]),
+                    g_share: vec![Fp::new(1)],
+                    dev_share: Fp::new(1),
+                },
+            )
+            .unwrap();
+        }
+        coord
+            .send(NodeId::Center(2), &Message::AggregateRequest { iter: 1, expected: 1 })
+            .unwrap();
+        let (_, resp) = coord.recv().unwrap();
+        match resp {
+            Message::AggregateResponse { iter, hessian, .. } => {
+                assert_eq!(iter, 1);
+                assert_eq!(hessian, HessianPayload::Plain(vec![20.0]));
+            }
+            _ => panic!(),
+        }
+        coord.send(NodeId::Center(2), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+}

@@ -1,0 +1,326 @@
+//! Experiment/system configuration with JSON load/save.
+//!
+//! One [`ExperimentConfig`] fully determines a secure-fit run: the
+//! workload, the study topology (institutions, centers, threshold),
+//! solver parameters, the security mode, and the compute engine. The
+//! CLI, examples and benches all construct or load these.
+
+use crate::data::DatasetSpec;
+use crate::util::json::{self, Json};
+
+/// Which intermediate data are secret-shared.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SecurityMode {
+    /// Paper's default: gradient + deviance shared; Hessian plaintext
+    /// (published inference attacks need BOTH H and g — protecting one
+    /// of the pair blocks them at a fraction of the cost).
+    Pragmatic,
+    /// Everything shared (H too). The ablation benches quantify the
+    /// overhead delta vs `Pragmatic`.
+    Full,
+}
+
+impl SecurityMode {
+    pub fn is_full(self) -> bool {
+        matches!(self, SecurityMode::Full)
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pragmatic" => Ok(SecurityMode::Pragmatic),
+            "full" => Ok(SecurityMode::Full),
+            other => anyhow::bail!("unknown security mode '{other}' (pragmatic|full)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SecurityMode::Pragmatic => "pragmatic",
+            SecurityMode::Full => "full",
+        }
+    }
+}
+
+/// Which engine computes the local summary statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-rust twin of the kernel (always available).
+    Rust,
+    /// AOT-compiled JAX/Pallas artifact via PJRT (requires
+    /// `make artifacts`).
+    Pjrt,
+    /// Prefer PJRT, fall back to rust if artifacts are missing.
+    Auto,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rust" => Ok(EngineKind::Rust),
+            "pjrt" => Ok(EngineKind::Pjrt),
+            "auto" => Ok(EngineKind::Auto),
+            other => anyhow::bail!("unknown engine '{other}' (rust|pjrt|auto)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Rust => "rust",
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::Auto => "auto",
+        }
+    }
+}
+
+/// Full specification of one secure-regression run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetSpec,
+    /// Number of computation centers (w share holders).
+    pub num_centers: usize,
+    /// Reconstruction threshold t (t-of-w).
+    pub threshold: usize,
+    /// L2 penalty λ.
+    pub lambda: f64,
+    /// Deviance-change convergence tolerance (paper: 1e-10).
+    pub tol: f64,
+    pub max_iters: usize,
+    pub mode: SecurityMode,
+    pub engine: EngineKind,
+    /// RNG seed for data generation and share polynomials (simulation
+    /// reproducibility; deployments use OS entropy for shares).
+    pub seed: u64,
+    /// Fixed-point fractional bits.
+    pub frac_bits: u32,
+    /// Run institutions' local phase on parallel threads.
+    pub parallel_local: bool,
+    /// PJRT compute-service worker threads (0 = auto: cores/2, max 8).
+    pub pjrt_workers: usize,
+    /// Directory with AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetSpec::Synthetic {
+                n: 10_000,
+                d: 6,
+                institutions: 5,
+            },
+            num_centers: 5,
+            threshold: 3,
+            lambda: 1.0,
+            tol: 1e-10,
+            max_iters: 50,
+            mode: SecurityMode::Pragmatic,
+            engine: EngineKind::Rust,
+            seed: 42,
+            frac_bits: crate::fixed::DEFAULT_FRAC_BITS,
+            parallel_local: true,
+            pjrt_workers: 0,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let dataset = match &self.dataset {
+            DatasetSpec::Synthetic { n, d, institutions } => json::obj(vec![
+                ("kind", json::s("synthetic")),
+                ("n", json::num(*n as f64)),
+                ("d", json::num(*d as f64)),
+                ("institutions", json::num(*institutions as f64)),
+            ]),
+            DatasetSpec::PaperSynthetic => json::obj(vec![("kind", json::s("synthetic1m"))]),
+            DatasetSpec::Insurance => json::obj(vec![("kind", json::s("insurance"))]),
+            DatasetSpec::ParkinsonsMotor => {
+                json::obj(vec![("kind", json::s("parkinsons.motor"))])
+            }
+            DatasetSpec::ParkinsonsTotal => {
+                json::obj(vec![("kind", json::s("parkinsons.total"))])
+            }
+            DatasetSpec::Csv { path, institutions } => json::obj(vec![
+                ("kind", json::s("csv")),
+                ("path", json::s(path)),
+                ("institutions", json::num(*institutions as f64)),
+            ]),
+        };
+        json::obj(vec![
+            ("dataset", dataset),
+            ("num_centers", json::num(self.num_centers as f64)),
+            ("threshold", json::num(self.threshold as f64)),
+            ("lambda", json::num(self.lambda)),
+            ("tol", json::num(self.tol)),
+            ("max_iters", json::num(self.max_iters as f64)),
+            ("mode", json::s(self.mode.name())),
+            ("engine", json::s(self.engine.name())),
+            ("seed", json::num(self.seed as f64)),
+            ("frac_bits", json::num(self.frac_bits as f64)),
+            ("parallel_local", Json::Bool(self.parallel_local)),
+            ("pjrt_workers", json::num(self.pjrt_workers as f64)),
+            ("artifacts_dir", json::s(&self.artifacts_dir)),
+        ])
+    }
+
+    /// Parse from JSON (missing keys fall back to defaults).
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let ds = v.get("dataset");
+        if ds != &Json::Null {
+            let kind = ds
+                .get("kind")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("dataset.kind missing"))?;
+            cfg.dataset = match kind {
+                "synthetic" => DatasetSpec::Synthetic {
+                    n: ds.get("n").as_usize().unwrap_or(10_000),
+                    d: ds.get("d").as_usize().unwrap_or(6),
+                    institutions: ds.get("institutions").as_usize().unwrap_or(5),
+                },
+                "csv" => DatasetSpec::Csv {
+                    path: ds
+                        .get("path")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("dataset.path missing"))?
+                        .to_string(),
+                    institutions: ds.get("institutions").as_usize().unwrap_or(5),
+                },
+                other => DatasetSpec::parse(other)?,
+            };
+        }
+        if let Some(n) = v.get("num_centers").as_usize() {
+            cfg.num_centers = n;
+        }
+        if let Some(t) = v.get("threshold").as_usize() {
+            cfg.threshold = t;
+        }
+        if let Some(l) = v.get("lambda").as_f64() {
+            cfg.lambda = l;
+        }
+        if let Some(t) = v.get("tol").as_f64() {
+            cfg.tol = t;
+        }
+        if let Some(m) = v.get("max_iters").as_usize() {
+            cfg.max_iters = m;
+        }
+        if let Some(s) = v.get("mode").as_str() {
+            cfg.mode = SecurityMode::parse(s)?;
+        }
+        if let Some(s) = v.get("engine").as_str() {
+            cfg.engine = EngineKind::parse(s)?;
+        }
+        if let Some(s) = v.get("seed").as_u64() {
+            cfg.seed = s;
+        }
+        if let Some(f) = v.get("frac_bits").as_u64() {
+            cfg.frac_bits = f as u32;
+        }
+        if let Some(b) = v.get("parallel_local").as_bool() {
+            cfg.parallel_local = b;
+        }
+        if let Some(k) = v.get("pjrt_workers").as_usize() {
+            cfg.pjrt_workers = k;
+        }
+        if let Some(s) = v.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = s.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.threshold >= 1, "threshold must be >= 1");
+        anyhow::ensure!(
+            self.threshold <= self.num_centers,
+            "threshold {} > centers {}",
+            self.threshold,
+            self.num_centers
+        );
+        anyhow::ensure!(self.lambda >= 0.0, "lambda must be non-negative");
+        anyhow::ensure!(self.tol > 0.0, "tol must be positive");
+        anyhow::ensure!(self.max_iters >= 1, "max_iters must be >= 1");
+        anyhow::ensure!(
+            self.frac_bits >= 8 && self.frac_bits < 48,
+            "frac_bits out of range"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_default() {
+        let cfg = ExperimentConfig::default();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.num_centers, cfg.num_centers);
+        assert_eq!(back.threshold, cfg.threshold);
+        assert_eq!(back.mode, cfg.mode);
+        assert_eq!(back.engine, cfg.engine);
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.parallel_local, cfg.parallel_local);
+    }
+
+    #[test]
+    fn json_roundtrip_paper_workloads() {
+        for spec in [
+            DatasetSpec::PaperSynthetic,
+            DatasetSpec::Insurance,
+            DatasetSpec::ParkinsonsMotor,
+            DatasetSpec::ParkinsonsTotal,
+        ] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.dataset = spec.clone();
+            cfg.mode = SecurityMode::Full;
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.dataset, spec);
+            assert_eq!(back.mode, SecurityMode::Full);
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = Json::parse(r#"{"lambda": 2.5}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.lambda, 2.5);
+        assert_eq!(cfg.num_centers, 5);
+    }
+
+    #[test]
+    fn validation_rejects_bad_topology() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.threshold = 9;
+        cfg.num_centers = 3;
+        assert!(cfg.validate().is_err());
+        let v = Json::parse(r#"{"threshold": 9, "num_centers": 3}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("privlr_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let mut cfg = ExperimentConfig::default();
+        cfg.lambda = 0.25;
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(back.lambda, 0.25);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,301 @@
+//! Secure cross-validation for selecting the regularization parameter.
+//!
+//! The paper sets λ "a priori or derived via cross-validation"; this
+//! module provides the cross-validation without weakening the privacy
+//! model. The key observation is the same one that powers the whole
+//! protocol: the **held-out deviance is a sum over records** (Eq. 6),
+//! so it decomposes per institution and can be aggregated through the
+//! identical secure machinery:
+//!
+//! 1. each institution splits ITS OWN shard into k folds locally (no
+//!    cross-institution record movement — the fold pattern is just an
+//!    agreed row-index rule);
+//! 2. for each fold f and each candidate λ, the consortium fits on
+//!    everyone's folds ≠ f via the secure protocol;
+//! 3. each institution evaluates the deviance of the resulting β on
+//!    its held-out fold f; those local deviances are aggregated (they
+//!    are exactly the `dev_j` statistic the protocol already protects);
+//! 4. the λ with the lowest mean held-out deviance wins.
+//!
+//! Implementation note: step 2/3 reuse [`coordinator::secure_fit`] on
+//! fold-filtered datasets, so every message of the CV procedure is the
+//! standard protected protocol — nothing new crosses the network in
+//! plaintext.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::secure_fit;
+use crate::data::{Dataset, Shard};
+use crate::linalg::Matrix;
+use crate::model::{local_stats, log_sigmoid};
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Result of a λ search.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    /// Candidates in the order given.
+    pub lambdas: Vec<f64>,
+    /// Mean held-out (unpenalized) deviance per candidate.
+    pub cv_deviance: Vec<f64>,
+    /// Index of the winner (min mean deviance).
+    pub best: usize,
+    /// Final β fitted on ALL data at the winning λ.
+    pub beta: Vec<f64>,
+}
+
+impl CvResult {
+    pub fn best_lambda(&self) -> f64 {
+        self.lambdas[self.best]
+    }
+}
+
+/// Deterministic per-institution fold assignment: record `i` of a
+/// shard belongs to fold `(i + shard_offset) % k` after a seeded
+/// per-institution shuffle. Returns per-record fold ids for one shard.
+fn fold_assignment(rows: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..rows).collect();
+    let mut rng = SplitMix64::new(seed);
+    rng.shuffle(&mut idx);
+    let mut folds = vec![0usize; rows];
+    for (pos, &i) in idx.iter().enumerate() {
+        folds[i] = pos % k;
+    }
+    folds
+}
+
+/// Build the training dataset that EXCLUDES fold `f` (per institution),
+/// preserving the institution structure.
+fn training_view(ds: &Dataset, folds: &[Vec<usize>], f: usize) -> Dataset {
+    let d = ds.d();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut y = Vec::new();
+    let mut shards = Vec::with_capacity(ds.num_institutions());
+    let mut start = 0usize;
+    for j in 0..ds.num_institutions() {
+        let s = ds.shards[j];
+        for (local_i, i) in (s.start..s.end).enumerate() {
+            if folds[j][local_i] != f {
+                rows.push(ds.x.row(i).to_vec());
+                y.push(ds.y[i]);
+            }
+        }
+        shards.push(Shard {
+            start,
+            end: rows.len(),
+        });
+        start = rows.len();
+    }
+    let _ = d;
+    Dataset {
+        name: format!("{}-cv-train-f{f}", ds.name),
+        x: Matrix::from_rows(rows),
+        y,
+        shards,
+    }
+}
+
+/// Held-out (unpenalized) deviance of β on fold `f`, summed across
+/// institutions — in deployment each term is computed locally and
+/// aggregated through the secure-addition path; numerically the sum is
+/// identical, which is what we compute here.
+fn holdout_deviance(ds: &Dataset, folds: &[Vec<usize>], f: usize, beta: &[f64]) -> f64 {
+    let mut dev = 0.0;
+    for j in 0..ds.num_institutions() {
+        let s = ds.shards[j];
+        for (local_i, i) in (s.start..s.end).enumerate() {
+            if folds[j][local_i] == f {
+                let z = crate::linalg::dot(ds.x.row(i), beta);
+                let yi = ds.y[i];
+                dev += -2.0 * (yi * log_sigmoid(z) + (1.0 - yi) * log_sigmoid(-z));
+            }
+        }
+    }
+    dev
+}
+
+/// k-fold secure cross-validation over a λ grid.
+///
+/// Runs `k × lambdas.len()` secure fits plus one final fit at the
+/// winning λ. The fold split is per-institution (records never move).
+pub fn secure_cross_validate(
+    ds: &Dataset,
+    base_cfg: &ExperimentConfig,
+    lambdas: &[f64],
+    k: usize,
+) -> anyhow::Result<CvResult> {
+    anyhow::ensure!(k >= 2, "need at least 2 folds");
+    anyhow::ensure!(!lambdas.is_empty(), "empty lambda grid");
+    for (j, shard) in ds.shards.iter().enumerate() {
+        anyhow::ensure!(
+            shard.len() >= k,
+            "institution {j} has {} records (< k = {k})",
+            shard.len()
+        );
+    }
+    // Per-institution fold patterns (local decisions, seeded).
+    let folds: Vec<Vec<usize>> = (0..ds.num_institutions())
+        .map(|j| fold_assignment(ds.shards[j].len(), k, base_cfg.seed ^ (0xF01D + j as u64)))
+        .collect();
+
+    let mut cv_dev = vec![0.0; lambdas.len()];
+    for f in 0..k {
+        let train = training_view(ds, &folds, f);
+        for (li, &lambda) in lambdas.iter().enumerate() {
+            let cfg = ExperimentConfig {
+                lambda,
+                ..base_cfg.clone()
+            };
+            let fit = secure_fit(&train, &cfg)?;
+            cv_dev[li] += holdout_deviance(ds, &folds, f, &fit.beta);
+        }
+    }
+    for v in cv_dev.iter_mut() {
+        *v /= k as f64;
+    }
+    let best = cv_dev
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    // Final fit on all data at the winning λ.
+    let cfg = ExperimentConfig {
+        lambda: lambdas[best],
+        ..base_cfg.clone()
+    };
+    let fit = secure_fit(ds, &cfg)?;
+    Ok(CvResult {
+        lambdas: lambdas.to_vec(),
+        cv_deviance: cv_dev,
+        best,
+        beta: fit.beta,
+    })
+}
+
+/// Plaintext-centralized CV twin (test oracle): same folds, same grid,
+/// centralized Newton fits.
+pub fn centralized_cross_validate(
+    ds: &Dataset,
+    seed: u64,
+    tol: f64,
+    max_iters: usize,
+    lambdas: &[f64],
+    k: usize,
+) -> anyhow::Result<CvResult> {
+    let folds: Vec<Vec<usize>> = (0..ds.num_institutions())
+        .map(|j| fold_assignment(ds.shards[j].len(), k, seed ^ (0xF01D + j as u64)))
+        .collect();
+    let mut cv_dev = vec![0.0; lambdas.len()];
+    for f in 0..k {
+        let train = training_view(ds, &folds, f);
+        for (li, &lambda) in lambdas.iter().enumerate() {
+            let fit = crate::baseline::centralized_fit(&train, lambda, tol, max_iters)?;
+            cv_dev[li] += holdout_deviance(ds, &folds, f, &fit.beta);
+        }
+    }
+    for v in cv_dev.iter_mut() {
+        *v /= k as f64;
+    }
+    let best = cv_dev
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let fit = crate::baseline::centralized_fit(ds, lambdas[best], tol, max_iters)?;
+    Ok(CvResult {
+        lambdas: lambdas.to_vec(),
+        cv_deviance: cv_dev,
+        best,
+        beta: fit.beta,
+    })
+}
+
+/// Sanity metric for tests: deviance of β on a whole dataset.
+pub fn full_deviance(ds: &Dataset, beta: &[f64]) -> f64 {
+    local_stats(&ds.x, &ds.y, beta).dev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            max_iters: 40,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn folds_partition_each_shard() {
+        let folds = fold_assignment(103, 5, 7);
+        assert_eq!(folds.len(), 103);
+        let mut counts = [0usize; 5];
+        for &f in &folds {
+            assert!(f < 5);
+            counts[f] += 1;
+        }
+        // balanced within 1
+        assert!(counts.iter().max().unwrap() - counts.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn training_view_excludes_exactly_one_fold() {
+        let ds = synthetic("t", 300, 4, 3, 0.0, 1.0, 5);
+        let folds: Vec<Vec<usize>> = (0..3)
+            .map(|j| fold_assignment(ds.shards[j].len(), 3, j as u64))
+            .collect();
+        let total_f0: usize = folds.iter().map(|f| f.iter().filter(|&&x| x == 0).count()).sum();
+        let train = training_view(&ds, &folds, 0);
+        assert_eq!(train.n(), 300 - total_f0);
+        assert_eq!(train.num_institutions(), 3);
+        // shards stay contiguous and cover the training rows
+        let covered: usize = train.shards.iter().map(|s| s.len()).sum();
+        assert_eq!(covered, train.n());
+    }
+
+    #[test]
+    fn secure_cv_matches_centralized_cv() {
+        let ds = synthetic("t", 600, 4, 3, 0.0, 1.0, 9);
+        let lambdas = [0.1, 1.0, 10.0];
+        let cfg = base_cfg();
+        let secure = secure_cross_validate(&ds, &cfg, &lambdas, 3).unwrap();
+        let central =
+            centralized_cross_validate(&ds, cfg.seed, cfg.tol, cfg.max_iters, &lambdas, 3)
+                .unwrap();
+        assert_eq!(secure.best, central.best, "same winner");
+        for (a, b) in secure.cv_deviance.iter().zip(&central.cv_deviance) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        for (a, b) in secure.beta.iter().zip(&central.beta) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cv_prefers_moderate_lambda_on_noisy_small_data() {
+        // With few records and many features, λ→0 overfits: its held-out
+        // deviance must exceed the best λ's.
+        let ds = synthetic("t", 120, 10, 3, 0.0, 1.0, 11);
+        let lambdas = [1e-6, 1.0, 5.0];
+        let cfg = base_cfg();
+        let cv = secure_cross_validate(&ds, &cfg, &lambdas, 4).unwrap();
+        assert!(
+            cv.cv_deviance[0] > cv.cv_deviance[cv.best] - 1e-9,
+            "unregularized should not win by luck: {:?}",
+            cv.cv_deviance
+        );
+        assert!(cv.best_lambda() > 1e-6);
+    }
+
+    #[test]
+    fn cv_validates_inputs() {
+        let ds = synthetic("t", 30, 3, 3, 0.0, 1.0, 12);
+        let cfg = base_cfg();
+        assert!(secure_cross_validate(&ds, &cfg, &[1.0], 1).is_err()); // k < 2
+        assert!(secure_cross_validate(&ds, &cfg, &[], 3).is_err()); // empty grid
+        // k larger than a shard
+        assert!(secure_cross_validate(&ds, &cfg, &[1.0], 11).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! Prime-field arithmetic for the secret-sharing layer.
+//!
+//! All Shamir computations happen in **F_p with p = 2^61 − 1** (a
+//! Mersenne prime). The choice is deliberate:
+//!
+//! * products of two < 2^61 values fit in u128, and reduction mod a
+//!   Mersenne prime is two shifts + add (no division, no Montgomery);
+//! * 61 bits leave ample headroom for fixed-point encodings of the
+//!   paper's summary statistics (see `fixed`): the largest Hessian
+//!   entry across our workloads is ≲ 2^38 pre-scaling;
+//! * the field order exceeds any realistic number of share evaluation
+//!   points, so x-coordinates 1..=w are always distinct and invertible.
+//!
+//! Elements are a transparent `u64` kept in canonical range `[0, p)`.
+
+/// The field modulus p = 2^61 − 1 (Mersenne prime).
+pub const P: u64 = (1u64 << 61) - 1;
+
+/// An element of F_p, always canonical (`0 <= value < P`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fp(u64);
+
+impl std::fmt::Debug for Fp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fp({})", self.0)
+    }
+}
+
+impl Fp {
+    pub const ZERO: Fp = Fp(0);
+    pub const ONE: Fp = Fp(1);
+
+    /// Construct from a u64, reducing mod p.
+    #[inline(always)]
+    pub fn new(v: u64) -> Fp {
+        // v < 2^64 = 8·(2^61) so up to two conditional subtractions after
+        // folding the top bits; do a proper Mersenne fold instead.
+        Fp(reduce_u64(v))
+    }
+
+    /// The raw canonical representative.
+    #[inline(always)]
+    pub fn to_u64(self) -> u64 {
+        self.0
+    }
+
+    #[inline(always)]
+    pub fn add(self, rhs: Fp) -> Fp {
+        let mut s = self.0 + rhs.0; // < 2^62, no overflow
+        if s >= P {
+            s -= P;
+        }
+        Fp(s)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, rhs: Fp) -> Fp {
+        let s = if self.0 >= rhs.0 {
+            self.0 - rhs.0
+        } else {
+            self.0 + P - rhs.0
+        };
+        Fp(s)
+    }
+
+    #[inline(always)]
+    pub fn neg(self) -> Fp {
+        if self.0 == 0 {
+            Fp(0)
+        } else {
+            Fp(P - self.0)
+        }
+    }
+
+    #[inline(always)]
+    pub fn mul(self, rhs: Fp) -> Fp {
+        Fp(reduce_u128((self.0 as u128) * (rhs.0 as u128)))
+    }
+
+    /// Modular exponentiation by squaring.
+    pub fn pow(self, mut e: u64) -> Fp {
+        let mut base = self;
+        let mut acc = Fp::ONE;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(base);
+            }
+            base = base.mul(base);
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat (p is prime): a^(p−2).
+    /// Panics on zero, which has no inverse.
+    pub fn inv(self) -> Fp {
+        assert!(self.0 != 0, "Fp::inv(0)");
+        self.pow(P - 2)
+    }
+
+    /// True iff the element is zero.
+    #[inline(always)]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Encode a signed integer `v` with |v| < p/2 using the upper half of
+    /// the field for negatives (two's-complement-style centered lift).
+    pub fn from_i128(v: i128) -> Fp {
+        let p = P as i128;
+        let mut r = v % p;
+        if r < 0 {
+            r += p;
+        }
+        Fp(r as u64)
+    }
+
+    /// Decode to the centered representative in (−p/2, p/2].
+    pub fn to_i128_centered(self) -> i128 {
+        let half = (P / 2) as u64;
+        if self.0 > half {
+            self.0 as i128 - P as i128
+        } else {
+            self.0 as i128
+        }
+    }
+
+    /// Uniformly random field element.
+    pub fn random<R: crate::util::rng::Rng>(rng: &mut R) -> Fp {
+        // Rejection sampling on 61 bits keeps the distribution exactly
+        // uniform (bias matters for information-theoretic secrecy).
+        loop {
+            let v = rng.next_u64() & ((1u64 << 61) - 1);
+            if v < P {
+                return Fp(v);
+            }
+        }
+    }
+}
+
+/// Reduce a u64 mod the Mersenne prime p = 2^61 − 1.
+#[inline(always)]
+fn reduce_u64(v: u64) -> u64 {
+    let mut r = (v & P) + (v >> 61);
+    if r >= P {
+        r -= P;
+    }
+    r
+}
+
+/// Reduce a u128 product mod p = 2^61 − 1 using 2^61 ≡ 1 (mod p).
+#[inline(always)]
+fn reduce_u128(v: u128) -> u64 {
+    // Split into 61-bit limbs: v = lo + 2^61·mid + 2^122·hi ≡ lo+mid+hi.
+    let lo = (v & (P as u128)) as u64;
+    let mid = ((v >> 61) & (P as u128)) as u64;
+    let hi = (v >> 122) as u64; // < 2^6
+    let mut r = lo as u128 + mid as u128 + hi as u128; // < 3·2^61
+    r = (r & (P as u128)) + (r >> 61);
+    let mut r = r as u64;
+    if r >= P {
+        r -= P;
+    }
+    r
+}
+
+// ---- operator sugar -----------------------------------------------------
+
+impl std::ops::Add for Fp {
+    type Output = Fp;
+    #[inline(always)]
+    fn add(self, rhs: Fp) -> Fp {
+        Fp::add(self, rhs)
+    }
+}
+
+impl std::ops::Sub for Fp {
+    type Output = Fp;
+    #[inline(always)]
+    fn sub(self, rhs: Fp) -> Fp {
+        Fp::sub(self, rhs)
+    }
+}
+
+impl std::ops::Mul for Fp {
+    type Output = Fp;
+    #[inline(always)]
+    fn mul(self, rhs: Fp) -> Fp {
+        Fp::mul(self, rhs)
+    }
+}
+
+impl std::ops::Neg for Fp {
+    type Output = Fp;
+    #[inline(always)]
+    fn neg(self) -> Fp {
+        Fp::neg(self)
+    }
+}
+
+impl std::ops::AddAssign for Fp {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: Fp) {
+        *self = *self + rhs;
+    }
+}
+
+impl std::iter::Sum for Fp {
+    fn sum<I: Iterator<Item = Fp>>(iter: I) -> Fp {
+        iter.fold(Fp::ZERO, |a, b| a + b)
+    }
+}
+
+// ---- batch helpers (hot path of secure aggregation) ---------------------
+
+/// Elementwise `dst[i] += src[i]` over field elements. This is the inner
+/// loop of secure addition at a computation center.
+#[inline]
+pub fn add_assign_slice(dst: &mut [Fp], src: &[Fp]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *d + *s;
+    }
+}
+
+/// Elementwise multiply of a share slice by a public constant.
+#[inline]
+pub fn mul_scalar_slice(dst: &mut [Fp], c: Fp) {
+    for d in dst.iter_mut() {
+        *d = *d * c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = Fp::new(P - 3);
+        let b = Fp::new(17);
+        assert_eq!(a + b - b, a);
+        assert_eq!((a + b).to_u64(), 14); // wraps past p
+    }
+
+    #[test]
+    fn mul_matches_u128_reference() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..1000 {
+            let a = Fp::random(&mut rng);
+            let b = Fp::random(&mut rng);
+            let expect = ((a.to_u64() as u128 * b.to_u64() as u128) % P as u128) as u64;
+            assert_eq!(a.mul(b).to_u64(), expect);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..200 {
+            let a = Fp::random(&mut rng);
+            if a.is_zero() {
+                continue;
+            }
+            assert_eq!(a.mul(a.inv()), Fp::ONE);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_has_no_inverse() {
+        let _ = Fp::ZERO.inv();
+    }
+
+    #[test]
+    fn pow_edge_cases() {
+        let a = Fp::new(12345);
+        assert_eq!(a.pow(0), Fp::ONE);
+        assert_eq!(a.pow(1), a);
+        assert_eq!(a.pow(2), a.mul(a));
+        // Fermat: a^(p-1) = 1
+        assert_eq!(a.pow(P - 1), Fp::ONE);
+    }
+
+    #[test]
+    fn centered_lift_roundtrip() {
+        for v in [-5i128, -1, 0, 1, 7, 1 << 40, -(1 << 40)] {
+            assert_eq!(Fp::from_i128(v).to_i128_centered(), v);
+        }
+    }
+
+    #[test]
+    fn random_is_canonical_and_varied() {
+        let mut rng = SplitMix64::new(3);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let a = Fp::random(&mut rng);
+            assert!(a.to_u64() < P);
+            distinct.insert(a.to_u64());
+        }
+        assert!(distinct.len() > 95);
+    }
+
+    #[test]
+    fn reduce_u64_full_range() {
+        assert_eq!(reduce_u64(P), 0);
+        assert_eq!(reduce_u64(P + 1), 1);
+        assert_eq!(reduce_u64(u64::MAX), u64::MAX % P);
+    }
+
+    #[test]
+    fn batch_ops_match_scalar() {
+        let mut rng = SplitMix64::new(4);
+        let a: Vec<Fp> = (0..64).map(|_| Fp::random(&mut rng)).collect();
+        let b: Vec<Fp> = (0..64).map(|_| Fp::random(&mut rng)).collect();
+        let mut dst = a.clone();
+        add_assign_slice(&mut dst, &b);
+        for i in 0..64 {
+            assert_eq!(dst[i], a[i] + b[i]);
+        }
+        let c = Fp::new(99991);
+        let mut m = a.clone();
+        mul_scalar_slice(&mut m, c);
+        for i in 0..64 {
+            assert_eq!(m[i], a[i] * c);
+        }
+    }
+
+    #[test]
+    fn neg_properties() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..100 {
+            let a = Fp::random(&mut rng);
+            assert_eq!(a + (-a), Fp::ZERO);
+        }
+        assert_eq!(-Fp::ZERO, Fp::ZERO);
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let xs = [Fp::new(1), Fp::new(2), Fp::new(3)];
+        let s: Fp = xs.iter().copied().sum();
+        assert_eq!(s, Fp::new(6));
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        // Buckets over the field should be roughly even.
+        let mut rng = SplitMix64::new(6);
+        let mut buckets = [0u32; 8];
+        for _ in 0..80_000 {
+            let a = Fp::random(&mut rng);
+            buckets[(a.to_u64() >> 58) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((b as i64 - 10_000).abs() < 600, "bucket {b}");
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Institution (data-owner) node.
+//!
+//! An institution holds its private shard (X_j, y_j). Per iteration it
+//! receives the coordinator's β broadcast, computes its local summary
+//! statistics H_j, g_j, dev_j (Algorithm 1 steps 4–6) — through the
+//! AOT-compiled JAX/Pallas artifact or the rust twin — then protects
+//! them with Shamir's secret sharing (step 7) and submits one share to
+//! each computation center. Raw records never leave this node; the
+//! only things transmitted are secret shares (and, in pragmatic mode,
+//! the plaintext local Hessian, which is safe to expose alone because
+//! published inference attacks require the (H, g) pair).
+
+use crate::fixed::FixedCodec;
+use crate::linalg::Matrix;
+use crate::protocol::{pack_upper, HessianPayload, Message, NodeId};
+use crate::runtime::ComputeHandle;
+use crate::secure::share_local_stats;
+use crate::shamir::ShamirParams;
+use crate::transport::Endpoint;
+use crate::util::rng::ChaCha20Rng;
+
+/// Everything an institution thread needs.
+pub struct InstitutionConfig {
+    pub institution_id: u16,
+    /// Private shard: design matrix (with intercept) and 0/1 responses.
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    /// Secret-sharing parameters (t-of-w).
+    pub params: ShamirParams,
+    pub codec: FixedCodec,
+    pub full_security: bool,
+    pub engine: ComputeHandle,
+    /// Seed for share-polynomial randomness. Simulations derive it from
+    /// the experiment seed for reproducibility; deployments should use
+    /// `ChaCha20Rng::from_os_entropy()` material instead.
+    pub share_seed: u64,
+}
+
+/// Timing breakdown one institution reports after a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstitutionTimings {
+    /// Seconds spent computing local statistics (the "ordinary
+    /// computation" the paper attributes to local institutions).
+    pub compute_secs: f64,
+    /// Seconds spent encoding + Shamir-sharing + submitting.
+    pub protect_secs: f64,
+    pub iterations: u32,
+}
+
+/// Run the institution event loop until `Finished`/`Shutdown`.
+/// Returns the timing breakdown for the metrics report. Fatal errors
+/// are reported to the coordinator (so it can abort instead of
+/// deadlocking) and then returned.
+pub fn run_institution(cfg: InstitutionConfig, ep: Endpoint) -> anyhow::Result<InstitutionTimings> {
+    let id = cfg.institution_id;
+    match run_institution_inner(cfg, &ep) {
+        Ok(t) => Ok(t),
+        Err(e) => {
+            let _ = ep.send(
+                NodeId::Coordinator,
+                &Message::NodeError {
+                    node: id,
+                    is_center: false,
+                    error: format!("{e:#}"),
+                },
+            );
+            Err(e)
+        }
+    }
+}
+
+fn run_institution_inner(
+    cfg: InstitutionConfig,
+    ep: &Endpoint,
+) -> anyhow::Result<InstitutionTimings> {
+    let mut rng = ChaCha20Rng::seed_from_u64(cfg.share_seed);
+    let mut timings = InstitutionTimings::default();
+    let num_centers = cfg.params.num_holders;
+    loop {
+        let (from, msg) = ep.recv()?;
+        match msg {
+            Message::BetaBroadcast { iter, beta } => {
+                anyhow::ensure!(
+                    from == NodeId::Coordinator,
+                    "beta broadcast from non-coordinator {from}"
+                );
+                anyhow::ensure!(
+                    beta.len() == cfg.x.cols,
+                    "beta dimension {} != shard dimension {}",
+                    beta.len(),
+                    cfg.x.cols
+                );
+                // ---- local compute phase (steps 4–6) ----
+                let (stats, compute_secs) =
+                    cfg.engine.local_stats_timed(&cfg.x, &cfg.y, &beta)?;
+                timings.compute_secs += compute_secs;
+
+                // ---- protection + submission phase (step 7) ----
+                let t = std::time::Instant::now();
+                let h_packed = pack_upper(&stats.h);
+                let shared = share_local_stats(
+                    cfg.params,
+                    &cfg.codec,
+                    &stats.g,
+                    stats.dev,
+                    &h_packed,
+                    cfg.full_security,
+                    &mut rng,
+                )?;
+                for c in 0..num_centers {
+                    let hessian = match &shared.h {
+                        Some(hb) => HessianPayload::Shared(hb.per_holder[c].clone()),
+                        // Pragmatic mode: the plaintext H goes to the lead
+                        // center only; replication adds no protection.
+                        None if c == 0 => HessianPayload::Plain(h_packed.clone()),
+                        None => HessianPayload::Absent,
+                    };
+                    ep.send(
+                        NodeId::Center(c as u16),
+                        &Message::ShareSubmission {
+                            iter,
+                            institution: cfg.institution_id,
+                            hessian,
+                            g_share: shared.g.per_holder[c].clone(),
+                            dev_share: shared.dev.per_holder[c][0],
+                        },
+                    )?;
+                }
+                timings.protect_secs += t.elapsed().as_secs_f64();
+                timings.iterations += 1;
+            }
+            Message::Finished { .. } | Message::Shutdown => return Ok(timings),
+            other => anyhow::bail!(
+                "institution {} got unexpected {}",
+                cfg.institution_id,
+                other.kind()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::Network;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    fn shard(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            x[(i, 0)] = 1.0;
+            for j in 1..d {
+                x[(i, j)] = rng.next_gaussian();
+            }
+            y[i] = f64::from(rng.next_bernoulli(0.4));
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn institution_submits_to_every_center() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let centers: Vec<_> = (0..3).map(|c| net.register(NodeId::Center(c))).collect();
+        let iep = net.register(NodeId::Institution(0));
+        let (x, y) = shard(20, 3, 1);
+        let params = ShamirParams::new(2, 3).unwrap();
+        let cfg = InstitutionConfig {
+            institution_id: 0,
+            x: x.clone(),
+            y: y.clone(),
+            params,
+            codec: FixedCodec::default(),
+            full_security: false,
+            engine: ComputeHandle::rust(),
+            share_seed: 7,
+        };
+        let th = std::thread::spawn(move || run_institution(cfg, iep).unwrap());
+        coord
+            .send(
+                NodeId::Institution(0),
+                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 3] },
+            )
+            .unwrap();
+        // each center receives exactly one submission
+        let mut dev_shares = Vec::new();
+        for (c, cep) in centers.iter().enumerate() {
+            let (from, msg) = cep.recv().unwrap();
+            assert_eq!(from, NodeId::Institution(0));
+            match msg {
+                Message::ShareSubmission {
+                    iter,
+                    institution,
+                    hessian,
+                    g_share,
+                    dev_share,
+                } => {
+                    assert_eq!(iter, 0);
+                    assert_eq!(institution, 0);
+                    assert_eq!(g_share.len(), 3);
+                    match (c, hessian) {
+                        (0, HessianPayload::Plain(h)) => assert_eq!(h.len(), 6),
+                        (_, HessianPayload::Absent) if c > 0 => {}
+                        (c, h) => panic!("center {c}: unexpected hessian {h:?}"),
+                    }
+                    dev_shares.push((c, dev_share));
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        // The dev shares reconstruct to the true local deviance.
+        let stats = crate::model::local_stats(&x, &y, &[0.0; 3]);
+        let rec = crate::shamir::reconstruct_scalar(params, &dev_shares[..2]).unwrap();
+        let dec = FixedCodec::default().decode(rec);
+        assert!((dec - stats.dev).abs() < 1e-4, "{dec} vs {}", stats.dev);
+
+        coord
+            .send(NodeId::Institution(0), &Message::Finished { iter: 0, beta: vec![] })
+            .unwrap();
+        let timings = th.join().unwrap();
+        assert_eq!(timings.iterations, 1);
+        assert!(timings.compute_secs >= 0.0 && timings.protect_secs > 0.0);
+    }
+
+    #[test]
+    fn full_mode_sends_shared_hessian() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let c0 = net.register(NodeId::Center(0));
+        let c1 = net.register(NodeId::Center(1));
+        let iep = net.register(NodeId::Institution(1));
+        let (x, y) = shard(10, 2, 2);
+        let cfg = InstitutionConfig {
+            institution_id: 1,
+            x,
+            y,
+            params: ShamirParams::new(2, 2).unwrap(),
+            codec: FixedCodec::default(),
+            full_security: true,
+            engine: ComputeHandle::rust(),
+            share_seed: 8,
+        };
+        let th = std::thread::spawn(move || run_institution(cfg, iep).unwrap());
+        coord
+            .send(
+                NodeId::Institution(1),
+                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 2] },
+            )
+            .unwrap();
+        for cep in [&c0, &c1] {
+            let (_, msg) = cep.recv().unwrap();
+            match msg {
+                Message::ShareSubmission { hessian, .. } => {
+                    assert!(matches!(hessian, HessianPayload::Shared(v) if v.len() == 3));
+                }
+                _ => panic!(),
+            }
+        }
+        coord.send(NodeId::Institution(1), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let _c0 = net.register(NodeId::Center(0));
+        let iep = net.register(NodeId::Institution(2));
+        let (x, y) = shard(5, 3, 3);
+        let cfg = InstitutionConfig {
+            institution_id: 2,
+            x,
+            y,
+            params: ShamirParams::new(1, 1).unwrap(),
+            codec: FixedCodec::default(),
+            full_security: false,
+            engine: ComputeHandle::rust(),
+            share_seed: 9,
+        };
+        let th = std::thread::spawn(move || run_institution(cfg, iep));
+        coord
+            .send(
+                NodeId::Institution(2),
+                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 7] }, // wrong d
+            )
+            .unwrap();
+        assert!(th.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! # privlr — privacy-preserving regularized logistic regression
+//!
+//! A production-shaped reproduction of *"Supporting Regularized
+//! Logistic Regression Privately and Efficiently"* (Li, Liu, Yang,
+//! Xie; PLoS ONE 2015): L2-regularized logistic regression estimated
+//! jointly across institutions via **distributed Newton-Raphson**,
+//! with institution-level summary statistics protected by **Shamir
+//! t-of-w secret sharing** held at independent computation centers.
+//!
+//! Architecture (three layers, python never on the request path):
+//!
+//! * **L3** — this crate: coordinator, institutions, computation
+//!   centers, secret-sharing protocol, simulated network, metrics.
+//! * **L2** — `python/compile/model.py`: the per-institution summary
+//!   statistic computation (local Hessian/gradient/deviance) in JAX,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **L1** — `python/compile/kernels/local_stats.py`: the Pallas
+//!   kernel inside L2 (blocked XᵀWX over row tiles).
+//!
+//! The [`runtime`] module loads the HLO artifacts via the PJRT C API
+//! (`xla` crate) and executes them from the institution hot path; a
+//! bit-compatible pure-rust fallback in [`model`] keeps every test and
+//! experiment runnable when artifacts have not been built.
+
+pub mod attack;
+pub mod baseline;
+pub mod bench;
+pub mod center;
+pub mod config;
+pub mod coordinator;
+pub mod crossval;
+pub mod data;
+pub mod field;
+pub mod fixed;
+pub mod inference;
+pub mod institution;
+pub mod linalg;
+pub mod model;
+pub mod modelio;
+pub mod mpc;
+pub mod mpc_solve;
+pub mod protocol;
+pub mod runtime;
+pub mod secure;
+pub mod shamir;
+pub mod transport;
+pub mod util;

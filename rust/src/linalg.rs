@@ -1,0 +1,520 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK crates offline).
+//!
+//! The protocol only ever solves small d×d symmetric-positive-definite
+//! systems — `(XᵀWX + λI) δ = g` with d ≤ a few hundred — so a clean
+//! row-major [`Matrix`] with Cholesky (primary) and partially-pivoted
+//! LU (fallback for indefinite inputs in tests/tools) covers every
+//! need, including the centralized baseline.
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Self {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_flat(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), x);
+        }
+        out
+    }
+
+    /// Transposed matrix-vector product `Aᵀ x` without materializing Aᵀ.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    /// Dense matmul (used only in tests/tools; hot paths use rank-k).
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows);
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = rhs.row(k);
+                let orow = out.row_mut(i);
+                for (o, &r) in orow.iter_mut().zip(rrow) {
+                    *o += a * r;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Symmetric rank-k accumulate: `self += alpha · x xᵀ` for a row
+    /// vector x. This is the inner op of the Hessian build; only the
+    /// upper triangle is written — call [`Matrix::symmetrize`] when done.
+    #[inline]
+    pub fn syr_upper(&mut self, alpha: f64, x: &[f64]) {
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(x.len(), self.cols);
+        let n = self.cols;
+        for i in 0..n {
+            let axi = alpha * x[i];
+            if axi == 0.0 {
+                continue;
+            }
+            let row = &mut self.data[i * n..(i + 1) * n];
+            for j in i..n {
+                row[j] += axi * x[j];
+            }
+        }
+    }
+
+    /// Mirror the upper triangle into the lower one.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..i {
+                self[(i, j)] = self[(j, i)];
+            }
+        }
+    }
+
+    /// Max absolute element difference against another matrix.
+    pub fn max_abs_diff(&self, rhs: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// `self += rhs` elementwise.
+    pub fn add_assign(&mut self, rhs: &Matrix) {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+    }
+
+    /// `self[i][i] += v` for all i.
+    pub fn add_diagonal(&mut self, v: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += v;
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product with 4-way manual unrolling (hot in matvec/Cholesky).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x` (axpy).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Errors from the solvers.
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix is not positive definite (pivot {0} = {1:.3e})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("matrix is singular at column {0}")]
+    Singular(usize),
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+}
+
+/// Cholesky factorization `A = L Lᵀ` of an SPD matrix (lower triangle).
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor. Reads only the upper triangle of `a` (which is what the
+    /// aggregation produces before symmetrize), treating it as symmetric.
+    pub fn factor(a: &Matrix) -> Result<Cholesky, LinalgError> {
+        if a.rows != a.cols {
+            return Err(LinalgError::Dim(format!("{}x{} not square", a.rows, a.cols)));
+        }
+        let n = a.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // a[(j, i)] is the upper-triangle mirror of a[(i, j)].
+                let mut sum = a[(j, i)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return Err(LinalgError::NotPositiveDefinite(i, sum));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let mut v = y[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                v -= row[k] * y[k];
+            }
+            y[i] = v / row[i];
+        }
+        // backward: Lᵀ x = y
+        let mut x = y;
+        for i in (0..n).rev() {
+            let mut v = x[i];
+            for k in i + 1..n {
+                v -= self.l[(k, i)] * x[k];
+            }
+            x[i] = v / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// log det A = 2 Σ log L_ii (useful for model diagnostics).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// A⁻¹ by solving against unit vectors (d is small).
+    pub fn inverse(&self) -> Matrix {
+        let n = self.l.rows;
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+}
+
+/// LU with partial pivoting; fallback for general square systems.
+pub struct Lu {
+    lu: Matrix,
+    piv: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    pub fn factor(a: &Matrix) -> Result<Lu, LinalgError> {
+        if a.rows != a.cols {
+            return Err(LinalgError::Dim(format!("{}x{} not square", a.rows, a.cols)));
+        }
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot selection
+            let mut p = k;
+            let mut maxv = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > maxv {
+                    maxv = v;
+                    p = i;
+                }
+            }
+            if maxv == 0.0 || !maxv.is_finite() {
+                return Err(LinalgError::Singular(k));
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let f = lu[(i, k)] / pivot;
+                lu[(i, k)] = f;
+                for j in k + 1..n {
+                    let v = lu[(k, j)];
+                    lu[(i, j)] -= f * v;
+                }
+            }
+        }
+        Ok(Lu { lu, piv, sign })
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward (unit lower)
+        for i in 1..n {
+            let mut v = x[i];
+            for k in 0..i {
+                v -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = v;
+        }
+        // backward (upper)
+        for i in (0..n).rev() {
+            let mut v = x[i];
+            for k in i + 1..n {
+                v -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = v / self.lu[(i, i)];
+        }
+        x
+    }
+
+    pub fn det(&self) -> f64 {
+        (0..self.lu.rows).map(|i| self.lu[(i, i)]).product::<f64>() * self.sign
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        // A = BᵀB + n·I is SPD.
+        let mut rng = SplitMix64::new(seed);
+        let mut b = Matrix::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        let mut a = b.transpose().matmul(&b);
+        a.add_diagonal(n as f64);
+        a
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        for n in [1, 2, 5, 17, 40] {
+            let a = random_spd(n, n as u64);
+            let mut rng = SplitMix64::new(99 + n as u64);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let b = a.matvec(&x_true);
+            let x = Cholesky::factor(&a).unwrap().solve(&b);
+            for (xi, ti) in x.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-8, "n={n}: {xi} vs {ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eig −1, 3
+        assert!(matches!(
+            Cholesky::factor(&a),
+            Err(LinalgError::NotPositiveDefinite(..))
+        ));
+    }
+
+    #[test]
+    fn cholesky_inverse() {
+        let a = random_spd(6, 3);
+        let inv = Cholesky::factor(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(6)) < 1e-9);
+    }
+
+    #[test]
+    fn lu_solves_general() {
+        let a = Matrix::from_rows(vec![
+            vec![0.0, 2.0, 1.0],
+            vec![1.0, -1.0, 0.0],
+            vec![3.0, 0.0, -2.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let x = Lu::factor(&a).unwrap().solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(matches!(Lu::factor(&a), Err(LinalgError::Singular(_))));
+    }
+
+    #[test]
+    fn lu_determinant() {
+        let a = Matrix::from_rows(vec![vec![4.0, 3.0], vec![6.0, 3.0]]);
+        assert!((Lu::factor(&a).unwrap().det() - (-6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn syr_builds_gram_matrix() {
+        // Σ x xᵀ over rows == XᵀX.
+        let x = Matrix::from_rows(vec![
+            vec![1.0, 2.0, 0.5],
+            vec![-1.0, 0.0, 2.0],
+            vec![3.0, 1.0, 1.0],
+        ]);
+        let mut g = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            g.syr_upper(1.0, x.row(i));
+        }
+        g.symmetrize();
+        let expect = x.transpose().matmul(&x);
+        assert!(g.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let v = vec![1.0, -1.0, 2.0];
+        let got = a.matvec_t(&v);
+        let expect = a.transpose().matvec(&v);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = SplitMix64::new(11);
+        for n in [0, 1, 3, 4, 7, 16, 33] {
+            let a: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_det_matches_lu() {
+        let a = random_spd(8, 21);
+        let chol = Cholesky::factor(&a).unwrap();
+        let lu = Lu::factor(&a).unwrap();
+        assert!((chol.log_det() - lu.det().ln()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn identity_and_indexing() {
+        let mut m = Matrix::identity(3);
+        assert_eq!(m[(1, 1)], 1.0);
+        assert_eq!(m[(0, 2)], 0.0);
+        m[(0, 2)] = 5.0;
+        assert_eq!(m.row(0), &[1.0, 0.0, 5.0]);
+    }
+}

@@ -1,0 +1,339 @@
+//! Logistic-regression model mathematics (pure rust).
+//!
+//! This module is the numerical ground truth for the whole system:
+//!
+//! * the **local summary statistics** of the paper's distributed
+//!   Newton-Raphson (Eqs. 4–6): per-institution Hessian
+//!   `H_j = Σ_i w_i x_i x_iᵀ`, gradient `g_j = Σ_i (y_i − p_i) x_i`,
+//!   and deviance `dev_j = −2 Σ_i [y_i log p_i + (1−y_i) log(1−p_i)]`;
+//! * the **regularized Newton update** (Eq. 3):
+//!   `β ← β + (H + λI)⁻¹ (g − λβ)`;
+//! * prediction and classification metrics.
+//!
+//! The same computation exists as a JAX/Pallas artifact (L2/L1); the
+//! runtime's integration tests assert both paths agree elementwise.
+//! On the gradient form: the paper states `g = Σ (1−p_i) y_i x_i`,
+//! which is the ±1-response coding of the identical quantity
+//! `Σ (y_i − p_i) x_i` in 0/1 coding (with `p_i = σ(y_i βᵀx_i)` in the
+//! former). We use 0/1 coding throughout, matching Eq. 6's deviance.
+
+use crate::linalg::{Cholesky, LinalgError, Matrix};
+
+/// Numerically-stable logistic function.
+#[inline(always)]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Stable `log(sigmoid(z))` = −log(1+e^(−z)).
+#[inline(always)]
+pub fn log_sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        -(-z).exp().ln_1p()
+    } else {
+        z - z.exp().ln_1p()
+    }
+}
+
+/// Per-institution summary statistics for one Newton iteration.
+///
+/// `h` stores the **unpenalized** Fisher information Σ w_i x_i x_iᵀ and
+/// `g` the unpenalized score; the λ terms are applied once, centrally,
+/// after aggregation (Algorithm 1, lines 11–12).
+#[derive(Clone, Debug)]
+pub struct LocalStats {
+    pub h: Matrix,
+    pub g: Vec<f64>,
+    pub dev: f64,
+    /// Number of (unmasked) records that contributed.
+    pub n: usize,
+}
+
+impl LocalStats {
+    pub fn zeros(d: usize) -> Self {
+        Self {
+            h: Matrix::zeros(d, d),
+            g: vec![0.0; d],
+            dev: 0.0,
+            n: 0,
+        }
+    }
+
+    /// Merge another institution's statistics (plain aggregation, used
+    /// by the plaintext baselines and tests; the secure path merges in
+    /// the share domain instead).
+    pub fn merge(&mut self, other: &LocalStats) {
+        self.h.add_assign(&other.h);
+        for (a, b) in self.g.iter_mut().zip(&other.g) {
+            *a += b;
+        }
+        self.dev += other.dev;
+        self.n += other.n;
+    }
+}
+
+/// Compute local summary statistics for a data shard.
+///
+/// `x` is N×d (first column conventionally the intercept), `y` holds
+/// 0/1 responses. This is the rust twin of the L1 Pallas kernel.
+pub fn local_stats(x: &Matrix, y: &[f64], beta: &[f64]) -> LocalStats {
+    assert_eq!(x.rows, y.len());
+    assert_eq!(x.cols, beta.len());
+    let d = x.cols;
+    let mut st = LocalStats::zeros(d);
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        let z = crate::linalg::dot(xi, beta);
+        let p = sigmoid(z);
+        let w = p * (1.0 - p);
+        st.h.syr_upper(w, xi);
+        let r = y[i] - p;
+        crate::linalg::axpy(r, xi, &mut st.g);
+        // deviance via stable log-sigmoid: y log p + (1−y) log(1−p)
+        st.dev += -2.0 * (y[i] * log_sigmoid(z) + (1.0 - y[i]) * log_sigmoid(-z));
+    }
+    st.h.symmetrize();
+    st.n = x.rows;
+    st
+}
+
+/// Outcome of one Newton-Raphson update on aggregated statistics.
+#[derive(Clone, Debug)]
+pub struct NewtonStep {
+    pub beta_new: Vec<f64>,
+    /// Penalized deviance at the *current* β (before the step):
+    /// `Dev + λ‖β‖²` — the convergence statistic.
+    pub penalized_dev: f64,
+}
+
+/// Apply the regularized Newton update (Eq. 3) to aggregated stats.
+///
+/// `h_total`/`g_total`/`dev_total` are the cross-institution sums;
+/// λ enters here exactly once: `(H + λI) δ = g − λβ`.
+pub fn newton_update(
+    h_total: &Matrix,
+    g_total: &[f64],
+    dev_total: f64,
+    beta: &[f64],
+    lambda: f64,
+) -> Result<NewtonStep, LinalgError> {
+    let d = beta.len();
+    assert_eq!(h_total.rows, d);
+    assert_eq!(g_total.len(), d);
+    let mut a = h_total.clone();
+    a.add_diagonal(lambda);
+    let rhs: Vec<f64> = g_total
+        .iter()
+        .zip(beta)
+        .map(|(g, b)| g - lambda * b)
+        .collect();
+    let delta = Cholesky::factor(&a)?.solve(&rhs);
+    let beta_new: Vec<f64> = beta.iter().zip(&delta).map(|(b, d)| b + d).collect();
+    let pen = dev_total + lambda * beta.iter().map(|b| b * b).sum::<f64>();
+    Ok(NewtonStep {
+        beta_new,
+        penalized_dev: pen,
+    })
+}
+
+/// Model convergence check used by both secure and baseline solvers:
+/// absolute change in penalized deviance below `tol` (paper: 1e-10).
+pub fn converged(dev_prev: f64, dev_cur: f64, tol: f64) -> bool {
+    (dev_prev - dev_cur).abs() < tol
+}
+
+/// Predict probabilities for a design matrix.
+pub fn predict(x: &Matrix, beta: &[f64]) -> Vec<f64> {
+    x.matvec(beta).into_iter().map(sigmoid).collect()
+}
+
+/// Classification accuracy at threshold 0.5.
+pub fn accuracy(x: &Matrix, y: &[f64], beta: &[f64]) -> f64 {
+    let p = predict(x, beta);
+    let correct = p
+        .iter()
+        .zip(y)
+        .filter(|(pi, yi)| (**pi >= 0.5) == (**yi >= 0.5))
+        .count();
+    correct as f64 / y.len().max(1) as f64
+}
+
+/// Area under the ROC curve (rank statistic; O(n log n)).
+pub fn auc(scores: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(scores.len(), y.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let (mut rank_sum_pos, mut n_pos, mut n_neg) = (0.0f64, 0u64, 0u64);
+    let mut i = 0;
+    let n = idx.len();
+    let mut rank = 1.0;
+    while i < n {
+        // average ranks over ties
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (rank + rank + (j - i) as f64) / 2.0;
+        for &k in &idx[i..=j] {
+            if y[k] >= 0.5 {
+                rank_sum_pos += avg_rank;
+                n_pos += 1;
+            } else {
+                n_neg += 1;
+            }
+        }
+        rank += (j - i + 1) as f64;
+        i = j + 1;
+    }
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    fn toy_data(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let beta_true: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-1.0, 1.0)).collect();
+        let mut x = Matrix::zeros(n, d);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            x[(i, 0)] = 1.0;
+            for j in 1..d {
+                x[(i, j)] = rng.next_gaussian();
+            }
+            let p = sigmoid(crate::linalg::dot(x.row(i), &beta_true));
+            y[i] = if rng.next_bernoulli(p) { 1.0 } else { 0.0 };
+        }
+        (x, y, beta_true)
+    }
+
+    #[test]
+    fn sigmoid_stability() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        assert!(sigmoid(800.0) <= 1.0 && sigmoid(800.0) > 0.999);
+        assert!(sigmoid(-800.0) >= 0.0 && sigmoid(-800.0) < 1e-10);
+        assert!((log_sigmoid(-800.0) - (-800.0)).abs() < 1e-9);
+        assert!(log_sigmoid(800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_stats_at_zero_beta() {
+        // At β=0, p=1/2, w=1/4: H = XᵀX/4, g = Σ(y−1/2)x,
+        // dev = −2 Σ log(1/2) = 2N log 2.
+        let (x, y, _) = toy_data(50, 3, 1);
+        let st = local_stats(&x, &y, &[0.0; 3]);
+        let mut expect_h = Matrix::zeros(3, 3);
+        for i in 0..50 {
+            expect_h.syr_upper(0.25, x.row(i));
+        }
+        expect_h.symmetrize();
+        assert!(st.h.max_abs_diff(&expect_h) < 1e-12);
+        assert!((st.dev - 2.0 * 50.0 * std::f64::consts::LN_2).abs() < 1e-9);
+        let mut expect_g = vec![0.0; 3];
+        for i in 0..50 {
+            crate::linalg::axpy(y[i] - 0.5, x.row(i), &mut expect_g);
+        }
+        for (a, b) in st.g.iter().zip(&expect_g) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stats_decompose_across_shards() {
+        // Eq. 4/5/6: stats of the union == sum of shard stats.
+        let (x, y, _) = toy_data(60, 4, 2);
+        let beta = [0.3, -0.2, 0.1, 0.05];
+        let whole = local_stats(&x, &y, &beta);
+        let mut merged = LocalStats::zeros(4);
+        for chunk in 0..3 {
+            let lo = chunk * 20;
+            let rows: Vec<Vec<f64>> = (lo..lo + 20).map(|i| x.row(i).to_vec()).collect();
+            let xs = Matrix::from_rows(rows);
+            let ys = y[lo..lo + 20].to_vec();
+            merged.merge(&local_stats(&xs, &ys, &beta));
+        }
+        assert!(whole.h.max_abs_diff(&merged.h) < 1e-10);
+        assert!((whole.dev - merged.dev).abs() < 1e-10);
+        for (a, b) in whole.g.iter().zip(&merged.g) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn newton_converges_and_satisfies_kkt() {
+        let (x, y, _) = toy_data(400, 4, 3);
+        let lambda = 1.0;
+        let mut beta = vec![0.0; 4];
+        let mut last_pen = f64::INFINITY;
+        for _ in 0..50 {
+            let st = local_stats(&x, &y, &beta);
+            let step = newton_update(&st.h, &st.g, st.dev, &beta, lambda).unwrap();
+            if converged(last_pen, step.penalized_dev, 1e-10) {
+                break;
+            }
+            last_pen = step.penalized_dev;
+            beta = step.beta_new;
+        }
+        // KKT: g − λβ ≈ 0 at optimum.
+        let st = local_stats(&x, &y, &beta);
+        for (g, b) in st.g.iter().zip(&beta) {
+            assert!((g - lambda * b).abs() < 1e-6, "stationarity violated");
+        }
+    }
+
+    #[test]
+    fn regularization_shrinks_coefficients() {
+        let (x, y, _) = toy_data(300, 5, 4);
+        let fit = |lambda: f64| {
+            let mut beta = vec![0.0; 5];
+            for _ in 0..30 {
+                let st = local_stats(&x, &y, &beta);
+                beta = newton_update(&st.h, &st.g, st.dev, &beta, lambda)
+                    .unwrap()
+                    .beta_new;
+            }
+            beta.iter().map(|b| b * b).sum::<f64>().sqrt()
+        };
+        let norm_small = fit(0.01);
+        let norm_large = fit(100.0);
+        assert!(
+            norm_large < norm_small * 0.5,
+            "λ=100 should shrink: {norm_large} vs {norm_small}"
+        );
+    }
+
+    #[test]
+    fn auc_on_perfect_and_random_scores() {
+        let y = vec![0.0, 0.0, 1.0, 1.0];
+        assert!((auc(&[0.1, 0.2, 0.8, 0.9], &y) - 1.0).abs() < 1e-12);
+        assert!((auc(&[0.9, 0.8, 0.2, 0.1], &y) - 0.0).abs() < 1e-12);
+        // all-ties → 0.5
+        assert!((auc(&[0.5, 0.5, 0.5, 0.5], &y) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_metric() {
+        let x = Matrix::from_rows(vec![vec![1.0, 2.0], vec![1.0, -2.0]]);
+        let y = vec![1.0, 0.0];
+        // β = [0, 10]: p = σ(20)≈1 and σ(−20)≈0 → perfect
+        assert_eq!(accuracy(&x, &y, &[0.0, 10.0]), 1.0);
+        assert_eq!(accuracy(&x, &y, &[0.0, -10.0]), 0.0);
+    }
+
+    #[test]
+    fn converged_tolerance_semantics() {
+        assert!(converged(1.0, 1.0 + 5e-11, 1e-10));
+        assert!(!converged(1.0, 1.0 + 5e-10, 1e-10));
+    }
+}

@@ -1,0 +1,150 @@
+//! Fitted-model persistence and scoring — the downstream-user side of
+//! the framework: after the consortium fit, each institution receives
+//! the final β and needs to store it, audit it, and score new records.
+
+use crate::linalg::Matrix;
+use crate::model::{predict, sigmoid};
+use crate::util::json::{self, Json};
+
+/// A fitted regularized-logistic-regression model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FittedModel {
+    pub beta: Vec<f64>,
+    pub lambda: f64,
+    /// Iterations the secure fit took (provenance).
+    pub iterations: u32,
+    /// Human-readable provenance: dataset name, topology, mode.
+    pub provenance: String,
+}
+
+impl FittedModel {
+    pub fn new(beta: Vec<f64>, lambda: f64, iterations: u32, provenance: &str) -> Self {
+        Self {
+            beta,
+            lambda,
+            iterations,
+            provenance: provenance.to_string(),
+        }
+    }
+
+    /// Model dimension (incl. intercept).
+    pub fn dim(&self) -> usize {
+        self.beta.len()
+    }
+
+    /// Probability for one record (with intercept already present).
+    pub fn score_one(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.dim());
+        sigmoid(crate::linalg::dot(x, &self.beta))
+    }
+
+    /// Probabilities for a design matrix.
+    pub fn score(&self, x: &Matrix) -> Vec<f64> {
+        predict(x, &self.beta)
+    }
+
+    /// Odds ratio per feature: exp(β_j) — the quantity clinicians and
+    /// epidemiologists read off a logistic model.
+    pub fn odds_ratios(&self) -> Vec<f64> {
+        self.beta.iter().map(|b| b.exp()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("format", json::s("privlr-model/1")),
+            (
+                "beta",
+                Json::Arr(self.beta.iter().map(|&b| Json::Num(b)).collect()),
+            ),
+            ("lambda", json::num(self.lambda)),
+            ("iterations", json::num(self.iterations as f64)),
+            ("provenance", json::s(&self.provenance)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<FittedModel> {
+        anyhow::ensure!(
+            v.get("format").as_str() == Some("privlr-model/1"),
+            "not a privlr model file (format key missing/unknown)"
+        );
+        let beta: Vec<f64> = v
+            .get("beta")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("beta missing"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric beta")))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!beta.is_empty(), "empty beta");
+        Ok(FittedModel {
+            beta,
+            lambda: v.get("lambda").as_f64().unwrap_or(f64::NAN),
+            iterations: v.get("iterations").as_u64().unwrap_or(0) as u32,
+            provenance: v.get("provenance").as_str().unwrap_or("").to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<FittedModel> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FittedModel {
+        FittedModel::new(vec![0.5, -1.25, 2.0], 1.0, 7, "test: 3 institutions, 3-of-5")
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let back = FittedModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("privlr_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        let m = sample();
+        m.save(&path).unwrap();
+        assert_eq!(FittedModel::load(&path).unwrap(), m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scoring_matches_model_predict() {
+        let m = sample();
+        let x = Matrix::from_rows(vec![vec![1.0, 0.5, -0.5], vec![1.0, -2.0, 1.0]]);
+        let s = m.score(&x);
+        for (i, &p) in s.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&p));
+            assert!((p - m.score_one(x.row(i))).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn odds_ratios_are_exp_beta() {
+        let m = sample();
+        let or = m.odds_ratios();
+        assert!((or[0] - 0.5f64.exp()).abs() < 1e-12);
+        assert!((or[2] - 2.0f64.exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_foreign_json() {
+        assert!(FittedModel::from_json(&Json::parse(r#"{"beta": [1]}"#).unwrap()).is_err());
+        assert!(FittedModel::from_json(
+            &Json::parse(r#"{"format": "privlr-model/1", "beta": []}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,409 @@
+//! Secure multiplication of *two shared secrets* — the primitive the
+//! paper defers to future work ("secure matrix inversion … leveraging
+//! LU-decomposition, Gaussian elimination [38–40]") and the building
+//! block for running the *entire* Newton update under shares.
+//!
+//! Shamir shares are additively homomorphic, but multiplying two
+//! degree-(t−1) share polynomials yields degree 2(t−1) — one share per
+//! center no longer determines the product. The standard fix is
+//! **Beaver multiplication triples**: a dealer (or offline MPC
+//! preprocessing) distributes shares of random (a, b, c = a·b); to
+//! multiply shared x·y the centers open the *masked* values
+//! ε = x − a and δ = y − b (uniform, reveal nothing) and compute
+//!
+//! ```text
+//! [xy] = [c] + ε·[b] + δ·[a] + ε·δ
+//! ```
+//!
+//! locally — one round of communication, information-theoretically
+//! secure given triple secrecy. We implement the dealer model (the
+//! same trust shape as the paper's "independent Computation Centers")
+//! with triples drawn from ChaCha20.
+//!
+//! On top of the scalar primitive we provide shared-vector dot
+//! products and shared matrix multiplication, plus **fixed-point
+//! rescaling** (each fixed-point multiply doubles the fractional bits;
+//! [`TriplePool::mul_fixed`] divides the product back down — in the
+//! dealer model by masked opening, a standard pragmatic truncation).
+//! `examples`/benches use this to quantify what the fully-secure
+//! Newton step would cost, the ablation the paper's pragmatic-mode
+//! argument rests on.
+
+use crate::field::Fp;
+use crate::fixed::FixedCodec;
+use crate::shamir::{reconstruct_batch, share_batch, ShamirParams, ShareBatch};
+use crate::util::rng::Rng;
+
+/// Shares of one multiplication triple (a, b, c=ab), per holder.
+#[derive(Clone, Debug)]
+pub struct BeaverTriple {
+    pub a: Vec<Fp>,
+    pub b: Vec<Fp>,
+    pub c: Vec<Fp>,
+}
+
+/// A dealer-provisioned pool of multiplication triples.
+///
+/// In deployment the dealer is an offline preprocessing phase or a
+/// dedicated non-colluding party; in this simulation it is a seeded
+/// CSPRNG. Every consumed triple is single-use (reuse would leak).
+pub struct TriplePool {
+    params: ShamirParams,
+    triples: Vec<BeaverTriple>,
+    next: usize,
+}
+
+impl TriplePool {
+    /// Deal `count` triples for a t-of-w scheme.
+    pub fn deal<R: Rng>(params: ShamirParams, count: usize, rng: &mut R) -> TriplePool {
+        let mut triples = Vec::with_capacity(count);
+        for _ in 0..count {
+            let a = Fp::random(rng);
+            let b = Fp::random(rng);
+            let c = a * b;
+            let sa = share_batch(params, &[a], rng);
+            let sb = share_batch(params, &[b], rng);
+            let sc = share_batch(params, &[c], rng);
+            triples.push(BeaverTriple {
+                a: sa.per_holder.iter().map(|h| h[0]).collect(),
+                b: sb.per_holder.iter().map(|h| h[0]).collect(),
+                c: sc.per_holder.iter().map(|h| h[0]).collect(),
+            });
+        }
+        TriplePool {
+            params,
+            triples,
+            next: 0,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.triples.len() - self.next
+    }
+
+    fn take(&mut self) -> anyhow::Result<BeaverTriple> {
+        anyhow::ensure!(
+            self.next < self.triples.len(),
+            "triple pool exhausted ({} dealt)",
+            self.triples.len()
+        );
+        let t = self.triples[self.next].clone();
+        self.next += 1;
+        Ok(t)
+    }
+
+    /// Securely multiply two shared scalars. `x` and `y` give one share
+    /// per holder (length w); returns shares of x·y.
+    ///
+    /// The openings of ε = x−a and δ = y−b model the one broadcast
+    /// round between centers; both are uniform field elements.
+    pub fn mul(&mut self, x: &[Fp], y: &[Fp]) -> anyhow::Result<Vec<Fp>> {
+        let w = self.params.num_holders;
+        anyhow::ensure!(x.len() == w && y.len() == w, "share vector length");
+        let t = self.take()?;
+        // Each holder computes its share of ε and δ …
+        let eps_shares: Vec<(usize, Fp)> = (0..w).map(|j| (j, x[j] - t.a[j])).collect();
+        let del_shares: Vec<(usize, Fp)> = (0..w).map(|j| (j, y[j] - t.b[j])).collect();
+        // … and the quorum opens them (public values).
+        let eps = crate::shamir::reconstruct_scalar(self.params, &eps_shares[..self.params.threshold])?;
+        let del = crate::shamir::reconstruct_scalar(self.params, &del_shares[..self.params.threshold])?;
+        // [xy] = [c] + ε[b] + δ[a] + εδ  (constant added by a designated
+        // holder-independent convention: share of public constant k is k —
+        // valid because a degree-0 polynomial q(x)=k has q(j)=k ∀j).
+        let ed = eps * del;
+        Ok((0..w)
+            .map(|j| t.c[j] + eps * t.b[j] + del * t.a[j] + ed)
+            .collect())
+    }
+
+    /// Secure dot product of two shared vectors (consumes n triples).
+    /// `xs[k][j]` = holder j's share of x_k.
+    pub fn dot(&mut self, xs: &[Vec<Fp>], ys: &[Vec<Fp>]) -> anyhow::Result<Vec<Fp>> {
+        anyhow::ensure!(xs.len() == ys.len(), "vector length");
+        let w = self.params.num_holders;
+        let mut acc = vec![Fp::ZERO; w];
+        for (x, y) in xs.iter().zip(ys) {
+            let prod = self.mul(x, y)?;
+            for j in 0..w {
+                acc[j] = acc[j] + prod[j];
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Secure multiply of two FIXED-POINT shared values with rescaling.
+    ///
+    /// The raw product carries 2·frac_bits; we truncate back to
+    /// frac_bits by masked opening (dealer model): shift the shared
+    /// product positive with a public OFFSET, open `z + OFFSET + r` for
+    /// a dealer-shared random `r`, truncate the PUBLIC value, and
+    /// subtract the dealer's pre-truncated share of `r` plus the public
+    /// `OFFSET >> f`. Error ≤ 2 LSB from the two dropped carries.
+    ///
+    /// Field-width budget (p = 2^61−1): requires `2f + 14` bits for the
+    /// product and a 2^8 statistical-hiding margin on top, so the codec
+    /// must satisfy `frac_bits ≤ 22` and |x|,|y| ≤ 2^7. This is an MPC
+    /// *demonstration* primitive for the future-work fully-secure
+    /// solve; the production protocol never multiplies two secrets.
+    pub fn mul_fixed<R: Rng>(
+        &mut self,
+        codec: &FixedCodec,
+        x: &[Fp],
+        y: &[Fp],
+        rng: &mut R,
+    ) -> anyhow::Result<Vec<Fp>> {
+        let f = codec.frac_bits();
+        anyhow::ensure!(f <= 22, "mul_fixed requires frac_bits <= 22, got {f}");
+        let w = self.params.num_holders;
+        let z = self.mul(x, y)?; // carries 2f fractional bits, |z| < 2^(2f+14)
+        let prod_bits = 2 * f + 14;
+        let offset: i128 = 1i128 << prod_bits; // makes z' = z + offset positive
+        // r uniform in [0, 2^(prod_bits+9)): ~2^8 hiding margin; total
+        // opened magnitude < 2^(prod_bits+10) ≤ 2^68... must stay < p/2.
+        // With f ≤ 22: prod_bits ≤ 58 → cap r at 2^59 and the opened
+        // value at < 2^60 < p/2. Margin shrinks accordingly at f = 22.
+        let r_bits = (prod_bits + 9).min(59);
+        let r_val: i128 = (((rng.next_u64() as u128) << 64 | rng.next_u64() as u128)
+            & ((1u128 << r_bits) - 1)) as i128;
+        let r_hi = Fp::from_i128(r_val >> f);
+        let sr = share_batch(self.params, &[Fp::from_i128(r_val)], rng);
+        let sr_hi = share_batch(self.params, &[r_hi], rng);
+        // open z + OFFSET + r  (strictly positive, no field wrap)
+        let off = Fp::from_i128(offset);
+        let masked: Vec<(usize, Fp)> = (0..w)
+            .map(|j| (j, z[j] + off + sr.per_holder[j][0]))
+            .collect();
+        let opened = crate::shamir::reconstruct_scalar(
+            self.params,
+            &masked[..self.params.threshold],
+        )?;
+        let opened_trunc = Fp::from_i128((opened.to_u64() as i128) >> f);
+        let off_trunc = Fp::from_i128(offset >> f);
+        // [z>>f] = (z+off+r)>>f − [r>>f] − off>>f   (± carry LSBs)
+        Ok((0..w)
+            .map(|j| opened_trunc - sr_hi.per_holder[j][0] - off_trunc)
+            .collect())
+    }
+}
+
+/// Shares of a dense matrix: `shares[j]` is holder j's flat row-major
+/// share vector.
+#[derive(Clone, Debug)]
+pub struct SharedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub shares: Vec<Vec<Fp>>,
+}
+
+impl SharedMatrix {
+    /// Share a plaintext matrix (fixed-point encoded by the caller).
+    pub fn share<R: Rng>(
+        params: ShamirParams,
+        rows: usize,
+        cols: usize,
+        encoded: &[Fp],
+        rng: &mut R,
+    ) -> SharedMatrix {
+        assert_eq!(encoded.len(), rows * cols);
+        let batch: ShareBatch = share_batch(params, encoded, rng);
+        SharedMatrix {
+            rows,
+            cols,
+            shares: batch.per_holder,
+        }
+    }
+
+    /// Element share vector across holders for entry (i, k).
+    fn elem(&self, i: usize, k: usize) -> Vec<Fp> {
+        let idx = i * self.cols + k;
+        self.shares.iter().map(|h| h[idx]).collect()
+    }
+
+    /// Secure matrix multiply (self · rhs) under shares, consuming
+    /// rows·cols·inner triples. Raw field product — callers manage the
+    /// fixed-point scale (e.g. one operand integer-scaled).
+    pub fn matmul(
+        &self,
+        rhs: &SharedMatrix,
+        pool: &mut TriplePool,
+    ) -> anyhow::Result<SharedMatrix> {
+        anyhow::ensure!(self.cols == rhs.rows, "dims");
+        let w = self.shares.len();
+        let mut out = vec![vec![Fp::ZERO; self.rows * rhs.cols]; w];
+        for i in 0..self.rows {
+            for j2 in 0..rhs.cols {
+                let xs: Vec<Vec<Fp>> = (0..self.cols).map(|k| self.elem(i, k)).collect();
+                let ys: Vec<Vec<Fp>> = (0..self.cols).map(|k| rhs.elem(k, j2)).collect();
+                let acc = pool.dot(&xs, &ys)?;
+                for h in 0..w {
+                    out[h][i * rhs.cols + j2] = acc[h];
+                }
+            }
+        }
+        Ok(SharedMatrix {
+            rows: self.rows,
+            cols: rhs.cols,
+            shares: out,
+        })
+    }
+
+    /// Reconstruct the plaintext (field) matrix from a t-quorum.
+    pub fn open(&self, params: ShamirParams) -> anyhow::Result<Vec<Fp>> {
+        let quorum: Vec<(usize, &[Fp])> = (0..params.threshold)
+            .map(|j| (j, self.shares[j].as_slice()))
+            .collect();
+        reconstruct_batch(params, &quorum)
+    }
+}
+
+/// Cost model: triples consumed by a fully-secure Newton iteration at
+/// dimension d (matrix solve via k Newton–Schulz steps, each two d×d×d
+/// secure matmuls). The ablation bench prints this next to the hybrid
+/// protocol's actual secure-op count — the gap is the paper's case for
+/// the pragmatic architecture.
+pub fn full_newton_triple_cost(d: usize, newton_schulz_iters: usize) -> u64 {
+    let matmul = (d * d * d) as u64;
+    (2 * matmul) * newton_schulz_iters as u64 + matmul
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::ChaCha20Rng;
+
+    fn setup(t: usize, w: usize, triples: usize) -> (ShamirParams, TriplePool, ChaCha20Rng) {
+        let params = ShamirParams::new(t, w).unwrap();
+        let mut rng = ChaCha20Rng::seed_from_u64(42);
+        let pool = TriplePool::deal(params, triples, &mut rng);
+        (params, pool, rng)
+    }
+
+    fn share_scalar(params: ShamirParams, v: Fp, rng: &mut ChaCha20Rng) -> Vec<Fp> {
+        share_batch(params, &[v], rng)
+            .per_holder
+            .iter()
+            .map(|h| h[0])
+            .collect()
+    }
+
+    fn open_scalar(params: ShamirParams, shares: &[Fp]) -> Fp {
+        let q: Vec<(usize, Fp)> = (0..params.threshold).map(|j| (j, shares[j])).collect();
+        crate::shamir::reconstruct_scalar(params, &q).unwrap()
+    }
+
+    #[test]
+    fn beaver_multiplication_is_correct() {
+        let (params, mut pool, mut rng) = setup(3, 5, 64);
+        for _ in 0..50 {
+            let x = Fp::random(&mut rng);
+            let y = Fp::random(&mut rng);
+            let sx = share_scalar(params, x, &mut rng);
+            let sy = share_scalar(params, y, &mut rng);
+            let sz = pool.mul(&sx, &sy).unwrap();
+            assert_eq!(open_scalar(params, &sz), x * y);
+        }
+    }
+
+    #[test]
+    fn triples_are_single_use_and_pool_exhausts() {
+        let (params, mut pool, mut rng) = setup(2, 3, 2);
+        let sx = share_scalar(params, Fp::new(3), &mut rng);
+        let sy = share_scalar(params, Fp::new(4), &mut rng);
+        assert_eq!(pool.remaining(), 2);
+        pool.mul(&sx, &sy).unwrap();
+        pool.mul(&sx, &sy).unwrap();
+        assert_eq!(pool.remaining(), 0);
+        assert!(pool.mul(&sx, &sy).is_err());
+    }
+
+    #[test]
+    fn secure_dot_product() {
+        let (params, mut pool, mut rng) = setup(2, 4, 16);
+        let xs_plain = [Fp::new(2), Fp::new(5), Fp::new(7)];
+        let ys_plain = [Fp::new(11), Fp::new(1), Fp::new(3)];
+        let xs: Vec<Vec<Fp>> = xs_plain
+            .iter()
+            .map(|&v| share_scalar(params, v, &mut rng))
+            .collect();
+        let ys: Vec<Vec<Fp>> = ys_plain
+            .iter()
+            .map(|&v| share_scalar(params, v, &mut rng))
+            .collect();
+        let dot = pool.dot(&xs, &ys).unwrap();
+        // 22 + 5 + 21 = 48
+        assert_eq!(open_scalar(params, &dot), Fp::new(48));
+    }
+
+    #[test]
+    fn fixed_point_mul_with_rescale() {
+        let (params, mut pool, mut rng) = setup(3, 5, 64);
+        let codec = FixedCodec::new(20); // mul_fixed requires f <= 22
+        for (x, y) in [(1.5f64, 2.0f64), (-3.25, 4.0), (0.125, -8.5), (100.0, 0.01)] {
+            let sx = share_scalar(params, codec.encode(x).unwrap(), &mut rng);
+            let sy = share_scalar(params, codec.encode(y).unwrap(), &mut rng);
+            let sz = pool.mul_fixed(&codec, &sx, &sy, &mut rng).unwrap();
+            let z = codec.decode(open_scalar(params, &sz));
+            // error model: input quantization (±ε/2 each) amplified by
+            // the co-factor, plus ≤2 LSB truncation carries
+            let bound = (x.abs() + y.abs() + 4.0) * codec.epsilon();
+            assert!(
+                (z - x * y).abs() < bound,
+                "{x}·{y} = {z} (expect {}, bound {bound})",
+                x * y
+            );
+        }
+    }
+
+    #[test]
+    fn secure_matmul_matches_plain() {
+        let (params, mut pool, mut rng) = setup(2, 3, 256);
+        // 2×3 · 3×2 over small integers (field-exact).
+        let a: Vec<Fp> = [1u64, 2, 3, 4, 5, 6].iter().map(|&v| Fp::new(v)).collect();
+        let b: Vec<Fp> = [7u64, 8, 9, 10, 11, 12].iter().map(|&v| Fp::new(v)).collect();
+        let sa = SharedMatrix::share(params, 2, 3, &a, &mut rng);
+        let sb = SharedMatrix::share(params, 3, 2, &b, &mut rng);
+        let sc = sa.matmul(&sb, &mut pool).unwrap();
+        let c = sc.open(params).unwrap();
+        // [[58, 64], [139, 154]]
+        assert_eq!(
+            c,
+            vec![Fp::new(58), Fp::new(64), Fp::new(139), Fp::new(154)]
+        );
+    }
+
+    #[test]
+    fn masked_openings_are_uniform() {
+        // The values opened during Beaver multiplication (ε, δ) must be
+        // indistinguishable from uniform: bucket them over many runs.
+        let params = ShamirParams::new(2, 3).unwrap();
+        let mut rng = ChaCha20Rng::seed_from_u64(7);
+        let x = Fp::new(5); // tiny, highly structured secret
+        let mut buckets = [0u32; 8];
+        for _ in 0..16_000 {
+            let mut pool = TriplePool::deal(params, 1, &mut rng);
+            let sx = share_scalar(params, x, &mut rng);
+            let sy = share_scalar(params, x, &mut rng);
+            // Peek at ε by re-deriving it the way mul() does.
+            let t = pool.take().unwrap();
+            let eps_shares: Vec<(usize, Fp)> =
+                (0..3).map(|j| (j, sx[j] - t.a[j])).collect();
+            let eps =
+                crate::shamir::reconstruct_scalar(params, &eps_shares[..2]).unwrap();
+            let _ = sy;
+            buckets[(eps.to_u64() >> 58) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((b as i64 - 2000).abs() < 300, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn cost_model_gap() {
+        // Fully-secure Newton at d=85 needs ~10^7 triples per iteration;
+        // the hybrid protocol's secure work is ~10^2. That gap is the
+        // paper's argument made quantitative.
+        let full = full_newton_triple_cost(85, 12);
+        let hybrid = crate::baseline::hybrid_secure_op_count(5, 85, true);
+        assert!(full / hybrid.max(1) > 100, "{full} vs {hybrid}");
+    }
+}

@@ -1,0 +1,550 @@
+//! Wire protocol between institutions, computation centers, and the
+//! coordinator, with a hand-rolled binary codec.
+//!
+//! Every message that crosses a (simulated) network link is encoded to
+//! bytes and decoded on receipt; the transport counts encoded bytes,
+//! which is how the "Data transmitted" row of Table 1 is measured —
+//! actual serialized traffic, not an analytic estimate.
+//!
+//! Encoding conventions: little-endian; `u32` lengths; `u8` tags;
+//! field elements as canonical `u64`; f64 by bit pattern.
+
+use crate::field::Fp;
+
+/// Node addresses in the simulated study network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    Coordinator,
+    Institution(u16),
+    Center(u16),
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeId::Coordinator => write!(f, "coordinator"),
+            NodeId::Institution(j) => write!(f, "institution-{j}"),
+            NodeId::Center(c) => write!(f, "center-{c}"),
+        }
+    }
+}
+
+/// How the Hessian travels in a submission.
+///
+/// The paper's pragmatic mode observes that published inference attacks
+/// need BOTH H and g, so protecting g (and dev) suffices; full mode
+/// secret-shares everything.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HessianPayload {
+    /// Plaintext local Hessian (pragmatic mode): packed upper triangle,
+    /// d(d+1)/2 f64 values (symmetry halves the traffic). Sent to the
+    /// lead center only — duplicating a plaintext to all w centers
+    /// would waste bandwidth without adding protection.
+    Plain(Vec<f64>),
+    /// Secret-shared Hessian (full mode): this center's share of the
+    /// packed upper triangle.
+    Shared(Vec<Fp>),
+    /// No Hessian in this submission (pragmatic mode, non-lead center).
+    Absent,
+}
+
+/// Protocol messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Coordinator → institutions: start iteration `iter` at `beta`.
+    BetaBroadcast { iter: u32, beta: Vec<f64> },
+
+    /// Institution → one center: that center's shares of the local
+    /// summaries for iteration `iter` (Algorithm 1 step 7).
+    ShareSubmission {
+        iter: u32,
+        institution: u16,
+        hessian: HessianPayload,
+        /// This center's share of the gradient vector (d elements).
+        g_share: Vec<Fp>,
+        /// This center's share of the local deviance.
+        dev_share: Fp,
+    },
+
+    /// Coordinator → center: request the securely-aggregated shares
+    /// once all `expected` institutions have submitted for `iter`.
+    AggregateRequest { iter: u32, expected: u16 },
+
+    /// Center → coordinator: the center's share of the GLOBAL sums
+    /// (Σ_j H_j, Σ_j g_j, Σ_j dev_j), produced by secure addition.
+    /// Only the global aggregate is ever reconstructed — institution-
+    /// level summaries never leave the share domain.
+    AggregateResponse {
+        iter: u32,
+        center: u16,
+        hessian: HessianPayload,
+        g_share: Vec<Fp>,
+        dev_share: Fp,
+    },
+
+    /// Coordinator → everyone: converged (or aborted); final β attached
+    /// for the institutions' local use.
+    Finished { iter: u32, beta: Vec<f64> },
+
+    /// A node hit a fatal error; the coordinator aborts the run with
+    /// this context instead of deadlocking on a silent thread death.
+    NodeError { node: u16, is_center: bool, error: String },
+
+    /// Orderly teardown of node threads.
+    Shutdown,
+}
+
+impl Message {
+    /// Short name for tracing/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::BetaBroadcast { .. } => "beta_broadcast",
+            Message::ShareSubmission { .. } => "share_submission",
+            Message::AggregateRequest { .. } => "aggregate_request",
+            Message::AggregateResponse { .. } => "aggregate_response",
+            Message::Finished { .. } => "finished",
+            Message::NodeError { .. } => "node_error",
+            Message::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// Codec errors.
+#[derive(Debug, thiserror::Error)]
+pub enum CodecError {
+    #[error("truncated message (wanted {wanted} more bytes at {at})")]
+    Truncated { at: usize, wanted: usize },
+    #[error("unknown tag {0}")]
+    UnknownTag(u8),
+    #[error("field element out of range: {0}")]
+    BadField(u64),
+}
+
+// ---- encoding -----------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::with_capacity(64) }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u32(vs.len() as u32);
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    fn fps(&mut self, vs: &[Fp]) {
+        self.u32(vs.len() as u32);
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.u64(v.to_u64());
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.pos + n > self.buf.len() {
+            return Err(CodecError::Truncated {
+                at: self.pos,
+                wanted: self.pos + n - self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CodecError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, CodecError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn fp(&mut self) -> Result<Fp, CodecError> {
+        let v = self.u64()?;
+        if v >= crate::field::P {
+            return Err(CodecError::BadField(v));
+        }
+        Ok(Fp::new(v))
+    }
+
+    fn fps(&mut self) -> Result<Vec<Fp>, CodecError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.fp()?);
+        }
+        Ok(out)
+    }
+}
+
+const TAG_BETA: u8 = 1;
+const TAG_SUBMIT: u8 = 2;
+const TAG_AGG_REQ: u8 = 3;
+const TAG_AGG_RESP: u8 = 4;
+const TAG_FINISHED: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+const TAG_NODE_ERROR: u8 = 7;
+
+const HTAG_PLAIN: u8 = 0;
+const HTAG_SHARED: u8 = 1;
+const HTAG_ABSENT: u8 = 2;
+
+fn write_hessian(w: &mut Writer, h: &HessianPayload) {
+    match h {
+        HessianPayload::Plain(v) => {
+            w.u8(HTAG_PLAIN);
+            w.f64s(v);
+        }
+        HessianPayload::Shared(v) => {
+            w.u8(HTAG_SHARED);
+            w.fps(v);
+        }
+        HessianPayload::Absent => w.u8(HTAG_ABSENT),
+    }
+}
+
+fn read_hessian(r: &mut Reader) -> Result<HessianPayload, CodecError> {
+    match r.u8()? {
+        HTAG_PLAIN => Ok(HessianPayload::Plain(r.f64s()?)),
+        HTAG_SHARED => Ok(HessianPayload::Shared(r.fps()?)),
+        HTAG_ABSENT => Ok(HessianPayload::Absent),
+        t => Err(CodecError::UnknownTag(t)),
+    }
+}
+
+/// Encode a message to bytes.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut w = Writer::new();
+    match msg {
+        Message::BetaBroadcast { iter, beta } => {
+            w.u8(TAG_BETA);
+            w.u32(*iter);
+            w.f64s(beta);
+        }
+        Message::ShareSubmission {
+            iter,
+            institution,
+            hessian,
+            g_share,
+            dev_share,
+        } => {
+            w.u8(TAG_SUBMIT);
+            w.u32(*iter);
+            w.u16(*institution);
+            write_hessian(&mut w, hessian);
+            w.fps(g_share);
+            w.u64(dev_share.to_u64());
+        }
+        Message::AggregateRequest { iter, expected } => {
+            w.u8(TAG_AGG_REQ);
+            w.u32(*iter);
+            w.u16(*expected);
+        }
+        Message::AggregateResponse {
+            iter,
+            center,
+            hessian,
+            g_share,
+            dev_share,
+        } => {
+            w.u8(TAG_AGG_RESP);
+            w.u32(*iter);
+            w.u16(*center);
+            write_hessian(&mut w, hessian);
+            w.fps(g_share);
+            w.u64(dev_share.to_u64());
+        }
+        Message::Finished { iter, beta } => {
+            w.u8(TAG_FINISHED);
+            w.u32(*iter);
+            w.f64s(beta);
+        }
+        Message::NodeError { node, is_center, error } => {
+            w.u8(TAG_NODE_ERROR);
+            w.u16(*node);
+            w.u8(u8::from(*is_center));
+            let bytes = error.as_bytes();
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(bytes);
+        }
+        Message::Shutdown => w.u8(TAG_SHUTDOWN),
+    }
+    w.buf
+}
+
+/// Decode a message from bytes, requiring full consumption.
+pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let msg = match r.u8()? {
+        TAG_BETA => Message::BetaBroadcast {
+            iter: r.u32()?,
+            beta: r.f64s()?,
+        },
+        TAG_SUBMIT => Message::ShareSubmission {
+            iter: r.u32()?,
+            institution: r.u16()?,
+            hessian: read_hessian(&mut r)?,
+            g_share: r.fps()?,
+            dev_share: r.fp()?,
+        },
+        TAG_AGG_REQ => Message::AggregateRequest {
+            iter: r.u32()?,
+            expected: r.u16()?,
+        },
+        TAG_AGG_RESP => Message::AggregateResponse {
+            iter: r.u32()?,
+            center: r.u16()?,
+            hessian: read_hessian(&mut r)?,
+            g_share: r.fps()?,
+            dev_share: r.fp()?,
+        },
+        TAG_FINISHED => Message::Finished {
+            iter: r.u32()?,
+            beta: r.f64s()?,
+        },
+        TAG_SHUTDOWN => Message::Shutdown,
+        TAG_NODE_ERROR => {
+            let node = r.u16()?;
+            let is_center = r.u8()? != 0;
+            let len = r.u32()? as usize;
+            let bytes = r.take(len)?;
+            let error = String::from_utf8_lossy(bytes).into_owned();
+            Message::NodeError { node, is_center, error }
+        }
+        t => return Err(CodecError::UnknownTag(t)),
+    };
+    if r.pos != bytes.len() {
+        return Err(CodecError::Truncated {
+            at: r.pos,
+            wanted: 0,
+        });
+    }
+    Ok(msg)
+}
+
+// ---- symmetric-matrix packing -------------------------------------------
+
+/// Pack the upper triangle (incl. diagonal) of a symmetric d×d matrix
+/// row-major: d(d+1)/2 values. Halves Hessian traffic.
+pub fn pack_upper(m: &crate::linalg::Matrix) -> Vec<f64> {
+    assert_eq!(m.rows, m.cols);
+    let d = m.rows;
+    let mut out = Vec::with_capacity(d * (d + 1) / 2);
+    for i in 0..d {
+        for j in i..d {
+            out.push(m[(i, j)]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_upper`].
+pub fn unpack_upper(packed: &[f64], d: usize) -> crate::linalg::Matrix {
+    assert_eq!(packed.len(), d * (d + 1) / 2);
+    let mut m = crate::linalg::Matrix::zeros(d, d);
+    let mut k = 0;
+    for i in 0..d {
+        for j in i..d {
+            m[(i, j)] = packed[k];
+            m[(j, i)] = packed[k];
+            k += 1;
+        }
+    }
+    m
+}
+
+/// Packed-triangle length for dimension d.
+pub fn packed_len(d: usize) -> usize {
+    d * (d + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn roundtrip(msg: Message) {
+        let bytes = encode(&msg);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Message::BetaBroadcast {
+            iter: 3,
+            beta: vec![0.5, -1.25, 1e-10],
+        });
+        roundtrip(Message::ShareSubmission {
+            iter: 1,
+            institution: 4,
+            hessian: HessianPayload::Plain(vec![1.0, 2.0, 3.0]),
+            g_share: vec![Fp::new(7), Fp::new(11)],
+            dev_share: Fp::new(13),
+        });
+        roundtrip(Message::ShareSubmission {
+            iter: 2,
+            institution: 0,
+            hessian: HessianPayload::Shared(vec![Fp::new(17), Fp::new(19)]),
+            g_share: vec![],
+            dev_share: Fp::new(0),
+        });
+        roundtrip(Message::ShareSubmission {
+            iter: 5,
+            institution: 2,
+            hessian: HessianPayload::Absent,
+            g_share: vec![Fp::new(3)],
+            dev_share: Fp::new(4),
+        });
+        roundtrip(Message::AggregateRequest { iter: 9, expected: 6 });
+        roundtrip(Message::AggregateResponse {
+            iter: 9,
+            center: 2,
+            hessian: HessianPayload::Plain(vec![]),
+            g_share: vec![Fp::new(1)],
+            dev_share: Fp::new(99),
+        });
+        roundtrip(Message::Finished {
+            iter: 8,
+            beta: vec![1.0],
+        });
+        roundtrip(Message::NodeError {
+            node: 3,
+            is_center: true,
+            error: "boom: artifact bucket missing".to_string(),
+        });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing() {
+        let bytes = encode(&Message::BetaBroadcast {
+            iter: 1,
+            beta: vec![1.0, 2.0],
+        });
+        assert!(matches!(
+            decode(&bytes[..bytes.len() - 1]),
+            Err(CodecError::Truncated { .. })
+        ));
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(decode(&extended).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_tag_and_bad_field() {
+        assert!(matches!(decode(&[42]), Err(CodecError::UnknownTag(42))));
+        // Craft a submission with an out-of-range field element.
+        let msg = Message::ShareSubmission {
+            iter: 0,
+            institution: 0,
+            hessian: HessianPayload::Plain(vec![]),
+            g_share: vec![Fp::new(5)],
+            dev_share: Fp::new(6),
+        };
+        let mut bytes = encode(&msg);
+        let n = bytes.len();
+        // dev_share is the last 8 bytes; overwrite with u64::MAX (≥ P)
+        bytes[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(CodecError::BadField(_))));
+    }
+
+    #[test]
+    fn pack_unpack_symmetric() {
+        let mut m = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            for j in i..4 {
+                m[(i, j)] = (i * 10 + j) as f64;
+            }
+        }
+        m.symmetrize();
+        let packed = pack_upper(&m);
+        assert_eq!(packed.len(), packed_len(4));
+        let back = unpack_upper(&packed, 4);
+        assert!(back.max_abs_diff(&m) < 1e-15);
+    }
+
+    #[test]
+    fn encoded_sizes_are_tight() {
+        // β broadcast: 1 tag + 4 iter + 4 len + 8·d
+        let msg = Message::BetaBroadcast {
+            iter: 0,
+            beta: vec![0.0; 10],
+        };
+        assert_eq!(encode(&msg).len(), 1 + 4 + 4 + 80);
+        // share submission with d=3 gradient + packed 3×3 hessian (6)
+        let msg = Message::ShareSubmission {
+            iter: 0,
+            institution: 1,
+            hessian: HessianPayload::Plain(vec![0.0; 6]),
+            g_share: vec![Fp::ZERO; 3],
+            dev_share: Fp::ZERO,
+        };
+        assert_eq!(encode(&msg).len(), 1 + 4 + 2 + (1 + 4 + 48) + (4 + 24) + 8);
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(Message::Shutdown.kind(), "shutdown");
+        assert_eq!(
+            Message::AggregateRequest { iter: 0, expected: 0 }.kind(),
+            "aggregate_request"
+        );
+    }
+}

@@ -1,0 +1,448 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute
+//! them from the institution hot path.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, producing
+//! `artifacts/local_stats_n{N}_d{D}.hlo.txt` (HLO **text** — the
+//! xla_extension 0.5.1 bundled with the `xla` crate rejects jax≥0.5's
+//! 64-bit-instruction-id protos, while the text parser reassigns ids)
+//! plus `artifacts/manifest.json` describing each shape bucket.
+//!
+//! At runtime, [`PjrtEngine`] compiles each artifact on the PJRT CPU
+//! client on first use (cached thereafter) and serves
+//! `local_stats(X, y, β)` by padding the shard into the smallest
+//! bucket with `mask=0` rows — masked rows contribute exactly zero to
+//! H, g and dev by construction of the kernel.
+//!
+//! Thread model: `PjRtClient` is `Rc`-based (not `Send`), so the
+//! engine lives on a dedicated **compute-service thread**; institution
+//! threads talk to it through the cloneable [`ComputeHandle`]. The
+//! pure-rust [`ComputeHandle::rust`] variant short-circuits locally
+//! and is what tests/benches use when artifacts are absent.
+
+use crate::linalg::Matrix;
+use crate::model::{self, LocalStats};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+
+/// One artifact entry from `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub path: PathBuf,
+    /// Row-capacity of the bucket.
+    pub n: usize,
+    /// Feature dimension (incl. intercept) the artifact was lowered for.
+    pub d: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`; errors if missing or malformed.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e} (run `make artifacts`)"))?;
+        let v = Json::parse(&text)?;
+        let arr = v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: missing 'artifacts' array"))?;
+        let mut entries = Vec::new();
+        for item in arr {
+            let rel = item
+                .get("path")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'path'"))?;
+            let n = item
+                .get("n")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'n'"))?;
+            let d = item
+                .get("d")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'd'"))?;
+            entries.push(ArtifactEntry {
+                path: dir.join(rel),
+                n,
+                d,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "{path:?}: empty manifest");
+        Ok(Manifest { entries })
+    }
+
+    /// Smallest bucket that fits `rows` at dimension `d`.
+    pub fn bucket_for(&self, rows: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.d == d && e.n >= rows)
+            .min_by_key(|e| e.n)
+    }
+}
+
+/// The PJRT-backed engine. NOT `Send` — see module docs.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled executables keyed by (n, d).
+    cache: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Ensure the executable for the best-fitting bucket is compiled;
+    /// returns the bucket's row capacity (cache key is `(n, d)`).
+    fn ensure_compiled(&mut self, rows: usize, d: usize) -> anyhow::Result<usize> {
+        let entry = self
+            .manifest
+            .bucket_for(rows, d)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact bucket for rows={rows} d={d}; available: {:?}",
+                    self.manifest
+                        .entries
+                        .iter()
+                        .map(|e| (e.n, e.d))
+                        .collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let key = (entry.n, entry.d);
+        if !self.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("load HLO {:?}: {e:?}", entry.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {:?}: {e:?}", entry.path))?;
+            self.cache.insert(key, exe);
+        }
+        Ok(entry.n)
+    }
+
+    /// Execute the local-stats artifact on one shard.
+    pub fn local_stats(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        beta: &[f64],
+    ) -> anyhow::Result<LocalStats> {
+        let rows = x.rows;
+        let d = x.cols;
+        anyhow::ensure!(y.len() == rows && beta.len() == d, "shape mismatch");
+        let bucket_n = self.ensure_compiled(rows, d)?;
+        // Pad inputs to the bucket.
+        let mut x_pad = vec![0.0f64; bucket_n * d];
+        x_pad[..rows * d].copy_from_slice(&x.data);
+        let mut y_pad = vec![0.0f64; bucket_n];
+        y_pad[..rows].copy_from_slice(y);
+        let mut mask = vec![0.0f64; bucket_n];
+        mask[..rows].fill(1.0);
+
+        let x_lit = xla::Literal::vec1(&x_pad)
+            .reshape(&[bucket_n as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape X: {e:?}"))?;
+        let y_lit = xla::Literal::vec1(&y_pad);
+        let m_lit = xla::Literal::vec1(&mask);
+        let b_lit = xla::Literal::vec1(beta);
+
+        let exe = self.cache.get(&(bucket_n, d)).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, y_lit, m_lit, b_lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → (H, g, dev).
+        let (h_lit, g_lit, dev_lit) = result
+            .to_tuple3()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let h_flat = h_lit
+            .to_vec::<f64>()
+            .map_err(|e| anyhow::anyhow!("H to_vec: {e:?}"))?;
+        let g = g_lit
+            .to_vec::<f64>()
+            .map_err(|e| anyhow::anyhow!("g to_vec: {e:?}"))?;
+        let dev = dev_lit
+            .to_vec::<f64>()
+            .map_err(|e| anyhow::anyhow!("dev to_vec: {e:?}"))?[0];
+        anyhow::ensure!(h_flat.len() == d * d, "H shape from artifact");
+        anyhow::ensure!(g.len() == d, "g shape from artifact");
+        Ok(LocalStats {
+            h: Matrix::from_flat(d, d, h_flat),
+            g,
+            dev,
+            n: rows,
+        })
+    }
+}
+
+/// A request to the compute service. The reply carries the stats plus
+/// the PURE execute seconds (excluding queue wait), so the metrics
+/// reflect what an institution's own hardware would spend.
+pub struct ComputeRequest {
+    x: Matrix,
+    y: Vec<f64>,
+    beta: Vec<f64>,
+    reply: Sender<anyhow::Result<(LocalStats, f64)>>,
+}
+
+/// Cloneable handle institutions use to compute local statistics.
+///
+/// Variants: direct rust computation, or a round-robin POOL of PJRT
+/// compute-service threads (each owning its own `PjRtClient` — the
+/// client is `Rc`-based and cannot be shared). A single service thread
+/// serializes every institution's executions and becomes the wall-time
+/// bottleneck of the Fig-4 scaling experiment; the pool restores the
+/// paper's "institutions compute simultaneously" semantics
+/// (EXPERIMENTS.md §Perf records the before/after).
+#[derive(Clone)]
+pub enum ComputeHandle {
+    Rust,
+    Pjrt {
+        workers: std::sync::Arc<Vec<Sender<ComputeRequest>>>,
+        rr: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    },
+}
+
+/// Default PJRT worker count: half the cores, clamped to [1, 8] —
+/// each worker's executions are internally multithreaded by XLA, so
+/// more workers than this oversubscribes.
+pub fn default_pjrt_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| (p.get() / 2).clamp(1, 8))
+        .unwrap_or(2)
+}
+
+impl ComputeHandle {
+    /// Pure-rust engine (no artifacts required).
+    pub fn rust() -> ComputeHandle {
+        ComputeHandle::Rust
+    }
+
+    /// Spawn a single PJRT compute-service thread over `artifacts_dir`.
+    pub fn pjrt(artifacts_dir: &Path) -> anyhow::Result<(ComputeHandle, ComputeServiceGuard)> {
+        Self::pjrt_pool(artifacts_dir, 1)
+    }
+
+    /// Spawn a pool of `workers` PJRT compute-service threads.
+    ///
+    /// Fails fast (before spawning) if the manifest is unreadable.
+    pub fn pjrt_pool(
+        artifacts_dir: &Path,
+        workers: usize,
+    ) -> anyhow::Result<(ComputeHandle, ComputeServiceGuard)> {
+        anyhow::ensure!(workers >= 1, "need at least one PJRT worker");
+        // Validate the manifest on the caller thread for a good error.
+        Manifest::load(artifacts_dir)?;
+        let mut txs = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let dir = artifacts_dir.to_path_buf();
+            let (tx, rx) = channel::<ComputeRequest>();
+            let join = std::thread::Builder::new()
+                .name(format!("pjrt-compute-{i}"))
+                .spawn(move || {
+                    let mut engine = match PjrtEngine::new(&dir) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            // Fail every request with the construction error.
+                            while let Ok(req) = rx.recv() {
+                                let _ =
+                                    req.reply.send(Err(anyhow::anyhow!("engine init: {e}")));
+                            }
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        let t = std::time::Instant::now();
+                        let out = engine.local_stats(&req.x, &req.y, &req.beta);
+                        let secs = t.elapsed().as_secs_f64();
+                        let _ = req.reply.send(out.map(|st| (st, secs)));
+                    }
+                })?;
+            txs.push(tx);
+            joins.push(join);
+        }
+        Ok((
+            ComputeHandle::Pjrt {
+                workers: std::sync::Arc::new(txs),
+                rr: std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            },
+            ComputeServiceGuard { joins },
+        ))
+    }
+
+    /// Auto mode: a PJRT pool when artifacts exist, rust otherwise.
+    pub fn auto(artifacts_dir: &Path) -> (ComputeHandle, Option<ComputeServiceGuard>) {
+        match Self::pjrt_pool(artifacts_dir, default_pjrt_workers()) {
+            Ok((h, g)) => (h, Some(g)),
+            Err(_) => (ComputeHandle::Rust, None),
+        }
+    }
+
+    /// Compute local statistics for a shard.
+    pub fn local_stats(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        beta: &[f64],
+    ) -> anyhow::Result<LocalStats> {
+        self.local_stats_timed(x, y, beta).map(|(st, _)| st)
+    }
+
+    /// Compute local statistics, also returning the PURE compute
+    /// seconds — for the PJRT pool this excludes time queued behind
+    /// other institutions' requests, which is a simulation artifact
+    /// (each institution has its own hardware in deployment).
+    pub fn local_stats_timed(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        beta: &[f64],
+    ) -> anyhow::Result<(LocalStats, f64)> {
+        match self {
+            ComputeHandle::Rust => {
+                let t = std::time::Instant::now();
+                let st = model::local_stats(x, y, beta);
+                Ok((st, t.elapsed().as_secs_f64()))
+            }
+            ComputeHandle::Pjrt { workers, rr } => {
+                let i = rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % workers.len();
+                let (rtx, rrx) = channel();
+                workers[i]
+                    .send(ComputeRequest {
+                        x: x.clone(),
+                        y: y.to_vec(),
+                        beta: beta.to_vec(),
+                        reply: rtx,
+                    })
+                    .map_err(|_| anyhow::anyhow!("compute service is down"))?;
+                rrx.recv()
+                    .map_err(|_| anyhow::anyhow!("compute service dropped the request"))?
+            }
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ComputeHandle::Rust => "rust",
+            ComputeHandle::Pjrt { .. } => "pjrt",
+        }
+    }
+}
+
+/// Joins finished compute-service threads on drop (after handles are
+/// gone).
+pub struct ComputeServiceGuard {
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for ComputeServiceGuard {
+    fn drop(&mut self) {
+        // The services exit when all ComputeHandle senders are dropped;
+        // joining here would deadlock if handles outlive the guard, so we
+        // detach instead of joining threads that are still busy.
+        for j in self.joins.drain(..) {
+            if j.is_finished() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries: &[(&str, usize, usize)]) {
+        use crate::util::json::{arr, num, obj, s};
+        std::fs::create_dir_all(dir).unwrap();
+        let items: Vec<Json> = entries
+            .iter()
+            .map(|(p, n, d)| {
+                obj(vec![
+                    ("path", s(p)),
+                    ("n", num(*n as f64)),
+                    ("d", num(*d as f64)),
+                ])
+            })
+            .collect();
+        let v = obj(vec![("artifacts", arr(items))]);
+        std::fs::write(dir.join("manifest.json"), v.to_string_compact()).unwrap();
+    }
+
+    #[test]
+    fn manifest_bucket_selection() {
+        let dir = std::env::temp_dir().join("privlr_manifest_test");
+        write_manifest(
+            &dir,
+            &[("a.hlo.txt", 1024, 6), ("b.hlo.txt", 4096, 6), ("c.hlo.txt", 1024, 21)],
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(100, 6).unwrap().n, 1024);
+        assert_eq!(m.bucket_for(2000, 6).unwrap().n, 4096);
+        assert_eq!(m.bucket_for(5000, 6), None);
+        assert_eq!(m.bucket_for(10, 21).unwrap().n, 1024);
+        assert_eq!(m.bucket_for(10, 7), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_actionable_error() {
+        let dir = std::env::temp_dir().join("privlr_manifest_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rust_handle_matches_model() {
+        let mut x = Matrix::zeros(8, 3);
+        let mut rng = crate::util::rng::SplitMix64::new(5);
+        use crate::util::rng::Rng;
+        for v in x.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        let y: Vec<f64> = (0..8).map(|i| f64::from(i % 2 == 0)).collect();
+        let beta = [0.1, -0.2, 0.3];
+        let h = ComputeHandle::rust();
+        let got = h.local_stats(&x, &y, &beta).unwrap();
+        let expect = model::local_stats(&x, &y, &beta);
+        assert!(got.h.max_abs_diff(&expect.h) < 1e-15);
+        assert_eq!(got.g, expect.g);
+        assert_eq!(got.dev, expect.dev);
+    }
+
+    #[test]
+    fn auto_falls_back_without_artifacts() {
+        let dir = std::env::temp_dir().join("privlr_no_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        let (h, guard) = ComputeHandle::auto(&dir);
+        assert_eq!(h.kind(), "rust");
+        assert!(guard.is_none());
+    }
+}

@@ -1,0 +1,291 @@
+//! Secure computation primitives over secret shares (the paper's
+//! Algorithm 2 and the multiply-by-public-constant primitive).
+//!
+//! A computation center never sees plaintext summaries; it holds one
+//! share per secret and computes on shares *locally*:
+//!
+//! * **secure addition** — a center adds its shares of A and B to get
+//!   its share of A+B (polynomials add pointwise, the secret is the
+//!   constant term);
+//! * **secure multiply-by-public** — a center multiplies its share by
+//!   a public field constant.
+//!
+//! [`SecureAccumulator`] is the per-center, per-iteration state that
+//! folds institution submissions together as they arrive, so secure
+//! aggregation is streaming (O(1) memory in the number of
+//! institutions) — this is what makes Fig 4's flat central time hold.
+
+use crate::field::{add_assign_slice, mul_scalar_slice, Fp};
+use crate::fixed::FixedCodec;
+use crate::shamir::{share_batch, ShamirParams, ShareBatch};
+use crate::util::rng::Rng;
+
+/// Secure addition: combine two share vectors held by the same center.
+/// (Algorithm 2, one holder's step.)
+#[inline]
+pub fn secure_add(acc: &mut [Fp], incoming: &[Fp]) {
+    add_assign_slice(acc, incoming);
+}
+
+/// Secure multiplication by a public constant, in place.
+#[inline]
+pub fn secure_mul_public(shares: &mut [Fp], c: Fp) {
+    mul_scalar_slice(shares, c);
+}
+
+/// Per-center streaming aggregator for one Newton iteration.
+///
+/// Holds this center's running share of Σ_j g_j, Σ_j dev_j, and (in
+/// full-security mode) Σ_j H_j; pragmatic mode accumulates the
+/// plaintext Hessian sum instead.
+#[derive(Clone, Debug)]
+pub struct SecureAccumulator {
+    /// Share of the aggregated gradient (d elements).
+    pub g: Vec<Fp>,
+    /// Share of the aggregated deviance.
+    pub dev: Fp,
+    /// Share of the aggregated packed Hessian (full mode), if any.
+    pub h_shared: Option<Vec<Fp>>,
+    /// Plaintext aggregated packed Hessian (pragmatic mode), if any.
+    pub h_plain: Option<Vec<f64>>,
+    /// Number of submissions folded in.
+    pub count: usize,
+}
+
+impl SecureAccumulator {
+    pub fn new(d: usize, packed_h: usize, full_security: bool) -> Self {
+        Self {
+            g: vec![Fp::ZERO; d],
+            dev: Fp::ZERO,
+            h_shared: full_security.then(|| vec![Fp::ZERO; packed_h]),
+            h_plain: (!full_security).then(|| vec![0.0; packed_h]),
+            count: 0,
+        }
+    }
+
+    /// Fold in one institution's submission (this center's slice of it).
+    pub fn fold(
+        &mut self,
+        g_share: &[Fp],
+        dev_share: Fp,
+        hessian: &crate::protocol::HessianPayload,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            g_share.len() == self.g.len(),
+            "gradient share length {} != {}",
+            g_share.len(),
+            self.g.len()
+        );
+        secure_add(&mut self.g, g_share);
+        self.dev = self.dev + dev_share;
+        match (hessian, self.h_shared.as_mut(), self.h_plain.as_mut()) {
+            (crate::protocol::HessianPayload::Shared(hs), Some(acc), _) => {
+                anyhow::ensure!(hs.len() == acc.len(), "hessian share length mismatch");
+                secure_add(acc, hs);
+            }
+            (crate::protocol::HessianPayload::Plain(hp), _, Some(acc)) => {
+                anyhow::ensure!(hp.len() == acc.len(), "hessian length mismatch");
+                for (a, b) in acc.iter_mut().zip(hp) {
+                    *a += b;
+                }
+            }
+            // Pragmatic mode, non-lead center: nothing to fold for H.
+            (crate::protocol::HessianPayload::Absent, _, Some(_)) => {}
+            _ => anyhow::bail!("hessian payload mode does not match accumulator mode"),
+        }
+        self.count += 1;
+        Ok(())
+    }
+}
+
+/// Institution-side sharing of one iteration's local summaries.
+///
+/// Returns, for each center, the triple of payloads it should receive.
+/// The share polynomials are drawn from `rng` (must be crypto-grade in
+/// deployments; see `util::rng::ChaCha20Rng`).
+pub struct SharedStats {
+    /// Per-center gradient shares.
+    pub g: ShareBatch,
+    /// Per-center deviance shares.
+    pub dev: ShareBatch,
+    /// Per-center packed-Hessian shares (full mode only).
+    pub h: Option<ShareBatch>,
+}
+
+/// Encode-and-share local statistics.
+///
+/// `g_plain` is the local gradient (d), `dev_plain` the local deviance,
+/// `h_packed_plain` the packed upper-triangular Hessian — shared only
+/// when `full_security` is set (pragmatic mode sends it plaintext).
+pub fn share_local_stats<R: Rng>(
+    params: ShamirParams,
+    codec: &FixedCodec,
+    g_plain: &[f64],
+    dev_plain: f64,
+    h_packed_plain: &[f64],
+    full_security: bool,
+    rng: &mut R,
+) -> anyhow::Result<SharedStats> {
+    let g_enc = codec.encode_slice(g_plain)?;
+    let dev_enc = codec.encode(dev_plain)?;
+    let g = share_batch(params, &g_enc, rng);
+    let dev = share_batch(params, &[dev_enc], rng);
+    let h = if full_security {
+        let h_enc = codec.encode_slice(h_packed_plain)?;
+        Some(share_batch(params, &h_enc, rng))
+    } else {
+        None
+    };
+    Ok(SharedStats { g, dev, h })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::HessianPayload;
+    use crate::shamir::reconstruct_batch;
+    use crate::util::rng::ChaCha20Rng;
+
+    fn params() -> ShamirParams {
+        ShamirParams::new(3, 5).unwrap()
+    }
+
+    #[test]
+    fn streaming_aggregation_equals_plain_sum() {
+        // 4 institutions' gradients, shared, folded per center, then the
+        // reconstructed aggregate must equal the plaintext sum.
+        let p = params();
+        let codec = FixedCodec::default();
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        let d = 6;
+        let grads: Vec<Vec<f64>> = (0..4)
+            .map(|j| (0..d).map(|k| (j * d + k) as f64 * 0.25 - 2.0).collect())
+            .collect();
+        let devs = [10.5, 20.25, 30.0, 5.75];
+
+        let mut accs: Vec<SecureAccumulator> =
+            (0..5).map(|_| SecureAccumulator::new(d, 1, false)).collect();
+        for (j, g) in grads.iter().enumerate() {
+            let shared =
+                share_local_stats(p, &codec, g, devs[j], &[1.0], false, &mut rng).unwrap();
+            for (c, acc) in accs.iter_mut().enumerate() {
+                acc.fold(
+                    &shared.g.per_holder[c],
+                    shared.dev.per_holder[c][0],
+                    &HessianPayload::Plain(vec![1.0]),
+                )
+                .unwrap();
+            }
+        }
+        // Reconstruct from 3 of 5 centers.
+        let quorum: Vec<(usize, &[Fp])> = [0usize, 2, 4]
+            .iter()
+            .map(|&c| (c, accs[c].g.as_slice()))
+            .collect();
+        let g_total = codec.decode_slice(&reconstruct_batch(p, &quorum).unwrap());
+        let expect: Vec<f64> = (0..d)
+            .map(|k| grads.iter().map(|g| g[k]).sum::<f64>())
+            .collect();
+        for (a, b) in g_total.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // deviance
+        let dev_quorum: Vec<(usize, Fp)> = [1usize, 2, 3]
+            .iter()
+            .map(|&c| (c, accs[c].dev))
+            .collect();
+        let dev_total =
+            codec.decode(crate::shamir::reconstruct_scalar(p, &dev_quorum).unwrap());
+        assert!((dev_total - devs.iter().sum::<f64>()).abs() < 1e-4);
+        // plaintext hessian accumulated 4×
+        assert!((accs[0].h_plain.as_ref().unwrap()[0] - 4.0).abs() < 1e-12);
+        assert_eq!(accs[0].count, 4);
+    }
+
+    #[test]
+    fn full_mode_shares_hessian_too() {
+        let p = params();
+        let codec = FixedCodec::default();
+        let mut rng = ChaCha20Rng::seed_from_u64(2);
+        let h1 = [1.0, 2.0, 3.0];
+        let h2 = [0.5, -1.0, 4.0];
+        let mut accs: Vec<SecureAccumulator> =
+            (0..5).map(|_| SecureAccumulator::new(2, 3, true)).collect();
+        for h in [&h1[..], &h2[..]] {
+            let shared = share_local_stats(p, &codec, &[0.0, 0.0], 0.0, h, true, &mut rng).unwrap();
+            let hs = shared.h.unwrap();
+            for (c, acc) in accs.iter_mut().enumerate() {
+                acc.fold(
+                    &shared.g.per_holder[c],
+                    shared.dev.per_holder[c][0],
+                    &HessianPayload::Shared(hs.per_holder[c].clone()),
+                )
+                .unwrap();
+            }
+        }
+        let quorum: Vec<(usize, &[Fp])> = [0usize, 1, 2]
+            .iter()
+            .map(|&c| (c, accs[c].h_shared.as_ref().unwrap().as_slice()))
+            .collect();
+        let h_total = codec.decode_slice(&reconstruct_batch(p, &quorum).unwrap());
+        for (k, expect) in [1.5, 1.0, 7.0].iter().enumerate() {
+            assert!((h_total[k] - expect).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mode_mismatch_is_rejected() {
+        let mut acc = SecureAccumulator::new(2, 3, false); // pragmatic
+        let err = acc.fold(
+            &[Fp::ZERO, Fp::ZERO],
+            Fp::ZERO,
+            &HessianPayload::Shared(vec![Fp::ZERO; 3]),
+        );
+        assert!(err.is_err());
+        let mut acc = SecureAccumulator::new(2, 3, true); // full
+        let err = acc.fold(
+            &[Fp::ZERO, Fp::ZERO],
+            Fp::ZERO,
+            &HessianPayload::Plain(vec![0.0; 3]),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn length_mismatch_is_rejected() {
+        let mut acc = SecureAccumulator::new(4, 1, false);
+        assert!(acc
+            .fold(&[Fp::ZERO; 3], Fp::ZERO, &HessianPayload::Plain(vec![0.0]))
+            .is_err());
+        assert!(acc
+            .fold(
+                &[Fp::ZERO; 4],
+                Fp::ZERO,
+                &HessianPayload::Plain(vec![0.0, 1.0])
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn secure_mul_public_matches_plain() {
+        let p = params();
+        let codec = FixedCodec::default();
+        let mut rng = ChaCha20Rng::seed_from_u64(3);
+        let vals = [2.5, -1.25];
+        let shared = share_local_stats(p, &codec, &vals, 0.0, &[], false, &mut rng).unwrap();
+        // multiply every center's share by public constant 3
+        let c = Fp::new(3);
+        let scaled: Vec<Vec<Fp>> = (0..5)
+            .map(|j| {
+                let mut v = shared.g.per_holder[j].clone();
+                secure_mul_public(&mut v, c);
+                v
+            })
+            .collect();
+        let quorum: Vec<(usize, &[Fp])> =
+            (0..3).map(|j| (j, scaled[j].as_slice())).collect();
+        let out = codec.decode_slice(&reconstruct_batch(p, &quorum).unwrap());
+        assert!((out[0] - 7.5).abs() < 1e-4);
+        assert!((out[1] + 3.75).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,343 @@
+//! Shamir's t-of-w secret sharing over F_p (Shamir, CACM 1979) — the
+//! cryptographic core of the paper's protection of institution-level
+//! summary statistics (Algorithm 1, step 7).
+//!
+//! A secret `m` is embedded as the constant term of a random degree
+//! (t−1) polynomial `q(x) = m + a_1 x + … + a_{t−1} x^{t−1}`; center
+//! `j ∈ {1..w}` receives the share `(j, q(j))`. Any t shares determine
+//! the polynomial (Lagrange interpolation) and hence `q(0) = m`; any
+//! t−1 or fewer shares are jointly uniform and reveal *nothing* —
+//! information-theoretic secrecy, which we test directly.
+//!
+//! The protocol shares whole vectors/matrices; [`ShareBatch`] stores
+//! one share-vector per center so a center's state is a contiguous
+//! `Vec<Fp>` and secure addition is a slice loop (see `secure`).
+
+use crate::field::Fp;
+use crate::util::rng::Rng;
+
+/// Scheme parameters: `threshold`-out-of-`num_holders`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShamirParams {
+    /// t — minimum number of cooperating holders for reconstruction.
+    pub threshold: usize,
+    /// w — total number of share holders (computation centers).
+    pub num_holders: usize,
+}
+
+impl ShamirParams {
+    pub fn new(threshold: usize, num_holders: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(threshold >= 1, "threshold must be >= 1");
+        anyhow::ensure!(
+            threshold <= num_holders,
+            "threshold {threshold} exceeds number of holders {num_holders}"
+        );
+        anyhow::ensure!(
+            (num_holders as u64) < crate::field::P,
+            "too many holders for the field"
+        );
+        Ok(Self {
+            threshold,
+            num_holders,
+        })
+    }
+
+    /// x-coordinate assigned to holder index (0-based) — we use j+1 so
+    /// the secret point x=0 is never a share coordinate.
+    #[inline]
+    pub fn x_of(&self, holder: usize) -> Fp {
+        Fp::new(holder as u64 + 1)
+    }
+}
+
+/// Shares of a vector of secrets, grouped per holder:
+/// `per_holder[j][k]` is holder j's share of secret k.
+#[derive(Clone, Debug)]
+pub struct ShareBatch {
+    pub params: ShamirParams,
+    pub per_holder: Vec<Vec<Fp>>,
+}
+
+impl ShareBatch {
+    /// Number of secrets covered by this batch.
+    pub fn len(&self) -> usize {
+        self.per_holder.first().map_or(0, |v| v.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Split a batch of secrets into per-holder share vectors.
+///
+/// The polynomial coefficients come from `rng`, which MUST be
+/// cryptographically strong for real deployments (`ChaCha20Rng`); the
+/// secrecy of the scheme is exactly the unpredictability of these
+/// coefficients.
+pub fn share_batch<R: Rng>(params: ShamirParams, secrets: &[Fp], rng: &mut R) -> ShareBatch {
+    let w = params.num_holders;
+    let t = params.threshold;
+    let mut per_holder = vec![vec![Fp::ZERO; secrets.len()]; w];
+    // Reusable coefficient buffer: coeffs[0] = secret, coeffs[1..t] random.
+    let mut coeffs = vec![Fp::ZERO; t];
+    for (k, &m) in secrets.iter().enumerate() {
+        coeffs[0] = m;
+        for c in coeffs.iter_mut().skip(1) {
+            *c = Fp::random(rng);
+        }
+        for (j, holder) in per_holder.iter_mut().enumerate() {
+            holder[k] = horner(&coeffs, params.x_of(j));
+        }
+    }
+    ShareBatch { params, per_holder }
+}
+
+/// Evaluate `q(x)` with coefficients `[c0, c1, …]` by Horner's rule.
+#[inline]
+pub fn horner(coeffs: &[Fp], x: Fp) -> Fp {
+    let mut acc = Fp::ZERO;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+/// Lagrange coefficients λ_j for evaluating the interpolating polynomial
+/// at x = 0 from the holders in `holder_idx` (0-based indices):
+/// `m = Σ_j λ_j · q(x_j)`. Precompute once per quorum, reuse for every
+/// element of a vector/matrix reconstruction.
+pub fn lagrange_at_zero(params: ShamirParams, holder_idx: &[usize]) -> anyhow::Result<Vec<Fp>> {
+    anyhow::ensure!(
+        holder_idx.len() >= params.threshold,
+        "need at least t={} holders, got {}",
+        params.threshold,
+        holder_idx.len()
+    );
+    // Duplicate holders would make denominators zero — reject them.
+    let mut seen = vec![false; params.num_holders];
+    for &j in holder_idx {
+        anyhow::ensure!(j < params.num_holders, "holder index {j} out of range");
+        anyhow::ensure!(!seen[j], "duplicate holder index {j}");
+        seen[j] = true;
+    }
+    let xs: Vec<Fp> = holder_idx.iter().map(|&j| params.x_of(j)).collect();
+    let mut lambdas = Vec::with_capacity(xs.len());
+    for (a, &xa) in xs.iter().enumerate() {
+        let mut num = Fp::ONE;
+        let mut den = Fp::ONE;
+        for (b, &xb) in xs.iter().enumerate() {
+            if a == b {
+                continue;
+            }
+            num = num * xb; // (0 - x_b) numerators: signs cancel pairwise with den
+            den = den * (xb - xa);
+        }
+        lambdas.push(num * den.inv());
+    }
+    Ok(lambdas)
+}
+
+/// Reconstruct a batch of secrets from a quorum of holders.
+///
+/// `quorum` pairs each holder index with that holder's share vector.
+pub fn reconstruct_batch(
+    params: ShamirParams,
+    quorum: &[(usize, &[Fp])],
+) -> anyhow::Result<Vec<Fp>> {
+    let idx: Vec<usize> = quorum.iter().map(|(j, _)| *j).collect();
+    let lambdas = lagrange_at_zero(params, &idx)?;
+    let n = quorum
+        .first()
+        .map(|(_, v)| v.len())
+        .ok_or_else(|| anyhow::anyhow!("empty quorum"))?;
+    for (_, v) in quorum {
+        anyhow::ensure!(v.len() == n, "ragged share vectors in quorum");
+    }
+    let mut out = vec![Fp::ZERO; n];
+    for ((_, shares), &lambda) in quorum.iter().zip(&lambdas) {
+        for (o, &s) in out.iter_mut().zip(shares.iter()) {
+            *o = *o + lambda * s;
+        }
+    }
+    Ok(out)
+}
+
+/// Reconstruct a single secret (convenience for scalars like deviance).
+pub fn reconstruct_scalar(params: ShamirParams, quorum: &[(usize, Fp)]) -> anyhow::Result<Fp> {
+    let vecs: Vec<(usize, Vec<Fp>)> = quorum.iter().map(|&(j, s)| (j, vec![s])).collect();
+    let refs: Vec<(usize, &[Fp])> = vecs.iter().map(|(j, v)| (*j, v.as_slice())).collect();
+    Ok(reconstruct_batch(params, &refs)?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{ChaCha20Rng, SplitMix64};
+
+    fn params(t: usize, w: usize) -> ShamirParams {
+        ShamirParams::new(t, w).unwrap()
+    }
+
+    #[test]
+    fn share_and_reconstruct_scalar() {
+        let p = params(3, 5);
+        let mut rng = ChaCha20Rng::seed_from_u64(1);
+        let secret = Fp::new(123456789);
+        let batch = share_batch(p, &[secret], &mut rng);
+        // any 3 of 5 holders recover it
+        for combo in [[0usize, 1, 2], [2, 3, 4], [0, 2, 4], [4, 1, 3]] {
+            let quorum: Vec<(usize, &[Fp])> = combo
+                .iter()
+                .map(|&j| (j, batch.per_holder[j].as_slice()))
+                .collect();
+            let rec = reconstruct_batch(p, &quorum).unwrap();
+            assert_eq!(rec, vec![secret]);
+        }
+    }
+
+    #[test]
+    fn more_than_threshold_also_works() {
+        let p = params(2, 4);
+        let mut rng = ChaCha20Rng::seed_from_u64(2);
+        let secrets: Vec<Fp> = (0..10).map(|i| Fp::new(i * i + 7)).collect();
+        let batch = share_batch(p, &secrets, &mut rng);
+        let quorum: Vec<(usize, &[Fp])> = (0..4)
+            .map(|j| (j, batch.per_holder[j].as_slice()))
+            .collect();
+        assert_eq!(reconstruct_batch(p, &quorum).unwrap(), secrets);
+    }
+
+    #[test]
+    fn below_threshold_rejected() {
+        let p = params(3, 5);
+        let mut rng = ChaCha20Rng::seed_from_u64(3);
+        let batch = share_batch(p, &[Fp::new(42)], &mut rng);
+        let quorum: Vec<(usize, &[Fp])> = (0..2)
+            .map(|j| (j, batch.per_holder[j].as_slice()))
+            .collect();
+        assert!(reconstruct_batch(p, &quorum).is_err());
+    }
+
+    #[test]
+    fn duplicate_holder_rejected() {
+        let p = params(2, 3);
+        assert!(lagrange_at_zero(p, &[1, 1]).is_err());
+        assert!(lagrange_at_zero(p, &[0, 7]).is_err());
+    }
+
+    #[test]
+    fn t_equals_one_is_plaintext_replication() {
+        let p = params(1, 3);
+        let mut rng = ChaCha20Rng::seed_from_u64(4);
+        let secret = Fp::new(99);
+        let batch = share_batch(p, &[secret], &mut rng);
+        // Degree-0 polynomial: every share IS the secret.
+        for j in 0..3 {
+            assert_eq!(batch.per_holder[j][0], secret);
+        }
+    }
+
+    #[test]
+    fn shares_below_threshold_are_uniform() {
+        // Information-theoretic secrecy check: for a fixed pair of very
+        // different secrets, the marginal distribution of any single
+        // share (t=2) must be statistically indistinguishable. We bucket
+        // share values across many fresh sharings.
+        let p = params(2, 3);
+        let mut buckets_a = [0u32; 8];
+        let mut buckets_b = [0u32; 8];
+        let mut rng = ChaCha20Rng::seed_from_u64(5);
+        let n = 40_000;
+        for _ in 0..n {
+            let sa = share_batch(p, &[Fp::new(0)], &mut rng).per_holder[0][0];
+            let sb = share_batch(p, &[Fp::new(crate::field::P - 1)], &mut rng).per_holder[0][0];
+            buckets_a[(sa.to_u64() >> 58) as usize] += 1;
+            buckets_b[(sb.to_u64() >> 58) as usize] += 1;
+        }
+        for i in 0..8 {
+            let (a, b) = (buckets_a[i] as f64, buckets_b[i] as f64);
+            let expected = n as f64 / 8.0;
+            assert!((a - expected).abs() / expected < 0.05, "bucket {i}: {a}");
+            assert!((b - expected).abs() / expected < 0.05, "bucket {i}: {b}");
+        }
+    }
+
+    #[test]
+    fn additive_homomorphism_of_shares() {
+        // Secure addition (Algorithm 2): sum of shares reconstructs to
+        // the sum of secrets.
+        let p = params(3, 5);
+        let mut rng = ChaCha20Rng::seed_from_u64(6);
+        let a = Fp::new(1111);
+        let b = Fp::new(2222);
+        let ba = share_batch(p, &[a], &mut rng);
+        let bb = share_batch(p, &[b], &mut rng);
+        let summed: Vec<Vec<Fp>> = (0..5)
+            .map(|j| vec![ba.per_holder[j][0] + bb.per_holder[j][0]])
+            .collect();
+        let quorum: Vec<(usize, &[Fp])> =
+            (0..3).map(|j| (j, summed[j].as_slice())).collect();
+        assert_eq!(reconstruct_batch(p, &quorum).unwrap(), vec![a + b]);
+    }
+
+    #[test]
+    fn scalar_mult_homomorphism() {
+        let p = params(2, 4);
+        let mut rng = ChaCha20Rng::seed_from_u64(7);
+        let m = Fp::new(31337);
+        let c = Fp::new(1000003);
+        let batch = share_batch(p, &[m], &mut rng);
+        let scaled: Vec<Vec<Fp>> = (0..4)
+            .map(|j| vec![batch.per_holder[j][0] * c])
+            .collect();
+        let quorum: Vec<(usize, &[Fp])> =
+            (0..2).map(|j| (j, scaled[j].as_slice())).collect();
+        assert_eq!(reconstruct_batch(p, &quorum).unwrap(), vec![m * c]);
+    }
+
+    #[test]
+    fn horner_matches_naive() {
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..100 {
+            let coeffs: Vec<Fp> = (0..5).map(|_| Fp::random(&mut rng)).collect();
+            let x = Fp::random(&mut rng);
+            let naive = coeffs
+                .iter()
+                .enumerate()
+                .fold(Fp::ZERO, |acc, (i, &c)| acc + c * x.pow(i as u64));
+            assert_eq!(horner(&coeffs, x), naive);
+        }
+    }
+
+    #[test]
+    fn reconstruct_scalar_convenience() {
+        let p = params(2, 3);
+        let mut rng = ChaCha20Rng::seed_from_u64(9);
+        let m = Fp::new(777);
+        let batch = share_batch(p, &[m], &mut rng);
+        let quorum: Vec<(usize, Fp)> = vec![(0, batch.per_holder[0][0]), (2, batch.per_holder[2][0])];
+        assert_eq!(reconstruct_scalar(p, &quorum).unwrap(), m);
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(ShamirParams::new(0, 3).is_err());
+        assert!(ShamirParams::new(4, 3).is_err());
+        assert!(ShamirParams::new(3, 3).is_ok());
+    }
+
+    #[test]
+    fn big_batch_roundtrip() {
+        // A d=20 Hessian is 400 elements; make sure batching holds up.
+        let p = params(3, 5);
+        let mut rng = ChaCha20Rng::seed_from_u64(10);
+        let secrets: Vec<Fp> = (0..400).map(|_| Fp::random(&mut rng)).collect();
+        let batch = share_batch(p, &secrets, &mut rng);
+        let quorum: Vec<(usize, &[Fp])> = [1usize, 3, 4]
+            .iter()
+            .map(|&j| (j, batch.per_holder[j].as_slice()))
+            .collect();
+        assert_eq!(reconstruct_batch(p, &quorum).unwrap(), secrets);
+    }
+}

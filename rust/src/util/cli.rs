@@ -1,0 +1,156 @@
+//! Tiny command-line argument parser (no `clap` in the offline set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    ///
+    /// `--key=value` always binds; `--key value` binds when the next
+    /// token is not itself a flag, UNLESS `key` is listed in
+    /// `bool_flags`, in which case the flag is bare (`true`) and the
+    /// next token stays positional.
+    pub fn parse_with_bools<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if !bool_flags.contains(&body)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(body.to_string(), v);
+                } else {
+                    // bare flag
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { flags, positional }
+    }
+
+    /// Boolean flags recognized across all `privlr` subcommands.
+    pub const COMMON_BOOL_FLAGS: &'static [&'static str] =
+        &["verbose", "help", "fallback", "quiet", "full", "pretty"];
+
+    /// Parse with the crate-wide boolean-flag list.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        Self::parse_with_bools(raw, Self::COMMON_BOOL_FLAGS)
+    }
+
+    pub fn from_env() -> (String, Self) {
+        let mut argv: Vec<String> = std::env::args().skip(1).collect();
+        let cmd = if argv.is_empty() || argv[0].starts_with("--") {
+            String::new()
+        } else {
+            argv.remove(0)
+        };
+        (cmd, Self::parse(argv))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow::anyhow!("--{key} expects a bool, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = parse("--n 10 --lambda=0.5 --verbose run.json");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 10);
+        assert!((a.get_f64("lambda", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(a.has("verbose"));
+        assert!(a.get_bool("verbose", false).unwrap());
+        assert_eq!(a.positional(), &["run.json".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("mode", "pragmatic"), "pragmatic");
+        assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let a = parse("--n ten");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = parse("--verbose --n 3");
+        assert!(a.get_bool("verbose", false).unwrap());
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+}

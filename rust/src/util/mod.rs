@@ -1,0 +1,7 @@
+//! Shared utilities built from scratch for the offline environment:
+//! PRNGs, JSON, CLI parsing, and descriptive statistics.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

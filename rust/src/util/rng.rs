@@ -1,0 +1,312 @@
+//! In-crate random number generation.
+//!
+//! The offline crate set has no `rand`, so we carry our own generators:
+//!
+//! * [`SplitMix64`] — tiny, fast, statistically solid seeding/utility PRNG
+//!   (Steele et al., "Fast splittable pseudorandom number generators").
+//!   Used for synthetic data, partitioning, property tests.
+//! * [`ChaCha20Rng`] — the ChaCha20 stream cipher (RFC 8439) run as a
+//!   CSPRNG. Shamir share polynomials require cryptographic randomness:
+//!   the information-theoretic secrecy of a share set is exactly the
+//!   unpredictability of the polynomial coefficients.
+//!
+//! Both implement [`Rng`], which layers uniform-range, Gaussian and
+//! Bernoulli sampling on top of a raw `next_u64`.
+
+/// Common sampling interface over a 64-bit generator core.
+pub trait Rng {
+    /// Next raw 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire-style widening
+    /// multiply with rejection).
+    fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below: bound must be positive");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (we discard the paired variate to
+    /// keep the trait object-safe and stateless beyond the core).
+    fn next_gaussian(&mut self) -> f64 {
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gaussian with explicit mean/stddev.
+    fn next_gaussian_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.next_gaussian()
+    }
+
+    /// Bernoulli draw.
+    fn next_bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    fn next_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64: one multiply–xor–shift chain per output. Passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// ChaCha20 quarter round.
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+/// ChaCha20 (RFC 8439) keystream generator used as a CSPRNG.
+///
+/// 256-bit key, 64-bit block counter + 64-bit nonce layout (the original
+/// DJB variant, which gives a 2^64-block period per nonce — ample).
+#[derive(Clone, Debug)]
+pub struct ChaCha20Rng {
+    key: [u32; 8],
+    nonce: [u32; 2],
+    counter: u64,
+    /// Buffered keystream words not yet handed out.
+    buf: [u32; 16],
+    /// Next unread index into `buf`; 16 means "refill".
+    idx: usize,
+}
+
+impl ChaCha20Rng {
+    /// Seed from 32 bytes of key material and a 64-bit stream nonce.
+    pub fn from_key(key_bytes: [u8; 32], nonce: u64) -> Self {
+        let mut key = [0u32; 8];
+        for (i, k) in key.iter_mut().enumerate() {
+            *k = u32::from_le_bytes(key_bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        Self {
+            key,
+            nonce: [(nonce & 0xFFFF_FFFF) as u32, (nonce >> 32) as u32],
+            counter: 0,
+            buf: [0u32; 16],
+            idx: 16,
+        }
+    }
+
+    /// Convenience seeding: expand a u64 seed through SplitMix64 into a
+    /// full 256-bit key. Deterministic; fine for simulations, and still
+    /// gives the full ChaCha20 state-space mixing for share polynomials
+    /// when the seed itself is secret/ephemeral.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut key = [0u8; 32];
+        for chunk in key.chunks_exact_mut(8) {
+            chunk.copy_from_slice(&sm.next_u64().to_le_bytes());
+        }
+        Self::from_key(key, sm.next_u64())
+    }
+
+    /// Seed from the OS entropy pool (`/dev/urandom`). Used for real
+    /// protocol runs; simulations pass explicit seeds for repeatability.
+    pub fn from_os_entropy() -> std::io::Result<Self> {
+        use std::io::Read;
+        let mut f = std::fs::File::open("/dev/urandom")?;
+        let mut key = [0u8; 32];
+        f.read_exact(&mut key)?;
+        let mut nb = [0u8; 8];
+        f.read_exact(&mut nb)?;
+        Ok(Self::from_key(key, u64::from_le_bytes(nb)))
+    }
+
+    fn refill(&mut self) {
+        const SIGMA: [u32; 4] = [0x61707865, 0x3320646e, 0x79622d32, 0x6b206574];
+        let mut s = [0u32; 16];
+        s[0..4].copy_from_slice(&SIGMA);
+        s[4..12].copy_from_slice(&self.key);
+        s[12] = (self.counter & 0xFFFF_FFFF) as u32;
+        s[13] = (self.counter >> 32) as u32;
+        s[14] = self.nonce[0];
+        s[15] = self.nonce[1];
+        let input = s;
+        for _ in 0..10 {
+            // column rounds
+            quarter_round(&mut s, 0, 4, 8, 12);
+            quarter_round(&mut s, 1, 5, 9, 13);
+            quarter_round(&mut s, 2, 6, 10, 14);
+            quarter_round(&mut s, 3, 7, 11, 15);
+            // diagonal rounds
+            quarter_round(&mut s, 0, 5, 10, 15);
+            quarter_round(&mut s, 1, 6, 11, 12);
+            quarter_round(&mut s, 2, 7, 8, 13);
+            quarter_round(&mut s, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            self.buf[i] = s[i].wrapping_add(input[i]);
+        }
+        self.counter = self.counter.wrapping_add(1);
+        self.idx = 0;
+    }
+}
+
+impl Rng for ChaCha20Rng {
+    fn next_u64(&mut self) -> u64 {
+        if self.idx >= 15 {
+            // Need two fresh words; simplest correct policy: if fewer than
+            // two words remain, refill (wastes ≤1 word per block).
+            self.refill();
+        }
+        let lo = self.buf[self.idx] as u64;
+        let hi = self.buf[self.idx + 1] as u64;
+        self.idx += 2;
+        lo | (hi << 32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_vector() {
+        // Reference values from the canonical splitmix64.c (seed = 0).
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn chacha_rfc8439_block_one() {
+        // RFC 8439 §2.3.2 test vector: key = 00..1f, nonce here packs the
+        // RFC's 96-bit nonce differently, so instead we check the core
+        // permutation indirectly: zero key/nonce output must be stable and
+        // distinct across counters.
+        let mut r1 = ChaCha20Rng::from_key([0u8; 32], 0);
+        let mut r2 = ChaCha20Rng::from_key([0u8; 32], 0);
+        let xs: Vec<u64> = (0..32).map(|_| r1.next_u64()).collect();
+        let ys: Vec<u64> = (0..32).map(|_| r2.next_u64()).collect();
+        assert_eq!(xs, ys);
+        // and different nonce ⇒ different stream
+        let mut r3 = ChaCha20Rng::from_key([0u8; 32], 1);
+        let zs: Vec<u64> = (0..32).map(|_| r3.next_u64()).collect();
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_covers() {
+        let mut r = SplitMix64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = SplitMix64::new(123);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = ChaCha20Rng::seed_from_u64(5);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| r.next_bernoulli(0.3)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn chacha_uniformity_rough() {
+        // Chi-square-ish sanity: bucket 64k draws into 16 buckets.
+        let mut r = ChaCha20Rng::seed_from_u64(77);
+        let mut buckets = [0u32; 16];
+        for _ in 0..65536 {
+            buckets[(r.next_u64() >> 60) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((b as i64 - 4096).abs() < 500, "bucket {b}");
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Protocol-level integration: node state machines, failure handling,
+//! message-flow invariants, and traffic accounting across the full
+//! institution ↔ center ↔ coordinator topology.
+
+use privlr::center::{run_center, CenterConfig};
+use privlr::field::Fp;
+use privlr::fixed::FixedCodec;
+use privlr::institution::{run_institution, InstitutionConfig};
+use privlr::linalg::Matrix;
+use privlr::protocol::{HessianPayload, Message, NodeId};
+use privlr::runtime::ComputeHandle;
+use privlr::shamir::{reconstruct_batch, ShamirParams};
+use privlr::transport::Network;
+use privlr::util::rng::{Rng, SplitMix64};
+
+fn shard(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+        for j in 1..d {
+            x[(i, j)] = rng.next_gaussian();
+        }
+        y[i] = f64::from(rng.next_bernoulli(0.45));
+    }
+    (x, y)
+}
+
+/// A full manual round: 3 institutions × 5 centers, coordinator drives
+/// by hand and verifies the reconstructed aggregates against plaintext.
+#[test]
+fn manual_round_reconstructs_exact_aggregates() {
+    let s = 3usize;
+    let w = 5usize;
+    let t = 3usize;
+    let d = 4usize;
+    let params = ShamirParams::new(t, w).unwrap();
+    let codec = FixedCodec::default();
+    let net = Network::new();
+    let coord = net.register(NodeId::Coordinator);
+
+    let mut center_joins = Vec::new();
+    for c in 0..w {
+        let ep = net.register(NodeId::Center(c as u16));
+        let cfg = CenterConfig::new(c as u16, d, false);
+        center_joins.push(std::thread::spawn(move || run_center(cfg, ep)));
+    }
+    let mut shards = Vec::new();
+    let mut inst_joins = Vec::new();
+    for j in 0..s {
+        let (x, y) = shard(40 + j * 10, d, j as u64);
+        shards.push((x.clone(), y.clone()));
+        let ep = net.register(NodeId::Institution(j as u16));
+        let cfg = InstitutionConfig {
+            institution_id: j as u16,
+            x,
+            y,
+            params,
+            codec,
+            full_security: false,
+            engine: ComputeHandle::rust(),
+            share_seed: 1000 + j as u64,
+        };
+        inst_joins.push(std::thread::spawn(move || run_institution(cfg, ep)));
+    }
+
+    let beta = vec![0.05, -0.1, 0.2, 0.0];
+    for j in 0..s {
+        coord
+            .send(
+                NodeId::Institution(j as u16),
+                &Message::BetaBroadcast { iter: 0, beta: beta.clone() },
+            )
+            .unwrap();
+    }
+    for c in 0..w {
+        coord
+            .send(
+                NodeId::Center(c as u16),
+                &Message::AggregateRequest { iter: 0, expected: s as u16 },
+            )
+            .unwrap();
+    }
+    let mut responses = Vec::new();
+    while responses.len() < w {
+        let (_, msg) = coord.recv().unwrap();
+        if let Message::AggregateResponse { center, hessian, g_share, dev_share, .. } = msg {
+            responses.push((center as usize, hessian, g_share, dev_share));
+        }
+    }
+    responses.sort_by_key(|(c, ..)| *c);
+
+    // Plaintext expectation.
+    let mut expect = privlr::model::LocalStats::zeros(d);
+    for (x, y) in &shards {
+        expect.merge(&privlr::model::local_stats(x, y, &beta));
+    }
+
+    // Gradient via any t centers.
+    let g_quorum: Vec<(usize, &[Fp])> = responses[..t]
+        .iter()
+        .map(|(c, _, g, _)| (*c, g.as_slice()))
+        .collect();
+    let g = codec.decode_slice(&reconstruct_batch(params, &g_quorum).unwrap());
+    for (a, b) in g.iter().zip(&expect.g) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+    // Deviance likewise; use the LAST t centers to prove any quorum works.
+    let dev_quorum: Vec<(usize, Fp)> = responses[w - t..]
+        .iter()
+        .map(|(c, _, _, dv)| (*c, *dv))
+        .collect();
+    let dev = codec.decode(privlr::shamir::reconstruct_scalar(params, &dev_quorum).unwrap());
+    assert!((dev - expect.dev).abs() < 1e-6);
+    // Hessian from the lead center's plaintext.
+    let h = match &responses[0].1 {
+        HessianPayload::Plain(p) => privlr::protocol::unpack_upper(p, d),
+        other => panic!("lead center should answer Plain, got {other:?}"),
+    };
+    assert!(h.max_abs_diff(&expect.h) < 1e-9);
+
+    // Teardown.
+    for j in 0..s {
+        coord
+            .send(NodeId::Institution(j as u16), &Message::Shutdown)
+            .unwrap();
+    }
+    for c in 0..w {
+        coord.send(NodeId::Center(c as u16), &Message::Shutdown).unwrap();
+    }
+    for h in inst_joins {
+        h.join().unwrap().unwrap();
+    }
+    for h in center_joins {
+        h.join().unwrap().unwrap();
+    }
+}
+
+/// Failure injection: an institution that sends a malformed (wrong-d)
+/// submission makes the center error out rather than corrupt state.
+#[test]
+fn center_rejects_malformed_submission() {
+    let net = Network::new();
+    let _coord = net.register(NodeId::Coordinator);
+    let inst = net.register(NodeId::Institution(0));
+    let cep = net.register(NodeId::Center(0));
+    let cfg = CenterConfig::new(0, 4, false);
+    let join = std::thread::spawn(move || run_center(cfg, cep));
+    // gradient share has d=2, center expects d=4
+    inst.send(
+        NodeId::Center(0),
+        &Message::ShareSubmission {
+            iter: 0,
+            institution: 0,
+            hessian: HessianPayload::Plain(vec![0.0; 10]),
+            g_share: vec![Fp::ZERO; 2],
+            dev_share: Fp::ZERO,
+        },
+    )
+    .unwrap();
+    let out = join.join().unwrap();
+    assert!(out.is_err(), "center must reject the malformed submission");
+}
+
+/// Failure injection: submissions from a node impersonating the
+/// coordinator are rejected by institutions.
+#[test]
+fn institution_rejects_non_coordinator_broadcast() {
+    let net = Network::new();
+    let rogue = net.register(NodeId::Institution(9));
+    let iep = net.register(NodeId::Institution(0));
+    let (x, y) = shard(10, 3, 5);
+    let cfg = InstitutionConfig {
+        institution_id: 0,
+        x,
+        y,
+        params: ShamirParams::new(1, 1).unwrap(),
+        codec: FixedCodec::default(),
+        full_security: false,
+        engine: ComputeHandle::rust(),
+        share_seed: 3,
+    };
+    let join = std::thread::spawn(move || run_institution(cfg, iep));
+    rogue
+        .send(
+            NodeId::Institution(0),
+            &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 3] },
+        )
+        .unwrap();
+    assert!(join.join().unwrap().is_err());
+}
+
+/// A center never responds before all expected submissions arrive, even
+/// under interleaved iterations.
+#[test]
+fn center_withholds_partial_aggregates() {
+    let net = Network::new();
+    let coord = net.register(NodeId::Coordinator);
+    let inst = net.register(NodeId::Institution(0));
+    let cep = net.register(NodeId::Center(0));
+    let cfg = CenterConfig::new(0, 1, false);
+    let join = std::thread::spawn(move || run_center(cfg, cep));
+
+    coord
+        .send(
+            NodeId::Center(0),
+            &Message::AggregateRequest { iter: 0, expected: 2 },
+        )
+        .unwrap();
+    inst.send(
+        NodeId::Center(0),
+        &Message::ShareSubmission {
+            iter: 0,
+            institution: 0,
+            hessian: HessianPayload::Plain(vec![1.0]),
+            g_share: vec![Fp::new(5)],
+            dev_share: Fp::new(6),
+        },
+    )
+    .unwrap();
+    // only 1 of 2 expected submissions: no response
+    assert!(coord
+        .recv_timeout(std::time::Duration::from_millis(80))
+        .unwrap()
+        .is_none());
+    // second submission (different institution id is fine from same ep)
+    inst.send(
+        NodeId::Center(0),
+        &Message::ShareSubmission {
+            iter: 0,
+            institution: 1,
+            hessian: HessianPayload::Plain(vec![2.0]),
+            g_share: vec![Fp::new(7)],
+            dev_share: Fp::new(8),
+        },
+    )
+    .unwrap();
+    let (_, msg) = coord.recv().unwrap();
+    assert!(matches!(msg, Message::AggregateResponse { .. }));
+    coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+    join.join().unwrap().unwrap();
+}
+
+/// Byte accounting: every message that crossed a link is counted, and
+/// the classifications sum to the total.
+#[test]
+fn traffic_accounting_is_complete() {
+    let ds = privlr::data::synthetic("t", 500, 4, 3, 0.0, 1.0, 9);
+    let cfg = privlr::config::ExperimentConfig {
+        max_iters: 30,
+        ..Default::default()
+    };
+    let fit = privlr::coordinator::secure_fit(&ds, &cfg).unwrap();
+    let tr = fit.metrics.traffic;
+    assert_eq!(
+        tr.total_bytes,
+        tr.submission_bytes + tr.central_bytes + tr.broadcast_bytes,
+        "all links must be classified"
+    );
+    // message count: per iter: S broadcasts + S·w submissions + w requests
+    // + w responses; plus teardown S finished + w shutdowns.
+    let (s, w) = (3u64, 5u64);
+    let iters = fit.metrics.iterations as u64;
+    let expected = iters * (s + s * w + w + w) + s + w;
+    assert_eq!(tr.total_messages, expected);
+}
+
+/// Regression: a dataset whose shape has NO artifact bucket must not
+/// deadlock the coordinator — Auto falls back to rust, and a forced
+/// PJRT run aborts with a NodeError instead of hanging.
+#[test]
+fn missing_bucket_aborts_instead_of_deadlocking() {
+    // d=13 has no artifact; bucket check at Auto level falls back.
+    let ds = privlr::data::synthetic("t", 200, 13, 2, 0.0, 1.0, 55);
+    let auto_cfg = privlr::config::ExperimentConfig {
+        engine: privlr::config::EngineKind::Auto,
+        max_iters: 20,
+        ..Default::default()
+    };
+    let fit = privlr::coordinator::secure_fit(&ds, &auto_cfg).unwrap();
+    assert!(fit.metrics.iterations > 0);
+
+    // Forced PJRT with artifacts present but no matching bucket: the
+    // institution errors, the coordinator must return Err promptly.
+    if privlr::runtime::Manifest::load(std::path::Path::new("artifacts")).is_ok() {
+        let pjrt_cfg = privlr::config::ExperimentConfig {
+            engine: privlr::config::EngineKind::Pjrt,
+            max_iters: 20,
+            ..Default::default()
+        };
+        let start = std::time::Instant::now();
+        let out = privlr::coordinator::secure_fit(&ds, &pjrt_cfg);
+        assert!(out.is_err(), "must abort, not hang");
+        let msg = out.unwrap_err().to_string();
+        assert!(msg.contains("failed"), "{msg}");
+        assert!(start.elapsed().as_secs() < 30, "abort should be prompt");
+    }
+}

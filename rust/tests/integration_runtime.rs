@@ -1,0 +1,115 @@
+//! Integration: the AOT JAX/Pallas artifact, loaded through PJRT,
+//! must agree elementwise with the pure-rust twin — this is the
+//! cross-layer correctness contract of the whole architecture.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not
+//! been built; `make artifacts && cargo test` exercises them fully.
+
+use privlr::linalg::Matrix;
+use privlr::model;
+use privlr::runtime::{ComputeHandle, Manifest};
+use privlr::util::rng::{Rng, SplitMix64};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    Manifest::load(&artifacts_dir()).is_ok()
+}
+
+fn random_shard(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+        for j in 1..d {
+            x[(i, j)] = rng.next_gaussian();
+        }
+        y[i] = f64::from(rng.next_bernoulli(0.35));
+    }
+    let beta: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-0.5, 0.5)).collect();
+    (x, y, beta)
+}
+
+#[test]
+fn pjrt_matches_rust_twin_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let (handle, _guard) = ComputeHandle::pjrt(&artifacts_dir()).unwrap();
+    // Exercise a shard SMALLER than the bucket (tests the masking) at
+    // the test bucket (128, 8).
+    for (n, seed) in [(100usize, 1u64), (128, 2), (7, 3)] {
+        let (x, y, beta) = random_shard(n, 8, seed);
+        let got = handle.local_stats(&x, &y, &beta).unwrap();
+        let expect = model::local_stats(&x, &y, &beta);
+        assert!(
+            got.h.max_abs_diff(&expect.h) < 1e-9,
+            "H mismatch at n={n}: {}",
+            got.h.max_abs_diff(&expect.h)
+        );
+        for (a, b) in got.g.iter().zip(&expect.g) {
+            assert!((a - b).abs() < 1e-9, "g mismatch at n={n}: {a} vs {b}");
+        }
+        assert!(
+            (got.dev - expect.dev).abs() < 1e-8,
+            "dev mismatch at n={n}: {} vs {}",
+            got.dev,
+            expect.dev
+        );
+    }
+}
+
+#[test]
+fn pjrt_bucket_reuse_is_cached_and_consistent() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let (handle, _guard) = ComputeHandle::pjrt(&artifacts_dir()).unwrap();
+    let (x, y, beta) = random_shard(64, 8, 11);
+    let first = handle.local_stats(&x, &y, &beta).unwrap();
+    // Second call hits the compiled-executable cache; results identical.
+    let second = handle.local_stats(&x, &y, &beta).unwrap();
+    assert_eq!(first.h.data, second.h.data);
+    assert_eq!(first.g, second.g);
+    assert_eq!(first.dev, second.dev);
+}
+
+#[test]
+fn pjrt_missing_bucket_is_a_clean_error() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let (handle, _guard) = ComputeHandle::pjrt(&artifacts_dir()).unwrap();
+    // d=13 has no artifact.
+    let (x, y, beta) = random_shard(16, 13, 21);
+    let err = handle.local_stats(&x, &y, &beta).unwrap_err().to_string();
+    assert!(err.contains("no artifact bucket"), "{err}");
+}
+
+#[test]
+fn secure_fit_runs_on_pjrt_engine() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    // End-to-end: the secure protocol with the PJRT engine matches the
+    // centralized gold standard, proving all three layers compose.
+    let ds = privlr::data::synthetic("t", 600, 6, 3, 0.0, 1.0, 31);
+    let cfg = privlr::config::ExperimentConfig {
+        engine: privlr::config::EngineKind::Pjrt,
+        artifacts_dir: artifacts_dir().to_string_lossy().into_owned(),
+        max_iters: 30,
+        ..Default::default()
+    };
+    let secure = privlr::coordinator::secure_fit(&ds, &cfg).unwrap();
+    let gold = privlr::baseline::centralized_fit(&ds, cfg.lambda, cfg.tol, 30).unwrap();
+    for (a, b) in secure.beta.iter().zip(&gold.beta) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}

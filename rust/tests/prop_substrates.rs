@@ -1,0 +1,243 @@
+//! Property-based tests over the cryptographic and numeric substrates.
+//!
+//! `proptest` is not in the offline vendor set, so this file carries a
+//! small in-crate property harness: each property runs against a few
+//! hundred randomized cases from seeded generators, with the failing
+//! seed printed on assertion failure for reproduction.
+
+use privlr::field::{Fp, P};
+use privlr::fixed::FixedCodec;
+use privlr::linalg::{Cholesky, Matrix};
+use privlr::model;
+use privlr::protocol::{decode, encode, pack_upper, unpack_upper, HessianPayload, Message};
+use privlr::shamir::{reconstruct_batch, share_batch, ShamirParams};
+use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
+
+/// Run `prop` for `cases` seeded iterations, reporting the seed on panic.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut SplitMix64)) {
+    for seed in 0..cases {
+        let mut rng = SplitMix64::new(0xDEAD_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_field_ring_axioms() {
+    forall("field ring axioms", 300, |rng| {
+        let a = Fp::random(rng);
+        let b = Fp::random(rng);
+        let c = Fp::random(rng);
+        // commutativity + associativity
+        assert_eq!(a + b, b + a);
+        assert_eq!((a + b) + c, a + (b + c));
+        assert_eq!(a * b, b * a);
+        assert_eq!((a * b) * c, a * (b * c));
+        // distributivity
+        assert_eq!(a * (b + c), a * b + a * c);
+        // identities & inverses
+        assert_eq!(a + Fp::ZERO, a);
+        assert_eq!(a * Fp::ONE, a);
+        assert_eq!(a - a, Fp::ZERO);
+        if !a.is_zero() {
+            assert_eq!(a * a.inv(), Fp::ONE);
+        }
+    });
+}
+
+#[test]
+fn prop_shamir_roundtrip_any_quorum() {
+    forall("shamir roundtrip", 120, |rng| {
+        let w = 2 + (rng.next_below(6) as usize); // 2..=7 holders
+        let t = 1 + (rng.next_below(w as u64) as usize); // 1..=w
+        let params = ShamirParams::new(t, w).unwrap();
+        let k = 1 + rng.next_below(20) as usize;
+        let secrets: Vec<Fp> = (0..k).map(|_| Fp::random(rng)).collect();
+        let mut crng = ChaCha20Rng::seed_from_u64(rng.next_u64());
+        let batch = share_batch(params, &secrets, &mut crng);
+        // random quorum of exactly t distinct holders
+        let mut holders: Vec<usize> = (0..w).collect();
+        rng.shuffle(&mut holders);
+        holders.truncate(t);
+        let quorum: Vec<(usize, &[Fp])> = holders
+            .iter()
+            .map(|&j| (j, batch.per_holder[j].as_slice()))
+            .collect();
+        assert_eq!(reconstruct_batch(params, &quorum).unwrap(), secrets);
+    });
+}
+
+#[test]
+fn prop_shamir_linearity() {
+    // reconstruct(αA + B shares) == αA + B for random α, A, B.
+    forall("shamir linearity", 100, |rng| {
+        let params = ShamirParams::new(3, 5).unwrap();
+        let a = Fp::random(rng);
+        let b = Fp::random(rng);
+        let alpha = Fp::random(rng);
+        let mut crng = ChaCha20Rng::seed_from_u64(rng.next_u64());
+        let ba = share_batch(params, &[a], &mut crng);
+        let bb = share_batch(params, &[b], &mut crng);
+        let combined: Vec<Vec<Fp>> = (0..5)
+            .map(|j| vec![alpha * ba.per_holder[j][0] + bb.per_holder[j][0]])
+            .collect();
+        let quorum: Vec<(usize, &[Fp])> = [0usize, 3, 4]
+            .iter()
+            .map(|&j| (j, combined[j].as_slice()))
+            .collect();
+        assert_eq!(
+            reconstruct_batch(params, &quorum).unwrap()[0],
+            alpha * a + b
+        );
+    });
+}
+
+#[test]
+fn prop_fixed_codec_roundtrip_and_additivity() {
+    forall("fixed roundtrip", 200, |rng| {
+        let codec = FixedCodec::default();
+        let x = rng.next_range_f64(-1e6, 1e6);
+        let y = rng.next_range_f64(-1e6, 1e6);
+        let ex = codec.encode(x).unwrap();
+        let ey = codec.encode(y).unwrap();
+        assert!((codec.decode(ex) - x).abs() <= codec.epsilon());
+        assert!((codec.decode(ex + ey) - (x + y)).abs() <= 2.0 * codec.epsilon());
+        // negation symmetry
+        let en = codec.encode(-x).unwrap();
+        assert!((codec.decode(en) + x).abs() <= codec.epsilon());
+    });
+}
+
+#[test]
+fn prop_protocol_codec_roundtrip() {
+    forall("protocol codec", 150, |rng| {
+        let d = 1 + rng.next_below(12) as usize;
+        let iter = rng.next_below(1000) as u32;
+        let msg = match rng.next_below(4) {
+            0 => Message::BetaBroadcast {
+                iter,
+                beta: (0..d).map(|_| rng.next_gaussian()).collect(),
+            },
+            1 => Message::ShareSubmission {
+                iter,
+                institution: rng.next_below(100) as u16,
+                hessian: match rng.next_below(3) {
+                    0 => HessianPayload::Plain(
+                        (0..d * (d + 1) / 2).map(|_| rng.next_gaussian()).collect(),
+                    ),
+                    1 => HessianPayload::Shared(
+                        (0..d * (d + 1) / 2).map(|_| Fp::random(rng)).collect(),
+                    ),
+                    _ => HessianPayload::Absent,
+                },
+                g_share: (0..d).map(|_| Fp::random(rng)).collect(),
+                dev_share: Fp::random(rng),
+            },
+            2 => Message::AggregateRequest {
+                iter,
+                expected: rng.next_below(50) as u16,
+            },
+            _ => Message::Finished {
+                iter,
+                beta: (0..d).map(|_| rng.next_gaussian()).collect(),
+            },
+        };
+        let bytes = encode(&msg);
+        assert_eq!(decode(&bytes).unwrap(), msg);
+        // prefix-truncation always fails cleanly, never panics
+        if bytes.len() > 1 {
+            let cut = 1 + rng.next_below((bytes.len() - 1) as u64) as usize;
+            let _ = decode(&bytes[..cut]); // must not panic
+        }
+    });
+}
+
+#[test]
+fn prop_pack_upper_roundtrip() {
+    forall("pack_upper", 100, |rng| {
+        let d = 1 + rng.next_below(16) as usize;
+        let mut m = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                m[(i, j)] = rng.next_gaussian();
+            }
+        }
+        m.symmetrize();
+        let back = unpack_upper(&pack_upper(&m), d);
+        assert!(back.max_abs_diff(&m) == 0.0);
+    });
+}
+
+#[test]
+fn prop_cholesky_solves_random_spd() {
+    forall("cholesky", 60, |rng| {
+        let d = 1 + rng.next_below(12) as usize;
+        let mut b = Matrix::zeros(d, d);
+        for v in b.data.iter_mut() {
+            *v = rng.next_gaussian();
+        }
+        let mut a = b.transpose().matmul(&b);
+        a.add_diagonal(d as f64 + 1.0);
+        let x_true: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let rhs = a.matvec(&x_true);
+        let x = Cholesky::factor(&a).unwrap().solve(&rhs);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-7);
+        }
+    });
+}
+
+#[test]
+fn prop_local_stats_shard_additivity() {
+    // The decomposition property (Eqs. 4–6) on random shards/splits.
+    forall("stats additivity", 40, |rng| {
+        let d = 2 + rng.next_below(6) as usize;
+        let n = 20 + rng.next_below(80) as usize;
+        let mut x = Matrix::zeros(n, d);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            x[(i, 0)] = 1.0;
+            for j in 1..d {
+                x[(i, j)] = rng.next_gaussian();
+            }
+            y[i] = f64::from(rng.next_bernoulli(0.4));
+        }
+        let beta: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-0.8, 0.8)).collect();
+        let whole = model::local_stats(&x, &y, &beta);
+        let cut = 1 + rng.next_below((n - 1) as u64) as usize;
+        let take = |lo: usize, hi: usize| {
+            let rows: Vec<Vec<f64>> = (lo..hi).map(|i| x.row(i).to_vec()).collect();
+            model::local_stats(&Matrix::from_rows(rows), &y[lo..hi], &beta)
+        };
+        let mut merged = take(0, cut);
+        merged.merge(&take(cut, n));
+        assert!(whole.h.max_abs_diff(&merged.h) < 1e-9);
+        assert!((whole.dev - merged.dev).abs() < 1e-9);
+        for (a, b) in whole.g.iter().zip(&merged.g) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_centered_lift_is_involutive() {
+    forall("centered lift", 300, |rng| {
+        // any value < p/2 in magnitude round-trips through the field
+        let mag = (rng.next_u64() >> 4) as i128; // < 2^60 < p/2
+        let v = if rng.next_bernoulli(0.5) { mag } else { -mag };
+        assert_eq!(Fp::from_i128(v).to_i128_centered(), v);
+    });
+}
+
+#[test]
+fn prop_field_canonicality_preserved() {
+    forall("canonical range", 200, |rng| {
+        let a = Fp::random(rng);
+        let b = Fp::random(rng);
+        for v in [a + b, a - b, a * b, -a] {
+            assert!(v.to_u64() < P);
+        }
+    });
+}

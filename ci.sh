@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 verify + kernel-equivalence gate.
+#
+#   ./ci.sh            build + full test suite + explicit kernel gate
+#   PRIVLR_CI_BENCH=1 ./ci.sh   additionally runs the fast benches and
+#                               refreshes BENCH_kernels.json
+#
+# The kernel-equivalence property tests (tests/prop_kernels.rs) are run
+# by `cargo test` already; they are re-run by name afterwards so a
+# kernel regression fails loudly and legibly even in -q output.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found — install the rust toolchain" >&2
+    exit 1
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== kernel equivalence gate (blocked SYRK / Vandermonde sharing) =="
+cargo test -q --test prop_kernels
+
+if [ "${PRIVLR_CI_BENCH:-0}" = "1" ]; then
+    echo "== fast benches (refresh BENCH_kernels.json) =="
+    PRIVLR_BENCH_FAST=1 cargo bench --bench micro_substrates
+fi
+
+echo "CI OK"

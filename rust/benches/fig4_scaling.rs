@@ -8,10 +8,11 @@
 //! institutions compute in parallel; central time ~flat and tiny
 //! (~0.088 s) because secure aggregation is O(S·d²) on small summaries.
 
-use privlr::bench::print_kv_table;
+use privlr::bench::{default_report_path, print_kv_table, update_json_report};
 use privlr::config::{EngineKind, ExperimentConfig};
 use privlr::coordinator::secure_fit;
 use privlr::data::synthetic;
+use privlr::util::json::{self, Json};
 use privlr::util::stats::mean;
 
 fn main() {
@@ -33,6 +34,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut totals = Vec::new();
     let mut centrals = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
     for &s in &institution_counts {
         let n = s * records_per_institution;
         let ds = synthetic("scale", n, 6, s, 0.0, 1.0, 42);
@@ -68,6 +70,27 @@ fn main() {
         ]);
         totals.push(mean(&t_emulated));
         centrals.push(mean(&t_central));
+        json_rows.push(json::obj(vec![
+            ("institutions", json::num(s as f64)),
+            ("total_n", json::num(n as f64)),
+            ("iterations", json::num(iters as f64)),
+            ("central_s", json::num(mean(&t_central))),
+            ("sim_wall_s", json::num(mean(&t_total))),
+            ("emulated_distributed_s", json::num(mean(&t_emulated))),
+        ]));
+    }
+
+    // Machine-readable trajectory next to the kernel numbers, so the
+    // perf history is trackable PR over PR.
+    let report = default_report_path();
+    let section = json::obj(vec![
+        ("records_per_institution", json::num(records_per_institution as f64)),
+        ("fast_mode", Json::Bool(fast)),
+        ("rows", json::arr(json_rows)),
+    ]);
+    match update_json_report(&report, "fig4_scaling", section) {
+        Ok(()) => eprintln!("wrote fig4 section to {}", report.display()),
+        Err(e) => eprintln!("could not write {}: {e}", report.display()),
     }
 
     print_kv_table(

@@ -4,18 +4,136 @@
 //!
 //!     cargo bench --bench micro_substrates
 
-use privlr::bench::{black_box, print_kv_table, print_table, run_bench, run_micro, BenchConfig};
+use privlr::bench::{
+    black_box, default_report_path, print_kv_table, print_table, run_bench, run_micro,
+    summary_json, update_json_report, BenchConfig, Summary,
+};
 use privlr::config::{ExperimentConfig, SecurityMode};
 use privlr::coordinator::secure_fit;
 use privlr::field::{add_assign_slice, Fp};
 use privlr::fixed::FixedCodec;
 use privlr::linalg::Matrix;
-use privlr::model::local_stats;
-use privlr::shamir::{lagrange_at_zero, reconstruct_batch, share_batch, ShamirParams};
+use privlr::model::{local_stats, local_stats_into, local_stats_reference, LocalStats, Workspace};
+use privlr::shamir::{
+    lagrange_at_zero, reconstruct_batch, share_batch, share_batch_horner, share_batch_with,
+    ShamirParams, VandermondeTable,
+};
+use privlr::util::json::{self, Json};
 use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
+
+/// Old-vs-new kernel comparison (the perf-PR acceptance numbers):
+/// scalar reference vs blocked local-stats at 1/2/4 threads on the
+/// n=100k, d=64 case, and Horner vs Vandermonde Shamir sharing at a
+/// d²-sized batch. Returns the JSON section for BENCH_kernels.json.
+fn bench_kernels(cfg: BenchConfig) -> Json {
+    let fast = std::env::var("PRIVLR_BENCH_FAST").as_deref() == Ok("1");
+    let (n, d) = if fast { (20_000usize, 32usize) } else { (100_000, 64) };
+    let mut rng = SplitMix64::new(0xBE5);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+        for j in 1..d {
+            x[(i, j)] = rng.next_gaussian();
+        }
+    }
+    let y: Vec<f64> = (0..n).map(|_| f64::from(rng.next_bernoulli(0.35))).collect();
+    let beta: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-0.5, 0.5)).collect();
+
+    let mut rows: Vec<Summary> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let reference = run_bench(
+        &format!("local_stats reference (scalar) {n}x{d}"),
+        cfg,
+        || local_stats_reference(&x, &y, &beta),
+    );
+    rows.push(reference.clone());
+    entries.push(summary_json(&reference));
+    let mut thread_results: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut ws = Workspace::new(d, threads);
+        let mut out = LocalStats::zeros(d);
+        let s = run_bench(
+            &format!("local_stats blocked {n}x{d}, {threads} thread(s)"),
+            cfg,
+            || {
+                local_stats_into(&mut ws, &x, &y, &beta, &mut out);
+                out.dev
+            },
+        );
+        thread_results.push((threads, s.mean_s));
+        rows.push(s.clone());
+        let mut e = summary_json(&s);
+        if let Json::Obj(m) = &mut e {
+            m.insert("threads".into(), json::num(threads as f64));
+            m.insert(
+                "speedup_vs_reference".into(),
+                json::num(reference.mean_s / s.mean_s),
+            );
+        }
+        entries.push(e);
+    }
+
+    // Shamir: d²-sized batch (the full-mode packed-Hessian share).
+    let params = ShamirParams::new(3, 5).unwrap();
+    let batch_len = d * d;
+    let mut crng = ChaCha20Rng::seed_from_u64(11);
+    let secrets: Vec<Fp> = (0..batch_len).map(|_| Fp::random(&mut crng)).collect();
+    let horner = run_bench(
+        &format!("share_batch horner {batch_len} elts, 3-of-5"),
+        cfg,
+        || share_batch_horner(params, &secrets, &mut crng),
+    );
+    rows.push(horner.clone());
+    entries.push(summary_json(&horner));
+    let table = VandermondeTable::new(params);
+    let vander = run_bench(
+        &format!("share_batch vandermonde {batch_len} elts, 3-of-5"),
+        cfg,
+        || share_batch_with(&table, &secrets, &mut crng),
+    );
+    rows.push(vander.clone());
+    let mut ve = summary_json(&vander);
+    if let Json::Obj(m) = &mut ve {
+        m.insert(
+            "speedup_vs_horner".into(),
+            json::num(horner.mean_s / vander.mean_s),
+        );
+    }
+    entries.push(ve);
+
+    print_table("kernels: old vs new (perf-PR acceptance numbers)", &rows);
+    let single = thread_results[0].1;
+    println!(
+        "\nlocal_stats {n}x{d}: blocked/1t {:.2}x vs scalar; thread scaling {}",
+        reference.mean_s / single,
+        thread_results
+            .iter()
+            .map(|(t, m)| format!("{t}t={:.2}x", single / m))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!(
+        "share_batch {batch_len}: vandermonde {:.2}x vs horner",
+        horner.mean_s / vander.mean_s
+    );
+
+    json::obj(vec![
+        ("workload", json::s(&format!("local_stats {n}x{d} + share_batch {batch_len} (3-of-5)"))),
+        ("fast_mode", Json::Bool(fast)),
+        ("results", json::arr(entries)),
+    ])
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
+
+    let kernels = bench_kernels(cfg);
+    let report = default_report_path();
+    match update_json_report(&report, "kernels", kernels) {
+        Ok(()) => println!("\nwrote kernel section to {}", report.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", report.display()),
+    }
+
     let mut rows = Vec::new();
 
     // ---- field arithmetic ----

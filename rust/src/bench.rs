@@ -2,6 +2,7 @@
 //! vendor set). Provides warmup, repeated timed runs, summary stats,
 //! and aligned table output shared by all `rust/benches/*` targets.
 
+use crate::util::json::{self, Json};
 use crate::util::stats::{fmt_duration, mean, median, percentile, stddev};
 use std::time::Instant;
 
@@ -102,6 +103,51 @@ pub fn run_micro<T>(
     }
 }
 
+/// JSON form of one [`Summary`] for the machine-readable perf report.
+pub fn summary_json(s: &Summary) -> Json {
+    json::obj(vec![
+        ("name", json::s(&s.name)),
+        ("iters", json::num(s.iters as f64)),
+        ("mean_s", json::num(s.mean_s)),
+        ("median_s", json::num(s.median_s)),
+        ("p95_s", json::num(s.p95_s)),
+    ])
+}
+
+/// Default location of the machine-readable kernel-perf report:
+/// `BENCH_kernels.json` at the repository root (next to ROADMAP.md),
+/// overridable via `PRIVLR_BENCH_JSON`. Resolved from the crate
+/// manifest dir so it lands at the repo root regardless of the cwd
+/// `cargo bench` runs the target from.
+pub fn default_report_path() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PRIVLR_BENCH_JSON") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json")
+}
+
+/// Read-modify-write `section` of the JSON perf report at `path`,
+/// preserving sections written by sibling bench targets. A missing or
+/// unparseable file starts a fresh report.
+pub fn update_json_report(
+    path: &std::path::Path,
+    section: &str,
+    value: Json,
+) -> std::io::Result<()> {
+    let mut map = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            _ => Default::default(),
+        },
+        // Only a genuinely missing file starts a fresh report; any other
+        // read error would silently discard sibling benches' sections.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Default::default(),
+        Err(e) => return Err(e),
+    };
+    map.insert(section.to_string(), value);
+    std::fs::write(path, Json::Obj(map).to_string_pretty())
+}
+
 /// Print a results table.
 pub fn print_table(title: &str, rows: &[Summary]) {
     println!("\n=== {title} ===");
@@ -171,6 +217,20 @@ mod tests {
         });
         assert!(s.mean_s > 0.0);
         assert_eq!(s.iters, 3);
+    }
+
+    #[test]
+    fn json_report_sections_merge() {
+        let path = std::env::temp_dir().join("privlr_bench_report_test.json");
+        std::fs::remove_file(&path).ok();
+        update_json_report(&path, "alpha", json::num(1.0)).unwrap();
+        update_json_report(&path, "beta", json::s("two")).unwrap();
+        // overwrite one section, keep the other
+        update_json_report(&path, "alpha", json::num(3.0)).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("alpha").as_f64(), Some(3.0));
+        assert_eq!(root.get("beta").as_str(), Some("two"));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -94,6 +94,12 @@ pub struct ExperimentConfig {
     pub frac_bits: u32,
     /// Run institutions' local phase on parallel threads.
     pub parallel_local: bool,
+    /// Worker threads for each institution's blocked local-stats kernel
+    /// (`model::local_stats_into`): 0 = one per core, 1 = the
+    /// bit-compatible single-threaded path. Defaults to 1 because the
+    /// simulation already runs all S institutions concurrently on one
+    /// machine; deployments (one institution per machine) set 0.
+    pub kernel_threads: usize,
     /// PJRT compute-service worker threads (0 = auto: cores/2, max 8).
     pub pjrt_workers: usize,
     /// Directory with AOT artifacts + manifest.json.
@@ -118,6 +124,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             frac_bits: crate::fixed::DEFAULT_FRAC_BITS,
             parallel_local: true,
+            kernel_threads: 1,
             pjrt_workers: 0,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -160,6 +167,7 @@ impl ExperimentConfig {
             ("seed", json::num(self.seed as f64)),
             ("frac_bits", json::num(self.frac_bits as f64)),
             ("parallel_local", Json::Bool(self.parallel_local)),
+            ("kernel_threads", json::num(self.kernel_threads as f64)),
             ("pjrt_workers", json::num(self.pjrt_workers as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
         ])
@@ -221,6 +229,9 @@ impl ExperimentConfig {
         if let Some(b) = v.get("parallel_local").as_bool() {
             cfg.parallel_local = b;
         }
+        if let Some(k) = v.get("kernel_threads").as_usize() {
+            cfg.kernel_threads = k;
+        }
         if let Some(k) = v.get("pjrt_workers").as_usize() {
             cfg.pjrt_workers = k;
         }
@@ -274,6 +285,18 @@ mod tests {
         assert_eq!(back.engine, cfg.engine);
         assert_eq!(back.dataset, cfg.dataset);
         assert_eq!(back.parallel_local, cfg.parallel_local);
+        assert_eq!(back.kernel_threads, cfg.kernel_threads);
+    }
+
+    #[test]
+    fn kernel_threads_roundtrip_and_default() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.kernel_threads, 1, "simulation-friendly default");
+        cfg.kernel_threads = 0; // deployment auto
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.kernel_threads, 0);
+        let v = Json::parse(r#"{"kernel_threads": 4}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&v).unwrap().kernel_threads, 4);
     }
 
     #[test]

@@ -149,6 +149,7 @@ pub fn secure_fit(ds: &Dataset, cfg: &ExperimentConfig) -> anyhow::Result<Secure
             full_security: full,
             engine: engine.clone(),
             share_seed: cfg.seed ^ (0x5EED_0000 + j as u64),
+            kernel_threads: cfg.kernel_threads,
         };
         let ep = net.register(NodeId::Institution(j as u16));
         inst_handles.push(

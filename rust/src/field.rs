@@ -77,6 +77,19 @@ impl Fp {
         Fp(reduce_u128((self.0 as u128) * (rhs.0 as u128)))
     }
 
+    /// Fused multiply-add `self·a + b` in a single Mersenne reduction.
+    ///
+    /// The u128 intermediate `self·a + b < 2^122 + 2^61` stays within
+    /// [`reduce_u128`]'s domain, so this saves one add-with-carry and
+    /// one conditional subtraction versus `self * a + b` — it is the
+    /// inner op of the batched Vandermonde share builder
+    /// (`shamir::share_batch_with`). Exact: identical field value to
+    /// the two-step form.
+    #[inline(always)]
+    pub fn mul_add(self, a: Fp, b: Fp) -> Fp {
+        Fp(reduce_u128((self.0 as u128) * (a.0 as u128) + b.0 as u128))
+    }
+
     /// Modular exponentiation by squaring.
     pub fn pow(self, mut e: u64) -> Fp {
         let mut base = self;
@@ -231,6 +244,18 @@ pub fn mul_scalar_slice(dst: &mut [Fp], c: Fp) {
     }
 }
 
+/// Batched axpy in the field: `dst[i] += c · src[i]`, one fused
+/// reduction per element ([`Fp::mul_add`]). This is the coefficient-
+/// major sweep of the Vandermonde share builder: one call per
+/// (holder, coefficient) pair streams the whole batch contiguously.
+#[inline]
+pub fn mul_add_slice(dst: &mut [Fp], src: &[Fp], c: Fp) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = c.mul_add(s, *d);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +349,34 @@ mod tests {
         mul_scalar_slice(&mut m, c);
         for i in 0..64 {
             assert_eq!(m[i], a[i] * c);
+        }
+    }
+
+    #[test]
+    fn mul_add_matches_two_step() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let a = Fp::random(&mut rng);
+            let b = Fp::random(&mut rng);
+            let c = Fp::random(&mut rng);
+            assert_eq!(a.mul_add(b, c), a * b + c);
+        }
+        // boundary values
+        let top = Fp::new(P - 1);
+        assert_eq!(top.mul_add(top, top), top * top + top);
+        assert_eq!(Fp::ZERO.mul_add(top, top), top);
+    }
+
+    #[test]
+    fn mul_add_slice_matches_scalar() {
+        let mut rng = SplitMix64::new(10);
+        let src: Vec<Fp> = (0..100).map(|_| Fp::random(&mut rng)).collect();
+        let base: Vec<Fp> = (0..100).map(|_| Fp::random(&mut rng)).collect();
+        let c = Fp::random(&mut rng);
+        let mut dst = base.clone();
+        mul_add_slice(&mut dst, &src, c);
+        for i in 0..100 {
+            assert_eq!(dst[i], base[i] + c * src[i]);
         }
     }
 

@@ -27,13 +27,25 @@ use crate::field::{Fp, P};
 pub const DEFAULT_FRAC_BITS: u32 = 28;
 
 /// Errors surfaced by the codec.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FixedError {
-    #[error("value {0} is not finite")]
     NotFinite(f64),
-    #[error("value {0} exceeds fixed-point headroom (|v| must be < {1:.3e})")]
     Overflow(f64, f64),
 }
+
+impl std::fmt::Display for FixedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FixedError::NotFinite(v) => write!(f, "value {v} is not finite"),
+            FixedError::Overflow(v, max) => write!(
+                f,
+                "value {v} exceeds fixed-point headroom (|v| must be < {max:.3e})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FixedError {}
 
 /// A fixed-point encoder/decoder with a given scale.
 #[derive(Clone, Copy, Debug)]

@@ -12,9 +12,10 @@
 
 use crate::fixed::FixedCodec;
 use crate::linalg::Matrix;
-use crate::protocol::{pack_upper, HessianPayload, Message, NodeId};
+use crate::model::{LocalStats, Workspace};
+use crate::protocol::{pack_upper_into, HessianPayload, Message, NodeId};
 use crate::runtime::ComputeHandle;
-use crate::secure::share_local_stats;
+use crate::secure::{share_local_stats_with, ShareContext};
 use crate::shamir::ShamirParams;
 use crate::transport::Endpoint;
 use crate::util::rng::ChaCha20Rng;
@@ -34,6 +35,11 @@ pub struct InstitutionConfig {
     /// the experiment seed for reproducibility; deployments should use
     /// `ChaCha20Rng::from_os_entropy()` material instead.
     pub share_seed: u64,
+    /// Worker threads for the local-stats kernel (0 = one per core).
+    /// Simulations hosting many institutions on one machine keep this
+    /// at 1; a real deployment, where the shard owns its hardware, sets
+    /// 0 (see `config::ExperimentConfig::kernel_threads`).
+    pub kernel_threads: usize,
 }
 
 /// Timing breakdown one institution reports after a run.
@@ -76,6 +82,18 @@ fn run_institution_inner(
     let mut rng = ChaCha20Rng::seed_from_u64(cfg.share_seed);
     let mut timings = InstitutionTimings::default();
     let num_centers = cfg.params.num_holders;
+    // Hoisted per-run state: the kernel workspace, the output stats
+    // buffers, the packed-Hessian buffer, and the Vandermonde share
+    // table are built once here and reused every iteration, so the
+    // compute phase allocates nothing at steady state. (The protect
+    // phase still allocates per iteration: encoded slices, coefficient
+    // buffer, and the per-holder share vectors the messages take
+    // ownership of.)
+    let d = cfg.x.cols;
+    let mut ws = Workspace::new(d, cfg.kernel_threads);
+    let mut stats = LocalStats::zeros(d);
+    let mut h_packed = vec![0.0; crate::protocol::packed_len(d)];
+    let share_ctx = ShareContext::new(cfg.params);
     loop {
         let (from, msg) = ep.recv()?;
         match msg {
@@ -91,15 +109,16 @@ fn run_institution_inner(
                     cfg.x.cols
                 );
                 // ---- local compute phase (steps 4–6) ----
-                let (stats, compute_secs) =
-                    cfg.engine.local_stats_timed(&cfg.x, &cfg.y, &beta)?;
+                let compute_secs = cfg
+                    .engine
+                    .local_stats_timed_into(&cfg.x, &cfg.y, &beta, &mut ws, &mut stats)?;
                 timings.compute_secs += compute_secs;
 
                 // ---- protection + submission phase (step 7) ----
                 let t = std::time::Instant::now();
-                let h_packed = pack_upper(&stats.h);
-                let shared = share_local_stats(
-                    cfg.params,
+                pack_upper_into(&stats.h, &mut h_packed);
+                let shared = share_local_stats_with(
+                    &share_ctx,
                     &cfg.codec,
                     &stats.g,
                     stats.dev,
@@ -176,6 +195,7 @@ mod tests {
             full_security: false,
             engine: ComputeHandle::rust(),
             share_seed: 7,
+            kernel_threads: 1,
         };
         let th = std::thread::spawn(move || run_institution(cfg, iep).unwrap());
         coord
@@ -241,6 +261,7 @@ mod tests {
             full_security: true,
             engine: ComputeHandle::rust(),
             share_seed: 8,
+            kernel_threads: 1,
         };
         let th = std::thread::spawn(move || run_institution(cfg, iep).unwrap());
         coord
@@ -278,6 +299,7 @@ mod tests {
             full_security: false,
             engine: ComputeHandle::rust(),
             share_seed: 9,
+            kernel_threads: 1,
         };
         let th = std::thread::spawn(move || run_institution(cfg, iep));
         coord

@@ -69,6 +69,11 @@ impl Matrix {
     }
 
     /// Transposed matrix-vector product `Aᵀ x` without materializing Aᵀ.
+    ///
+    /// Rows with an exactly-zero coefficient are skipped — for finite
+    /// inputs this is bit-identical to the dense accumulation (adding
+    /// `±0·a` never changes a finite accumulator that started at +0.0);
+    /// `matvec_t_zero_skip_is_consistent` checks that invariant.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows);
         let mut out = vec![0.0; self.cols];
@@ -84,7 +89,12 @@ impl Matrix {
         out
     }
 
-    /// Dense matmul (used only in tests/tools; hot paths use rank-k).
+    /// Dense matmul. Used by tests, tools, and small d×d post-fit
+    /// products (inference covariance, secure Newton–Schulz); the
+    /// N-dominated hot path — the Hessian build — never routes through
+    /// here, it uses the blocked SYRK ([`syrk_upper_blocked`] /
+    /// [`Matrix::syr_upper`]) instead. Skips exact-zero `a` entries,
+    /// same as [`Matrix::matvec_t`].
     pub fn matmul(&self, rhs: &Matrix) -> Matrix {
         assert_eq!(self.cols, rhs.rows);
         let mut out = Matrix::zeros(self.rows, rhs.cols);
@@ -216,16 +226,158 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+// ---- blocked SYRK (the Hessian-build hot kernel) ------------------------
+
+/// Row-tile size of the blocked SYRK. 64 rows keeps the scaled tile
+/// `A = diag(w)·X_tile` within L1/L2 for every paper dimension
+/// (64×85×8 B ≈ 42 KiB worst case) while amortizing the tile-setup
+/// pass; the kernels are exact for any tile size, this only tunes cache
+/// behavior.
+pub const SYRK_ROW_TILE: usize = 64;
+
+/// One tile update of the blocked SYRK: `h_upper += Aᵀ·B`, where
+/// `a_tile` is the pre-scaled tile `diag(w)·X_tile` (`tile`×d,
+/// row-major, flat) and `B` is rows `[row0, row0+tile)` of `x`.
+///
+/// Only the upper triangle of `h` is written. Rows are consumed in
+/// groups of four (rank-4 update): for each output element the four
+/// products are added **sequentially in row order**, so the result is
+/// bit-identical to `tile` successive [`Matrix::syr_upper`] rank-1
+/// updates on finite inputs — the equivalence property tests assert
+/// exact equality, not a tolerance.
+pub fn syrk_upper_tile(h: &mut Matrix, a_tile: &[f64], x: &Matrix, row0: usize, tile: usize) {
+    let d = h.cols;
+    debug_assert_eq!(h.rows, d);
+    debug_assert_eq!(x.cols, d);
+    debug_assert!(a_tile.len() >= tile * d);
+    debug_assert!(row0 + tile <= x.rows);
+    let quads = tile / 4;
+    for q in 0..quads {
+        let t = q * 4;
+        let (a0, rest) = a_tile[t * d..(t + 4) * d].split_at(d);
+        let (a1, rest) = rest.split_at(d);
+        let (a2, a3) = rest.split_at(d);
+        let b0 = x.row(row0 + t);
+        let b1 = x.row(row0 + t + 1);
+        let b2 = x.row(row0 + t + 2);
+        let b3 = x.row(row0 + t + 3);
+        for i in 0..d {
+            let (c0, c1, c2, c3) = (a0[i], a1[i], a2[i], a3[i]);
+            let hrow = &mut h.data[i * d + i..(i + 1) * d];
+            let iter = hrow
+                .iter_mut()
+                .zip(&b0[i..])
+                .zip(&b1[i..])
+                .zip(&b2[i..])
+                .zip(&b3[i..]);
+            for ((((hv, &v0), &v1), &v2), &v3) in iter {
+                // Left-associated adds keep the per-element summation in
+                // row order (bit-compat with the rank-1 reference).
+                *hv = *hv + c0 * v0 + c1 * v1 + c2 * v2 + c3 * v3;
+            }
+        }
+    }
+    // Remainder rows (< 4): plain rank-1 updates in row order.
+    for t in quads * 4..tile {
+        let a = &a_tile[t * d..(t + 1) * d];
+        let b = x.row(row0 + t);
+        for i in 0..d {
+            let c = a[i];
+            let hrow = &mut h.data[i * d + i..(i + 1) * d];
+            for (hv, &v) in hrow.iter_mut().zip(&b[i..]) {
+                *hv += c * v;
+            }
+        }
+    }
+}
+
+/// Blocked weighted SYRK over a row range: `h_upper += Σ_{i∈[lo,hi)}
+/// w[i]·x_i x_iᵀ`, accumulating `d`×`d` tiles of the upper triangle
+/// from [`SYRK_ROW_TILE`]-row blocks.
+///
+/// Instead of the textbook `B = diag(√w)·X` symmetric split, the tile
+/// materialized into `scratch` is `A = diag(w)·X_block` multiplied
+/// against the *raw* rows of `x`: the products are then exactly the
+/// `(w·xᵢ)·xⱼ` the scalar [`Matrix::syr_upper`] path computes, which
+/// (a) keeps the result bit-identical to the reference and (b) supports
+/// weights of any sign (√w would reject negative test weights).
+///
+/// `scratch` is a reusable buffer (grown on demand, never shrunk) so
+/// steady-state calls allocate nothing.
+pub fn syrk_upper_blocked(
+    h: &mut Matrix,
+    x: &Matrix,
+    w: &[f64],
+    lo: usize,
+    hi: usize,
+    scratch: &mut Vec<f64>,
+) {
+    let d = x.cols;
+    assert_eq!(h.rows, d);
+    assert_eq!(h.cols, d);
+    assert_eq!(w.len(), x.rows);
+    assert!(lo <= hi && hi <= x.rows);
+    let mut r0 = lo;
+    while r0 < hi {
+        let tile = SYRK_ROW_TILE.min(hi - r0);
+        if scratch.len() < tile * d {
+            scratch.resize(tile * d, 0.0);
+        }
+        for t in 0..tile {
+            let wr = w[r0 + t];
+            let src = x.row(r0 + t);
+            let dst = &mut scratch[t * d..(t + 1) * d];
+            for (a, &v) in dst.iter_mut().zip(src) {
+                *a = wr * v;
+            }
+        }
+        syrk_upper_tile(h, scratch, x, r0, tile);
+        r0 += tile;
+    }
+}
+
+/// Split `n` rows into at most `parts` contiguous, near-equal ranges
+/// (each a multiple of [`SYRK_ROW_TILE`] except possibly the last, so
+/// parallel workers own whole tiles). Empty ranges are dropped.
+pub fn partition_rows(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let tiles = (n + SYRK_ROW_TILE - 1) / SYRK_ROW_TILE;
+    let parts = parts.min(tiles).max(1);
+    let tiles_per_part = (tiles + parts - 1) / parts;
+    let chunk = tiles_per_part * SYRK_ROW_TILE;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
 /// Errors from the solvers.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix is not positive definite (pivot {0} = {1:.3e})")]
     NotPositiveDefinite(usize, f64),
-    #[error("matrix is singular at column {0}")]
     Singular(usize),
-    #[error("dimension mismatch: {0}")]
     Dim(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite(i, v) => {
+                write!(f, "matrix is not positive definite (pivot {i} = {v:.3e})")
+            }
+            LinalgError::Singular(c) => write!(f, "matrix is singular at column {c}"),
+            LinalgError::Dim(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 /// Cholesky factorization `A = L Lᵀ` of an SPD matrix (lower triangle).
 pub struct Cholesky {
@@ -488,6 +640,104 @@ mod tests {
         let got = a.matvec_t(&v);
         let expect = a.transpose().matvec(&v);
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn matvec_t_zero_skip_is_consistent() {
+        // The zero-skip must be an exact no-op: results bit-identical to
+        // the dense transpose product even when x is riddled with zeros
+        // (and when matrix entries are zero too).
+        let mut rng = SplitMix64::new(31);
+        for n in [1usize, 5, 17, 64] {
+            let mut a = Matrix::zeros(n, 7);
+            for v in a.data.iter_mut() {
+                *v = if rng.next_bernoulli(0.3) { 0.0 } else { rng.next_gaussian() };
+            }
+            let x: Vec<f64> = (0..n)
+                .map(|_| if rng.next_bernoulli(0.5) { 0.0 } else { rng.next_gaussian() })
+                .collect();
+            let got = a.matvec_t(&x);
+            let expect = a.transpose().matvec(&x);
+            assert_eq!(got, expect, "n={n}");
+        }
+    }
+
+    fn random_weighted(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = SplitMix64::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        for v in x.data.iter_mut() {
+            // sprinkle exact zeros to exercise the reference's zero-skip
+            *v = if rng.next_bernoulli(0.1) { 0.0 } else { rng.next_gaussian() };
+        }
+        let w: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.next_bernoulli(0.1) {
+                    0.0
+                } else {
+                    rng.next_range_f64(-1.0, 1.0)
+                }
+            })
+            .collect();
+        (x, w)
+    }
+
+    #[test]
+    fn syrk_blocked_bit_identical_to_rank1() {
+        // Sizes straddling the tile: 0, 1, tile−1, tile, tile+1, several
+        // tiles + remainder; odd dimensions.
+        for n in [0usize, 1, 3, SYRK_ROW_TILE - 1, SYRK_ROW_TILE, SYRK_ROW_TILE + 1, 3 * SYRK_ROW_TILE + 5] {
+            for d in [1usize, 2, 5, 17] {
+                let (x, w) = random_weighted(n, d, (n * 31 + d) as u64);
+                let mut expect = Matrix::zeros(d, d);
+                for i in 0..n {
+                    expect.syr_upper(w[i], x.row(i));
+                }
+                let mut got = Matrix::zeros(d, d);
+                let mut scratch = Vec::new();
+                syrk_upper_blocked(&mut got, &x, &w, 0, n, &mut scratch);
+                assert_eq!(got.data, expect.data, "n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_blocked_row_ranges_compose() {
+        // Accumulating disjoint ranges equals the full range (upper
+        // triangle only; lower stays zero until symmetrize).
+        let (x, w) = random_weighted(200, 6, 77);
+        let mut whole = Matrix::zeros(6, 6);
+        let mut scratch = Vec::new();
+        syrk_upper_blocked(&mut whole, &x, &w, 0, 200, &mut scratch);
+        let mut parts = Matrix::zeros(6, 6);
+        for (lo, hi) in [(0usize, 64usize), (64, 128), (128, 200)] {
+            syrk_upper_blocked(&mut parts, &x, &w, lo, hi, &mut scratch);
+        }
+        assert_eq!(parts.data, whole.data);
+    }
+
+    #[test]
+    fn partition_rows_covers_and_tiles() {
+        for n in [0usize, 1, 63, 64, 65, 1000, 4096] {
+            for parts in [1usize, 2, 3, 4, 7] {
+                let ranges = partition_rows(n, parts);
+                if n == 0 {
+                    assert!(ranges.is_empty());
+                    continue;
+                }
+                assert!(ranges.len() <= parts);
+                // contiguous cover of [0, n)
+                assert_eq!(ranges.first().unwrap().0, 0);
+                assert_eq!(ranges.last().unwrap().1, n);
+                for pair in ranges.windows(2) {
+                    assert_eq!(pair[0].1, pair[1].0);
+                    assert!(pair[0].0 < pair[0].1);
+                }
+                // every boundary except the last is tile-aligned
+                for &(lo, _) in &ranges {
+                    assert_eq!(lo % SYRK_ROW_TILE, 0);
+                }
+            }
+        }
     }
 
     #[test]

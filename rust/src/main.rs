@@ -44,6 +44,7 @@ COMMON FLAGS (fit/compare):
     --threshold <n>      reconstruction threshold (t)               [3]
     --mode <m>           pragmatic | full                           [pragmatic]
     --engine <e>         rust | pjrt | auto                         [auto]
+    --threads <n>        local-stats kernel threads (0 = all cores) [1]
     --artifacts <dir>    AOT artifact directory                     [artifacts]
     --seed <n>           RNG seed                                   [42]
     --config <path>      load flags from a config JSON instead
@@ -88,6 +89,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     cfg.threshold = args.get_usize("threshold", cfg.threshold)?;
     cfg.max_iters = args.get_usize("max-iters", cfg.max_iters)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.kernel_threads = args.get_usize("threads", cfg.kernel_threads)?;
     if let Some(m) = args.get("mode") {
         cfg.mode = SecurityMode::parse(m)?;
     }

@@ -78,11 +78,102 @@ impl LocalStats {
     }
 }
 
+/// Reusable buffers for the blocked local-stats kernel.
+///
+/// One workspace per institution, created once and reused across every
+/// Newton iteration, so the per-iteration hot path performs **no heap
+/// allocation**: the scaled row tile, the per-thread partial
+/// accumulators, and the thread partitioning all live here.
+pub struct Workspace {
+    d: usize,
+    threads: usize,
+    per_thread: Vec<ThreadScratch>,
+}
+
+/// One worker's scratch: the scaled tile `A = diag(w)·X_tile` plus the
+/// partial H/g/dev accumulators merged (in worker order, so the result
+/// is deterministic) after the fan-out joins.
+struct ThreadScratch {
+    a_tile: Vec<f64>,
+    h: Matrix,
+    g: Vec<f64>,
+    dev: f64,
+}
+
+impl ThreadScratch {
+    fn new(d: usize) -> Self {
+        Self {
+            a_tile: vec![0.0; crate::linalg::SYRK_ROW_TILE * d],
+            h: Matrix::zeros(d, d),
+            g: vec![0.0; d],
+            dev: 0.0,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.h.data.fill(0.0);
+        self.g.fill(0.0);
+        self.dev = 0.0;
+    }
+}
+
+impl Workspace {
+    /// `threads == 0` means "one worker per available core". Shards too
+    /// small to amortize a fan-out run single-threaded regardless (see
+    /// [`Workspace::effective_threads`]).
+    pub fn new(d: usize, threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Self {
+            d,
+            threads,
+            per_thread: (0..threads).map(|_| ThreadScratch::new(d)).collect(),
+        }
+    }
+
+    /// Single-threaded workspace (the bit-compatible default).
+    pub fn single(d: usize) -> Self {
+        Self::new(d, 1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Worker count actually used for an `n`-row shard: spawning threads
+    /// for a few thousand rows costs more than it saves, so small shards
+    /// stay on the caller's thread.
+    fn effective_threads(&self, n: usize) -> usize {
+        const MIN_ROWS_PER_THREAD: usize = 4 * crate::linalg::SYRK_ROW_TILE;
+        self.threads.min((n / MIN_ROWS_PER_THREAD).max(1))
+    }
+}
+
 /// Compute local summary statistics for a data shard.
 ///
 /// `x` is N×d (first column conventionally the intercept), `y` holds
 /// 0/1 responses. This is the rust twin of the L1 Pallas kernel.
+///
+/// Convenience wrapper over [`local_stats_into`] with a fresh
+/// single-threaded workspace; the protocol hot path
+/// (`institution::run_institution`) reuses one [`Workspace`] across
+/// iterations instead.
 pub fn local_stats(x: &Matrix, y: &[f64], beta: &[f64]) -> LocalStats {
+    let mut ws = Workspace::single(x.cols);
+    let mut out = LocalStats::zeros(x.cols);
+    local_stats_into(&mut ws, x, y, beta, &mut out);
+    out
+}
+
+/// The pre-blocking scalar implementation: rank-1 `syr_upper` per row.
+///
+/// Kept verbatim as the ground truth for the equivalence property tests
+/// (`tests/prop_kernels.rs`) and the old-vs-new kernel benchmarks; the
+/// blocked kernel is bit-identical to this on finite inputs.
+pub fn local_stats_reference(x: &Matrix, y: &[f64], beta: &[f64]) -> LocalStats {
     assert_eq!(x.rows, y.len());
     assert_eq!(x.cols, beta.len());
     let d = x.cols;
@@ -101,6 +192,109 @@ pub fn local_stats(x: &Matrix, y: &[f64], beta: &[f64]) -> LocalStats {
     st.h.symmetrize();
     st.n = x.rows;
     st
+}
+
+/// Blocked, optionally multithreaded local-stats kernel writing into a
+/// caller-owned [`LocalStats`] (the protocol hot path — zero
+/// allocation at steady state).
+///
+/// The row loop is tiled ([`crate::linalg::SYRK_ROW_TILE`]); per tile,
+/// one pass computes `z = x_i·β`, the sigmoid/weight, the gradient
+/// contribution and the deviance term while materializing the scaled
+/// tile `A = diag(w)·X_tile`, and a second pass accumulates the
+/// Hessian's upper triangle via the rank-4 [`crate::linalg::syrk_upper_tile`].
+/// With one worker the result is **bit-identical** to
+/// [`local_stats_reference`]; with several, row ranges are fanned out
+/// across `std::thread` workers with per-thread accumulators merged in
+/// worker order — deterministic run-to-run, equal to the reference up
+/// to f64 summation re-association across range boundaries.
+pub fn local_stats_into(
+    ws: &mut Workspace,
+    x: &Matrix,
+    y: &[f64],
+    beta: &[f64],
+    out: &mut LocalStats,
+) {
+    assert_eq!(x.rows, y.len());
+    assert_eq!(x.cols, beta.len());
+    assert_eq!(ws.d, x.cols, "workspace dimension mismatch");
+    let n = x.rows;
+    let d = x.cols;
+    assert_eq!(out.h.rows, d);
+    assert_eq!(out.g.len(), d);
+    out.h.data.fill(0.0);
+    out.g.fill(0.0);
+    out.dev = 0.0;
+    out.n = n;
+
+    let nthreads = ws.effective_threads(n);
+    if nthreads <= 1 {
+        let sc = &mut ws.per_thread[0];
+        sc.reset();
+        local_stats_range(sc, x, y, beta, 0, n);
+        out.h.add_assign(&sc.h);
+        for (o, &v) in out.g.iter_mut().zip(&sc.g) {
+            *o += v;
+        }
+        out.dev += sc.dev;
+    } else {
+        let ranges = crate::linalg::partition_rows(n, nthreads);
+        let workers = &mut ws.per_thread[..ranges.len()];
+        std::thread::scope(|s| {
+            for (sc, &(lo, hi)) in workers.iter_mut().zip(&ranges) {
+                s.spawn(move || {
+                    sc.reset();
+                    local_stats_range(sc, x, y, beta, lo, hi);
+                });
+            }
+        });
+        // Deterministic merge in worker (row-range) order.
+        for sc in workers.iter() {
+            out.h.add_assign(&sc.h);
+            for (o, &v) in out.g.iter_mut().zip(&sc.g) {
+                *o += v;
+            }
+            out.dev += sc.dev;
+        }
+    }
+    out.h.symmetrize();
+}
+
+/// Process rows `[lo, hi)` of the shard into `sc`'s partial
+/// accumulators (upper triangle only; caller symmetrizes after merge).
+fn local_stats_range(
+    sc: &mut ThreadScratch,
+    x: &Matrix,
+    y: &[f64],
+    beta: &[f64],
+    lo: usize,
+    hi: usize,
+) {
+    let d = x.cols;
+    let mut r0 = lo;
+    while r0 < hi {
+        let tile = crate::linalg::SYRK_ROW_TILE.min(hi - r0);
+        // Pass 1 (fused): linear predictor, sigmoid, gradient, deviance,
+        // and the scaled tile A = diag(w)·X_tile — one streaming read of
+        // the tile's rows.
+        for t in 0..tile {
+            let i = r0 + t;
+            let xi = x.row(i);
+            let z = crate::linalg::dot(xi, beta);
+            let p = sigmoid(z);
+            let w = p * (1.0 - p);
+            let arow = &mut sc.a_tile[t * d..(t + 1) * d];
+            for (a, &v) in arow.iter_mut().zip(xi) {
+                *a = w * v;
+            }
+            let r = y[i] - p;
+            crate::linalg::axpy(r, xi, &mut sc.g);
+            sc.dev += -2.0 * (y[i] * log_sigmoid(z) + (1.0 - y[i]) * log_sigmoid(-z));
+        }
+        // Pass 2: H_upper += Aᵀ·X_tile (rank-4 blocked update).
+        crate::linalg::syrk_upper_tile(&mut sc.h, &sc.a_tile, x, r0, tile);
+        r0 += tile;
+    }
 }
 
 /// Outcome of one Newton-Raphson update on aggregated statistics.
@@ -267,6 +461,72 @@ mod tests {
         assert!((whole.dev - merged.dev).abs() < 1e-10);
         for (a, b) in whole.g.iter().zip(&merged.g) {
             assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_bit_identical_to_reference() {
+        // Single-threaded blocked path == scalar reference, bit for bit,
+        // across sizes that straddle the row tile.
+        use crate::linalg::SYRK_ROW_TILE;
+        for n in [0usize, 1, SYRK_ROW_TILE - 1, SYRK_ROW_TILE, SYRK_ROW_TILE + 1, 3 * SYRK_ROW_TILE + 7] {
+            let (x, y, _) = toy_data(n.max(1), 5, n as u64 + 100);
+            let (x, y) = if n == 0 {
+                (Matrix::zeros(0, 5), vec![])
+            } else {
+                (x, y)
+            };
+            let beta = [0.25, -0.5, 0.1, 0.0, 0.75];
+            let reference = local_stats_reference(&x, &y, &beta);
+            let blocked = local_stats(&x, &y, &beta);
+            assert_eq!(blocked.h.data, reference.h.data, "n={n}");
+            assert_eq!(blocked.g, reference.g, "n={n}");
+            assert_eq!(blocked.dev, reference.dev, "n={n}");
+            assert_eq!(blocked.n, reference.n);
+        }
+    }
+
+    #[test]
+    fn multithreaded_kernel_matches_and_is_deterministic() {
+        let (x, y, _) = toy_data(2500, 6, 42);
+        let beta = [0.2, -0.3, 0.15, 0.05, -0.1, 0.4];
+        let reference = local_stats_reference(&x, &y, &beta);
+        for threads in [2usize, 3, 4] {
+            let mut ws = Workspace::new(6, threads);
+            let mut got = LocalStats::zeros(6);
+            local_stats_into(&mut ws, &x, &y, &beta, &mut got);
+            // Merged partials re-associate f64 sums across range
+            // boundaries — equal up to tiny rounding, not bitwise.
+            assert!(got.h.max_abs_diff(&reference.h) < 1e-9, "threads={threads}");
+            for (a, b) in got.g.iter().zip(&reference.g) {
+                assert!((a - b).abs() < 1e-9, "threads={threads}");
+            }
+            assert!((got.dev - reference.dev).abs() < 1e-8, "threads={threads}");
+            // ... but deterministic run-to-run: fixed partition + ordered
+            // merge, independent of thread scheduling.
+            let mut ws2 = Workspace::new(6, threads);
+            let mut again = LocalStats::zeros(6);
+            local_stats_into(&mut ws2, &x, &y, &beta, &mut again);
+            assert_eq!(got.h.data, again.h.data);
+            assert_eq!(got.g, again.g);
+            assert_eq!(got.dev, again.dev);
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_iterations_is_clean() {
+        // Reusing one workspace + output across calls must leave no
+        // residue from earlier iterations.
+        let (x, y, _) = toy_data(300, 4, 7);
+        let mut ws = Workspace::single(4);
+        let mut out = LocalStats::zeros(4);
+        let betas = [[0.0; 4], [0.3, -0.2, 0.1, 0.05], [1.0, 1.0, -1.0, 0.5]];
+        for beta in &betas {
+            local_stats_into(&mut ws, &x, &y, beta, &mut out);
+            let fresh = local_stats_reference(&x, &y, beta);
+            assert_eq!(out.h.data, fresh.h.data);
+            assert_eq!(out.g, fresh.g);
+            assert_eq!(out.dev, fresh.dev);
         }
     }
 

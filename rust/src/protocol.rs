@@ -110,15 +110,26 @@ impl Message {
 }
 
 /// Codec errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodecError {
-    #[error("truncated message (wanted {wanted} more bytes at {at})")]
     Truncated { at: usize, wanted: usize },
-    #[error("unknown tag {0}")]
     UnknownTag(u8),
-    #[error("field element out of range: {0}")]
     BadField(u64),
 }
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { at, wanted } => {
+                write!(f, "truncated message (wanted {wanted} more bytes at {at})")
+            }
+            CodecError::UnknownTag(t) => write!(f, "unknown tag {t}"),
+            CodecError::BadField(v) => write!(f, "field element out of range: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 // ---- encoding -----------------------------------------------------------
 
@@ -383,15 +394,25 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
 /// Pack the upper triangle (incl. diagonal) of a symmetric d×d matrix
 /// row-major: d(d+1)/2 values. Halves Hessian traffic.
 pub fn pack_upper(m: &crate::linalg::Matrix) -> Vec<f64> {
+    let mut out = vec![0.0; packed_len(m.rows)];
+    pack_upper_into(m, &mut out);
+    out
+}
+
+/// [`pack_upper`] into a caller-owned buffer of length
+/// [`packed_len`]`(d)` — the institutions' per-iteration hot path
+/// reuses one buffer across the whole run.
+pub fn pack_upper_into(m: &crate::linalg::Matrix, out: &mut [f64]) {
     assert_eq!(m.rows, m.cols);
     let d = m.rows;
-    let mut out = Vec::with_capacity(d * (d + 1) / 2);
+    assert_eq!(out.len(), packed_len(d));
+    let mut k = 0;
     for i in 0..d {
         for j in i..d {
-            out.push(m[(i, j)]);
+            out[k] = m[(i, j)];
+            k += 1;
         }
     }
-    out
 }
 
 /// Inverse of [`pack_upper`].

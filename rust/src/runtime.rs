@@ -20,8 +20,9 @@
 //! and is what tests/benches use when artifacts are absent.
 
 use crate::linalg::Matrix;
-use crate::model::{self, LocalStats};
+use crate::model::{self, LocalStats, Workspace};
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
@@ -87,6 +88,12 @@ impl Manifest {
 }
 
 /// The PJRT-backed engine. NOT `Send` — see module docs.
+///
+/// Only available with the `pjrt` cargo feature (which needs the
+/// external `xla` crate); the default offline build replaces it with a
+/// stub that fails at construction, so `EngineKind::Auto` falls back to
+/// the bit-compatible rust kernel.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -94,6 +101,34 @@ pub struct PjrtEngine {
     cache: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
 }
 
+/// Stub engine for builds without the `pjrt` feature: construction
+/// always fails, which the compute-service threads surface per request.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    pub fn new(_artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
+        anyhow::bail!(
+            "this build has no PJRT support (compiled without the `pjrt` \
+             feature); use the rust engine or rebuild with --features pjrt \
+             and the xla crate available"
+        )
+    }
+
+    pub fn local_stats(
+        &mut self,
+        _x: &Matrix,
+        _y: &[f64],
+        _beta: &[f64],
+    ) -> anyhow::Result<LocalStats> {
+        anyhow::bail!("PJRT engine stub cannot execute (built without the `pjrt` feature)")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     pub fn new(artifacts_dir: &Path) -> anyhow::Result<PjrtEngine> {
         let manifest = Manifest::load(artifacts_dir)?;
@@ -254,6 +289,14 @@ impl ComputeHandle {
         workers: usize,
     ) -> anyhow::Result<(ComputeHandle, ComputeServiceGuard)> {
         anyhow::ensure!(workers >= 1, "need at least one PJRT worker");
+        if cfg!(not(feature = "pjrt")) {
+            // Fail fast with a clear message instead of spawning a pool of
+            // stub engines that would error on every request.
+            anyhow::bail!(
+                "PJRT engine unavailable: this binary was built without the \
+                 `pjrt` feature (the offline default); use engine=rust or auto"
+            );
+        }
         // Validate the manifest on the caller thread for a good error.
         Manifest::load(artifacts_dir)?;
         let mut txs = Vec::with_capacity(workers);
@@ -341,6 +384,35 @@ impl ComputeHandle {
                     .map_err(|_| anyhow::anyhow!("compute service is down"))?;
                 rrx.recv()
                     .map_err(|_| anyhow::anyhow!("compute service dropped the request"))?
+            }
+        }
+    }
+
+    /// Allocation-free hot path: compute local statistics into a
+    /// caller-owned [`LocalStats`], reusing `ws` for every scratch
+    /// buffer. The rust engine runs the blocked (optionally
+    /// multithreaded) kernel in place; the PJRT engine ignores `ws`
+    /// (its buffers live behind the PJRT client) and assigns the
+    /// result. Returns the PURE compute seconds like
+    /// [`ComputeHandle::local_stats_timed`].
+    pub fn local_stats_timed_into(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        beta: &[f64],
+        ws: &mut Workspace,
+        out: &mut LocalStats,
+    ) -> anyhow::Result<f64> {
+        match self {
+            ComputeHandle::Rust => {
+                let t = std::time::Instant::now();
+                model::local_stats_into(ws, x, y, beta, out);
+                Ok(t.elapsed().as_secs_f64())
+            }
+            ComputeHandle::Pjrt { .. } => {
+                let (st, secs) = self.local_stats_timed(x, y, beta)?;
+                *out = st;
+                Ok(secs)
             }
         }
     }

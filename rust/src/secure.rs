@@ -17,7 +17,7 @@
 
 use crate::field::{add_assign_slice, mul_scalar_slice, Fp};
 use crate::fixed::FixedCodec;
-use crate::shamir::{share_batch, ShamirParams, ShareBatch};
+use crate::shamir::{share_batch_with, ShamirParams, ShareBatch, VandermondeTable};
 use crate::util::rng::Rng;
 
 /// Secure addition: combine two share vectors held by the same center.
@@ -112,11 +112,41 @@ pub struct SharedStats {
     pub h: Option<ShareBatch>,
 }
 
+/// Per-node sharing state hoisted out of the iteration loop: the
+/// Shamir parameters plus the precomputed Vandermonde evaluation
+/// powers, built once per `(t, w)` and reused for every batch the node
+/// ever shares (institutions build one per run).
+#[derive(Clone, Debug)]
+pub struct ShareContext {
+    table: VandermondeTable,
+}
+
+impl ShareContext {
+    pub fn new(params: ShamirParams) -> Self {
+        Self {
+            table: VandermondeTable::new(params),
+        }
+    }
+
+    pub fn params(&self) -> ShamirParams {
+        self.table.params()
+    }
+
+    /// Share one batch through the cached table.
+    pub fn share<R: Rng>(&self, secrets: &[Fp], rng: &mut R) -> ShareBatch {
+        share_batch_with(&self.table, secrets, rng)
+    }
+}
+
 /// Encode-and-share local statistics.
 ///
 /// `g_plain` is the local gradient (d), `dev_plain` the local deviance,
 /// `h_packed_plain` the packed upper-triangular Hessian — shared only
 /// when `full_security` is set (pragmatic mode sends it plaintext).
+///
+/// Convenience wrapper building a fresh [`ShareContext`]; the protocol
+/// hot path (`institution::run_institution`) reuses one context across
+/// iterations via [`share_local_stats_with`].
 pub fn share_local_stats<R: Rng>(
     params: ShamirParams,
     codec: &FixedCodec,
@@ -126,13 +156,36 @@ pub fn share_local_stats<R: Rng>(
     full_security: bool,
     rng: &mut R,
 ) -> anyhow::Result<SharedStats> {
+    share_local_stats_with(
+        &ShareContext::new(params),
+        codec,
+        g_plain,
+        dev_plain,
+        h_packed_plain,
+        full_security,
+        rng,
+    )
+}
+
+/// [`share_local_stats`] through a caller-owned [`ShareContext`] (the
+/// allocation for the Vandermonde table happens once per run, not once
+/// per iteration).
+pub fn share_local_stats_with<R: Rng>(
+    ctx: &ShareContext,
+    codec: &FixedCodec,
+    g_plain: &[f64],
+    dev_plain: f64,
+    h_packed_plain: &[f64],
+    full_security: bool,
+    rng: &mut R,
+) -> anyhow::Result<SharedStats> {
     let g_enc = codec.encode_slice(g_plain)?;
     let dev_enc = codec.encode(dev_plain)?;
-    let g = share_batch(params, &g_enc, rng);
-    let dev = share_batch(params, &[dev_enc], rng);
+    let g = ctx.share(&g_enc, rng);
+    let dev = ctx.share(&[dev_enc], rng);
     let h = if full_security {
         let h_enc = codec.encode_slice(h_packed_plain)?;
-        Some(share_batch(params, &h_enc, rng))
+        Some(ctx.share(&h_enc, rng))
     } else {
         None
     };

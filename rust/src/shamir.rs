@@ -13,7 +13,7 @@
 //! one share-vector per center so a center's state is a contiguous
 //! `Vec<Fp>` and secure addition is a slice loop (see `secure`).
 
-use crate::field::Fp;
+use crate::field::{mul_add_slice, Fp};
 use crate::util::rng::Rng;
 
 /// Scheme parameters: `threshold`-out-of-`num_holders`.
@@ -69,13 +69,118 @@ impl ShareBatch {
     }
 }
 
+/// Precomputed Vandermonde evaluation powers for one `(t, w)` scheme:
+/// `powers[j·t + i] = x_j^i` for holder `j` and degree `i < t`.
+///
+/// Building the table costs `w·t` field multiplications — negligible —
+/// but hoisting it out of [`share_batch_with`] means the per-batch work
+/// is pure coefficient-major axpy sweeps. The protocol keeps one table
+/// per institution for the whole run (`secure::ShareContext`).
+#[derive(Clone, Debug)]
+pub struct VandermondeTable {
+    params: ShamirParams,
+    powers: Vec<Fp>,
+}
+
+impl VandermondeTable {
+    pub fn new(params: ShamirParams) -> Self {
+        let (t, w) = (params.threshold, params.num_holders);
+        let mut powers = Vec::with_capacity(w * t);
+        for j in 0..w {
+            let x = params.x_of(j);
+            let mut p = Fp::ONE;
+            for _ in 0..t {
+                powers.push(p);
+                p = p * x;
+            }
+        }
+        Self { params, powers }
+    }
+
+    pub fn params(&self) -> ShamirParams {
+        self.params
+    }
+
+    /// `x_j^i` (0-based holder j, degree i < t).
+    #[inline]
+    fn power(&self, holder: usize, degree: usize) -> Fp {
+        self.powers[holder * self.params.threshold + degree]
+    }
+}
+
 /// Split a batch of secrets into per-holder share vectors.
 ///
 /// The polynomial coefficients come from `rng`, which MUST be
 /// cryptographically strong for real deployments (`ChaCha20Rng`); the
 /// secrecy of the scheme is exactly the unpredictability of these
 /// coefficients.
+///
+/// Convenience wrapper that builds the [`VandermondeTable`] inline;
+/// batch-heavy callers (the institutions' per-iteration sharing) hoist
+/// the table via [`share_batch_with`] instead.
 pub fn share_batch<R: Rng>(params: ShamirParams, secrets: &[Fp], rng: &mut R) -> ShareBatch {
+    share_batch_with(&VandermondeTable::new(params), secrets, rng)
+}
+
+/// Vandermonde fast path of [`share_batch`].
+///
+/// Identical output to [`share_batch_horner`] on the same RNG stream
+/// (field arithmetic is exact, so re-associating the polynomial
+/// evaluation changes nothing — the equivalence property tests assert
+/// share-for-share equality):
+///
+/// 1. the random coefficient matrix for the WHOLE batch is drawn in
+///    one pass — same draw order as the scalar path (secret-major), so
+///    streams stay compatible — stored coefficient-major;
+/// 2. each holder's share vector starts as a copy of the secrets
+///    (degree-0 term) and then receives `t−1` contiguous axpy sweeps
+///    `share_j += x_j^i · a_i` over the batch ([`mul_add_slice`], one
+///    fused reduction per element).
+///
+/// Versus the per-secret Horner loop this removes the per-(secret,
+/// holder) call overhead, turns the inner loop into a streaming slice
+/// sweep, and halves the reductions — the `BENCH_kernels.json` numbers
+/// track the measured speedup.
+pub fn share_batch_with<R: Rng>(
+    table: &VandermondeTable,
+    secrets: &[Fp],
+    rng: &mut R,
+) -> ShareBatch {
+    let params = table.params;
+    let w = params.num_holders;
+    let t = params.threshold;
+    let k = secrets.len();
+    // 1+2. One-pass coefficient draw stored coefficient-major. The DRAW
+    //    order is secret-major (s outer, degree inner) — exactly the
+    //    scalar path's, so RNG streams stay compatible — only the
+    //    STORAGE is transposed: rand_cm[(i−1)·k + s] is secret s's
+    //    degree-i coefficient, giving each sweep a contiguous slice.
+    let mut rand_cm = vec![Fp::ZERO; (t - 1) * k];
+    for s in 0..k {
+        for i in 0..t - 1 {
+            rand_cm[i * k + s] = Fp::random(rng);
+        }
+    }
+    // 3. Coefficient-major axpy sweeps per holder.
+    let mut per_holder = Vec::with_capacity(w);
+    for j in 0..w {
+        let mut share = secrets.to_vec();
+        for i in 1..t {
+            mul_add_slice(&mut share, &rand_cm[(i - 1) * k..i * k], table.power(j, i));
+        }
+        per_holder.push(share);
+    }
+    ShareBatch { params, per_holder }
+}
+
+/// The pre-Vandermonde scalar path: one full Horner evaluation per
+/// (secret, holder) pair. Kept as the ground truth for the equivalence
+/// property tests and the old-vs-new kernel benchmarks.
+pub fn share_batch_horner<R: Rng>(
+    params: ShamirParams,
+    secrets: &[Fp],
+    rng: &mut R,
+) -> ShareBatch {
     let w = params.num_holders;
     let t = params.threshold;
     let mut per_holder = vec![vec![Fp::ZERO; secrets.len()]; w];
@@ -318,6 +423,32 @@ mod tests {
         let batch = share_batch(p, &[m], &mut rng);
         let quorum: Vec<(usize, Fp)> = vec![(0, batch.per_holder[0][0]), (2, batch.per_holder[2][0])];
         assert_eq!(reconstruct_scalar(p, &quorum).unwrap(), m);
+    }
+
+    #[test]
+    fn vandermonde_matches_horner_same_stream() {
+        // Same RNG seed → share-for-share identical output, including
+        // the degenerate batch sizes.
+        for (t, w) in [(1usize, 1usize), (1, 4), (2, 3), (3, 5), (5, 5), (4, 9)] {
+            let p = params(t, w);
+            let table = VandermondeTable::new(p);
+            for k in [0usize, 1, 2, 17, 64, 65] {
+                let mut gen = SplitMix64::new((t * 1000 + w * 10 + k) as u64);
+                let secrets: Vec<Fp> = (0..k).map(|_| Fp::random(&mut gen)).collect();
+                let mut r1 = ChaCha20Rng::seed_from_u64(77);
+                let mut r2 = ChaCha20Rng::seed_from_u64(77);
+                let fast = share_batch_with(&table, &secrets, &mut r1);
+                let slow = share_batch_horner(p, &secrets, &mut r2);
+                for j in 0..w {
+                    assert_eq!(
+                        fast.per_holder[j], slow.per_holder[j],
+                        "t={t} w={w} k={k} holder {j}"
+                    );
+                }
+                // and the streams stay in lockstep afterwards
+                assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
     }
 
     #[test]

@@ -89,14 +89,36 @@ impl TrafficSnapshot {
 }
 
 /// Transport errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TransportError {
-    #[error("unknown destination {0}")]
     UnknownDestination(NodeId),
-    #[error("node {0} disconnected")]
     Disconnected(NodeId),
-    #[error("codec: {0}")]
-    Codec(#[from] crate::protocol::CodecError),
+    Codec(crate::protocol::CodecError),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::UnknownDestination(n) => write!(f, "unknown destination {n}"),
+            TransportError::Disconnected(n) => write!(f, "node {n} disconnected"),
+            TransportError::Codec(e) => write!(f, "codec: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Codec(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::protocol::CodecError> for TransportError {
+    fn from(e: crate::protocol::CodecError) -> Self {
+        TransportError::Codec(e)
+    }
 }
 
 /// The network fabric: a registry of mailboxes plus traffic counters.

@@ -61,6 +61,7 @@ fn manual_round_reconstructs_exact_aggregates() {
             full_security: false,
             engine: ComputeHandle::rust(),
             share_seed: 1000 + j as u64,
+            kernel_threads: 1,
         };
         inst_joins.push(std::thread::spawn(move || run_institution(cfg, ep)));
     }
@@ -180,6 +181,7 @@ fn institution_rejects_non_coordinator_broadcast() {
         full_security: false,
         engine: ComputeHandle::rust(),
         share_seed: 3,
+        kernel_threads: 1,
     };
     let join = std::thread::spawn(move || run_institution(cfg, iep));
     rogue

@@ -1,0 +1,199 @@
+//! Equivalence property tests for the blocked/batched hot-path
+//! kernels introduced by the perf rework:
+//!
+//! * `linalg::syrk_upper_blocked` ≡ naive per-row `Matrix::syr_upper`
+//!   (bit-identical on finite inputs);
+//! * `model::local_stats` (blocked, single worker) ≡
+//!   `model::local_stats_reference` (bit-identical), and the
+//!   multithreaded fan-out ≡ reference up to f64 merge re-association,
+//!   deterministically;
+//! * Vandermonde `shamir::share_batch` ≡ per-secret Horner
+//!   `shamir::share_batch_horner` on the same RNG stream (identical
+//!   shares — field arithmetic is exact).
+//!
+//! Sizes deliberately straddle the kernels' block boundaries (n and
+//! batch not multiples of the tile; batch sizes 0, 1, tile±1), per the
+//! regression checklist.
+
+use privlr::field::Fp;
+use privlr::linalg::{syrk_upper_blocked, Matrix, SYRK_ROW_TILE};
+use privlr::model::{self, LocalStats, Workspace};
+use privlr::shamir::{
+    reconstruct_batch, share_batch, share_batch_horner, share_batch_with, ShamirParams,
+    VandermondeTable,
+};
+use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
+
+/// Run `prop` for `cases` seeded iterations, reporting the seed on panic.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut SplitMix64)) {
+    for seed in 0..cases {
+        let mut rng = SplitMix64::new(0xBEEF_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+/// Sizes that straddle a block boundary of width `tile`.
+fn straddling_sizes(tile: usize, rng: &mut SplitMix64) -> Vec<usize> {
+    let mut v = vec![0, 1, tile - 1, tile, tile + 1, 2 * tile + 3];
+    v.push(1 + rng.next_below((3 * tile) as u64) as usize);
+    v
+}
+
+fn random_shard(n: usize, d: usize, rng: &mut SplitMix64) -> (Matrix, Vec<f64>, Vec<f64>) {
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+        for j in 1..d {
+            // exact zeros exercise the reference kernel's zero-skip
+            x[(i, j)] = if rng.next_bernoulli(0.15) {
+                0.0
+            } else {
+                rng.next_gaussian()
+            };
+        }
+        y[i] = f64::from(rng.next_bernoulli(0.4));
+    }
+    let beta: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-2.0, 2.0)).collect();
+    (x, y, beta)
+}
+
+#[test]
+fn prop_syrk_blocked_equals_naive_rank1() {
+    forall("syrk blocked ≡ naive", 30, |rng| {
+        let d = 1 + rng.next_below(12) as usize;
+        for n in straddling_sizes(SYRK_ROW_TILE, rng) {
+            let mut x = Matrix::zeros(n, d);
+            for v in x.data.iter_mut() {
+                *v = if rng.next_bernoulli(0.1) {
+                    0.0
+                } else {
+                    rng.next_gaussian()
+                };
+            }
+            // weights of any sign, with exact zeros
+            let w: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.next_bernoulli(0.1) {
+                        0.0
+                    } else {
+                        rng.next_range_f64(-1.5, 1.5)
+                    }
+                })
+                .collect();
+            let mut naive = Matrix::zeros(d, d);
+            for i in 0..n {
+                naive.syr_upper(w[i], x.row(i));
+            }
+            let mut blocked = Matrix::zeros(d, d);
+            let mut scratch = Vec::new();
+            syrk_upper_blocked(&mut blocked, &x, &w, 0, n, &mut scratch);
+            assert_eq!(blocked.data, naive.data, "n={n} d={d}");
+        }
+    });
+}
+
+#[test]
+fn prop_local_stats_blocked_equals_reference_bitwise() {
+    forall("local_stats blocked ≡ reference", 20, |rng| {
+        let d = 2 + rng.next_below(8) as usize;
+        for n in straddling_sizes(SYRK_ROW_TILE, rng) {
+            let (x, y, beta) = random_shard(n, d, rng);
+            let reference = model::local_stats_reference(&x, &y, &beta);
+            let blocked = model::local_stats(&x, &y, &beta);
+            assert_eq!(blocked.h.data, reference.h.data, "H: n={n} d={d}");
+            assert_eq!(blocked.g, reference.g, "g: n={n} d={d}");
+            assert_eq!(blocked.dev, reference.dev, "dev: n={n} d={d}");
+            assert_eq!(blocked.n, reference.n);
+        }
+    });
+}
+
+#[test]
+fn prop_local_stats_multithreaded_matches_reference() {
+    forall("local_stats mt ≈ reference, deterministic", 8, |rng| {
+        let d = 2 + rng.next_below(6) as usize;
+        // big enough that the fan-out actually engages (≥ 4 tiles/worker)
+        let n = 8 * SYRK_ROW_TILE + 1 + rng.next_below(512) as usize;
+        let (x, y, beta) = random_shard(n, d, rng);
+        let reference = model::local_stats_reference(&x, &y, &beta);
+        for threads in [2usize, 4] {
+            let mut ws = Workspace::new(d, threads);
+            let mut got = LocalStats::zeros(d);
+            model::local_stats_into(&mut ws, &x, &y, &beta, &mut got);
+            assert!(
+                got.h.max_abs_diff(&reference.h) < 1e-9,
+                "threads={threads} n={n}"
+            );
+            for (a, b) in got.g.iter().zip(&reference.g) {
+                assert!((a - b).abs() < 1e-9);
+            }
+            assert!((got.dev - reference.dev).abs() < 1e-8);
+            // determinism: same partition, ordered merge
+            let mut again = LocalStats::zeros(d);
+            model::local_stats_into(&mut ws, &x, &y, &beta, &mut again);
+            assert_eq!(got.h.data, again.h.data);
+            assert_eq!(got.g, again.g);
+            assert_eq!(got.dev, again.dev);
+        }
+    });
+}
+
+#[test]
+fn prop_share_batch_vandermonde_equals_horner() {
+    forall("share_batch fast ≡ horner", 25, |rng| {
+        let w = 1 + rng.next_below(7) as usize; // 1..=7 holders
+        let t = 1 + rng.next_below(w as u64) as usize; // 1..=w
+        let params = ShamirParams::new(t, w).unwrap();
+        let table = VandermondeTable::new(params);
+        for k in [0usize, 1, 2, 63, 64, 65] {
+            let secrets: Vec<Fp> = (0..k).map(|_| Fp::random(rng)).collect();
+            let seed = rng.next_u64();
+            let mut r_fast = ChaCha20Rng::seed_from_u64(seed);
+            let mut r_slow = ChaCha20Rng::seed_from_u64(seed);
+            let fast = share_batch_with(&table, &secrets, &mut r_fast);
+            let slow = share_batch_horner(params, &secrets, &mut r_slow);
+            assert_eq!(fast.per_holder.len(), slow.per_holder.len());
+            for j in 0..w {
+                assert_eq!(
+                    fast.per_holder[j], slow.per_holder[j],
+                    "t={t} w={w} k={k} holder={j}"
+                );
+            }
+            // identical RNG stream consumption
+            assert_eq!(r_fast.next_u64(), r_slow.next_u64(), "stream diverged");
+            // and the default entry point uses the fast path unchanged
+            let mut r_pub = ChaCha20Rng::seed_from_u64(seed);
+            let via_default = share_batch(params, &secrets, &mut r_pub);
+            for j in 0..w {
+                assert_eq!(via_default.per_holder[j], slow.per_holder[j]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fast_shares_still_reconstruct() {
+    // End-to-end sanity on top of the equivalence: fast-path shares
+    // reconstruct through any t-quorum.
+    forall("fast shares reconstruct", 20, |rng| {
+        let w = 2 + rng.next_below(5) as usize;
+        let t = 1 + rng.next_below(w as u64) as usize;
+        let params = ShamirParams::new(t, w).unwrap();
+        let k = 1 + rng.next_below(40) as usize;
+        let secrets: Vec<Fp> = (0..k).map(|_| Fp::random(rng)).collect();
+        let mut crng = ChaCha20Rng::seed_from_u64(rng.next_u64());
+        let batch = share_batch(params, &secrets, &mut crng);
+        let mut holders: Vec<usize> = (0..w).collect();
+        rng.shuffle(&mut holders);
+        holders.truncate(t);
+        let quorum: Vec<(usize, &[Fp])> = holders
+            .iter()
+            .map(|&j| (j, batch.per_holder[j].as_slice()))
+            .collect();
+        assert_eq!(reconstruct_batch(params, &quorum).unwrap(), secrets);
+    });
+}

@@ -1,0 +1,228 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build set has no crates.io access, so this shim provides
+//! the (small) subset of the real crate's API that this repository
+//! uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match the real crate for that subset:
+//!
+//! * `Error` boxes any `std::error::Error + Send + Sync + 'static` and
+//!   deliberately does NOT implement `std::error::Error` itself, so the
+//!   blanket `From<E>` conversion and the reflexive `From<Error>` used
+//!   by `?` coexist — the same coherence trick the real crate relies on;
+//! * `{:#}` (alternate `Display`) prints the full source chain
+//!   colon-separated, `{:?}` prints the message plus a `Caused by:`
+//!   chain, matching how the rest of the crate formats fatal errors.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error with display/chain formatting.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// Build an error from a displayable message (what `anyhow!` does).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// The lowest-level source in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = &*self.0;
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur
+    }
+
+    /// Iterate the source chain, starting with the outermost error.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain {
+            next: Some(&*self.0),
+        }
+    }
+}
+
+/// Iterator over an error's source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)?;
+        if f.alternate() {
+            let mut src = self.0.source();
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut src = self.0.source();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = src {
+            write!(f, "\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl std::ops::Deref for Error {
+    type Target = dyn StdError + Send + Sync + 'static;
+    fn deref(&self) -> &Self::Target {
+        &*self.0
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Message-only error carrier behind [`Error::msg`].
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::core::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "inner boom")
+    }
+
+    #[test]
+    fn question_mark_converts_and_propagates() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        fn outer() -> Result<()> {
+            inner()?; // reflexive Error -> Error
+            Ok(())
+        }
+        let e = outer().unwrap_err();
+        assert!(e.to_string().contains("inner boom"));
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer")
+            }
+        }
+        impl StdError for Outer {
+            fn source(&self) -> Option<&(dyn StdError + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e = Error::new(Outer(io_err()));
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner boom");
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause().to_string(), "inner boom");
+    }
+}

@@ -1,13 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verify + kernel-equivalence gate.
+# Tier-1 verify + style gates + kernel/session-engine equivalence gates.
 #
-#   ./ci.sh            build + full test suite + explicit kernel gate
+#   ./ci.sh            build + style gates + full test suite + explicit gates
 #   PRIVLR_CI_BENCH=1 ./ci.sh   additionally runs the fast benches and
 #                               refreshes BENCH_kernels.json
 #
-# The kernel-equivalence property tests (tests/prop_kernels.rs) are run
-# by `cargo test` already; they are re-run by name afterwards so a
-# kernel regression fails loudly and legibly even in -q output.
+# The kernel-equivalence (tests/prop_kernels.rs) and session-engine
+# (tests/integration_sessions.rs) suites are run by `cargo test`
+# already; they are re-run by name afterwards so a regression in either
+# fails loudly and legibly even in -q output.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -25,9 +26,32 @@ cargo test -q
 echo "== kernel equivalence gate (blocked SYRK / Vandermonde sharing) =="
 cargo test -q --test prop_kernels
 
+echo "== session engine gate (concurrent == sequential, bitwise) =="
+cargo test -q --test integration_sessions
+cargo test -q --test prop_session_codec
+
+# Style gates run AFTER build/test on purpose: the repo has been
+# authored in toolchain-less containers, so the first real run must
+# surface compile/test results even if formatting needs a one-time
+# `cargo fmt` pass afterwards.
+echo "== style: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "SKIP: rustfmt component not installed"
+fi
+
+echo "== style: cargo clippy -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "SKIP: clippy component not installed"
+fi
+
 if [ "${PRIVLR_CI_BENCH:-0}" = "1" ]; then
     echo "== fast benches (refresh BENCH_kernels.json) =="
     PRIVLR_BENCH_FAST=1 cargo bench --bench micro_substrates
+    PRIVLR_BENCH_FAST=1 cargo bench --bench session_throughput
 fi
 
 echo "CI OK"

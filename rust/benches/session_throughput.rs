@@ -1,0 +1,98 @@
+//! Aggregate throughput of the session-multiplexed study engine:
+//! fits/sec at S=4 institutions for K ∈ {1, 4, 16} concurrent
+//! sessions, at the paper's small (d=10) and wide (d=85) dimensions.
+//!
+//!     cargo bench --bench session_throughput
+//!
+//! One persistent engine per (d, K) cell; each sample submits K
+//! identical studies and joins them all, so the measured time is the
+//! makespan of K interleaved fits on one network. The `speedup_vs_k1`
+//! column is the throughput ratio against the K=1 cell of the same d —
+//! how much the multiplexing amortizes network setup and fills compute
+//! gaps (centers idle while institutions crunch, and vice versa).
+
+use privlr::bench::{
+    default_report_path, print_kv_table, run_bench, summary_json, update_json_report, BenchConfig,
+    Summary,
+};
+use privlr::config::ExperimentConfig;
+use privlr::data::synthetic;
+use privlr::engine::StudyEngine;
+use privlr::util::json::{self, Json};
+
+fn main() {
+    let bcfg = BenchConfig::from_env();
+    let fast = std::env::var("PRIVLR_BENCH_FAST").as_deref() == Ok("1");
+    let s = 4usize;
+    let n = if fast { 2_000 } else { 20_000 };
+    let ks = [1usize, 4, 16];
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    for d in [10usize, 85] {
+        let ds = synthetic("bench", n, d, s, 0.0, 1.0, 42);
+        let cfg = ExperimentConfig {
+            max_iters: 30,
+            ..ExperimentConfig::default()
+        };
+        let mut k1_fits_per_sec = f64::NAN;
+        // Split once per dataset: sessions share the Arc'd shards, so
+        // the measured makespan is protocol work, not dataset copying.
+        let shards = privlr::session::ShardData::split(&ds);
+        for k in ks {
+            let engine = StudyEngine::for_experiment(&ds, &cfg).expect("engine");
+            let name = format!("multifit n={n} d={d} S={s} K={k}");
+            let summary: Summary = run_bench(&name, bcfg, || {
+                let handles: Vec<_> = (0..k)
+                    .map(|_| engine.submit_shared(&cfg, shards.clone()).expect("submit"))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("join").metrics.iterations)
+                    .sum::<u32>()
+            });
+            engine.shutdown().expect("shutdown");
+            let fits_per_sec = k as f64 / summary.mean_s;
+            if k == 1 {
+                k1_fits_per_sec = fits_per_sec;
+            }
+            let speedup = fits_per_sec / k1_fits_per_sec;
+            rows.push(vec![
+                format!("d={d}"),
+                format!("K={k}"),
+                format!("{:.3}s", summary.mean_s),
+                format!("{fits_per_sec:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut entry = summary_json(&summary);
+            if let Json::Obj(map) = &mut entry {
+                map.insert("concurrent_sessions".into(), json::num(k as f64));
+                map.insert("d".into(), json::num(d as f64));
+                map.insert("institutions".into(), json::num(s as f64));
+                map.insert("fits_per_sec".into(), json::num(fits_per_sec));
+                map.insert("speedup_vs_k1".into(), json::num(speedup));
+            }
+            entries.push(entry);
+        }
+    }
+
+    print_kv_table(
+        "session engine throughput (S=4)",
+        &["dim", "sessions", "makespan", "fits/sec", "vs K=1"],
+        &rows,
+    );
+
+    let report = json::obj(vec![
+        (
+            "note",
+            json::s("fits/sec of K concurrent sessions on one persistent network (makespan of K joined submissions, mean over samples)"),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    let path = default_report_path();
+    if let Err(e) = update_json_report(&path, "session_throughput", report) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("\nreport section 'session_throughput' written to {}", path.display());
+    }
+}

@@ -1,173 +1,261 @@
-//! Computation-center node.
+//! Computation-center node: a persistent, session-multiplexed worker.
 //!
-//! A center is one of the w independent share holders. Per iteration
-//! it folds each institution's submission into a streaming
+//! A center is one of the w independent share holders. It serves every
+//! active study session at once: per `(session, iteration)` it folds
+//! each institution's submission into a streaming
 //! [`SecureAccumulator`] (secure addition — Algorithm 2), and when the
 //! coordinator requests the aggregate after all S institutions have
-//! submitted, it answers with its share of the GLOBAL sums. It never
-//! holds, sees, or transmits a reconstructable view of any single
-//! institution's summaries — that is the whole point of the scheme,
-//! and `attack::below_threshold_views_are_uniform` verifies it.
+//! submitted, it answers with its share of the GLOBAL sums, tagged
+//! with the session id. It never holds, sees, or transmits a
+//! reconstructable view of any single institution's summaries — that
+//! is the whole point of the scheme, and
+//! `attack::below_threshold_views_are_uniform` verifies it.
+//!
+//! Share-domain folds (gradient, deviance, full-mode Hessian) are
+//! exact field additions, so arrival order cannot change the result.
+//! The pragmatic-mode plaintext Hessian is f64, where summation order
+//! DOES move the last ulp — so the lead center buffers plaintext
+//! contributions and folds them in institution-id order at response
+//! time. That makes every aggregate, and therefore every fitted β,
+//! bit-identical regardless of how submissions interleave — the
+//! property the session engine's concurrent-equals-sequential
+//! guarantee rests on.
 
-use crate::protocol::{HessianPayload, Message, NodeId};
+use crate::protocol::{HessianPayload, Message, NodeId, SessionId};
 use crate::secure::SecureAccumulator;
+use crate::session::SessionRegistry;
 use crate::transport::Endpoint;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Static parameters a center needs.
-#[derive(Clone, Debug)]
-pub struct CenterConfig {
+/// Everything a persistent center worker needs.
+pub struct CenterWorkerConfig {
     pub center_id: u16,
-    /// Model dimension d.
-    pub d: usize,
-    /// Packed Hessian length d(d+1)/2.
-    pub packed_h: usize,
-    /// Full-security mode (Hessian also arrives as shares).
-    pub full_security: bool,
-    /// Out-of-band telemetry: nanoseconds this center spent doing
-    /// secure-aggregation work (folds + response assembly). Feeds the
-    /// paper's "central runtime" metric; not part of the protocol.
-    pub busy_ns: Arc<AtomicU64>,
+    /// Session lookup: dimension, mode, busy-telemetry cells.
+    pub registry: Arc<SessionRegistry>,
 }
 
-impl CenterConfig {
-    pub fn new(center_id: u16, d: usize, full_security: bool) -> Self {
-        Self {
-            center_id,
-            d,
-            packed_h: d * (d + 1) / 2,
-            full_security,
-            busy_ns: Arc::new(AtomicU64::new(0)),
-        }
-    }
-}
-
-/// Per-iteration center state.
+/// Per-iteration aggregation state within one session.
 struct IterState {
     acc: SecureAccumulator,
+    /// Pragmatic-mode lead center only: plaintext Hessian contributions
+    /// buffered per institution, folded in id order at response time
+    /// (f64 addition is order-sensitive; share folds above are not).
+    h_plain_pending: Vec<(u16, Vec<f64>)>,
     /// Pending aggregate request: expected submission count.
     pending_request: Option<u16>,
 }
 
-/// Run the center event loop until `Shutdown`.
+/// Per-session center state.
+struct CenterSession {
+    d: usize,
+    packed_h: usize,
+    full_security: bool,
+    /// This session's secure-aggregation busy counter for this center.
+    busy_ns: Arc<AtomicU64>,
+    iters: HashMap<u32, IterState>,
+}
+
+/// A blank per-iteration state. The share-domain accumulator carries
+/// the pragmatic plaintext Hessian in `h_plain_pending` instead, so
+/// `packed_h` matters only in full mode.
+fn fresh_iter_state(d: usize, packed_h: usize, full_security: bool) -> IterState {
+    IterState {
+        acc: SecureAccumulator::new(d, if full_security { packed_h } else { 0 }, full_security),
+        h_plain_pending: Vec::new(),
+        pending_request: None,
+    }
+}
+
+/// Run the persistent center event loop until `Shutdown`.
 ///
-/// Owns its endpoint; spawn on a dedicated thread. Fatal errors are
-/// reported to the coordinator before returning.
-pub fn run_center(cfg: CenterConfig, ep: Endpoint) -> anyhow::Result<()> {
-    let id = cfg.center_id;
-    match run_center_inner(cfg, &ep) {
-        Ok(()) => Ok(()),
-        Err(e) => {
-            let _ = ep.send(
-                NodeId::Coordinator,
-                &Message::NodeError {
-                    node: id,
-                    is_center: true,
-                    error: format!("{e:#}"),
-                },
-            );
-            Err(e)
+/// Owns its endpoint; spawn on a dedicated thread. Per-session errors
+/// are reported to the coordinator as session-tagged `NodeError`s and
+/// tear down only that session's state.
+pub fn run_center_worker(cfg: CenterWorkerConfig, ep: Endpoint) -> anyhow::Result<()> {
+    let mut sessions: HashMap<SessionId, CenterSession> = HashMap::new();
+    loop {
+        let (from, session, msg) = ep.recv_session()?;
+        match msg {
+            Message::Shutdown => return Ok(()),
+            Message::Finished { .. } => {
+                sessions.remove(&session);
+            }
+            other => {
+                if let Err(e) = handle_message(&cfg, &ep, &mut sessions, session, from, other) {
+                    sessions.remove(&session);
+                    let _ = ep.send_session(
+                        NodeId::Coordinator,
+                        session,
+                        &Message::NodeError {
+                            node: cfg.center_id,
+                            is_center: true,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                }
+            }
         }
     }
 }
 
-fn run_center_inner(cfg: CenterConfig, ep: &Endpoint) -> anyhow::Result<()> {
-    let mut iters: HashMap<u32, IterState> = HashMap::new();
-    loop {
-        let (from, msg) = ep.recv()?;
-        match msg {
-            Message::ShareSubmission {
-                iter,
-                institution: _,
-                hessian,
-                g_share,
-                dev_share,
-            } => {
-                anyhow::ensure!(
-                    matches!(from, NodeId::Institution(_)),
-                    "submission from non-institution {from}"
-                );
-                let st = iters.entry(iter).or_insert_with(|| IterState {
-                    acc: SecureAccumulator::new(cfg.d, cfg.packed_h, cfg.full_security),
-                    pending_request: None,
-                });
-                let t = std::time::Instant::now();
-                st.acc.fold(&g_share, dev_share, &hessian)?;
-                maybe_respond(&cfg, &ep, iter, st)?;
-                cfg.busy_ns
-                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                if iters
-                    .get(&iter)
-                    .map(|s| s.pending_request.is_none() && s.acc.count == 0)
-                    .unwrap_or(false)
-                {
-                    iters.remove(&iter);
-                }
-            }
-            Message::AggregateRequest { iter, expected } => {
-                anyhow::ensure!(
-                    from == NodeId::Coordinator,
-                    "aggregate request from non-coordinator {from}"
-                );
-                let st = iters.entry(iter).or_insert_with(|| IterState {
-                    acc: SecureAccumulator::new(cfg.d, cfg.packed_h, cfg.full_security),
-                    pending_request: None,
-                });
-                st.pending_request = Some(expected);
-                let t = std::time::Instant::now();
-                maybe_respond(&cfg, &ep, iter, st)?;
-                cfg.busy_ns
-                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            }
-            Message::Finished { iter, .. } => {
-                // Convergence: drop any state at or before this iteration.
-                iters.retain(|&k, _| k > iter);
-            }
-            Message::Shutdown => return Ok(()),
-            other => anyhow::bail!("center {} got unexpected {}", cfg.center_id, other.kind()),
-        }
-        // Garbage-collect answered iterations.
-        iters.retain(|_, st| st.pending_request.is_some() || st.acc.count > 0);
+fn handle_message(
+    cfg: &CenterWorkerConfig,
+    ep: &Endpoint,
+    sessions: &mut HashMap<SessionId, CenterSession>,
+    session: SessionId,
+    from: NodeId,
+    msg: Message,
+) -> anyhow::Result<()> {
+    // Lazily open the session from the registry.
+    if !sessions.contains_key(&session) {
+        let spec = cfg
+            .registry
+            .get(session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        anyhow::ensure!(
+            (cfg.center_id as usize) < spec.num_centers(),
+            "center {} not part of session {session}",
+            cfg.center_id
+        );
+        let d = spec.d();
+        sessions.insert(
+            session,
+            CenterSession {
+                d,
+                packed_h: d * (d + 1) / 2,
+                full_security: spec.full_security,
+                busy_ns: spec.center_busy_ns[cfg.center_id as usize].clone(),
+                iters: HashMap::new(),
+            },
+        );
     }
+    let cs = sessions.get_mut(&session).unwrap();
+
+    match msg {
+        Message::ShareSubmission {
+            iter,
+            institution,
+            hessian,
+            g_share,
+            dev_share,
+        } => {
+            anyhow::ensure!(
+                matches!(from, NodeId::Institution(_)),
+                "submission from non-institution {from}"
+            );
+            let (d, packed_h, full) = (cs.d, cs.packed_h, cs.full_security);
+            let st = cs
+                .iters
+                .entry(iter)
+                .or_insert_with(|| fresh_iter_state(d, packed_h, full));
+            // Busy time is recorded BEFORE any send: the response's
+            // arrival at the driver is what ends a round, so counter
+            // updates must happen-before it for the per-session
+            // metrics read at session completion to be complete.
+            let t = std::time::Instant::now();
+            match hessian {
+                HessianPayload::Plain(h) => {
+                    anyhow::ensure!(!full, "plaintext hessian in full mode");
+                    anyhow::ensure!(h.len() == packed_h, "hessian length mismatch");
+                    st.h_plain_pending.push((institution, h));
+                    st.acc.fold(&g_share, dev_share, &HessianPayload::Absent)?;
+                }
+                other => st.acc.fold(&g_share, dev_share, &other)?,
+            }
+            cs.busy_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            maybe_respond(cfg, ep, session, cs, iter)?;
+        }
+        Message::AggregateRequest { iter, expected } => {
+            anyhow::ensure!(
+                from == NodeId::Coordinator,
+                "aggregate request from non-coordinator {from}"
+            );
+            let (d, packed_h, full) = (cs.d, cs.packed_h, cs.full_security);
+            let st = cs
+                .iters
+                .entry(iter)
+                .or_insert_with(|| fresh_iter_state(d, packed_h, full));
+            st.pending_request = Some(expected);
+            maybe_respond(cfg, ep, session, cs, iter)?;
+        }
+        other => anyhow::bail!("center {} got unexpected {}", cfg.center_id, other.kind()),
+    }
+    // Garbage-collect answered iterations of this session.
+    cs.iters
+        .retain(|_, st| st.pending_request.is_some() || st.acc.count > 0);
+    Ok(())
 }
 
 /// If an aggregate request is pending and all submissions arrived,
 /// reply with this center's share of the global sums and clear state.
+/// Response-assembly time lands on the busy counter BEFORE the send,
+/// so the driver's completion-time metrics read observes it.
 fn maybe_respond(
-    cfg: &CenterConfig,
-    ep: &&Endpoint,
+    cfg: &CenterWorkerConfig,
+    ep: &Endpoint,
+    session: SessionId,
+    cs: &mut CenterSession,
     iter: u32,
-    st: &mut IterState,
 ) -> anyhow::Result<()> {
+    let (d, packed_h, full) = (cs.d, cs.packed_h, cs.full_security);
+    let Some(st) = cs.iters.get_mut(&iter) else {
+        return Ok(());
+    };
     let Some(expected) = st.pending_request else {
         return Ok(());
     };
     if st.acc.count < expected as usize {
         return Ok(());
     }
-    let hessian = if cfg.full_security {
+    let t = std::time::Instant::now();
+    let hessian = if full {
         HessianPayload::Shared(st.acc.h_shared.clone().unwrap())
     } else if cfg.center_id == 0 {
-        // Pragmatic mode: only the lead center carries the plaintext H.
-        HessianPayload::Plain(st.acc.h_plain.clone().unwrap())
+        // Pragmatic mode: only the lead center carries the plaintext H,
+        // summed in institution-id order for bit-determinism. Every
+        // expected institution must have contributed exactly one
+        // plaintext Hessian — an Absent-to-the-lead or duplicate
+        // submission would otherwise yield a silently wrong aggregate.
+        let mut pending = std::mem::take(&mut st.h_plain_pending);
+        anyhow::ensure!(
+            pending.len() == expected as usize,
+            "lead center got {} plaintext hessians for {} expected submissions",
+            pending.len(),
+            expected
+        );
+        pending.sort_by_key(|(j, _)| *j);
+        anyhow::ensure!(
+            pending.windows(2).all(|w| w[0].0 != w[1].0),
+            "duplicate plaintext hessian submission"
+        );
+        let mut h_sum = vec![0.0; packed_h];
+        for (_, h) in &pending {
+            for (a, b) in h_sum.iter_mut().zip(h) {
+                *a += b;
+            }
+        }
+        HessianPayload::Plain(h_sum)
     } else {
         HessianPayload::Absent
     };
-    ep.send(
-        NodeId::Coordinator,
-        &Message::AggregateResponse {
-            iter,
-            center: cfg.center_id,
-            hessian,
-            g_share: st.acc.g.clone(),
-            dev_share: st.acc.dev,
-        },
-    )?;
-    // Reset so the retain() in the loop drops this iteration.
-    st.pending_request = None;
-    st.acc = SecureAccumulator::new(cfg.d, cfg.packed_h, cfg.full_security);
+    let response = Message::AggregateResponse {
+        iter,
+        center: cfg.center_id,
+        hessian,
+        g_share: st.acc.g.clone(),
+        dev_share: st.acc.dev,
+    };
+    cs.busy_ns
+        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    ep.send_session(NodeId::Coordinator, session, &response)?;
+    // Reset so the retain() in the handler drops this iteration.
+    let Some(st) = cs.iters.get_mut(&iter) else {
+        return Ok(());
+    };
+    *st = fresh_iter_state(d, packed_h, full);
     Ok(())
 }
 
@@ -176,9 +264,41 @@ mod tests {
     use super::*;
     use crate::field::Fp;
     use crate::fixed::FixedCodec;
+    use crate::linalg::Matrix;
+    use crate::session::{SessionSpec, ShardData};
     use crate::shamir::ShamirParams;
     use crate::transport::Network;
     use crate::util::rng::ChaCha20Rng;
+
+    /// A spec whose shard shapes define (s, d); data content is unused
+    /// by centers.
+    fn make_spec(session: SessionId, s: usize, d: usize, t: usize, w: usize, full: bool) -> Arc<SessionSpec> {
+        let shards = (0..s)
+            .map(|_| {
+                Arc::new(ShardData {
+                    x: Matrix::zeros(4, d),
+                    y: vec![0.0; 4],
+                })
+            })
+            .collect();
+        Arc::new(SessionSpec::new(
+            session,
+            shards,
+            ShamirParams::new(t, w).unwrap(),
+            FixedCodec::default(),
+            full,
+            1,
+            7,
+        ))
+    }
+
+    fn registry_with(specs: Vec<Arc<SessionSpec>>) -> Arc<SessionRegistry> {
+        let reg = SessionRegistry::new();
+        for s in specs {
+            reg.insert(s);
+        }
+        reg
+    }
 
     /// Drive one center thread through a full aggregate round.
     #[test]
@@ -188,8 +308,9 @@ mod tests {
         let inst0 = net.register(NodeId::Institution(0));
         let inst1 = net.register(NodeId::Institution(1));
         let cep = net.register(NodeId::Center(0));
-        let cfg = CenterConfig::new(0, 2, false);
-        let th = std::thread::spawn(move || run_center(cfg, cep).unwrap());
+        let registry = registry_with(vec![make_spec(1, 2, 2, 1, 1, false)]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
 
         let params = ShamirParams::new(1, 1).unwrap(); // single-holder degenerate scheme
         let codec = FixedCodec::default();
@@ -206,8 +327,9 @@ mod tests {
                 crate::secure::share_local_stats(params, &codec, &g, dev, &h, false, &mut rng)
                     .unwrap();
             let ep = if j == 0 { &inst0 } else { &inst1 };
-            ep.send(
+            ep.send_session(
                 NodeId::Center(0),
+                1,
                 &Message::ShareSubmission {
                     iter: 0,
                     institution: j as u16,
@@ -219,9 +341,10 @@ mod tests {
             .unwrap();
         }
         coord
-            .send(NodeId::Center(0), &Message::AggregateRequest { iter: 0, expected: 2 })
+            .send_session(NodeId::Center(0), 1, &Message::AggregateRequest { iter: 0, expected: 2 })
             .unwrap();
-        let (_, resp) = coord.recv().unwrap();
+        let (_, session, resp) = coord.recv_session().unwrap();
+        assert_eq!(session, 1);
         match resp {
             Message::AggregateResponse {
                 iter,
@@ -256,28 +379,30 @@ mod tests {
         let coord = net.register(NodeId::Coordinator);
         let inst = net.register(NodeId::Institution(0));
         let cep = net.register(NodeId::Center(1));
-        let cfg = CenterConfig::new(1, 1, false);
-        let th = std::thread::spawn(move || run_center(cfg, cep).unwrap());
+        let registry = registry_with(vec![make_spec(3, 1, 1, 1, 2, false)]);
+        let cfg = CenterWorkerConfig { center_id: 1, registry };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         coord
-            .send(NodeId::Center(1), &Message::AggregateRequest { iter: 0, expected: 1 })
+            .send_session(NodeId::Center(1), 3, &Message::AggregateRequest { iter: 0, expected: 1 })
             .unwrap();
         // No response yet.
         assert!(coord
             .recv_timeout(std::time::Duration::from_millis(50))
             .unwrap()
             .is_none());
-        inst.send(
+        inst.send_session(
             NodeId::Center(1),
+            3,
             &Message::ShareSubmission {
                 iter: 0,
                 institution: 0,
-                hessian: HessianPayload::Plain(vec![1.0]),
+                hessian: HessianPayload::Absent,
                 g_share: vec![Fp::new(1)],
                 dev_share: Fp::new(2),
             },
         )
         .unwrap();
-        let (_, resp) = coord.recv().unwrap();
+        let (_, _, resp) = coord.recv_session().unwrap();
         assert!(matches!(resp, Message::AggregateResponse { .. }));
         coord.send(NodeId::Center(1), &Message::Shutdown).unwrap();
         th.join().unwrap();
@@ -289,13 +414,14 @@ mod tests {
         let net = Network::new();
         let coord = net.register(NodeId::Coordinator);
         let inst = net.register(NodeId::Institution(0));
-        // center 0 (the lead) so pragmatic-mode responses carry Plain H
-        let cep = net.register(NodeId::Center(2));
-        let cfg = CenterConfig::new(0, 1, false);
-        let th = std::thread::spawn(move || run_center(cfg, cep).unwrap());
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![make_spec(2, 1, 1, 1, 1, false)]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         for (iter, v) in [(0u32, 10.0f64), (1, 20.0)] {
-            inst.send(
-                NodeId::Center(2),
+            inst.send_session(
+                NodeId::Center(0),
+                2,
                 &Message::ShareSubmission {
                     iter,
                     institution: 0,
@@ -307,9 +433,9 @@ mod tests {
             .unwrap();
         }
         coord
-            .send(NodeId::Center(2), &Message::AggregateRequest { iter: 1, expected: 1 })
+            .send_session(NodeId::Center(0), 2, &Message::AggregateRequest { iter: 1, expected: 1 })
             .unwrap();
-        let (_, resp) = coord.recv().unwrap();
+        let (_, _, resp) = coord.recv_session().unwrap();
         match resp {
             Message::AggregateResponse { iter, hessian, .. } => {
                 assert_eq!(iter, 1);
@@ -317,7 +443,129 @@ mod tests {
             }
             _ => panic!(),
         }
-        coord.send(NodeId::Center(2), &Message::Shutdown).unwrap();
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Concurrent sessions aggregate independently on one center, and
+    /// the plaintext Hessian folds in institution order regardless of
+    /// arrival order.
+    #[test]
+    fn sessions_are_isolated_and_plain_fold_is_ordered() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let insts: Vec<_> = (0..3).map(|j| net.register(NodeId::Institution(j))).collect();
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![
+            make_spec(10, 3, 1, 1, 1, false),
+            make_spec(11, 3, 1, 1, 1, false),
+        ]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        // Values where summation ORDER moves the f64 result: with three
+        // addends, (1 + 1) + 1e16 = 1e16 + 2, but the institution-id
+        // order (1e16 + 1) + 1 = 1e16 (each +1 rounds away). Submit in
+        // arrival order 1, 2, 0 — the ordered fold must still produce
+        // the institution-order sum, identically in both sessions.
+        let vals = [1.0e16, 1.0, 1.0]; // per institution id
+        let ordered_sum = (vals[0] + vals[1]) + vals[2]; // = 1e16
+        let arrival_sum = (vals[1] + vals[2]) + vals[0]; // = 1e16 + 2
+        assert_ne!(ordered_sum, arrival_sum, "values must expose ordering");
+        for session in [10u32, 11] {
+            for j in [1u16, 2, 0] {
+                insts[j as usize]
+                    .send_session(
+                        NodeId::Center(0),
+                        session,
+                        &Message::ShareSubmission {
+                            iter: 0,
+                            institution: j,
+                            hessian: HessianPayload::Plain(vec![vals[j as usize]]),
+                            g_share: vec![Fp::new((j + 1) as u64 * session as u64)],
+                            dev_share: Fp::new(1),
+                        },
+                    )
+                    .unwrap();
+            }
+        }
+        for session in [10u32, 11] {
+            coord
+                .send_session(
+                    NodeId::Center(0),
+                    session,
+                    &Message::AggregateRequest { iter: 0, expected: 3 },
+                )
+                .unwrap();
+        }
+        let mut seen = HashMap::new();
+        for _ in 0..2 {
+            let (_, session, resp) = coord.recv_session().unwrap();
+            match resp {
+                Message::AggregateResponse { hessian, g_share, .. } => {
+                    seen.insert(session, (hessian, g_share));
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        for session in [10u32, 11] {
+            let (h, g) = &seen[&session];
+            assert_eq!(
+                *h,
+                HessianPayload::Plain(vec![ordered_sum]),
+                "session {session}: fold must follow institution order"
+            );
+            // g folded per session: (1 + 2 + 3)·session in the field.
+            assert_eq!(g[0], Fp::new(6 * session as u64));
+        }
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Malformed submissions abort the session (NodeError), not the
+    /// worker.
+    #[test]
+    fn malformed_submission_reports_node_error() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![make_spec(5, 1, 4, 1, 1, false)]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        // gradient share has d=2, session expects d=4
+        inst.send_session(
+            NodeId::Center(0),
+            5,
+            &Message::ShareSubmission {
+                iter: 0,
+                institution: 0,
+                hessian: HessianPayload::Plain(vec![0.0; 10]),
+                g_share: vec![Fp::ZERO; 2],
+                dev_share: Fp::ZERO,
+            },
+        )
+        .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 5);
+        assert!(matches!(msg, Message::NodeError { node: 0, is_center: true, .. }));
+        // Unknown session likewise.
+        inst.send_session(
+            NodeId::Center(0),
+            99,
+            &Message::ShareSubmission {
+                iter: 0,
+                institution: 0,
+                hessian: HessianPayload::Absent,
+                g_share: vec![],
+                dev_share: Fp::ZERO,
+            },
+        )
+        .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 99);
+        assert!(matches!(msg, Message::NodeError { .. }));
+        // Worker still alive.
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }
 }

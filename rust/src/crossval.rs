@@ -17,17 +17,28 @@
 //!    are exactly the `dev_j` statistic the protocol already protects);
 //! 4. the λ with the lowest mean held-out deviance wins.
 //!
-//! Implementation note: step 2/3 reuse [`coordinator::secure_fit`] on
-//! fold-filtered datasets, so every message of the CV procedure is the
-//! standard protected protocol — nothing new crosses the network in
-//! plaintext.
+//! Implementation note: steps 2/3 run the k fold-fits for each λ as
+//! **k concurrent sessions on one persistent
+//! [`StudyEngine`](crate::engine::StudyEngine)** — the fold-filtered
+//! training views are per-session local data (the fold pattern is an
+//! agreed row-index rule each institution applies to its own shard),
+//! so every message of the CV procedure is the standard protected
+//! protocol — nothing new crosses the network in plaintext, and the
+//! network/worker setup is paid once for the whole λ-grid search
+//! instead of once per fit.
+//!
+//! Determinism: fold patterns and per-session share randomness derive
+//! from `(master seed, stream)` splitmix forks
+//! ([`crate::util::rng::derive_seed`]) with no shared mutable RNG
+//! state, so the concurrent fold fits are bit-identical to running the
+//! folds one at a time.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::secure_fit;
 use crate::data::{Dataset, Shard};
+use crate::engine::StudyEngine;
 use crate::linalg::Matrix;
 use crate::model::{local_stats, log_sigmoid};
-use crate::util::rng::{Rng, SplitMix64};
+use crate::util::rng::{derive_seed, Rng, SplitMix64};
 
 /// Result of a λ search.
 #[derive(Clone, Debug)]
@@ -46,6 +57,17 @@ impl CvResult {
     pub fn best_lambda(&self) -> f64 {
         self.lambdas[self.best]
     }
+}
+
+/// Stream tag separating fold-pattern randomness from every other use
+/// of the master seed (share polynomials, data synthesis, …).
+const FOLD_STREAM: u64 = 0xF01D;
+
+/// Seed for institution `j`'s fold pattern: a pure splitmix fork of
+/// `(master seed, institution)` — no shared mutable state, so any
+/// fold/session subset reproduces the same pattern in any order.
+fn fold_seed(master_seed: u64, institution: usize) -> u64 {
+    derive_seed(master_seed, FOLD_STREAM + institution as u64)
 }
 
 /// Deterministic per-institution fold assignment: record `i` of a
@@ -115,7 +137,9 @@ fn holdout_deviance(ds: &Dataset, folds: &[Vec<usize>], f: usize, beta: &[f64]) 
 /// k-fold secure cross-validation over a λ grid.
 ///
 /// Runs `k × lambdas.len()` secure fits plus one final fit at the
-/// winning λ. The fold split is per-institution (records never move).
+/// winning λ, all on ONE persistent study engine: for each λ the k
+/// fold-fits run as k concurrent sessions sharing the network. The
+/// fold split is per-institution (records never move).
 pub fn secure_cross_validate(
     ds: &Dataset,
     base_cfg: &ExperimentConfig,
@@ -131,20 +155,32 @@ pub fn secure_cross_validate(
             shard.len()
         );
     }
-    // Per-institution fold patterns (local decisions, seeded).
+    // Per-institution fold patterns: pure functions of (master seed,
+    // institution) — see `fold_seed`.
     let folds: Vec<Vec<usize>> = (0..ds.num_institutions())
-        .map(|j| fold_assignment(ds.shards[j].len(), k, base_cfg.seed ^ (0xF01D + j as u64)))
+        .map(|j| fold_assignment(ds.shards[j].len(), k, fold_seed(base_cfg.seed, j)))
         .collect();
 
+    let engine = StudyEngine::for_experiment(ds, base_cfg)?;
+    // Materialize each fold's training view ONCE and share its Arc'd
+    // shards across the whole λ grid (zero-copy submissions) — the
+    // per-λ work is then purely protocol, not dataset rebuilding.
+    let fold_shards: Vec<Vec<std::sync::Arc<crate::session::ShardData>>> = (0..k)
+        .map(|f| crate::session::ShardData::split(&training_view(ds, &folds, f)))
+        .collect();
     let mut cv_dev = vec![0.0; lambdas.len()];
-    for f in 0..k {
-        let train = training_view(ds, &folds, f);
-        for (li, &lambda) in lambdas.iter().enumerate() {
-            let cfg = ExperimentConfig {
-                lambda,
-                ..base_cfg.clone()
-            };
-            let fit = secure_fit(&train, &cfg)?;
+    for (li, &lambda) in lambdas.iter().enumerate() {
+        let cfg = ExperimentConfig {
+            lambda,
+            ..base_cfg.clone()
+        };
+        // k folds as k concurrent sessions over the shared network.
+        let mut handles = Vec::with_capacity(k);
+        for (f, shards) in fold_shards.iter().enumerate() {
+            handles.push((f, engine.submit_shared(&cfg, shards.clone())?));
+        }
+        for (f, handle) in handles {
+            let fit = handle.join()?;
             cv_dev[li] += holdout_deviance(ds, &folds, f, &fit.beta);
         }
     }
@@ -157,12 +193,13 @@ pub fn secure_cross_validate(
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap();
-    // Final fit on all data at the winning λ.
+    // Final fit on all data at the winning λ, on the same network.
     let cfg = ExperimentConfig {
         lambda: lambdas[best],
         ..base_cfg.clone()
     };
-    let fit = secure_fit(ds, &cfg)?;
+    let fit = engine.submit(&cfg, ds)?.join()?;
+    engine.shutdown()?;
     Ok(CvResult {
         lambdas: lambdas.to_vec(),
         cv_deviance: cv_dev,
@@ -182,7 +219,7 @@ pub fn centralized_cross_validate(
     k: usize,
 ) -> anyhow::Result<CvResult> {
     let folds: Vec<Vec<usize>> = (0..ds.num_institutions())
-        .map(|j| fold_assignment(ds.shards[j].len(), k, seed ^ (0xF01D + j as u64)))
+        .map(|j| fold_assignment(ds.shards[j].len(), k, fold_seed(seed, j)))
         .collect();
     let mut cv_dev = vec![0.0; lambdas.len()];
     for f in 0..k {
@@ -253,6 +290,30 @@ mod tests {
         // shards stay contiguous and cover the training rows
         let covered: usize = train.shards.iter().map(|s| s.len()).sum();
         assert_eq!(covered, train.n());
+    }
+
+    #[test]
+    fn fold_seeds_are_deterministic_without_shared_state() {
+        // Fold patterns are pure functions of (master seed, institution):
+        // evaluating institutions in any order — or any subset — yields
+        // the same assignment, which is what lets k folds run as k
+        // concurrent sessions without a shared mutable RNG.
+        let forward: Vec<Vec<usize>> = (0..4)
+            .map(|j| fold_assignment(97, 5, fold_seed(42, j)))
+            .collect();
+        let mut backward: Vec<Vec<usize>> = (0..4)
+            .rev()
+            .map(|j| fold_assignment(97, 5, fold_seed(42, j)))
+            .collect();
+        backward.reverse();
+        assert_eq!(forward, backward);
+        // Distinct institutions get distinct patterns; distinct master
+        // seeds reshuffle.
+        assert_ne!(forward[0], forward[1]);
+        assert_ne!(
+            fold_assignment(97, 5, fold_seed(42, 0)),
+            fold_assignment(97, 5, fold_seed(43, 0))
+        );
     }
 
     #[test]

@@ -1,0 +1,629 @@
+//! The session-multiplexed study engine: one persistent network
+//! serving many concurrent regularized-LR fits.
+//!
+//! The paper's deployment story is a standing research consortium —
+//! the same institutions and computation centers serve many studies
+//! (GWAS phenotypes, epi cohorts, CV folds). [`StudyEngine`] builds
+//! that topology ONCE: every institution and center runs as a
+//! persistent worker thread, and a coordinator *driver* thread
+//! interleaves K in-flight Newton fits, each owned by a
+//! [`SessionState`](crate::session::SessionState) machine keyed by the
+//! frame's session id. Studies are submitted with
+//! [`StudyEngine::submit`] and joined through the returned
+//! [`StudyHandle`].
+//!
+//! Determinism: results of concurrent fits are **bit-identical** to
+//! the same fits run sequentially. Share-domain aggregation is exact
+//! field arithmetic (order-free); the only order-sensitive f64 fold —
+//! the pragmatic-mode plaintext Hessian — is buffered and summed in
+//! institution-id order at the centers; and all per-session randomness
+//! derives from `(master seed, session id)` splitmix forks, never from
+//! shared mutable state. The integration suite asserts the guarantee
+//! end to end.
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::coordinator::{RunMetrics, SecureFitResult};
+use crate::data::Dataset;
+use crate::fixed::FixedCodec;
+use crate::protocol::{Message, NodeId, SessionId};
+use crate::runtime::{ComputeHandle, ComputeServiceGuard};
+use crate::session::{
+    SessionOutcome, SessionRegistry, SessionSpec, SessionState, SessionStep, ShardData,
+};
+use crate::shamir::ShamirParams;
+use crate::transport::{Endpoint, Network, TrafficSnapshot};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A submitted-but-not-yet-started study, queued to the driver.
+struct PendingStudy {
+    spec: Arc<SessionSpec>,
+    mode: crate::config::SecurityMode,
+    lambda: f64,
+    tol: f64,
+    max_iters: usize,
+    result_tx: Sender<anyhow::Result<SecureFitResult>>,
+}
+
+/// Joinable handle to one submitted study session.
+pub struct StudyHandle {
+    session: SessionId,
+    rx: Receiver<anyhow::Result<SecureFitResult>>,
+}
+
+impl StudyHandle {
+    pub fn session_id(&self) -> SessionId {
+        self.session
+    }
+
+    /// Block until the fit completes; its metrics carry per-session
+    /// timing and traffic attribution.
+    pub fn join(self) -> anyhow::Result<SecureFitResult> {
+        self.rx.recv().map_err(|_| {
+            anyhow::anyhow!(
+                "study engine terminated before session {} completed",
+                self.session
+            )
+        })?
+    }
+}
+
+/// Persistent study network: S institution workers, W center workers,
+/// one coordinator driver, multiplexing concurrent fit sessions.
+pub struct StudyEngine {
+    net: Arc<Network>,
+    registry: Arc<SessionRegistry>,
+    submit_tx: Option<Sender<PendingStudy>>,
+    driver: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+    workers: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+    next_session: AtomicU32,
+    institutions: usize,
+    centers: usize,
+    compute: ComputeHandle,
+    _compute_guard: Option<ComputeServiceGuard>,
+}
+
+impl StudyEngine {
+    /// Build a persistent network with the pure-rust compute engine.
+    pub fn new(institutions: usize, centers: usize) -> anyhow::Result<StudyEngine> {
+        StudyEngine::with_compute(institutions, centers, ComputeHandle::rust(), None)
+    }
+
+    /// Build a persistent network sized for `ds`'s institutions with
+    /// the compute engine `cfg` selects (the same PJRT/auto/rust logic
+    /// the single-fit path always used).
+    pub fn for_experiment(ds: &Dataset, cfg: &ExperimentConfig) -> anyhow::Result<StudyEngine> {
+        cfg.validate()?;
+        let artifacts_dir = std::path::Path::new(&cfg.artifacts_dir);
+        let max_shard = ds.shards.iter().map(|sh| sh.len()).max().unwrap_or(0);
+        let d = ds.d();
+        // Auto only selects PJRT when the manifest actually has a bucket
+        // covering this dataset's (max shard rows, d) — otherwise
+        // institutions would fail at the first broadcast.
+        let (compute, guard) = match cfg.engine {
+            EngineKind::Rust => (ComputeHandle::rust(), None),
+            EngineKind::Pjrt => {
+                let workers = if cfg.pjrt_workers == 0 {
+                    crate::runtime::default_pjrt_workers()
+                } else {
+                    cfg.pjrt_workers
+                };
+                let (h, g) = ComputeHandle::pjrt_pool(artifacts_dir, workers)?;
+                (h, Some(g))
+            }
+            EngineKind::Auto => {
+                let covered = crate::runtime::Manifest::load(artifacts_dir)
+                    .map(|m| m.bucket_for(max_shard, d).is_some())
+                    .unwrap_or(false);
+                if covered {
+                    ComputeHandle::auto(artifacts_dir)
+                } else {
+                    (ComputeHandle::rust(), None)
+                }
+            }
+        };
+        StudyEngine::with_compute(ds.num_institutions(), cfg.num_centers, compute, guard)
+    }
+
+    /// Build the persistent topology around an explicit compute handle.
+    pub fn with_compute(
+        institutions: usize,
+        centers: usize,
+        compute: ComputeHandle,
+        compute_guard: Option<ComputeServiceGuard>,
+    ) -> anyhow::Result<StudyEngine> {
+        anyhow::ensure!(
+            institutions >= 1 && institutions <= u16::MAX as usize,
+            "bad institution count {institutions}"
+        );
+        anyhow::ensure!(
+            centers >= 1 && centers <= u16::MAX as usize,
+            "bad center count {centers}"
+        );
+        let net = Network::new();
+        let registry = SessionRegistry::new();
+        let coord = net.register(NodeId::Coordinator);
+        let mut workers = Vec::with_capacity(institutions + centers);
+        for c in 0..centers {
+            let ep = net.register(NodeId::Center(c as u16));
+            let cfg = crate::center::CenterWorkerConfig {
+                center_id: c as u16,
+                registry: registry.clone(),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("center-{c}"))
+                    .spawn(move || crate::center::run_center_worker(cfg, ep))?,
+            );
+        }
+        for j in 0..institutions {
+            let ep = net.register(NodeId::Institution(j as u16));
+            let cfg = crate::institution::InstitutionWorkerConfig {
+                institution_id: j as u16,
+                registry: registry.clone(),
+                engine: compute.clone(),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("institution-{j}"))
+                    .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
+            );
+        }
+        let (submit_tx, submit_rx) = channel();
+        let driver = {
+            let registry = registry.clone();
+            let net = net.clone();
+            std::thread::Builder::new()
+                .name("study-driver".to_string())
+                .spawn(move || drive(coord, registry, submit_rx, net, institutions, centers))?
+        };
+        Ok(StudyEngine {
+            net,
+            registry,
+            submit_tx: Some(submit_tx),
+            driver: Some(driver),
+            workers,
+            next_session: AtomicU32::new(1),
+            institutions,
+            centers,
+            compute,
+            _compute_guard: compute_guard,
+        })
+    }
+
+    pub fn num_institutions(&self) -> usize {
+        self.institutions
+    }
+
+    pub fn num_centers(&self) -> usize {
+        self.centers
+    }
+
+    pub fn compute_kind(&self) -> &'static str {
+        self.compute.kind()
+    }
+
+    /// Global traffic snapshot (per-session attribution included).
+    pub fn traffic(&self) -> TrafficSnapshot {
+        self.net.counters.snapshot()
+    }
+
+    /// Submit one study: `cfg` provides the solver/scheme parameters,
+    /// `ds` the partitioned data (its shards map onto this engine's
+    /// institutions). Returns immediately; the fit proceeds
+    /// concurrently with every other in-flight session.
+    ///
+    /// Copies the shard data once; callers submitting the same dataset
+    /// as many sessions should [`ShardData::split`] once and use
+    /// [`StudyEngine::submit_shared`] instead.
+    pub fn submit(&self, cfg: &ExperimentConfig, ds: &Dataset) -> anyhow::Result<StudyHandle> {
+        anyhow::ensure!(
+            ds.num_institutions() == self.institutions,
+            "dataset has {} institutions, engine topology has {}",
+            ds.num_institutions(),
+            self.institutions
+        );
+        self.submit_shared(cfg, ShardData::split(ds))
+    }
+
+    /// [`StudyEngine::submit`] over pre-split shards — zero data
+    /// copying, so K sessions over one dataset share one set of
+    /// `Arc`s.
+    pub fn submit_shared(
+        &self,
+        cfg: &ExperimentConfig,
+        shards: Vec<Arc<ShardData>>,
+    ) -> anyhow::Result<StudyHandle> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            shards.len() == self.institutions,
+            "got {} shards, engine topology has {} institutions",
+            shards.len(),
+            self.institutions
+        );
+        anyhow::ensure!(
+            cfg.num_centers == self.centers,
+            "config wants {} centers, engine topology has {}",
+            cfg.num_centers,
+            self.centers
+        );
+        let params = ShamirParams::new(cfg.threshold, cfg.num_centers)?;
+        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let spec = Arc::new(SessionSpec::new(
+            session,
+            shards,
+            params,
+            FixedCodec::new(cfg.frac_bits),
+            cfg.mode.is_full(),
+            cfg.kernel_threads,
+            cfg.seed,
+        ));
+        self.registry.insert(spec.clone());
+        let (result_tx, result_rx) = channel();
+        let pending = PendingStudy {
+            spec,
+            mode: cfg.mode,
+            lambda: cfg.lambda,
+            tol: cfg.tol,
+            max_iters: cfg.max_iters,
+            result_tx,
+        };
+        self.submit_tx
+            .as_ref()
+            .expect("engine already shut down")
+            .send(pending)
+            .map_err(|_| anyhow::anyhow!("study engine driver is down"))?;
+        Ok(StudyHandle {
+            session,
+            rx: result_rx,
+        })
+    }
+
+    /// Drain in-flight sessions, stop the driver and workers, and
+    /// return the final global traffic snapshot.
+    pub fn shutdown(mut self) -> anyhow::Result<TrafficSnapshot> {
+        self.shutdown_inner()?;
+        Ok(self.net.counters.snapshot())
+    }
+
+    fn shutdown_inner(&mut self) -> anyhow::Result<()> {
+        // Closing the submit channel tells the driver to finish its
+        // active sessions and then tear the workers down.
+        self.submit_tx = None;
+        let mut first_err: Option<anyhow::Error> = None;
+        if let Some(driver) = self.driver.take() {
+            match driver.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = Some(e),
+                Err(_) => first_err = Some(anyhow::anyhow!("study driver panicked")),
+            }
+        }
+        for w in self.workers.drain(..) {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("worker thread panicked"));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for StudyEngine {
+    fn drop(&mut self) {
+        // Best-effort teardown when `shutdown` was not called.
+        let _ = self.shutdown_inner();
+    }
+}
+
+/// One driver-side active session.
+struct Active {
+    state: SessionState,
+    result_tx: Sender<anyhow::Result<SecureFitResult>>,
+}
+
+/// The coordinator driver loop: accepts submissions, opens sessions,
+/// pumps the network, and feeds each `AggregateResponse` to its
+/// session's Newton machine. Interleaving is what makes K fits
+/// concurrent — while one session's institutions crunch their shards,
+/// another session's reconstruction proceeds here.
+fn drive(
+    coord: Endpoint,
+    registry: Arc<SessionRegistry>,
+    submit_rx: Receiver<PendingStudy>,
+    net: Arc<Network>,
+    institutions: usize,
+    centers: usize,
+) -> anyhow::Result<()> {
+    let result = drive_loop(&coord, &registry, &submit_rx, &net);
+    // ALWAYS tear the persistent workers down — even when the loop
+    // errored — and best-effort per worker: otherwise a single dead
+    // worker would leave the others parked in recv() forever and
+    // shutdown()/Drop would hang on their joins instead of reporting
+    // the error. Failed sessions' handles see their senders drop.
+    for j in 0..institutions {
+        let _ = coord.send(NodeId::Institution(j as u16), &Message::Shutdown);
+    }
+    for c in 0..centers {
+        let _ = coord.send(NodeId::Center(c as u16), &Message::Shutdown);
+    }
+    result
+}
+
+fn drive_loop(
+    coord: &Endpoint,
+    registry: &Arc<SessionRegistry>,
+    submit_rx: &Receiver<PendingStudy>,
+    net: &Arc<Network>,
+) -> anyhow::Result<()> {
+    let mut sessions: HashMap<SessionId, Active> = HashMap::new();
+    let mut submissions_open = true;
+    loop {
+        // Absorb pending submissions without blocking.
+        while submissions_open {
+            match submit_rx.try_recv() {
+                Ok(p) => start_session(coord, &mut sessions, p)?,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => submissions_open = false,
+            }
+        }
+        if sessions.is_empty() {
+            if !submissions_open {
+                break;
+            }
+            // Idle: block briefly for new work.
+            match submit_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(p) => start_session(coord, &mut sessions, p)?,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => submissions_open = false,
+            }
+            continue;
+        }
+        // Pump the network; short timeout so new submissions interleave.
+        let Some((from, session, msg)) = coord.recv_session_timeout(Duration::from_millis(1))?
+        else {
+            continue;
+        };
+        match msg {
+            Message::AggregateResponse {
+                iter,
+                center,
+                hessian,
+                g_share,
+                dev_share,
+            } => {
+                let step = match sessions.get_mut(&session) {
+                    Some(active) => active
+                        .state
+                        .on_aggregate_response(center, hessian, g_share, dev_share, iter),
+                    // Late response for a session that already failed.
+                    None => continue,
+                };
+                match step {
+                    Ok(SessionStep::Pending) => {}
+                    Ok(SessionStep::Continue(outgoing)) => {
+                        send_all(coord, session, outgoing)?;
+                    }
+                    Ok(SessionStep::Done { outgoing, outcome }) => {
+                        send_all(coord, session, outgoing)?;
+                        let active = sessions.remove(&session).unwrap();
+                        let result = finish_session(net, &active.state, outcome);
+                        registry.remove(session);
+                        let _ = active.result_tx.send(Ok(result));
+                    }
+                    Err(e) => {
+                        fail_session(coord, registry, &mut sessions, session, e);
+                    }
+                }
+            }
+            Message::NodeError { node, is_center, error } => {
+                let who = if is_center { "center" } else { "institution" };
+                fail_session(
+                    coord,
+                    registry,
+                    &mut sessions,
+                    session,
+                    anyhow::anyhow!("{who}-{node} failed: {error}"),
+                );
+            }
+            other => anyhow::bail!("driver got unexpected {} from {from}", other.kind()),
+        }
+    }
+    Ok(())
+}
+
+fn start_session(
+    coord: &Endpoint,
+    sessions: &mut HashMap<SessionId, Active>,
+    p: PendingStudy,
+) -> anyhow::Result<()> {
+    let state = SessionState::new(p.spec, p.mode, p.lambda, p.tol, p.max_iters);
+    let session = state.session();
+    let outgoing = state.begin();
+    sessions.insert(
+        session,
+        Active {
+            state,
+            result_tx: p.result_tx,
+        },
+    );
+    send_all(coord, session, outgoing)
+}
+
+fn send_all(
+    coord: &Endpoint,
+    session: SessionId,
+    outgoing: Vec<(NodeId, Message)>,
+) -> anyhow::Result<()> {
+    for (to, msg) in outgoing {
+        coord.send_session(to, session, &msg)?;
+    }
+    Ok(())
+}
+
+/// Assemble the per-session metrics: wall time from the driver-side
+/// start, central time from the coordinator's reconstruction plus the
+/// max center busy time (centers run in parallel), local/protect times
+/// from the institutions' telemetry cells, and the session's own slice
+/// of the traffic counters.
+fn finish_session(net: &Arc<Network>, state: &SessionState, outcome: SessionOutcome) -> SecureFitResult {
+    let spec = state.spec();
+    let total_secs = state.started.elapsed().as_secs_f64();
+    let center_max_busy = spec
+        .center_busy_ns
+        .iter()
+        .map(|b| b.load(Ordering::Relaxed) as f64 / 1e9)
+        .fold(0.0, f64::max);
+    let local_compute_secs = spec
+        .inst_metrics
+        .iter()
+        .map(|m| m.compute_secs())
+        .fold(0.0, f64::max);
+    let local_compute_sum_secs: f64 = spec.inst_metrics.iter().map(|m| m.compute_secs()).sum();
+    let protect_secs = spec
+        .inst_metrics
+        .iter()
+        .map(|m| m.protect_secs())
+        .fold(0.0, f64::max);
+    SecureFitResult {
+        beta: outcome.beta,
+        metrics: RunMetrics {
+            total_secs,
+            central_secs: outcome.central_secs + center_max_busy,
+            local_compute_secs,
+            local_compute_sum_secs,
+            protect_secs,
+            iterations: outcome.iterations,
+            traffic: net.counters.session_snapshot(spec.session),
+            deviance_trace: outcome.deviance_trace,
+        },
+    }
+}
+
+/// Abort one session: drop its state, tell the workers to GC it, and
+/// deliver the error to the waiting handle. Other sessions continue.
+fn fail_session(
+    coord: &Endpoint,
+    registry: &Arc<SessionRegistry>,
+    sessions: &mut HashMap<SessionId, Active>,
+    session: SessionId,
+    err: anyhow::Error,
+) {
+    let Some(active) = sessions.remove(&session) else {
+        return;
+    };
+    let spec = active.state.spec();
+    for j in 0..spec.num_institutions() {
+        let _ = coord.send_session(
+            NodeId::Institution(j as u16),
+            session,
+            &Message::Finished { iter: 0, beta: vec![] },
+        );
+    }
+    for c in 0..spec.num_centers() {
+        let _ = coord.send_session(
+            NodeId::Center(c as u16),
+            session,
+            &Message::Finished { iter: 0, beta: vec![] },
+        );
+    }
+    registry.remove(session);
+    let _ = active.result_tx.send(Err(err));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            max_iters: 30,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_session_fit_converges() {
+        let ds = synthetic("t", 600, 4, 3, 0.0, 1.0, 21);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::for_experiment(&ds, &cfg).unwrap();
+        let fit = engine.submit(&cfg, &ds).unwrap().join().unwrap();
+        assert!(fit.metrics.iterations > 1);
+        assert_eq!(fit.beta.len(), 4);
+        assert!(fit.metrics.traffic.total_bytes > 0);
+        let final_traffic = engine.shutdown().unwrap();
+        // Per-session attribution covers everything but control frames.
+        let session_sum: u64 = final_traffic.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(session_sum, final_traffic.total_bytes);
+    }
+
+    #[test]
+    fn submit_validates_topology() {
+        let ds = synthetic("t", 200, 3, 2, 0.0, 1.0, 22);
+        let engine = StudyEngine::new(2, 5).unwrap();
+        // wrong center count
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        assert!(engine.submit(&cfg, &ds).is_err());
+        // wrong institution count
+        let ds4 = synthetic("t", 200, 3, 4, 0.0, 1.0, 22);
+        assert!(engine.submit(&base_cfg(), &ds4).is_err());
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn session_ids_are_sequential_from_one() {
+        let ds = synthetic("t", 200, 3, 2, 0.0, 1.0, 23);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        let h1 = engine.submit(&cfg, &ds).unwrap();
+        let h2 = engine.submit(&cfg, &ds).unwrap();
+        assert_eq!(h1.session_id(), 1);
+        assert_eq!(h2.session_id(), 2);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn failed_session_does_not_poison_the_engine() {
+        let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 24);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        // An all-zero column with λ=0 makes H+λI singular → the Newton
+        // solve fails for THAT session only.
+        let mut bad = ds.clone();
+        for i in 0..bad.x.rows {
+            bad.x[(i, 2)] = 0.0;
+        }
+        let bad_cfg = ExperimentConfig { lambda: 0.0, ..cfg.clone() };
+        let h_bad = engine.submit(&bad_cfg, &bad).unwrap();
+        assert!(h_bad.join().is_err());
+        // The engine still serves new sessions afterwards.
+        let h_ok = engine.submit(&cfg, &ds).unwrap();
+        let fit = h_ok.join().unwrap();
+        assert!(fit.metrics.iterations > 0);
+        engine.shutdown().unwrap();
+    }
+}

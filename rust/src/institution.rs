@@ -1,7 +1,10 @@
-//! Institution (data-owner) node.
+//! Institution (data-owner) node: a persistent, session-multiplexed
+//! worker.
 //!
-//! An institution holds its private shard (X_j, y_j). Per iteration it
-//! receives the coordinator's β broadcast, computes its local summary
+//! An institution holds private shards — one per active study session,
+//! looked up in the [`SessionRegistry`] on first contact. Per
+//! iteration of any session it receives the coordinator's β broadcast
+//! (tagged with the session id), computes that session's local summary
 //! statistics H_j, g_j, dev_j (Algorithm 1 steps 4–6) — through the
 //! AOT-compiled JAX/Pallas artifact or the rust twin — then protects
 //! them with Shamir's secret sharing (step 7) and submits one share to
@@ -9,162 +12,233 @@
 //! only things transmitted are secret shares (and, in pragmatic mode,
 //! the plaintext local Hessian, which is safe to expose alone because
 //! published inference attacks require the (H, g) pair).
+//!
+//! The worker is persistent: per-session hot state (kernel
+//! [`Workspace`], output buffers, ChaCha20 share stream) lives in a
+//! session map and is dropped on that session's `Finished`, while the
+//! Vandermonde share tables are cached per `(t, w)` scheme and reused
+//! across sessions — a new session with a familiar topology pays no
+//! setup. A per-session failure is reported to the coordinator as a
+//! session-tagged `NodeError` and only that session is torn down; the
+//! worker keeps serving its other sessions.
 
-use crate::fixed::FixedCodec;
-use crate::linalg::Matrix;
 use crate::model::{LocalStats, Workspace};
-use crate::protocol::{pack_upper_into, HessianPayload, Message, NodeId};
+use crate::protocol::{pack_upper_into, packed_len, HessianPayload, Message, NodeId, SessionId};
 use crate::runtime::ComputeHandle;
 use crate::secure::{share_local_stats_with, ShareContext};
-use crate::shamir::ShamirParams;
+use crate::session::{SessionRegistry, SessionSpec};
 use crate::transport::Endpoint;
 use crate::util::rng::ChaCha20Rng;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
-/// Everything an institution thread needs.
-pub struct InstitutionConfig {
+/// Everything a persistent institution worker needs.
+pub struct InstitutionWorkerConfig {
     pub institution_id: u16,
-    /// Private shard: design matrix (with intercept) and 0/1 responses.
-    pub x: Matrix,
-    pub y: Vec<f64>,
-    /// Secret-sharing parameters (t-of-w).
-    pub params: ShamirParams,
-    pub codec: FixedCodec,
-    pub full_security: bool,
+    /// Session lookup: shard data, scheme, seeds, metric cells.
+    pub registry: Arc<SessionRegistry>,
+    /// Compute engine shared by every session on this worker.
     pub engine: ComputeHandle,
-    /// Seed for share-polynomial randomness. Simulations derive it from
-    /// the experiment seed for reproducibility; deployments should use
-    /// `ChaCha20Rng::from_os_entropy()` material instead.
-    pub share_seed: u64,
-    /// Worker threads for the local-stats kernel (0 = one per core).
-    /// Simulations hosting many institutions on one machine keep this
-    /// at 1; a real deployment, where the shard owns its hardware, sets
-    /// 0 (see `config::ExperimentConfig::kernel_threads`).
-    pub kernel_threads: usize,
 }
 
-/// Timing breakdown one institution reports after a run.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct InstitutionTimings {
-    /// Seconds spent computing local statistics (the "ordinary
-    /// computation" the paper attributes to local institutions).
-    pub compute_secs: f64,
-    /// Seconds spent encoding + Shamir-sharing + submitting.
-    pub protect_secs: f64,
-    pub iterations: u32,
+/// Hot per-session state, allocated on first broadcast and reused for
+/// every subsequent iteration of that session (the compute phase
+/// allocates nothing at steady state).
+struct InstSession {
+    spec: Arc<SessionSpec>,
+    ws: Workspace,
+    stats: LocalStats,
+    h_packed: Vec<f64>,
+    share_ctx: Rc<ShareContext>,
+    rng: ChaCha20Rng,
 }
 
-/// Run the institution event loop until `Finished`/`Shutdown`.
-/// Returns the timing breakdown for the metrics report. Fatal errors
-/// are reported to the coordinator (so it can abort instead of
-/// deadlocking) and then returned.
-pub fn run_institution(cfg: InstitutionConfig, ep: Endpoint) -> anyhow::Result<InstitutionTimings> {
-    let id = cfg.institution_id;
-    match run_institution_inner(cfg, &ep) {
-        Ok(t) => Ok(t),
-        Err(e) => {
-            let _ = ep.send(
-                NodeId::Coordinator,
-                &Message::NodeError {
-                    node: id,
-                    is_center: false,
-                    error: format!("{e:#}"),
-                },
-            );
-            Err(e)
-        }
-    }
-}
-
-fn run_institution_inner(
-    cfg: InstitutionConfig,
-    ep: &Endpoint,
-) -> anyhow::Result<InstitutionTimings> {
-    let mut rng = ChaCha20Rng::seed_from_u64(cfg.share_seed);
-    let mut timings = InstitutionTimings::default();
-    let num_centers = cfg.params.num_holders;
-    // Hoisted per-run state: the kernel workspace, the output stats
-    // buffers, the packed-Hessian buffer, and the Vandermonde share
-    // table are built once here and reused every iteration, so the
-    // compute phase allocates nothing at steady state. (The protect
-    // phase still allocates per iteration: encoded slices, coefficient
-    // buffer, and the per-holder share vectors the messages take
-    // ownership of.)
-    let d = cfg.x.cols;
-    let mut ws = Workspace::new(d, cfg.kernel_threads);
-    let mut stats = LocalStats::zeros(d);
-    let mut h_packed = vec![0.0; crate::protocol::packed_len(d)];
-    let share_ctx = ShareContext::new(cfg.params);
+/// Run the persistent institution event loop until `Shutdown`.
+///
+/// Owns its endpoint; spawn on a dedicated thread. Per-session errors
+/// are reported to the coordinator as session-tagged `NodeError`s (so
+/// the driver can abort just that study); transport-level failures end
+/// the worker.
+pub fn run_institution_worker(
+    cfg: InstitutionWorkerConfig,
+    ep: Endpoint,
+) -> anyhow::Result<()> {
+    let mut sessions: HashMap<SessionId, InstSession> = HashMap::new();
+    // Vandermonde power tables cached per (t, w), shared across sessions.
+    let mut share_tables: HashMap<(usize, usize), Rc<ShareContext>> = HashMap::new();
     loop {
-        let (from, msg) = ep.recv()?;
+        let (from, session, msg) = ep.recv_session()?;
         match msg {
             Message::BetaBroadcast { iter, beta } => {
-                anyhow::ensure!(
-                    from == NodeId::Coordinator,
-                    "beta broadcast from non-coordinator {from}"
-                );
-                anyhow::ensure!(
-                    beta.len() == cfg.x.cols,
-                    "beta dimension {} != shard dimension {}",
-                    beta.len(),
-                    cfg.x.cols
-                );
-                // ---- local compute phase (steps 4–6) ----
-                let compute_secs = cfg
-                    .engine
-                    .local_stats_timed_into(&cfg.x, &cfg.y, &beta, &mut ws, &mut stats)?;
-                timings.compute_secs += compute_secs;
-
-                // ---- protection + submission phase (step 7) ----
-                let t = std::time::Instant::now();
-                pack_upper_into(&stats.h, &mut h_packed);
-                let shared = share_local_stats_with(
-                    &share_ctx,
-                    &cfg.codec,
-                    &stats.g,
-                    stats.dev,
-                    &h_packed,
-                    cfg.full_security,
-                    &mut rng,
-                )?;
-                for c in 0..num_centers {
-                    let hessian = match &shared.h {
-                        Some(hb) => HessianPayload::Shared(hb.per_holder[c].clone()),
-                        // Pragmatic mode: the plaintext H goes to the lead
-                        // center only; replication adds no protection.
-                        None if c == 0 => HessianPayload::Plain(h_packed.clone()),
-                        None => HessianPayload::Absent,
-                    };
-                    ep.send(
-                        NodeId::Center(c as u16),
-                        &Message::ShareSubmission {
-                            iter,
-                            institution: cfg.institution_id,
-                            hessian,
-                            g_share: shared.g.per_holder[c].clone(),
-                            dev_share: shared.dev.per_holder[c][0],
+                if let Err(e) = handle_broadcast(
+                    &cfg,
+                    &ep,
+                    &mut sessions,
+                    &mut share_tables,
+                    session,
+                    from,
+                    iter,
+                    &beta,
+                ) {
+                    sessions.remove(&session);
+                    let _ = ep.send_session(
+                        NodeId::Coordinator,
+                        session,
+                        &Message::NodeError {
+                            node: cfg.institution_id,
+                            is_center: false,
+                            error: format!("{e:#}"),
                         },
-                    )?;
+                    );
                 }
-                timings.protect_secs += t.elapsed().as_secs_f64();
-                timings.iterations += 1;
             }
-            Message::Finished { .. } | Message::Shutdown => return Ok(timings),
-            other => anyhow::bail!(
-                "institution {} got unexpected {}",
-                cfg.institution_id,
-                other.kind()
-            ),
+            Message::Finished { .. } => {
+                sessions.remove(&session);
+            }
+            Message::Shutdown => return Ok(()),
+            other => {
+                // Unexpected traffic aborts the offending session, not
+                // the worker.
+                sessions.remove(&session);
+                let _ = ep.send_session(
+                    NodeId::Coordinator,
+                    session,
+                    &Message::NodeError {
+                        node: cfg.institution_id,
+                        is_center: false,
+                        error: format!(
+                            "institution {} got unexpected {}",
+                            cfg.institution_id,
+                            other.kind()
+                        ),
+                    },
+                );
+            }
         }
     }
+}
+
+/// One iteration of one session: local compute + protect + submit.
+#[allow(clippy::too_many_arguments)]
+fn handle_broadcast(
+    cfg: &InstitutionWorkerConfig,
+    ep: &Endpoint,
+    sessions: &mut HashMap<SessionId, InstSession>,
+    share_tables: &mut HashMap<(usize, usize), Rc<ShareContext>>,
+    session: SessionId,
+    from: NodeId,
+    iter: u32,
+    beta: &[f64],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        from == NodeId::Coordinator,
+        "beta broadcast from non-coordinator {from}"
+    );
+    let j = cfg.institution_id;
+    let st = match sessions.entry(session) {
+        Entry::Occupied(e) => e.into_mut(),
+        Entry::Vacant(v) => {
+            let spec = cfg
+                .registry
+                .get(session)
+                .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+            anyhow::ensure!(
+                (j as usize) < spec.num_institutions(),
+                "institution {j} not part of session {session}"
+            );
+            let d = spec.d();
+            let key = (spec.params.threshold, spec.params.num_holders);
+            let share_ctx = share_tables
+                .entry(key)
+                .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
+                .clone();
+            let rng = ChaCha20Rng::seed_from_u64(spec.institution_share_seed(j));
+            v.insert(InstSession {
+                ws: Workspace::new(d, spec.kernel_threads),
+                stats: LocalStats::zeros(d),
+                h_packed: vec![0.0; packed_len(d)],
+                share_ctx,
+                rng,
+                spec,
+            })
+        }
+    };
+    let spec = &st.spec;
+    let shard = &spec.shards[j as usize];
+    anyhow::ensure!(
+        beta.len() == shard.x.cols,
+        "beta dimension {} != shard dimension {}",
+        beta.len(),
+        shard.x.cols
+    );
+
+    // ---- local compute phase (steps 4–6) ----
+    let compute_secs =
+        cfg.engine
+            .local_stats_timed_into(&shard.x, &shard.y, beta, &mut st.ws, &mut st.stats)?;
+
+    // ---- protection + submission phase (step 7) ----
+    let t = std::time::Instant::now();
+    pack_upper_into(&st.stats.h, &mut st.h_packed);
+    let shared = share_local_stats_with(
+        &st.share_ctx,
+        &spec.codec,
+        &st.stats.g,
+        st.stats.dev,
+        &st.h_packed,
+        spec.full_security,
+        &mut st.rng,
+    )?;
+    // Telemetry lands BEFORE the submissions: a submission causally
+    // leads (via center fold → aggregate response) to the driver's
+    // end-of-round — possibly end-of-session — metrics read, so the
+    // cells must be current first. The in-memory channel pushes left
+    // out of protect_ns are negligible.
+    let cells = &spec.inst_metrics[j as usize];
+    cells
+        .compute_ns
+        .fetch_add((compute_secs * 1e9) as u64, Ordering::Relaxed);
+    cells
+        .protect_ns
+        .fetch_add((t.elapsed().as_secs_f64() * 1e9) as u64, Ordering::Relaxed);
+    cells.iterations.fetch_add(1, Ordering::Relaxed);
+    for c in 0..spec.num_centers() {
+        let hessian = match &shared.h {
+            Some(hb) => HessianPayload::Shared(hb.per_holder[c].clone()),
+            // Pragmatic mode: the plaintext H goes to the lead
+            // center only; replication adds no protection.
+            None if c == 0 => HessianPayload::Plain(st.h_packed.clone()),
+            None => HessianPayload::Absent,
+        };
+        ep.send_session(
+            NodeId::Center(c as u16),
+            session,
+            &Message::ShareSubmission {
+                iter,
+                institution: j,
+                hessian,
+                g_share: shared.g.per_holder[c].clone(),
+                dev_share: shared.dev.per_holder[c][0],
+            },
+        )?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::FixedCodec;
+    use crate::linalg::Matrix;
+    use crate::session::ShardData;
+    use crate::shamir::ShamirParams;
     use crate::transport::Network;
     use crate::util::rng::{Rng, SplitMix64};
 
-    fn shard(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    fn shard(n: usize, d: usize, seed: u64) -> Arc<ShardData> {
         let mut rng = SplitMix64::new(seed);
         let mut x = Matrix::zeros(n, d);
         let mut y = vec![0.0; n];
@@ -175,7 +249,33 @@ mod tests {
             }
             y[i] = f64::from(rng.next_bernoulli(0.4));
         }
-        (x, y)
+        Arc::new(ShardData { x, y })
+    }
+
+    fn make_spec(
+        session: SessionId,
+        shards: Vec<Arc<ShardData>>,
+        t: usize,
+        w: usize,
+        full: bool,
+    ) -> Arc<SessionSpec> {
+        Arc::new(SessionSpec::new(
+            session,
+            shards,
+            ShamirParams::new(t, w).unwrap(),
+            FixedCodec::default(),
+            full,
+            1,
+            7,
+        ))
+    }
+
+    fn worker_cfg(id: u16, registry: Arc<SessionRegistry>) -> InstitutionWorkerConfig {
+        InstitutionWorkerConfig {
+            institution_id: id,
+            registry,
+            engine: ComputeHandle::rust(),
+        }
     }
 
     #[test]
@@ -184,31 +284,24 @@ mod tests {
         let coord = net.register(NodeId::Coordinator);
         let centers: Vec<_> = (0..3).map(|c| net.register(NodeId::Center(c))).collect();
         let iep = net.register(NodeId::Institution(0));
-        let (x, y) = shard(20, 3, 1);
-        let params = ShamirParams::new(2, 3).unwrap();
-        let cfg = InstitutionConfig {
-            institution_id: 0,
-            x: x.clone(),
-            y: y.clone(),
-            params,
-            codec: FixedCodec::default(),
-            full_security: false,
-            engine: ComputeHandle::rust(),
-            share_seed: 7,
-            kernel_threads: 1,
-        };
-        let th = std::thread::spawn(move || run_institution(cfg, iep).unwrap());
+        let registry = SessionRegistry::new();
+        let sh = shard(20, 3, 1);
+        registry.insert(make_spec(1, vec![sh.clone()], 2, 3, false));
+        let cfg = worker_cfg(0, registry);
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
         coord
-            .send(
+            .send_session(
                 NodeId::Institution(0),
+                1,
                 &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 3] },
             )
             .unwrap();
-        // each center receives exactly one submission
+        // each center receives exactly one submission, tagged session 1
         let mut dev_shares = Vec::new();
         for (c, cep) in centers.iter().enumerate() {
-            let (from, msg) = cep.recv().unwrap();
+            let (from, session, msg) = cep.recv_session().unwrap();
             assert_eq!(from, NodeId::Institution(0));
+            assert_eq!(session, 1);
             match msg {
                 Message::ShareSubmission {
                     iter,
@@ -231,17 +324,17 @@ mod tests {
             }
         }
         // The dev shares reconstruct to the true local deviance.
-        let stats = crate::model::local_stats(&x, &y, &[0.0; 3]);
+        let stats = crate::model::local_stats(&sh.x, &sh.y, &[0.0; 3]);
+        let params = ShamirParams::new(2, 3).unwrap();
         let rec = crate::shamir::reconstruct_scalar(params, &dev_shares[..2]).unwrap();
         let dec = FixedCodec::default().decode(rec);
         assert!((dec - stats.dev).abs() < 1e-4, "{dec} vs {}", stats.dev);
 
         coord
-            .send(NodeId::Institution(0), &Message::Finished { iter: 0, beta: vec![] })
+            .send_session(NodeId::Institution(0), 1, &Message::Finished { iter: 0, beta: vec![] })
             .unwrap();
-        let timings = th.join().unwrap();
-        assert_eq!(timings.iterations, 1);
-        assert!(timings.compute_secs >= 0.0 && timings.protect_secs > 0.0);
+        coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
     }
 
     #[test]
@@ -251,27 +344,21 @@ mod tests {
         let c0 = net.register(NodeId::Center(0));
         let c1 = net.register(NodeId::Center(1));
         let iep = net.register(NodeId::Institution(1));
-        let (x, y) = shard(10, 2, 2);
-        let cfg = InstitutionConfig {
-            institution_id: 1,
-            x,
-            y,
-            params: ShamirParams::new(2, 2).unwrap(),
-            codec: FixedCodec::default(),
-            full_security: true,
-            engine: ComputeHandle::rust(),
-            share_seed: 8,
-            kernel_threads: 1,
-        };
-        let th = std::thread::spawn(move || run_institution(cfg, iep).unwrap());
+        let registry = SessionRegistry::new();
+        // institution id 1 → the spec needs two shards (ids 0 and 1)
+        registry.insert(make_spec(4, vec![shard(10, 2, 5), shard(10, 2, 2)], 2, 2, true));
+        let cfg = worker_cfg(1, registry);
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
         coord
-            .send(
+            .send_session(
                 NodeId::Institution(1),
+                4,
                 &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 2] },
             )
             .unwrap();
         for cep in [&c0, &c1] {
-            let (_, msg) = cep.recv().unwrap();
+            let (_, session, msg) = cep.recv_session().unwrap();
+            assert_eq!(session, 4);
             match msg {
                 Message::ShareSubmission { hessian, .. } => {
                     assert!(matches!(hessian, HessianPayload::Shared(v) if v.len() == 3));
@@ -284,30 +371,97 @@ mod tests {
     }
 
     #[test]
-    fn dimension_mismatch_is_an_error() {
+    fn serves_multiple_sessions_with_isolated_state() {
         let net = Network::new();
         let coord = net.register(NodeId::Coordinator);
-        let _c0 = net.register(NodeId::Center(0));
+        let center = net.register(NodeId::Center(0));
+        let iep = net.register(NodeId::Institution(0));
+        let registry = SessionRegistry::new();
+        // Two sessions with different dimensions on one worker.
+        registry.insert(make_spec(1, vec![shard(16, 3, 1)], 1, 1, false));
+        registry.insert(make_spec(2, vec![shard(12, 5, 2)], 1, 1, false));
+        let cfg = worker_cfg(0, registry.clone());
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
+        // Interleave broadcasts across the sessions.
+        for (session, d) in [(1u32, 3usize), (2, 5), (1, 3), (2, 5)] {
+            coord
+                .send_session(
+                    NodeId::Institution(0),
+                    session,
+                    &Message::BetaBroadcast { iter: 0, beta: vec![0.0; d] },
+                )
+                .unwrap();
+        }
+        let mut g_lens: HashMap<SessionId, Vec<usize>> = HashMap::new();
+        for _ in 0..4 {
+            let (_, session, msg) = center.recv_session().unwrap();
+            match msg {
+                Message::ShareSubmission { g_share, .. } => {
+                    g_lens.entry(session).or_default().push(g_share.len());
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        assert_eq!(g_lens[&1], vec![3, 3]);
+        assert_eq!(g_lens[&2], vec![5, 5]);
+        // Per-session telemetry cells advanced independently.
+        assert_eq!(registry.get(1).unwrap().inst_metrics[0].iterations.load(Ordering::Relaxed), 2);
+        assert_eq!(registry.get(2).unwrap().inst_metrics[0].iterations.load(Ordering::Relaxed), 2);
+        coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    #[test]
+    fn per_session_errors_do_not_kill_the_worker() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let _center = net.register(NodeId::Center(0));
         let iep = net.register(NodeId::Institution(2));
-        let (x, y) = shard(5, 3, 3);
-        let cfg = InstitutionConfig {
-            institution_id: 2,
-            x,
-            y,
-            params: ShamirParams::new(1, 1).unwrap(),
-            codec: FixedCodec::default(),
-            full_security: false,
-            engine: ComputeHandle::rust(),
-            share_seed: 9,
-            kernel_threads: 1,
-        };
-        let th = std::thread::spawn(move || run_institution(cfg, iep));
+        let registry = SessionRegistry::new();
+        registry.insert(make_spec(
+            9,
+            vec![shard(5, 3, 3), shard(5, 3, 4), shard(5, 3, 5)],
+            1,
+            1,
+            false,
+        ));
+        let cfg = worker_cfg(2, registry);
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
+        // Unknown session → session-tagged NodeError.
         coord
-            .send(
+            .send_session(
                 NodeId::Institution(2),
-                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 7] }, // wrong d
+                77,
+                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 3] },
             )
             .unwrap();
-        assert!(th.join().unwrap().is_err());
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 77);
+        assert!(matches!(msg, Message::NodeError { node: 2, is_center: false, .. }));
+        // Wrong dimension → NodeError for that session.
+        coord
+            .send_session(
+                NodeId::Institution(2),
+                9,
+                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 7] },
+            )
+            .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 9);
+        assert!(matches!(msg, Message::NodeError { .. }));
+        // Rogue broadcast (non-coordinator sender) → NodeError too.
+        let rogue = net.register(NodeId::Institution(9));
+        rogue
+            .send_session(
+                NodeId::Institution(2),
+                9,
+                &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 3] },
+            )
+            .unwrap();
+        let (_, _, msg) = coord.recv_session().unwrap();
+        assert!(matches!(msg, Message::NodeError { .. }));
+        // The worker is still alive and shuts down cleanly.
+        coord.send(NodeId::Institution(2), &Message::Shutdown).unwrap();
+        th.join().unwrap();
     }
 }

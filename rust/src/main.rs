@@ -27,6 +27,7 @@ USAGE:
 
 COMMANDS:
     fit        run the secure distributed protocol (--save <path> to persist)
+    multifit   run K concurrent fits on one persistent study network
     compare    secure vs centralized gold standard (accuracy check)
     cv         secure k-fold cross-validation over a λ grid
     predict    score a CSV with a saved model
@@ -48,6 +49,9 @@ COMMON FLAGS (fit/compare):
     --artifacts <dir>    AOT artifact directory                     [artifacts]
     --seed <n>           RNG seed                                   [42]
     --config <path>      load flags from a config JSON instead
+
+MULTIFIT FLAGS:
+    --sessions <K>       concurrent study sessions                  [4]
 
 CV FLAGS:
     --lambdas <grid>     comma-separated λ candidates    [0.01,0.1,1,10]
@@ -164,6 +168,65 @@ fn cmd_fit(args: &Args) -> anyhow::Result<()> {
         println!("
 model saved to {path}");
     }
+    Ok(())
+}
+
+fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let k = args.get_usize("sessions", 4)?;
+    anyhow::ensure!(k >= 1, "--sessions must be >= 1");
+    let ds = cfg.dataset.load(cfg.seed)?;
+    println!(
+        "persistent network: {} institutions, {} centers (t={}), engine={} — {k} concurrent sessions",
+        ds.num_institutions(),
+        cfg.num_centers,
+        cfg.threshold,
+        cfg.engine.name(),
+    );
+    let t = std::time::Instant::now();
+    let engine = privlr::engine::StudyEngine::for_experiment(&ds, &cfg)?;
+    // Split once, share across sessions — the K studies read the same
+    // Arc'd shards instead of K copies of the dataset.
+    let shards = privlr::session::ShardData::split(&ds);
+    let handles: Vec<_> = (0..k)
+        .map(|_| engine.submit_shared(&cfg, shards.clone()))
+        .collect::<anyhow::Result<_>>()?;
+    println!(
+        "\n{:>8} {:>7} {:>12} {:>14}",
+        "session", "iters", "fit time", "session bytes"
+    );
+    let mut results = Vec::with_capacity(k);
+    for h in handles {
+        let session = h.session_id();
+        let fit = h.join()?;
+        println!(
+            "{:>8} {:>7} {:>12} {:>14}",
+            session,
+            fit.metrics.iterations,
+            fmt_duration(fit.metrics.total_secs),
+            fmt_bytes(fit.metrics.traffic.total_bytes),
+        );
+        results.push(fit);
+    }
+    let traffic = engine.shutdown()?;
+    let wall = t.elapsed().as_secs_f64();
+    // Concurrent sessions are bit-identical to sequential runs.
+    for fit in &results[1..] {
+        anyhow::ensure!(fit.beta == results[0].beta, "sessions disagreed on β");
+    }
+    let session_sum: u64 = traffic.per_session.iter().map(|&(_, b)| b).sum();
+    println!(
+        "\n{k} fits in {} → {:.2} fits/sec (identical β across sessions)",
+        fmt_duration(wall),
+        k as f64 / wall
+    );
+    println!(
+        "traffic: {} total across {} session(s) + control; per-session sum {} ({})",
+        fmt_bytes(traffic.total_bytes),
+        traffic.per_session.len().saturating_sub(1),
+        fmt_bytes(session_sum),
+        if session_sum == traffic.total_bytes { "fully attributed" } else { "UNATTRIBUTED REMAINDER" },
+    );
     Ok(())
 }
 
@@ -322,6 +385,7 @@ fn main() {
     let (cmd, args) = Args::from_env();
     let result = match cmd.as_str() {
         "fit" => cmd_fit(&args),
+        "multifit" => cmd_multifit(&args),
         "compare" => cmd_compare(&args),
         "cv" => cmd_cv(&args),
         "predict" => cmd_predict(&args),

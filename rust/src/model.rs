@@ -159,8 +159,8 @@ impl Workspace {
 ///
 /// Convenience wrapper over [`local_stats_into`] with a fresh
 /// single-threaded workspace; the protocol hot path
-/// (`institution::run_institution`) reuses one [`Workspace`] across
-/// iterations instead.
+/// (`institution::run_institution_worker`) reuses one [`Workspace`]
+/// per session across iterations instead.
 pub fn local_stats(x: &Matrix, y: &[f64], beta: &[f64]) -> LocalStats {
     let mut ws = Workspace::single(x.cols);
     let mut out = LocalStats::zeros(x.cols);

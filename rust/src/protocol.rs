@@ -11,6 +11,22 @@
 
 use crate::field::Fp;
 
+/// Identifier of one study session multiplexed over the persistent
+/// network. Every wire frame carries a `SessionId` header so one
+/// coordinator/institution/center topology can interleave many
+/// concurrent fits; see [`encode_frame`] / [`decode_frame`].
+pub type SessionId = u32;
+
+/// Reserved session id for control traffic that belongs to the network
+/// itself rather than to any study (worker shutdown, single-session
+/// compatibility sends through `Endpoint::send`). Real studies are
+/// assigned ids starting at 1 by the engine, but the codec treats 0
+/// like any other id.
+pub const CONTROL_SESSION: SessionId = 0;
+
+/// Encoded size of the frame header prepended by [`encode_frame`].
+pub const SESSION_HEADER_LEN: usize = 4;
+
 /// Node addresses in the simulated study network.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum NodeId {
@@ -389,6 +405,34 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
     Ok(msg)
 }
 
+// ---- session-tagged frames ----------------------------------------------
+
+/// Encode a wire frame: a little-endian [`SessionId`] header followed
+/// by the message body. This is what actually crosses every link of
+/// the session-multiplexed network (the transport counts frame bytes,
+/// so the 4-byte header is part of the measured traffic).
+pub fn encode_frame(session: SessionId, msg: &Message) -> Vec<u8> {
+    let body = encode(msg);
+    let mut out = Vec::with_capacity(SESSION_HEADER_LEN + body.len());
+    out.extend_from_slice(&session.to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a wire frame produced by [`encode_frame`], requiring full
+/// consumption of the body.
+pub fn decode_frame(bytes: &[u8]) -> Result<(SessionId, Message), CodecError> {
+    if bytes.len() < SESSION_HEADER_LEN {
+        return Err(CodecError::Truncated {
+            at: bytes.len(),
+            wanted: SESSION_HEADER_LEN - bytes.len(),
+        });
+    }
+    let session = SessionId::from_le_bytes(bytes[..SESSION_HEADER_LEN].try_into().unwrap());
+    let msg = decode(&bytes[SESSION_HEADER_LEN..])?;
+    Ok((session, msg))
+}
+
 // ---- symmetric-matrix packing -------------------------------------------
 
 /// Pack the upper triangle (incl. diagonal) of a symmetric d×d matrix
@@ -558,6 +602,37 @@ mod tests {
             dev_share: Fp::ZERO,
         };
         assert_eq!(encode(&msg).len(), 1 + 4 + 2 + (1 + 4 + 48) + (4 + 24) + 8);
+    }
+
+    #[test]
+    fn frame_roundtrip_carries_session() {
+        for session in [CONTROL_SESSION, 1, 0x1234_5678, SessionId::MAX] {
+            let msg = Message::BetaBroadcast {
+                iter: 2,
+                beta: vec![0.25, -0.5],
+            };
+            let bytes = encode_frame(session, &msg);
+            assert_eq!(bytes.len(), SESSION_HEADER_LEN + encode(&msg).len());
+            let (s, back) = decode_frame(&bytes).unwrap();
+            assert_eq!(s, session);
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn frame_rejects_truncation() {
+        // Shorter than the header itself.
+        assert!(matches!(
+            decode_frame(&[1, 2]),
+            Err(CodecError::Truncated { .. })
+        ));
+        // Header present, body truncated.
+        let bytes = encode_frame(7, &Message::Shutdown);
+        assert!(decode_frame(&bytes[..SESSION_HEADER_LEN]).is_err());
+        // Trailing garbage after a valid body.
+        let mut extended = bytes.clone();
+        extended.push(9);
+        assert!(decode_frame(&extended).is_err());
     }
 
     #[test]

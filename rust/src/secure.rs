@@ -145,8 +145,8 @@ impl ShareContext {
 /// when `full_security` is set (pragmatic mode sends it plaintext).
 ///
 /// Convenience wrapper building a fresh [`ShareContext`]; the protocol
-/// hot path (`institution::run_institution`) reuses one context across
-/// iterations via [`share_local_stats_with`].
+/// hot path (`institution::run_institution_worker`) caches one context
+/// per `(t, w)` scheme across sessions via [`share_local_stats_with`].
 pub fn share_local_stats<R: Rng>(
     params: ShamirParams,
     codec: &FixedCodec,

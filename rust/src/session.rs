@@ -1,0 +1,517 @@
+//! Per-session state for the session-multiplexed study engine.
+//!
+//! One persistent network (coordinator driver + institution/center
+//! workers, see [`crate::engine`]) serves many concurrent regularized-LR
+//! fits. Everything a single fit needs is split into two pieces:
+//!
+//! * [`SessionSpec`] — the out-of-band study agreement: which shard
+//!   each institution contributes (in deployment the institution's own
+//!   local data, selected by an agreed rule — e.g. a crossval fold
+//!   pattern — so raw records still never cross the network), the
+//!   Shamir `(t, w)` scheme, fixed-point codec, security mode, and the
+//!   deterministic seed derivation. Distributed to workers through the
+//!   in-process [`SessionRegistry`]; only protocol messages travel on
+//!   the wire.
+//! * [`SessionState`] — the coordinator-side Newton state machine for
+//!   one fit (Algorithm 1's loop). The engine driver holds K of these
+//!   and feeds each the `AggregateResponse`s tagged with its session
+//!   id, so K fits interleave over one network. The machine is a pure
+//!   function of its inputs: responses are collected per round and
+//!   folded in center order, which (together with the centers'
+//!   institution-ordered plaintext folds) makes concurrent results
+//!   bit-identical to sequential ones.
+
+use crate::config::SecurityMode;
+use crate::field::Fp;
+use crate::fixed::FixedCodec;
+use crate::linalg::Matrix;
+use crate::model::{converged, newton_update};
+use crate::protocol::{packed_len, unpack_upper, HessianPayload, Message, NodeId, SessionId};
+use crate::shamir::{reconstruct_batch, reconstruct_scalar, ShamirParams};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One institution's private shard for one session.
+pub struct ShardData {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+}
+
+impl ShardData {
+    /// Split a dataset into per-institution `Arc` shards. Callers
+    /// submitting the SAME dataset as many sessions should split once
+    /// and reuse the `Arc`s (`StudyEngine::submit_shared`) — the data
+    /// is copied here exactly once instead of once per session.
+    pub fn split(ds: &crate::data::Dataset) -> Vec<Arc<ShardData>> {
+        (0..ds.num_institutions())
+            .map(|j| {
+                let (x, y) = ds.shard_data(j);
+                Arc::new(ShardData { x, y })
+            })
+            .collect()
+    }
+}
+
+/// Out-of-band per-institution telemetry cells (nanosecond totals);
+/// the wire carries protocol messages only, so timing attribution adds
+/// zero traffic — same pattern as the centers' busy counters.
+#[derive(Default)]
+pub struct InstMetricCells {
+    pub compute_ns: AtomicU64,
+    pub protect_ns: AtomicU64,
+    pub iterations: AtomicU64,
+}
+
+impl InstMetricCells {
+    pub fn compute_secs(&self) -> f64 {
+        self.compute_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn protect_secs(&self) -> f64 {
+        self.protect_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Everything the persistent workers need to serve one session.
+pub struct SessionSpec {
+    pub session: SessionId,
+    /// Per-institution shard data (index = institution id).
+    pub shards: Vec<Arc<ShardData>>,
+    pub params: ShamirParams,
+    pub codec: FixedCodec,
+    pub full_security: bool,
+    /// Worker threads for the blocked local-stats kernel (0 = cores).
+    pub kernel_threads: usize,
+    /// The experiment's master seed; all per-session randomness is
+    /// derived from `(master_seed, session)` — see
+    /// [`SessionSpec::institution_share_seed`].
+    pub master_seed: u64,
+    /// Per-center secure-aggregation busy time for THIS session (ns).
+    pub center_busy_ns: Vec<Arc<AtomicU64>>,
+    /// Per-institution timing cells for THIS session.
+    pub inst_metrics: Vec<Arc<InstMetricCells>>,
+}
+
+impl SessionSpec {
+    pub fn new(
+        session: SessionId,
+        shards: Vec<Arc<ShardData>>,
+        params: ShamirParams,
+        codec: FixedCodec,
+        full_security: bool,
+        kernel_threads: usize,
+        master_seed: u64,
+    ) -> SessionSpec {
+        let s = shards.len();
+        let w = params.num_holders;
+        SessionSpec {
+            session,
+            shards,
+            params,
+            codec,
+            full_security,
+            kernel_threads,
+            master_seed,
+            center_busy_ns: (0..w).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+            inst_metrics: (0..s).map(|_| Arc::new(InstMetricCells::default())).collect(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.shards.first().map_or(0, |sh| sh.x.cols)
+    }
+
+    pub fn num_institutions(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn num_centers(&self) -> usize {
+        self.params.num_holders
+    }
+
+    /// Share-polynomial seed for one institution: a splitmix fork of
+    /// `(master_seed, session)`, then of the institution id — fully
+    /// determined by the pair, so a session produces identical share
+    /// streams whether it runs alone or among K concurrent fits.
+    /// (Simulation reproducibility; deployments use OS entropy.)
+    pub fn institution_share_seed(&self, institution: u16) -> u64 {
+        let session_seed = crate::util::rng::derive_seed(self.master_seed, self.session as u64);
+        crate::util::rng::derive_seed(session_seed, 0x5EED_0000 + institution as u64)
+    }
+}
+
+/// In-process distribution channel for [`SessionSpec`]s: the driver
+/// inserts a spec before opening the session on the wire; workers look
+/// sessions up lazily on first contact and the driver removes specs at
+/// completion.
+#[derive(Default)]
+pub struct SessionRegistry {
+    specs: Mutex<HashMap<SessionId, Arc<SessionSpec>>>,
+}
+
+impl SessionRegistry {
+    pub fn new() -> Arc<SessionRegistry> {
+        Arc::new(SessionRegistry::default())
+    }
+
+    pub fn insert(&self, spec: Arc<SessionSpec>) {
+        let prev = self.specs.lock().unwrap().insert(spec.session, spec);
+        assert!(prev.is_none(), "duplicate session spec");
+    }
+
+    pub fn get(&self, session: SessionId) -> Option<Arc<SessionSpec>> {
+        self.specs.lock().unwrap().get(&session).cloned()
+    }
+
+    pub fn remove(&self, session: SessionId) {
+        self.specs.lock().unwrap().remove(&session);
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Final result of a session's Newton iteration, handed to the driver.
+pub struct SessionOutcome {
+    pub beta: Vec<f64>,
+    pub iterations: u32,
+    pub deviance_trace: Vec<f64>,
+    /// Coordinator-side reconstruction + Newton seconds (the centers'
+    /// share of central time lives in the spec's busy counters).
+    pub central_secs: f64,
+}
+
+/// What the driver should do after feeding a response to the machine.
+pub enum SessionStep {
+    /// Waiting for more center responses this round.
+    Pending,
+    /// Round complete: send the next round's messages.
+    Continue(Vec<(NodeId, Message)>),
+    /// Fit finished: send the teardown messages, then report.
+    Done {
+        outgoing: Vec<(NodeId, Message)>,
+        outcome: SessionOutcome,
+    },
+}
+
+/// Coordinator-side Newton state machine for one session.
+pub struct SessionState {
+    spec: Arc<SessionSpec>,
+    mode: SecurityMode,
+    lambda: f64,
+    tol: f64,
+    max_iters: usize,
+    beta: Vec<f64>,
+    dev_prev: f64,
+    deviance_trace: Vec<f64>,
+    iter: u32,
+    iterations: u32,
+    responses: Vec<(u16, HessianPayload, Vec<Fp>, Fp)>,
+    central_secs: f64,
+    pub started: Instant,
+}
+
+impl SessionState {
+    pub fn new(
+        spec: Arc<SessionSpec>,
+        mode: SecurityMode,
+        lambda: f64,
+        tol: f64,
+        max_iters: usize,
+    ) -> SessionState {
+        let d = spec.d();
+        let w = spec.num_centers();
+        SessionState {
+            spec,
+            mode,
+            lambda,
+            tol,
+            max_iters,
+            beta: vec![0.0; d],
+            dev_prev: f64::INFINITY,
+            deviance_trace: Vec::new(),
+            iter: 0,
+            iterations: 1,
+            responses: Vec::with_capacity(w),
+            central_secs: 0.0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn session(&self) -> SessionId {
+        self.spec.session
+    }
+
+    pub fn spec(&self) -> &Arc<SessionSpec> {
+        &self.spec
+    }
+
+    /// Messages opening the first Newton round.
+    pub fn begin(&self) -> Vec<(NodeId, Message)> {
+        self.round_messages()
+    }
+
+    /// Broadcast β + aggregate requests for the current iteration.
+    fn round_messages(&self) -> Vec<(NodeId, Message)> {
+        let s = self.spec.num_institutions();
+        let w = self.spec.num_centers();
+        let mut out = Vec::with_capacity(s + w);
+        for j in 0..s {
+            out.push((
+                NodeId::Institution(j as u16),
+                Message::BetaBroadcast {
+                    iter: self.iter,
+                    beta: self.beta.clone(),
+                },
+            ));
+        }
+        for c in 0..w {
+            out.push((
+                NodeId::Center(c as u16),
+                Message::AggregateRequest {
+                    iter: self.iter,
+                    expected: s as u16,
+                },
+            ));
+        }
+        out
+    }
+
+    /// Teardown messages: `Finished` to every node of this session
+    /// (institutions get the final β for local use; centers drop their
+    /// per-session state).
+    fn finish_messages(&self) -> Vec<(NodeId, Message)> {
+        let s = self.spec.num_institutions();
+        let w = self.spec.num_centers();
+        let mut out = Vec::with_capacity(s + w);
+        for j in 0..s {
+            out.push((
+                NodeId::Institution(j as u16),
+                Message::Finished {
+                    iter: self.iterations - 1,
+                    beta: self.beta.clone(),
+                },
+            ));
+        }
+        for c in 0..w {
+            out.push((
+                NodeId::Center(c as u16),
+                Message::Finished {
+                    iter: self.iterations - 1,
+                    beta: vec![],
+                },
+            ));
+        }
+        out
+    }
+
+    /// Fold one center's aggregate response into the round; when all w
+    /// centers have answered, reconstruct the global sums from a
+    /// t-quorum and apply the regularized Newton update (Eq. 3).
+    pub fn on_aggregate_response(
+        &mut self,
+        center: u16,
+        hessian: HessianPayload,
+        g_share: Vec<Fp>,
+        dev_share: Fp,
+        riter: u32,
+    ) -> anyhow::Result<SessionStep> {
+        anyhow::ensure!(
+            riter == self.iter,
+            "session {}: stale response for iter {riter} (at {})",
+            self.spec.session,
+            self.iter
+        );
+        self.responses.push((center, hessian, g_share, dev_share));
+        let w = self.spec.num_centers();
+        if self.responses.len() < w {
+            return Ok(SessionStep::Pending);
+        }
+
+        // Centralized phase: reconstruct from a t-quorum, update, check.
+        let t_central = Instant::now();
+        let params = self.spec.params;
+        let codec = self.spec.codec;
+        let d = self.spec.d();
+        let threshold = params.threshold;
+        self.responses.sort_by_key(|(c, ..)| *c);
+        let quorum = &self.responses[..threshold];
+        let g_quorum: Vec<(usize, &[Fp])> = quorum
+            .iter()
+            .map(|(c, _, g, _)| (*c as usize, g.as_slice()))
+            .collect();
+        let g_total = codec.decode_slice(&reconstruct_batch(params, &g_quorum)?);
+        let dev_quorum: Vec<(usize, Fp)> = quorum
+            .iter()
+            .map(|(c, _, _, dv)| (*c as usize, *dv))
+            .collect();
+        let dev_total = codec.decode(reconstruct_scalar(params, &dev_quorum)?);
+        let h_total = match self.mode {
+            SecurityMode::Pragmatic => {
+                // Lead center (id 0) carries the plaintext aggregate.
+                let h = self
+                    .responses
+                    .iter()
+                    .find_map(|(_, hp, ..)| match hp {
+                        HessianPayload::Plain(v) => Some(v),
+                        _ => None,
+                    })
+                    .ok_or_else(|| anyhow::anyhow!("no plaintext hessian in responses"))?;
+                anyhow::ensure!(h.len() == packed_len(d), "hessian length from centers");
+                unpack_upper(h, d)
+            }
+            SecurityMode::Full => {
+                let h_quorum: Vec<(usize, &[Fp])> = quorum
+                    .iter()
+                    .map(|(c, hp, ..)| match hp {
+                        HessianPayload::Shared(v) => Ok((*c as usize, v.as_slice())),
+                        _ => Err(anyhow::anyhow!("expected shared hessian")),
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                let h_packed = codec.decode_slice(&reconstruct_batch(params, &h_quorum)?);
+                unpack_upper(&h_packed, d)
+            }
+        };
+
+        let step = newton_update(&h_total, &g_total, dev_total, &self.beta, self.lambda)?;
+        self.deviance_trace.push(step.penalized_dev);
+        // Primary criterion: deviance change < tol (paper: 1e-10).
+        // Safety net: β stationarity — at the protocol's fixed point the
+        // decoded aggregates are quantized, so the Newton step can bottom
+        // out at the quantization floor (≈(H+λI)⁻¹·2^-frac_bits) while
+        // the deviance still flickers; a stalled β means converged.
+        let beta_stalled = step
+            .beta_new
+            .iter()
+            .zip(&self.beta)
+            .all(|(a, b)| (a - b).abs() < 1e-9);
+        let done = converged(self.dev_prev, step.penalized_dev, self.tol) || beta_stalled;
+        self.dev_prev = step.penalized_dev;
+        if !done {
+            self.beta = step.beta_new;
+        }
+        self.central_secs += t_central.elapsed().as_secs_f64();
+        self.responses.clear();
+
+        if done || self.iterations as usize >= self.max_iters {
+            let outgoing = self.finish_messages();
+            return Ok(SessionStep::Done {
+                outgoing,
+                outcome: SessionOutcome {
+                    beta: self.beta.clone(),
+                    iterations: self.iterations,
+                    deviance_trace: std::mem::take(&mut self.deviance_trace),
+                    central_secs: self.central_secs,
+                },
+            });
+        }
+        self.iter += 1;
+        self.iterations = self.iter + 1;
+        Ok(SessionStep::Continue(self.round_messages()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    fn spec(session: SessionId, s: usize, w: usize, t: usize, d: usize) -> Arc<SessionSpec> {
+        let mut rng = SplitMix64::new(5);
+        let shards = (0..s)
+            .map(|_| {
+                let mut x = Matrix::zeros(8, d);
+                for v in x.data.iter_mut() {
+                    *v = rng.next_gaussian();
+                }
+                let y = (0..8).map(|_| f64::from(rng.next_bernoulli(0.5))).collect();
+                Arc::new(ShardData { x, y })
+            })
+            .collect();
+        Arc::new(SessionSpec::new(
+            session,
+            shards,
+            ShamirParams::new(t, w).unwrap(),
+            FixedCodec::default(),
+            false,
+            1,
+            42,
+        ))
+    }
+
+    #[test]
+    fn share_seeds_are_session_and_institution_separated() {
+        let a = spec(1, 3, 5, 3, 4);
+        let b = spec(2, 3, 5, 3, 4);
+        // distinct across sessions and institutions, stable per pair
+        assert_ne!(a.institution_share_seed(0), b.institution_share_seed(0));
+        assert_ne!(a.institution_share_seed(0), a.institution_share_seed(1));
+        assert_eq!(a.institution_share_seed(2), spec(1, 3, 5, 3, 4).institution_share_seed(2));
+    }
+
+    #[test]
+    fn registry_insert_get_remove() {
+        let reg = SessionRegistry::new();
+        assert!(reg.is_empty());
+        reg.insert(spec(3, 2, 3, 2, 4));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get(3).unwrap().session, 3);
+        assert!(reg.get(4).is_none());
+        reg.remove(3);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn round_messages_cover_all_nodes() {
+        let st = SessionState::new(spec(1, 3, 5, 3, 4), SecurityMode::Pragmatic, 1.0, 1e-10, 10);
+        let msgs = st.begin();
+        assert_eq!(msgs.len(), 3 + 5);
+        let broadcasts = msgs
+            .iter()
+            .filter(|(to, m)| {
+                matches!(to, NodeId::Institution(_))
+                    && matches!(m, Message::BetaBroadcast { iter: 0, .. })
+            })
+            .count();
+        let requests = msgs
+            .iter()
+            .filter(|(to, m)| {
+                matches!(to, NodeId::Center(_))
+                    && matches!(m, Message::AggregateRequest { iter: 0, expected: 3 })
+            })
+            .count();
+        assert_eq!(broadcasts, 3);
+        assert_eq!(requests, 5);
+    }
+
+    #[test]
+    fn stale_iteration_is_rejected() {
+        let mut st =
+            SessionState::new(spec(1, 2, 3, 2, 3), SecurityMode::Pragmatic, 1.0, 1e-10, 10);
+        let err = st.on_aggregate_response(0, HessianPayload::Absent, vec![], Fp::ZERO, 5);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn waits_for_all_centers() {
+        let mut st =
+            SessionState::new(spec(1, 2, 3, 2, 3), SecurityMode::Pragmatic, 1.0, 1e-10, 10);
+        let step = st
+            .on_aggregate_response(
+                1,
+                HessianPayload::Absent,
+                vec![Fp::ZERO; 3],
+                Fp::ZERO,
+                0,
+            )
+            .unwrap();
+        assert!(matches!(step, SessionStep::Pending));
+    }
+}

@@ -1,28 +1,63 @@
-//! Simulated study network.
+//! Simulated study network, multiplexing many study sessions.
 //!
 //! Institutions, computation centers and the coordinator run as
 //! threads in one process (exactly how the paper evaluated: "we
 //! simulated distributed computing nodes on a single computer and
-//! report the network data exchanged"). Every [`Endpoint::send`]
-//! serializes the message through the real protocol codec, counts the
-//! bytes on shared atomic counters, and delivers the *bytes* to the
-//! destination mailbox, where [`Endpoint::recv`] decodes them — so the
-//! traffic numbers reported by the benches are true serialized sizes
-//! and the codec is exercised on every hop.
+//! report the network data exchanged"). Every [`Endpoint::send_session`]
+//! serializes the message through the real protocol codec — prefixed
+//! with the frame's [`SessionId`] header — counts the bytes on shared
+//! counters (global *and* per-session), and delivers the *bytes* to the
+//! destination mailbox, where [`Endpoint::recv_session`] decodes them —
+//! so the traffic numbers reported by the benches are true serialized
+//! sizes and the codec is exercised on every hop.
+//!
+//! Routing is per `(NodeId, SessionId)`: a node normally registers one
+//! catch-all mailbox ([`Network::register`]) that serves every session,
+//! but a session-scoped mailbox ([`Network::register_session`]) takes
+//! precedence for its session's frames, which lets tooling tap or
+//! isolate a single study on a shared fabric.
 
-use crate::protocol::{decode, encode, Message, NodeId};
+use crate::protocol::{decode_frame, encode_frame, Message, NodeId, SessionId, CONTROL_SESSION};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-/// A delivered frame: sender + encoded payload.
+/// A delivered frame: sender + encoded bytes (session header + body).
 struct Frame {
     from: NodeId,
     bytes: Vec<u8>,
 }
 
-/// Shared traffic accounting.
+/// Byte/message totals for one traffic class breakdown (used both for
+/// the network-wide aggregate snapshot and per-session attribution).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionTraffic {
+    pub total_bytes: u64,
+    pub total_messages: u64,
+    pub submission_bytes: u64,
+    pub central_bytes: u64,
+    pub broadcast_bytes: u64,
+}
+
+impl SessionTraffic {
+    fn record(&mut self, from: NodeId, to: NodeId, n: u64) {
+        self.total_bytes += n;
+        self.total_messages += 1;
+        match (from, to) {
+            (NodeId::Institution(_), NodeId::Center(_)) => self.submission_bytes += n,
+            (NodeId::Coordinator, NodeId::Center(_)) | (NodeId::Center(_), NodeId::Coordinator) => {
+                self.central_bytes += n;
+            }
+            (NodeId::Coordinator, NodeId::Institution(_)) => self.broadcast_bytes += n,
+            _ => {}
+        }
+    }
+}
+
+/// Shared traffic accounting: lock-free global atomics plus a locked
+/// per-session map (sessions are attributed from the frame header, so
+/// per-session totals always sum to the global totals).
 #[derive(Default)]
 pub struct TrafficCounters {
     pub total_bytes: AtomicU64,
@@ -34,20 +69,62 @@ pub struct TrafficCounters {
     pub central_bytes: AtomicU64,
     /// Bytes on coordinator→institution broadcast links.
     pub broadcast_bytes: AtomicU64,
+    /// Per-session attribution. Entries are retained after a session
+    /// completes so callers can read a finished study's traffic; at
+    /// ~56 bytes per session ever submitted this grows monotonically
+    /// on a long-lived network (ROADMAP records the retire-into-an-
+    /// aggregate follow-up for truly unbounded deployments).
+    per_session: Mutex<HashMap<SessionId, SessionTraffic>>,
 }
 
 impl TrafficCounters {
     pub fn snapshot(&self) -> TrafficSnapshot {
+        // Hold the per-session lock while reading the atomics:
+        // `record` updates both under the same lock, so a snapshot can
+        // never observe a frame in the globals but not in the map (or
+        // vice versa) — the sum invariant holds even mid-run.
+        let guard = self.per_session.lock().unwrap();
+        let mut per_session: Vec<(SessionId, u64)> = guard
+            .iter()
+            .map(|(&sid, t)| (sid, t.total_bytes))
+            .collect();
+        per_session.sort_unstable_by_key(|&(sid, _)| sid);
         TrafficSnapshot {
             total_bytes: self.total_bytes.load(Ordering::Relaxed),
             total_messages: self.total_messages.load(Ordering::Relaxed),
             submission_bytes: self.submission_bytes.load(Ordering::Relaxed),
             central_bytes: self.central_bytes.load(Ordering::Relaxed),
             broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
+            per_session,
         }
     }
 
-    fn record(&self, from: NodeId, to: NodeId, n: u64) {
+    /// Class-resolved traffic attributed to one session, as a snapshot
+    /// whose `per_session` holds that single entry.
+    pub fn session_snapshot(&self, session: SessionId) -> TrafficSnapshot {
+        let t = self
+            .per_session
+            .lock()
+            .unwrap()
+            .get(&session)
+            .copied()
+            .unwrap_or_default();
+        TrafficSnapshot {
+            total_bytes: t.total_bytes,
+            total_messages: t.total_messages,
+            submission_bytes: t.submission_bytes,
+            central_bytes: t.central_bytes,
+            broadcast_bytes: t.broadcast_bytes,
+            per_session: vec![(session, t.total_bytes)],
+        }
+    }
+
+    fn record(&self, from: NodeId, to: NodeId, session: SessionId, n: u64) {
+        // Globals and the per-session entry are updated under one lock
+        // so `snapshot` (which reads under the same lock) always sees
+        // them consistent. The lock was already taken per frame for
+        // the map; covering the atomics costs nothing extra.
+        let mut per = self.per_session.lock().unwrap();
         self.total_bytes.fetch_add(n, Ordering::Relaxed);
         self.total_messages.fetch_add(1, Ordering::Relaxed);
         match (from, to) {
@@ -62,29 +139,49 @@ impl TrafficCounters {
             }
             _ => {}
         }
+        per.entry(session).or_default().record(from, to, n);
     }
 }
 
 /// Plain-data copy of the counters.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TrafficSnapshot {
     pub total_bytes: u64,
     pub total_messages: u64,
     pub submission_bytes: u64,
     pub central_bytes: u64,
     pub broadcast_bytes: u64,
+    /// Byte totals attributed per session (sorted by session id); the
+    /// entries always sum to `total_bytes`.
+    pub per_session: Vec<(SessionId, u64)>,
 }
 
 impl TrafficSnapshot {
     /// Difference since an earlier snapshot.
     pub fn since(&self, earlier: &TrafficSnapshot) -> TrafficSnapshot {
+        let before: HashMap<SessionId, u64> = earlier.per_session.iter().copied().collect();
+        let per_session: Vec<(SessionId, u64)> = self
+            .per_session
+            .iter()
+            .map(|&(sid, b)| (sid, b - before.get(&sid).copied().unwrap_or(0)))
+            .filter(|&(_, b)| b > 0)
+            .collect();
         TrafficSnapshot {
             total_bytes: self.total_bytes - earlier.total_bytes,
             total_messages: self.total_messages - earlier.total_messages,
             submission_bytes: self.submission_bytes - earlier.submission_bytes,
             central_bytes: self.central_bytes - earlier.central_bytes,
             broadcast_bytes: self.broadcast_bytes - earlier.broadcast_bytes,
+            per_session,
         }
+    }
+
+    /// Bytes attributed to one session in this snapshot.
+    pub fn session_bytes(&self, session: SessionId) -> u64 {
+        self.per_session
+            .iter()
+            .find(|&&(sid, _)| sid == session)
+            .map_or(0, |&(_, b)| b)
     }
 }
 
@@ -121,9 +218,18 @@ impl From<crate::protocol::CodecError> for TransportError {
     }
 }
 
-/// The network fabric: a registry of mailboxes plus traffic counters.
+/// Routing key: session-scoped mailboxes (`session: Some(..)`) take
+/// precedence over a node's catch-all mailbox (`session: None`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct RouteKey {
+    node: NodeId,
+    session: Option<SessionId>,
+}
+
+/// The network fabric: a per-`(NodeId, SessionId)` mailbox registry
+/// plus global and per-session traffic counters.
 pub struct Network {
-    senders: Mutex<HashMap<NodeId, Sender<Frame>>>,
+    senders: Mutex<HashMap<RouteKey, Sender<Frame>>>,
     pub counters: TrafficCounters,
 }
 
@@ -135,28 +241,57 @@ impl Network {
         })
     }
 
-    /// Register a node and obtain its endpoint (mailbox + send handle).
+    /// Register a node's catch-all mailbox (serves every session that
+    /// has no session-scoped mailbox) and obtain its endpoint.
     pub fn register(self: &Arc<Network>, id: NodeId) -> Endpoint {
+        self.register_key(RouteKey { node: id, session: None })
+    }
+
+    /// Register a session-scoped mailbox for `id`: frames tagged with
+    /// `session` route here instead of the catch-all mailbox.
+    pub fn register_session(self: &Arc<Network>, id: NodeId, session: SessionId) -> Endpoint {
+        self.register_key(RouteKey {
+            node: id,
+            session: Some(session),
+        })
+    }
+
+    fn register_key(self: &Arc<Network>, key: RouteKey) -> Endpoint {
         let (tx, rx) = channel();
-        let prev = self.senders.lock().unwrap().insert(id, tx);
-        assert!(prev.is_none(), "duplicate registration of {id}");
+        let prev = self.senders.lock().unwrap().insert(key, tx);
+        assert!(
+            prev.is_none(),
+            "duplicate registration of {} (session {:?})",
+            key.node,
+            key.session
+        );
         Endpoint {
-            id,
+            id: key.node,
             net: Arc::clone(self),
             inbox: rx,
         }
     }
 
-    fn route(&self, from: NodeId, to: NodeId, bytes: Vec<u8>) -> Result<(), TransportError> {
+    fn route(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        session: SessionId,
+        bytes: Vec<u8>,
+    ) -> Result<(), TransportError> {
         let n = bytes.len() as u64;
         let senders = self.senders.lock().unwrap();
         let tx = senders
-            .get(&to)
+            .get(&RouteKey {
+                node: to,
+                session: Some(session),
+            })
+            .or_else(|| senders.get(&RouteKey { node: to, session: None }))
             .ok_or(TransportError::UnknownDestination(to))?;
         tx.send(Frame { from, bytes })
             .map_err(|_| TransportError::Disconnected(to))?;
         drop(senders);
-        self.counters.record(from, to, n);
+        self.counters.record(from, to, session, n);
         Ok(())
     }
 }
@@ -169,33 +304,65 @@ pub struct Endpoint {
 }
 
 impl Endpoint {
-    /// Serialize and send a message.
-    pub fn send(&self, to: NodeId, msg: &Message) -> Result<(), TransportError> {
-        self.net.route(self.id, to, encode(msg))
+    /// Serialize and send a message tagged with a session id.
+    pub fn send_session(
+        &self,
+        to: NodeId,
+        session: SessionId,
+        msg: &Message,
+    ) -> Result<(), TransportError> {
+        self.net.route(self.id, to, session, encode_frame(session, msg))
     }
 
-    /// Block for the next message; decodes the frame.
-    pub fn recv(&self) -> Result<(NodeId, Message), TransportError> {
+    /// Single-session compatibility send: tags the frame with
+    /// [`CONTROL_SESSION`].
+    pub fn send(&self, to: NodeId, msg: &Message) -> Result<(), TransportError> {
+        self.send_session(to, CONTROL_SESSION, msg)
+    }
+
+    /// Block for the next frame; decodes sender, session and message.
+    pub fn recv_session(&self) -> Result<(NodeId, SessionId, Message), TransportError> {
         let frame = self
             .inbox
             .recv()
             .map_err(|_| TransportError::Disconnected(self.id))?;
-        let msg = decode(&frame.bytes)?;
-        Ok((frame.from, msg))
+        let (session, msg) = decode_frame(&frame.bytes)?;
+        Ok((frame.from, session, msg))
     }
 
-    /// Receive with a timeout (used by tests to assert non-delivery).
-    pub fn recv_timeout(
+    /// Block for the next message, discarding the session tag
+    /// (single-session compatibility path).
+    pub fn recv(&self) -> Result<(NodeId, Message), TransportError> {
+        let (from, _, msg) = self.recv_session()?;
+        Ok((from, msg))
+    }
+
+    /// [`Endpoint::recv_session`] with a timeout; `Ok(None)` on expiry.
+    pub fn recv_session_timeout(
         &self,
         dur: std::time::Duration,
-    ) -> Result<Option<(NodeId, Message)>, TransportError> {
+    ) -> Result<Option<(NodeId, SessionId, Message)>, TransportError> {
         match self.inbox.recv_timeout(dur) {
-            Ok(frame) => Ok(Some((frame.from, decode(&frame.bytes)?))),
+            Ok(frame) => {
+                let (session, msg) = decode_frame(&frame.bytes)?;
+                Ok(Some((frame.from, session, msg)))
+            }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 Err(TransportError::Disconnected(self.id))
             }
         }
+    }
+
+    /// Receive with a timeout, discarding the session tag (used by
+    /// tests to assert non-delivery).
+    pub fn recv_timeout(
+        &self,
+        dur: std::time::Duration,
+    ) -> Result<Option<(NodeId, Message)>, TransportError> {
+        Ok(self
+            .recv_session_timeout(dur)?
+            .map(|(from, _, msg)| (from, msg)))
     }
 
     /// Traffic counter handle (shared network-wide).
@@ -235,12 +402,49 @@ mod tests {
     }
 
     #[test]
+    fn session_tag_survives_the_wire() {
+        let net = Network::new();
+        let a = net.register(NodeId::Coordinator);
+        let b = net.register(NodeId::Center(0));
+        a.send_session(NodeId::Center(0), 42, &Message::Shutdown)
+            .unwrap();
+        a.send_session(NodeId::Center(0), SessionId::MAX, &Message::Shutdown)
+            .unwrap();
+        let (_, s1, _) = b.recv_session().unwrap();
+        let (_, s2, _) = b.recv_session().unwrap();
+        assert_eq!(s1, 42);
+        assert_eq!(s2, SessionId::MAX);
+    }
+
+    #[test]
+    fn session_scoped_mailbox_takes_precedence() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let catch_all = net.register(NodeId::Center(0));
+        let scoped = net.register_session(NodeId::Center(0), 7);
+        coord
+            .send_session(NodeId::Center(0), 7, &Message::Shutdown)
+            .unwrap();
+        coord
+            .send_session(NodeId::Center(0), 8, &Message::Shutdown)
+            .unwrap();
+        // Session 7 routed to the scoped mailbox, session 8 to the
+        // catch-all.
+        let (_, s, _) = scoped.recv_session().unwrap();
+        assert_eq!(s, 7);
+        let (_, s, _) = catch_all.recv_session().unwrap();
+        assert_eq!(s, 8);
+        assert!(catch_all
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
     fn unknown_destination_errors() {
         let net = Network::new();
         let a = net.register(NodeId::Coordinator);
-        let err = a
-            .send(NodeId::Center(9), &Message::Shutdown)
-            .unwrap_err();
+        let err = a.send(NodeId::Center(9), &Message::Shutdown).unwrap_err();
         assert!(matches!(err, TransportError::UnknownDestination(_)));
     }
 
@@ -267,8 +471,14 @@ mod tests {
 
         let snap = coord.counters();
         assert_eq!(snap.total_messages, 3);
-        assert_eq!(snap.broadcast_bytes, crate::protocol::encode(&beta).len() as u64);
-        assert_eq!(snap.submission_bytes, crate::protocol::encode(&sub).len() as u64);
+        assert_eq!(
+            snap.broadcast_bytes,
+            crate::protocol::encode_frame(CONTROL_SESSION, &beta).len() as u64
+        );
+        assert_eq!(
+            snap.submission_bytes,
+            crate::protocol::encode_frame(CONTROL_SESSION, &sub).len() as u64
+        );
         assert!(snap.central_bytes > 0);
         assert_eq!(
             snap.total_bytes,
@@ -278,6 +488,65 @@ mod tests {
         let _ = inst.recv().unwrap();
         let _ = center.recv().unwrap();
         let _ = center.recv().unwrap();
+    }
+
+    #[test]
+    fn per_session_counters_sum_to_global() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        for (session, iters) in [(1u32, 3usize), (2, 1), (9, 2)] {
+            for i in 0..iters {
+                coord
+                    .send_session(
+                        NodeId::Institution(0),
+                        session,
+                        &Message::BetaBroadcast {
+                            iter: i as u32,
+                            beta: vec![0.0; session as usize],
+                        },
+                    )
+                    .unwrap();
+            }
+        }
+        let snap = coord.counters();
+        assert_eq!(snap.per_session.len(), 3);
+        let sum: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(sum, snap.total_bytes);
+        // sorted by session id, session 1 saw 3 messages
+        assert_eq!(snap.per_session[0].0, 1);
+        assert!(snap.per_session[0].1 > snap.per_session[1].1);
+        // class-resolved per-session view matches its entry
+        let s1 = net.counters.session_snapshot(1);
+        assert_eq!(s1.total_bytes, snap.per_session[0].1);
+        assert_eq!(s1.total_messages, 3);
+        assert_eq!(s1.broadcast_bytes, s1.total_bytes);
+        assert_eq!(snap.session_bytes(2), snap.per_session[1].1);
+        while inst.recv_timeout(Duration::from_millis(5)).unwrap().is_some() {}
+    }
+
+    #[test]
+    fn snapshot_since_diffs_per_session() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let _inst = net.register(NodeId::Institution(0));
+        coord
+            .send_session(NodeId::Institution(0), 1, &Message::Shutdown)
+            .unwrap();
+        let before = coord.counters();
+        coord
+            .send_session(NodeId::Institution(0), 1, &Message::Shutdown)
+            .unwrap();
+        coord
+            .send_session(NodeId::Institution(0), 2, &Message::Shutdown)
+            .unwrap();
+        let diff = coord.counters().since(&before);
+        assert_eq!(diff.total_messages, 2);
+        assert_eq!(diff.per_session.len(), 2);
+        assert_eq!(
+            diff.per_session.iter().map(|&(_, b)| b).sum::<u64>(),
+            diff.total_bytes
+        );
     }
 
     #[test]
@@ -294,11 +563,12 @@ mod tests {
         let coord = net.register(NodeId::Coordinator);
         let inst = net.register(NodeId::Institution(3));
         let handle = std::thread::spawn(move || {
-            let (_, msg) = inst.recv().unwrap();
+            let (_, session, msg) = inst.recv_session().unwrap();
             match msg {
                 Message::BetaBroadcast { iter, .. } => {
-                    inst.send(
+                    inst.send_session(
                         NodeId::Coordinator,
+                        session,
                         &Message::Finished { iter, beta: vec![] },
                     )
                     .unwrap();
@@ -307,13 +577,15 @@ mod tests {
             }
         });
         coord
-            .send(
+            .send_session(
                 NodeId::Institution(3),
+                5,
                 &Message::BetaBroadcast { iter: 7, beta: vec![] },
             )
             .unwrap();
-        let (from, msg) = coord.recv().unwrap();
+        let (from, session, msg) = coord.recv_session().unwrap();
         assert_eq!(from, NodeId::Institution(3));
+        assert_eq!(session, 5);
         assert_eq!(msg, Message::Finished { iter: 7, beta: vec![] });
         handle.join().unwrap();
     }
@@ -401,10 +673,10 @@ mod wan_tests {
     fn snapshot(sub: u64, cen: u64, bro: u64) -> TrafficSnapshot {
         TrafficSnapshot {
             total_bytes: sub + cen + bro,
-            total_messages: 0,
             submission_bytes: sub,
             central_bytes: cen,
             broadcast_bytes: bro,
+            ..Default::default()
         }
     }
 

@@ -1,19 +1,22 @@
-//! Protocol-level integration: node state machines, failure handling,
-//! message-flow invariants, and traffic accounting across the full
-//! institution ↔ center ↔ coordinator topology.
+//! Protocol-level integration: worker state machines, failure
+//! handling, message-flow invariants, and traffic accounting across
+//! the full institution ↔ center ↔ coordinator topology, driven by
+//! hand over session-tagged frames.
 
-use privlr::center::{run_center, CenterConfig};
+use privlr::center::{run_center_worker, CenterWorkerConfig};
 use privlr::field::Fp;
 use privlr::fixed::FixedCodec;
-use privlr::institution::{run_institution, InstitutionConfig};
+use privlr::institution::{run_institution_worker, InstitutionWorkerConfig};
 use privlr::linalg::Matrix;
-use privlr::protocol::{HessianPayload, Message, NodeId};
+use privlr::protocol::{HessianPayload, Message, NodeId, SessionId};
 use privlr::runtime::ComputeHandle;
+use privlr::session::{SessionRegistry, SessionSpec, ShardData};
 use privlr::shamir::{reconstruct_batch, ShamirParams};
 use privlr::transport::Network;
 use privlr::util::rng::{Rng, SplitMix64};
+use std::sync::Arc;
 
-fn shard(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+fn shard(n: usize, d: usize, seed: u64) -> Arc<ShardData> {
     let mut rng = SplitMix64::new(seed);
     let mut x = Matrix::zeros(n, d);
     let mut y = vec![0.0; n];
@@ -24,68 +27,88 @@ fn shard(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
         }
         y[i] = f64::from(rng.next_bernoulli(0.45));
     }
-    (x, y)
+    Arc::new(ShardData { x, y })
+}
+
+fn make_spec(
+    session: SessionId,
+    shards: Vec<Arc<ShardData>>,
+    t: usize,
+    w: usize,
+) -> Arc<SessionSpec> {
+    Arc::new(SessionSpec::new(
+        session,
+        shards,
+        ShamirParams::new(t, w).unwrap(),
+        FixedCodec::default(),
+        false,
+        1,
+        1000,
+    ))
 }
 
 /// A full manual round: 3 institutions × 5 centers, coordinator drives
-/// by hand and verifies the reconstructed aggregates against plaintext.
+/// by hand (session 1) and verifies the reconstructed aggregates
+/// against plaintext.
 #[test]
 fn manual_round_reconstructs_exact_aggregates() {
     let s = 3usize;
     let w = 5usize;
     let t = 3usize;
     let d = 4usize;
+    let session: SessionId = 1;
     let params = ShamirParams::new(t, w).unwrap();
     let codec = FixedCodec::default();
     let net = Network::new();
     let coord = net.register(NodeId::Coordinator);
 
+    let shards: Vec<Arc<ShardData>> = (0..s).map(|j| shard(40 + j * 10, d, j as u64)).collect();
+    let registry = SessionRegistry::new();
+    registry.insert(make_spec(session, shards.clone(), t, w));
+
     let mut center_joins = Vec::new();
     for c in 0..w {
         let ep = net.register(NodeId::Center(c as u16));
-        let cfg = CenterConfig::new(c as u16, d, false);
-        center_joins.push(std::thread::spawn(move || run_center(cfg, ep)));
+        let cfg = CenterWorkerConfig {
+            center_id: c as u16,
+            registry: registry.clone(),
+        };
+        center_joins.push(std::thread::spawn(move || run_center_worker(cfg, ep)));
     }
-    let mut shards = Vec::new();
     let mut inst_joins = Vec::new();
     for j in 0..s {
-        let (x, y) = shard(40 + j * 10, d, j as u64);
-        shards.push((x.clone(), y.clone()));
         let ep = net.register(NodeId::Institution(j as u16));
-        let cfg = InstitutionConfig {
+        let cfg = InstitutionWorkerConfig {
             institution_id: j as u16,
-            x,
-            y,
-            params,
-            codec,
-            full_security: false,
+            registry: registry.clone(),
             engine: ComputeHandle::rust(),
-            share_seed: 1000 + j as u64,
-            kernel_threads: 1,
         };
-        inst_joins.push(std::thread::spawn(move || run_institution(cfg, ep)));
+        inst_joins.push(std::thread::spawn(move || run_institution_worker(cfg, ep)));
     }
 
     let beta = vec![0.05, -0.1, 0.2, 0.0];
     for j in 0..s {
         coord
-            .send(
+            .send_session(
                 NodeId::Institution(j as u16),
+                session,
                 &Message::BetaBroadcast { iter: 0, beta: beta.clone() },
             )
             .unwrap();
     }
     for c in 0..w {
         coord
-            .send(
+            .send_session(
                 NodeId::Center(c as u16),
+                session,
                 &Message::AggregateRequest { iter: 0, expected: s as u16 },
             )
             .unwrap();
     }
     let mut responses = Vec::new();
     while responses.len() < w {
-        let (_, msg) = coord.recv().unwrap();
+        let (_, rsession, msg) = coord.recv_session().unwrap();
+        assert_eq!(rsession, session);
         if let Message::AggregateResponse { center, hessian, g_share, dev_share, .. } = msg {
             responses.push((center as usize, hessian, g_share, dev_share));
         }
@@ -94,8 +117,8 @@ fn manual_round_reconstructs_exact_aggregates() {
 
     // Plaintext expectation.
     let mut expect = privlr::model::LocalStats::zeros(d);
-    for (x, y) in &shards {
-        expect.merge(&privlr::model::local_stats(x, y, &beta));
+    for sh in &shards {
+        expect.merge(&privlr::model::local_stats(&sh.x, &sh.y, &beta));
     }
 
     // Gradient via any t centers.
@@ -139,18 +162,23 @@ fn manual_round_reconstructs_exact_aggregates() {
 }
 
 /// Failure injection: an institution that sends a malformed (wrong-d)
-/// submission makes the center error out rather than corrupt state.
+/// submission makes the center report a session-tagged NodeError
+/// instead of corrupting state — and the worker survives to serve
+/// other sessions.
 #[test]
 fn center_rejects_malformed_submission() {
     let net = Network::new();
-    let _coord = net.register(NodeId::Coordinator);
+    let coord = net.register(NodeId::Coordinator);
     let inst = net.register(NodeId::Institution(0));
     let cep = net.register(NodeId::Center(0));
-    let cfg = CenterConfig::new(0, 4, false);
-    let join = std::thread::spawn(move || run_center(cfg, cep));
-    // gradient share has d=2, center expects d=4
-    inst.send(
+    let registry = SessionRegistry::new();
+    registry.insert(make_spec(2, vec![shard(10, 4, 0)], 1, 1));
+    let cfg = CenterWorkerConfig { center_id: 0, registry };
+    let join = std::thread::spawn(move || run_center_worker(cfg, cep));
+    // gradient share has d=2, session 2 expects d=4
+    inst.send_session(
         NodeId::Center(0),
+        2,
         &Message::ShareSubmission {
             iter: 0,
             institution: 0,
@@ -160,37 +188,45 @@ fn center_rejects_malformed_submission() {
         },
     )
     .unwrap();
-    let out = join.join().unwrap();
-    assert!(out.is_err(), "center must reject the malformed submission");
+    let (_, session, msg) = coord.recv_session().unwrap();
+    assert_eq!(session, 2);
+    assert!(
+        matches!(msg, Message::NodeError { node: 0, is_center: true, .. }),
+        "center must reject the malformed submission"
+    );
+    coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+    join.join().unwrap().unwrap();
 }
 
-/// Failure injection: submissions from a node impersonating the
-/// coordinator are rejected by institutions.
+/// Failure injection: broadcasts from a node impersonating the
+/// coordinator are rejected by institutions (NodeError for that
+/// session; worker stays up).
 #[test]
 fn institution_rejects_non_coordinator_broadcast() {
     let net = Network::new();
+    let coord = net.register(NodeId::Coordinator);
     let rogue = net.register(NodeId::Institution(9));
     let iep = net.register(NodeId::Institution(0));
-    let (x, y) = shard(10, 3, 5);
-    let cfg = InstitutionConfig {
+    let registry = SessionRegistry::new();
+    registry.insert(make_spec(1, vec![shard(10, 3, 5)], 1, 1));
+    let cfg = InstitutionWorkerConfig {
         institution_id: 0,
-        x,
-        y,
-        params: ShamirParams::new(1, 1).unwrap(),
-        codec: FixedCodec::default(),
-        full_security: false,
+        registry,
         engine: ComputeHandle::rust(),
-        share_seed: 3,
-        kernel_threads: 1,
     };
-    let join = std::thread::spawn(move || run_institution(cfg, iep));
+    let join = std::thread::spawn(move || run_institution_worker(cfg, iep));
     rogue
-        .send(
+        .send_session(
             NodeId::Institution(0),
+            1,
             &Message::BetaBroadcast { iter: 0, beta: vec![0.0; 3] },
         )
         .unwrap();
-    assert!(join.join().unwrap().is_err());
+    let (_, session, msg) = coord.recv_session().unwrap();
+    assert_eq!(session, 1);
+    assert!(matches!(msg, Message::NodeError { node: 0, is_center: false, .. }));
+    coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
+    join.join().unwrap().unwrap();
 }
 
 /// A center never responds before all expected submissions arrive, even
@@ -201,17 +237,21 @@ fn center_withholds_partial_aggregates() {
     let coord = net.register(NodeId::Coordinator);
     let inst = net.register(NodeId::Institution(0));
     let cep = net.register(NodeId::Center(0));
-    let cfg = CenterConfig::new(0, 1, false);
-    let join = std::thread::spawn(move || run_center(cfg, cep));
+    let registry = SessionRegistry::new();
+    registry.insert(make_spec(6, vec![shard(5, 1, 0), shard(5, 1, 1)], 1, 1));
+    let cfg = CenterWorkerConfig { center_id: 0, registry };
+    let join = std::thread::spawn(move || run_center_worker(cfg, cep));
 
     coord
-        .send(
+        .send_session(
             NodeId::Center(0),
+            6,
             &Message::AggregateRequest { iter: 0, expected: 2 },
         )
         .unwrap();
-    inst.send(
+    inst.send_session(
         NodeId::Center(0),
+        6,
         &Message::ShareSubmission {
             iter: 0,
             institution: 0,
@@ -227,8 +267,9 @@ fn center_withholds_partial_aggregates() {
         .unwrap()
         .is_none());
     // second submission (different institution id is fine from same ep)
-    inst.send(
+    inst.send_session(
         NodeId::Center(0),
+        6,
         &Message::ShareSubmission {
             iter: 0,
             institution: 1,
@@ -238,14 +279,15 @@ fn center_withholds_partial_aggregates() {
         },
     )
     .unwrap();
-    let (_, msg) = coord.recv().unwrap();
+    let (_, _, msg) = coord.recv_session().unwrap();
     assert!(matches!(msg, Message::AggregateResponse { .. }));
     coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
     join.join().unwrap().unwrap();
 }
 
-/// Byte accounting: every message that crossed a link is counted, and
-/// the classifications sum to the total.
+/// Byte accounting: every frame that crossed a link is counted, the
+/// classifications sum to the total, and per-session attribution
+/// covers every byte.
 #[test]
 fn traffic_accounting_is_complete() {
     let ds = privlr::data::synthetic("t", 500, 4, 3, 0.0, 1.0, 9);
@@ -260,12 +302,16 @@ fn traffic_accounting_is_complete() {
         tr.submission_bytes + tr.central_bytes + tr.broadcast_bytes,
         "all links must be classified"
     );
-    // message count: per iter: S broadcasts + S·w submissions + w requests
-    // + w responses; plus teardown S finished + w shutdowns.
+    // message count: per iter: S broadcasts + S·w submissions + w
+    // requests + w responses; plus teardown (S+w) finished frames for
+    // the session and (S+w) control-session shutdowns.
     let (s, w) = (3u64, 5u64);
     let iters = fit.metrics.iterations as u64;
-    let expected = iters * (s + s * w + w + w) + s + w;
+    let expected = iters * (s + s * w + w + w) + (s + w) + (s + w);
     assert_eq!(tr.total_messages, expected);
+    // per-session totals (study session + control session) sum exactly
+    let session_sum: u64 = tr.per_session.iter().map(|&(_, b)| b).sum();
+    assert_eq!(session_sum, tr.total_bytes);
 }
 
 /// Regression: a dataset whose shape has NO artifact bucket must not

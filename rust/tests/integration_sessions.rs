@@ -1,0 +1,174 @@
+//! Session-engine integration: K concurrent fits over ONE persistent
+//! network must be bit-identical — β, deviance traces, iteration
+//! counts, and per-session traffic — to the same fits run
+//! sequentially, and per-session traffic counters must sum to the
+//! global counters. This is the acceptance gate of the
+//! session-multiplexed refactor.
+
+use privlr::config::{ExperimentConfig, SecurityMode};
+use privlr::coordinator::{secure_fit, SecureFitResult};
+use privlr::data::{synthetic, Dataset};
+use privlr::engine::StudyEngine;
+
+/// Five heterogeneous studies sharing one topology (3 institutions,
+/// 5 centers, t=3): different data, λ, tolerance and security modes —
+/// and different dimensions, which exercises per-session worker state.
+fn studies() -> Vec<(Dataset, ExperimentConfig)> {
+    let base = ExperimentConfig {
+        max_iters: 30,
+        ..ExperimentConfig::default()
+    };
+    vec![
+        (
+            synthetic("a", 900, 4, 3, 0.0, 1.0, 301),
+            ExperimentConfig { lambda: 1.0, ..base.clone() },
+        ),
+        (
+            synthetic("b", 600, 6, 3, 0.0, 1.0, 302),
+            ExperimentConfig { lambda: 0.1, ..base.clone() },
+        ),
+        (
+            synthetic("c", 1200, 5, 3, 0.5, 1.5, 303),
+            ExperimentConfig {
+                lambda: 10.0,
+                mode: SecurityMode::Full,
+                ..base.clone()
+            },
+        ),
+        (
+            synthetic("d", 400, 3, 3, 0.0, 1.0, 304),
+            ExperimentConfig { lambda: 2.5, seed: 77, ..base.clone() },
+        ),
+        (
+            synthetic("e", 750, 6, 3, -0.3, 0.8, 305),
+            ExperimentConfig {
+                lambda: 0.01,
+                mode: SecurityMode::Full,
+                tol: 1e-8,
+                ..base
+            },
+        ),
+    ]
+}
+
+fn assert_bit_identical(a: &SecureFitResult, b: &SecureFitResult, label: &str) {
+    assert_eq!(a.beta, b.beta, "{label}: β must be bit-identical");
+    assert_eq!(
+        a.metrics.deviance_trace, b.metrics.deviance_trace,
+        "{label}: deviance traces must be bit-identical"
+    );
+    assert_eq!(
+        a.metrics.iterations, b.metrics.iterations,
+        "{label}: iteration counts must match"
+    );
+}
+
+#[test]
+fn concurrent_sessions_match_sequential_bitwise() {
+    let studies = studies();
+    assert!(studies.len() >= 4, "acceptance requires K >= 4 sessions");
+
+    // Sequential: one persistent engine, one session at a time.
+    let seq_engine = StudyEngine::new(3, 5).unwrap();
+    let sequential: Vec<SecureFitResult> = studies
+        .iter()
+        .map(|(ds, cfg)| seq_engine.submit(cfg, ds).unwrap().join().unwrap())
+        .collect();
+    seq_engine.shutdown().unwrap();
+
+    // Concurrent: a fresh engine, all K sessions in flight together.
+    let con_engine = StudyEngine::new(3, 5).unwrap();
+    let handles: Vec<_> = studies
+        .iter()
+        .map(|(ds, cfg)| con_engine.submit(cfg, ds).unwrap())
+        .collect();
+    // Session ids match the sequential run (1..=K in submission order).
+    for (i, h) in handles.iter().enumerate() {
+        assert_eq!(h.session_id(), (i + 1) as u32);
+    }
+    let concurrent: Vec<SecureFitResult> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let global = con_engine.traffic();
+    con_engine.shutdown().unwrap();
+
+    for (i, (seq, con)) in sequential.iter().zip(&concurrent).enumerate() {
+        assert_bit_identical(seq, con, &format!("study {i}"));
+        // Per-session traffic is deterministic too: the same frames
+        // cross the network whether the session ran alone or among K.
+        assert_eq!(
+            seq.metrics.traffic.total_bytes, con.metrics.traffic.total_bytes,
+            "study {i}: per-session byte totals"
+        );
+        assert_eq!(
+            seq.metrics.traffic.total_messages, con.metrics.traffic.total_messages,
+            "study {i}: per-session message counts"
+        );
+        assert_eq!(
+            seq.metrics.traffic.submission_bytes, con.metrics.traffic.submission_bytes,
+            "study {i}: submission attribution"
+        );
+        assert!(con.metrics.iterations > 1, "study {i} trivially converged");
+    }
+
+    // Per-session counters sum to the global counters.
+    let session_sum: u64 = global.per_session.iter().map(|&(_, b)| b).sum();
+    assert_eq!(session_sum, global.total_bytes);
+    // ... and each session's slice matches its own metrics.
+    for (i, con) in concurrent.iter().enumerate() {
+        let sid = (i + 1) as u32;
+        assert_eq!(
+            global.session_bytes(sid),
+            con.metrics.traffic.total_bytes,
+            "study {i}: global per-session entry"
+        );
+    }
+}
+
+#[test]
+fn engine_sessions_match_the_single_fit_compat_path() {
+    // The compat path (secure_fit: throwaway engine, one session) and
+    // an engine session must agree bitwise — reconstruction is exact in
+    // the field, so even different session ids (hence different share
+    // polynomials) cannot move β.
+    let (ds, cfg) = &studies()[1];
+    let compat = secure_fit(ds, cfg).unwrap();
+    let engine = StudyEngine::new(3, 5).unwrap();
+    // Burn a session id so the engine session's share streams differ
+    // from the compat run's — the fit must not care.
+    let warmup = engine.submit(cfg, ds).unwrap();
+    warmup.join().unwrap();
+    let fit = engine.submit(cfg, ds).unwrap().join().unwrap();
+    engine.shutdown().unwrap();
+    assert_bit_identical(&compat, &fit, "compat-vs-engine");
+}
+
+#[test]
+fn many_sessions_reuse_one_network_cheaply() {
+    // 8 concurrent sessions of the same study on one engine: all agree
+    // bitwise with each other (same master seed ⇒ same data; share
+    // streams differ per session but reconstruction is exact).
+    let ds = synthetic("t", 500, 4, 2, 0.0, 1.0, 400);
+    let cfg = ExperimentConfig {
+        num_centers: 3,
+        threshold: 2,
+        max_iters: 30,
+        ..ExperimentConfig::default()
+    };
+    let engine = StudyEngine::new(2, 3).unwrap();
+    // Zero-copy path: all 8 sessions share one set of Arc'd shards.
+    let shards = privlr::session::ShardData::split(&ds);
+    let handles: Vec<_> = (0..8)
+        .map(|_| engine.submit_shared(&cfg, shards.clone()).unwrap())
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let global = engine.traffic();
+    engine.shutdown().unwrap();
+    for r in &results[1..] {
+        assert_bit_identical(&results[0], r, "replica");
+    }
+    // 8 sessions + nothing else: exactly 8 per-session entries (no
+    // control traffic until shutdown, which happened after snapshot).
+    assert_eq!(global.per_session.len(), 8);
+    let sum: u64 = global.per_session.iter().map(|&(_, b)| b).sum();
+    assert_eq!(sum, global.total_bytes);
+}

@@ -1,0 +1,148 @@
+//! Property tests for the session-tagged frame codec: every `Message`
+//! variant round-trips under every session id class (0, small, large,
+//! u32::MAX), frame sizes are exactly header + body, and malformed
+//! frames are rejected.
+
+use privlr::field::Fp;
+use privlr::protocol::{
+    decode, decode_frame, encode, encode_frame, HessianPayload, Message, SessionId,
+    CONTROL_SESSION, SESSION_HEADER_LEN,
+};
+use privlr::util::rng::{Rng, SplitMix64};
+
+/// One representative of every `Message` variant, parameterized by an
+/// RNG so repeated calls exercise different payload shapes/sizes.
+fn all_variants(rng: &mut SplitMix64) -> Vec<Message> {
+    let d = 1 + (rng.next_u64() % 12) as usize;
+    let fps = |rng: &mut SplitMix64, n: usize| -> Vec<Fp> {
+        (0..n).map(|_| Fp::new(rng.next_u64())).collect()
+    };
+    let f64s = |rng: &mut SplitMix64, n: usize| -> Vec<f64> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    };
+    vec![
+        Message::BetaBroadcast {
+            iter: rng.next_u64() as u32,
+            beta: f64s(rng, d),
+        },
+        Message::ShareSubmission {
+            iter: 1,
+            institution: rng.next_u64() as u16,
+            hessian: HessianPayload::Plain(f64s(rng, d * (d + 1) / 2)),
+            g_share: fps(rng, d),
+            dev_share: Fp::new(rng.next_u64()),
+        },
+        Message::ShareSubmission {
+            iter: 2,
+            institution: 0,
+            hessian: HessianPayload::Shared(fps(rng, d * (d + 1) / 2)),
+            g_share: fps(rng, d),
+            dev_share: Fp::ZERO,
+        },
+        Message::ShareSubmission {
+            iter: 3,
+            institution: 5,
+            hessian: HessianPayload::Absent,
+            g_share: fps(rng, d),
+            dev_share: Fp::new(7),
+        },
+        Message::AggregateRequest {
+            iter: rng.next_u64() as u32,
+            expected: rng.next_u64() as u16,
+        },
+        Message::AggregateResponse {
+            iter: 4,
+            center: rng.next_u64() as u16,
+            hessian: HessianPayload::Plain(f64s(rng, d)),
+            g_share: fps(rng, d),
+            dev_share: Fp::new(99),
+        },
+        Message::Finished {
+            iter: 6,
+            beta: f64s(rng, d),
+        },
+        Message::NodeError {
+            node: rng.next_u64() as u16,
+            is_center: rng.next_bernoulli(0.5),
+            error: format!("err-{}", rng.next_u64()),
+        },
+        Message::Shutdown,
+    ]
+}
+
+const SESSIONS: [SessionId; 6] = [CONTROL_SESSION, 1, 2, 4096, u32::MAX - 1, u32::MAX];
+
+#[test]
+fn every_variant_roundtrips_under_every_session_id() {
+    let mut rng = SplitMix64::new(2024);
+    for round in 0..8 {
+        for msg in all_variants(&mut rng) {
+            for session in SESSIONS {
+                let frame = encode_frame(session, &msg);
+                let (s, back) = decode_frame(&frame).unwrap();
+                assert_eq!(s, session, "round {round}");
+                assert_eq!(back, msg, "round {round} session {session}");
+            }
+        }
+    }
+}
+
+#[test]
+fn frame_is_exactly_header_plus_body() {
+    let mut rng = SplitMix64::new(7);
+    for msg in all_variants(&mut rng) {
+        let body = encode(&msg);
+        for session in SESSIONS {
+            let frame = encode_frame(session, &msg);
+            assert_eq!(frame.len(), SESSION_HEADER_LEN + body.len());
+            assert_eq!(&frame[..SESSION_HEADER_LEN], session.to_le_bytes());
+            assert_eq!(&frame[SESSION_HEADER_LEN..], &body[..]);
+            // the body alone still decodes with the plain codec
+            assert_eq!(decode(&frame[SESSION_HEADER_LEN..]).unwrap(), msg);
+        }
+    }
+}
+
+#[test]
+fn truncated_frames_are_rejected_at_every_length() {
+    let mut rng = SplitMix64::new(99);
+    for msg in all_variants(&mut rng) {
+        let frame = encode_frame(3, &msg);
+        for cut in 0..frame.len() {
+            assert!(
+                decode_frame(&frame[..cut]).is_err(),
+                "cut at {cut}/{} must fail for {}",
+                frame.len(),
+                msg.kind()
+            );
+        }
+        // ... and the full frame still decodes.
+        assert!(decode_frame(&frame).is_ok());
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    let mut rng = SplitMix64::new(5);
+    for msg in all_variants(&mut rng) {
+        let mut frame = encode_frame(1, &msg);
+        frame.push(0);
+        assert!(decode_frame(&frame).is_err(), "{}", msg.kind());
+    }
+}
+
+#[test]
+fn out_of_range_field_elements_are_rejected_in_frames() {
+    let msg = Message::ShareSubmission {
+        iter: 0,
+        institution: 0,
+        hessian: HessianPayload::Absent,
+        g_share: vec![Fp::new(5)],
+        dev_share: Fp::new(6),
+    };
+    let mut frame = encode_frame(2, &msg);
+    let n = frame.len();
+    // dev_share is the trailing 8 bytes; overwrite with u64::MAX (≥ P).
+    frame[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(decode_frame(&frame).is_err());
+}

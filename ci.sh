@@ -30,6 +30,9 @@ echo "== session engine gate (concurrent == sequential, bitwise) =="
 cargo test -q --test integration_sessions
 cargo test -q --test prop_session_codec
 
+echo "== secure pipeline gate (fused share thread-invariance + zero-alloc) =="
+cargo test -q --test prop_secure_pipeline
+
 # Style gates run AFTER build/test on purpose: the repo has been
 # authored in toolchain-less containers, so the first real run must
 # surface compile/test results even if formatting needs a one-time

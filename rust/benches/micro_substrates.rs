@@ -14,9 +14,10 @@ use privlr::field::{add_assign_slice, Fp};
 use privlr::fixed::FixedCodec;
 use privlr::linalg::Matrix;
 use privlr::model::{local_stats, local_stats_into, local_stats_reference, LocalStats, Workspace};
+use privlr::secure::{encode_share_into, ShareContext, SharePool};
 use privlr::shamir::{
-    lagrange_at_zero, reconstruct_batch, share_batch, share_batch_horner, share_batch_with,
-    ShamirParams, VandermondeTable,
+    lagrange_at_zero, reconstruct_batch, reconstruct_batch_with, share_batch, share_batch_horner,
+    share_batch_with, ShamirParams, VandermondeTable,
 };
 use privlr::util::json::{self, Json};
 use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
@@ -124,6 +125,117 @@ fn bench_kernels(cfg: BenchConfig) -> Json {
     ])
 }
 
+/// Old-vs-new secure-sharing pipeline (the zero-allocation threaded
+/// perf-PR acceptance numbers): the per-iteration alloc path
+/// (`encode_slice` + `share_batch_with`, fresh `Vec`s) vs the fused
+/// pooled `encode_share_into` sweep at 1/2/4 threads, and per-call
+/// Lagrange reconstruction vs cached-λ pooled `reconstruct_batch_with`
+/// — all at the paper's d=85 full-mode summary size
+/// ([g | dev | packed H] = 3741 elements, 3-of-5). Returns the
+/// `secure_pipeline` section for BENCH_kernels.json.
+fn bench_secure_pipeline(cfg: BenchConfig) -> Json {
+    let d = 85usize;
+    let k = d + 1 + d * (d + 1) / 2; // 3741
+    let params = ShamirParams::new(3, 5).unwrap();
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    let mut rng = SplitMix64::new(0x5EC);
+    let values: Vec<f64> = (0..k).map(|_| rng.next_range_f64(-100.0, 100.0)).collect();
+
+    let mut rows: Vec<Summary> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+
+    // OLD share path: encode to a fresh Vec, share to fresh per-holder
+    // Vecs, every call (what every full-mode iteration used to pay).
+    let mut crng = ChaCha20Rng::seed_from_u64(3);
+    let old_share = run_bench(
+        &format!("encode+share old alloc path, {k} elts 3-of-5"),
+        cfg,
+        || {
+            let enc = codec.encode_slice(&values).unwrap();
+            ctx.share(&enc, &mut crng)
+        },
+    );
+    rows.push(old_share.clone());
+    entries.push(summary_json(&old_share));
+
+    // NEW fused pooled sweep at 1/2/4 threads.
+    let mut seed = 0u64;
+    for threads in [1usize, 2, 4] {
+        let mut pool = SharePool::new();
+        encode_share_into(&ctx, &codec, &values, 0, threads, &mut pool).unwrap(); // warm pool
+        let s = run_bench(
+            &format!("encode+share fused pooled, {k} elts, {threads} thread(s)"),
+            cfg,
+            || {
+                seed += 1;
+                encode_share_into(&ctx, &codec, &values, seed, threads, &mut pool).unwrap();
+                pool.holder(0)[0]
+            },
+        );
+        rows.push(s.clone());
+        let mut e = summary_json(&s);
+        if let Json::Obj(m) = &mut e {
+            m.insert("threads".into(), json::num(threads as f64));
+            m.insert(
+                "speedup_vs_old_path".into(),
+                json::num(old_share.mean_s / s.mean_s),
+            );
+        }
+        entries.push(e);
+    }
+
+    // Reconstruction: per-call Lagrange + fresh output vs cached λ +
+    // pooled output (the coordinator's per-iteration reality).
+    let mut pool = SharePool::new();
+    encode_share_into(&ctx, &codec, &values, 42, 1, &mut pool).unwrap();
+    let quorum: Vec<(usize, &[Fp])> = [0usize, 2, 4]
+        .iter()
+        .map(|&c| (c, pool.holder(c)))
+        .collect();
+    let old_rec = run_bench(
+        &format!("reconstruct old (λ per call, fresh out), {k} elts"),
+        cfg,
+        || reconstruct_batch(params, &quorum).unwrap(),
+    );
+    rows.push(old_rec.clone());
+    entries.push(summary_json(&old_rec));
+    let lambdas = lagrange_at_zero(params, &[0, 2, 4]).unwrap();
+    let mut out = vec![Fp::ZERO; k];
+    let new_rec = run_bench(
+        &format!("reconstruct new (cached λ, pooled out), {k} elts"),
+        cfg,
+        || {
+            reconstruct_batch_with(&lambdas, &quorum, &mut out).unwrap();
+            out[0]
+        },
+    );
+    rows.push(new_rec.clone());
+    let mut e = summary_json(&new_rec);
+    if let Json::Obj(m) = &mut e {
+        m.insert(
+            "speedup_vs_old_path".into(),
+            json::num(old_rec.mean_s / new_rec.mean_s),
+        );
+    }
+    entries.push(e);
+
+    print_table(
+        "secure pipeline: old vs new (share + reconstruct, d=85 full mode)",
+        &rows,
+    );
+
+    json::obj(vec![
+        (
+            "workload",
+            json::s(&format!(
+                "fused encode+share + cached-λ reconstruct, {k} elts (d=85 [g|dev|H]), 3-of-5"
+            )),
+        ),
+        ("results", json::arr(entries)),
+    ])
+}
+
 fn main() {
     let cfg = BenchConfig::from_env();
 
@@ -132,6 +244,12 @@ fn main() {
     match update_json_report(&report, "kernels", kernels) {
         Ok(()) => println!("\nwrote kernel section to {}", report.display()),
         Err(e) => eprintln!("\ncould not write {}: {e}", report.display()),
+    }
+
+    let secure_pipeline = bench_secure_pipeline(cfg);
+    match update_json_report(&report, "secure_pipeline", secure_pipeline) {
+        Ok(()) => println!("wrote secure_pipeline section to {}", report.display()),
+        Err(e) => eprintln!("could not write {}: {e}", report.display()),
     }
 
     let mut rows = Vec::new();

@@ -55,16 +55,38 @@ struct CenterSession {
     /// This session's secure-aggregation busy counter for this center.
     busy_ns: Arc<AtomicU64>,
     iters: HashMap<u32, IterState>,
+    /// Answered iterations' states, zeroed and ready for reuse — the
+    /// per-(session, iteration) fold state allocates only until the
+    /// session's steady concurrency is reached, then recycles.
+    free: Vec<IterState>,
 }
 
-/// A blank per-iteration state. The share-domain accumulator carries
-/// the pragmatic plaintext Hessian in `h_plain_pending` instead, so
-/// `packed_h` matters only in full mode.
-fn fresh_iter_state(d: usize, packed_h: usize, full_security: bool) -> IterState {
-    IterState {
-        acc: SecureAccumulator::new(d, if full_security { packed_h } else { 0 }, full_security),
-        h_plain_pending: Vec::new(),
-        pending_request: None,
+impl CenterSession {
+    /// A blank per-iteration state, recycled from the pool when one is
+    /// available. The share-domain accumulator carries the pragmatic
+    /// plaintext Hessian in `h_plain_pending` instead, so `packed_h`
+    /// matters only in full mode.
+    fn take_iter_state(&mut self) -> IterState {
+        match self.free.pop() {
+            Some(st) => st, // already reset when retired
+            None => IterState {
+                acc: SecureAccumulator::new(
+                    self.d,
+                    if self.full_security { self.packed_h } else { 0 },
+                    self.full_security,
+                ),
+                h_plain_pending: Vec::new(),
+                pending_request: None,
+            },
+        }
+    }
+
+    /// Return an answered iteration's state to the pool, zeroed.
+    fn recycle_iter_state(&mut self, mut st: IterState) {
+        st.acc.reset();
+        st.h_plain_pending.clear();
+        st.pending_request = None;
+        self.free.push(st);
     }
 }
 
@@ -128,6 +150,7 @@ fn handle_message(
                 full_security: spec.full_security,
                 busy_ns: spec.center_busy_ns[cfg.center_id as usize].clone(),
                 iters: HashMap::new(),
+                free: Vec::new(),
             },
         );
     }
@@ -145,11 +168,12 @@ fn handle_message(
                 matches!(from, NodeId::Institution(_)),
                 "submission from non-institution {from}"
             );
-            let (d, packed_h, full) = (cs.d, cs.packed_h, cs.full_security);
-            let st = cs
-                .iters
-                .entry(iter)
-                .or_insert_with(|| fresh_iter_state(d, packed_h, full));
+            let (packed_h, full) = (cs.packed_h, cs.full_security);
+            if !cs.iters.contains_key(&iter) {
+                let st = cs.take_iter_state();
+                cs.iters.insert(iter, st);
+            }
+            let st = cs.iters.get_mut(&iter).unwrap();
             // Busy time is recorded BEFORE any send: the response's
             // arrival at the driver is what ends a round, so counter
             // updates must happen-before it for the per-session
@@ -173,26 +197,24 @@ fn handle_message(
                 from == NodeId::Coordinator,
                 "aggregate request from non-coordinator {from}"
             );
-            let (d, packed_h, full) = (cs.d, cs.packed_h, cs.full_security);
-            let st = cs
-                .iters
-                .entry(iter)
-                .or_insert_with(|| fresh_iter_state(d, packed_h, full));
+            if !cs.iters.contains_key(&iter) {
+                let st = cs.take_iter_state();
+                cs.iters.insert(iter, st);
+            }
+            let st = cs.iters.get_mut(&iter).unwrap();
             st.pending_request = Some(expected);
             maybe_respond(cfg, ep, session, cs, iter)?;
         }
         other => anyhow::bail!("center {} got unexpected {}", cfg.center_id, other.kind()),
     }
-    // Garbage-collect answered iterations of this session.
-    cs.iters
-        .retain(|_, st| st.pending_request.is_some() || st.acc.count > 0);
     Ok(())
 }
 
 /// If an aggregate request is pending and all submissions arrived,
-/// reply with this center's share of the global sums and clear state.
-/// Response-assembly time lands on the busy counter BEFORE the send,
-/// so the driver's completion-time metrics read observes it.
+/// reply with this center's share of the global sums and recycle the
+/// iteration's state into the session pool. Response-assembly time
+/// lands on the busy counter BEFORE the send, so the driver's
+/// completion-time metrics read observes it.
 fn maybe_respond(
     cfg: &CenterWorkerConfig,
     ep: &Endpoint,
@@ -200,7 +222,7 @@ fn maybe_respond(
     cs: &mut CenterSession,
     iter: u32,
 ) -> anyhow::Result<()> {
-    let (d, packed_h, full) = (cs.d, cs.packed_h, cs.full_security);
+    let (packed_h, full) = (cs.packed_h, cs.full_security);
     let Some(st) = cs.iters.get_mut(&iter) else {
         return Ok(());
     };
@@ -251,11 +273,10 @@ fn maybe_respond(
     cs.busy_ns
         .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
     ep.send_session(NodeId::Coordinator, session, &response)?;
-    // Reset so the retain() in the handler drops this iteration.
-    let Some(st) = cs.iters.get_mut(&iter) else {
-        return Ok(());
-    };
-    *st = fresh_iter_state(d, packed_h, full);
+    // Answered: zero the state and return it to the session pool.
+    if let Some(st) = cs.iters.remove(&iter) {
+        cs.recycle_iter_state(st);
+    }
     Ok(())
 }
 
@@ -442,6 +463,57 @@ mod tests {
                 assert_eq!(hessian, HessianPayload::Plain(vec![20.0]));
             }
             _ => panic!(),
+        }
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Recycled iteration states carry no residue: consecutive rounds
+    /// through one session (which reuse the pooled accumulator) must
+    /// aggregate exactly as fresh states would.
+    #[test]
+    fn recycled_iteration_state_is_clean() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![make_spec(6, 1, 2, 1, 1, false)]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        for (iter, (gv, h)) in [(10.0f64, 100.0f64), (20.0, 200.0), (30.0, 300.0)]
+            .into_iter()
+            .enumerate()
+        {
+            let iter = iter as u32;
+            inst.send_session(
+                NodeId::Center(0),
+                6,
+                &Message::ShareSubmission {
+                    iter,
+                    institution: 0,
+                    hessian: HessianPayload::Plain(vec![h, h, h]),
+                    g_share: vec![Fp::new(gv as u64), Fp::new(gv as u64 + 1)],
+                    dev_share: Fp::new(7),
+                },
+            )
+            .unwrap();
+            coord
+                .send_session(
+                    NodeId::Center(0),
+                    6,
+                    &Message::AggregateRequest { iter, expected: 1 },
+                )
+                .unwrap();
+            let (_, _, resp) = coord.recv_session().unwrap();
+            match resp {
+                Message::AggregateResponse { iter: ri, hessian, g_share, dev_share, .. } => {
+                    assert_eq!(ri, iter);
+                    assert_eq!(hessian, HessianPayload::Plain(vec![h, h, h]));
+                    assert_eq!(g_share, vec![Fp::new(gv as u64), Fp::new(gv as u64 + 1)]);
+                    assert_eq!(dev_share, Fp::new(7));
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
         }
         coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
         th.join().unwrap();

@@ -95,8 +95,11 @@ pub struct ExperimentConfig {
     /// Run institutions' local phase on parallel threads.
     pub parallel_local: bool,
     /// Worker threads for each institution's blocked local-stats kernel
-    /// (`model::local_stats_into`): 0 = one per core, 1 = the
-    /// bit-compatible single-threaded path. Defaults to 1 because the
+    /// (`model::local_stats_into`) AND its fused encode+share sweep
+    /// (`secure::encode_share_into`): 0 = one per core, 1 =
+    /// single-threaded. Local stats are bit-compatible with the scalar
+    /// reference only at 1; the share sweep is bit-identical at EVERY
+    /// count (per-chunk RNG streams). Defaults to 1 because the
     /// simulation already runs all S institutions concurrently on one
     /// machine; deployments (one institution per machine) set 0.
     pub kernel_threads: usize,

@@ -31,12 +31,11 @@ use crate::session::{
     SessionOutcome, SessionRegistry, SessionSpec, SessionState, SessionStep, ShardData,
 };
 use crate::shamir::ShamirParams;
-use crate::transport::{Endpoint, Network, TrafficSnapshot};
-use std::collections::HashMap;
+use crate::transport::{Endpoint, Injector, Network, TrafficSnapshot};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 
 /// A submitted-but-not-yet-started study, queued to the driver.
 struct PendingStudy {
@@ -71,12 +70,19 @@ impl StudyHandle {
     }
 }
 
+/// Pending studies travel out-of-band (specs hold `Arc`ed shard data);
+/// the wire carries only a `StudySubmitted` nudge frame, so the driver
+/// blocks on ONE channel — its coordinator mailbox — and drains this
+/// queue when the frame arrives. No poll, no idle burn at any K.
+type SubmitQueue = Arc<Mutex<VecDeque<PendingStudy>>>;
+
 /// Persistent study network: S institution workers, W center workers,
 /// one coordinator driver, multiplexing concurrent fit sessions.
 pub struct StudyEngine {
     net: Arc<Network>,
     registry: Arc<SessionRegistry>,
-    submit_tx: Option<Sender<PendingStudy>>,
+    queue: SubmitQueue,
+    injector: Injector,
     driver: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
     workers: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
     next_session: AtomicU32,
@@ -172,18 +178,21 @@ impl StudyEngine {
                     .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
             );
         }
-        let (submit_tx, submit_rx) = channel();
+        let queue: SubmitQueue = Arc::new(Mutex::new(VecDeque::new()));
+        let injector = net.injector(NodeId::Client);
         let driver = {
             let registry = registry.clone();
             let net = net.clone();
+            let queue = queue.clone();
             std::thread::Builder::new()
                 .name("study-driver".to_string())
-                .spawn(move || drive(coord, registry, submit_rx, net, institutions, centers))?
+                .spawn(move || drive(coord, registry, queue, net, institutions, centers))?
         };
         Ok(StudyEngine {
             net,
             registry,
-            submit_tx: Some(submit_tx),
+            queue,
+            injector,
             driver: Some(driver),
             workers,
             next_session: AtomicU32::new(1),
@@ -271,15 +280,31 @@ impl StudyEngine {
             max_iters: cfg.max_iters,
             result_tx,
         };
-        self.submit_tx
-            .as_ref()
-            .expect("engine already shut down")
-            .send(pending)
+        // Queue first, nudge second: a nudge with an empty queue is a
+        // no-op, the reverse order could strand the study. The nudge
+        // frame is tagged with the study's own session id so its bytes
+        // attribute to the study it announces (keeping per-session
+        // entries exactly one-per-study). If the driver is already
+        // gone the nudge fails and the queued entry is simply dropped
+        // with the engine.
+        self.queue.lock().unwrap().push_back(pending);
+        self.injector
+            .send_session(NodeId::Coordinator, session, &Message::StudySubmitted)
             .map_err(|_| anyhow::anyhow!("study engine driver is down"))?;
         Ok(StudyHandle {
             session,
             rx: result_rx,
         })
+    }
+
+    /// Retire a finished session's traffic attribution into the
+    /// network's running aggregate (bounds per-session bookkeeping on
+    /// long-lived consortia; see `transport::TrafficCounters`).
+    /// Returns `false` for unknown or already-retired sessions. Call
+    /// after the study's handle has been joined — later frames for the
+    /// session would open a fresh entry.
+    pub fn retire_session(&self, session: SessionId) -> bool {
+        self.net.counters.retire_session(session).is_some()
     }
 
     /// Drain in-flight sessions, stop the driver and workers, and
@@ -290,11 +315,12 @@ impl StudyEngine {
     }
 
     fn shutdown_inner(&mut self) -> anyhow::Result<()> {
-        // Closing the submit channel tells the driver to finish its
-        // active sessions and then tear the workers down.
-        self.submit_tx = None;
+        // A Shutdown frame on the unified channel tells the driver to
+        // run whatever is queued/in flight to completion and then tear
+        // the workers down.
         let mut first_err: Option<anyhow::Error> = None;
         if let Some(driver) = self.driver.take() {
+            let _ = self.injector.send(NodeId::Coordinator, &Message::Shutdown);
             match driver.join() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => first_err = Some(e),
@@ -344,12 +370,12 @@ struct Active {
 fn drive(
     coord: Endpoint,
     registry: Arc<SessionRegistry>,
-    submit_rx: Receiver<PendingStudy>,
+    queue: SubmitQueue,
     net: Arc<Network>,
     institutions: usize,
     centers: usize,
 ) -> anyhow::Result<()> {
-    let result = drive_loop(&coord, &registry, &submit_rx, &net);
+    let result = drive_loop(&coord, &registry, &queue, &net);
     // ALWAYS tear the persistent workers down — even when the loop
     // errored — and best-effort per worker: otherwise a single dead
     // worker would leave the others parked in recv() forever and
@@ -364,41 +390,53 @@ fn drive(
     result
 }
 
+/// Drain the submission queue into running sessions.
+fn absorb_submissions(
+    coord: &Endpoint,
+    queue: &SubmitQueue,
+    sessions: &mut HashMap<SessionId, Active>,
+) -> anyhow::Result<()> {
+    loop {
+        // Pop one at a time so the lock is never held across sends.
+        let Some(p) = queue.lock().unwrap().pop_front() else {
+            return Ok(());
+        };
+        start_session(coord, sessions, p)?;
+    }
+}
+
 fn drive_loop(
     coord: &Endpoint,
     registry: &Arc<SessionRegistry>,
-    submit_rx: &Receiver<PendingStudy>,
+    queue: &SubmitQueue,
     net: &Arc<Network>,
 ) -> anyhow::Result<()> {
     let mut sessions: HashMap<SessionId, Active> = HashMap::new();
     let mut submissions_open = true;
     loop {
-        // Absorb pending submissions without blocking.
-        while submissions_open {
-            match submit_rx.try_recv() {
-                Ok(p) => start_session(coord, &mut sessions, p)?,
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => submissions_open = false,
-            }
+        if sessions.is_empty() && !submissions_open {
+            break;
         }
-        if sessions.is_empty() {
-            if !submissions_open {
-                break;
-            }
-            // Idle: block briefly for new work.
-            match submit_rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(p) => start_session(coord, &mut sessions, p)?,
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => submissions_open = false,
-            }
-            continue;
-        }
-        // Pump the network; short timeout so new submissions interleave.
-        let Some((from, session, msg)) = coord.recv_session_timeout(Duration::from_millis(1))?
-        else {
-            continue;
-        };
+        // ONE unified channel: submissions arrive as StudySubmitted
+        // frames alongside protocol traffic, so this receive blocks
+        // with no timeout — an idle driver costs nothing at any K
+        // (formerly a 1 ms poll interleaving a side channel).
+        let (from, session, msg) = coord.recv_session()?;
         match msg {
+            Message::StudySubmitted => {
+                anyhow::ensure!(
+                    from == NodeId::Client,
+                    "study submission nudge from {from}"
+                );
+                absorb_submissions(coord, queue, &mut sessions)?;
+            }
+            Message::Shutdown => {
+                anyhow::ensure!(from == NodeId::Client, "shutdown frame from {from}");
+                // Run anything still queued, then finish in-flight
+                // sessions and exit once the last one completes.
+                absorb_submissions(coord, queue, &mut sessions)?;
+                submissions_open = false;
+            }
             Message::AggregateResponse {
                 iter,
                 center,
@@ -602,6 +640,53 @@ mod tests {
         h1.join().unwrap();
         h2.join().unwrap();
         engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn idle_driver_wakes_for_late_submissions() {
+        // The driver blocks on its unified channel with no poll; a
+        // submission after a genuinely idle stretch must still be
+        // picked up promptly (the StudySubmitted frame is the wakeup).
+        let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 31);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        engine.submit(&cfg, &ds).unwrap().join().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60)); // idle
+        let fit = engine.submit(&cfg, &ds).unwrap().join().unwrap();
+        assert!(fit.metrics.iterations > 0);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn retire_session_bounds_attribution_map() {
+        let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 32);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        let h1 = engine.submit(&cfg, &ds).unwrap();
+        let s1 = h1.session_id();
+        h1.join().unwrap();
+        let before = engine.traffic();
+        assert!(before.session_bytes(s1) > 0);
+        assert!(engine.retire_session(s1));
+        assert!(!engine.retire_session(s1), "second retire is a no-op");
+        let after = engine.traffic();
+        assert_eq!(after.session_bytes(s1), 0);
+        assert_eq!(after.retired_sessions, 1);
+        // invariant: live entries + retired aggregate == global
+        let live: u64 = after.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(live + after.retired_bytes, after.total_bytes);
+        // a later study is attributed normally alongside the aggregate
+        let h2 = engine.submit(&cfg, &ds).unwrap();
+        let s2 = h2.session_id();
+        h2.join().unwrap();
+        let final_snap = engine.shutdown().unwrap();
+        assert!(final_snap.session_bytes(s2) > 0);
+        let live: u64 = final_snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(live + final_snap.retired_bytes, final_snap.total_bytes);
     }
 
     #[test]

@@ -224,6 +224,36 @@ impl std::iter::Sum for Fp {
     }
 }
 
+// ---- lazy (deferred) reduction ------------------------------------------
+//
+// The share-build and reconstruction inner loops are dot-product
+// shaped: `Σ_i a_i·b_i` with every operand already canonical (< 2^61).
+// Each product fits in 122 bits, so a u128 accumulator absorbs up to
+// 63 such products before it can overflow — reducing once per *sum*
+// instead of once per *term* removes a Mersenne fold + conditional
+// subtraction from every inner-loop step. `fold_lazy` compresses a hot
+// accumulator in-flight (2^122 ≡ 2^0 mod p, so the top bits fold onto
+// the bottom); `reduce_lazy` performs the single final reduction.
+
+/// Fold an accumulator every this many lazily-added 122-bit products.
+/// After a fold the accumulator is < 2^122 + 2^6, so another
+/// `LAZY_FOLD_EVERY` (= 32 < 63) products cannot overflow u128.
+pub const LAZY_FOLD_EVERY: usize = 32;
+
+/// Partially fold a lazy u128 accumulator using 2^122 ≡ 1 (mod p).
+/// The result is < 2^122 + 2^6 and congruent to the input mod p.
+#[inline(always)]
+pub fn fold_lazy(acc: u128) -> u128 {
+    (acc & ((1u128 << 122) - 1)) + (acc >> 122)
+}
+
+/// Final reduction of a lazy u128 accumulator to a canonical element.
+/// Accepts ANY u128 (the three-limb Mersenne fold needs no headroom).
+#[inline(always)]
+pub fn reduce_lazy(acc: u128) -> Fp {
+    Fp(reduce_u128(acc))
+}
+
 // ---- batch helpers (hot path of secure aggregation) ---------------------
 
 /// Elementwise `dst[i] += src[i]` over field elements. This is the inner
@@ -377,6 +407,50 @@ mod tests {
         mul_add_slice(&mut dst, &src, c);
         for i in 0..100 {
             assert_eq!(dst[i], base[i] + c * src[i]);
+        }
+    }
+
+    #[test]
+    fn lazy_reduction_matches_eager_dot() {
+        // Lazy u128 accumulation with periodic folds must equal the
+        // per-term-reduced dot product exactly, including at the worst
+        // case: every operand at P−1 and sums long enough to cross
+        // several fold boundaries.
+        let mut rng = SplitMix64::new(11);
+        for n in [1usize, 31, 32, 33, 64, 97, 200] {
+            let a: Vec<Fp> = (0..n).map(|_| Fp::random(&mut rng)).collect();
+            let b: Vec<Fp> = (0..n).map(|_| Fp::random(&mut rng)).collect();
+            let mut acc: u128 = 0;
+            let mut eager = Fp::ZERO;
+            for i in 0..n {
+                acc += a[i].to_u64() as u128 * b[i].to_u64() as u128;
+                if (i + 1) % LAZY_FOLD_EVERY == 0 {
+                    acc = fold_lazy(acc);
+                }
+                eager = eager + a[i] * b[i];
+            }
+            assert_eq!(reduce_lazy(acc), eager, "n={n}");
+        }
+        // boundary: max-magnitude products
+        let top = Fp::new(P - 1);
+        let mut acc: u128 = 0;
+        let mut eager = Fp::ZERO;
+        for i in 0..130 {
+            acc += top.to_u64() as u128 * top.to_u64() as u128;
+            if (i + 1) % LAZY_FOLD_EVERY == 0 {
+                acc = fold_lazy(acc);
+            }
+            eager = eager + top * top;
+        }
+        assert_eq!(reduce_lazy(acc), eager);
+    }
+
+    #[test]
+    fn fold_lazy_preserves_residue_and_bounds() {
+        for v in [0u128, 1, (1 << 122) - 1, 1 << 122, u128::MAX] {
+            let f = fold_lazy(v);
+            assert!(f < (1u128 << 122) + (1 << 6));
+            assert_eq!(reduce_lazy(f), reduce_lazy(v));
         }
     }
 

@@ -26,8 +26,10 @@ use crate::field::{Fp, P};
 /// every workload's Hessian/deviance sums (≤ 2.6e6).
 pub const DEFAULT_FRAC_BITS: u32 = 28;
 
-/// Errors surfaced by the codec.
-#[derive(Debug)]
+/// Errors surfaced by the codec. `Copy` so the threaded encode+share
+/// sweep can hand a failure out of a worker through plain scratch
+/// state (`secure::encode_share_into`).
+#[derive(Clone, Copy, Debug)]
 pub enum FixedError {
     NotFinite(f64),
     Overflow(f64, f64),
@@ -114,6 +116,26 @@ impl FixedCodec {
     /// Decode a slice.
     pub fn decode_slice(&self, vs: &[Fp]) -> Vec<f64> {
         vs.iter().map(|&v| self.decode(v)).collect()
+    }
+
+    /// [`FixedCodec::encode_slice`] into a caller-owned buffer of equal
+    /// length — the fused encode+share sweep's per-chunk encode step
+    /// (no per-iteration `Vec<Fp>`).
+    pub fn encode_slice_into(&self, xs: &[f64], out: &mut [Fp]) -> Result<(), FixedError> {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.encode(x)?;
+        }
+        Ok(())
+    }
+
+    /// [`FixedCodec::decode_slice`] into a caller-owned buffer of equal
+    /// length (the coordinator's pooled reconstruction path).
+    pub fn decode_slice_into(&self, vs: &[Fp], out: &mut [f64]) {
+        assert_eq!(vs.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(vs) {
+            *o = self.decode(v);
+        }
     }
 
     /// Encode a public real constant as a field *integer* multiplier plus
@@ -238,5 +260,23 @@ mod tests {
         for (x, y) in xs.iter().zip(&dec) {
             assert!((x - y).abs() <= c.epsilon());
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let c = FixedCodec::default();
+        let xs = vec![1.0, -2.5, 0.0, 1e-5, c.max_abs(), -c.max_abs()];
+        let enc = c.encode_slice(&xs).unwrap();
+        let mut enc2 = vec![Fp::ZERO; xs.len()];
+        c.encode_slice_into(&xs, &mut enc2).unwrap();
+        assert_eq!(enc, enc2);
+        let dec = c.decode_slice(&enc);
+        let mut dec2 = vec![0.0; xs.len()];
+        c.decode_slice_into(&enc2, &mut dec2);
+        assert_eq!(dec, dec2);
+        // errors propagate from the buffered variant too
+        let mut out = vec![Fp::ZERO; 1];
+        assert!(c.encode_slice_into(&[f64::NAN], &mut out).is_err());
+        assert!(c.encode_slice_into(&[c.max_abs() * 2.0], &mut out).is_err());
     }
 }

@@ -14,21 +14,29 @@
 //! published inference attacks require the (H, g) pair).
 //!
 //! The worker is persistent: per-session hot state (kernel
-//! [`Workspace`], output buffers, ChaCha20 share stream) lives in a
-//! session map and is dropped on that session's `Finished`, while the
-//! Vandermonde share tables are cached per `(t, w)` scheme and reused
-//! across sessions — a new session with a familiar topology pays no
-//! setup. A per-session failure is reported to the coordinator as a
+//! [`Workspace`], output buffers) lives in a session map and is
+//! dropped on that session's `Finished`, while the Vandermonde share
+//! tables are cached per `(t, w)` scheme and the fused encode+share
+//! buffers ([`SharePool`]) are owned by the worker itself — shared by
+//! EVERY session it serves, so sessions of equal dimension reuse the
+//! same wire buffers and a new session with a familiar topology pays
+//! no setup. Protection runs through the fused threaded sweep
+//! (`secure::encode_share_into`): one `[g | dev | H?]` summary batch
+//! per iteration, encoded and shared straight into the pooled
+//! per-holder buffers with per-`(iteration, chunk)` ChaCha20 streams
+//! derived from the session's share seed — deterministic in the
+//! `(master seed, session, institution, iteration)` tuple alone. A
+//! per-session failure is reported to the coordinator as a
 //! session-tagged `NodeError` and only that session is torn down; the
 //! worker keeps serving its other sessions.
 
 use crate::model::{LocalStats, Workspace};
 use crate::protocol::{pack_upper_into, packed_len, HessianPayload, Message, NodeId, SessionId};
 use crate::runtime::ComputeHandle;
-use crate::secure::{share_local_stats_with, ShareContext};
+use crate::secure::{encode_share_into, ShareContext, SharePool};
 use crate::session::{SessionRegistry, SessionSpec};
 use crate::transport::Endpoint;
-use crate::util::rng::ChaCha20Rng;
+use crate::util::rng::derive_seed;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -53,7 +61,10 @@ struct InstSession {
     stats: LocalStats,
     h_packed: Vec<f64>,
     share_ctx: Rc<ShareContext>,
-    rng: ChaCha20Rng,
+    /// Base seed of this (session, institution) pair; each iteration's
+    /// sweep forks per-chunk ChaCha20 streams from
+    /// `derive_seed(share_seed, iter)`.
+    share_seed: u64,
 }
 
 /// Run the persistent institution event loop until `Shutdown`.
@@ -69,6 +80,11 @@ pub fn run_institution_worker(
     let mut sessions: HashMap<SessionId, InstSession> = HashMap::new();
     // Vandermonde power tables cached per (t, w), shared across sessions.
     let mut share_tables: HashMap<(usize, usize), Rc<ShareContext>> = HashMap::new();
+    // Fused encode+share buffers, shared across ALL sessions on this
+    // worker (capacity grows to the largest dimension ever served and
+    // stays — the ROADMAP's cross-session amortization item).
+    let mut pool = SharePool::new();
+    let mut summary: Vec<f64> = Vec::new();
     loop {
         let (from, session, msg) = ep.recv_session()?;
         match msg {
@@ -78,6 +94,8 @@ pub fn run_institution_worker(
                     &ep,
                     &mut sessions,
                     &mut share_tables,
+                    &mut pool,
+                    &mut summary,
                     session,
                     from,
                     iter,
@@ -128,6 +146,8 @@ fn handle_broadcast(
     ep: &Endpoint,
     sessions: &mut HashMap<SessionId, InstSession>,
     share_tables: &mut HashMap<(usize, usize), Rc<ShareContext>>,
+    pool: &mut SharePool,
+    summary: &mut Vec<f64>,
     session: SessionId,
     from: NodeId,
     iter: u32,
@@ -155,13 +175,13 @@ fn handle_broadcast(
                 .entry(key)
                 .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
                 .clone();
-            let rng = ChaCha20Rng::seed_from_u64(spec.institution_share_seed(j));
+            let share_seed = spec.institution_share_seed(j);
             v.insert(InstSession {
                 ws: Workspace::new(d, spec.kernel_threads),
                 stats: LocalStats::zeros(d),
                 h_packed: vec![0.0; packed_len(d)],
                 share_ctx,
-                rng,
+                share_seed,
                 spec,
             })
         }
@@ -181,16 +201,27 @@ fn handle_broadcast(
             .local_stats_timed_into(&shard.x, &shard.y, beta, &mut st.ws, &mut st.stats)?;
 
     // ---- protection + submission phase (step 7) ----
+    // One fused [g | dev | H?] summary batch per iteration: encoded and
+    // Shamir-shared straight into the worker's pooled per-holder wire
+    // buffers by the threaded lazy-reduction sweep — no intermediate
+    // Vec<Fp>, no per-iteration allocation once the pool is warm.
     let t = std::time::Instant::now();
     pack_upper_into(&st.stats.h, &mut st.h_packed);
-    let shared = share_local_stats_with(
+    let d = st.stats.g.len();
+    let n_summary = d + 1 + if spec.full_security { st.h_packed.len() } else { 0 };
+    summary.resize(n_summary, 0.0);
+    summary[..d].copy_from_slice(&st.stats.g);
+    summary[d] = st.stats.dev;
+    if spec.full_security {
+        summary[d + 1..].copy_from_slice(&st.h_packed);
+    }
+    encode_share_into(
         &st.share_ctx,
         &spec.codec,
-        &st.stats.g,
-        st.stats.dev,
-        &st.h_packed,
-        spec.full_security,
-        &mut st.rng,
+        &summary[..n_summary],
+        derive_seed(st.share_seed, iter as u64),
+        spec.kernel_threads,
+        pool,
     )?;
     // Telemetry lands BEFORE the submissions: a submission causally
     // leads (via center fold → aggregate response) to the driver's
@@ -206,12 +237,18 @@ fn handle_broadcast(
         .fetch_add((t.elapsed().as_secs_f64() * 1e9) as u64, Ordering::Relaxed);
     cells.iterations.fetch_add(1, Ordering::Relaxed);
     for c in 0..spec.num_centers() {
-        let hessian = match &shared.h {
-            Some(hb) => HessianPayload::Shared(hb.per_holder[c].clone()),
+        // Slice this center's wire buffer back into the protocol's
+        // payload layout (messages own their data, so the slices are
+        // copied exactly once, into the frame).
+        let holder = pool.holder(c);
+        let hessian = if spec.full_security {
+            HessianPayload::Shared(holder[d + 1..].to_vec())
+        } else if c == 0 {
             // Pragmatic mode: the plaintext H goes to the lead
             // center only; replication adds no protection.
-            None if c == 0 => HessianPayload::Plain(st.h_packed.clone()),
-            None => HessianPayload::Absent,
+            HessianPayload::Plain(st.h_packed.clone())
+        } else {
+            HessianPayload::Absent
         };
         ep.send_session(
             NodeId::Center(c as u16),
@@ -220,8 +257,8 @@ fn handle_broadcast(
                 iter,
                 institution: j,
                 hessian,
-                g_share: shared.g.per_holder[c].clone(),
-                dev_share: shared.dev.per_holder[c][0],
+                g_share: holder[..d].to_vec(),
+                dev_share: holder[d],
             },
         )?;
     }

@@ -60,12 +60,20 @@ impl Matrix {
 
     /// Matrix-vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut out = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            out[i] = dot(self.row(i), x);
-        }
+        self.matvec_into(x, &mut out);
         out
+    }
+
+    /// [`Matrix::matvec`] into a caller-owned buffer (the damped-Newton
+    /// solver reuses its linear-predictor vectors across iterations).
+    /// Bit-identical to `matvec`: same per-row [`dot`].
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot(self.row(i), x);
+        }
     }
 
     /// Transposed matrix-vector product `Aᵀ x` without materializing Aᵀ.

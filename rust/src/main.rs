@@ -45,7 +45,9 @@ COMMON FLAGS (fit/compare):
     --threshold <n>      reconstruction threshold (t)               [3]
     --mode <m>           pragmatic | full                           [pragmatic]
     --engine <e>         rust | pjrt | auto                         [auto]
-    --threads <n>        local-stats kernel threads (0 = all cores) [1]
+    --threads <n>        worker threads for the local-stats kernel AND
+                         the fused encode+share sweep (0 = all cores;
+                         results are identical at any count) [1]
     --artifacts <dir>    AOT artifact directory                     [artifacts]
     --seed <n>           RNG seed                                   [42]
     --config <path>      load flags from a config JSON instead

@@ -297,6 +297,180 @@ fn local_stats_range(
     }
 }
 
+/// Local deviance directly from a precomputed linear-predictor vector:
+/// `−2 Σ_i [y_i log σ(z_i) + (1−y_i) log(1−σ(z_i))]`. Touches neither
+/// the design matrix nor the sigmoid tile — this is ALL a damped-step
+/// retry costs (O(n), vs the O(n·d²) full statistics pass).
+pub fn deviance_from_z(z: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(z.len(), y.len());
+    let mut dev = 0.0;
+    for (&zi, &yi) in z.iter().zip(y) {
+        dev += -2.0 * (yi * log_sigmoid(zi) + (1.0 - yi) * log_sigmoid(-zi));
+    }
+    dev
+}
+
+/// Local statistics from cached per-row linear predictors `z = X·β`
+/// and sigmoid tile `p = σ(z)` — the accepted-step path of the damped
+/// solver, which skips the per-row dot product AND the sigmoid
+/// re-evaluation. Bit-identical to [`local_stats_reference`] when
+/// `z`/`p` hold exactly the values that pass would compute.
+pub fn local_stats_from_predictor(
+    x: &Matrix,
+    y: &[f64],
+    z: &[f64],
+    p: &[f64],
+) -> LocalStats {
+    assert_eq!(x.rows, y.len());
+    assert_eq!(x.rows, z.len());
+    assert_eq!(x.rows, p.len());
+    let d = x.cols;
+    let mut st = LocalStats::zeros(d);
+    for i in 0..x.rows {
+        let xi = x.row(i);
+        let pi = p[i];
+        let w = pi * (1.0 - pi);
+        st.h.syr_upper(w, xi);
+        crate::linalg::axpy(y[i] - pi, xi, &mut st.g);
+        st.dev += -2.0 * (y[i] * log_sigmoid(z[i]) + (1.0 - y[i]) * log_sigmoid(-z[i]));
+    }
+    st.h.symmetrize();
+    st.n = x.rows;
+    st
+}
+
+/// Result of a damped (step-halving) Newton fit.
+#[derive(Clone, Debug)]
+pub struct DampedFit {
+    pub beta: Vec<f64>,
+    pub iterations: u32,
+    pub deviance_trace: Vec<f64>,
+    /// Total number of step halvings across all iterations.
+    pub halvings: u32,
+}
+
+/// Reusable damped-Newton buffers: the linear predictors and the
+/// sigmoid (`diag(w)` source) tile, cached across step-halving retries
+/// AND across iterations.
+///
+/// The cache is what makes damping nearly free: per iteration the
+/// solver pays one `X·δ` matvec, and each *retry* at a halved step
+/// re-evaluates only the linear predictor combination
+/// `z_trial = z + s·z_dir` plus the O(n) deviance — never the design
+/// matrix, the Hessian, or the sigmoid tile. On acceptance `z_trial`
+/// becomes `z`, the sigmoid tile is refreshed once, and the next
+/// iteration's H/g/dev pass ([`local_stats_from_predictor`]) reuses
+/// both instead of recomputing `X·β` and `σ`.
+#[derive(Clone, Debug, Default)]
+pub struct DampedState {
+    /// `X·β` at the currently-accepted β.
+    z: Vec<f64>,
+    /// `X·δ` for the current Newton direction.
+    z_dir: Vec<f64>,
+    /// `X·(β + s·δ)` for the step under trial.
+    z_trial: Vec<f64>,
+    /// `σ(z)` at the currently-accepted β (the `diag(w)` tile).
+    p: Vec<f64>,
+}
+
+impl DampedState {
+    pub fn new(n: usize) -> DampedState {
+        DampedState {
+            z: vec![0.0; n],
+            z_dir: vec![0.0; n],
+            z_trial: vec![0.0; n],
+            p: vec![0.0; n],
+        }
+    }
+}
+
+/// Centralized regularized Newton-Raphson with step halving: when the
+/// full step would *increase* the penalized deviance, retry at s/2
+/// (up to `max_halvings` times) before accepting. Equivalent to the
+/// plain solver whenever every full step already descends — same
+/// trajectory up to the f64 rounding of the predictor update — and
+/// robust where plain Newton overshoots.
+pub fn damped_newton_fit(
+    x: &Matrix,
+    y: &[f64],
+    lambda: f64,
+    tol: f64,
+    max_iters: usize,
+    max_halvings: u32,
+) -> Result<DampedFit, LinalgError> {
+    let (n, d) = (x.rows, x.cols);
+    let mut cache = DampedState::new(n);
+    let mut beta = vec![0.0; d];
+    let mut beta_trial = vec![0.0; d];
+    let mut dev_prev = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut halvings_total = 0u32;
+    let mut iterations = 0u32;
+    // β = 0 start: z = 0, p = 1/2 — set the caches to match exactly.
+    cache.z.fill(0.0);
+    cache.p.fill(0.5);
+    for _ in 0..max_iters {
+        iterations += 1;
+        // H/g/dev from the cached predictor + sigmoid tile.
+        let st = local_stats_from_predictor(x, y, &cache.z, &cache.p);
+        let pen = st.dev + lambda * beta.iter().map(|b| b * b).sum::<f64>();
+        trace.push(pen);
+        if converged(dev_prev, pen, tol) {
+            break;
+        }
+        dev_prev = pen;
+        // Newton direction δ from (H + λI) δ = g − λβ.
+        let step = newton_update(&st.h, &st.g, st.dev, &beta, lambda)?;
+        let delta: Vec<f64> = step
+            .beta_new
+            .iter()
+            .zip(&beta)
+            .map(|(bn, b)| bn - b)
+            .collect();
+        x.matvec_into(&delta, &mut cache.z_dir);
+        // Step search: each retry touches only z (O(n)) — X, H, g and
+        // the sigmoid tile stay untouched until a step is accepted.
+        let mut s = 1.0f64;
+        let mut halvings = 0u32;
+        loop {
+            for ((zt, &z0), &zd) in cache.z_trial.iter_mut().zip(&cache.z).zip(&cache.z_dir) {
+                *zt = z0 + s * zd;
+            }
+            for (bt, (&b, &dl)) in beta_trial.iter_mut().zip(beta.iter().zip(&delta)) {
+                *bt = b + s * dl;
+            }
+            let pen_trial = deviance_from_z(&cache.z_trial, y)
+                + lambda * beta_trial.iter().map(|b| b * b).sum::<f64>();
+            // Accept descent — and don't fight increases below the
+            // convergence resolution (fixed-point flutter near the
+            // optimum would otherwise burn max_halvings per round).
+            if pen_trial <= pen + 0.5 * tol || halvings >= max_halvings {
+                break;
+            }
+            s *= 0.5;
+            halvings += 1;
+        }
+        halvings_total += halvings;
+        // Accept: promote the trial predictor, refresh the sigmoid
+        // tile once, and carry both into the next iteration.
+        beta.copy_from_slice(&beta_trial);
+        cache.z.copy_from_slice(&cache.z_trial);
+        for (pi, &zi) in cache.p.iter_mut().zip(&cache.z) {
+            *pi = sigmoid(zi);
+        }
+        // β stationarity safety net, mirroring the protocol solver.
+        if delta.iter().all(|dl| (s * dl).abs() < 1e-12) {
+            break;
+        }
+    }
+    Ok(DampedFit {
+        beta,
+        iterations,
+        deviance_trace: trace,
+        halvings: halvings_total,
+    })
+}
+
 /// Outcome of one Newton-Raphson update on aggregated statistics.
 #[derive(Clone, Debug)]
 pub struct NewtonStep {
@@ -571,6 +745,102 @@ mod tests {
             norm_large < norm_small * 0.5,
             "λ=100 should shrink: {norm_large} vs {norm_small}"
         );
+    }
+
+    #[test]
+    fn predictor_cached_stats_are_bit_identical() {
+        // With z/p filled exactly as the reference pass computes them,
+        // local_stats_from_predictor must match it bit for bit — the
+        // cached path changes where values come from, not what they are.
+        let (x, y, _) = toy_data(200, 4, 11);
+        let beta = [0.3, -0.2, 0.1, 0.05];
+        let mut z = vec![0.0; x.rows];
+        x.matvec_into(&beta, &mut z);
+        let p: Vec<f64> = z.iter().map(|&zi| sigmoid(zi)).collect();
+        let cached = local_stats_from_predictor(&x, &y, &z, &p);
+        let reference = local_stats_reference(&x, &y, &beta);
+        assert_eq!(cached.h.data, reference.h.data);
+        assert_eq!(cached.g, reference.g);
+        assert_eq!(cached.dev, reference.dev);
+        assert_eq!(deviance_from_z(&z, &y), reference.dev);
+    }
+
+    #[test]
+    fn trial_step_deviance_needs_only_the_predictor() {
+        // A halved-step retry evaluates dev(β + s·δ) from z + s·z_dir
+        // alone; it must agree with the full recomputation at the trial
+        // point to numerical precision.
+        let (x, y, _) = toy_data(300, 4, 12);
+        let beta = [0.2, -0.1, 0.05, 0.3];
+        let delta = [0.4, 0.3, -0.2, 0.1];
+        let mut z = vec![0.0; x.rows];
+        let mut z_dir = vec![0.0; x.rows];
+        x.matvec_into(&beta, &mut z);
+        x.matvec_into(&delta, &mut z_dir);
+        for s in [1.0f64, 0.5, 0.25, 0.125] {
+            let z_trial: Vec<f64> = z.iter().zip(&z_dir).map(|(&a, &b)| a + s * b).collect();
+            let fast = deviance_from_z(&z_trial, &y);
+            let beta_trial: Vec<f64> =
+                beta.iter().zip(&delta).map(|(&b, &d)| b + s * d).collect();
+            let full = local_stats(&x, &y, &beta_trial).dev;
+            assert!((fast - full).abs() < 1e-9, "s={s}: {fast} vs {full}");
+        }
+    }
+
+    #[test]
+    fn damped_fit_matches_plain_newton_on_benign_data() {
+        // Well-scaled data never triggers a halving, so the damped
+        // solver must land on the same optimum as the plain one.
+        let (x, y, _) = toy_data(600, 4, 13);
+        let lambda = 1.0;
+        let damped = damped_newton_fit(&x, &y, lambda, 1e-10, 50, 20).unwrap();
+        assert_eq!(damped.halvings, 0, "benign data should take full steps");
+        let mut beta = vec![0.0; 4];
+        let mut last_pen = f64::INFINITY;
+        for _ in 0..50 {
+            let st = local_stats(&x, &y, &beta);
+            let step = newton_update(&st.h, &st.g, st.dev, &beta, lambda).unwrap();
+            if converged(last_pen, step.penalized_dev, 1e-10) {
+                break;
+            }
+            last_pen = step.penalized_dev;
+            beta = step.beta_new;
+        }
+        for (a, b) in damped.beta.iter().zip(&beta) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // and its trace is monotone non-increasing
+        for w in damped.deviance_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn damping_rescues_an_overshooting_step() {
+        // Ill-scaled single-feature data where the unregularized Newton
+        // step from a far starting deviance profile overshoots: the
+        // damped solver must keep the trace monotone by halving, while
+        // still converging. (Construct by scaling a feature by 1e3 —
+        // the curvature collapses far from the optimum.)
+        let mut rng = SplitMix64::new(14);
+        let n = 400;
+        let mut x = Matrix::zeros(n, 2);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            x[(i, 0)] = 1.0;
+            x[(i, 1)] = rng.next_gaussian() * 1000.0;
+            let p = sigmoid(0.004 * x[(i, 1)]);
+            y[i] = f64::from(rng.next_bernoulli(p));
+        }
+        let fit = damped_newton_fit(&x, &y, 1e-6, 1e-10, 60, 30).unwrap();
+        for w in fit.deviance_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "trace must never increase: {:?}", fit.deviance_trace);
+        }
+        // KKT stationarity at the damped optimum
+        let st = local_stats(&x, &y, &fit.beta);
+        for (g, b) in st.g.iter().zip(&fit.beta) {
+            assert!((g - 1e-6 * b).abs() < 1e-4, "stationarity violated");
+        }
     }
 
     #[test]

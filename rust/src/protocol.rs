@@ -33,6 +33,11 @@ pub enum NodeId {
     Coordinator,
     Institution(u16),
     Center(u16),
+    /// The submitting client API (the `StudyEngine` front end): not a
+    /// routable worker — it only *injects* control frames (study
+    /// submissions, engine shutdown) into the coordinator's mailbox,
+    /// which is what lets the driver block on one unified channel.
+    Client,
 }
 
 impl std::fmt::Display for NodeId {
@@ -41,6 +46,7 @@ impl std::fmt::Display for NodeId {
             NodeId::Coordinator => write!(f, "coordinator"),
             NodeId::Institution(j) => write!(f, "institution-{j}"),
             NodeId::Center(c) => write!(f, "center-{c}"),
+            NodeId::Client => write!(f, "client"),
         }
     }
 }
@@ -106,6 +112,12 @@ pub enum Message {
     /// this context instead of deadlocking on a silent thread death.
     NodeError { node: u16, is_center: bool, error: String },
 
+    /// Client → coordinator: one or more studies were pushed onto the
+    /// engine's submission queue. The driver drains the queue when this
+    /// frame arrives, which replaces its former 1 ms mailbox poll with
+    /// a single fully-blocking receive (no idle burn at any K).
+    StudySubmitted,
+
     /// Orderly teardown of node threads.
     Shutdown,
 }
@@ -120,6 +132,7 @@ impl Message {
             Message::AggregateResponse { .. } => "aggregate_response",
             Message::Finished { .. } => "finished",
             Message::NodeError { .. } => "node_error",
+            Message::StudySubmitted => "study_submitted",
             Message::Shutdown => "shutdown",
         }
     }
@@ -267,6 +280,7 @@ const TAG_AGG_RESP: u8 = 4;
 const TAG_FINISHED: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
 const TAG_NODE_ERROR: u8 = 7;
+const TAG_STUDY_SUBMITTED: u8 = 8;
 
 const HTAG_PLAIN: u8 = 0;
 const HTAG_SHARED: u8 = 1;
@@ -350,6 +364,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u32(bytes.len() as u32);
             w.buf.extend_from_slice(bytes);
         }
+        Message::StudySubmitted => w.u8(TAG_STUDY_SUBMITTED),
         Message::Shutdown => w.u8(TAG_SHUTDOWN),
     }
     w.buf
@@ -386,6 +401,7 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
             beta: r.f64s()?,
         },
         TAG_SHUTDOWN => Message::Shutdown,
+        TAG_STUDY_SUBMITTED => Message::StudySubmitted,
         TAG_NODE_ERROR => {
             let node = r.u16()?;
             let is_center = r.u8()? != 0;
@@ -461,8 +477,17 @@ pub fn pack_upper_into(m: &crate::linalg::Matrix, out: &mut [f64]) {
 
 /// Inverse of [`pack_upper`].
 pub fn unpack_upper(packed: &[f64], d: usize) -> crate::linalg::Matrix {
-    assert_eq!(packed.len(), d * (d + 1) / 2);
     let mut m = crate::linalg::Matrix::zeros(d, d);
+    unpack_upper_into(packed, &mut m);
+    m
+}
+
+/// [`unpack_upper`] into a caller-owned d×d matrix — the coordinator's
+/// per-iteration reconstruction path reuses one matrix per session.
+pub fn unpack_upper_into(packed: &[f64], m: &mut crate::linalg::Matrix) {
+    let d = m.rows;
+    assert_eq!(m.cols, d);
+    assert_eq!(packed.len(), packed_len(d));
     let mut k = 0;
     for i in 0..d {
         for j in i..d {
@@ -471,7 +496,6 @@ pub fn unpack_upper(packed: &[f64], d: usize) -> crate::linalg::Matrix {
             k += 1;
         }
     }
-    m
 }
 
 /// Packed-triangle length for dimension d.
@@ -534,6 +558,7 @@ mod tests {
             is_center: true,
             error: "boom: artifact bucket missing".to_string(),
         });
+        roundtrip(Message::StudySubmitted);
         roundtrip(Message::Shutdown);
     }
 
@@ -583,6 +608,12 @@ mod tests {
         assert_eq!(packed.len(), packed_len(4));
         let back = unpack_upper(&packed, 4);
         assert!(back.max_abs_diff(&m) < 1e-15);
+        // buffered variant overwrites a reused (dirty) matrix fully
+        let mut reused = Matrix::zeros(4, 4);
+        reused[(0, 0)] = 999.0;
+        reused[(3, 1)] = -999.0;
+        unpack_upper_into(&packed, &mut reused);
+        assert!(reused.max_abs_diff(&m) < 1e-15);
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //! institutions) — this is what makes Fig 4's flat central time hold.
 
 use crate::field::{add_assign_slice, mul_scalar_slice, Fp};
-use crate::fixed::FixedCodec;
-use crate::shamir::{share_batch_with, ShamirParams, ShareBatch, VandermondeTable};
-use crate::util::rng::Rng;
+use crate::fixed::{FixedCodec, FixedError};
+use crate::shamir::{
+    eval_shares_chunk, share_batch_with, ShamirParams, ShareBatch, VandermondeTable, SHARE_CHUNK,
+};
+use crate::util::rng::{derive_seed, ChaCha20Rng, Rng};
 
 /// Secure addition: combine two share vectors held by the same center.
 /// (Algorithm 2, one holder's step.)
@@ -61,6 +63,21 @@ impl SecureAccumulator {
             h_plain: (!full_security).then(|| vec![0.0; packed_h]),
             count: 0,
         }
+    }
+
+    /// Zero the accumulator in place, keeping its mode and buffers — a
+    /// center recycles accumulators across iterations instead of
+    /// reallocating (`center::run_center_worker`'s iteration pool).
+    pub fn reset(&mut self) {
+        self.g.fill(Fp::ZERO);
+        self.dev = Fp::ZERO;
+        if let Some(h) = self.h_shared.as_mut() {
+            h.fill(Fp::ZERO);
+        }
+        if let Some(h) = self.h_plain.as_mut() {
+            h.fill(0.0);
+        }
+        self.count = 0;
     }
 
     /// Fold in one institution's submission (this center's slice of it).
@@ -132,21 +149,251 @@ impl ShareContext {
         self.table.params()
     }
 
+    /// The cached Vandermonde evaluation table.
+    pub fn table(&self) -> &VandermondeTable {
+        &self.table
+    }
+
     /// Share one batch through the cached table.
     pub fn share<R: Rng>(&self, secrets: &[Fp], rng: &mut R) -> ShareBatch {
         share_batch_with(&self.table, secrets, rng)
     }
 }
 
-/// Encode-and-share local statistics.
+/// Pooled buffers of the fused encode+share sweep, owned by the
+/// engine's worker layer and reused for every batch any session ever
+/// shares through it. All growth is monotone (`Vec` capacity never
+/// shrinks), so after the first iteration at the largest dimension the
+/// per-iteration pipeline allocates nothing: per-holder wire buffers,
+/// per-thread chunk scratch, and the thread partition table all live
+/// here.
+#[derive(Default)]
+pub struct SharePool {
+    /// Per-holder wire share vectors; `per_holder[j][k]` is holder j's
+    /// share of secret k for the most recent [`encode_share_into`].
+    per_holder: Vec<Vec<Fp>>,
+    /// Per-worker chunk scratch (encode + coefficient buffers).
+    scratch: Vec<ChunkScratch>,
+    /// Secret-count boundaries of the last thread partition.
+    bounds: Vec<usize>,
+}
+
+/// One worker's chunk-local scratch: the encoded secrets, the random
+/// coefficient matrix (coefficient-major), and an error slot carrying
+/// a mid-sweep encode failure out of the fan-out.
+#[derive(Default)]
+struct ChunkScratch {
+    enc: Vec<Fp>,
+    coeffs: Vec<Fp>,
+    err: Option<FixedError>,
+}
+
+impl SharePool {
+    pub fn new() -> SharePool {
+        SharePool::default()
+    }
+
+    /// Holder j's wire shares from the most recent sweep (`len` secrets).
+    pub fn holder(&self, j: usize) -> &[Fp] {
+        &self.per_holder[j]
+    }
+
+    /// Number of holder buffers currently materialized.
+    pub fn num_holders(&self) -> usize {
+        self.per_holder.len()
+    }
+
+    /// Grow (never shrink capacity) to serve a `(w, t, k)` sweep with
+    /// `workers` chunk workers.
+    fn ensure(&mut self, w: usize, t: usize, k: usize, workers: usize) {
+        if self.per_holder.len() < w {
+            self.per_holder.resize_with(w, Vec::new);
+        }
+        for h in self.per_holder.iter_mut().take(w) {
+            h.resize(k, Fp::ZERO);
+        }
+        if self.scratch.len() < workers {
+            self.scratch.resize_with(workers, ChunkScratch::default);
+        }
+        for sc in self.scratch.iter_mut().take(workers) {
+            sc.enc.resize(SHARE_CHUNK, Fp::ZERO);
+            sc.coeffs.resize((t - 1) * SHARE_CHUNK, Fp::ZERO);
+            sc.err = None;
+        }
+    }
+}
+
+/// Prepare one secret chunk: encode `values` (the chunk's f64 slice)
+/// into `sc.enc` and draw the chunk's coefficient matrix from its OWN
+/// ChaCha20 stream (secret-major draw order, coefficient-major
+/// storage, exactly like `share_batch_with` within the chunk). The
+/// caller then evaluates every holder via
+/// [`eval_shares_chunk`](crate::shamir::eval_shares_chunk).
+fn prepare_chunk(
+    t: usize,
+    codec: &FixedCodec,
+    values: &[f64],
+    chunk_seed: u64,
+    sc: &mut ChunkScratch,
+) -> Result<(), FixedError> {
+    let len = values.len();
+    codec.encode_slice_into(values, &mut sc.enc[..len])?;
+    let coeffs = &mut sc.coeffs[..(t - 1) * len];
+    let mut rng = ChaCha20Rng::seed_from_u64(chunk_seed);
+    for s in 0..len {
+        for i in 0..t - 1 {
+            coeffs[i * len + s] = Fp::random(&mut rng);
+        }
+    }
+    Ok(())
+}
+
+/// The fused, threaded encode+share sweep: encode f64 summaries and
+/// evaluate Shamir shares directly into `pool`'s per-holder wire
+/// buffers — no intermediate `Vec<Fp>` and no per-iteration
+/// allocation once the pool is warm.
+///
+/// The batch is cut into [`SHARE_CHUNK`]-secret chunks; each chunk's
+/// polynomial coefficients come from an independent ChaCha20 stream
+/// seeded with `derive_seed(seed, chunk index)`. `threads` workers
+/// (0 = one per core) fan out over *contiguous chunk ranges*, so the
+/// output is a pure function of `(values, seed, scheme)` — bit-
+/// identical across thread counts — and any t-quorum reconstructs to
+/// exactly the encodings that [`share_batch_with`] over
+/// `FixedCodec::encode_slice` (the retained reference path) yields;
+/// `tests/prop_secure_pipeline.rs` gates both properties.
+///
+/// Thread fan-out engages only when the batch spans several chunks;
+/// the threaded path's only non-pooled cost is the `std::thread` scope
+/// itself plus O(w·workers) slice headers — the d=85 packed-Hessian
+/// sweep in single-thread mode is strictly allocation-free.
+pub fn encode_share_into(
+    ctx: &ShareContext,
+    codec: &FixedCodec,
+    values: &[f64],
+    seed: u64,
+    threads: usize,
+    pool: &mut SharePool,
+) -> anyhow::Result<()> {
+    let params = ctx.params();
+    let (t, w) = (params.threshold, params.num_holders);
+    let table = ctx.table();
+    let k = values.len();
+    let chunks = ((k + SHARE_CHUNK - 1) / SHARE_CHUNK).max(1);
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let workers = threads.min(chunks);
+    pool.ensure(w, t, k, workers);
+    let SharePool {
+        per_holder,
+        scratch,
+        bounds,
+    } = pool;
+
+    if workers <= 1 {
+        // Strictly allocation-free: chunk scratch and wire buffers come
+        // from the pool, chunks write holder ranges directly.
+        let sc = &mut scratch[0];
+        let mut lo = 0;
+        for c in 0..chunks {
+            let hi = (lo + SHARE_CHUNK).min(k);
+            if lo >= hi {
+                break;
+            }
+            let len = hi - lo;
+            prepare_chunk(t, codec, &values[lo..hi], derive_seed(seed, c as u64), sc)
+                .map_err(anyhow::Error::new)?;
+            for (j, h) in per_holder.iter_mut().take(w).enumerate() {
+                eval_shares_chunk(
+                    table.holder_powers(j),
+                    &sc.enc[..len],
+                    &sc.coeffs[..(t - 1) * len],
+                    &mut h[lo..hi],
+                );
+            }
+            lo = hi;
+        }
+        return Ok(());
+    }
+
+    // Contiguous chunk ranges per worker (whole chunks, near-equal);
+    // per-chunk seeds make the result identical to the 1-worker path.
+    let chunks_per = (chunks + workers - 1) / workers;
+    bounds.clear();
+    for p in 0..=workers {
+        bounds.push(((p * chunks_per) * SHARE_CHUNK).min(k));
+    }
+    // Split every holder buffer at the partition bounds so each worker
+    // owns disjoint slices of all w wire buffers. These views are the
+    // fan-out's only non-pooled state: O(w·workers) slice headers.
+    let mut views: Vec<Vec<&mut [Fp]>> = (0..workers).map(|_| Vec::with_capacity(w)).collect();
+    for h in per_holder.iter_mut().take(w) {
+        let mut rest: &mut [Fp] = &mut h[..k];
+        for (p, view) in views.iter_mut().enumerate() {
+            let take = bounds[p + 1] - bounds[p];
+            let (head, tail) = rest.split_at_mut(take);
+            view.push(head);
+            rest = tail;
+        }
+    }
+    std::thread::scope(|s| {
+        for ((p, mut view), sc) in views.drain(..).enumerate().zip(scratch.iter_mut()) {
+            let (lo, hi) = (bounds[p], bounds[p + 1]);
+            if lo >= hi {
+                continue;
+            }
+            let vals = &values[lo..hi];
+            s.spawn(move || {
+                let first_chunk = lo / SHARE_CHUNK;
+                let mut off = 0;
+                while off < vals.len() {
+                    let len = SHARE_CHUNK.min(vals.len() - off);
+                    let chunk_idx = first_chunk + off / SHARE_CHUNK;
+                    if let Err(e) = prepare_chunk(
+                        t,
+                        codec,
+                        &vals[off..off + len],
+                        derive_seed(seed, chunk_idx as u64),
+                        sc,
+                    ) {
+                        sc.err = Some(e);
+                        return;
+                    }
+                    for (j, out) in view.iter_mut().enumerate() {
+                        eval_shares_chunk(
+                            table.holder_powers(j),
+                            &sc.enc[..len],
+                            &sc.coeffs[..(t - 1) * len],
+                            &mut out[off..off + len],
+                        );
+                    }
+                    off += len;
+                }
+            });
+        }
+    });
+    for sc in scratch.iter().take(workers) {
+        if let Some(e) = sc.err {
+            return Err(anyhow::Error::new(e));
+        }
+    }
+    Ok(())
+}
+
+/// Encode-and-share local statistics (reference/compat path).
 ///
 /// `g_plain` is the local gradient (d), `dev_plain` the local deviance,
 /// `h_packed_plain` the packed upper-triangular Hessian — shared only
 /// when `full_security` is set (pragmatic mode sends it plaintext).
 ///
-/// Convenience wrapper building a fresh [`ShareContext`]; the protocol
-/// hot path (`institution::run_institution_worker`) caches one context
-/// per `(t, w)` scheme across sessions via [`share_local_stats_with`].
+/// Convenience wrapper building a fresh [`ShareContext`]. The protocol
+/// hot path no longer routes through here: institutions protect their
+/// summaries with the fused pooled [`encode_share_into`] sweep; this
+/// entry point (and [`share_local_stats_with`]) remains as the
+/// eager-allocation reference the pipeline gates compare against.
 pub fn share_local_stats<R: Rng>(
     params: ShamirParams,
     codec: &FixedCodec,
@@ -317,6 +564,84 @@ mod tests {
                 &HessianPayload::Plain(vec![0.0, 1.0])
             )
             .is_err());
+    }
+
+    #[test]
+    fn fused_sweep_is_thread_count_invariant_and_reconstructs() {
+        // Chunk-forked RNG streams make the fused sweep a pure function
+        // of (values, seed, scheme): per-holder wire buffers must be
+        // bitwise identical across worker counts, and any t-quorum must
+        // reconstruct to exactly the encodings the reference path
+        // (encode_slice + share_batch_with) reconstructs to.
+        let p = params();
+        let ctx = ShareContext::new(p);
+        let codec = FixedCodec::default();
+        let k = crate::shamir::SHARE_CHUNK * 2 + 17; // straddles chunks
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let values: Vec<f64> = (0..k)
+            .map(|_| rng.next_range_f64(-1e4, 1e4))
+            .collect();
+        let mut pools: Vec<SharePool> = (0..3).map(|_| SharePool::new()).collect();
+        for (threads, pool) in [1usize, 2, 4].iter().zip(pools.iter_mut()) {
+            encode_share_into(&ctx, &codec, &values, 0xFEED, *threads, pool).unwrap();
+        }
+        for j in 0..5 {
+            assert_eq!(pools[0].holder(j), pools[1].holder(j), "holder {j} 1v2");
+            assert_eq!(pools[0].holder(j), pools[2].holder(j), "holder {j} 1v4");
+        }
+        // reconstruction equivalence vs the retained reference path
+        let enc = codec.encode_slice(&values).unwrap();
+        let mut rrng = ChaCha20Rng::seed_from_u64(9);
+        let reference = ctx.share(&enc, &mut rrng);
+        let ref_quorum: Vec<(usize, &[Fp])> = [0usize, 2, 4]
+            .iter()
+            .map(|&j| (j, reference.per_holder[j].as_slice()))
+            .collect();
+        let fused_quorum: Vec<(usize, &[Fp])> = [0usize, 2, 4]
+            .iter()
+            .map(|&j| (j, pools[0].holder(j)))
+            .collect();
+        let from_ref = reconstruct_batch(p, &ref_quorum).unwrap();
+        let from_fused = reconstruct_batch(p, &fused_quorum).unwrap();
+        assert_eq!(from_fused, enc);
+        assert_eq!(from_fused, from_ref);
+    }
+
+    #[test]
+    fn fused_sweep_reuses_pool_across_batch_sizes() {
+        // One pool serves batches of different lengths (a session's g,
+        // dev, and packed-H sweeps interleave): each call's holder
+        // buffers carry exactly the current batch.
+        let ctx = ShareContext::new(params());
+        let codec = FixedCodec::default();
+        let mut pool = SharePool::new();
+        for k in [3655usize, 1, 86, 3655] {
+            let values: Vec<f64> = (0..k).map(|i| i as f64 * 0.5 - 10.0).collect();
+            encode_share_into(&ctx, &codec, &values, k as u64, 2, &mut pool).unwrap();
+            assert_eq!(pool.holder(0).len(), k);
+            let quorum: Vec<(usize, &[Fp])> =
+                (0..3).map(|j| (j, pool.holder(j))).collect();
+            let rec = reconstruct_batch(ctx.params(), &quorum).unwrap();
+            assert_eq!(rec, codec.encode_slice(&values).unwrap(), "k={k}");
+        }
+        // degenerate empty batch
+        encode_share_into(&ctx, &codec, &[], 7, 4, &mut pool).unwrap();
+        assert_eq!(pool.holder(0).len(), 0);
+    }
+
+    #[test]
+    fn fused_sweep_propagates_encode_errors() {
+        let ctx = ShareContext::new(params());
+        let codec = FixedCodec::default();
+        let mut pool = SharePool::new();
+        // single-threaded path
+        assert!(encode_share_into(&ctx, &codec, &[f64::NAN], 1, 1, &mut pool).is_err());
+        // threaded path: bad value in the LAST chunk of several
+        let mut values = vec![0.5; crate::shamir::SHARE_CHUNK * 3];
+        *values.last_mut().unwrap() = f64::INFINITY;
+        assert!(encode_share_into(&ctx, &codec, &values, 1, 4, &mut pool).is_err());
+        // pool still serviceable afterwards
+        assert!(encode_share_into(&ctx, &codec, &[1.0, 2.0], 1, 2, &mut pool).is_ok());
     }
 
     #[test]

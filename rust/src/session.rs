@@ -26,8 +26,10 @@ use crate::field::Fp;
 use crate::fixed::FixedCodec;
 use crate::linalg::Matrix;
 use crate::model::{converged, newton_update};
-use crate::protocol::{packed_len, unpack_upper, HessianPayload, Message, NodeId, SessionId};
-use crate::shamir::{reconstruct_batch, reconstruct_scalar, ShamirParams};
+use crate::protocol::{packed_len, unpack_upper_into, HessianPayload, Message, NodeId, SessionId};
+use crate::shamir::{
+    reconstruct_batch_with, reconstruct_scalar_with, LagrangeCache, ShamirParams,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -216,6 +218,17 @@ pub struct SessionState {
     responses: Vec<(u16, HessianPayload, Vec<Fp>, Fp)>,
     central_secs: f64,
     pub started: Instant,
+    // ---- reconstruction hot-path caches (per-session, reused every
+    // iteration; the quorum is the same each round, so the Lagrange
+    // weights are computed exactly once per session) ----
+    lagrange: LagrangeCache,
+    idx_buf: Vec<usize>,
+    dev_buf: Vec<Fp>,
+    g_fp: Vec<Fp>,
+    g_f64: Vec<f64>,
+    h_fp: Vec<Fp>,
+    h_f64: Vec<f64>,
+    h_mat: Matrix,
 }
 
 impl SessionState {
@@ -228,6 +241,8 @@ impl SessionState {
     ) -> SessionState {
         let d = spec.d();
         let w = spec.num_centers();
+        let t = spec.params.threshold;
+        let packed = if mode.is_full() { packed_len(d) } else { 0 };
         SessionState {
             spec,
             mode,
@@ -242,6 +257,14 @@ impl SessionState {
             responses: Vec::with_capacity(w),
             central_secs: 0.0,
             started: Instant::now(),
+            lagrange: LagrangeCache::new(),
+            idx_buf: Vec::with_capacity(t),
+            dev_buf: Vec::with_capacity(t),
+            g_fp: vec![Fp::ZERO; d],
+            g_f64: vec![0.0; d],
+            h_fp: vec![Fp::ZERO; packed],
+            h_f64: vec![0.0; packed],
+            h_mat: Matrix::zeros(d, d),
         }
     }
 
@@ -335,7 +358,11 @@ impl SessionState {
             return Ok(SessionStep::Pending);
         }
 
-        // Centralized phase: reconstruct from a t-quorum, update, check.
+        // Centralized phase: reconstruct from a t-quorum through the
+        // session's cached Lagrange weights and pooled buffers (the λ
+        // inversions happen once per session, the reconstruction sweeps
+        // are lazy-reduction dots into reused output vectors), then
+        // update and check.
         let t_central = Instant::now();
         let params = self.spec.params;
         let codec = self.spec.codec;
@@ -343,17 +370,19 @@ impl SessionState {
         let threshold = params.threshold;
         self.responses.sort_by_key(|(c, ..)| *c);
         let quorum = &self.responses[..threshold];
+        self.idx_buf.clear();
+        self.idx_buf.extend(quorum.iter().map(|(c, ..)| *c as usize));
+        let lambdas = self.lagrange.zero_weights(params, &self.idx_buf)?;
         let g_quorum: Vec<(usize, &[Fp])> = quorum
             .iter()
             .map(|(c, _, g, _)| (*c as usize, g.as_slice()))
             .collect();
-        let g_total = codec.decode_slice(&reconstruct_batch(params, &g_quorum)?);
-        let dev_quorum: Vec<(usize, Fp)> = quorum
-            .iter()
-            .map(|(c, _, _, dv)| (*c as usize, *dv))
-            .collect();
-        let dev_total = codec.decode(reconstruct_scalar(params, &dev_quorum)?);
-        let h_total = match self.mode {
+        reconstruct_batch_with(lambdas, &g_quorum, &mut self.g_fp)?;
+        codec.decode_slice_into(&self.g_fp, &mut self.g_f64);
+        self.dev_buf.clear();
+        self.dev_buf.extend(quorum.iter().map(|(_, _, _, dv)| *dv));
+        let dev_total = codec.decode(reconstruct_scalar_with(lambdas, &self.dev_buf));
+        match self.mode {
             SecurityMode::Pragmatic => {
                 // Lead center (id 0) carries the plaintext aggregate.
                 let h = self
@@ -365,7 +394,7 @@ impl SessionState {
                     })
                     .ok_or_else(|| anyhow::anyhow!("no plaintext hessian in responses"))?;
                 anyhow::ensure!(h.len() == packed_len(d), "hessian length from centers");
-                unpack_upper(h, d)
+                unpack_upper_into(h, &mut self.h_mat);
             }
             SecurityMode::Full => {
                 let h_quorum: Vec<(usize, &[Fp])> = quorum
@@ -375,12 +404,13 @@ impl SessionState {
                         _ => Err(anyhow::anyhow!("expected shared hessian")),
                     })
                     .collect::<anyhow::Result<_>>()?;
-                let h_packed = codec.decode_slice(&reconstruct_batch(params, &h_quorum)?);
-                unpack_upper(&h_packed, d)
+                reconstruct_batch_with(lambdas, &h_quorum, &mut self.h_fp)?;
+                codec.decode_slice_into(&self.h_fp, &mut self.h_f64);
+                unpack_upper_into(&self.h_f64, &mut self.h_mat);
             }
-        };
+        }
 
-        let step = newton_update(&h_total, &g_total, dev_total, &self.beta, self.lambda)?;
+        let step = newton_update(&self.h_mat, &self.g_f64, dev_total, &self.beta, self.lambda)?;
         self.deviance_trace.push(step.penalized_dev);
         // Primary criterion: deviance change < tol (paper: 1e-10).
         // Safety net: β stationarity — at the protocol's fixed point the

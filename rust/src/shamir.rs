@@ -13,8 +13,17 @@
 //! one share-vector per center so a center's state is a contiguous
 //! `Vec<Fp>` and secure addition is a slice loop (see `secure`).
 
-use crate::field::{mul_add_slice, Fp};
+use crate::field::{fold_lazy, mul_add_slice, reduce_lazy, Fp, LAZY_FOLD_EVERY};
 use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Secret-index chunk width of the fused encode+share sweep
+/// (`secure::encode_share_into`). Chunks are the unit of both thread
+/// fan-out and RNG stream forking: each chunk draws its polynomial
+/// coefficients from an independent stream derived from
+/// `(batch seed, chunk index)`, so the produced shares depend only on
+/// the chunking — never on how chunks are distributed over threads.
+pub const SHARE_CHUNK: usize = 512;
 
 /// Scheme parameters: `threshold`-out-of-`num_holders`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -105,6 +114,41 @@ impl VandermondeTable {
     #[inline]
     fn power(&self, holder: usize, degree: usize) -> Fp {
         self.powers[holder * self.params.threshold + degree]
+    }
+
+    /// All evaluation powers of holder `j`: `[1, x_j, …, x_j^{t−1}]`.
+    /// The fused encode+share sweep streams this slice per chunk.
+    #[inline]
+    pub fn holder_powers(&self, holder: usize) -> &[Fp] {
+        let t = self.params.threshold;
+        &self.powers[holder * t..(holder + 1) * t]
+    }
+}
+
+/// Evaluate one holder's shares for one secret chunk with lazy
+/// reduction: `out[k] = enc[k] + Σ_{i≥1} x^i · coeff_i[k]`, accumulated
+/// in u128 with periodic folds and ONE Mersenne reduction per element
+/// (vs one per (element, coefficient) in the eager axpy sweeps).
+///
+/// `powers` is [`VandermondeTable::holder_powers`] for the holder
+/// (`powers[0] = 1` is unused — the degree-0 term is `enc` itself);
+/// `coeffs_cm` stores the chunk's random coefficients coefficient-major
+/// (`coeffs_cm[(i−1)·len + k]` is secret k's degree-i coefficient).
+/// Exact: identical field values to the eager evaluation.
+pub fn eval_shares_chunk(powers: &[Fp], enc: &[Fp], coeffs_cm: &[Fp], out: &mut [Fp]) {
+    let len = enc.len();
+    let tm1 = powers.len() - 1;
+    assert_eq!(out.len(), len);
+    assert_eq!(coeffs_cm.len(), tm1 * len);
+    for k in 0..len {
+        let mut acc = enc[k].to_u64() as u128;
+        for i in 0..tm1 {
+            acc += powers[i + 1].to_u64() as u128 * coeffs_cm[i * len + k].to_u64() as u128;
+            if (i + 1) % LAZY_FOLD_EVERY == 0 {
+                acc = fold_lazy(acc);
+            }
+        }
+        out[k] = reduce_lazy(acc);
     }
 }
 
@@ -243,9 +287,66 @@ pub fn lagrange_at_zero(params: ShamirParams, holder_idx: &[usize]) -> anyhow::R
     Ok(lambdas)
 }
 
+/// Memoized [`lagrange_at_zero`] per quorum — the center-side
+/// reconstruction cache. A study session reconstructs from the SAME
+/// quorum every Newton iteration, but computing the λ vector costs t
+/// Fermat inversions (≈ 2·61 field squarings each); the cache computes
+/// each distinct quorum's λ once and hands out a borrowed slice.
+///
+/// One cache serves exactly one `(t, w)` scheme: the first call pins
+/// the parameters and mismatched later calls are rejected (λ values
+/// from different schemes must never mix).
+#[derive(Debug, Default)]
+pub struct LagrangeCache {
+    params: Option<ShamirParams>,
+    by_quorum: HashMap<Vec<usize>, Vec<Fp>>,
+}
+
+impl LagrangeCache {
+    pub fn new() -> LagrangeCache {
+        LagrangeCache::default()
+    }
+
+    /// Number of distinct quorums cached.
+    pub fn len(&self) -> usize {
+        self.by_quorum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_quorum.is_empty()
+    }
+
+    /// The λ vector for `holder_idx`, computing and caching it on first
+    /// use. Lookups after warm-up allocate nothing (`Vec<usize>` keys
+    /// are queried through their `Borrow<[usize]>` view).
+    pub fn zero_weights(
+        &mut self,
+        params: ShamirParams,
+        holder_idx: &[usize],
+    ) -> anyhow::Result<&[Fp]> {
+        match self.params {
+            None => self.params = Some(params),
+            Some(p) => anyhow::ensure!(
+                p == params,
+                "LagrangeCache serves scheme {p:?}, not {params:?}"
+            ),
+        }
+        if !self.by_quorum.contains_key(holder_idx) {
+            let lambdas = lagrange_at_zero(params, holder_idx)?;
+            self.by_quorum.insert(holder_idx.to_vec(), lambdas);
+        }
+        Ok(self.by_quorum.get(holder_idx).unwrap().as_slice())
+    }
+}
+
 /// Reconstruct a batch of secrets from a quorum of holders.
 ///
 /// `quorum` pairs each holder index with that holder's share vector.
+///
+/// Convenience wrapper computing the Lagrange weights and allocating
+/// the output; the per-iteration hot path caches λ in a
+/// [`LagrangeCache`] and reuses an output buffer via
+/// [`reconstruct_batch_with`].
 pub fn reconstruct_batch(
     params: ShamirParams,
     quorum: &[(usize, &[Fp])],
@@ -256,23 +357,67 @@ pub fn reconstruct_batch(
         .first()
         .map(|(_, v)| v.len())
         .ok_or_else(|| anyhow::anyhow!("empty quorum"))?;
+    let mut out = vec![Fp::ZERO; n];
+    reconstruct_batch_with(&lambdas, quorum, &mut out)?;
+    Ok(out)
+}
+
+/// Lazy-reduction batch reconstruction through cached λ and a
+/// caller-owned output buffer: `out[k] = Σ_j λ_j · q_j[k]` accumulated
+/// in u128 with one Mersenne reduction per element (vs one per term).
+/// `lambdas[i]` must correspond to `quorum[i]` — i.e. come from
+/// [`lagrange_at_zero`] / [`LagrangeCache::zero_weights`] over exactly
+/// the quorum's holder indices, in order. Exact: identical field
+/// values to the eager per-term path.
+pub fn reconstruct_batch_with(
+    lambdas: &[Fp],
+    quorum: &[(usize, &[Fp])],
+    out: &mut [Fp],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(!quorum.is_empty(), "empty quorum");
+    anyhow::ensure!(
+        lambdas.len() == quorum.len(),
+        "{} lagrange weights for {} quorum members",
+        lambdas.len(),
+        quorum.len()
+    );
+    let n = out.len();
     for (_, v) in quorum {
         anyhow::ensure!(v.len() == n, "ragged share vectors in quorum");
     }
-    let mut out = vec![Fp::ZERO; n];
-    for ((_, shares), &lambda) in quorum.iter().zip(&lambdas) {
-        for (o, &s) in out.iter_mut().zip(shares.iter()) {
-            *o = *o + lambda * s;
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc: u128 = 0;
+        for (j, (_, shares)) in quorum.iter().enumerate() {
+            acc += lambdas[j].to_u64() as u128 * shares[k].to_u64() as u128;
+            if (j + 1) % LAZY_FOLD_EVERY == 0 {
+                acc = fold_lazy(acc);
+            }
+        }
+        *o = reduce_lazy(acc);
+    }
+    Ok(())
+}
+
+/// Scalar companion of [`reconstruct_batch_with`]: one lazy dot over
+/// pre-gathered shares (`shares[i]` pairs with `lambdas[i]`).
+pub fn reconstruct_scalar_with(lambdas: &[Fp], shares: &[Fp]) -> Fp {
+    assert_eq!(lambdas.len(), shares.len());
+    let mut acc: u128 = 0;
+    for (j, (l, s)) in lambdas.iter().zip(shares).enumerate() {
+        acc += l.to_u64() as u128 * s.to_u64() as u128;
+        if (j + 1) % LAZY_FOLD_EVERY == 0 {
+            acc = fold_lazy(acc);
         }
     }
-    Ok(out)
+    reduce_lazy(acc)
 }
 
 /// Reconstruct a single secret (convenience for scalars like deviance).
 pub fn reconstruct_scalar(params: ShamirParams, quorum: &[(usize, Fp)]) -> anyhow::Result<Fp> {
-    let vecs: Vec<(usize, Vec<Fp>)> = quorum.iter().map(|&(j, s)| (j, vec![s])).collect();
-    let refs: Vec<(usize, &[Fp])> = vecs.iter().map(|(j, v)| (*j, v.as_slice())).collect();
-    Ok(reconstruct_batch(params, &refs)?[0])
+    let idx: Vec<usize> = quorum.iter().map(|&(j, _)| j).collect();
+    let lambdas = lagrange_at_zero(params, &idx)?;
+    let shares: Vec<Fp> = quorum.iter().map(|&(_, s)| s).collect();
+    Ok(reconstruct_scalar_with(&lambdas, &shares))
 }
 
 #[cfg(test)]
@@ -447,6 +592,115 @@ mod tests {
                 }
                 // and the streams stay in lockstep afterwards
                 assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_reconstruct_matches_eager_formula() {
+        // reconstruct_batch_with (lazy u128 accumulation) must equal the
+        // per-term-reduced Σ λ·s exactly, including share values at the
+        // field boundary and quorums long enough to cross a fold.
+        let p = params(3, 40);
+        let idx: Vec<usize> = (0..40).collect(); // > LAZY_FOLD_EVERY members
+        let lambdas = lagrange_at_zero(p, &idx).unwrap();
+        let mut rng = SplitMix64::new(21);
+        let mut shares: Vec<Vec<Fp>> = (0..40)
+            .map(|_| (0..9).map(|_| Fp::random(&mut rng)).collect())
+            .collect();
+        // plant boundary values
+        for v in shares[0].iter_mut() {
+            *v = Fp::new(crate::field::P - 1);
+        }
+        shares[39][0] = Fp::new(crate::field::P - 1);
+        let quorum: Vec<(usize, &[Fp])> = idx
+            .iter()
+            .map(|&j| (j, shares[j].as_slice()))
+            .collect();
+        let mut lazy = vec![Fp::ZERO; 9];
+        reconstruct_batch_with(&lambdas, &quorum, &mut lazy).unwrap();
+        for k in 0..9 {
+            let eager = quorum
+                .iter()
+                .zip(&lambdas)
+                .fold(Fp::ZERO, |acc, ((_, s), &l)| acc + l * s[k]);
+            assert_eq!(lazy[k], eager, "element {k}");
+        }
+        // scalar companion agrees with the batch path
+        let dev_shares: Vec<Fp> = shares.iter().map(|s| s[0]).collect();
+        assert_eq!(reconstruct_scalar_with(&lambdas, &dev_shares), lazy[0]);
+    }
+
+    #[test]
+    fn reconstruct_with_validates_inputs() {
+        let p = params(2, 3);
+        let lambdas = lagrange_at_zero(p, &[0, 2]).unwrap();
+        let a = [Fp::new(1), Fp::new(2)];
+        let b = [Fp::new(3)];
+        let mut out = vec![Fp::ZERO; 2];
+        // ragged quorum
+        let quorum: Vec<(usize, &[Fp])> = vec![(0, &a[..]), (2, &b[..])];
+        assert!(reconstruct_batch_with(&lambdas, &quorum, &mut out).is_err());
+        // weight/quorum arity mismatch
+        let quorum: Vec<(usize, &[Fp])> = vec![(0, &a[..])];
+        assert!(reconstruct_batch_with(&lambdas, &quorum, &mut out).is_err());
+        // empty quorum
+        assert!(reconstruct_batch_with(&lambdas, &[], &mut out).is_err());
+    }
+
+    #[test]
+    fn lagrange_cache_hits_and_pins_scheme() {
+        let p = params(3, 5);
+        let mut cache = LagrangeCache::new();
+        assert!(cache.is_empty());
+        let direct = lagrange_at_zero(p, &[0, 2, 4]).unwrap();
+        assert_eq!(cache.zero_weights(p, &[0, 2, 4]).unwrap(), &direct[..]);
+        assert_eq!(cache.len(), 1);
+        // same quorum again: served from cache, no growth
+        assert_eq!(cache.zero_weights(p, &[0, 2, 4]).unwrap(), &direct[..]);
+        assert_eq!(cache.len(), 1);
+        // a different quorum is a second entry
+        cache.zero_weights(p, &[1, 2, 3]).unwrap();
+        assert_eq!(cache.len(), 2);
+        // invalid quorums still rejected through the cache
+        assert!(cache.zero_weights(p, &[1, 1, 2]).is_err());
+        // and a different scheme is refused outright
+        assert!(cache.zero_weights(params(2, 5), &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn eval_shares_chunk_matches_eager_axpy() {
+        // The lazy chunk evaluator must equal the eager mul_add sweeps
+        // exactly — random and boundary coefficient values, t from the
+        // degenerate 1 up past the fold window.
+        let mut rng = SplitMix64::new(22);
+        for (t, w) in [(1usize, 2usize), (2, 3), (3, 5), (5, 5), (40, 41)] {
+            let p = params(t, w);
+            let table = VandermondeTable::new(p);
+            for len in [1usize, 7, 64] {
+                let mut enc: Vec<Fp> = (0..len).map(|_| Fp::random(&mut rng)).collect();
+                enc[0] = Fp::new(crate::field::P - 1);
+                let mut coeffs = vec![Fp::ZERO; (t - 1) * len];
+                for (i, c) in coeffs.iter_mut().enumerate() {
+                    *c = if i % 5 == 0 {
+                        Fp::new(crate::field::P - 1)
+                    } else {
+                        Fp::random(&mut rng)
+                    };
+                }
+                for j in 0..w {
+                    let mut lazy = vec![Fp::ZERO; len];
+                    eval_shares_chunk(table.holder_powers(j), &enc, &coeffs, &mut lazy);
+                    let mut eager = enc.clone();
+                    for i in 1..t {
+                        mul_add_slice(
+                            &mut eager,
+                            &coeffs[(i - 1) * len..i * len],
+                            table.power(j, i),
+                        );
+                    }
+                    assert_eq!(lazy, eager, "t={t} w={w} len={len} holder={j}");
+                }
             }
         }
     }

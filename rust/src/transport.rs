@@ -53,6 +53,23 @@ impl SessionTraffic {
             _ => {}
         }
     }
+
+    /// Fold another breakdown into this one (the retire-session
+    /// aggregate).
+    fn merge(&mut self, other: &SessionTraffic) {
+        self.total_bytes += other.total_bytes;
+        self.total_messages += other.total_messages;
+        self.submission_bytes += other.submission_bytes;
+        self.central_bytes += other.central_bytes;
+        self.broadcast_bytes += other.broadcast_bytes;
+    }
+}
+
+/// Running aggregate of retired sessions' traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct RetiredTraffic {
+    sessions: u64,
+    traffic: SessionTraffic,
 }
 
 /// Shared traffic accounting: lock-free global atomics plus a locked
@@ -70,11 +87,16 @@ pub struct TrafficCounters {
     /// Bytes on coordinator→institution broadcast links.
     pub broadcast_bytes: AtomicU64,
     /// Per-session attribution. Entries are retained after a session
-    /// completes so callers can read a finished study's traffic; at
-    /// ~56 bytes per session ever submitted this grows monotonically
-    /// on a long-lived network (ROADMAP records the retire-into-an-
-    /// aggregate follow-up for truly unbounded deployments).
+    /// completes so callers can read a finished study's traffic; for
+    /// truly unbounded deployments [`TrafficCounters::retire_session`]
+    /// folds a finished session's entry into the running
+    /// `retired` aggregate, keeping live-map size bounded by the
+    /// active session count while preserving
+    /// `Σ per-session + retired == global`.
     per_session: Mutex<HashMap<SessionId, SessionTraffic>>,
+    /// Aggregate of retired sessions (same lock-order discipline as
+    /// `per_session`: always taken after it).
+    retired: Mutex<RetiredTraffic>,
 }
 
 impl TrafficCounters {
@@ -82,8 +104,12 @@ impl TrafficCounters {
         // Hold the per-session lock while reading the atomics:
         // `record` updates both under the same lock, so a snapshot can
         // never observe a frame in the globals but not in the map (or
-        // vice versa) — the sum invariant holds even mid-run.
+        // vice versa) — the sum invariant holds even mid-run. The
+        // retired aggregate is read under the same critical section
+        // (same lock order as `retire_session`), so
+        // Σ per-session + retired == totals also holds mid-retire.
         let guard = self.per_session.lock().unwrap();
+        let retired = *self.retired.lock().unwrap();
         let mut per_session: Vec<(SessionId, u64)> = guard
             .iter()
             .map(|(&sid, t)| (sid, t.total_bytes))
@@ -96,7 +122,25 @@ impl TrafficCounters {
             central_bytes: self.central_bytes.load(Ordering::Relaxed),
             broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
             per_session,
+            retired_sessions: retired.sessions,
+            retired_bytes: retired.traffic.total_bytes,
         }
+    }
+
+    /// Retire a completed session: remove its per-session entry and
+    /// fold the totals into the running retired aggregate. Returns the
+    /// class-resolved traffic that was folded (`None` for unknown or
+    /// already-retired sessions). Global counters are untouched, so
+    /// `Σ per-session + retired_bytes == total_bytes` keeps holding;
+    /// frames arriving for the session AFTER retirement open a fresh
+    /// entry (retire last, or accept a split attribution).
+    pub fn retire_session(&self, session: SessionId) -> Option<SessionTraffic> {
+        let mut per = self.per_session.lock().unwrap();
+        let t = per.remove(&session)?;
+        let mut retired = self.retired.lock().unwrap();
+        retired.sessions += 1;
+        retired.traffic.merge(&t);
+        Some(t)
     }
 
     /// Class-resolved traffic attributed to one session, as a snapshot
@@ -116,6 +160,8 @@ impl TrafficCounters {
             central_bytes: t.central_bytes,
             broadcast_bytes: t.broadcast_bytes,
             per_session: vec![(session, t.total_bytes)],
+            retired_sessions: 0,
+            retired_bytes: 0,
         }
     }
 
@@ -152,12 +198,20 @@ pub struct TrafficSnapshot {
     pub central_bytes: u64,
     pub broadcast_bytes: u64,
     /// Byte totals attributed per session (sorted by session id); the
-    /// entries always sum to `total_bytes`.
+    /// entries plus `retired_bytes` always sum to `total_bytes`.
     pub per_session: Vec<(SessionId, u64)>,
+    /// Number of sessions folded into the retired aggregate.
+    pub retired_sessions: u64,
+    /// Bytes attributed to retired sessions (see
+    /// [`TrafficCounters::retire_session`]).
+    pub retired_bytes: u64,
 }
 
 impl TrafficSnapshot {
-    /// Difference since an earlier snapshot.
+    /// Difference since an earlier snapshot. (Per-session entries diff
+    /// pairwise; a session retired between the snapshots moves its
+    /// bytes from `per_session` into `retired_bytes`, so windows that
+    /// straddle a retirement should read the totals, not the map.)
     pub fn since(&self, earlier: &TrafficSnapshot) -> TrafficSnapshot {
         let before: HashMap<SessionId, u64> = earlier.per_session.iter().copied().collect();
         let per_session: Vec<(SessionId, u64)> = self
@@ -173,6 +227,8 @@ impl TrafficSnapshot {
             central_bytes: self.central_bytes - earlier.central_bytes,
             broadcast_bytes: self.broadcast_bytes - earlier.broadcast_bytes,
             per_session,
+            retired_sessions: self.retired_sessions - earlier.retired_sessions,
+            retired_bytes: self.retired_bytes - earlier.retired_bytes,
         }
     }
 
@@ -272,6 +328,19 @@ impl Network {
         }
     }
 
+    /// A send-only attachment for client code (no mailbox, never a
+    /// routing destination): frames injected through it reach `to`'s
+    /// ordinary mailbox via the ordinary counted path. This is how the
+    /// engine front end wakes the driver — submissions become frames
+    /// on the coordinator's one channel instead of a side channel the
+    /// driver would have to poll.
+    pub fn injector(self: &Arc<Network>, from: NodeId) -> Injector {
+        Injector {
+            from,
+            net: Arc::clone(self),
+        }
+    }
+
     fn route(
         &self,
         from: NodeId,
@@ -293,6 +362,32 @@ impl Network {
         drop(senders);
         self.counters.record(from, to, session, n);
         Ok(())
+    }
+}
+
+/// A send-only network attachment (see [`Network::injector`]).
+/// `Send + Sync`: it carries no mailbox, so client layers can share it
+/// behind an `Arc`/`&self` without serializing on a lock.
+pub struct Injector {
+    from: NodeId,
+    net: Arc<Network>,
+}
+
+impl Injector {
+    /// Serialize and inject a session-tagged frame into `to`'s mailbox.
+    pub fn send_session(
+        &self,
+        to: NodeId,
+        session: SessionId,
+        msg: &Message,
+    ) -> Result<(), TransportError> {
+        self.net
+            .route(self.from, to, session, encode_frame(session, msg))
+    }
+
+    /// Inject a control frame (tagged [`CONTROL_SESSION`]).
+    pub fn send(&self, to: NodeId, msg: &Message) -> Result<(), TransportError> {
+        self.send_session(to, CONTROL_SESSION, msg)
     }
 }
 
@@ -547,6 +642,91 @@ mod tests {
             diff.per_session.iter().map(|&(_, b)| b).sum::<u64>(),
             diff.total_bytes
         );
+    }
+
+    #[test]
+    fn retire_session_folds_into_running_aggregate() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let _inst = net.register(NodeId::Institution(0));
+        let _center = net.register(NodeId::Center(0));
+        for session in [1u32, 2, 3] {
+            coord
+                .send_session(
+                    NodeId::Institution(0),
+                    session,
+                    &Message::BetaBroadcast { iter: 0, beta: vec![0.0; session as usize] },
+                )
+                .unwrap();
+            coord
+                .send_session(
+                    NodeId::Center(0),
+                    session,
+                    &Message::AggregateRequest { iter: 0, expected: 1 },
+                )
+                .unwrap();
+        }
+        let before = net.counters.snapshot();
+        assert_eq!(before.retired_sessions, 0);
+        assert_eq!(before.retired_bytes, 0);
+        let s2 = before.session_bytes(2);
+        assert!(s2 > 0);
+
+        // Retire session 2: its entry leaves the map, the aggregate
+        // absorbs it (class-resolved), globals never move.
+        let folded = net.counters.retire_session(2).unwrap();
+        assert_eq!(folded.total_bytes, s2);
+        assert!(folded.broadcast_bytes > 0 && folded.central_bytes > 0);
+        let after = net.counters.snapshot();
+        assert_eq!(after.total_bytes, before.total_bytes);
+        assert_eq!(after.retired_sessions, 1);
+        assert_eq!(after.retired_bytes, s2);
+        assert_eq!(after.per_session.len(), 2);
+        assert_eq!(after.session_bytes(2), 0);
+        // the per-session-sums-plus-retired-equals-global invariant
+        let live: u64 = after.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(live + after.retired_bytes, after.total_bytes);
+
+        // Idempotence: an unknown or already-retired session is a no-op.
+        assert!(net.counters.retire_session(2).is_none());
+        assert!(net.counters.retire_session(99).is_none());
+        let again = net.counters.snapshot();
+        assert_eq!(again.retired_sessions, 1);
+        assert_eq!(again.retired_bytes, s2);
+
+        // Retiring the rest drains the map completely.
+        net.counters.retire_session(1).unwrap();
+        net.counters.retire_session(3).unwrap();
+        let empty = net.counters.snapshot();
+        assert!(empty.per_session.is_empty());
+        assert_eq!(empty.retired_bytes, empty.total_bytes);
+        assert_eq!(empty.retired_sessions, 3);
+    }
+
+    #[test]
+    fn injector_reaches_mailboxes_and_counts() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inj = net.injector(NodeId::Client);
+        inj.send(NodeId::Coordinator, &Message::StudySubmitted).unwrap();
+        inj.send_session(NodeId::Coordinator, 9, &Message::Shutdown).unwrap();
+        let (from, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(from, NodeId::Client);
+        assert_eq!(session, CONTROL_SESSION);
+        assert_eq!(msg, Message::StudySubmitted);
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 9);
+        assert_eq!(msg, Message::Shutdown);
+        // injected frames are counted like any other traffic
+        let snap = coord.counters();
+        assert_eq!(snap.total_messages, 2);
+        let sum: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(sum, snap.total_bytes);
+        // an injector is not a destination
+        assert!(matches!(
+            coord.send(NodeId::Client, &Message::Shutdown),
+            Err(TransportError::UnknownDestination(_))
+        ));
     }
 
     #[test]

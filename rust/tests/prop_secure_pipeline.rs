@@ -1,0 +1,317 @@
+//! Acceptance gates for the zero-allocation threaded secure-sharing
+//! pipeline (encode → share → fold → reconstruct):
+//!
+//! * the fused threaded `secure::encode_share_into` sweep is **bitwise
+//!   identical across `kernel_threads ∈ {1, 2, 4}`** — including batch
+//!   lengths that straddle `shamir::SHARE_CHUNK` boundaries — because
+//!   every chunk draws its coefficients from an independent stream
+//!   keyed by the chunk index, never by the thread layout;
+//! * any t-quorum of the fused sweep's shares reconstructs to exactly
+//!   the same field values as the retained `share_batch_with`
+//!   reference path over `FixedCodec::encode_slice`;
+//! * the lazy-reduction kernels agree with the eager formulas at the
+//!   field boundary (values near P) and at max-headroom encodings;
+//! * after warm-up, one full single-threaded pipeline iteration
+//!   (encode+share, per-center fold, cached-λ reconstruction, decode)
+//!   performs **zero heap allocations** — verified with a counting
+//!   global allocator, not by inspection.
+
+use privlr::field::{add_assign_slice, Fp, P};
+use privlr::fixed::FixedCodec;
+use privlr::secure::{encode_share_into, ShareContext, SharePool};
+use privlr::shamir::{
+    lagrange_at_zero, reconstruct_batch, reconstruct_batch_with, reconstruct_scalar_with,
+    LagrangeCache, ShamirParams, SHARE_CHUNK,
+};
+use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---- thread-local allocation counter ------------------------------------
+//
+// Counts allocations made by THIS thread only, so the gate is immune to
+// the test harness's other worker threads. `Cell<u64>` has no
+// destructor, so the TLS access can never recurse into the allocator.
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---- helpers ------------------------------------------------------------
+
+fn scheme(t: usize, w: usize) -> ShamirParams {
+    ShamirParams::new(t, w).unwrap()
+}
+
+/// Gate 1: thread-count invariance of the fused sweep, across lengths
+/// that straddle the chunk boundary and schemes including t=1 and t=w.
+#[test]
+fn fused_sweep_bit_identical_across_thread_counts() {
+    for (t, w) in [(1usize, 3usize), (2, 3), (3, 5), (5, 5)] {
+        let params = scheme(t, w);
+        let ctx = ShareContext::new(params);
+        let codec = FixedCodec::default();
+        for k in [
+            0usize,
+            1,
+            SHARE_CHUNK - 1,
+            SHARE_CHUNK,
+            SHARE_CHUNK + 1,
+            3 * SHARE_CHUNK + 7,
+        ] {
+            let mut rng = SplitMix64::new((t * 100 + w * 10) as u64 + k as u64);
+            let values: Vec<f64> = (0..k).map(|_| rng.next_range_f64(-1e5, 1e5)).collect();
+            let mut reference_pool = SharePool::new();
+            encode_share_into(&ctx, &codec, &values, 0xABCD, 1, &mut reference_pool).unwrap();
+            for threads in [2usize, 4] {
+                let mut pool = SharePool::new();
+                encode_share_into(&ctx, &codec, &values, 0xABCD, threads, &mut pool).unwrap();
+                for j in 0..w {
+                    assert_eq!(
+                        reference_pool.holder(j),
+                        pool.holder(j),
+                        "t={t} w={w} k={k} threads={threads} holder={j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Gate 2: the fused pipeline reconstructs to EXACTLY the field values
+/// the retained `share_batch_with` reference path reconstructs to —
+/// for every t-quorum, with chunk-straddling batch lengths.
+#[test]
+fn fused_sweep_reconstruction_equals_reference_path() {
+    let params = scheme(3, 5);
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    for k in [1usize, SHARE_CHUNK, SHARE_CHUNK + 1, 2 * SHARE_CHUNK + 13] {
+        let mut rng = SplitMix64::new(k as u64);
+        let values: Vec<f64> = (0..k).map(|_| rng.next_range_f64(-1e4, 1e4)).collect();
+        let enc = codec.encode_slice(&values).unwrap();
+        // reference: eager Vandermonde over a session ChaCha stream
+        let mut ref_rng = ChaCha20Rng::seed_from_u64(500 + k as u64);
+        let reference = ctx.share(&enc, &mut ref_rng);
+        // fused threaded sweep
+        let mut pool = SharePool::new();
+        encode_share_into(&ctx, &codec, &values, 900 + k as u64, 4, &mut pool).unwrap();
+        for quorum_idx in [[0usize, 1, 2], [2, 3, 4], [0, 2, 4], [4, 1, 0]] {
+            let fused_q: Vec<(usize, &[Fp])> =
+                quorum_idx.iter().map(|&j| (j, pool.holder(j))).collect();
+            let ref_q: Vec<(usize, &[Fp])> = quorum_idx
+                .iter()
+                .map(|&j| (j, reference.per_holder[j].as_slice()))
+                .collect();
+            let from_fused = reconstruct_batch(params, &fused_q).unwrap();
+            let from_ref = reconstruct_batch(params, &ref_q).unwrap();
+            assert_eq!(from_fused, enc, "k={k} quorum {quorum_idx:?}");
+            assert_eq!(from_fused, from_ref, "k={k} quorum {quorum_idx:?}");
+        }
+    }
+}
+
+/// Gate 3a: lazy-reduction reconstruction at the field boundary. Share
+/// vectors stuffed with values near P must reconstruct identically to
+/// the eager per-term formula.
+#[test]
+fn lazy_reconstruction_boundary_values_near_p() {
+    let params = scheme(4, 9);
+    let idx = [0usize, 3, 5, 8];
+    let lambdas = lagrange_at_zero(params, &idx).unwrap();
+    let boundary = [P - 1, P - 2, 1, 0, P / 2, P / 2 + 1];
+    let shares: Vec<Vec<Fp>> = (0..4u64)
+        .map(|j| boundary.iter().map(|&v| Fp::new(v.wrapping_add(j))).collect())
+        .collect();
+    let quorum: Vec<(usize, &[Fp])> = idx
+        .iter()
+        .zip(&shares)
+        .map(|(&j, s)| (j, s.as_slice()))
+        .collect();
+    let mut lazy = vec![Fp::ZERO; boundary.len()];
+    reconstruct_batch_with(&lambdas, &quorum, &mut lazy).unwrap();
+    for k in 0..boundary.len() {
+        let eager = quorum
+            .iter()
+            .zip(&lambdas)
+            .fold(Fp::ZERO, |acc, ((_, s), &l)| acc + l * s[k]);
+        assert_eq!(lazy[k], eager, "element {k}");
+    }
+    let scalars: Vec<Fp> = shares.iter().map(|s| s[0]).collect();
+    assert_eq!(reconstruct_scalar_with(&lambdas, &scalars), lazy[0]);
+}
+
+/// Gate 3b: max-headroom encodings survive the whole pipeline. Every
+/// value at ±`FixedCodec::max_abs` — the largest magnitude the codec
+/// admits — must share, fold across a full 256-way aggregation budget
+/// worth of institutions, and decode back exactly.
+#[test]
+fn max_headroom_encodings_roundtrip_through_pipeline() {
+    let params = scheme(3, 5);
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    let k = SHARE_CHUNK + 3;
+    let values: Vec<f64> = (0..k)
+        .map(|i| if i % 2 == 0 { codec.max_abs() } else { -codec.max_abs() })
+        .collect();
+    // Two institutions' worth of shares folded per center (secure add).
+    let mut pool_a = SharePool::new();
+    let mut pool_b = SharePool::new();
+    encode_share_into(&ctx, &codec, &values, 1, 2, &mut pool_a).unwrap();
+    encode_share_into(&ctx, &codec, &values, 2, 2, &mut pool_b).unwrap();
+    let folded: Vec<Vec<Fp>> = (0..5)
+        .map(|c| {
+            let mut acc = pool_a.holder(c).to_vec();
+            add_assign_slice(&mut acc, pool_b.holder(c));
+            acc
+        })
+        .collect();
+    let quorum: Vec<(usize, &[Fp])> = [1usize, 2, 4]
+        .iter()
+        .map(|&c| (c, folded[c].as_slice()))
+        .collect();
+    let rec = reconstruct_batch(params, &quorum).unwrap();
+    let decoded = FixedCodec::default().decode_slice(&rec);
+    for (i, v) in decoded.iter().enumerate() {
+        let expect = 2.0 * values[i];
+        assert!(
+            (v - expect).abs() <= 2.0 * codec.epsilon(),
+            "element {i}: {v} vs {expect}"
+        );
+    }
+}
+
+/// Gate 4: after warm-up, one single-threaded pipeline iteration —
+/// fused encode+share of a d=85 full-mode summary, per-center folds,
+/// cached-λ reconstruction of g/dev/H, decode — allocates NOTHING.
+/// Measured with the counting allocator, on this thread.
+#[test]
+fn warm_pipeline_iteration_is_allocation_free() {
+    let d = 85usize;
+    let packed = d * (d + 1) / 2;
+    let k = d + 1 + packed; // [g | dev | H] summary layout
+    let params = scheme(3, 5);
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    let mut rng = SplitMix64::new(7);
+    let values: Vec<f64> = (0..k).map(|_| rng.next_range_f64(-100.0, 100.0)).collect();
+    let mut pool = SharePool::new();
+    let mut accs: Vec<Vec<Fp>> = (0..5).map(|_| vec![Fp::ZERO; k]).collect();
+    let mut lagrange = LagrangeCache::new();
+    let mut fp_out = vec![Fp::ZERO; k];
+    let mut f64_out = vec![0.0; k];
+
+    let mut iteration = |seed: u64,
+                         pool: &mut SharePool,
+                         accs: &mut Vec<Vec<Fp>>,
+                         lagrange: &mut LagrangeCache,
+                         fp_out: &mut [Fp],
+                         f64_out: &mut [f64]| {
+        // encode + share (threads=1: the strictly allocation-free path)
+        encode_share_into(&ctx, &codec, &values, seed, 1, pool).unwrap();
+        // center-side fold: two "institutions" (the same sweep twice)
+        for (c, acc) in accs.iter_mut().enumerate() {
+            acc.fill(Fp::ZERO);
+            add_assign_slice(acc, pool.holder(c));
+            add_assign_slice(acc, pool.holder(c));
+        }
+        // coordinator-side cached-λ reconstruction + decode
+        let lambdas = lagrange.zero_weights(params, &[0, 2, 4]).unwrap();
+        let quorum: [(usize, &[Fp]); 3] = [
+            (0, accs[0].as_slice()),
+            (2, accs[2].as_slice()),
+            (4, accs[4].as_slice()),
+        ];
+        reconstruct_batch_with(lambdas, &quorum, fp_out).unwrap();
+        codec.decode_slice_into(fp_out, f64_out);
+        f64_out[0]
+    };
+
+    // Warm-up: grows every pooled buffer and fills the λ cache.
+    for warm in 0..3u64 {
+        iteration(warm, &mut pool, &mut accs, &mut lagrange, &mut fp_out, &mut f64_out);
+    }
+    // Measured iterations: zero allocations on this thread.
+    let before = allocs_here();
+    for seed in 100..104u64 {
+        iteration(seed, &mut pool, &mut accs, &mut lagrange, &mut fp_out, &mut f64_out);
+    }
+    let allocated = allocs_here() - before;
+    assert_eq!(
+        allocated, 0,
+        "warm single-threaded pipeline iterations must not allocate"
+    );
+
+    // Sanity: the measured iterations actually computed the aggregate.
+    for (i, v) in f64_out.iter().enumerate() {
+        let expect = 2.0 * values[i];
+        assert!((v - expect).abs() <= 2.0 * codec.epsilon(), "element {i}");
+    }
+}
+
+/// End-to-end property: the fused pipeline's decoded aggregates equal
+/// the plaintext sums for a multi-institution fold, independently of
+/// the thread count used by each institution.
+#[test]
+fn pipeline_aggregate_equals_plaintext_sums() {
+    let params = scheme(2, 4);
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    let k = 2 * SHARE_CHUNK + 31;
+    let mut rng = SplitMix64::new(17);
+    let per_inst: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..k).map(|_| rng.next_range_f64(-50.0, 50.0)).collect())
+        .collect();
+    for threads in [1usize, 2, 4] {
+        let mut accs: Vec<Vec<Fp>> = (0..4).map(|_| vec![Fp::ZERO; k]).collect();
+        let mut pool = SharePool::new();
+        for (j, vals) in per_inst.iter().enumerate() {
+            encode_share_into(&ctx, &codec, vals, j as u64, threads, &mut pool).unwrap();
+            for (c, acc) in accs.iter_mut().enumerate() {
+                add_assign_slice(acc, pool.holder(c));
+            }
+        }
+        let quorum: Vec<(usize, &[Fp])> =
+            [0usize, 3].iter().map(|&c| (c, accs[c].as_slice())).collect();
+        let rec = reconstruct_batch(params, &quorum).unwrap();
+        let decoded = codec.decode_slice(&rec);
+        for i in 0..k {
+            let expect: f64 = per_inst.iter().map(|v| v[i]).sum();
+            assert!(
+                (decoded[i] - expect).abs() <= 3.0 * codec.epsilon(),
+                "threads={threads} element {i}: {} vs {expect}",
+                decoded[i]
+            );
+        }
+    }
+}

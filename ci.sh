@@ -26,9 +26,12 @@ cargo test -q
 echo "== kernel equivalence gate (blocked SYRK / Vandermonde sharing) =="
 cargo test -q --test prop_kernels
 
-echo "== session engine gate (concurrent == sequential, bitwise) =="
+echo "== session engine gate (concurrent == sequential, bitwise; capped + prioritized) =="
 cargo test -q --test integration_sessions
 cargo test -q --test prop_session_codec
+
+echo "== control plane gate (lifecycle machine, CloseAck leak detection, auto-retire invariant) =="
+cargo test -q --test integration_lifecycle
 
 echo "== secure pipeline gate (fused share thread-invariance + zero-alloc) =="
 cargo test -q --test prop_secure_pipeline

@@ -19,7 +19,7 @@ use privlr::attack::{center_view_gradient_error, response_recovery_accuracy};
 use privlr::baseline::datashield_fit;
 use privlr::config::ExperimentConfig;
 use privlr::data::synthetic;
-use privlr::engine::StudyEngine;
+use privlr::engine::{StudyEngine, SubmitOptions};
 use privlr::fixed::FixedCodec;
 use privlr::shamir::ShamirParams;
 use privlr::util::rng::ChaCha20Rng;
@@ -52,10 +52,17 @@ fn main() -> anyhow::Result<()> {
     // Arc'd shards (zero copies per additional study).
     let shards = privlr::session::ShardData::split(&ds);
     let lambdas = [10.0, 3.0, 1.0, 0.3, 0.1];
+    // A λ sweep is classic bulk work: it rides the bulk lane so an
+    // interactive study submitted to the same engine would be admitted
+    // and scheduled ahead of it.
     let handles: Vec<_> = lambdas
         .iter()
         .map(|&lambda| {
-            engine.submit_shared(&ExperimentConfig { lambda, ..base_cfg.clone() }, shards.clone())
+            engine.submit_shared(
+                &ExperimentConfig { lambda, ..base_cfg.clone() },
+                shards.clone(),
+                SubmitOptions::bulk(),
+            )
         })
         .collect::<anyhow::Result<_>>()?;
     let mut last_beta = Vec::new();

@@ -17,7 +17,7 @@ use privlr::bench::{
 };
 use privlr::config::ExperimentConfig;
 use privlr::data::synthetic;
-use privlr::engine::StudyEngine;
+use privlr::engine::{StudyEngine, SubmitOptions};
 use privlr::util::json::{self, Json};
 
 fn main() {
@@ -44,7 +44,11 @@ fn main() {
             let name = format!("multifit n={n} d={d} S={s} K={k}");
             let summary: Summary = run_bench(&name, bcfg, || {
                 let handles: Vec<_> = (0..k)
-                    .map(|_| engine.submit_shared(&cfg, shards.clone()).expect("submit"))
+                    .map(|_| {
+                        engine
+                            .submit_shared(&cfg, shards.clone(), SubmitOptions::default())
+                            .expect("submit")
+                    })
                     .collect();
                 handles
                     .into_iter()

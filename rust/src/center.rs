@@ -26,7 +26,7 @@ use crate::secure::SecureAccumulator;
 use crate::session::SessionRegistry;
 use crate::transport::Endpoint;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Everything a persistent center worker needs.
@@ -34,6 +34,10 @@ pub struct CenterWorkerConfig {
     pub center_id: u16,
     /// Session lookup: dimension, mode, busy-telemetry cells.
     pub registry: Arc<SessionRegistry>,
+    /// Gauge of live per-session states on this worker, maintained on
+    /// every open/close — the engine's leak gate reads it to PROVE that
+    /// acknowledged teardown freed everything.
+    pub live_sessions: Arc<AtomicUsize>,
 }
 
 /// Per-iteration aggregation state within one session.
@@ -94,19 +98,38 @@ impl CenterSession {
 ///
 /// Owns its endpoint; spawn on a dedicated thread. Per-session errors
 /// are reported to the coordinator as session-tagged `NodeError`s and
-/// tear down only that session's state.
+/// tear down only that session's state. `SessionClose`/`Abort` frames
+/// free the session's state and are ALWAYS acknowledged with a
+/// `CloseAck` — even for sessions this center never opened (or already
+/// dropped after an error), so the driver's drain can never hang on an
+/// already-clean worker.
 pub fn run_center_worker(cfg: CenterWorkerConfig, ep: Endpoint) -> anyhow::Result<()> {
     let mut sessions: HashMap<SessionId, CenterSession> = HashMap::new();
+    let drop_session = |sessions: &mut HashMap<SessionId, CenterSession>, session| {
+        if sessions.remove(&session).is_some() {
+            cfg.live_sessions.fetch_sub(1, Ordering::Relaxed);
+        }
+    };
     loop {
         let (from, session, msg) = ep.recv_session()?;
         match msg {
             Message::Shutdown => return Ok(()),
-            Message::Finished { .. } => {
-                sessions.remove(&session);
+            Message::SessionClose { .. } | Message::Abort { .. } => {
+                // State is freed BEFORE the ack goes out: once the
+                // driver has every ack, zero-leak is a fact, not a race.
+                drop_session(&mut sessions, session);
+                let _ = ep.send_session(
+                    NodeId::Coordinator,
+                    session,
+                    &Message::CloseAck {
+                        node: cfg.center_id,
+                        is_center: true,
+                    },
+                );
             }
             other => {
                 if let Err(e) = handle_message(&cfg, &ep, &mut sessions, session, from, other) {
-                    sessions.remove(&session);
+                    drop_session(&mut sessions, session);
                     let _ = ep.send_session(
                         NodeId::Coordinator,
                         session,
@@ -153,6 +176,7 @@ fn handle_message(
                 free: Vec::new(),
             },
         );
+        cfg.live_sessions.fetch_add(1, Ordering::Relaxed);
     }
     let cs = sessions.get_mut(&session).unwrap();
 
@@ -330,7 +354,7 @@ mod tests {
         let inst1 = net.register(NodeId::Institution(1));
         let cep = net.register(NodeId::Center(0));
         let registry = registry_with(vec![make_spec(1, 2, 2, 1, 1, false)]);
-        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
         let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
 
         let params = ShamirParams::new(1, 1).unwrap(); // single-holder degenerate scheme
@@ -401,7 +425,7 @@ mod tests {
         let inst = net.register(NodeId::Institution(0));
         let cep = net.register(NodeId::Center(1));
         let registry = registry_with(vec![make_spec(3, 1, 1, 1, 2, false)]);
-        let cfg = CenterWorkerConfig { center_id: 1, registry };
+        let cfg = CenterWorkerConfig { center_id: 1, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
         let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         coord
             .send_session(NodeId::Center(1), 3, &Message::AggregateRequest { iter: 0, expected: 1 })
@@ -437,7 +461,7 @@ mod tests {
         let inst = net.register(NodeId::Institution(0));
         let cep = net.register(NodeId::Center(0));
         let registry = registry_with(vec![make_spec(2, 1, 1, 1, 1, false)]);
-        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
         let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         for (iter, v) in [(0u32, 10.0f64), (1, 20.0)] {
             inst.send_session(
@@ -478,7 +502,7 @@ mod tests {
         let inst = net.register(NodeId::Institution(0));
         let cep = net.register(NodeId::Center(0));
         let registry = registry_with(vec![make_spec(6, 1, 2, 1, 1, false)]);
-        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
         let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         for (iter, (gv, h)) in [(10.0f64, 100.0f64), (20.0, 200.0), (30.0, 300.0)]
             .into_iter()
@@ -532,7 +556,7 @@ mod tests {
             make_spec(10, 3, 1, 1, 1, false),
             make_spec(11, 3, 1, 1, 1, false),
         ]);
-        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
         let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         // Values where summation ORDER moves the f64 result: with three
         // addends, (1 + 1) + 1e16 = 1e16 + 2, but the institution-id
@@ -602,7 +626,7 @@ mod tests {
         let inst = net.register(NodeId::Institution(0));
         let cep = net.register(NodeId::Center(0));
         let registry = registry_with(vec![make_spec(5, 1, 4, 1, 1, false)]);
-        let cfg = CenterWorkerConfig { center_id: 0, registry };
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
         let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
         // gradient share has d=2, session expects d=4
         inst.send_session(
@@ -637,6 +661,71 @@ mod tests {
         assert_eq!(session, 99);
         assert!(matches!(msg, Message::NodeError { .. }));
         // Worker still alive.
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// `SessionClose`/`Abort` free per-session state (gauge-visible)
+    /// and are acked even for sessions the center never opened.
+    #[test]
+    fn close_and_abort_free_state_and_always_ack() {
+        use std::sync::atomic::AtomicUsize;
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![
+            make_spec(1, 1, 2, 1, 1, false),
+            make_spec(2, 1, 2, 1, 1, false),
+        ]);
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let cfg = CenterWorkerConfig {
+            center_id: 0,
+            registry,
+            live_sessions: gauge.clone(),
+        };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        // Open both sessions with one submission each.
+        for session in [1u32, 2] {
+            inst.send_session(
+                NodeId::Center(0),
+                session,
+                &Message::ShareSubmission {
+                    iter: 0,
+                    institution: 0,
+                    hessian: HessianPayload::Plain(vec![0.0; 3]),
+                    g_share: vec![Fp::new(1), Fp::new(2)],
+                    dev_share: Fp::new(3),
+                },
+            )
+            .unwrap();
+        }
+        // Close session 1, abort session 2: state drops before each ack.
+        coord
+            .send_session(NodeId::Center(0), 1, &Message::SessionClose { iter: 0, beta: vec![] })
+            .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 1);
+        assert_eq!(msg, Message::CloseAck { node: 0, is_center: true });
+        assert_eq!(gauge.load(Ordering::Relaxed), 1);
+        coord
+            .send_session(
+                NodeId::Center(0),
+                2,
+                &Message::Abort { reason: "test abort".to_string() },
+            )
+            .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 2);
+        assert_eq!(msg, Message::CloseAck { node: 0, is_center: true });
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "all state freed");
+        // A close for a session this center never opened still acks.
+        coord
+            .send_session(NodeId::Center(0), 77, &Message::SessionClose { iter: 0, beta: vec![] })
+            .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 77);
+        assert!(matches!(msg, Message::CloseAck { .. }));
         coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }

@@ -107,6 +107,15 @@ pub struct ExperimentConfig {
     pub pjrt_workers: usize,
     /// Directory with AOT artifacts + manifest.json.
     pub artifacts_dir: String,
+    /// Study-engine admission cap: sessions in flight at once
+    /// (0 = unbounded). Queued studies wait in their priority lane;
+    /// bounding this bounds worker memory on shared consortium
+    /// deployments. See `engine::EngineOptions`.
+    pub max_in_flight: usize,
+    /// Study-engine auto-retire policy: keep the most recent N
+    /// completed sessions' traffic attribution live and fold older
+    /// ones into the retired aggregate (0 = manual retirement only).
+    pub auto_retire: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -130,6 +139,8 @@ impl Default for ExperimentConfig {
             kernel_threads: 1,
             pjrt_workers: 0,
             artifacts_dir: "artifacts".to_string(),
+            max_in_flight: 0,
+            auto_retire: 0,
         }
     }
 }
@@ -173,6 +184,8 @@ impl ExperimentConfig {
             ("kernel_threads", json::num(self.kernel_threads as f64)),
             ("pjrt_workers", json::num(self.pjrt_workers as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
+            ("max_in_flight", json::num(self.max_in_flight as f64)),
+            ("auto_retire", json::num(self.auto_retire as f64)),
         ])
     }
 
@@ -241,6 +254,12 @@ impl ExperimentConfig {
         if let Some(s) = v.get("artifacts_dir").as_str() {
             cfg.artifacts_dir = s.to_string();
         }
+        if let Some(m) = v.get("max_in_flight").as_usize() {
+            cfg.max_in_flight = m;
+        }
+        if let Some(a) = v.get("auto_retire").as_usize() {
+            cfg.auto_retire = a;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -289,6 +308,22 @@ mod tests {
         assert_eq!(back.dataset, cfg.dataset);
         assert_eq!(back.parallel_local, cfg.parallel_local);
         assert_eq!(back.kernel_threads, cfg.kernel_threads);
+    }
+
+    #[test]
+    fn control_plane_knobs_roundtrip_and_default() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.max_in_flight, 0, "unbounded admission by default");
+        assert_eq!(cfg.auto_retire, 0, "manual retirement by default");
+        cfg.max_in_flight = 8;
+        cfg.auto_retire = 64;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.max_in_flight, 8);
+        assert_eq!(back.auto_retire, 64);
+        let v = Json::parse(r#"{"max_in_flight": 3, "auto_retire": 10}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.max_in_flight, 3);
+        assert_eq!(cfg.auto_retire, 10);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
-use crate::engine::StudyEngine;
+use crate::engine::{StudyEngine, SubmitOptions};
 use crate::transport::TrafficSnapshot;
 use std::time::Instant;
 
@@ -76,7 +76,10 @@ pub fn secure_fit(ds: &Dataset, cfg: &ExperimentConfig) -> anyhow::Result<Secure
     // shift vs the pre-refactor timer).
     let engine = StudyEngine::for_experiment(ds, cfg)?;
     let t_total = Instant::now();
-    let result = engine.submit(cfg, ds).and_then(|h| h.join());
+    // A single fit on a throwaway engine is by definition interactive.
+    let result = engine
+        .submit(cfg, ds, SubmitOptions::interactive())
+        .and_then(|h| h.join());
     // Tear the network down before reporting, so the traffic snapshot
     // covers the complete protocol run (teardown frames included, as
     // the pre-session-engine accounting did).

@@ -35,7 +35,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::data::{Dataset, Shard};
-use crate::engine::StudyEngine;
+use crate::engine::{StudyEngine, SubmitOptions};
 use crate::linalg::Matrix;
 use crate::model::{local_stats, log_sigmoid};
 use crate::util::rng::{derive_seed, Rng, SplitMix64};
@@ -174,10 +174,13 @@ pub fn secure_cross_validate(
             lambda,
             ..base_cfg.clone()
         };
-        // k folds as k concurrent sessions over the shared network.
+        // k folds as k concurrent sessions over the shared network —
+        // bulk-lane traffic, so a sweep never crowds out interactive
+        // studies sharing the engine (and any configured admission cap
+        // queues the folds instead of oversubscribing the workers).
         let mut handles = Vec::with_capacity(k);
         for (f, shards) in fold_shards.iter().enumerate() {
-            handles.push((f, engine.submit_shared(&cfg, shards.clone())?));
+            handles.push((f, engine.submit_shared(&cfg, shards.clone(), SubmitOptions::bulk())?));
         }
         for (f, handle) in handles {
             let fit = handle.join()?;
@@ -193,12 +196,14 @@ pub fn secure_cross_validate(
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap();
-    // Final fit on all data at the winning λ, on the same network.
+    // Final fit on all data at the winning λ, on the same network; the
+    // researcher is waiting on this one, so it rides the interactive
+    // lane.
     let cfg = ExperimentConfig {
         lambda: lambdas[best],
         ..base_cfg.clone()
     };
-    let fit = engine.submit(&cfg, ds)?.join()?;
+    let fit = engine.submit(&cfg, ds, SubmitOptions::interactive())?.join()?;
     engine.shutdown()?;
     Ok(CvResult {
         lambdas: lambdas.to_vec(),
@@ -348,6 +353,22 @@ mod tests {
             cv.cv_deviance
         );
         assert!(cv.best_lambda() > 1e-6);
+    }
+
+    #[test]
+    fn cv_under_admission_cap_is_bit_identical_to_uncapped() {
+        // The fold sessions ride the bulk lane; capping in-flight
+        // sessions to 1 serializes them completely — and must change
+        // NOTHING numerically (same session ids, same share streams).
+        let ds = synthetic("t", 240, 3, 3, 0.0, 1.0, 13);
+        let lambdas = [0.1, 1.0];
+        let cfg = base_cfg();
+        let free = secure_cross_validate(&ds, &cfg, &lambdas, 3).unwrap();
+        let capped_cfg = ExperimentConfig { max_in_flight: 1, ..cfg };
+        let capped = secure_cross_validate(&ds, &capped_cfg, &lambdas, 3).unwrap();
+        assert_eq!(free.best, capped.best);
+        assert_eq!(free.cv_deviance, capped.cv_deviance, "bitwise CV deviances");
+        assert_eq!(free.beta, capped.beta, "bitwise final β");
     }
 
     #[test]

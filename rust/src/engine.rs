@@ -1,25 +1,58 @@
 //! The session-multiplexed study engine: one persistent network
-//! serving many concurrent regularized-LR fits.
+//! serving many concurrent regularized-LR fits behind an
+//! admission-controlled, priority-scheduled control plane.
 //!
 //! The paper's deployment story is a standing research consortium —
 //! the same institutions and computation centers serve many studies
 //! (GWAS phenotypes, epi cohorts, CV folds). [`StudyEngine`] builds
 //! that topology ONCE: every institution and center runs as a
 //! persistent worker thread, and a coordinator *driver* thread
-//! interleaves K in-flight Newton fits, each owned by a
+//! interleaves the in-flight Newton fits, each owned by a
 //! [`SessionState`](crate::session::SessionState) machine keyed by the
 //! frame's session id. Studies are submitted with
-//! [`StudyEngine::submit`] and joined through the returned
-//! [`StudyHandle`].
+//! [`StudyEngine::submit`] (carrying [`SubmitOptions`]: a priority
+//! lane and an optional admission deadline) and joined through the
+//! returned [`StudyHandle`].
+//!
+//! Every session walks an explicit lifecycle state machine:
+//!
+//! ```text
+//! Queued ──admit──▶ Admitted ──first response──▶ Running
+//!   │                                               │
+//!   │ deadline expired                    Done / fatal error
+//!   ▼                                               ▼
+//! Aborted ◀──all CloseAcks (abort)── Draining ──all CloseAcks──▶ Closed
+//! ```
+//!
+//! * **Queued** — accepted by [`StudyEngine::submit`], parked in one of
+//!   three priority lanes (`Interactive`/`Batch`/`Bulk`) until the
+//!   admission controller has a free slot ([`EngineOptions::max_in_flight`]).
+//! * **Admitted** — the driver opened the session on the wire (first
+//!   β broadcast sent); **Running** from the first center response on.
+//!   Ready next rounds of admitted sessions are dispatched in
+//!   weighted-fair priority order (4:2:1), so a backlog of bulk rounds
+//!   cannot monopolize the fabric ahead of interactive studies.
+//! * **Draining** — teardown in progress: `SessionClose` (success) or
+//!   `Abort` (failure/rejection) frames are out and the driver counts
+//!   `CloseAck`s. Only when EVERY worker has acknowledged that its
+//!   per-session state is freed does the session reach its terminal
+//!   state and its result reach the handle — leaks are therefore
+//!   provable, not hoped-for (`tests/integration_lifecycle.rs`).
+//! * **Closed / Aborted** — terminal; the auto-retire policy
+//!   ([`EngineOptions::auto_retire`]) folds sessions that finished N
+//!   completions ago into the network's retired-traffic aggregate so
+//!   unattended deployments never grow per-session bookkeeping.
 //!
 //! Determinism: results of concurrent fits are **bit-identical** to
-//! the same fits run sequentially. Share-domain aggregation is exact
-//! field arithmetic (order-free); the only order-sensitive f64 fold —
-//! the pragmatic-mode plaintext Hessian — is buffered and summed in
+//! the same fits run sequentially, under ANY priority assignment and
+//! admission cap — scheduling moves wall-clock interleaving, never
+//! per-session numerics. Share-domain aggregation is exact field
+//! arithmetic (order-free); the only order-sensitive f64 fold — the
+//! pragmatic-mode plaintext Hessian — is buffered and summed in
 //! institution-id order at the centers; and all per-session randomness
 //! derives from `(master seed, session id)` splitmix forks, never from
 //! shared mutable state. The integration suite asserts the guarantee
-//! end to end.
+//! end to end, capped and uncapped.
 
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::coordinator::{RunMetrics, SecureFitResult};
@@ -33,18 +66,219 @@ use crate::session::{
 use crate::shamir::ShamirParams;
 use crate::transport::{Endpoint, Injector, Network, TrafficSnapshot};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-/// A submitted-but-not-yet-started study, queued to the driver.
+/// Scheduling class of one study session. Lanes are served
+/// weighted-fair (4:2:1) for round dispatch and strict-priority for
+/// admission; within a lane, admission is FIFO. (Deliberately no
+/// `Ord`: declaration order would rank `Interactive` as the minimum,
+/// the opposite of its scheduling weight — compare via
+/// [`Priority::weight`] instead.)
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// A researcher is waiting at a prompt: favored 4:2 over `Batch`.
+    Interactive,
+    /// The default for programmatic studies.
+    #[default]
+    Batch,
+    /// Sweeps and backfills that should never crowd out the other two.
+    Bulk,
+}
+
+impl Priority {
+    /// All lanes in dispatch order (highest priority first).
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::Bulk];
+
+    /// Round-dispatch credits per weighted-fair cycle.
+    pub fn weight(self) -> usize {
+        match self {
+            Priority::Interactive => 4,
+            Priority::Batch => 2,
+            Priority::Bulk => 1,
+        }
+    }
+
+    fn lane(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Bulk => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "bulk" => Ok(Priority::Bulk),
+            other => anyhow::bail!("unknown priority '{other}' (interactive|batch|bulk)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Bulk => "bulk",
+        }
+    }
+}
+
+/// Per-study submission options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Scheduling lane; defaults to [`Priority::Batch`].
+    pub priority: Priority,
+    /// Admission deadline measured from submission: a study still
+    /// queued when the controller next considers it past this bound is
+    /// rejected (`Aborted`, handle receives an error) instead of
+    /// occupying the lane forever. `None` = wait indefinitely.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn with_priority(priority: Priority) -> SubmitOptions {
+        SubmitOptions {
+            priority,
+            deadline: None,
+        }
+    }
+
+    pub fn interactive() -> SubmitOptions {
+        SubmitOptions::with_priority(Priority::Interactive)
+    }
+
+    pub fn batch() -> SubmitOptions {
+        SubmitOptions::with_priority(Priority::Batch)
+    }
+
+    pub fn bulk() -> SubmitOptions {
+        SubmitOptions::with_priority(Priority::Bulk)
+    }
+
+    /// Builder-style admission deadline.
+    pub fn deadline(mut self, d: Duration) -> SubmitOptions {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// Engine-level control-plane knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineOptions {
+    /// Admission cap: how many sessions may be past `Queued` and not
+    /// yet terminal at once. 0 = unbounded (benchmark behavior).
+    /// Bounding this bounds worker memory: per-session state exists
+    /// only for admitted sessions.
+    pub max_in_flight: usize,
+    /// Auto-retire policy: keep the most recent N terminal sessions'
+    /// traffic attribution live and fold anything older into the
+    /// network's retired aggregate (see
+    /// [`TrafficCounters::retire_session`](crate::transport::TrafficCounters::retire_session)).
+    /// 0 = disabled (manual [`StudyEngine::retire_session`] only).
+    pub auto_retire: usize,
+}
+
+/// Lifecycle states of one session (see the module docs for the
+/// transition diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lifecycle {
+    Queued,
+    Admitted,
+    Running,
+    Draining,
+    Closed,
+    Aborted,
+}
+
+impl Lifecycle {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lifecycle::Queued => "queued",
+            Lifecycle::Admitted => "admitted",
+            Lifecycle::Running => "running",
+            Lifecycle::Draining => "draining",
+            Lifecycle::Closed => "closed",
+            Lifecycle::Aborted => "aborted",
+        }
+    }
+
+    /// Terminal states never transition again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Lifecycle::Closed | Lifecycle::Aborted)
+    }
+}
+
+/// Most recent admissions retained by the observability log — enough
+/// for any test or operator inspection while keeping a long-lived
+/// engine's memory bounded no matter how many studies it admits.
+const ADMISSION_LOG_CAP: usize = 1024;
+
+/// Shared observability surface of the control plane: per-session
+/// lifecycle states plus the admission order (most recent
+/// [`ADMISSION_LOG_CAP`] entries), written by the submit path and the
+/// driver, read by callers/tests through the engine.
+#[derive(Default)]
+struct LifecycleBoard {
+    states: Mutex<HashMap<SessionId, Lifecycle>>,
+    admissions: Mutex<VecDeque<SessionId>>,
+}
+
+impl LifecycleBoard {
+    fn set(&self, session: SessionId, state: Lifecycle) {
+        self.states.lock().unwrap().insert(session, state);
+    }
+
+    fn remove(&self, session: SessionId) {
+        self.states.lock().unwrap().remove(&session);
+    }
+
+    fn get(&self, session: SessionId) -> Option<Lifecycle> {
+        self.states.lock().unwrap().get(&session).copied()
+    }
+
+    fn count(&self, state: Lifecycle) -> usize {
+        self.states
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|&&s| s == state)
+            .count()
+    }
+
+    fn record_admission(&self, session: SessionId) {
+        let mut log = self.admissions.lock().unwrap();
+        if log.len() == ADMISSION_LOG_CAP {
+            log.pop_front();
+        }
+        log.push_back(session);
+    }
+
+    fn admission_order(&self) -> Vec<SessionId> {
+        self.admissions.lock().unwrap().iter().copied().collect()
+    }
+}
+
+/// A submitted-but-not-yet-admitted study, queued to the driver.
 struct PendingStudy {
     spec: Arc<SessionSpec>,
     mode: crate::config::SecurityMode,
     lambda: f64,
     tol: f64,
     max_iters: usize,
+    priority: Priority,
+    deadline: Option<Duration>,
+    submitted: Instant,
     result_tx: Sender<anyhow::Result<SecureFitResult>>,
+}
+
+impl PendingStudy {
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| self.submitted.elapsed() >= d)
+    }
 }
 
 /// Joinable handle to one submitted study session.
@@ -58,8 +292,11 @@ impl StudyHandle {
         self.session
     }
 
-    /// Block until the fit completes; its metrics carry per-session
-    /// timing and traffic attribution.
+    /// Block until the session reaches a terminal lifecycle state —
+    /// i.e. until every worker has ACKED that its per-session state is
+    /// freed, not merely until the math finished. The metrics carry
+    /// per-session timing and traffic attribution (teardown frames
+    /// included).
     pub fn join(self) -> anyhow::Result<SecureFitResult> {
         self.rx.recv().map_err(|_| {
             anyhow::anyhow!(
@@ -77,7 +314,8 @@ impl StudyHandle {
 type SubmitQueue = Arc<Mutex<VecDeque<PendingStudy>>>;
 
 /// Persistent study network: S institution workers, W center workers,
-/// one coordinator driver, multiplexing concurrent fit sessions.
+/// one coordinator driver multiplexing concurrent fit sessions behind
+/// the admission controller and priority scheduler.
 pub struct StudyEngine {
     net: Arc<Network>,
     registry: Arc<SessionRegistry>,
@@ -89,18 +327,36 @@ pub struct StudyEngine {
     institutions: usize,
     centers: usize,
     compute: ComputeHandle,
+    board: Arc<LifecycleBoard>,
+    peak_in_flight: Arc<AtomicUsize>,
+    /// Live per-session-state gauges, centers first then institutions
+    /// (the leak gate reads these through
+    /// [`StudyEngine::worker_live_sessions`]).
+    worker_gauges: Vec<Arc<AtomicUsize>>,
     _compute_guard: Option<ComputeServiceGuard>,
 }
 
 impl StudyEngine {
-    /// Build a persistent network with the pure-rust compute engine.
+    /// Build a persistent network with the pure-rust compute engine and
+    /// default control-plane options (unbounded admission, no
+    /// auto-retire).
     pub fn new(institutions: usize, centers: usize) -> anyhow::Result<StudyEngine> {
-        StudyEngine::with_compute(institutions, centers, ComputeHandle::rust(), None)
+        StudyEngine::with_options(institutions, centers, EngineOptions::default())
+    }
+
+    /// [`StudyEngine::new`] with explicit control-plane options.
+    pub fn with_options(
+        institutions: usize,
+        centers: usize,
+        opts: EngineOptions,
+    ) -> anyhow::Result<StudyEngine> {
+        StudyEngine::with_compute(institutions, centers, ComputeHandle::rust(), None, opts)
     }
 
     /// Build a persistent network sized for `ds`'s institutions with
     /// the compute engine `cfg` selects (the same PJRT/auto/rust logic
-    /// the single-fit path always used).
+    /// the single-fit path always used) and the control-plane options
+    /// (`max_in_flight`, `auto_retire`) the config carries.
     pub fn for_experiment(ds: &Dataset, cfg: &ExperimentConfig) -> anyhow::Result<StudyEngine> {
         cfg.validate()?;
         let artifacts_dir = std::path::Path::new(&cfg.artifacts_dir);
@@ -131,7 +387,11 @@ impl StudyEngine {
                 }
             }
         };
-        StudyEngine::with_compute(ds.num_institutions(), cfg.num_centers, compute, guard)
+        let opts = EngineOptions {
+            max_in_flight: cfg.max_in_flight,
+            auto_retire: cfg.auto_retire,
+        };
+        StudyEngine::with_compute(ds.num_institutions(), cfg.num_centers, compute, guard, opts)
     }
 
     /// Build the persistent topology around an explicit compute handle.
@@ -140,6 +400,7 @@ impl StudyEngine {
         centers: usize,
         compute: ComputeHandle,
         compute_guard: Option<ComputeServiceGuard>,
+        opts: EngineOptions,
     ) -> anyhow::Result<StudyEngine> {
         anyhow::ensure!(
             institutions >= 1 && institutions <= u16::MAX as usize,
@@ -153,11 +414,15 @@ impl StudyEngine {
         let registry = SessionRegistry::new();
         let coord = net.register(NodeId::Coordinator);
         let mut workers = Vec::with_capacity(institutions + centers);
+        let mut worker_gauges = Vec::with_capacity(institutions + centers);
         for c in 0..centers {
             let ep = net.register(NodeId::Center(c as u16));
+            let gauge = Arc::new(AtomicUsize::new(0));
+            worker_gauges.push(gauge.clone());
             let cfg = crate::center::CenterWorkerConfig {
                 center_id: c as u16,
                 registry: registry.clone(),
+                live_sessions: gauge,
             };
             workers.push(
                 std::thread::Builder::new()
@@ -167,10 +432,13 @@ impl StudyEngine {
         }
         for j in 0..institutions {
             let ep = net.register(NodeId::Institution(j as u16));
+            let gauge = Arc::new(AtomicUsize::new(0));
+            worker_gauges.push(gauge.clone());
             let cfg = crate::institution::InstitutionWorkerConfig {
                 institution_id: j as u16,
                 registry: registry.clone(),
                 engine: compute.clone(),
+                live_sessions: gauge,
             };
             workers.push(
                 std::thread::Builder::new()
@@ -180,13 +448,28 @@ impl StudyEngine {
         }
         let queue: SubmitQueue = Arc::new(Mutex::new(VecDeque::new()));
         let injector = net.injector(NodeId::Client);
+        let board = Arc::new(LifecycleBoard::default());
+        let peak_in_flight = Arc::new(AtomicUsize::new(0));
         let driver = {
-            let registry = registry.clone();
-            let net = net.clone();
-            let queue = queue.clone();
+            let driver = Driver {
+                coord,
+                registry: registry.clone(),
+                queue: queue.clone(),
+                net: net.clone(),
+                board: board.clone(),
+                peak_in_flight: peak_in_flight.clone(),
+                opts,
+                institutions,
+                centers,
+                lanes: Default::default(),
+                ready: Default::default(),
+                sessions: HashMap::new(),
+                completed: VecDeque::new(),
+                submissions_open: true,
+            };
             std::thread::Builder::new()
                 .name("study-driver".to_string())
-                .spawn(move || drive(coord, registry, queue, net, institutions, centers))?
+                .spawn(move || driver.run())?
         };
         Ok(StudyEngine {
             net,
@@ -199,6 +482,9 @@ impl StudyEngine {
             institutions,
             centers,
             compute,
+            board,
+            peak_in_flight,
+            worker_gauges,
             _compute_guard: compute_guard,
         })
     }
@@ -220,22 +506,71 @@ impl StudyEngine {
         self.net.counters.snapshot()
     }
 
+    /// Current lifecycle state of a session (`None` once retired or
+    /// never known).
+    pub fn lifecycle(&self, session: SessionId) -> Option<Lifecycle> {
+        self.board.get(session)
+    }
+
+    /// Number of sessions currently in `state` on the lifecycle board.
+    pub fn lifecycle_count(&self, state: Lifecycle) -> usize {
+        self.board.count(state)
+    }
+
+    /// Session ids in the order the admission controller opened them
+    /// on the wire (the observable effect of the priority lanes). The
+    /// log keeps the most recent 1024 admissions, so a long-lived
+    /// engine stays bounded.
+    pub fn admission_order(&self) -> Vec<SessionId> {
+        self.board.admission_order()
+    }
+
+    /// High-water mark of concurrently admitted (non-terminal,
+    /// non-queued) sessions — never exceeds a configured
+    /// `max_in_flight`.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Specs currently distributed to workers (0 when every session has
+    /// fully closed — the registry half of the leak gate).
+    pub fn live_specs(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Per-worker live session-state counts, centers first then
+    /// institutions. After every submitted handle has been joined, all
+    /// entries are zero — `CloseAck` is sent only AFTER a worker frees
+    /// its state, so this is provable, not racy.
+    pub fn worker_live_sessions(&self) -> Vec<usize> {
+        self.worker_gauges
+            .iter()
+            .map(|g| g.load(Ordering::Relaxed))
+            .collect()
+    }
+
     /// Submit one study: `cfg` provides the solver/scheme parameters,
     /// `ds` the partitioned data (its shards map onto this engine's
-    /// institutions). Returns immediately; the fit proceeds
-    /// concurrently with every other in-flight session.
+    /// institutions), `opts` the scheduling class and admission
+    /// deadline. Returns immediately with the session `Queued`; the
+    /// admission controller opens it as soon as a slot is free.
     ///
     /// Copies the shard data once; callers submitting the same dataset
     /// as many sessions should [`ShardData::split`] once and use
     /// [`StudyEngine::submit_shared`] instead.
-    pub fn submit(&self, cfg: &ExperimentConfig, ds: &Dataset) -> anyhow::Result<StudyHandle> {
+    pub fn submit(
+        &self,
+        cfg: &ExperimentConfig,
+        ds: &Dataset,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<StudyHandle> {
         anyhow::ensure!(
             ds.num_institutions() == self.institutions,
             "dataset has {} institutions, engine topology has {}",
             ds.num_institutions(),
             self.institutions
         );
-        self.submit_shared(cfg, ShardData::split(ds))
+        self.submit_shared(cfg, ShardData::split(ds), opts)
     }
 
     /// [`StudyEngine::submit`] over pre-split shards — zero data
@@ -245,6 +580,7 @@ impl StudyEngine {
         &self,
         cfg: &ExperimentConfig,
         shards: Vec<Arc<ShardData>>,
+        opts: SubmitOptions,
     ) -> anyhow::Result<StudyHandle> {
         cfg.validate()?;
         anyhow::ensure!(
@@ -271,6 +607,7 @@ impl StudyEngine {
             cfg.seed,
         ));
         self.registry.insert(spec.clone());
+        self.board.set(session, Lifecycle::Queued);
         let (result_tx, result_rx) = channel();
         let pending = PendingStudy {
             spec,
@@ -278,6 +615,9 @@ impl StudyEngine {
             lambda: cfg.lambda,
             tol: cfg.tol,
             max_iters: cfg.max_iters,
+            priority: opts.priority,
+            deadline: opts.deadline,
+            submitted: Instant::now(),
             result_tx,
         };
         // Queue first, nudge second: a nudge with an empty queue is a
@@ -299,16 +639,26 @@ impl StudyEngine {
 
     /// Retire a finished session's traffic attribution into the
     /// network's running aggregate (bounds per-session bookkeeping on
-    /// long-lived consortia; see `transport::TrafficCounters`).
-    /// Returns `false` for unknown or already-retired sessions. Call
-    /// after the study's handle has been joined — later frames for the
-    /// session would open a fresh entry.
+    /// long-lived consortia; see `transport::TrafficCounters`). The
+    /// [`EngineOptions::auto_retire`] policy calls this automatically
+    /// for sessions N completions old; the manual entry point remains
+    /// for attended deployments. Returns `false` for unknown or
+    /// already-retired sessions. Call after the study's handle has been
+    /// joined — on the success path acknowledged close guarantees no
+    /// frame arrives later, so the attribution is final. (An ABORTED
+    /// session can still attract a straggler `NodeError` frame from a
+    /// worker that processed a pre-abort broadcast late; retiring such
+    /// a session a second time folds the remainder.)
     pub fn retire_session(&self, session: SessionId) -> bool {
-        self.net.counters.retire_session(session).is_some()
+        let retired = self.net.counters.retire_session(session).is_some();
+        if retired {
+            self.board.remove(session);
+        }
+        retired
     }
 
-    /// Drain in-flight sessions, stop the driver and workers, and
-    /// return the final global traffic snapshot.
+    /// Drain queued and in-flight sessions, stop the driver and
+    /// workers, and return the final global traffic snapshot.
     pub fn shutdown(mut self) -> anyhow::Result<TrafficSnapshot> {
         self.shutdown_inner()?;
         Ok(self.net.counters.snapshot())
@@ -356,86 +706,121 @@ impl Drop for StudyEngine {
     }
 }
 
+/// Driver-side phase of an admitted session (`Queued` lives in the
+/// lanes; terminal states leave the map).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Admitted,
+    Running,
+    Draining,
+}
+
+/// What the driver delivers to the handle when the drain completes.
+enum Fate {
+    Success(SessionOutcome),
+    Failure(anyhow::Error),
+}
+
 /// One driver-side active session.
 struct Active {
     state: SessionState,
     result_tx: Sender<anyhow::Result<SecureFitResult>>,
+    priority: Priority,
+    phase: Phase,
+    /// A computed next round waiting for its weighted-fair dispatch
+    /// slot.
+    pending_round: Option<Vec<(NodeId, Message)>>,
+    /// Outstanding `CloseAck`s while `Draining`.
+    acks_pending: usize,
+    fate: Option<Fate>,
 }
 
-/// The coordinator driver loop: accepts submissions, opens sessions,
-/// pumps the network, and feeds each `AggregateResponse` to its
-/// session's Newton machine. Interleaving is what makes K fits
-/// concurrent — while one session's institutions crunch their shards,
-/// another session's reconstruction proceeds here.
-fn drive(
+/// The coordinator driver: accepts submissions into priority lanes,
+/// admits sessions under the in-flight cap, pumps the network, feeds
+/// each `AggregateResponse` to its session's Newton machine, and
+/// dispatches ready rounds weighted-fair across the lanes. While one
+/// session's institutions crunch their shards, another session's
+/// reconstruction proceeds here — that interleaving is what makes K
+/// fits concurrent.
+struct Driver {
     coord: Endpoint,
     registry: Arc<SessionRegistry>,
     queue: SubmitQueue,
     net: Arc<Network>,
+    board: Arc<LifecycleBoard>,
+    peak_in_flight: Arc<AtomicUsize>,
+    opts: EngineOptions,
     institutions: usize,
     centers: usize,
-) -> anyhow::Result<()> {
-    let result = drive_loop(&coord, &registry, &queue, &net);
-    // ALWAYS tear the persistent workers down — even when the loop
-    // errored — and best-effort per worker: otherwise a single dead
-    // worker would leave the others parked in recv() forever and
-    // shutdown()/Drop would hang on their joins instead of reporting
-    // the error. Failed sessions' handles see their senders drop.
-    for j in 0..institutions {
-        let _ = coord.send(NodeId::Institution(j as u16), &Message::Shutdown);
-    }
-    for c in 0..centers {
-        let _ = coord.send(NodeId::Center(c as u16), &Message::Shutdown);
-    }
-    result
+    /// Admission lanes, indexed by `Priority::lane()`.
+    lanes: [VecDeque<PendingStudy>; 3],
+    /// Sessions with a `pending_round` awaiting dispatch, by lane.
+    ready: [VecDeque<SessionId>; 3],
+    sessions: HashMap<SessionId, Active>,
+    /// Terminal sessions in completion order (the auto-retire window).
+    completed: VecDeque<SessionId>,
+    submissions_open: bool,
 }
 
-/// Drain the submission queue into running sessions.
-fn absorb_submissions(
-    coord: &Endpoint,
-    queue: &SubmitQueue,
-    sessions: &mut HashMap<SessionId, Active>,
-) -> anyhow::Result<()> {
-    loop {
-        // Pop one at a time so the lock is never held across sends.
-        let Some(p) = queue.lock().unwrap().pop_front() else {
-            return Ok(());
-        };
-        start_session(coord, sessions, p)?;
-    }
-}
-
-fn drive_loop(
-    coord: &Endpoint,
-    registry: &Arc<SessionRegistry>,
-    queue: &SubmitQueue,
-    net: &Arc<Network>,
-) -> anyhow::Result<()> {
-    let mut sessions: HashMap<SessionId, Active> = HashMap::new();
-    let mut submissions_open = true;
-    loop {
-        if sessions.is_empty() && !submissions_open {
-            break;
+impl Driver {
+    fn run(mut self) -> anyhow::Result<()> {
+        let result = self.event_loop();
+        // ALWAYS tear the persistent workers down — even when the loop
+        // errored — and best-effort per worker: otherwise a single dead
+        // worker would leave the others parked in recv() forever and
+        // shutdown()/Drop would hang on their joins instead of
+        // reporting the error. Failed sessions' handles see their
+        // senders drop.
+        for j in 0..self.institutions {
+            let _ = self
+                .coord
+                .send(NodeId::Institution(j as u16), &Message::Shutdown);
         }
-        // ONE unified channel: submissions arrive as StudySubmitted
-        // frames alongside protocol traffic, so this receive blocks
-        // with no timeout — an idle driver costs nothing at any K
-        // (formerly a 1 ms poll interleaving a side channel).
-        let (from, session, msg) = coord.recv_session()?;
+        for c in 0..self.centers {
+            let _ = self.coord.send(NodeId::Center(c as u16), &Message::Shutdown);
+        }
+        result
+    }
+
+    fn event_loop(&mut self) -> anyhow::Result<()> {
+        loop {
+            if !self.submissions_open && self.sessions.is_empty() && self.lanes_empty() {
+                return Ok(());
+            }
+            // ONE unified channel: submissions arrive as StudySubmitted
+            // frames alongside protocol traffic, so this receive blocks
+            // with no timeout — an idle driver costs nothing at any K.
+            let frame = self.coord.recv_session()?;
+            self.handle(frame)?;
+            // Drain whatever else already arrived before scheduling:
+            // processing the backlog first is what lets the weighted-
+            // fair dispatch below actually order simultaneous ready
+            // rounds instead of degenerating to FIFO-by-arrival.
+            while let Some(frame) = self.coord.recv_session_timeout(Duration::ZERO)? {
+                self.handle(frame)?;
+            }
+            self.dispatch_ready()?;
+            self.admit()?;
+        }
+    }
+
+    fn lanes_empty(&self) -> bool {
+        self.lanes.iter().all(VecDeque::is_empty)
+    }
+
+    fn handle(&mut self, frame: (NodeId, SessionId, Message)) -> anyhow::Result<()> {
+        let (from, session, msg) = frame;
         match msg {
             Message::StudySubmitted => {
-                anyhow::ensure!(
-                    from == NodeId::Client,
-                    "study submission nudge from {from}"
-                );
-                absorb_submissions(coord, queue, &mut sessions)?;
+                anyhow::ensure!(from == NodeId::Client, "study submission nudge from {from}");
+                self.absorb_submissions();
             }
             Message::Shutdown => {
                 anyhow::ensure!(from == NodeId::Client, "shutdown frame from {from}");
                 // Run anything still queued, then finish in-flight
-                // sessions and exit once the last one completes.
-                absorb_submissions(coord, queue, &mut sessions)?;
-                submissions_open = false;
+                // sessions and exit once the last one fully closes.
+                self.absorb_submissions();
+                self.submissions_open = false;
             }
             Message::AggregateResponse {
                 iter,
@@ -444,62 +829,294 @@ fn drive_loop(
                 g_share,
                 dev_share,
             } => {
-                let step = match sessions.get_mut(&session) {
-                    Some(active) => active
-                        .state
-                        .on_aggregate_response(center, hessian, g_share, dev_share, iter),
-                    // Late response for a session that already failed.
-                    None => continue,
+                let Some(active) = self.sessions.get_mut(&session) else {
+                    // Late response for a session that already closed.
+                    return Ok(());
                 };
+                if active.phase == Phase::Draining {
+                    // Late response racing an abort: the session's fate
+                    // is sealed, only acks matter now.
+                    return Ok(());
+                }
+                if active.phase == Phase::Admitted {
+                    active.phase = Phase::Running;
+                    self.board.set(session, Lifecycle::Running);
+                }
+                let step = active
+                    .state
+                    .on_aggregate_response(center, hessian, g_share, dev_share, iter);
                 match step {
                     Ok(SessionStep::Pending) => {}
                     Ok(SessionStep::Continue(outgoing)) => {
-                        send_all(coord, session, outgoing)?;
+                        // Park the round for weighted-fair dispatch.
+                        active.pending_round = Some(outgoing);
+                        self.ready[active.priority.lane()].push_back(session);
                     }
                     Ok(SessionStep::Done { outgoing, outcome }) => {
-                        send_all(coord, session, outgoing)?;
-                        let active = sessions.remove(&session).unwrap();
-                        let result = finish_session(net, &active.state, outcome);
-                        registry.remove(session);
-                        let _ = active.result_tx.send(Ok(result));
+                        self.begin_drain(session, outgoing, Fate::Success(outcome));
                     }
-                    Err(e) => {
-                        fail_session(coord, registry, &mut sessions, session, e);
-                    }
+                    Err(e) => self.abort_session(session, e),
+                }
+            }
+            Message::CloseAck { .. } => {
+                let Some(active) = self.sessions.get_mut(&session) else {
+                    // Ack for an already-finalized session (all its
+                    // expected acks arrived) — idempotent, ignore.
+                    return Ok(());
+                };
+                anyhow::ensure!(
+                    active.phase == Phase::Draining,
+                    "close ack from {from} for non-draining session {session}"
+                );
+                active.acks_pending -= 1;
+                if active.acks_pending == 0 {
+                    self.finalize(session);
                 }
             }
             Message::NodeError { node, is_center, error } => {
                 let who = if is_center { "center" } else { "institution" };
-                fail_session(
-                    coord,
-                    registry,
-                    &mut sessions,
-                    session,
-                    anyhow::anyhow!("{who}-{node} failed: {error}"),
-                );
+                self.abort_session(session, anyhow::anyhow!("{who}-{node} failed: {error}"));
             }
             other => anyhow::bail!("driver got unexpected {} from {from}", other.kind()),
         }
+        Ok(())
     }
-    Ok(())
-}
 
-fn start_session(
-    coord: &Endpoint,
-    sessions: &mut HashMap<SessionId, Active>,
-    p: PendingStudy,
-) -> anyhow::Result<()> {
-    let state = SessionState::new(p.spec, p.mode, p.lambda, p.tol, p.max_iters);
-    let session = state.session();
-    let outgoing = state.begin();
-    sessions.insert(
-        session,
-        Active {
-            state,
-            result_tx: p.result_tx,
-        },
-    );
-    send_all(coord, session, outgoing)
+    /// Drain the submission queue into the priority lanes.
+    fn absorb_submissions(&mut self) {
+        loop {
+            let Some(p) = self.queue.lock().unwrap().pop_front() else {
+                return;
+            };
+            self.lanes[p.priority.lane()].push_back(p);
+        }
+    }
+
+    /// Dispatch every parked round, weighted-fair across the lanes:
+    /// each cycle grants `Priority::weight()` dispatch slots per lane
+    /// in priority order, so when a backlog made several sessions ready
+    /// at once, interactive rounds hit the wire first (4:2:1) while
+    /// bulk still progresses every cycle — no starvation.
+    fn dispatch_ready(&mut self) -> anyhow::Result<()> {
+        loop {
+            let mut dispatched = false;
+            for p in Priority::ALL {
+                for _ in 0..p.weight() {
+                    let Some(sid) = self.ready[p.lane()].pop_front() else {
+                        break;
+                    };
+                    // A session may have been aborted (→ Draining) or
+                    // even finalized after its round was parked; its
+                    // entry here is then stale — drop the round, never
+                    // send protocol traffic into a drain.
+                    if let Some(active) = self.sessions.get_mut(&sid) {
+                        let round = active.pending_round.take();
+                        if active.phase != Phase::Draining {
+                            if let Some(outgoing) = round {
+                                send_all(&self.coord, sid, outgoing)?;
+                            }
+                        }
+                    }
+                    dispatched = true;
+                }
+            }
+            if !dispatched {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Admit queued studies while the in-flight cap allows, highest
+    /// priority lane first (FIFO within a lane). Expired deadlines are
+    /// swept from EVERY lane on EVERY pass — before the cap check — so
+    /// a deadlined study is rejected promptly even while the cap is
+    /// saturated (the saturating sessions' protocol frames are what
+    /// wake the driver, so the sweep runs at round granularity).
+    fn admit(&mut self) -> anyhow::Result<()> {
+        self.reject_expired();
+        loop {
+            if self.opts.max_in_flight > 0 && self.sessions.len() >= self.opts.max_in_flight {
+                return Ok(());
+            }
+            let Some(p) = self.next_admittable() else {
+                return Ok(());
+            };
+            self.open_session(p)?;
+            let in_flight = self.sessions.len();
+            self.peak_in_flight.fetch_max(in_flight, Ordering::Relaxed);
+        }
+    }
+
+    /// Reject every queued study whose admission deadline has lapsed
+    /// (their handles get the error immediately; no worker ever saw
+    /// them, so there is nothing to drain).
+    fn reject_expired(&mut self) {
+        for lane_idx in 0..self.lanes.len() {
+            let mut i = 0;
+            while i < self.lanes[lane_idx].len() {
+                if self.lanes[lane_idx][i].expired() {
+                    let p = self.lanes[lane_idx].remove(i).unwrap();
+                    self.reject(p);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Deliver a deadline rejection and record the session as a
+    /// terminal completion — rejected sessions flow through the same
+    /// auto-retire window as closed ones, so their lifecycle-board and
+    /// per-session traffic entries (the `StudySubmitted` nudge bytes)
+    /// are bounded too.
+    fn reject(&mut self, p: PendingStudy) {
+        let session = p.spec.session;
+        self.registry.remove(session);
+        self.board.set(session, Lifecycle::Aborted);
+        let _ = p.result_tx.send(Err(anyhow::anyhow!(
+            "session {session} missed its admission deadline \
+             ({:?} in the {} lane)",
+            p.deadline.unwrap(),
+            p.priority.name()
+        )));
+        self.note_completion(session);
+    }
+
+    /// Pop the next admittable study (expired entries were already
+    /// swept this pass; re-check anyway so a deadline that lapses
+    /// mid-pass still cannot be admitted).
+    fn next_admittable(&mut self) -> Option<PendingStudy> {
+        for lane_idx in 0..self.lanes.len() {
+            while let Some(p) = self.lanes[lane_idx].pop_front() {
+                if p.expired() {
+                    self.reject(p);
+                    continue;
+                }
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    /// `Queued → Admitted`: build the Newton machine and open the
+    /// session on the wire.
+    fn open_session(&mut self, p: PendingStudy) -> anyhow::Result<()> {
+        let state = SessionState::new(p.spec, p.mode, p.lambda, p.tol, p.max_iters);
+        let session = state.session();
+        let outgoing = state.begin();
+        self.sessions.insert(
+            session,
+            Active {
+                state,
+                result_tx: p.result_tx,
+                priority: p.priority,
+                phase: Phase::Admitted,
+                pending_round: None,
+                acks_pending: 0,
+                fate: None,
+            },
+        );
+        self.board.set(session, Lifecycle::Admitted);
+        self.board.record_admission(session);
+        send_all(&self.coord, session, outgoing)
+    }
+
+    /// `→ Draining`: send the teardown frames (already built for the
+    /// success path; `Abort`s for failures) and start counting acks.
+    /// Sends are best-effort — a worker that cannot be reached took its
+    /// per-session state down with its thread, so its ack is not owed.
+    fn begin_drain(&mut self, session: SessionId, outgoing: Vec<(NodeId, Message)>, fate: Fate) {
+        // The spec leaves the registry the moment draining starts —
+        // BEFORE any worker processes its close frame — so a straggler
+        // frame racing an abort (e.g. a submission from an institution
+        // that had not yet seen the `Abort`) can never lazily re-open
+        // per-session state at a worker that already freed it: the
+        // lookup fails, the worker reports an ignorable NodeError, and
+        // the leak invariant holds. (The driver's own `SessionState`
+        // keeps the spec alive through its `Arc` for the final
+        // metrics.)
+        self.registry.remove(session);
+        let active = self.sessions.get_mut(&session).expect("draining unknown session");
+        let mut acks_expected = 0;
+        for (to, msg) in outgoing {
+            if self.coord.send_session(to, session, &msg).is_ok() {
+                acks_expected += 1;
+            }
+        }
+        active.phase = Phase::Draining;
+        active.acks_pending = acks_expected;
+        active.fate = Some(fate);
+        self.board.set(session, Lifecycle::Draining);
+        if acks_expected == 0 {
+            self.finalize(session);
+        }
+    }
+
+    /// Abort one session: every worker is told to drop its state and
+    /// ack; the error reaches the handle when the drain completes.
+    /// Other sessions continue untouched. No-op while already draining
+    /// (a late NodeError cannot re-fail a session whose fate is sealed).
+    fn abort_session(&mut self, session: SessionId, err: anyhow::Error) {
+        let Some(active) = self.sessions.get_mut(&session) else {
+            return;
+        };
+        if active.phase == Phase::Draining {
+            return;
+        }
+        let reason = format!("{err:#}");
+        let spec = active.state.spec().clone();
+        let mut outgoing = Vec::with_capacity(spec.num_institutions() + spec.num_centers());
+        for j in 0..spec.num_institutions() {
+            outgoing.push((
+                NodeId::Institution(j as u16),
+                Message::Abort { reason: reason.clone() },
+            ));
+        }
+        for c in 0..spec.num_centers() {
+            outgoing.push((
+                NodeId::Center(c as u16),
+                Message::Abort { reason: reason.clone() },
+            ));
+        }
+        self.begin_drain(session, outgoing, Fate::Failure(err));
+    }
+
+    /// `Draining → Closed | Aborted`: every ack arrived, so the
+    /// session's traffic attribution is final (teardown and ack bytes
+    /// included) and the result can carry it. Applies the auto-retire
+    /// policy to sessions that finished `auto_retire` completions ago.
+    fn finalize(&mut self, session: SessionId) {
+        let active = self.sessions.remove(&session).expect("finalizing unknown session");
+        debug_assert_eq!(active.acks_pending, 0);
+        let (result, terminal) = match active.fate.expect("draining session without a fate") {
+            Fate::Success(outcome) => (
+                Ok(finish_session(&self.net, &active.state, outcome)),
+                Lifecycle::Closed,
+            ),
+            Fate::Failure(e) => (Err(e), Lifecycle::Aborted),
+        };
+        // (The spec already left the registry when draining began.)
+        self.board.set(session, terminal);
+        let _ = active.result_tx.send(result);
+        self.note_completion(session);
+    }
+
+    /// Record a terminal session (closed, aborted, or rejected) in the
+    /// completion window and apply the auto-retire policy to whatever
+    /// fell out of it. With the policy disabled the window is not kept
+    /// at all — tracking completions nobody will ever retire would
+    /// itself grow without bound on a long-lived engine.
+    fn note_completion(&mut self, session: SessionId) {
+        if self.opts.auto_retire == 0 {
+            return;
+        }
+        self.completed.push_back(session);
+        while self.completed.len() > self.opts.auto_retire {
+            let old = self.completed.pop_front().unwrap();
+            self.net.counters.retire_session(old);
+            self.board.remove(old);
+        }
+    }
 }
 
 fn send_all(
@@ -514,10 +1131,15 @@ fn send_all(
 }
 
 /// Assemble the per-session metrics: wall time from the driver-side
-/// start, central time from the coordinator's reconstruction plus the
-/// max center busy time (centers run in parallel), local/protect times
-/// from the institutions' telemetry cells, and the session's own slice
-/// of the traffic counters.
+/// admission (queue wait excluded), central time from the coordinator's
+/// reconstruction plus the max center busy time (centers run in
+/// parallel), local/protect times from the institutions' telemetry
+/// cells, and the session's own slice of the traffic counters —
+/// complete including teardown/ack frames, because this runs only
+/// after the last `CloseAck` arrived (whose bytes were counted before
+/// it was delivered). Only abort drains can see stragglers after this
+/// point, and aborted sessions never reach here (they report an error,
+/// not metrics).
 fn finish_session(net: &Arc<Network>, state: &SessionState, outcome: SessionOutcome) -> SecureFitResult {
     let spec = state.spec();
     let total_secs = state.started.elapsed().as_secs_f64();
@@ -552,37 +1174,6 @@ fn finish_session(net: &Arc<Network>, state: &SessionState, outcome: SessionOutc
     }
 }
 
-/// Abort one session: drop its state, tell the workers to GC it, and
-/// deliver the error to the waiting handle. Other sessions continue.
-fn fail_session(
-    coord: &Endpoint,
-    registry: &Arc<SessionRegistry>,
-    sessions: &mut HashMap<SessionId, Active>,
-    session: SessionId,
-    err: anyhow::Error,
-) {
-    let Some(active) = sessions.remove(&session) else {
-        return;
-    };
-    let spec = active.state.spec();
-    for j in 0..spec.num_institutions() {
-        let _ = coord.send_session(
-            NodeId::Institution(j as u16),
-            session,
-            &Message::Finished { iter: 0, beta: vec![] },
-        );
-    }
-    for c in 0..spec.num_centers() {
-        let _ = coord.send_session(
-            NodeId::Center(c as u16),
-            session,
-            &Message::Finished { iter: 0, beta: vec![] },
-        );
-    }
-    registry.remove(session);
-    let _ = active.result_tx.send(Err(err));
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -602,10 +1193,16 @@ mod tests {
         cfg.num_centers = 3;
         cfg.threshold = 2;
         let engine = StudyEngine::for_experiment(&ds, &cfg).unwrap();
-        let fit = engine.submit(&cfg, &ds).unwrap().join().unwrap();
+        let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let session = h.session_id();
+        let fit = h.join().unwrap();
         assert!(fit.metrics.iterations > 1);
         assert_eq!(fit.beta.len(), 4);
         assert!(fit.metrics.traffic.total_bytes > 0);
+        // join() returns only after the full lifecycle walk.
+        assert_eq!(engine.lifecycle(session), Some(Lifecycle::Closed));
+        assert_eq!(engine.admission_order(), vec![session]);
+        assert!(engine.peak_in_flight() >= 1);
         let final_traffic = engine.shutdown().unwrap();
         // Per-session attribution covers everything but control frames.
         let session_sum: u64 = final_traffic.per_session.iter().map(|&(_, b)| b).sum();
@@ -619,10 +1216,12 @@ mod tests {
         // wrong center count
         let mut cfg = base_cfg();
         cfg.num_centers = 3;
-        assert!(engine.submit(&cfg, &ds).is_err());
+        assert!(engine.submit(&cfg, &ds, SubmitOptions::default()).is_err());
         // wrong institution count
         let ds4 = synthetic("t", 200, 3, 4, 0.0, 1.0, 22);
-        assert!(engine.submit(&base_cfg(), &ds4).is_err());
+        assert!(engine
+            .submit(&base_cfg(), &ds4, SubmitOptions::default())
+            .is_err());
         engine.shutdown().unwrap();
     }
 
@@ -633,8 +1232,8 @@ mod tests {
         cfg.num_centers = 3;
         cfg.threshold = 2;
         let engine = StudyEngine::new(2, 3).unwrap();
-        let h1 = engine.submit(&cfg, &ds).unwrap();
-        let h2 = engine.submit(&cfg, &ds).unwrap();
+        let h1 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let h2 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
         assert_eq!(h1.session_id(), 1);
         assert_eq!(h2.session_id(), 2);
         h1.join().unwrap();
@@ -652,9 +1251,17 @@ mod tests {
         cfg.num_centers = 3;
         cfg.threshold = 2;
         let engine = StudyEngine::new(2, 3).unwrap();
-        engine.submit(&cfg, &ds).unwrap().join().unwrap();
+        engine
+            .submit(&cfg, &ds, SubmitOptions::default())
+            .unwrap()
+            .join()
+            .unwrap();
         std::thread::sleep(std::time::Duration::from_millis(60)); // idle
-        let fit = engine.submit(&cfg, &ds).unwrap().join().unwrap();
+        let fit = engine
+            .submit(&cfg, &ds, SubmitOptions::interactive())
+            .unwrap()
+            .join()
+            .unwrap();
         assert!(fit.metrics.iterations > 0);
         engine.shutdown().unwrap();
     }
@@ -666,13 +1273,15 @@ mod tests {
         cfg.num_centers = 3;
         cfg.threshold = 2;
         let engine = StudyEngine::new(2, 3).unwrap();
-        let h1 = engine.submit(&cfg, &ds).unwrap();
+        let h1 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
         let s1 = h1.session_id();
         h1.join().unwrap();
         let before = engine.traffic();
         assert!(before.session_bytes(s1) > 0);
         assert!(engine.retire_session(s1));
         assert!(!engine.retire_session(s1), "second retire is a no-op");
+        // retiring also drops the lifecycle-board entry
+        assert_eq!(engine.lifecycle(s1), None);
         let after = engine.traffic();
         assert_eq!(after.session_bytes(s1), 0);
         assert_eq!(after.retired_sessions, 1);
@@ -680,7 +1289,7 @@ mod tests {
         let live: u64 = after.per_session.iter().map(|&(_, b)| b).sum();
         assert_eq!(live + after.retired_bytes, after.total_bytes);
         // a later study is attributed normally alongside the aggregate
-        let h2 = engine.submit(&cfg, &ds).unwrap();
+        let h2 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
         let s2 = h2.session_id();
         h2.join().unwrap();
         let final_snap = engine.shutdown().unwrap();
@@ -703,12 +1312,139 @@ mod tests {
             bad.x[(i, 2)] = 0.0;
         }
         let bad_cfg = ExperimentConfig { lambda: 0.0, ..cfg.clone() };
-        let h_bad = engine.submit(&bad_cfg, &bad).unwrap();
+        let h_bad = engine.submit(&bad_cfg, &bad, SubmitOptions::default()).unwrap();
+        let bad_session = h_bad.session_id();
         assert!(h_bad.join().is_err());
+        // The aborted session walked the same acknowledged-drain path:
+        // terminal state Aborted, zero worker state left behind.
+        assert_eq!(engine.lifecycle(bad_session), Some(Lifecycle::Aborted));
+        assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+        assert_eq!(engine.live_specs(), 0);
         // The engine still serves new sessions afterwards.
-        let h_ok = engine.submit(&cfg, &ds).unwrap();
+        let h_ok = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
         let fit = h_ok.join().unwrap();
         assert!(fit.metrics.iterations > 0);
         engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn priority_parse_and_weights() {
+        assert_eq!(Priority::parse("interactive").unwrap(), Priority::Interactive);
+        assert_eq!(Priority::parse("BATCH").unwrap(), Priority::Batch);
+        assert_eq!(Priority::parse("bulk").unwrap(), Priority::Bulk);
+        assert!(Priority::parse("turbo").is_err());
+        assert!(Priority::Interactive.weight() > Priority::Batch.weight());
+        assert!(Priority::Batch.weight() > Priority::Bulk.weight());
+        assert_eq!(Priority::default(), Priority::Batch);
+        assert_eq!(SubmitOptions::default().priority, Priority::Batch);
+        assert!(SubmitOptions::default().deadline.is_none());
+    }
+
+    #[test]
+    fn lifecycle_names_and_terminality() {
+        assert_eq!(Lifecycle::Queued.name(), "queued");
+        assert_eq!(Lifecycle::Draining.name(), "draining");
+        assert!(Lifecycle::Closed.is_terminal());
+        assert!(Lifecycle::Aborted.is_terminal());
+        for s in [
+            Lifecycle::Queued,
+            Lifecycle::Admitted,
+            Lifecycle::Running,
+            Lifecycle::Draining,
+        ] {
+            assert!(!s.is_terminal(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn admission_cap_one_serializes_sessions() {
+        let ds = synthetic("t", 400, 3, 2, 0.0, 1.0, 33);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions { max_in_flight: 1, auto_retire: 0 },
+        )
+        .unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap())
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(engine.peak_in_flight(), 1, "cap must hold");
+        for r in &results[1..] {
+            assert_eq!(r.beta, results[0].beta, "cap must not move numerics");
+        }
+        assert_eq!(engine.admission_order(), vec![1, 2, 3, 4]);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_rejects_queued_study() {
+        let ds = synthetic("t", 400, 3, 2, 0.0, 1.0, 34);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions { max_in_flight: 1, auto_retire: 0 },
+        )
+        .unwrap();
+        let h_run = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        // A zero deadline has always lapsed by the time the admission
+        // controller considers the study — deterministic rejection.
+        let h_late = engine
+            .submit(
+                &cfg,
+                &ds,
+                SubmitOptions::bulk().deadline(Duration::ZERO),
+            )
+            .unwrap();
+        let late_session = h_late.session_id();
+        let err = h_late.join().unwrap_err();
+        assert!(
+            err.to_string().contains("deadline"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(engine.lifecycle(late_session), Some(Lifecycle::Aborted));
+        h_run.join().unwrap();
+        // The rejected study never touched a worker and left no spec.
+        assert_eq!(engine.live_specs(), 0);
+        assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn auto_retire_folds_old_completions() {
+        let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 35);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions { max_in_flight: 0, auto_retire: 2 },
+        )
+        .unwrap();
+        for _ in 0..5 {
+            engine
+                .submit(&cfg, &ds, SubmitOptions::default())
+                .unwrap()
+                .join()
+                .unwrap();
+        }
+        let snap = engine.traffic();
+        assert_eq!(snap.retired_sessions, 3, "keep-last-2 over 5 completions");
+        assert_eq!(snap.per_session.len(), 2, "only the retire window stays live");
+        let live: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(live + snap.retired_bytes, snap.total_bytes);
+        // Retired sessions leave the lifecycle board; the window stays.
+        assert_eq!(engine.lifecycle(1), None);
+        assert_eq!(engine.lifecycle(5), Some(Lifecycle::Closed));
+        let final_snap = engine.shutdown().unwrap();
+        let live: u64 = final_snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(live + final_snap.retired_bytes, final_snap.total_bytes);
     }
 }

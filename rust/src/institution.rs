@@ -13,25 +13,32 @@
 //! the plaintext local Hessian, which is safe to expose alone because
 //! published inference attacks require the (H, g) pair).
 //!
-//! The worker is persistent: per-session hot state (kernel
-//! [`Workspace`], output buffers) lives in a session map and is
-//! dropped on that session's `Finished`, while the Vandermonde share
-//! tables are cached per `(t, w)` scheme and the fused encode+share
-//! buffers ([`SharePool`]) are owned by the worker itself — shared by
-//! EVERY session it serves, so sessions of equal dimension reuse the
-//! same wire buffers and a new session with a familiar topology pays
-//! no setup. Protection runs through the fused threaded sweep
+//! The worker is persistent: per-session hot state (summary output
+//! buffers) lives in a session map and is dropped — with a `CloseAck`
+//! back to the driver — on that session's `SessionClose`/`Abort`,
+//! while everything reusable is owned by the worker itself and shared
+//! across sessions: the Vandermonde share tables cached per `(t, w)`
+//! scheme, the kernel [`Workspace`]s pooled per `(d, threads)` shape
+//! (sessions of equal dimension share one workspace instead of paying
+//! per-session scratch), and the fused encode+share buffers
+//! ([`SharePool`]). A new session with a familiar topology therefore
+//! pays no setup. Protection runs through the fused threaded sweep
 //! (`secure::encode_share_into`): one `[g | dev | H?]` summary batch
 //! per iteration, encoded and shared straight into the pooled
 //! per-holder buffers with per-`(iteration, chunk)` ChaCha20 streams
 //! derived from the session's share seed — deterministic in the
-//! `(master seed, session, institution, iteration)` tuple alone. A
-//! per-session failure is reported to the coordinator as a
-//! session-tagged `NodeError` and only that session is torn down; the
-//! worker keeps serving its other sessions.
+//! `(master seed, session, institution, iteration)` tuple alone — and
+//! submissions leave through the zero-copy frame encoder
+//! ([`encode_share_submission`]): wire bytes are written once,
+//! straight from the pool's holder slices, with no intermediate
+//! `Vec<Fp>` copies. A per-session failure is reported to the
+//! coordinator as a session-tagged `NodeError` and only that session
+//! is torn down; the worker keeps serving its other sessions.
 
 use crate::model::{LocalStats, Workspace};
-use crate::protocol::{pack_upper_into, packed_len, HessianPayload, Message, NodeId, SessionId};
+use crate::protocol::{
+    encode_share_submission, pack_upper_into, packed_len, HessianRef, Message, NodeId, SessionId,
+};
 use crate::runtime::ComputeHandle;
 use crate::secure::{encode_share_into, ShareContext, SharePool};
 use crate::session::{SessionRegistry, SessionSpec};
@@ -40,7 +47,7 @@ use crate::util::rng::derive_seed;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Everything a persistent institution worker needs.
@@ -50,14 +57,19 @@ pub struct InstitutionWorkerConfig {
     pub registry: Arc<SessionRegistry>,
     /// Compute engine shared by every session on this worker.
     pub engine: ComputeHandle,
+    /// Gauge of live per-session states on this worker, maintained on
+    /// every open/close — the engine's leak gate reads it to PROVE that
+    /// acknowledged teardown freed everything.
+    pub live_sessions: Arc<AtomicUsize>,
 }
 
 /// Hot per-session state, allocated on first broadcast and reused for
 /// every subsequent iteration of that session (the compute phase
-/// allocates nothing at steady state).
+/// allocates nothing at steady state). The kernel `Workspace` is NOT
+/// here: it is pooled per `(d, threads)` on the worker and shared by
+/// every session of that shape.
 struct InstSession {
     spec: Arc<SessionSpec>,
-    ws: Workspace,
     stats: LocalStats,
     h_packed: Vec<f64>,
     share_ctx: Rc<ShareContext>,
@@ -80,11 +92,22 @@ pub fn run_institution_worker(
     let mut sessions: HashMap<SessionId, InstSession> = HashMap::new();
     // Vandermonde power tables cached per (t, w), shared across sessions.
     let mut share_tables: HashMap<(usize, usize), Rc<ShareContext>> = HashMap::new();
+    // Kernel workspaces pooled per (d, threads): sessions of equal
+    // dimension share ONE workspace — its buffers are scratch that
+    // `local_stats_into` fully overwrites per call, so sharing cannot
+    // couple sessions numerically (the cross-session amortization item
+    // the ROADMAP left open after PR 2).
+    let mut workspaces: HashMap<(usize, usize), Workspace> = HashMap::new();
     // Fused encode+share buffers, shared across ALL sessions on this
     // worker (capacity grows to the largest dimension ever served and
     // stays — the ROADMAP's cross-session amortization item).
     let mut pool = SharePool::new();
     let mut summary: Vec<f64> = Vec::new();
+    let drop_session = |sessions: &mut HashMap<SessionId, InstSession>, session| {
+        if sessions.remove(&session).is_some() {
+            cfg.live_sessions.fetch_sub(1, Ordering::Relaxed);
+        }
+    };
     loop {
         let (from, session, msg) = ep.recv_session()?;
         match msg {
@@ -94,6 +117,7 @@ pub fn run_institution_worker(
                     &ep,
                     &mut sessions,
                     &mut share_tables,
+                    &mut workspaces,
                     &mut pool,
                     &mut summary,
                     session,
@@ -101,7 +125,7 @@ pub fn run_institution_worker(
                     iter,
                     &beta,
                 ) {
-                    sessions.remove(&session);
+                    drop_session(&mut sessions, session);
                     let _ = ep.send_session(
                         NodeId::Coordinator,
                         session,
@@ -113,14 +137,29 @@ pub fn run_institution_worker(
                     );
                 }
             }
-            Message::Finished { .. } => {
-                sessions.remove(&session);
+            Message::SessionClose { .. } | Message::Abort { .. } => {
+                // Free the session's state FIRST, ack second — the
+                // driver holds the session in Draining until every ack
+                // arrives, so zero-leak is provable, not racy. Acks go
+                // out even for sessions this worker never opened (or
+                // already dropped after an error). A deployment would
+                // persist the final β carried by `SessionClose` here;
+                // the simulation reports it through the study handle.
+                drop_session(&mut sessions, session);
+                let _ = ep.send_session(
+                    NodeId::Coordinator,
+                    session,
+                    &Message::CloseAck {
+                        node: cfg.institution_id,
+                        is_center: false,
+                    },
+                );
             }
             Message::Shutdown => return Ok(()),
             other => {
                 // Unexpected traffic aborts the offending session, not
                 // the worker.
-                sessions.remove(&session);
+                drop_session(&mut sessions, session);
                 let _ = ep.send_session(
                     NodeId::Coordinator,
                     session,
@@ -146,6 +185,7 @@ fn handle_broadcast(
     ep: &Endpoint,
     sessions: &mut HashMap<SessionId, InstSession>,
     share_tables: &mut HashMap<(usize, usize), Rc<ShareContext>>,
+    workspaces: &mut HashMap<(usize, usize), Workspace>,
     pool: &mut SharePool,
     summary: &mut Vec<f64>,
     session: SessionId,
@@ -176,14 +216,15 @@ fn handle_broadcast(
                 .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
                 .clone();
             let share_seed = spec.institution_share_seed(j);
-            v.insert(InstSession {
-                ws: Workspace::new(d, spec.kernel_threads),
+            let st = v.insert(InstSession {
                 stats: LocalStats::zeros(d),
                 h_packed: vec![0.0; packed_len(d)],
                 share_ctx,
                 share_seed,
                 spec,
-            })
+            });
+            cfg.live_sessions.fetch_add(1, Ordering::Relaxed);
+            st
         }
     };
     let spec = &st.spec;
@@ -196,9 +237,15 @@ fn handle_broadcast(
     );
 
     // ---- local compute phase (steps 4–6) ----
+    // The workspace is pooled per (d, threads): scratch only, fully
+    // overwritten per call, so every session of this shape shares one.
+    let d = shard.x.cols;
+    let ws = workspaces
+        .entry((d, spec.kernel_threads))
+        .or_insert_with(|| Workspace::new(d, spec.kernel_threads));
     let compute_secs =
         cfg.engine
-            .local_stats_timed_into(&shard.x, &shard.y, beta, &mut st.ws, &mut st.stats)?;
+            .local_stats_timed_into(&shard.x, &shard.y, beta, ws, &mut st.stats)?;
 
     // ---- protection + submission phase (step 7) ----
     // One fused [g | dev | H?] summary batch per iteration: encoded and
@@ -207,7 +254,6 @@ fn handle_broadcast(
     // Vec<Fp>, no per-iteration allocation once the pool is warm.
     let t = std::time::Instant::now();
     pack_upper_into(&st.stats.h, &mut st.h_packed);
-    let d = st.stats.g.len();
     let n_summary = d + 1 + if spec.full_security { st.h_packed.len() } else { 0 };
     summary.resize(n_summary, 0.0);
     summary[..d].copy_from_slice(&st.stats.g);
@@ -237,30 +283,24 @@ fn handle_broadcast(
         .fetch_add((t.elapsed().as_secs_f64() * 1e9) as u64, Ordering::Relaxed);
     cells.iterations.fetch_add(1, Ordering::Relaxed);
     for c in 0..spec.num_centers() {
-        // Slice this center's wire buffer back into the protocol's
-        // payload layout (messages own their data, so the slices are
-        // copied exactly once, into the frame).
+        // Zero-copy submission: the wire frame is encoded once,
+        // straight from this center's pooled share slice (and the
+        // packed plaintext H buffer) — no intermediate Vec<Fp>, no
+        // per-center `to_vec`. The bytes are identical to what the
+        // Message-based codec would produce (gated by the codec props).
         let holder = pool.holder(c);
         let hessian = if spec.full_security {
-            HessianPayload::Shared(holder[d + 1..].to_vec())
+            HessianRef::Shared(&holder[d + 1..])
         } else if c == 0 {
             // Pragmatic mode: the plaintext H goes to the lead
             // center only; replication adds no protection.
-            HessianPayload::Plain(st.h_packed.clone())
+            HessianRef::Plain(&st.h_packed)
         } else {
-            HessianPayload::Absent
+            HessianRef::Absent
         };
-        ep.send_session(
-            NodeId::Center(c as u16),
-            session,
-            &Message::ShareSubmission {
-                iter,
-                institution: j,
-                hessian,
-                g_share: holder[..d].to_vec(),
-                dev_share: holder[d],
-            },
-        )?;
+        let frame =
+            encode_share_submission(session, iter, j, hessian, &holder[..d], holder[d]);
+        ep.send_frame(NodeId::Center(c as u16), session, frame)?;
     }
     Ok(())
 }
@@ -270,6 +310,7 @@ mod tests {
     use super::*;
     use crate::fixed::FixedCodec;
     use crate::linalg::Matrix;
+    use crate::protocol::HessianPayload;
     use crate::session::ShardData;
     use crate::shamir::ShamirParams;
     use crate::transport::Network;
@@ -312,6 +353,7 @@ mod tests {
             institution_id: id,
             registry,
             engine: ComputeHandle::rust(),
+            live_sessions: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -367,9 +409,17 @@ mod tests {
         let dec = FixedCodec::default().decode(rec);
         assert!((dec - stats.dev).abs() < 1e-4, "{dec} vs {}", stats.dev);
 
+        // Acknowledged close: state drops, then the ack arrives.
         coord
-            .send_session(NodeId::Institution(0), 1, &Message::Finished { iter: 0, beta: vec![] })
+            .send_session(
+                NodeId::Institution(0),
+                1,
+                &Message::SessionClose { iter: 0, beta: vec![0.0; 3] },
+            )
             .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 1);
+        assert_eq!(msg, Message::CloseAck { node: 0, is_center: false });
         coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }
@@ -499,6 +549,84 @@ mod tests {
         assert!(matches!(msg, Message::NodeError { .. }));
         // The worker is still alive and shuts down cleanly.
         coord.send(NodeId::Institution(2), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Sessions of EQUAL dimension share one pooled kernel workspace;
+    /// interleaved iterations must still produce per-session-correct
+    /// submissions, and close/abort must drive the live gauge to zero
+    /// (acking in both cases).
+    #[test]
+    fn equal_dimension_sessions_share_workspace_and_ack_teardown() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let center = net.register(NodeId::Center(0));
+        let iep = net.register(NodeId::Institution(0));
+        let registry = SessionRegistry::new();
+        // Same d=4 and same (t, w) on purpose: both the workspace pool
+        // and the Vandermonde cache serve BOTH sessions; the different
+        // shards keep the submissions distinguishable.
+        let sh1 = shard(16, 4, 21);
+        let sh2 = shard(10, 4, 22);
+        registry.insert(make_spec(1, vec![sh1.clone()], 1, 1, false));
+        registry.insert(make_spec(2, vec![sh2.clone()], 1, 1, false));
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let cfg = InstitutionWorkerConfig {
+            institution_id: 0,
+            registry,
+            engine: ComputeHandle::rust(),
+            live_sessions: gauge.clone(),
+        };
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
+        for (session, iter) in [(1u32, 0u32), (2, 0), (1, 1), (2, 1)] {
+            coord
+                .send_session(
+                    NodeId::Institution(0),
+                    session,
+                    &Message::BetaBroadcast { iter, beta: vec![0.0; 4] },
+                )
+                .unwrap();
+        }
+        // t=1 ⇒ shares ARE the encoded secrets: each session's dev
+        // share must decode to ITS OWN shard's deviance each iteration
+        // (a shared-workspace contamination would corrupt one of them).
+        let codec = FixedCodec::default();
+        let dev1 = crate::model::local_stats(&sh1.x, &sh1.y, &[0.0; 4]).dev;
+        let dev2 = crate::model::local_stats(&sh2.x, &sh2.y, &[0.0; 4]).dev;
+        for _ in 0..4 {
+            let (_, session, msg) = center.recv_session().unwrap();
+            match msg {
+                Message::ShareSubmission { dev_share, .. } => {
+                    let want = if session == 1 { dev1 } else { dev2 };
+                    let got = codec.decode(dev_share);
+                    assert!((got - want).abs() < 1e-4, "session {session}: {got} vs {want}");
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        assert_eq!(gauge.load(Ordering::Relaxed), 2, "both sessions open");
+        // Close one, abort the other: both ack, gauge reaches zero.
+        coord
+            .send_session(
+                NodeId::Institution(0),
+                1,
+                &Message::SessionClose { iter: 1, beta: vec![0.0; 4] },
+            )
+            .unwrap();
+        coord
+            .send_session(
+                NodeId::Institution(0),
+                2,
+                &Message::Abort { reason: "test".to_string() },
+            )
+            .unwrap();
+        for want in [1u32, 2] {
+            let (_, session, msg) = coord.recv_session().unwrap();
+            assert_eq!(session, want);
+            assert_eq!(msg, Message::CloseAck { node: 0, is_center: false });
+        }
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "all state freed");
+        coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }
 }

@@ -54,6 +54,14 @@ COMMON FLAGS (fit/compare):
 
 MULTIFIT FLAGS:
     --sessions <K>       concurrent study sessions                  [4]
+    --priority <p>       scheduling lane: interactive | batch | bulk
+                         (weighted-fair 4:2:1 round dispatch)    [batch]
+    --max-in-flight <n>  admission cap: sessions in flight at once;
+                         the rest queue in their priority lane
+                         (0 = unbounded)                            [0]
+    --auto-retire <n>    fold sessions finished n completions ago
+                         into the retired traffic aggregate
+                         (0 = keep all live)                        [0]
 
 CV FLAGS:
     --lambdas <grid>     comma-separated λ candidates    [0.01,0.1,1,10]
@@ -174,24 +182,38 @@ model saved to {path}");
 }
 
 fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
-    let cfg = config_from_args(args)?;
+    let mut cfg = config_from_args(args)?;
     let k = args.get_usize("sessions", 4)?;
     anyhow::ensure!(k >= 1, "--sessions must be >= 1");
+    let priority = match args.get("priority") {
+        Some(p) => privlr::engine::Priority::parse(p)?,
+        None => privlr::engine::Priority::default(),
+    };
+    cfg.max_in_flight = args.get_usize("max-in-flight", cfg.max_in_flight)?;
+    cfg.auto_retire = args.get_usize("auto-retire", cfg.auto_retire)?;
     let ds = cfg.dataset.load(cfg.seed)?;
     println!(
-        "persistent network: {} institutions, {} centers (t={}), engine={} — {k} concurrent sessions",
+        "persistent network: {} institutions, {} centers (t={}), engine={} — {k} sessions \
+         on the {} lane (admission cap: {})",
         ds.num_institutions(),
         cfg.num_centers,
         cfg.threshold,
         cfg.engine.name(),
+        priority.name(),
+        if cfg.max_in_flight == 0 {
+            "unbounded".to_string()
+        } else {
+            cfg.max_in_flight.to_string()
+        },
     );
     let t = std::time::Instant::now();
     let engine = privlr::engine::StudyEngine::for_experiment(&ds, &cfg)?;
     // Split once, share across sessions — the K studies read the same
     // Arc'd shards instead of K copies of the dataset.
     let shards = privlr::session::ShardData::split(&ds);
+    let opts = privlr::engine::SubmitOptions::with_priority(priority);
     let handles: Vec<_> = (0..k)
-        .map(|_| engine.submit_shared(&cfg, shards.clone()))
+        .map(|_| engine.submit_shared(&cfg, shards.clone(), opts))
         .collect::<anyhow::Result<_>>()?;
     println!(
         "\n{:>8} {:>7} {:>12} {:>14}",
@@ -210,6 +232,7 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
         );
         results.push(fit);
     }
+    let peak = engine.peak_in_flight();
     let traffic = engine.shutdown()?;
     let wall = t.elapsed().as_secs_f64();
     // Concurrent sessions are bit-identical to sequential runs.
@@ -218,7 +241,7 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
     }
     let session_sum: u64 = traffic.per_session.iter().map(|&(_, b)| b).sum();
     println!(
-        "\n{k} fits in {} → {:.2} fits/sec (identical β across sessions)",
+        "\n{k} fits in {} → {:.2} fits/sec (identical β across sessions; peak in-flight {peak})",
         fmt_duration(wall),
         k as f64 / wall
     );

@@ -104,9 +104,26 @@ pub enum Message {
         dev_share: Fp,
     },
 
-    /// Coordinator → everyone: converged (or aborted); final β attached
-    /// for the institutions' local use.
-    Finished { iter: u32, beta: Vec<f64> },
+    /// Coordinator → every node of one session: orderly teardown of a
+    /// finished session (lifecycle `Running → Draining`). Institutions
+    /// receive the final β for local use; every receiver frees its
+    /// per-session state and answers with [`Message::CloseAck`], which
+    /// is what makes teardown leak-detection testable — the driver
+    /// holds the session in `Draining` until all acks arrive.
+    SessionClose { iter: u32, beta: Vec<f64> },
+
+    /// Worker → coordinator: this node has freed every bit of state it
+    /// held for the frame's session (sent in response to both
+    /// [`Message::SessionClose`] and [`Message::Abort`], whether or not
+    /// the node had ever opened the session — acks are idempotent so
+    /// draining can never hang on an already-clean worker).
+    CloseAck { node: u16, is_center: bool },
+
+    /// Coordinator → every node of one session: abandon the session
+    /// (fatal error, or an admission-queue rejection). Receivers drop
+    /// state exactly as for `SessionClose` and answer with `CloseAck`;
+    /// the lifecycle terminal state is `Aborted` instead of `Closed`.
+    Abort { reason: String },
 
     /// A node hit a fatal error; the coordinator aborts the run with
     /// this context instead of deadlocking on a silent thread death.
@@ -130,7 +147,9 @@ impl Message {
             Message::ShareSubmission { .. } => "share_submission",
             Message::AggregateRequest { .. } => "aggregate_request",
             Message::AggregateResponse { .. } => "aggregate_response",
-            Message::Finished { .. } => "finished",
+            Message::SessionClose { .. } => "session_close",
+            Message::CloseAck { .. } => "close_ack",
+            Message::Abort { .. } => "abort",
             Message::NodeError { .. } => "node_error",
             Message::StudySubmitted => "study_submitted",
             Message::Shutdown => "shutdown",
@@ -277,10 +296,15 @@ const TAG_BETA: u8 = 1;
 const TAG_SUBMIT: u8 = 2;
 const TAG_AGG_REQ: u8 = 3;
 const TAG_AGG_RESP: u8 = 4;
-const TAG_FINISHED: u8 = 5;
+// Tag 5 was the pre-lifecycle `Finished` teardown frame, retired when
+// acknowledged close replaced fire-and-forget teardown; kept reserved
+// so stale captures decode to an UnknownTag error, not a wrong frame.
 const TAG_SHUTDOWN: u8 = 6;
 const TAG_NODE_ERROR: u8 = 7;
 const TAG_STUDY_SUBMITTED: u8 = 8;
+const TAG_SESSION_CLOSE: u8 = 9;
+const TAG_CLOSE_ACK: u8 = 10;
+const TAG_ABORT: u8 = 11;
 
 const HTAG_PLAIN: u8 = 0;
 const HTAG_SHARED: u8 = 1;
@@ -351,10 +375,21 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.fps(g_share);
             w.u64(dev_share.to_u64());
         }
-        Message::Finished { iter, beta } => {
-            w.u8(TAG_FINISHED);
+        Message::SessionClose { iter, beta } => {
+            w.u8(TAG_SESSION_CLOSE);
             w.u32(*iter);
             w.f64s(beta);
+        }
+        Message::CloseAck { node, is_center } => {
+            w.u8(TAG_CLOSE_ACK);
+            w.u16(*node);
+            w.u8(u8::from(*is_center));
+        }
+        Message::Abort { reason } => {
+            w.u8(TAG_ABORT);
+            let bytes = reason.as_bytes();
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(bytes);
         }
         Message::NodeError { node, is_center, error } => {
             w.u8(TAG_NODE_ERROR);
@@ -396,10 +431,21 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
             g_share: r.fps()?,
             dev_share: r.fp()?,
         },
-        TAG_FINISHED => Message::Finished {
+        TAG_SESSION_CLOSE => Message::SessionClose {
             iter: r.u32()?,
             beta: r.f64s()?,
         },
+        TAG_CLOSE_ACK => Message::CloseAck {
+            node: r.u16()?,
+            is_center: r.u8()? != 0,
+        },
+        TAG_ABORT => {
+            let len = r.u32()? as usize;
+            let bytes = r.take(len)?;
+            Message::Abort {
+                reason: String::from_utf8_lossy(bytes).into_owned(),
+            }
+        }
         TAG_SHUTDOWN => Message::Shutdown,
         TAG_STUDY_SUBMITTED => Message::StudySubmitted,
         TAG_NODE_ERROR => {
@@ -447,6 +493,68 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(SessionId, Message), CodecError> {
     let session = SessionId::from_le_bytes(bytes[..SESSION_HEADER_LEN].try_into().unwrap());
     let msg = decode(&bytes[SESSION_HEADER_LEN..])?;
     Ok((session, msg))
+}
+
+// ---- zero-copy submission frames ----------------------------------------
+
+/// Borrowed view of a submission's Hessian payload — the zero-copy
+/// counterpart of [`HessianPayload`], so the per-iteration hot path can
+/// serialize straight from pooled share buffers without materializing
+/// owned `Vec`s first.
+#[derive(Clone, Copy, Debug)]
+pub enum HessianRef<'a> {
+    Plain(&'a [f64]),
+    Shared(&'a [Fp]),
+    Absent,
+}
+
+/// Encode a complete [`Message::ShareSubmission`] wire frame (session
+/// header included) directly from borrowed payload slices.
+///
+/// Byte-for-byte identical to
+/// `encode_frame(session, &Message::ShareSubmission { .. })` over owned
+/// copies of the same payloads — gated by the codec property tests — but
+/// with exactly ONE allocation (the frame itself, sized up front) and
+/// zero intermediate copies. This is the institutions' per-center,
+/// per-iteration path: shares stream from the worker's
+/// `secure::SharePool` straight onto the wire, which removed the last
+/// `to_vec` per center per iteration.
+pub fn encode_share_submission(
+    session: SessionId,
+    iter: u32,
+    institution: u16,
+    hessian: HessianRef<'_>,
+    g_share: &[Fp],
+    dev_share: Fp,
+) -> Vec<u8> {
+    let h_bytes = match hessian {
+        HessianRef::Plain(v) => 1 + 4 + 8 * v.len(),
+        HessianRef::Shared(v) => 1 + 4 + 8 * v.len(),
+        HessianRef::Absent => 1,
+    };
+    let cap = SESSION_HEADER_LEN + 1 + 4 + 2 + h_bytes + (4 + 8 * g_share.len()) + 8;
+    let mut w = Writer {
+        buf: Vec::with_capacity(cap),
+    };
+    w.buf.extend_from_slice(&session.to_le_bytes());
+    w.u8(TAG_SUBMIT);
+    w.u32(iter);
+    w.u16(institution);
+    match hessian {
+        HessianRef::Plain(v) => {
+            w.u8(HTAG_PLAIN);
+            w.f64s(v);
+        }
+        HessianRef::Shared(v) => {
+            w.u8(HTAG_SHARED);
+            w.fps(v);
+        }
+        HessianRef::Absent => w.u8(HTAG_ABSENT),
+    }
+    w.fps(g_share);
+    w.u64(dev_share.to_u64());
+    debug_assert_eq!(w.buf.len(), cap, "frame capacity must be exact");
+    w.buf
 }
 
 // ---- symmetric-matrix packing -------------------------------------------
@@ -549,10 +657,26 @@ mod tests {
             g_share: vec![Fp::new(1)],
             dev_share: Fp::new(99),
         });
-        roundtrip(Message::Finished {
+        roundtrip(Message::SessionClose {
             iter: 8,
             beta: vec![1.0],
         });
+        roundtrip(Message::SessionClose {
+            iter: 0,
+            beta: vec![],
+        });
+        roundtrip(Message::CloseAck {
+            node: 3,
+            is_center: false,
+        });
+        roundtrip(Message::CloseAck {
+            node: 0,
+            is_center: true,
+        });
+        roundtrip(Message::Abort {
+            reason: "deadline exceeded in admission queue".to_string(),
+        });
+        roundtrip(Message::Abort { reason: String::new() });
         roundtrip(Message::NodeError {
             node: 3,
             is_center: true,
@@ -673,5 +797,57 @@ mod tests {
             Message::AggregateRequest { iter: 0, expected: 0 }.kind(),
             "aggregate_request"
         );
+        assert_eq!(
+            Message::SessionClose { iter: 0, beta: vec![] }.kind(),
+            "session_close"
+        );
+        assert_eq!(
+            Message::CloseAck { node: 0, is_center: false }.kind(),
+            "close_ack"
+        );
+        assert_eq!(Message::Abort { reason: String::new() }.kind(), "abort");
+    }
+
+    #[test]
+    fn retired_finished_tag_is_rejected() {
+        // Tag 5 carried the pre-lifecycle `Finished` frame; it must now
+        // decode to an UnknownTag error rather than some other variant.
+        assert!(matches!(decode(&[5]), Err(CodecError::UnknownTag(5))));
+    }
+
+    #[test]
+    fn zero_copy_submission_frame_matches_message_codec() {
+        let g: Vec<Fp> = (0..7).map(|k| Fp::new(1000 + k)).collect();
+        let dev = Fp::new(424242);
+        let h_plain: Vec<f64> = (0..28).map(|k| k as f64 * 0.5 - 3.0).collect();
+        let h_shared: Vec<Fp> = (0..28).map(|k| Fp::new(9_000_000 + k)).collect();
+        let cases: Vec<(HessianRef, HessianPayload)> = vec![
+            (
+                HessianRef::Plain(&h_plain),
+                HessianPayload::Plain(h_plain.clone()),
+            ),
+            (
+                HessianRef::Shared(&h_shared),
+                HessianPayload::Shared(h_shared.clone()),
+            ),
+            (HessianRef::Absent, HessianPayload::Absent),
+        ];
+        for (href, hpay) in cases {
+            let fast = encode_share_submission(0xDEAD_0001, 12, 3, href, &g, dev);
+            let slow = encode_frame(
+                0xDEAD_0001,
+                &Message::ShareSubmission {
+                    iter: 12,
+                    institution: 3,
+                    hessian: hpay,
+                    g_share: g.clone(),
+                    dev_share: dev,
+                },
+            );
+            assert_eq!(fast, slow, "zero-copy frame must be byte-identical");
+            let (session, back) = decode_frame(&fast).unwrap();
+            assert_eq!(session, 0xDEAD_0001);
+            assert!(matches!(back, Message::ShareSubmission { iter: 12, .. }));
+        }
     }
 }

@@ -307,9 +307,12 @@ impl SessionState {
         out
     }
 
-    /// Teardown messages: `Finished` to every node of this session
-    /// (institutions get the final β for local use; centers drop their
-    /// per-session state).
+    /// Teardown messages: `SessionClose` to every node of this session
+    /// (institutions get the final β for local use; centers just drop
+    /// their per-session state). Every receiver answers with a
+    /// `CloseAck`, which the engine driver counts while the session
+    /// drains — the acknowledged close is what makes worker-state leak
+    /// detection testable.
     fn finish_messages(&self) -> Vec<(NodeId, Message)> {
         let s = self.spec.num_institutions();
         let w = self.spec.num_centers();
@@ -317,7 +320,7 @@ impl SessionState {
         for j in 0..s {
             out.push((
                 NodeId::Institution(j as u16),
-                Message::Finished {
+                Message::SessionClose {
                     iter: self.iterations - 1,
                     beta: self.beta.clone(),
                 },
@@ -326,7 +329,7 @@ impl SessionState {
         for c in 0..w {
             out.push((
                 NodeId::Center(c as u16),
-                Message::Finished {
+                Message::SessionClose {
                     iter: self.iterations - 1,
                     beta: vec![],
                 },

@@ -415,6 +415,27 @@ impl Endpoint {
         self.send_session(to, CONTROL_SESSION, msg)
     }
 
+    /// Send a pre-encoded wire frame (session header already included)
+    /// — the zero-copy path for payloads serialized straight from
+    /// pooled buffers via
+    /// [`encode_share_submission`](crate::protocol::encode_share_submission).
+    /// `session` must match the frame's own header; it is passed
+    /// separately so routing and per-session traffic attribution never
+    /// re-parse the bytes.
+    pub fn send_frame(
+        &self,
+        to: NodeId,
+        session: SessionId,
+        frame: Vec<u8>,
+    ) -> Result<(), TransportError> {
+        debug_assert_eq!(
+            frame[..crate::protocol::SESSION_HEADER_LEN],
+            session.to_le_bytes(),
+            "frame header must match the routing session id"
+        );
+        self.net.route(self.id, to, session, frame)
+    }
+
     /// Block for the next frame; decodes sender, session and message.
     pub fn recv_session(&self) -> Result<(NodeId, SessionId, Message), TransportError> {
         let frame = self
@@ -730,6 +751,31 @@ mod tests {
     }
 
     #[test]
+    fn send_frame_delivers_and_counts_like_send_session() {
+        let net = Network::new();
+        let inst = net.register(NodeId::Institution(0));
+        let center = net.register(NodeId::Center(0));
+        let msg = Message::ShareSubmission {
+            iter: 1,
+            institution: 0,
+            hessian: crate::protocol::HessianPayload::Absent,
+            g_share: vec![crate::field::Fp::new(5); 3],
+            dev_share: crate::field::Fp::new(9),
+        };
+        let frame = crate::protocol::encode_frame(4, &msg);
+        let frame_len = frame.len() as u64;
+        inst.send_frame(NodeId::Center(0), 4, frame).unwrap();
+        let (from, session, back) = center.recv_session().unwrap();
+        assert_eq!(from, NodeId::Institution(0));
+        assert_eq!(session, 4);
+        assert_eq!(back, msg);
+        let snap = center.counters();
+        assert_eq!(snap.total_bytes, frame_len);
+        assert_eq!(snap.submission_bytes, frame_len);
+        assert_eq!(snap.session_bytes(4), frame_len);
+    }
+
+    #[test]
     fn recv_timeout_returns_none_when_quiet() {
         let net = Network::new();
         let a = net.register(NodeId::Center(1));
@@ -749,7 +795,7 @@ mod tests {
                     inst.send_session(
                         NodeId::Coordinator,
                         session,
-                        &Message::Finished { iter, beta: vec![] },
+                        &Message::SessionClose { iter, beta: vec![] },
                     )
                     .unwrap();
                 }
@@ -766,7 +812,7 @@ mod tests {
         let (from, session, msg) = coord.recv_session().unwrap();
         assert_eq!(from, NodeId::Institution(3));
         assert_eq!(session, 5);
-        assert_eq!(msg, Message::Finished { iter: 7, beta: vec![] });
+        assert_eq!(msg, Message::SessionClose { iter: 7, beta: vec![] });
         handle.join().unwrap();
     }
 

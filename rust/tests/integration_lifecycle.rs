@@ -1,0 +1,218 @@
+//! Control-plane lifecycle and leak-detection gates.
+//!
+//! The acknowledged-close protocol makes worker-state leaks PROVABLE:
+//! a session's handle resolves only after every institution and center
+//! has freed its per-session state and said so with a `CloseAck`. This
+//! suite gates:
+//!
+//! * the leak invariant — after K submitted/closed sessions, every
+//!   worker gauge reads zero and no spec remains distributed;
+//! * the traffic invariant under auto-retire —
+//!   `Σ live per-session + retired == global` while old completions
+//!   fold into the retired aggregate without any manual call;
+//! * admission-queue semantics — deadlines reject, priority lanes
+//!   order admissions, the cap holds.
+
+use privlr::config::ExperimentConfig;
+use privlr::data::synthetic;
+use privlr::engine::{
+    EngineOptions, Lifecycle, Priority, StudyEngine, SubmitOptions,
+};
+use std::time::Duration;
+
+fn cfg_3c() -> ExperimentConfig {
+    ExperimentConfig {
+        num_centers: 3,
+        threshold: 2,
+        max_iters: 30,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The leak gate: submit K sessions across all lanes, close them all,
+/// and PROVE the workers hold zero per-session state afterwards —
+/// `CloseAck` is sent only after the state is dropped, and `join`
+/// returns only after the last ack, so these reads are not racy.
+#[test]
+fn workers_hold_zero_state_after_close_acks() {
+    let ds = synthetic("t", 500, 4, 2, 0.0, 1.0, 901);
+    let cfg = cfg_3c();
+    let engine = StudyEngine::new(2, 3).unwrap();
+    let shards = privlr::session::ShardData::split(&ds);
+    let lanes = [
+        Priority::Interactive,
+        Priority::Batch,
+        Priority::Bulk,
+        Priority::Batch,
+        Priority::Interactive,
+        Priority::Bulk,
+    ];
+    let handles: Vec<_> = lanes
+        .iter()
+        .map(|&priority| {
+            engine
+                .submit_shared(&cfg, shards.clone(), SubmitOptions::with_priority(priority))
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Zero per-session state on every worker (centers AND institutions).
+    let live = engine.worker_live_sessions();
+    assert_eq!(live.len(), 3 + 2, "one gauge per worker");
+    assert!(
+        live.iter().all(|&n| n == 0),
+        "worker state leaked after CloseAck: {live:?}"
+    );
+    // No spec remains distributed.
+    assert_eq!(engine.live_specs(), 0, "session specs leaked");
+    // Every session reached the Closed terminal state.
+    for sid in 1..=lanes.len() as u32 {
+        assert_eq!(engine.lifecycle(sid), Some(Lifecycle::Closed), "session {sid}");
+    }
+    assert_eq!(engine.lifecycle_count(Lifecycle::Closed), lanes.len());
+    engine.shutdown().unwrap();
+}
+
+/// The traffic invariant under the auto-retire policy: with
+/// `auto_retire = N`, only the last N completions stay live in the
+/// per-session map, everything older folds into the retired aggregate
+/// automatically, and `Σ live + retired == global` holds at every
+/// observation point.
+#[test]
+fn auto_retire_preserves_traffic_invariant() {
+    let ds = synthetic("t", 400, 3, 2, 0.0, 1.0, 902);
+    let cfg = cfg_3c();
+    let keep = 3usize;
+    let total = 8usize;
+    let engine = StudyEngine::with_options(
+        2,
+        3,
+        EngineOptions { max_in_flight: 2, auto_retire: keep },
+    )
+    .unwrap();
+    let shards = privlr::session::ShardData::split(&ds);
+    let handles: Vec<_> = (0..total)
+        .map(|_| {
+            engine
+                .submit_shared(&cfg, shards.clone(), SubmitOptions::default())
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+        // Mid-run: the invariant holds at every completion.
+        let snap = engine.traffic();
+        let live: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(live + snap.retired_bytes, snap.total_bytes, "mid-run invariant");
+    }
+    let snap = engine.traffic();
+    assert_eq!(
+        snap.retired_sessions,
+        (total - keep) as u64,
+        "keep-last-{keep} over {total} completions"
+    );
+    assert_eq!(snap.per_session.len(), keep, "live attribution bounded by the window");
+    // Retired sessions also leave the lifecycle board; the window stays.
+    assert_eq!(engine.lifecycle(1), None);
+    assert_eq!(
+        engine.lifecycle(total as u32),
+        Some(Lifecycle::Closed),
+        "window sessions keep their terminal state"
+    );
+    // Workers are clean regardless of retirement bookkeeping.
+    assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+    let final_snap = engine.shutdown().unwrap();
+    let live: u64 = final_snap.per_session.iter().map(|&(_, b)| b).sum();
+    assert_eq!(live + final_snap.retired_bytes, final_snap.total_bytes);
+}
+
+/// Aborted sessions drain through the same acknowledged teardown as
+/// closed ones: the failure reaches the handle only after every worker
+/// acked, so the leak invariant covers the failure path too.
+#[test]
+fn aborted_sessions_leave_zero_worker_state() {
+    let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 903);
+    let cfg = cfg_3c();
+    let engine = StudyEngine::new(2, 3).unwrap();
+    // A singular system (all-zero column, λ=0) fails in the Newton
+    // solve mid-protocol — workers already hold state by then.
+    let mut bad = ds.clone();
+    for i in 0..bad.x.rows {
+        bad.x[(i, 2)] = 0.0;
+    }
+    let bad_cfg = ExperimentConfig { lambda: 0.0, ..cfg.clone() };
+    let h = engine.submit(&bad_cfg, &bad, SubmitOptions::interactive()).unwrap();
+    let sid = h.session_id();
+    assert!(h.join().is_err());
+    assert_eq!(engine.lifecycle(sid), Some(Lifecycle::Aborted));
+    assert!(
+        engine.worker_live_sessions().iter().all(|&n| n == 0),
+        "abort path leaked worker state"
+    );
+    assert_eq!(engine.live_specs(), 0);
+    // A healthy study afterwards is unaffected.
+    let fit = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap().join().unwrap();
+    assert!(fit.metrics.iterations > 1);
+    engine.shutdown().unwrap();
+}
+
+/// Admission control: with a cap of 1, a long-running study holds the
+/// only slot; queued studies are admitted strictly by lane priority
+/// when slots free, and an expired deadline rejects a queued study
+/// without it ever touching a worker.
+#[test]
+fn admission_respects_priority_lanes_cap_and_deadlines() {
+    // A heavyweight first study (full mode, plenty of rows) keeps the
+    // single slot busy long enough for the later submissions to queue.
+    let ds_heavy = synthetic("heavy", 6000, 6, 2, 0.0, 1.0, 904);
+    let ds_light = synthetic("light", 300, 3, 2, 0.0, 1.0, 905);
+    let heavy_cfg = ExperimentConfig {
+        mode: privlr::config::SecurityMode::Full,
+        ..cfg_3c()
+    };
+    let light_cfg = cfg_3c();
+    let engine = StudyEngine::with_options(
+        2,
+        3,
+        EngineOptions { max_in_flight: 1, auto_retire: 0 },
+    )
+    .unwrap();
+    let h_heavy = engine.submit(&heavy_cfg, &ds_heavy, SubmitOptions::bulk()).unwrap();
+    // Submitted while the slot is held: a bulk study, then an
+    // interactive one — the interactive lane must be admitted first
+    // even though it arrived later.
+    let h_bulk = engine.submit(&light_cfg, &ds_light, SubmitOptions::bulk()).unwrap();
+    let h_inter = engine
+        .submit(&light_cfg, &ds_light, SubmitOptions::interactive())
+        .unwrap();
+    // And one with an already-lapsed deadline: rejected at its
+    // admission turn, deterministically.
+    let h_late = engine
+        .submit(
+            &light_cfg,
+            &ds_light,
+            SubmitOptions::batch().deadline(Duration::ZERO),
+        )
+        .unwrap();
+    let (sid_heavy, sid_bulk, sid_inter, sid_late) = (
+        h_heavy.session_id(),
+        h_bulk.session_id(),
+        h_inter.session_id(),
+        h_late.session_id(),
+    );
+    let err = h_late.join().unwrap_err();
+    assert!(err.to_string().contains("deadline"), "got: {err:#}");
+    assert_eq!(engine.lifecycle(sid_late), Some(Lifecycle::Aborted));
+
+    h_heavy.join().unwrap();
+    h_bulk.join().unwrap();
+    h_inter.join().unwrap();
+    assert_eq!(engine.peak_in_flight(), 1, "cap must hold");
+    // Admission order: heavy first (only ready study), then the
+    // interactive latecomer ahead of the earlier bulk submission.
+    assert_eq!(engine.admission_order(), vec![sid_heavy, sid_inter, sid_bulk]);
+    assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+    engine.shutdown().unwrap();
+}

@@ -11,6 +11,7 @@ use privlr::linalg::Matrix;
 use privlr::protocol::{HessianPayload, Message, NodeId, SessionId};
 use privlr::runtime::ComputeHandle;
 use privlr::session::{SessionRegistry, SessionSpec, ShardData};
+use std::sync::atomic::AtomicUsize;
 use privlr::shamir::{reconstruct_batch, ShamirParams};
 use privlr::transport::Network;
 use privlr::util::rng::{Rng, SplitMix64};
@@ -72,6 +73,7 @@ fn manual_round_reconstructs_exact_aggregates() {
         let cfg = CenterWorkerConfig {
             center_id: c as u16,
             registry: registry.clone(),
+            live_sessions: Arc::new(AtomicUsize::new(0)),
         };
         center_joins.push(std::thread::spawn(move || run_center_worker(cfg, ep)));
     }
@@ -82,6 +84,7 @@ fn manual_round_reconstructs_exact_aggregates() {
             institution_id: j as u16,
             registry: registry.clone(),
             engine: ComputeHandle::rust(),
+            live_sessions: Arc::new(AtomicUsize::new(0)),
         };
         inst_joins.push(std::thread::spawn(move || run_institution_worker(cfg, ep)));
     }
@@ -173,7 +176,11 @@ fn center_rejects_malformed_submission() {
     let cep = net.register(NodeId::Center(0));
     let registry = SessionRegistry::new();
     registry.insert(make_spec(2, vec![shard(10, 4, 0)], 1, 1));
-    let cfg = CenterWorkerConfig { center_id: 0, registry };
+    let cfg = CenterWorkerConfig {
+        center_id: 0,
+        registry,
+        live_sessions: Arc::new(AtomicUsize::new(0)),
+    };
     let join = std::thread::spawn(move || run_center_worker(cfg, cep));
     // gradient share has d=2, session 2 expects d=4
     inst.send_session(
@@ -213,6 +220,7 @@ fn institution_rejects_non_coordinator_broadcast() {
         institution_id: 0,
         registry,
         engine: ComputeHandle::rust(),
+        live_sessions: Arc::new(AtomicUsize::new(0)),
     };
     let join = std::thread::spawn(move || run_institution_worker(cfg, iep));
     rogue
@@ -239,7 +247,11 @@ fn center_withholds_partial_aggregates() {
     let cep = net.register(NodeId::Center(0));
     let registry = SessionRegistry::new();
     registry.insert(make_spec(6, vec![shard(5, 1, 0), shard(5, 1, 1)], 1, 1));
-    let cfg = CenterWorkerConfig { center_id: 0, registry };
+    let cfg = CenterWorkerConfig {
+        center_id: 0,
+        registry,
+        live_sessions: Arc::new(AtomicUsize::new(0)),
+    };
     let join = std::thread::spawn(move || run_center_worker(cfg, cep));
 
     coord
@@ -302,12 +314,13 @@ fn traffic_accounting_is_complete() {
         tr.submission_bytes + tr.central_bytes + tr.broadcast_bytes,
         "all links must be classified"
     );
-    // message count: per iter: S broadcasts + S·w submissions + w
-    // requests + w responses; plus teardown (S+w) finished frames for
-    // the session and (S+w) control-session shutdowns.
+    // message count: 1 StudySubmitted nudge; per iter: S broadcasts +
+    // S·w submissions + w requests + w responses; acknowledged teardown
+    // of the session: (S+w) SessionClose + (S+w) CloseAck; engine
+    // shutdown: 1 client Shutdown + (S+w) worker shutdowns.
     let (s, w) = (3u64, 5u64);
     let iters = fit.metrics.iterations as u64;
-    let expected = iters * (s + s * w + w + w) + (s + w) + (s + w);
+    let expected = iters * (s + s * w + w + w) + 3 * (s + w) + 2;
     assert_eq!(tr.total_messages, expected);
     // per-session totals (study session + control session) sum exactly
     let session_sum: u64 = tr.per_session.iter().map(|&(_, b)| b).sum();

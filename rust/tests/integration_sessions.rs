@@ -8,7 +8,7 @@
 use privlr::config::{ExperimentConfig, SecurityMode};
 use privlr::coordinator::{secure_fit, SecureFitResult};
 use privlr::data::{synthetic, Dataset};
-use privlr::engine::StudyEngine;
+use privlr::engine::{EngineOptions, Lifecycle, Priority, StudyEngine, SubmitOptions};
 
 /// Five heterogeneous studies sharing one topology (3 institutions,
 /// 5 centers, t=3): different data, λ, tolerance and security modes —
@@ -72,7 +72,7 @@ fn concurrent_sessions_match_sequential_bitwise() {
     let seq_engine = StudyEngine::new(3, 5).unwrap();
     let sequential: Vec<SecureFitResult> = studies
         .iter()
-        .map(|(ds, cfg)| seq_engine.submit(cfg, ds).unwrap().join().unwrap())
+        .map(|(ds, cfg)| seq_engine.submit(cfg, ds, SubmitOptions::default()).unwrap().join().unwrap())
         .collect();
     seq_engine.shutdown().unwrap();
 
@@ -80,7 +80,7 @@ fn concurrent_sessions_match_sequential_bitwise() {
     let con_engine = StudyEngine::new(3, 5).unwrap();
     let handles: Vec<_> = studies
         .iter()
-        .map(|(ds, cfg)| con_engine.submit(cfg, ds).unwrap())
+        .map(|(ds, cfg)| con_engine.submit(cfg, ds, SubmitOptions::default()).unwrap())
         .collect();
     // Session ids match the sequential run (1..=K in submission order).
     for (i, h) in handles.iter().enumerate() {
@@ -135,9 +135,9 @@ fn engine_sessions_match_the_single_fit_compat_path() {
     let engine = StudyEngine::new(3, 5).unwrap();
     // Burn a session id so the engine session's share streams differ
     // from the compat run's — the fit must not care.
-    let warmup = engine.submit(cfg, ds).unwrap();
+    let warmup = engine.submit(cfg, ds, SubmitOptions::default()).unwrap();
     warmup.join().unwrap();
-    let fit = engine.submit(cfg, ds).unwrap().join().unwrap();
+    let fit = engine.submit(cfg, ds, SubmitOptions::default()).unwrap().join().unwrap();
     engine.shutdown().unwrap();
     assert_bit_identical(&compat, &fit, "compat-vs-engine");
 }
@@ -158,7 +158,7 @@ fn many_sessions_reuse_one_network_cheaply() {
     // Zero-copy path: all 8 sessions share one set of Arc'd shards.
     let shards = privlr::session::ShardData::split(&ds);
     let handles: Vec<_> = (0..8)
-        .map(|_| engine.submit_shared(&cfg, shards.clone()).unwrap())
+        .map(|_| engine.submit_shared(&cfg, shards.clone(), SubmitOptions::default()).unwrap())
         .collect();
     let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
     let global = engine.traffic();
@@ -171,4 +171,79 @@ fn many_sessions_reuse_one_network_cheaply() {
     assert_eq!(global.per_session.len(), 8);
     let sum: u64 = global.per_session.iter().map(|&(_, b)| b).sum();
     assert_eq!(sum, global.total_bytes);
+}
+
+/// Acceptance gate of the control-plane refactor: the concurrent ≡
+/// sequential bit-identity guarantee survives priority scheduling AND
+/// an admission cap of `max_in_flight < K` — the scheduler may move
+/// wall-clock interleaving but never per-session numerics.
+#[test]
+fn capped_priority_scheduling_preserves_bit_identity() {
+    let studies = studies();
+    let k = studies.len();
+    assert!(k >= 4, "acceptance requires K >= 4 sessions");
+
+    // Sequential baseline: one persistent engine, one session at a time.
+    let seq_engine = StudyEngine::new(3, 5).unwrap();
+    let sequential: Vec<SecureFitResult> = studies
+        .iter()
+        .map(|(ds, cfg)| {
+            seq_engine
+                .submit(cfg, ds, SubmitOptions::default())
+                .unwrap()
+                .join()
+                .unwrap()
+        })
+        .collect();
+    seq_engine.shutdown().unwrap();
+
+    // Capped + prioritized: all K submitted at once, only 2 admitted at
+    // a time, with priorities cycling across all three lanes.
+    let lanes = [
+        Priority::Bulk,
+        Priority::Interactive,
+        Priority::Batch,
+        Priority::Interactive,
+        Priority::Bulk,
+    ];
+    let capped_engine = StudyEngine::with_options(
+        3,
+        5,
+        EngineOptions { max_in_flight: 2, auto_retire: 0 },
+    )
+    .unwrap();
+    let handles: Vec<_> = studies
+        .iter()
+        .zip(lanes)
+        .map(|((ds, cfg), priority)| {
+            capped_engine
+                .submit(cfg, ds, SubmitOptions::with_priority(priority))
+                .unwrap()
+        })
+        .collect();
+    let capped: Vec<SecureFitResult> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // The cap actually bit: never more than 2 in flight.
+    assert!(capped_engine.peak_in_flight() <= 2, "admission cap violated");
+    assert!(capped_engine.peak_in_flight() >= 1);
+    // Every session walked the full lifecycle to Closed and the workers
+    // hold zero per-session state.
+    for i in 0..k {
+        assert_eq!(
+            capped_engine.lifecycle((i + 1) as u32),
+            Some(Lifecycle::Closed),
+            "study {i}"
+        );
+    }
+    assert!(capped_engine.worker_live_sessions().iter().all(|&n| n == 0));
+    assert_eq!(capped_engine.live_specs(), 0);
+    capped_engine.shutdown().unwrap();
+
+    for (i, (seq, cap)) in sequential.iter().zip(&capped).enumerate() {
+        assert_bit_identical(seq, cap, &format!("capped study {i}"));
+        assert_eq!(
+            seq.metrics.traffic.total_bytes, cap.metrics.traffic.total_bytes,
+            "study {i}: per-session byte totals under the cap"
+        );
+    }
 }

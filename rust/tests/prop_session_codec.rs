@@ -5,8 +5,8 @@
 
 use privlr::field::Fp;
 use privlr::protocol::{
-    decode, decode_frame, encode, encode_frame, HessianPayload, Message, SessionId,
-    CONTROL_SESSION, SESSION_HEADER_LEN,
+    decode, decode_frame, encode, encode_frame, encode_share_submission, HessianPayload,
+    HessianRef, Message, SessionId, CONTROL_SESSION, SESSION_HEADER_LEN,
 };
 use privlr::util::rng::{Rng, SplitMix64};
 
@@ -57,15 +57,30 @@ fn all_variants(rng: &mut SplitMix64) -> Vec<Message> {
             g_share: fps(rng, d),
             dev_share: Fp::new(99),
         },
-        Message::Finished {
+        Message::SessionClose {
             iter: 6,
             beta: f64s(rng, d),
+        },
+        Message::SessionClose {
+            iter: 7,
+            beta: vec![],
+        },
+        Message::CloseAck {
+            node: rng.next_u64() as u16,
+            is_center: rng.next_bernoulli(0.5),
+        },
+        Message::Abort {
+            reason: format!("abort-{}", rng.next_u64()),
+        },
+        Message::Abort {
+            reason: String::new(),
         },
         Message::NodeError {
             node: rng.next_u64() as u16,
             is_center: rng.next_bernoulli(0.5),
             error: format!("err-{}", rng.next_u64()),
         },
+        Message::StudySubmitted,
         Message::Shutdown,
     ]
 }
@@ -128,6 +143,52 @@ fn trailing_bytes_are_rejected() {
         let mut frame = encode_frame(1, &msg);
         frame.push(0);
         assert!(decode_frame(&frame).is_err(), "{}", msg.kind());
+    }
+}
+
+/// The zero-copy submission encoder must be byte-identical to the
+/// Message-based codec for every payload shape and session id class —
+/// this equality is what lets the institution hot path skip the owned
+/// `Vec` copies without any risk to decoding or traffic accounting.
+#[test]
+fn zero_copy_submission_encoder_matches_message_codec() {
+    let mut rng = SplitMix64::new(4242);
+    for _ in 0..16 {
+        let d = 1 + (rng.next_u64() % 16) as usize;
+        let packed = d * (d + 1) / 2;
+        let g: Vec<Fp> = (0..d).map(|_| Fp::new(rng.next_u64())).collect();
+        let dev = Fp::new(rng.next_u64());
+        let iter = rng.next_u64() as u32;
+        let institution = rng.next_u64() as u16;
+        let h_plain: Vec<f64> = (0..packed).map(|_| rng.next_gaussian()).collect();
+        let h_shared: Vec<Fp> = (0..packed).map(|_| Fp::new(rng.next_u64())).collect();
+        for session in SESSIONS {
+            let cases: Vec<(HessianRef, HessianPayload)> = vec![
+                (
+                    HessianRef::Plain(&h_plain),
+                    HessianPayload::Plain(h_plain.clone()),
+                ),
+                (
+                    HessianRef::Shared(&h_shared),
+                    HessianPayload::Shared(h_shared.clone()),
+                ),
+                (HessianRef::Absent, HessianPayload::Absent),
+            ];
+            for (href, hpay) in cases {
+                let fast = encode_share_submission(session, iter, institution, href, &g, dev);
+                let slow = encode_frame(
+                    session,
+                    &Message::ShareSubmission {
+                        iter,
+                        institution,
+                        hessian: hpay,
+                        g_share: g.clone(),
+                        dev_share: dev,
+                    },
+                );
+                assert_eq!(fast, slow, "session {session} d={d}");
+            }
+        }
     }
 }
 

@@ -139,7 +139,7 @@ fn prop_protocol_codec_roundtrip() {
                 iter,
                 expected: rng.next_below(50) as u16,
             },
-            _ => Message::Finished {
+            _ => Message::SessionClose {
                 iter,
                 beta: (0..d).map(|_| rng.next_gaussian()).collect(),
             },

@@ -26,11 +26,11 @@ cargo test -q
 echo "== kernel equivalence gate (blocked SYRK / Vandermonde sharing) =="
 cargo test -q --test prop_kernels
 
-echo "== session engine gate (concurrent == sequential, bitwise; capped + prioritized) =="
+echo "== session engine gate (concurrent == sequential, bitwise; capped + prioritized + sharded) =="
 cargo test -q --test integration_sessions
 cargo test -q --test prop_session_codec
 
-echo "== control plane gate (lifecycle machine, CloseAck leak detection, auto-retire invariant) =="
+echo "== control plane gate (lifecycle machine, CloseAck leak detection, auto-retire invariant, backpressure) =="
 cargo test -q --test integration_lifecycle
 
 echo "== secure pipeline gate (fused share thread-invariance + zero-alloc) =="
@@ -53,6 +53,9 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
     echo "SKIP: clippy component not installed"
 fi
+
+echo "== docs: cargo doc --no-deps (rustdoc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 if [ "${PRIVLR_CI_BENCH:-0}" = "1" ]; then
     echo "== fast benches (refresh BENCH_kernels.json) =="

@@ -1,15 +1,20 @@
 //! Aggregate throughput of the session-multiplexed study engine:
 //! fits/sec at S=4 institutions for K ∈ {1, 4, 16} concurrent
-//! sessions, at the paper's small (d=10) and wide (d=85) dimensions.
+//! sessions, at the paper's small (d=10) and wide (d=85) dimensions —
+//! plus a `shard_scaling` sweep of the sharded control plane
+//! (driver_shards ∈ {1, 2, 4} at K=16).
 //!
 //!     cargo bench --bench session_throughput
 //!
-//! One persistent engine per (d, K) cell; each sample submits K
-//! identical studies and joins them all, so the measured time is the
-//! makespan of K interleaved fits on one network. The `speedup_vs_k1`
-//! column is the throughput ratio against the K=1 cell of the same d —
-//! how much the multiplexing amortizes network setup and fills compute
-//! gaps (centers idle while institutions crunch, and vice versa).
+//! One persistent engine per cell; each sample submits K identical
+//! studies and joins them all, so the measured time is the makespan of
+//! K interleaved fits on one network. The `speedup_vs_k1` column is
+//! the throughput ratio against the K=1 cell of the same d — how much
+//! the multiplexing amortizes network setup and fills compute gaps
+//! (centers idle while institutions crunch, and vice versa). The
+//! shard sweep's `speedup_vs_1shard` isolates what parallelizing the
+//! coordinator itself buys once K is high enough for driver dispatch
+//! to contend.
 
 use privlr::bench::{
     default_report_path, print_kv_table, run_bench, summary_json, update_json_report, BenchConfig,
@@ -17,7 +22,7 @@ use privlr::bench::{
 };
 use privlr::config::ExperimentConfig;
 use privlr::data::synthetic;
-use privlr::engine::{StudyEngine, SubmitOptions};
+use privlr::engine::{EngineOptions, StudyEngine, SubmitOptions};
 use privlr::util::json::{self, Json};
 
 fn main() {
@@ -98,5 +103,85 @@ fn main() {
         eprintln!("warning: could not write {}: {e}", path.display());
     } else {
         println!("\nreport section 'session_throughput' written to {}", path.display());
+    }
+
+    // ---- shard_scaling: the sharded control plane at K=16 ----------
+    // Fixed workload (d=10, the coordination-bound shape: small local
+    // phase, many rounds), driver_shards swept over {1, 2, 4}. Results
+    // are bit-identical at every shard count (gated by
+    // tests/integration_sessions.rs); this sweep measures only the
+    // wall-clock effect of parallelizing coordination.
+    let k = 16usize;
+    let d = 10usize;
+    let ds = synthetic("bench-shards", n, d, s, 0.0, 1.0, 42);
+    let shards = privlr::session::ShardData::split(&ds);
+    let cfg = ExperimentConfig {
+        max_iters: 30,
+        ..ExperimentConfig::default()
+    };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut one_shard_fits_per_sec = f64::NAN;
+    for driver_shards in [1usize, 2, 4] {
+        let engine = StudyEngine::with_options(
+            s,
+            cfg.num_centers,
+            EngineOptions { driver_shards, ..Default::default() },
+        )
+        .expect("engine");
+        let name = format!("multifit n={n} d={d} S={s} K={k} shards={driver_shards}");
+        let summary: Summary = run_bench(&name, bcfg, || {
+            let handles: Vec<_> = (0..k)
+                .map(|_| {
+                    engine
+                        .submit_shared(&cfg, shards.clone(), SubmitOptions::default())
+                        .expect("submit")
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("join").metrics.iterations)
+                .sum::<u32>()
+        });
+        engine.shutdown().expect("shutdown");
+        let fits_per_sec = k as f64 / summary.mean_s;
+        if driver_shards == 1 {
+            one_shard_fits_per_sec = fits_per_sec;
+        }
+        let speedup = fits_per_sec / one_shard_fits_per_sec;
+        rows.push(vec![
+            format!("shards={driver_shards}"),
+            format!("K={k}"),
+            format!("{:.3}s", summary.mean_s),
+            format!("{fits_per_sec:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut entry = summary_json(&summary);
+        if let Json::Obj(map) = &mut entry {
+            map.insert("driver_shards".into(), json::num(driver_shards as f64));
+            map.insert("concurrent_sessions".into(), json::num(k as f64));
+            map.insert("d".into(), json::num(d as f64));
+            map.insert("institutions".into(), json::num(s as f64));
+            map.insert("fits_per_sec".into(), json::num(fits_per_sec));
+            map.insert("speedup_vs_1shard".into(), json::num(speedup));
+        }
+        entries.push(entry);
+    }
+    print_kv_table(
+        "sharded driver scaling (S=4, d=10, K=16)",
+        &["shards", "sessions", "makespan", "fits/sec", "vs 1 shard"],
+        &rows,
+    );
+    let report = json::obj(vec![
+        (
+            "note",
+            json::s("fits/sec of K=16 concurrent sessions with coordination sharded across driver_shards ∈ {1,2,4} (same workload, bit-identical results; measures coordinator parallelism only)"),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    if let Err(e) = update_json_report(&path, "shard_scaling", report) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("report section 'shard_scaling' written to {}", path.display());
     }
 }

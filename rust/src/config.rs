@@ -116,6 +116,16 @@ pub struct ExperimentConfig {
     /// completed sessions' traffic attribution live and fold older
     /// ones into the retired aggregate (0 = manual retirement only).
     pub auto_retire: usize,
+    /// Study-engine driver shards: coordination fans out across this
+    /// many driver threads, sessions assigned by a stable hash of the
+    /// session id (0 or 1 = the classic single driver; results are
+    /// bit-identical at every count). See `engine::EngineOptions`.
+    pub driver_shards: usize,
+    /// Bounded-lane backpressure: max studies queued per
+    /// (driver shard, priority lane); a submission into a full lane
+    /// blocks, rejects, or sheds per its `engine::SubmitPolicy`
+    /// (0 = unbounded lanes).
+    pub lane_capacity: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -141,6 +151,8 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             max_in_flight: 0,
             auto_retire: 0,
+            driver_shards: 1,
+            lane_capacity: 0,
         }
     }
 }
@@ -186,6 +198,8 @@ impl ExperimentConfig {
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("max_in_flight", json::num(self.max_in_flight as f64)),
             ("auto_retire", json::num(self.auto_retire as f64)),
+            ("driver_shards", json::num(self.driver_shards as f64)),
+            ("lane_capacity", json::num(self.lane_capacity as f64)),
         ])
     }
 
@@ -260,6 +274,12 @@ impl ExperimentConfig {
         if let Some(a) = v.get("auto_retire").as_usize() {
             cfg.auto_retire = a;
         }
+        if let Some(s) = v.get("driver_shards").as_usize() {
+            cfg.driver_shards = s;
+        }
+        if let Some(c) = v.get("lane_capacity").as_usize() {
+            cfg.lane_capacity = c;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -289,6 +309,11 @@ impl ExperimentConfig {
             self.frac_bits >= 8 && self.frac_bits < 48,
             "frac_bits out of range"
         );
+        anyhow::ensure!(
+            self.driver_shards <= 1024,
+            "driver_shards {} out of range (max 1024)",
+            self.driver_shards
+        );
         Ok(())
     }
 }
@@ -315,15 +340,29 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         assert_eq!(cfg.max_in_flight, 0, "unbounded admission by default");
         assert_eq!(cfg.auto_retire, 0, "manual retirement by default");
+        assert_eq!(cfg.driver_shards, 1, "single driver by default");
+        assert_eq!(cfg.lane_capacity, 0, "unbounded lanes by default");
         cfg.max_in_flight = 8;
         cfg.auto_retire = 64;
+        cfg.driver_shards = 4;
+        cfg.lane_capacity = 16;
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.max_in_flight, 8);
         assert_eq!(back.auto_retire, 64);
-        let v = Json::parse(r#"{"max_in_flight": 3, "auto_retire": 10}"#).unwrap();
+        assert_eq!(back.driver_shards, 4);
+        assert_eq!(back.lane_capacity, 16);
+        let v = Json::parse(
+            r#"{"max_in_flight": 3, "auto_retire": 10, "driver_shards": 2, "lane_capacity": 5}"#,
+        )
+        .unwrap();
         let cfg = ExperimentConfig::from_json(&v).unwrap();
         assert_eq!(cfg.max_in_flight, 3);
         assert_eq!(cfg.auto_retire, 10);
+        assert_eq!(cfg.driver_shards, 2);
+        assert_eq!(cfg.lane_capacity, 5);
+        // Out-of-range shard counts are rejected at validation.
+        let v = Json::parse(r#"{"driver_shards": 4096}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
     }
 
     #[test]

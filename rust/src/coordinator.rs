@@ -28,8 +28,17 @@ use std::time::Instant;
 /// Metrics of one secure fit (feeds Table 1 / Figs 2–4).
 #[derive(Clone, Debug)]
 pub struct RunMetrics {
-    /// Wall-clock total (paper: "Total runtime").
+    /// Wall-clock total (paper: "Total runtime"). Starts at ADMISSION
+    /// — time spent queued in a priority lane is reported separately
+    /// as [`RunMetrics::queue_secs`], so a capped engine's fit times
+    /// stay comparable to uncapped runs.
     pub total_secs: f64,
+    /// How long the study sat `Queued` between submission and its
+    /// driver shard admitting it (admitted-at − queued-at). 0 ≈
+    /// immediate admission (no cap, free slot). The same value is
+    /// readable per session while the engine lives via
+    /// `StudyEngine::queue_wait`.
+    pub queue_secs: f64,
     /// Secure-computation time: center busy time (max over centers,
     /// they run in parallel) + coordinator-side reconstruction/Newton.
     pub central_secs: f64,

@@ -178,9 +178,13 @@ pub fn secure_cross_validate(
         // bulk-lane traffic, so a sweep never crowds out interactive
         // studies sharing the engine (and any configured admission cap
         // queues the folds instead of oversubscribing the workers).
+        // Explicitly Block on bounded lanes: every fold fit is load-
+        // bearing for the CV average, so under backpressure the sweep
+        // must wait for lane space, never shed or reject a fold.
+        let opts = SubmitOptions::bulk().policy(crate::engine::SubmitPolicy::Block);
         let mut handles = Vec::with_capacity(k);
         for (f, shards) in fold_shards.iter().enumerate() {
-            handles.push((f, engine.submit_shared(&cfg, shards.clone(), SubmitOptions::bulk())?));
+            handles.push((f, engine.submit_shared(&cfg, shards.clone(), opts)?));
         }
         for (f, handle) in handles {
             let fit = handle.join()?;
@@ -369,6 +373,28 @@ mod tests {
         assert_eq!(free.best, capped.best);
         assert_eq!(free.cv_deviance, capped.cv_deviance, "bitwise CV deviances");
         assert_eq!(free.beta, capped.beta, "bitwise final β");
+    }
+
+    #[test]
+    fn cv_on_sharded_backpressured_engine_is_bit_identical() {
+        // Fold fits survive the full control plane at once: 4 driver
+        // shards, an admission cap of 2, and single-slot bulk lanes
+        // (so the λ-grid submissions actually block for space). The CV
+        // outcome must not move by a bit.
+        let ds = synthetic("t", 240, 3, 3, 0.0, 1.0, 13);
+        let lambdas = [0.1, 1.0];
+        let cfg = base_cfg();
+        let free = secure_cross_validate(&ds, &cfg, &lambdas, 3).unwrap();
+        let hard_cfg = ExperimentConfig {
+            driver_shards: 4,
+            max_in_flight: 2,
+            lane_capacity: 1,
+            ..cfg
+        };
+        let hard = secure_cross_validate(&ds, &hard_cfg, &lambdas, 3).unwrap();
+        assert_eq!(free.best, hard.best);
+        assert_eq!(free.cv_deviance, hard.cv_deviance, "bitwise CV deviances");
+        assert_eq!(free.beta, hard.beta, "bitwise final β");
     }
 
     #[test]

@@ -43,16 +43,54 @@
 //!   completions ago into the network's retired-traffic aggregate so
 //!   unattended deployments never grow per-session bookkeeping.
 //!
+//! # Sharded drivers
+//!
+//! Coordination itself shards: [`EngineOptions::driver_shards`] = N
+//! runs N independent driver threads, each owning a disjoint subset of
+//! sessions assigned by the stable hash
+//! [`protocol::shard_of`](crate::protocol::shard_of) of the session id.
+//! The transport registers the coordinator **sharded**
+//! ([`Network::register_sharded`](crate::transport::Network::register_sharded)),
+//! so workers keep addressing plain `NodeId::Coordinator` while every
+//! response, ack, and submission nudge lands in the owning shard's
+//! mailbox — a session's whole life is served by one driver, which is
+//! why sharding cannot move numerics. Each shard runs the full control
+//! plane over its own priority lanes (admission sweep, weighted-fair
+//! round dispatch, lifecycle accounting, per-shard auto-retire
+//! window); only the `max_in_flight` cap is global, enforced by one
+//! shared admission controller. A shard that frees a slot wakes
+//! peers that have studies queued with a
+//! [`Message::AdmissionWake`](crate::protocol::Message::AdmissionWake)
+//! frame, so capacity never idles while another shard has work. The
+//! default (`driver_shards` ≤ 1) is exactly the pre-sharding single
+//! driver.
+//!
+//! # Backpressure
+//!
+//! Lanes are bounded: with [`EngineOptions::lane_capacity`] = C > 0,
+//! at most C studies may sit queued per (shard, lane). A submission
+//! into a full lane is resolved by its [`SubmitPolicy`]:
+//! [`SubmitPolicy::Block`] (default) parks the submitting thread until
+//! the driver drains the lane (or the study's own admission deadline
+//! lapses), [`SubmitPolicy::Reject`] fails fast with
+//! [`SubmitError::LaneFull`], and [`SubmitPolicy::ShedOldestBulk`]
+//! evicts the oldest queued bulk study (newest-wins ring for sweep
+//! traffic; never sheds interactive/batch work). Capacity bounds the
+//! QUEUE, not concurrency — `max_in_flight` still governs how many
+//! admitted sessions run at once.
+//!
 //! Determinism: results of concurrent fits are **bit-identical** to
-//! the same fits run sequentially, under ANY priority assignment and
-//! admission cap — scheduling moves wall-clock interleaving, never
-//! per-session numerics. Share-domain aggregation is exact field
-//! arithmetic (order-free); the only order-sensitive f64 fold — the
-//! pragmatic-mode plaintext Hessian — is buffered and summed in
-//! institution-id order at the centers; and all per-session randomness
-//! derives from `(master seed, session id)` splitmix forks, never from
-//! shared mutable state. The integration suite asserts the guarantee
-//! end to end, capped and uncapped.
+//! the same fits run sequentially, under ANY priority assignment,
+//! admission cap, shard count, and backpressure policy — scheduling
+//! moves wall-clock interleaving, never per-session numerics.
+//! Share-domain aggregation is exact field arithmetic (order-free);
+//! the only order-sensitive f64 fold — the pragmatic-mode plaintext
+//! Hessian — is buffered and summed in institution-id order at the
+//! centers; and all per-session randomness derives from
+//! `(master seed, session id)` splitmix forks, never from shared
+//! mutable state. The integration suite asserts the guarantee end to
+//! end: uncapped, capped + prioritized, and sharded (N ∈ {1, 2, 4})
+//! with bounded lanes.
 
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::coordinator::{RunMetrics, SecureFitResult};
@@ -68,7 +106,7 @@ use crate::transport::{Endpoint, Injector, Network, TrafficSnapshot};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Scheduling class of one study session. Lanes are served
@@ -109,6 +147,8 @@ impl Priority {
         }
     }
 
+    /// Parse a CLI/config lane name (`interactive` | `batch` | `bulk`,
+    /// case-insensitive).
     pub fn parse(s: &str) -> anyhow::Result<Priority> {
         match s.to_ascii_lowercase().as_str() {
             "interactive" => Ok(Priority::Interactive),
@@ -118,6 +158,7 @@ impl Priority {
         }
     }
 
+    /// Lane name as accepted by [`Priority::parse`].
     pub fn name(self) -> &'static str {
         match self {
             Priority::Interactive => "interactive",
@@ -127,6 +168,94 @@ impl Priority {
     }
 }
 
+/// What `submit` does when the study's priority lane is already at
+/// [`EngineOptions::lane_capacity`] queued studies (irrelevant while
+/// the capacity is 0 = unbounded).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SubmitPolicy {
+    /// Backpressure: the submitting thread waits until the driver
+    /// drains the lane below capacity, then queues normally. A study
+    /// with an admission deadline stops waiting when the deadline
+    /// lapses and `submit` returns the deadline error directly.
+    #[default]
+    Block,
+    /// Fail fast: `submit` returns [`SubmitError::LaneFull`]
+    /// immediately and nothing is queued. The deterministic choice for
+    /// callers with their own retry/shed logic.
+    Reject,
+    /// Newest-wins ring for sweep traffic: a **bulk** submission into
+    /// a full bulk lane evicts the oldest queued bulk study, whose
+    /// handle resolves with [`SubmitError::Shed`]. Interactive/batch
+    /// work is never silently dropped — a non-bulk submission under
+    /// this policy falls back to [`SubmitPolicy::Reject`] when its
+    /// lane is full.
+    ShedOldestBulk,
+}
+
+impl SubmitPolicy {
+    /// Parse a CLI/config policy name (`block` | `reject` | `shed`,
+    /// case-insensitive).
+    pub fn parse(s: &str) -> anyhow::Result<SubmitPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Ok(SubmitPolicy::Block),
+            "reject" => Ok(SubmitPolicy::Reject),
+            "shed" | "shed-oldest-bulk" => Ok(SubmitPolicy::ShedOldestBulk),
+            other => anyhow::bail!("unknown submit policy '{other}' (block|reject|shed)"),
+        }
+    }
+
+    /// Policy name as accepted by [`SubmitPolicy::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            SubmitPolicy::Block => "block",
+            SubmitPolicy::Reject => "reject",
+            SubmitPolicy::ShedOldestBulk => "shed",
+        }
+    }
+}
+
+/// Typed backpressure errors of the bounded-lane submit path. Returned
+/// (inside `anyhow::Error`) by `submit`/`submit_shared` for
+/// [`SubmitError::LaneFull`], and delivered through an evicted study's
+/// [`StudyHandle::join`] for [`SubmitError::Shed`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The study's priority lane already holds `capacity` queued
+    /// studies and the submit policy does not wait.
+    LaneFull {
+        /// Lane the submission was bound for.
+        priority: Priority,
+        /// The configured [`EngineOptions::lane_capacity`].
+        capacity: usize,
+        /// Driver shard whose lane was full.
+        shard: usize,
+    },
+    /// The study was evicted from a full bulk lane by a newer
+    /// [`SubmitPolicy::ShedOldestBulk`] submission.
+    Shed {
+        /// The evicted study's session id.
+        session: SessionId,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::LaneFull { priority, capacity, shard } => write!(
+                f,
+                "{} lane of driver shard {shard} is full ({capacity} studies queued)",
+                priority.name()
+            ),
+            SubmitError::Shed { session } => write!(
+                f,
+                "session {session} was shed from the bulk lane by a newer submission"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Per-study submission options.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SubmitOptions {
@@ -135,26 +264,37 @@ pub struct SubmitOptions {
     /// Admission deadline measured from submission: a study still
     /// queued when the controller next considers it past this bound is
     /// rejected (`Aborted`, handle receives an error) instead of
-    /// occupying the lane forever. `None` = wait indefinitely.
+    /// occupying the lane forever. `None` = wait indefinitely. Under
+    /// [`SubmitPolicy::Block`] the deadline also bounds how long the
+    /// submitting thread may wait for lane space.
     pub deadline: Option<Duration>,
+    /// Full-lane behavior under bounded lanes; defaults to
+    /// [`SubmitPolicy::Block`]. Ignored while
+    /// [`EngineOptions::lane_capacity`] is 0 (unbounded).
+    pub policy: SubmitPolicy,
 }
 
 impl SubmitOptions {
+    /// Options for `priority` with no deadline and the default
+    /// blocking backpressure policy.
     pub fn with_priority(priority: Priority) -> SubmitOptions {
         SubmitOptions {
             priority,
-            deadline: None,
+            ..SubmitOptions::default()
         }
     }
 
+    /// Shorthand for [`Priority::Interactive`] options.
     pub fn interactive() -> SubmitOptions {
         SubmitOptions::with_priority(Priority::Interactive)
     }
 
+    /// Shorthand for [`Priority::Batch`] options.
     pub fn batch() -> SubmitOptions {
         SubmitOptions::with_priority(Priority::Batch)
     }
 
+    /// Shorthand for [`Priority::Bulk`] options.
     pub fn bulk() -> SubmitOptions {
         SubmitOptions::with_priority(Priority::Bulk)
     }
@@ -164,37 +304,64 @@ impl SubmitOptions {
         self.deadline = Some(d);
         self
     }
+
+    /// Builder-style full-lane policy.
+    pub fn policy(mut self, p: SubmitPolicy) -> SubmitOptions {
+        self.policy = p;
+        self
+    }
 }
 
 /// Engine-level control-plane knobs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineOptions {
     /// Admission cap: how many sessions may be past `Queued` and not
-    /// yet terminal at once. 0 = unbounded (benchmark behavior).
-    /// Bounding this bounds worker memory: per-session state exists
-    /// only for admitted sessions.
+    /// yet terminal at once — GLOBAL across all driver shards.
+    /// 0 = unbounded (benchmark behavior). Bounding this bounds worker
+    /// memory: per-session state exists only for admitted sessions.
     pub max_in_flight: usize,
     /// Auto-retire policy: keep the most recent N terminal sessions'
     /// traffic attribution live and fold anything older into the
     /// network's retired aggregate (see
     /// [`TrafficCounters::retire_session`](crate::transport::TrafficCounters::retire_session)).
     /// 0 = disabled (manual [`StudyEngine::retire_session`] only).
+    /// With multiple driver shards the window is per shard, so up to
+    /// `driver_shards × N` completions stay live.
     pub auto_retire: usize,
+    /// Number of driver threads coordination is sharded across;
+    /// 0 or 1 = the classic single driver. Sessions are assigned to
+    /// shards by the stable hash
+    /// [`protocol::shard_of`](crate::protocol::shard_of) of their id,
+    /// and results are bit-identical at every shard count (gated).
+    pub driver_shards: usize,
+    /// Bounded-lane backpressure: at most this many studies may sit
+    /// queued per (driver shard, priority lane); a submission into a
+    /// full lane is resolved by its [`SubmitPolicy`].
+    /// 0 = unbounded lanes (`submit` never blocks or rejects on
+    /// queue depth — the pre-backpressure behavior).
+    pub lane_capacity: usize,
 }
 
 /// Lifecycle states of one session (see the module docs for the
 /// transition diagram).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Lifecycle {
+    /// Accepted by `submit`, parked in a priority lane.
     Queued,
+    /// Opened on the wire (first β broadcast out), not yet answered.
     Admitted,
+    /// First center response arrived; the Newton loop is live.
     Running,
+    /// Teardown frames out; counting `CloseAck`s.
     Draining,
+    /// Terminal success: every worker acked state release.
     Closed,
+    /// Terminal failure or rejection (deadline, shed, fatal error).
     Aborted,
 }
 
 impl Lifecycle {
+    /// Lower-case state name for logs and operator output.
     pub fn name(self) -> &'static str {
         match self {
             Lifecycle::Queued => "queued",
@@ -218,12 +385,17 @@ impl Lifecycle {
 const ADMISSION_LOG_CAP: usize = 1024;
 
 /// Shared observability surface of the control plane: per-session
-/// lifecycle states plus the admission order (most recent
-/// [`ADMISSION_LOG_CAP`] entries), written by the submit path and the
-/// driver, read by callers/tests through the engine.
+/// lifecycle states, queue-wait durations (queued-at → admitted-at),
+/// and the admission order (most recent [`ADMISSION_LOG_CAP`]
+/// entries), written by the submit path and the driver shards, read by
+/// callers/tests through the engine.
 #[derive(Default)]
 struct LifecycleBoard {
     states: Mutex<HashMap<SessionId, Lifecycle>>,
+    /// How long each session sat `Queued` before its driver shard
+    /// admitted it (recorded once, at admission). Entries share the
+    /// lifecycle map's retention: retiring a session drops both.
+    queue_waits: Mutex<HashMap<SessionId, Duration>>,
     admissions: Mutex<VecDeque<SessionId>>,
 }
 
@@ -234,6 +406,7 @@ impl LifecycleBoard {
 
     fn remove(&self, session: SessionId) {
         self.states.lock().unwrap().remove(&session);
+        self.queue_waits.lock().unwrap().remove(&session);
     }
 
     fn get(&self, session: SessionId) -> Option<Lifecycle> {
@@ -249,6 +422,14 @@ impl LifecycleBoard {
             .count()
     }
 
+    fn set_queue_wait(&self, session: SessionId, wait: Duration) {
+        self.queue_waits.lock().unwrap().insert(session, wait);
+    }
+
+    fn queue_wait(&self, session: SessionId) -> Option<Duration> {
+        self.queue_waits.lock().unwrap().get(&session).copied()
+    }
+
     fn record_admission(&self, session: SessionId) {
         let mut log = self.admissions.lock().unwrap();
         if log.len() == ADMISSION_LOG_CAP {
@@ -259,6 +440,63 @@ impl LifecycleBoard {
 
     fn admission_order(&self) -> Vec<SessionId> {
         self.admissions.lock().unwrap().iter().copied().collect()
+    }
+}
+
+/// The global admission controller: one shared in-flight counter
+/// enforcing [`EngineOptions::max_in_flight`] across every driver
+/// shard, plus the high-water mark. Slots are acquired by a shard just
+/// before it opens a session on the wire and released when the session
+/// reaches a terminal state (after the last `CloseAck`).
+struct AdmissionController {
+    /// 0 = unbounded.
+    max: usize,
+    in_flight: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl AdmissionController {
+    fn new(max: usize) -> AdmissionController {
+        AdmissionController {
+            max,
+            in_flight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Claim one slot; `false` when the cap is saturated.
+    fn try_acquire(&self) -> bool {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if self.max > 0 && cur >= self.max {
+                return false;
+            }
+            match self.in_flight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    fn release(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Fold the current in-flight count into the high-water mark —
+    /// called right after a session actually opens, so speculative
+    /// acquire/release cycles don't inflate the peak.
+    fn record_peak(&self) {
+        self.peak
+            .fetch_max(self.in_flight.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
     }
 }
 
@@ -288,6 +526,8 @@ pub struct StudyHandle {
 }
 
 impl StudyHandle {
+    /// The session id assigned to this study at submission (ids are
+    /// global across driver shards, sequential from 1).
     pub fn session_id(&self) -> SessionId {
         self.session
     }
@@ -307,28 +547,88 @@ impl StudyHandle {
     }
 }
 
-/// Pending studies travel out-of-band (specs hold `Arc`ed shard data);
-/// the wire carries only a `StudySubmitted` nudge frame, so the driver
-/// blocks on ONE channel — its coordinator mailbox — and drains this
-/// queue when the frame arrives. No poll, no idle burn at any K.
-type SubmitQueue = Arc<Mutex<VecDeque<PendingStudy>>>;
+/// One driver shard's priority lanes, shared between the submit path
+/// (pushes, backpressure checks, shed evictions) and the shard's
+/// driver (admission pops, deadline sweeps). Pending studies travel
+/// out-of-band (specs hold `Arc`ed shard data); the wire carries only
+/// a session-tagged `StudySubmitted` nudge frame — routed to the
+/// owning shard by `protocol::shard_of` — so each driver blocks on ONE
+/// channel, its own coordinator mailbox. No poll, no idle burn at any
+/// K or shard count.
+struct ShardQueues {
+    state: Mutex<LaneQueues>,
+    /// Signaled whenever lane space frees (admission pop, deadline
+    /// reject, shed) — what [`SubmitPolicy::Block`] submitters wait on.
+    space: Condvar,
+}
+
+struct LaneQueues {
+    /// Queued studies, indexed by `Priority::lane()`.
+    lanes: [VecDeque<PendingStudy>; 3],
+    /// Sessions shed by the submit path since the driver's last pass;
+    /// drained into the shard's completion window so shed studies flow
+    /// through the same auto-retire bookkeeping as rejected ones.
+    shed_completions: Vec<SessionId>,
+    /// Cleared when the shard's driver exits, so blocked submitters
+    /// fail over to an error instead of waiting forever.
+    open: bool,
+}
+
+impl ShardQueues {
+    fn new() -> Arc<ShardQueues> {
+        Arc::new(ShardQueues {
+            state: Mutex::new(LaneQueues {
+                lanes: Default::default(),
+                shed_completions: Vec::new(),
+                open: true,
+            }),
+            space: Condvar::new(),
+        })
+    }
+
+    fn has_queued(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.lanes.iter().any(|l| !l.is_empty())
+    }
+
+    /// Mark the shard's driver gone, wake every blocked submitter, and
+    /// hand back whatever was still queued so the caller can undo the
+    /// studies' registry/board entries before dropping them (dropping
+    /// a `PendingStudy` drops its result sender, so outstanding
+    /// handles resolve with the engine-terminated error instead of
+    /// hanging).
+    fn close(&self) -> Vec<PendingStudy> {
+        let mut st = self.state.lock().unwrap();
+        st.open = false;
+        let dropped: Vec<PendingStudy> =
+            st.lanes.iter_mut().flat_map(std::mem::take).collect();
+        drop(st);
+        self.space.notify_all();
+        dropped
+    }
+}
 
 /// Persistent study network: S institution workers, W center workers,
-/// one coordinator driver multiplexing concurrent fit sessions behind
-/// the admission controller and priority scheduler.
+/// and N coordinator driver shards multiplexing concurrent fit
+/// sessions behind the shared admission controller and per-shard
+/// priority schedulers.
 pub struct StudyEngine {
     net: Arc<Network>,
     registry: Arc<SessionRegistry>,
-    queue: SubmitQueue,
+    /// Per-shard priority lanes (index = driver shard).
+    shard_queues: Vec<Arc<ShardQueues>>,
     injector: Injector,
-    driver: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+    drivers: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
     workers: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
     next_session: AtomicU32,
     institutions: usize,
     centers: usize,
+    /// Normalized driver shard count (>= 1).
+    driver_shards: usize,
+    lane_capacity: usize,
     compute: ComputeHandle,
     board: Arc<LifecycleBoard>,
-    peak_in_flight: Arc<AtomicUsize>,
+    admission: Arc<AdmissionController>,
     /// Live per-session-state gauges, centers first then institutions
     /// (the leak gate reads these through
     /// [`StudyEngine::worker_live_sessions`]).
@@ -356,7 +656,8 @@ impl StudyEngine {
     /// Build a persistent network sized for `ds`'s institutions with
     /// the compute engine `cfg` selects (the same PJRT/auto/rust logic
     /// the single-fit path always used) and the control-plane options
-    /// (`max_in_flight`, `auto_retire`) the config carries.
+    /// (`max_in_flight`, `auto_retire`, `driver_shards`,
+    /// `lane_capacity`) the config carries.
     pub fn for_experiment(ds: &Dataset, cfg: &ExperimentConfig) -> anyhow::Result<StudyEngine> {
         cfg.validate()?;
         let artifacts_dir = std::path::Path::new(&cfg.artifacts_dir);
@@ -390,6 +691,8 @@ impl StudyEngine {
         let opts = EngineOptions {
             max_in_flight: cfg.max_in_flight,
             auto_retire: cfg.auto_retire,
+            driver_shards: cfg.driver_shards,
+            lane_capacity: cfg.lane_capacity,
         };
         StudyEngine::with_compute(ds.num_institutions(), cfg.num_centers, compute, guard, opts)
     }
@@ -410,9 +713,16 @@ impl StudyEngine {
             centers >= 1 && centers <= u16::MAX as usize,
             "bad center count {centers}"
         );
+        // driver_shards <= 1 degenerates to the classic single driver;
+        // the shard-count ceiling only guards against nonsense configs.
+        let driver_shards = opts.driver_shards.max(1);
+        anyhow::ensure!(
+            driver_shards <= 1024,
+            "bad driver shard count {driver_shards} (max 1024)"
+        );
         let net = Network::new();
         let registry = SessionRegistry::new();
-        let coord = net.register(NodeId::Coordinator);
+        let coord_shards = net.register_sharded(NodeId::Coordinator, driver_shards);
         let mut workers = Vec::with_capacity(institutions + centers);
         let mut worker_gauges = Vec::with_capacity(institutions + centers);
         for c in 0..centers {
@@ -446,57 +756,77 @@ impl StudyEngine {
                     .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
             );
         }
-        let queue: SubmitQueue = Arc::new(Mutex::new(VecDeque::new()));
+        let shard_queues: Vec<Arc<ShardQueues>> =
+            (0..driver_shards).map(|_| ShardQueues::new()).collect();
         let injector = net.injector(NodeId::Client);
         let board = Arc::new(LifecycleBoard::default());
-        let peak_in_flight = Arc::new(AtomicUsize::new(0));
-        let driver = {
+        let admission = Arc::new(AdmissionController::new(opts.max_in_flight));
+        let mut drivers = Vec::with_capacity(driver_shards);
+        for (shard, coord) in coord_shards.into_iter().enumerate() {
             let driver = Driver {
+                shard,
                 coord,
                 registry: registry.clone(),
-                queue: queue.clone(),
+                queues: shard_queues[shard].clone(),
+                all_queues: shard_queues.clone(),
                 net: net.clone(),
                 board: board.clone(),
-                peak_in_flight: peak_in_flight.clone(),
+                admission: admission.clone(),
                 opts,
-                institutions,
-                centers,
-                lanes: Default::default(),
                 ready: Default::default(),
                 sessions: HashMap::new(),
                 completed: VecDeque::new(),
                 submissions_open: true,
             };
-            std::thread::Builder::new()
-                .name("study-driver".to_string())
-                .spawn(move || driver.run())?
-        };
+            drivers.push(
+                std::thread::Builder::new()
+                    .name(format!("study-driver-{shard}"))
+                    .spawn(move || driver.run())?,
+            );
+        }
         Ok(StudyEngine {
             net,
             registry,
-            queue,
+            shard_queues,
             injector,
-            driver: Some(driver),
+            drivers,
             workers,
             next_session: AtomicU32::new(1),
             institutions,
             centers,
+            driver_shards,
+            lane_capacity: opts.lane_capacity,
             compute,
             board,
-            peak_in_flight,
+            admission,
             worker_gauges,
             _compute_guard: compute_guard,
         })
     }
 
+    /// Number of institution workers in the persistent topology.
     pub fn num_institutions(&self) -> usize {
         self.institutions
     }
 
+    /// Number of computation-center workers (w share holders).
     pub fn num_centers(&self) -> usize {
         self.centers
     }
 
+    /// Number of driver threads coordination is sharded across
+    /// (normalized — at least 1).
+    pub fn driver_shards(&self) -> usize {
+        self.driver_shards
+    }
+
+    /// Driver shard that owns `session` (the stable hash every
+    /// coordinator-bound frame of that session routes by).
+    pub fn shard_of(&self, session: SessionId) -> usize {
+        crate::protocol::shard_of(session, self.driver_shards)
+    }
+
+    /// Compute-engine kind serving the institutions (`"rust"`, `"pjrt"`).
     pub fn compute_kind(&self) -> &'static str {
         self.compute.kind()
     }
@@ -518,18 +848,37 @@ impl StudyEngine {
     }
 
     /// Session ids in the order the admission controller opened them
-    /// on the wire (the observable effect of the priority lanes). The
-    /// log keeps the most recent 1024 admissions, so a long-lived
-    /// engine stays bounded.
+    /// on the wire (the observable effect of the priority lanes; with
+    /// multiple driver shards, the interleaving of per-shard
+    /// admissions). The log keeps the most recent 1024 admissions, so
+    /// a long-lived engine stays bounded.
     pub fn admission_order(&self) -> Vec<SessionId> {
         self.board.admission_order()
     }
 
     /// High-water mark of concurrently admitted (non-terminal,
-    /// non-queued) sessions — never exceeds a configured
-    /// `max_in_flight`.
+    /// non-queued) sessions across ALL driver shards — never exceeds a
+    /// configured `max_in_flight`.
     pub fn peak_in_flight(&self) -> usize {
-        self.peak_in_flight.load(Ordering::Relaxed)
+        self.admission.peak()
+    }
+
+    /// How long `session` sat `Queued` before its driver shard
+    /// admitted it — the queue-wait that `RunMetrics::total_secs`
+    /// (which starts at admission) deliberately excludes. `None` while
+    /// the session is still queued, was rejected/shed before
+    /// admission, or has been retired. The same duration reaches the
+    /// study's own metrics as
+    /// [`RunMetrics::queue_secs`](crate::coordinator::RunMetrics::queue_secs).
+    pub fn queue_wait(&self, session: SessionId) -> Option<Duration> {
+        self.board.queue_wait(session)
+    }
+
+    /// Studies currently queued (submitted, not yet admitted) in
+    /// `priority`'s lane of driver shard `shard` — the occupancy that
+    /// [`EngineOptions::lane_capacity`] bounds.
+    pub fn lane_depth(&self, shard: usize, priority: Priority) -> usize {
+        self.shard_queues[shard].state.lock().unwrap().lanes[priority.lane()].len()
     }
 
     /// Specs currently distributed to workers (0 when every session has
@@ -576,6 +925,11 @@ impl StudyEngine {
     /// [`StudyEngine::submit`] over pre-split shards — zero data
     /// copying, so K sessions over one dataset share one set of
     /// `Arc`s.
+    ///
+    /// With bounded lanes ([`EngineOptions::lane_capacity`] > 0) this
+    /// is where backpressure applies: a submission into a full lane
+    /// blocks, rejects, or sheds according to `opts.policy` (see
+    /// [`SubmitPolicy`]).
     pub fn submit_shared(
         &self,
         cfg: &ExperimentConfig,
@@ -597,6 +951,7 @@ impl StudyEngine {
         );
         let params = ShamirParams::new(cfg.threshold, cfg.num_centers)?;
         let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let shard = self.shard_of(session);
         let spec = Arc::new(SessionSpec::new(
             session,
             shards,
@@ -606,6 +961,9 @@ impl StudyEngine {
             cfg.kernel_threads,
             cfg.seed,
         ));
+        // Register first: workers look specs up lazily on first
+        // contact, so the spec must be in place before any frame can
+        // reference the session. A rejected submission undoes this.
         self.registry.insert(spec.clone());
         self.board.set(session, Lifecycle::Queued);
         let (result_tx, result_rx) = channel();
@@ -620,14 +978,19 @@ impl StudyEngine {
             submitted: Instant::now(),
             result_tx,
         };
-        // Queue first, nudge second: a nudge with an empty queue is a
-        // no-op, the reverse order could strand the study. The nudge
-        // frame is tagged with the study's own session id so its bytes
-        // attribute to the study it announces (keeping per-session
-        // entries exactly one-per-study). If the driver is already
-        // gone the nudge fails and the queued entry is simply dropped
-        // with the engine.
-        self.queue.lock().unwrap().push_back(pending);
+        // Queue first (through the backpressure gate), nudge second: a
+        // nudge with an empty queue is a no-op, the reverse order could
+        // strand the study. The nudge frame is tagged with the study's
+        // own session id, which both attributes its bytes to the study
+        // it announces AND routes it to the owning driver shard
+        // (`protocol::shard_of`). If the driver is already gone the
+        // nudge fails and the queued entry is simply dropped with the
+        // engine.
+        if let Err(e) = self.enqueue_with_backpressure(shard, opts.policy, pending) {
+            self.registry.remove(session);
+            self.board.remove(session);
+            return Err(e);
+        }
         self.injector
             .send_session(NodeId::Coordinator, session, &Message::StudySubmitted)
             .map_err(|_| anyhow::anyhow!("study engine driver is down"))?;
@@ -635,6 +998,85 @@ impl StudyEngine {
             session,
             rx: result_rx,
         })
+    }
+
+    /// Push one pending study into its shard's lane, applying the
+    /// bounded-lane backpressure policy when the lane is full. On
+    /// error the study was NOT queued (the caller undoes its registry
+    /// and board entries). Shed victims are fully resolved here: their
+    /// registry/board entries flip to `Aborted`, their handles get
+    /// [`SubmitError::Shed`], and their session ids are left for the
+    /// driver to fold into its completion window.
+    fn enqueue_with_backpressure(
+        &self,
+        shard: usize,
+        policy: SubmitPolicy,
+        pending: PendingStudy,
+    ) -> anyhow::Result<()> {
+        let lane = pending.priority.lane();
+        let cap = self.lane_capacity;
+        let q = &self.shard_queues[shard];
+        let mut victim: Option<PendingStudy> = None;
+        {
+            let mut st = q.state.lock().unwrap();
+            loop {
+                anyhow::ensure!(st.open, "study engine driver is down");
+                if cap == 0 || st.lanes[lane].len() < cap {
+                    break;
+                }
+                match policy {
+                    SubmitPolicy::Reject => {
+                        return Err(SubmitError::LaneFull {
+                            priority: pending.priority,
+                            capacity: cap,
+                            shard,
+                        }
+                        .into());
+                    }
+                    SubmitPolicy::ShedOldestBulk => {
+                        if lane != Priority::Bulk.lane() {
+                            // Never silently drop interactive/batch
+                            // work; shedding is a bulk-ring semantic.
+                            return Err(SubmitError::LaneFull {
+                                priority: pending.priority,
+                                capacity: cap,
+                                shard,
+                            }
+                            .into());
+                        }
+                        let old = st.lanes[lane].pop_front().expect("full lane is non-empty");
+                        st.shed_completions.push(old.spec.session);
+                        victim = Some(old);
+                        // Exactly one slot freed; re-check admits us.
+                    }
+                    SubmitPolicy::Block => match pending.deadline {
+                        None => st = q.space.wait(st).unwrap(),
+                        Some(dl) => {
+                            let elapsed = pending.submitted.elapsed();
+                            anyhow::ensure!(
+                                elapsed < dl,
+                                "session {} missed its admission deadline ({dl:?} in the \
+                                 {} lane) while blocked on the full lane",
+                                pending.spec.session,
+                                pending.priority.name()
+                            );
+                            let (guard, _) = q.space.wait_timeout(st, dl - elapsed).unwrap();
+                            st = guard;
+                        }
+                    },
+                }
+            }
+            st.lanes[lane].push_back(pending);
+        }
+        if let Some(old) = victim {
+            let shed_session = old.spec.session;
+            self.registry.remove(shed_session);
+            self.board.set(shed_session, Lifecycle::Aborted);
+            let _ = old
+                .result_tx
+                .send(Err(SubmitError::Shed { session: shed_session }.into()));
+        }
+        Ok(())
     }
 
     /// Retire a finished session's traffic attribution into the
@@ -657,39 +1099,57 @@ impl StudyEngine {
         retired
     }
 
-    /// Drain queued and in-flight sessions, stop the driver and
-    /// workers, and return the final global traffic snapshot.
+    /// Drain queued and in-flight sessions, stop every driver shard
+    /// and worker, and return the final global traffic snapshot.
     pub fn shutdown(mut self) -> anyhow::Result<TrafficSnapshot> {
         self.shutdown_inner()?;
         Ok(self.net.counters.snapshot())
     }
 
     fn shutdown_inner(&mut self) -> anyhow::Result<()> {
-        // A Shutdown frame on the unified channel tells the driver to
-        // run whatever is queued/in flight to completion and then tear
-        // the workers down.
+        // A shard-directed Shutdown frame on each driver's unified
+        // channel tells it to run whatever is queued/in flight to
+        // completion and exit. Workers are torn down only after EVERY
+        // driver has drained — a driver mid-drain still needs its
+        // workers to answer CloseAcks.
         let mut first_err: Option<anyhow::Error> = None;
-        if let Some(driver) = self.driver.take() {
-            let _ = self.injector.send(NodeId::Coordinator, &Message::Shutdown);
-            match driver.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => first_err = Some(e),
-                Err(_) => first_err = Some(anyhow::anyhow!("study driver panicked")),
+        let mut note = |r: std::thread::Result<anyhow::Result<()>>, who: &str| match r {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("{who} thread panicked"));
+                }
+            }
+        };
+        if !self.drivers.is_empty() {
+            for shard in 0..self.driver_shards {
+                let _ = self
+                    .injector
+                    .send_to_shard(NodeId::Coordinator, shard, &Message::Shutdown);
+            }
+            for d in self.drivers.drain(..) {
+                note(d.join(), "study driver");
             }
         }
-        for w in self.workers.drain(..) {
-            match w.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow::anyhow!("worker thread panicked"));
-                    }
-                }
+        if !self.workers.is_empty() {
+            // Worker teardown frames originate from the coordinator
+            // role (not the client injector) so their bytes keep the
+            // same broadcast/central traffic classes the single-driver
+            // engine always reported.
+            let coord_injector = self.net.injector(NodeId::Coordinator);
+            for j in 0..self.institutions {
+                let _ = coord_injector.send(NodeId::Institution(j as u16), &Message::Shutdown);
+            }
+            for c in 0..self.centers {
+                let _ = coord_injector.send(NodeId::Center(c as u16), &Message::Shutdown);
+            }
+            for w in self.workers.drain(..) {
+                note(w.join(), "worker");
             }
         }
         match first_err {
@@ -727,6 +1187,9 @@ struct Active {
     result_tx: Sender<anyhow::Result<SecureFitResult>>,
     priority: Priority,
     phase: Phase,
+    /// How long the study sat `Queued` before admission (reported as
+    /// `RunMetrics::queue_secs`; `total_secs` starts at admission).
+    queue_secs: f64,
     /// A computed next round waiting for its weighted-fair dispatch
     /// slot.
     pending_round: Option<Vec<(NodeId, Message)>>,
@@ -735,29 +1198,33 @@ struct Active {
     fate: Option<Fate>,
 }
 
-/// The coordinator driver: accepts submissions into priority lanes,
-/// admits sessions under the in-flight cap, pumps the network, feeds
-/// each `AggregateResponse` to its session's Newton machine, and
-/// dispatches ready rounds weighted-fair across the lanes. While one
-/// session's institutions crunch their shards, another session's
-/// reconstruction proceeds here — that interleaving is what makes K
-/// fits concurrent.
+/// One coordinator driver shard: admits studies from ITS priority
+/// lanes under the GLOBAL in-flight cap, pumps the network, feeds each
+/// `AggregateResponse` to its session's Newton machine, and dispatches
+/// ready rounds weighted-fair across the lanes. While one session's
+/// institutions crunch their shards, another session's reconstruction
+/// proceeds here — that interleaving is what makes K fits concurrent;
+/// running N of these loops is what keeps coordination itself off the
+/// critical path at high K.
 struct Driver {
+    /// This driver's shard index; it owns exactly the sessions with
+    /// `protocol::shard_of(session, N) == shard`.
+    shard: usize,
     coord: Endpoint,
     registry: Arc<SessionRegistry>,
-    queue: SubmitQueue,
+    /// This shard's lanes (shared with the submit path).
+    queues: Arc<ShardQueues>,
+    /// Every shard's lanes, for cross-shard admission wakes.
+    all_queues: Vec<Arc<ShardQueues>>,
     net: Arc<Network>,
     board: Arc<LifecycleBoard>,
-    peak_in_flight: Arc<AtomicUsize>,
+    admission: Arc<AdmissionController>,
     opts: EngineOptions,
-    institutions: usize,
-    centers: usize,
-    /// Admission lanes, indexed by `Priority::lane()`.
-    lanes: [VecDeque<PendingStudy>; 3],
     /// Sessions with a `pending_round` awaiting dispatch, by lane.
     ready: [VecDeque<SessionId>; 3],
     sessions: HashMap<SessionId, Active>,
-    /// Terminal sessions in completion order (the auto-retire window).
+    /// Terminal sessions in completion order (this shard's auto-retire
+    /// window).
     completed: VecDeque<SessionId>,
     submissions_open: bool,
 }
@@ -765,26 +1232,39 @@ struct Driver {
 impl Driver {
     fn run(mut self) -> anyhow::Result<()> {
         let result = self.event_loop();
-        // ALWAYS tear the persistent workers down — even when the loop
-        // errored — and best-effort per worker: otherwise a single dead
-        // worker would leave the others parked in recv() forever and
-        // shutdown()/Drop would hang on their joins instead of
-        // reporting the error. Failed sessions' handles see their
-        // senders drop.
-        for j in 0..self.institutions {
-            let _ = self
-                .coord
-                .send(NodeId::Institution(j as u16), &Message::Shutdown);
+        // Close the shard's lanes on the way out — success or error —
+        // so blocked submitters fail over instead of waiting on a dead
+        // driver. On a clean exit everything below is a no-op (lanes
+        // and session map provably empty); on an ERROR exit it keeps
+        // the rest of the engine coherent: the studies this shard
+        // strands must leave the spec registry and lifecycle board
+        // (every other terminal path removes them), the global
+        // admission slots its in-flight sessions held must be
+        // released, and peer shards must be woken — otherwise a
+        // queued-only peer would wait forever for capacity a dead
+        // shard took with it. (Worker teardown belongs to the engine,
+        // which joins EVERY driver shard first.)
+        for p in self.queues.close() {
+            self.registry.remove(p.spec.session);
+            self.board.set(p.spec.session, Lifecycle::Aborted);
+            // `p` drops here: its result sender resolves the handle.
         }
-        for c in 0..self.centers {
-            let _ = self.coord.send(NodeId::Center(c as u16), &Message::Shutdown);
+        let stranded = self.sessions.len();
+        for session in self.sessions.keys().copied().collect::<Vec<_>>() {
+            self.registry.remove(session);
+            self.board.set(session, Lifecycle::Aborted);
         }
+        self.sessions.clear();
+        for _ in 0..stranded {
+            self.admission.release();
+        }
+        self.wake_starved_peers();
         result
     }
 
     fn event_loop(&mut self) -> anyhow::Result<()> {
         loop {
-            if !self.submissions_open && self.sessions.is_empty() && self.lanes_empty() {
+            if !self.submissions_open && self.sessions.is_empty() && !self.queues.has_queued() {
                 return Ok(());
             }
             // ONE unified channel: submissions arrive as StudySubmitted
@@ -804,22 +1284,25 @@ impl Driver {
         }
     }
 
-    fn lanes_empty(&self) -> bool {
-        self.lanes.iter().all(VecDeque::is_empty)
-    }
-
     fn handle(&mut self, frame: (NodeId, SessionId, Message)) -> anyhow::Result<()> {
         let (from, session, msg) = frame;
         match msg {
             Message::StudySubmitted => {
+                // The study is already in this shard's lanes (queued
+                // before the nudge was injected); the frame's only job
+                // was to wake this loop for the admission pass below.
                 anyhow::ensure!(from == NodeId::Client, "study submission nudge from {from}");
-                self.absorb_submissions();
+            }
+            Message::AdmissionWake => {
+                // A peer shard freed a global admission slot; the
+                // admission pass after this drain claims it if we have
+                // queued studies.
+                anyhow::ensure!(from == NodeId::Coordinator, "admission wake from {from}");
             }
             Message::Shutdown => {
                 anyhow::ensure!(from == NodeId::Client, "shutdown frame from {from}");
                 // Run anything still queued, then finish in-flight
                 // sessions and exit once the last one fully closes.
-                self.absorb_submissions();
                 self.submissions_open = false;
             }
             Message::AggregateResponse {
@@ -882,14 +1365,50 @@ impl Driver {
         Ok(())
     }
 
-    /// Drain the submission queue into the priority lanes.
-    fn absorb_submissions(&mut self) {
-        loop {
-            let Some(p) = self.queue.lock().unwrap().pop_front() else {
-                return;
-            };
-            self.lanes[p.priority.lane()].push_back(p);
+    /// Sweep this shard's lanes: pop every queued study whose
+    /// admission deadline has lapsed (rejected below, outside the
+    /// lock) and collect the sessions the submit path shed since the
+    /// last pass (their handles were already resolved; only the
+    /// completion-window bookkeeping remains). Removals free lane
+    /// space, so blocked submitters are woken.
+    fn sweep_queues(&mut self) -> (Vec<PendingStudy>, Vec<SessionId>) {
+        let mut expired = Vec::new();
+        let mut st = self.queues.state.lock().unwrap();
+        for lane in &mut st.lanes {
+            let mut i = 0;
+            while i < lane.len() {
+                if lane[i].expired() {
+                    expired.push(lane.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
         }
+        let shed = std::mem::take(&mut st.shed_completions);
+        drop(st);
+        if !expired.is_empty() {
+            self.queues.space.notify_all();
+        }
+        (expired, shed)
+    }
+
+    /// Pop the next admittable study from this shard's lanes, highest
+    /// priority first (FIFO within a lane), waking blocked submitters
+    /// for the freed space.
+    fn pop_next_queued(&mut self) -> Option<PendingStudy> {
+        let mut st = self.queues.state.lock().unwrap();
+        let mut popped = None;
+        for lane in &mut st.lanes {
+            if let Some(p) = lane.pop_front() {
+                popped = Some(p);
+                break;
+            }
+        }
+        drop(st);
+        if popped.is_some() {
+            self.queues.space.notify_all();
+        }
+        popped
     }
 
     /// Dispatch every parked round, weighted-fair across the lanes:
@@ -926,40 +1445,53 @@ impl Driver {
         }
     }
 
-    /// Admit queued studies while the in-flight cap allows, highest
-    /// priority lane first (FIFO within a lane). Expired deadlines are
-    /// swept from EVERY lane on EVERY pass — before the cap check — so
-    /// a deadlined study is rejected promptly even while the cap is
-    /// saturated (the saturating sessions' protocol frames are what
-    /// wake the driver, so the sweep runs at round granularity).
+    /// Admit queued studies while the GLOBAL in-flight cap allows,
+    /// highest priority lane first (FIFO within a lane). Expired
+    /// deadlines are swept from EVERY lane on EVERY pass — before the
+    /// cap check — so a deadlined study is rejected promptly even
+    /// while the cap is saturated (the saturating sessions' protocol
+    /// frames are what wake the driver, so the sweep runs at round
+    /// granularity).
     fn admit(&mut self) -> anyhow::Result<()> {
-        self.reject_expired();
+        let (expired, shed) = self.sweep_queues();
+        for p in expired {
+            self.reject(p);
+        }
+        for session in shed {
+            self.note_completion(session);
+        }
         loop {
-            if self.opts.max_in_flight > 0 && self.sessions.len() >= self.opts.max_in_flight {
+            if !self.queues.has_queued() {
                 return Ok(());
             }
-            let Some(p) = self.next_admittable() else {
+            // Claim a global slot BEFORE popping: with the cap
+            // saturated by other shards the queue must stay intact for
+            // a later pass (an `AdmissionWake` re-runs this loop when
+            // a peer frees a slot).
+            if !self.admission.try_acquire() {
                 return Ok(());
-            };
-            self.open_session(p)?;
-            let in_flight = self.sessions.len();
-            self.peak_in_flight.fetch_max(in_flight, Ordering::Relaxed);
-        }
-    }
-
-    /// Reject every queued study whose admission deadline has lapsed
-    /// (their handles get the error immediately; no worker ever saw
-    /// them, so there is nothing to drain).
-    fn reject_expired(&mut self) {
-        for lane_idx in 0..self.lanes.len() {
-            let mut i = 0;
-            while i < self.lanes[lane_idx].len() {
-                if self.lanes[lane_idx][i].expired() {
-                    let p = self.lanes[lane_idx].remove(i).unwrap();
+            }
+            let mut opened = false;
+            while let Some(p) = self.pop_next_queued() {
+                // Re-check the deadline: it may have lapsed mid-pass.
+                if p.expired() {
                     self.reject(p);
-                } else {
-                    i += 1;
+                    continue;
                 }
+                self.open_session(p)?;
+                opened = true;
+                break;
+            }
+            if !opened {
+                // Everything left had expired; give the slot back —
+                // and wake starved peers, exactly as finalize() does:
+                // a peer's wake-triggered try_acquire may have failed
+                // during our speculative hold, and with no session
+                // in flight anywhere to generate frames, this release
+                // would otherwise be a lost wakeup.
+                self.admission.release();
+                self.wake_starved_peers();
+                return Ok(());
             }
         }
     }
@@ -982,25 +1514,11 @@ impl Driver {
         self.note_completion(session);
     }
 
-    /// Pop the next admittable study (expired entries were already
-    /// swept this pass; re-check anyway so a deadline that lapses
-    /// mid-pass still cannot be admitted).
-    fn next_admittable(&mut self) -> Option<PendingStudy> {
-        for lane_idx in 0..self.lanes.len() {
-            while let Some(p) = self.lanes[lane_idx].pop_front() {
-                if p.expired() {
-                    self.reject(p);
-                    continue;
-                }
-                return Some(p);
-            }
-        }
-        None
-    }
-
     /// `Queued → Admitted`: build the Newton machine and open the
-    /// session on the wire.
+    /// session on the wire. The caller already holds the admission
+    /// slot this session occupies until `finalize`.
     fn open_session(&mut self, p: PendingStudy) -> anyhow::Result<()> {
+        let queue_wait = p.submitted.elapsed();
         let state = SessionState::new(p.spec, p.mode, p.lambda, p.tol, p.max_iters);
         let session = state.session();
         let outgoing = state.begin();
@@ -1011,13 +1529,16 @@ impl Driver {
                 result_tx: p.result_tx,
                 priority: p.priority,
                 phase: Phase::Admitted,
+                queue_secs: queue_wait.as_secs_f64(),
                 pending_round: None,
                 acks_pending: 0,
                 fate: None,
             },
         );
         self.board.set(session, Lifecycle::Admitted);
+        self.board.set_queue_wait(session, queue_wait);
         self.board.record_admission(session);
+        self.admission.record_peak();
         send_all(&self.coord, session, outgoing)
     }
 
@@ -1083,14 +1604,21 @@ impl Driver {
 
     /// `Draining → Closed | Aborted`: every ack arrived, so the
     /// session's traffic attribution is final (teardown and ack bytes
-    /// included) and the result can carry it. Applies the auto-retire
-    /// policy to sessions that finished `auto_retire` completions ago.
+    /// included) and the result can carry it. Releases the session's
+    /// global admission slot (waking peer shards that have studies
+    /// queued) and applies the auto-retire policy to sessions that
+    /// finished `auto_retire` completions ago.
     fn finalize(&mut self, session: SessionId) {
         let active = self.sessions.remove(&session).expect("finalizing unknown session");
         debug_assert_eq!(active.acks_pending, 0);
         let (result, terminal) = match active.fate.expect("draining session without a fate") {
             Fate::Success(outcome) => (
-                Ok(finish_session(&self.net, &active.state, outcome)),
+                Ok(finish_session(
+                    &self.net,
+                    &active.state,
+                    outcome,
+                    active.queue_secs,
+                )),
                 Lifecycle::Closed,
             ),
             Fate::Failure(e) => (Err(e), Lifecycle::Aborted),
@@ -1099,6 +1627,27 @@ impl Driver {
         self.board.set(session, terminal);
         let _ = active.result_tx.send(result);
         self.note_completion(session);
+        self.admission.release();
+        self.wake_starved_peers();
+    }
+
+    /// Tell peer shards with queued studies that a global admission
+    /// slot just freed. Without this, a shard whose own sessions are
+    /// all idle would sit blocked on its mailbox while capacity it was
+    /// starved of goes unused — its admission pass only runs when a
+    /// frame arrives, and queued-only shards generate no frames. Sends
+    /// are best-effort: a peer that already exited doesn't need waking.
+    fn wake_starved_peers(&self) {
+        if self.opts.max_in_flight == 0 || self.all_queues.len() <= 1 {
+            return;
+        }
+        for (peer, queues) in self.all_queues.iter().enumerate() {
+            if peer != self.shard && queues.has_queued() {
+                let _ = self
+                    .coord
+                    .send_to_shard(NodeId::Coordinator, peer, &Message::AdmissionWake);
+            }
+        }
     }
 
     /// Record a terminal session (closed, aborted, or rejected) in the
@@ -1140,7 +1689,12 @@ fn send_all(
 /// it was delivered). Only abort drains can see stragglers after this
 /// point, and aborted sessions never reach here (they report an error,
 /// not metrics).
-fn finish_session(net: &Arc<Network>, state: &SessionState, outcome: SessionOutcome) -> SecureFitResult {
+fn finish_session(
+    net: &Arc<Network>,
+    state: &SessionState,
+    outcome: SessionOutcome,
+    queue_secs: f64,
+) -> SecureFitResult {
     let spec = state.spec();
     let total_secs = state.started.elapsed().as_secs_f64();
     let center_max_busy = spec
@@ -1163,6 +1717,7 @@ fn finish_session(net: &Arc<Network>, state: &SessionState, outcome: SessionOutc
         beta: outcome.beta,
         metrics: RunMetrics {
             total_secs,
+            queue_secs,
             central_secs: outcome.central_secs + center_max_busy,
             local_compute_secs,
             local_compute_sum_secs,
@@ -1341,6 +1896,140 @@ mod tests {
     }
 
     #[test]
+    fn submit_policy_parse_names_and_default() {
+        assert_eq!(SubmitPolicy::parse("block").unwrap(), SubmitPolicy::Block);
+        assert_eq!(SubmitPolicy::parse("REJECT").unwrap(), SubmitPolicy::Reject);
+        assert_eq!(SubmitPolicy::parse("shed").unwrap(), SubmitPolicy::ShedOldestBulk);
+        assert_eq!(
+            SubmitPolicy::parse("shed-oldest-bulk").unwrap(),
+            SubmitPolicy::ShedOldestBulk
+        );
+        assert!(SubmitPolicy::parse("drop").is_err());
+        for p in [SubmitPolicy::Block, SubmitPolicy::Reject, SubmitPolicy::ShedOldestBulk] {
+            assert_eq!(SubmitPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(SubmitPolicy::default(), SubmitPolicy::Block);
+        assert_eq!(SubmitOptions::default().policy, SubmitPolicy::Block);
+        assert_eq!(
+            SubmitOptions::bulk().policy(SubmitPolicy::Reject).policy,
+            SubmitPolicy::Reject
+        );
+    }
+
+    #[test]
+    fn submit_error_display_is_actionable() {
+        let full = SubmitError::LaneFull {
+            priority: Priority::Bulk,
+            capacity: 4,
+            shard: 1,
+        };
+        let msg = full.to_string();
+        assert!(msg.contains("bulk") && msg.contains("full") && msg.contains('4'), "{msg}");
+        let shed = SubmitError::Shed { session: 9 };
+        assert!(shed.to_string().contains("shed"), "{shed}");
+        // Travels intact through anyhow for downcasting callers.
+        let any: anyhow::Error = full.into();
+        assert_eq!(any.downcast_ref::<SubmitError>(), Some(&full));
+    }
+
+    #[test]
+    fn admission_controller_caps_and_tracks_peak() {
+        let ac = AdmissionController::new(2);
+        assert!(ac.try_acquire());
+        assert!(ac.try_acquire());
+        assert!(!ac.try_acquire(), "cap of 2 must hold");
+        ac.record_peak();
+        assert_eq!(ac.peak(), 2);
+        ac.release();
+        assert!(ac.try_acquire());
+        assert!(!ac.try_acquire());
+        // Unbounded controller never refuses.
+        let free = AdmissionController::new(0);
+        for _ in 0..64 {
+            assert!(free.try_acquire());
+        }
+        free.record_peak();
+        assert_eq!(free.peak(), 64);
+    }
+
+    #[test]
+    fn sharded_engine_serves_sessions_on_every_shard() {
+        let ds = synthetic("t", 400, 4, 2, 0.0, 1.0, 41);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions { driver_shards: 3, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(engine.driver_shards(), 3);
+        let shards = crate::session::ShardData::split(&ds);
+        // Several sessions spread across the shard hash; whatever the
+        // distribution, every fit must close cleanly and agree bitwise.
+        let handles: Vec<_> = (0..9)
+            .map(|_| engine.submit_shared(&cfg, shards.clone(), SubmitOptions::default()).unwrap())
+            .collect();
+        let mut owners = vec![0usize; 3];
+        let results: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                owners[engine.shard_of(h.session_id())] += 1;
+                h.join().unwrap()
+            })
+            .collect();
+        for r in &results[1..] {
+            assert_eq!(r.beta, results[0].beta, "shards must not move numerics");
+        }
+        // All 9 sessions closed, none leaked, regardless of owner shard.
+        assert_eq!(engine.lifecycle_count(Lifecycle::Closed), 9);
+        assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+        assert_eq!(engine.live_specs(), 0);
+        assert!(owners.iter().sum::<usize>() == 9);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn queue_wait_is_reported_in_metrics_and_board() {
+        let ds = synthetic("t", 400, 3, 2, 0.0, 1.0, 43);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions { max_in_flight: 1, ..Default::default() },
+        )
+        .unwrap();
+        let h1 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let h2 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let (s1, s2) = (h1.session_id(), h2.session_id());
+        let f1 = h1.join().unwrap();
+        let f2 = h2.join().unwrap();
+        // Both sessions report a queue wait; the second had to wait
+        // for the first to fully close, the first was admitted at once.
+        assert!(f1.metrics.queue_secs >= 0.0);
+        assert!(
+            f2.metrics.queue_secs >= f1.metrics.total_secs * 0.5,
+            "capped session should have queued roughly one fit long \
+             (queued {:.6}s vs first fit {:.6}s)",
+            f2.metrics.queue_secs,
+            f1.metrics.total_secs
+        );
+        // The board agrees with the per-study metrics.
+        let w1 = engine.queue_wait(s1).unwrap().as_secs_f64();
+        let w2 = engine.queue_wait(s2).unwrap().as_secs_f64();
+        assert!((w1 - f1.metrics.queue_secs).abs() < 1e-9);
+        assert!((w2 - f2.metrics.queue_secs).abs() < 1e-9);
+        // Still-unknown and retired sessions read None.
+        assert_eq!(engine.queue_wait(99), None);
+        engine.retire_session(s1);
+        assert_eq!(engine.queue_wait(s1), None);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
     fn lifecycle_names_and_terminality() {
         assert_eq!(Lifecycle::Queued.name(), "queued");
         assert_eq!(Lifecycle::Draining.name(), "draining");
@@ -1365,7 +2054,7 @@ mod tests {
         let engine = StudyEngine::with_options(
             2,
             3,
-            EngineOptions { max_in_flight: 1, auto_retire: 0 },
+            EngineOptions { max_in_flight: 1, ..Default::default() },
         )
         .unwrap();
         let handles: Vec<_> = (0..4)
@@ -1389,7 +2078,7 @@ mod tests {
         let engine = StudyEngine::with_options(
             2,
             3,
-            EngineOptions { max_in_flight: 1, auto_retire: 0 },
+            EngineOptions { max_in_flight: 1, ..Default::default() },
         )
         .unwrap();
         let h_run = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
@@ -1425,7 +2114,7 @@ mod tests {
         let engine = StudyEngine::with_options(
             2,
             3,
-            EngineOptions { max_in_flight: 0, auto_retire: 2 },
+            EngineOptions { auto_retire: 2, ..Default::default() },
         )
         .unwrap();
         for _ in 0..5 {

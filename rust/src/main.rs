@@ -56,12 +56,19 @@ MULTIFIT FLAGS:
     --sessions <K>       concurrent study sessions                  [4]
     --priority <p>       scheduling lane: interactive | batch | bulk
                          (weighted-fair 4:2:1 round dispatch)    [batch]
-    --max-in-flight <n>  admission cap: sessions in flight at once;
-                         the rest queue in their priority lane
-                         (0 = unbounded)                            [0]
+    --max-in-flight <n>  admission cap: sessions in flight at once,
+                         global across driver shards; the rest queue
+                         in their priority lane (0 = unbounded)     [0]
     --auto-retire <n>    fold sessions finished n completions ago
                          into the retired traffic aggregate
                          (0 = keep all live)                        [0]
+    --driver-shards <n>  shard coordination across n driver threads;
+                         results are bit-identical at any count
+                         (0 or 1 = single driver)                   [1]
+    --lane-capacity <n>  max studies queued per (shard, lane); full
+                         lanes apply --policy (0 = unbounded)       [0]
+    --policy <p>         full-lane behavior: block | reject | shed
+                         (shed = newest-wins bulk ring)         [block]
 
 CV FLAGS:
     --lambdas <grid>     comma-separated λ candidates    [0.01,0.1,1,10]
@@ -189,29 +196,44 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
         Some(p) => privlr::engine::Priority::parse(p)?,
         None => privlr::engine::Priority::default(),
     };
+    let policy = match args.get("policy") {
+        Some(p) => privlr::engine::SubmitPolicy::parse(p)?,
+        None => privlr::engine::SubmitPolicy::default(),
+    };
     cfg.max_in_flight = args.get_usize("max-in-flight", cfg.max_in_flight)?;
     cfg.auto_retire = args.get_usize("auto-retire", cfg.auto_retire)?;
+    cfg.driver_shards = args.get_usize("driver-shards", cfg.driver_shards)?;
+    cfg.lane_capacity = args.get_usize("lane-capacity", cfg.lane_capacity)?;
+    cfg.validate()?;
     let ds = cfg.dataset.load(cfg.seed)?;
     println!(
-        "persistent network: {} institutions, {} centers (t={}), engine={} — {k} sessions \
-         on the {} lane (admission cap: {})",
+        "persistent network: {} institutions, {} centers (t={}), engine={}, {} driver \
+         shard(s) — {k} sessions on the {} lane (admission cap: {}; lane capacity: {}, \
+         policy: {})",
         ds.num_institutions(),
         cfg.num_centers,
         cfg.threshold,
         cfg.engine.name(),
+        cfg.driver_shards.max(1),
         priority.name(),
         if cfg.max_in_flight == 0 {
             "unbounded".to_string()
         } else {
             cfg.max_in_flight.to_string()
         },
+        if cfg.lane_capacity == 0 {
+            "unbounded".to_string()
+        } else {
+            cfg.lane_capacity.to_string()
+        },
+        policy.name(),
     );
     let t = std::time::Instant::now();
     let engine = privlr::engine::StudyEngine::for_experiment(&ds, &cfg)?;
     // Split once, share across sessions — the K studies read the same
     // Arc'd shards instead of K copies of the dataset.
     let shards = privlr::session::ShardData::split(&ds);
-    let opts = privlr::engine::SubmitOptions::with_priority(priority);
+    let opts = privlr::engine::SubmitOptions::with_priority(priority).policy(policy);
     let handles: Vec<_> = (0..k)
         .map(|_| engine.submit_shared(&cfg, shards.clone(), opts))
         .collect::<anyhow::Result<_>>()?;
@@ -220,30 +242,47 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
         "session", "iters", "fit time", "session bytes"
     );
     let mut results = Vec::with_capacity(k);
+    let mut shed = 0usize;
     for h in handles {
         let session = h.session_id();
-        let fit = h.join()?;
-        println!(
-            "{:>8} {:>7} {:>12} {:>14}",
-            session,
-            fit.metrics.iterations,
-            fmt_duration(fit.metrics.total_secs),
-            fmt_bytes(fit.metrics.traffic.total_bytes),
-        );
-        results.push(fit);
+        match h.join() {
+            Ok(fit) => {
+                println!(
+                    "{:>8} {:>7} {:>12} {:>14}",
+                    session,
+                    fit.metrics.iterations,
+                    fmt_duration(fit.metrics.total_secs),
+                    fmt_bytes(fit.metrics.traffic.total_bytes),
+                );
+                results.push(fit);
+            }
+            // Under --policy shed a full bulk lane evicts its oldest
+            // study — an expected outcome, reported rather than fatal.
+            Err(e) if e.downcast_ref::<privlr::engine::SubmitError>().is_some_and(|s| {
+                matches!(s, privlr::engine::SubmitError::Shed { .. })
+            }) =>
+            {
+                println!("{session:>8}    shed (newer bulk submission took its slot)");
+                shed += 1;
+            }
+            Err(e) => return Err(e),
+        }
     }
     let peak = engine.peak_in_flight();
     let traffic = engine.shutdown()?;
     let wall = t.elapsed().as_secs_f64();
+    anyhow::ensure!(!results.is_empty(), "every session was shed");
     // Concurrent sessions are bit-identical to sequential runs.
     for fit in &results[1..] {
         anyhow::ensure!(fit.beta == results[0].beta, "sessions disagreed on β");
     }
+    let done = results.len();
     let session_sum: u64 = traffic.per_session.iter().map(|&(_, b)| b).sum();
     println!(
-        "\n{k} fits in {} → {:.2} fits/sec (identical β across sessions; peak in-flight {peak})",
+        "\n{done} fits ({shed} shed) in {} → {:.2} fits/sec (identical β across sessions; \
+         peak in-flight {peak})",
         fmt_duration(wall),
-        k as f64 / wall
+        done as f64 / wall
     );
     println!(
         "traffic: {} total across {} session(s) + control; per-session sum {} ({})",

@@ -27,11 +27,43 @@ pub const CONTROL_SESSION: SessionId = 0;
 /// Encoded size of the frame header prepended by [`encode_frame`].
 pub const SESSION_HEADER_LEN: usize = 4;
 
+/// Driver shard owning a session on a coordinator sharded `shards`
+/// ways: a stable splitmix64-finalizer hash of the [`SessionId`],
+/// reduced mod `shards`.
+///
+/// This function is part of the wire contract of the sharded engine:
+/// the transport routes every coordinator-bound frame — worker
+/// responses, acks, AND the engine front end's injected
+/// [`Message::StudySubmitted`] nudges — to shard
+/// `shard_of(frame.session, shards)`, so a session's whole life is
+/// served by one driver thread without any cross-shard handoff. It is
+/// pure integer arithmetic (no platform-dependent hashing), hence
+/// identical on every build; `shards <= 1` always maps to shard 0,
+/// which is how the default single-driver engine degenerates to the
+/// pre-sharding behavior.
+pub fn shard_of(session: SessionId, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    // splitmix64 finalizer: avalanches the (sequentially assigned)
+    // session ids so consecutive submissions spread across shards
+    // instead of striping.
+    let mut z = (session as u64) ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % shards as u64) as usize
+}
+
 /// Node addresses in the simulated study network.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum NodeId {
+    /// The study coordinator (possibly backed by several driver-shard
+    /// mailboxes — senders address the role, routing picks the shard).
     Coordinator,
+    /// One data-holding institution, by id.
     Institution(u16),
+    /// One share-holding computation center, by id.
     Center(u16),
     /// The submitting client API (the `StudyEngine` front end): not a
     /// routable worker — it only *injects* control frames (study
@@ -130,10 +162,23 @@ pub enum Message {
     NodeError { node: u16, is_center: bool, error: String },
 
     /// Client → coordinator: one or more studies were pushed onto the
-    /// engine's submission queue. The driver drains the queue when this
-    /// frame arrives, which replaces its former 1 ms mailbox poll with
-    /// a single fully-blocking receive (no idle burn at any K).
+    /// engine's submission queues. The driver drains its shard's queue
+    /// when this frame arrives, which replaces its former 1 ms mailbox
+    /// poll with a single fully-blocking receive (no idle burn at any
+    /// K). The frame is shard-aware by construction: it is injected
+    /// with the submitted study's OWN session id in the frame header,
+    /// so sharded routing ([`shard_of`]) delivers it to exactly the
+    /// driver shard that owns the study.
     StudySubmitted,
+
+    /// Coordinator shard → coordinator shard: a global admission slot
+    /// was freed by a session reaching a terminal state on the sending
+    /// shard. The receiving shard re-runs its admission pass — without
+    /// this wake, a shard whose own sessions are all idle could sit
+    /// blocked on its mailbox with studies queued while capacity is
+    /// free. Only sent when the engine runs more than one driver shard
+    /// under a `max_in_flight` cap.
+    AdmissionWake,
 
     /// Orderly teardown of node threads.
     Shutdown,
@@ -152,6 +197,7 @@ impl Message {
             Message::Abort { .. } => "abort",
             Message::NodeError { .. } => "node_error",
             Message::StudySubmitted => "study_submitted",
+            Message::AdmissionWake => "admission_wake",
             Message::Shutdown => "shutdown",
         }
     }
@@ -160,8 +206,16 @@ impl Message {
 /// Codec errors.
 #[derive(Debug)]
 pub enum CodecError {
-    Truncated { at: usize, wanted: usize },
+    /// The buffer ended before the message did.
+    Truncated {
+        /// Byte offset at which decoding stopped.
+        at: usize,
+        /// How many more bytes were needed (0 = trailing garbage).
+        wanted: usize,
+    },
+    /// Unrecognized message (or Hessian-payload) tag byte.
     UnknownTag(u8),
+    /// A wire value claimed to be a field element but was ≥ p.
     BadField(u64),
 }
 
@@ -305,6 +359,7 @@ const TAG_STUDY_SUBMITTED: u8 = 8;
 const TAG_SESSION_CLOSE: u8 = 9;
 const TAG_CLOSE_ACK: u8 = 10;
 const TAG_ABORT: u8 = 11;
+const TAG_ADMISSION_WAKE: u8 = 12;
 
 const HTAG_PLAIN: u8 = 0;
 const HTAG_SHARED: u8 = 1;
@@ -400,6 +455,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.buf.extend_from_slice(bytes);
         }
         Message::StudySubmitted => w.u8(TAG_STUDY_SUBMITTED),
+        Message::AdmissionWake => w.u8(TAG_ADMISSION_WAKE),
         Message::Shutdown => w.u8(TAG_SHUTDOWN),
     }
     w.buf
@@ -448,6 +504,7 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
         }
         TAG_SHUTDOWN => Message::Shutdown,
         TAG_STUDY_SUBMITTED => Message::StudySubmitted,
+        TAG_ADMISSION_WAKE => Message::AdmissionWake,
         TAG_NODE_ERROR => {
             let node = r.u16()?;
             let is_center = r.u8()? != 0;
@@ -503,8 +560,12 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(SessionId, Message), CodecError> {
 /// owned `Vec`s first.
 #[derive(Clone, Copy, Debug)]
 pub enum HessianRef<'a> {
+    /// Borrowed packed-upper-triangle plaintext (pragmatic mode, lead
+    /// center).
     Plain(&'a [f64]),
+    /// Borrowed share slice of the packed triangle (full mode).
     Shared(&'a [Fp]),
+    /// No Hessian in this submission.
     Absent,
 }
 
@@ -683,6 +744,7 @@ mod tests {
             error: "boom: artifact bucket missing".to_string(),
         });
         roundtrip(Message::StudySubmitted);
+        roundtrip(Message::AdmissionWake);
         roundtrip(Message::Shutdown);
     }
 
@@ -806,6 +868,36 @@ mod tests {
             "close_ack"
         );
         assert_eq!(Message::Abort { reason: String::new() }.kind(), "abort");
+        assert_eq!(Message::AdmissionWake.kind(), "admission_wake");
+    }
+
+    #[test]
+    fn shard_of_is_stable_in_range_and_balanced() {
+        // Degenerate shard counts collapse to shard 0.
+        for s in [0u32, 1, 99, u32::MAX] {
+            assert_eq!(shard_of(s, 0), 0);
+            assert_eq!(shard_of(s, 1), 0);
+        }
+        for shards in [2usize, 3, 4, 7] {
+            let mut counts = vec![0usize; shards];
+            for session in 1..=4096u32 {
+                let sh = shard_of(session, shards);
+                assert!(sh < shards, "shard out of range");
+                // deterministic: same input, same shard, every call
+                assert_eq!(sh, shard_of(session, shards));
+                counts[sh] += 1;
+            }
+            // The finalizer avalanches sequential ids: every shard gets
+            // a reasonable slice of 4096 consecutive sessions (a plain
+            // modulo would also pass this; a broken hash mapping
+            // everything to one shard would not).
+            let min = *counts.iter().min().unwrap();
+            let max = *counts.iter().max().unwrap();
+            assert!(
+                min * 2 > max / 2 && min > 4096 / shards / 2,
+                "unbalanced shard assignment at {shards} shards: {counts:?}"
+            );
+        }
     }
 
     #[test]

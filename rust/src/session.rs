@@ -37,7 +37,9 @@ use std::time::Instant;
 
 /// One institution's private shard for one session.
 pub struct ShardData {
+    /// Design matrix (rows = this institution's records).
     pub x: Matrix,
+    /// 0/1 responses, aligned with `x`'s rows.
     pub y: Vec<f64>,
 }
 
@@ -61,16 +63,21 @@ impl ShardData {
 /// zero traffic — same pattern as the centers' busy counters.
 #[derive(Default)]
 pub struct InstMetricCells {
+    /// Local-statistics kernel time (XᵀWX / gradient / deviance), ns.
     pub compute_ns: AtomicU64,
+    /// Protection time (fixed-point encode + Shamir share + submit), ns.
     pub protect_ns: AtomicU64,
+    /// Newton iterations this institution served for the session.
     pub iterations: AtomicU64,
 }
 
 impl InstMetricCells {
+    /// Total local-compute seconds recorded so far.
     pub fn compute_secs(&self) -> f64 {
         self.compute_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Total protection seconds recorded so far.
     pub fn protect_secs(&self) -> f64 {
         self.protect_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
@@ -97,6 +104,9 @@ pub struct SessionSpec {
 }
 
 impl SessionSpec {
+    /// Assemble the out-of-band agreement for one session; telemetry
+    /// cells are created fresh (one busy counter per center, one
+    /// metric cell per institution).
     pub fn new(
         session: SessionId,
         shards: Vec<Arc<ShardData>>,
@@ -121,14 +131,17 @@ impl SessionSpec {
         }
     }
 
+    /// Model dimension (columns of every shard's design matrix).
     pub fn d(&self) -> usize {
         self.shards.first().map_or(0, |sh| sh.x.cols)
     }
 
+    /// Number of participating institutions (S).
     pub fn num_institutions(&self) -> usize {
         self.shards.len()
     }
 
+    /// Number of computation centers holding shares (w).
     pub fn num_centers(&self) -> usize {
         self.params.num_holders
     }
@@ -154,27 +167,38 @@ pub struct SessionRegistry {
 }
 
 impl SessionRegistry {
+    /// Fresh, empty registry behind an `Arc` (shared by the engine
+    /// front end, every driver shard, and every worker).
     pub fn new() -> Arc<SessionRegistry> {
         Arc::new(SessionRegistry::default())
     }
 
+    /// Distribute a spec; panics on a duplicate session id (ids are
+    /// allocated once, by the engine's submission counter).
     pub fn insert(&self, spec: Arc<SessionSpec>) {
         let prev = self.specs.lock().unwrap().insert(spec.session, spec);
         assert!(prev.is_none(), "duplicate session spec");
     }
 
+    /// Look a session up (how workers learn a session's shape on
+    /// first contact).
     pub fn get(&self, session: SessionId) -> Option<Arc<SessionSpec>> {
         self.specs.lock().unwrap().get(&session).cloned()
     }
 
+    /// Withdraw a spec (at drain start, so straggler frames can no
+    /// longer lazily re-open worker state).
     pub fn remove(&self, session: SessionId) {
         self.specs.lock().unwrap().remove(&session);
     }
 
+    /// Number of specs currently distributed — the registry half of
+    /// the engine's leak gate (0 after every session closed).
     pub fn len(&self) -> usize {
         self.specs.lock().unwrap().len()
     }
 
+    /// `len() == 0`.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -182,8 +206,11 @@ impl SessionRegistry {
 
 /// Final result of a session's Newton iteration, handed to the driver.
 pub struct SessionOutcome {
+    /// Fitted coefficients.
     pub beta: Vec<f64>,
+    /// Newton iterations performed.
     pub iterations: u32,
+    /// Penalized deviance after each iteration.
     pub deviance_trace: Vec<f64>,
     /// Coordinator-side reconstruction + Newton seconds (the centers'
     /// share of central time lives in the spec's busy counters).
@@ -217,6 +244,8 @@ pub struct SessionState {
     iterations: u32,
     responses: Vec<(u16, HessianPayload, Vec<Fp>, Fp)>,
     central_secs: f64,
+    /// When the driver admitted the session (total-time epoch; queue
+    /// wait before admission is reported separately).
     pub started: Instant,
     // ---- reconstruction hot-path caches (per-session, reused every
     // iteration; the quorum is the same each round, so the Lagrange
@@ -232,6 +261,9 @@ pub struct SessionState {
 }
 
 impl SessionState {
+    /// Build the Newton machine for one admitted session: β starts at
+    /// zero, reconstruction buffers are sized once from the spec's
+    /// `(d, w, t, mode)` and reused every iteration.
     pub fn new(
         spec: Arc<SessionSpec>,
         mode: SecurityMode,
@@ -268,10 +300,12 @@ impl SessionState {
         }
     }
 
+    /// This machine's session id.
     pub fn session(&self) -> SessionId {
         self.spec.session
     }
 
+    /// The session's out-of-band agreement.
     pub fn spec(&self) -> &Arc<SessionSpec> {
         &self.spec
     }

@@ -16,6 +16,19 @@
 //! but a session-scoped mailbox ([`Network::register_session`]) takes
 //! precedence for its session's frames, which lets tooling tap or
 //! isolate a single study on a shared fabric.
+//!
+//! A node may instead register **sharded**
+//! ([`Network::register_sharded`]): N mailboxes behind one `NodeId`,
+//! with each session-tagged frame delivered to shard
+//! [`shard_of`](crate::protocol::shard_of)`(session, N)`. This is the
+//! sharded study
+//! engine's coordinator — N driver threads each blocking on their own
+//! mailbox while workers keep addressing plain `NodeId::Coordinator` —
+//! and it degenerates exactly to a single mailbox at N = 1. Precedence
+//! is session-scoped > sharded > catch-all. Control frames that must
+//! reach one specific shard regardless of their session tag (per-shard
+//! shutdown, cross-shard admission wakes) use the shard-directed sends
+//! ([`Endpoint::send_to_shard`], [`Injector::send_to_shard`]).
 
 use crate::protocol::{decode_frame, encode_frame, Message, NodeId, SessionId, CONTROL_SESSION};
 use std::collections::HashMap;
@@ -38,6 +51,11 @@ pub struct SessionTraffic {
     pub submission_bytes: u64,
     pub central_bytes: u64,
     pub broadcast_bytes: u64,
+    /// Bytes on links outside the paper's three protocol classes —
+    /// client-injected frames (study nudges, engine shutdown) and
+    /// coordinator-shard ↔ coordinator-shard admission wakes. With this
+    /// class the four categories sum EXACTLY to `total_bytes`.
+    pub control_bytes: u64,
 }
 
 impl SessionTraffic {
@@ -50,7 +68,7 @@ impl SessionTraffic {
                 self.central_bytes += n;
             }
             (NodeId::Coordinator, NodeId::Institution(_)) => self.broadcast_bytes += n,
-            _ => {}
+            _ => self.control_bytes += n,
         }
     }
 
@@ -62,6 +80,7 @@ impl SessionTraffic {
         self.submission_bytes += other.submission_bytes;
         self.central_bytes += other.central_bytes;
         self.broadcast_bytes += other.broadcast_bytes;
+        self.control_bytes += other.control_bytes;
     }
 }
 
@@ -86,6 +105,10 @@ pub struct TrafficCounters {
     pub central_bytes: AtomicU64,
     /// Bytes on coordinator→institution broadcast links.
     pub broadcast_bytes: AtomicU64,
+    /// Bytes on every other link (client-injected control frames,
+    /// cross-shard admission wakes) — see
+    /// [`SessionTraffic::control_bytes`].
+    pub control_bytes: AtomicU64,
     /// Per-session attribution. Entries are retained after a session
     /// completes so callers can read a finished study's traffic; for
     /// truly unbounded deployments [`TrafficCounters::retire_session`]
@@ -121,6 +144,7 @@ impl TrafficCounters {
             submission_bytes: self.submission_bytes.load(Ordering::Relaxed),
             central_bytes: self.central_bytes.load(Ordering::Relaxed),
             broadcast_bytes: self.broadcast_bytes.load(Ordering::Relaxed),
+            control_bytes: self.control_bytes.load(Ordering::Relaxed),
             per_session,
             retired_sessions: retired.sessions,
             retired_bytes: retired.traffic.total_bytes,
@@ -159,6 +183,7 @@ impl TrafficCounters {
             submission_bytes: t.submission_bytes,
             central_bytes: t.central_bytes,
             broadcast_bytes: t.broadcast_bytes,
+            control_bytes: t.control_bytes,
             per_session: vec![(session, t.total_bytes)],
             retired_sessions: 0,
             retired_bytes: 0,
@@ -183,7 +208,9 @@ impl TrafficCounters {
             (NodeId::Coordinator, NodeId::Institution(_)) => {
                 self.broadcast_bytes.fetch_add(n, Ordering::Relaxed);
             }
-            _ => {}
+            _ => {
+                self.control_bytes.fetch_add(n, Ordering::Relaxed);
+            }
         }
         per.entry(session).or_default().record(from, to, n);
     }
@@ -197,6 +224,10 @@ pub struct TrafficSnapshot {
     pub submission_bytes: u64,
     pub central_bytes: u64,
     pub broadcast_bytes: u64,
+    /// Bytes outside the three protocol classes (client-injected
+    /// control frames, cross-shard admission wakes);
+    /// `submission + central + broadcast + control == total` exactly.
+    pub control_bytes: u64,
     /// Byte totals attributed per session (sorted by session id); the
     /// entries plus `retired_bytes` always sum to `total_bytes`.
     pub per_session: Vec<(SessionId, u64)>,
@@ -226,6 +257,7 @@ impl TrafficSnapshot {
             submission_bytes: self.submission_bytes - earlier.submission_bytes,
             central_bytes: self.central_bytes - earlier.central_bytes,
             broadcast_bytes: self.broadcast_bytes - earlier.broadcast_bytes,
+            control_bytes: self.control_bytes - earlier.control_bytes,
             per_session,
             retired_sessions: self.retired_sessions - earlier.retired_sessions,
             retired_bytes: self.retired_bytes - earlier.retired_bytes,
@@ -286,6 +318,10 @@ struct RouteKey {
 /// plus global and per-session traffic counters.
 pub struct Network {
     senders: Mutex<HashMap<RouteKey, Sender<Frame>>>,
+    /// Sharded nodes: N mailboxes behind one `NodeId`, selected per
+    /// frame by `protocol::shard_of(session, N)` (see the module docs
+    /// for routing precedence).
+    sharded: Mutex<HashMap<NodeId, Vec<Sender<Frame>>>>,
     pub counters: TrafficCounters,
 }
 
@@ -293,6 +329,7 @@ impl Network {
     pub fn new() -> Arc<Network> {
         Arc::new(Network {
             senders: Mutex::new(HashMap::new()),
+            sharded: Mutex::new(HashMap::new()),
             counters: TrafficCounters::default(),
         })
     }
@@ -314,6 +351,11 @@ impl Network {
 
     fn register_key(self: &Arc<Network>, key: RouteKey) -> Endpoint {
         let (tx, rx) = channel();
+        assert!(
+            key.session.is_some() || !self.sharded.lock().unwrap().contains_key(&key.node),
+            "node {} is registered sharded; register_sharded owns its catch-all routing",
+            key.node
+        );
         let prev = self.senders.lock().unwrap().insert(key, tx);
         assert!(
             prev.is_none(),
@@ -326,6 +368,38 @@ impl Network {
             net: Arc::clone(self),
             inbox: rx,
         }
+    }
+
+    /// Register `id` as a **sharded** node: `shards` mailboxes behind
+    /// one address, with session-tagged frames delivered to shard
+    /// [`crate::protocol::shard_of`]`(session, shards)`. Returns the
+    /// endpoints in shard order. `shards = 1` is routing-identical to
+    /// a plain [`Network::register`]. Senders need not know the shard
+    /// count — they keep addressing the plain `NodeId`.
+    pub fn register_sharded(self: &Arc<Network>, id: NodeId, shards: usize) -> Vec<Endpoint> {
+        assert!(shards >= 1, "sharded registration needs >= 1 shard");
+        assert!(
+            !self
+                .senders
+                .lock()
+                .unwrap()
+                .contains_key(&RouteKey { node: id, session: None }),
+            "node {id} already has a catch-all mailbox"
+        );
+        let mut endpoints = Vec::with_capacity(shards);
+        let mut txs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            endpoints.push(Endpoint {
+                id,
+                net: Arc::clone(self),
+                inbox: rx,
+            });
+        }
+        let prev = self.sharded.lock().unwrap().insert(id, txs);
+        assert!(prev.is_none(), "duplicate sharded registration of {id}");
+        endpoints
     }
 
     /// A send-only attachment for client code (no mailbox, never a
@@ -348,18 +422,58 @@ impl Network {
         session: SessionId,
         bytes: Vec<u8>,
     ) -> Result<(), TransportError> {
+        self.route_with(from, to, session, bytes, None)
+    }
+
+    /// Deliver one encoded frame. `shard_override` forces delivery to
+    /// a specific shard mailbox of a sharded destination (control
+    /// traffic that must reach one driver regardless of its session
+    /// tag); `None` resolves session-scoped > sharded-by-hash >
+    /// catch-all. Registration enforces that a node is never BOTH
+    /// sharded and catch-all, so the hot path (worker-bound protocol
+    /// frames: scoped miss, catch-all hit) resolves under a single
+    /// lock acquisition — only coordinator-bound frames of a sharded
+    /// engine touch the second, sharded map.
+    fn route_with(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        session: SessionId,
+        bytes: Vec<u8>,
+        shard_override: Option<usize>,
+    ) -> Result<(), TransportError> {
         let n = bytes.len() as u64;
-        let senders = self.senders.lock().unwrap();
-        let tx = senders
-            .get(&RouteKey {
-                node: to,
-                session: Some(session),
-            })
-            .or_else(|| senders.get(&RouteKey { node: to, session: None }))
-            .ok_or(TransportError::UnknownDestination(to))?;
-        tx.send(Frame { from, bytes })
-            .map_err(|_| TransportError::Disconnected(to))?;
-        drop(senders);
+        let delivered = 'deliver: {
+            if shard_override.is_none() {
+                let senders = self.senders.lock().unwrap();
+                if let Some(tx) = senders
+                    .get(&RouteKey {
+                        node: to,
+                        session: Some(session),
+                    })
+                    .or_else(|| senders.get(&RouteKey { node: to, session: None }))
+                {
+                    break 'deliver tx
+                        .send(Frame { from, bytes })
+                        .map_err(|_| TransportError::Disconnected(to));
+                }
+                drop(senders);
+            }
+            let sharded = self.sharded.lock().unwrap();
+            let Some(txs) = sharded.get(&to) else {
+                break 'deliver Err(TransportError::UnknownDestination(to));
+            };
+            let shard = match shard_override {
+                Some(s) => s,
+                None => crate::protocol::shard_of(session, txs.len()),
+            };
+            let tx = txs
+                .get(shard)
+                .ok_or(TransportError::UnknownDestination(to))?;
+            tx.send(Frame { from, bytes })
+                .map_err(|_| TransportError::Disconnected(to))
+        };
+        delivered?;
         self.counters.record(from, to, session, n);
         Ok(())
     }
@@ -389,6 +503,26 @@ impl Injector {
     pub fn send(&self, to: NodeId, msg: &Message) -> Result<(), TransportError> {
         self.send_session(to, CONTROL_SESSION, msg)
     }
+
+    /// Inject a control frame directly into one shard mailbox of a
+    /// sharded destination, bypassing the session-hash selection —
+    /// how the engine front end delivers per-shard `Shutdown` frames.
+    /// Errors with `UnknownDestination` if `to` is not registered
+    /// sharded or `shard` is out of range.
+    pub fn send_to_shard(
+        &self,
+        to: NodeId,
+        shard: usize,
+        msg: &Message,
+    ) -> Result<(), TransportError> {
+        self.net.route_with(
+            self.from,
+            to,
+            CONTROL_SESSION,
+            encode_frame(CONTROL_SESSION, msg),
+            Some(shard),
+        )
+    }
 }
 
 /// One node's attachment to the network.
@@ -413,6 +547,24 @@ impl Endpoint {
     /// [`CONTROL_SESSION`].
     pub fn send(&self, to: NodeId, msg: &Message) -> Result<(), TransportError> {
         self.send_session(to, CONTROL_SESSION, msg)
+    }
+
+    /// Send a control frame directly to one shard mailbox of a sharded
+    /// destination (see [`Injector::send_to_shard`]) — how driver
+    /// shards wake their peers when a global admission slot frees.
+    pub fn send_to_shard(
+        &self,
+        to: NodeId,
+        shard: usize,
+        msg: &Message,
+    ) -> Result<(), TransportError> {
+        self.net.route_with(
+            self.id,
+            to,
+            CONTROL_SESSION,
+            encode_frame(CONTROL_SESSION, msg),
+            Some(shard),
+        )
     }
 
     /// Send a pre-encoded wire frame (session header already included)
@@ -596,9 +748,10 @@ mod tests {
             crate::protocol::encode_frame(CONTROL_SESSION, &sub).len() as u64
         );
         assert!(snap.central_bytes > 0);
+        assert_eq!(snap.control_bytes, 0, "no client/control frames sent here");
         assert_eq!(
             snap.total_bytes,
-            snap.broadcast_bytes + snap.submission_bytes + snap.central_bytes
+            snap.broadcast_bytes + snap.submission_bytes + snap.central_bytes + snap.control_bytes
         );
         // drain mailboxes so senders don't see disconnects (hygiene)
         let _ = inst.recv().unwrap();
@@ -738,9 +891,11 @@ mod tests {
         let (_, session, msg) = coord.recv_session().unwrap();
         assert_eq!(session, 9);
         assert_eq!(msg, Message::Shutdown);
-        // injected frames are counted like any other traffic
+        // injected frames are counted like any other traffic — in the
+        // control class, so the four classes still sum to the total
         let snap = coord.counters();
         assert_eq!(snap.total_messages, 2);
+        assert_eq!(snap.control_bytes, snap.total_bytes);
         let sum: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
         assert_eq!(sum, snap.total_bytes);
         // an injector is not a destination
@@ -822,6 +977,108 @@ mod tests {
         let net = Network::new();
         let _a = net.register(NodeId::Coordinator);
         let _b = net.register(NodeId::Coordinator);
+    }
+
+    #[test]
+    fn sharded_routing_delivers_by_session_hash() {
+        let net = Network::new();
+        let shards = net.register_sharded(NodeId::Coordinator, 3);
+        let sender = net.register(NodeId::Center(0));
+        for session in 1..=64u32 {
+            sender
+                .send_session(NodeId::Coordinator, session, &Message::Shutdown)
+                .unwrap();
+            let owner = crate::protocol::shard_of(session, 3);
+            let (from, s, msg) = shards[owner].recv_session().unwrap();
+            assert_eq!(from, NodeId::Center(0));
+            assert_eq!(s, session);
+            assert_eq!(msg, Message::Shutdown);
+        }
+        // No misdelivery: every other shard mailbox is empty.
+        for ep in &shards {
+            assert!(ep.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        }
+        // Counters attribute sharded traffic like any other.
+        let snap = sender.counters();
+        assert_eq!(snap.total_messages, 64);
+        assert_eq!(snap.per_session.len(), 64);
+    }
+
+    #[test]
+    fn session_scoped_mailbox_beats_sharded_routing() {
+        let net = Network::new();
+        let shards = net.register_sharded(NodeId::Coordinator, 2);
+        let scoped = net.register_session(NodeId::Coordinator, 7);
+        let sender = net.register(NodeId::Center(0));
+        sender
+            .send_session(NodeId::Coordinator, 7, &Message::Shutdown)
+            .unwrap();
+        let (_, s, _) = scoped.recv_session().unwrap();
+        assert_eq!(s, 7);
+        for ep in &shards {
+            assert!(ep.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn shard_directed_sends_reach_the_named_shard_only() {
+        let net = Network::new();
+        let shards = net.register_sharded(NodeId::Coordinator, 3);
+        let inj = net.injector(NodeId::Client);
+        inj.send_to_shard(NodeId::Coordinator, 2, &Message::Shutdown).unwrap();
+        let (from, s, msg) = shards[2].recv_session().unwrap();
+        assert_eq!(from, NodeId::Client);
+        assert_eq!(s, CONTROL_SESSION);
+        assert_eq!(msg, Message::Shutdown);
+        assert!(shards[0].recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        assert!(shards[1].recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        // Out-of-range shard and non-sharded destinations error.
+        assert!(matches!(
+            inj.send_to_shard(NodeId::Coordinator, 9, &Message::Shutdown),
+            Err(TransportError::UnknownDestination(_))
+        ));
+        let _solo = net.register(NodeId::Center(0));
+        assert!(matches!(
+            inj.send_to_shard(NodeId::Center(0), 0, &Message::Shutdown),
+            Err(TransportError::UnknownDestination(_))
+        ));
+        // Endpoint-side shard-directed send (cross-shard admission wake).
+        shards[0]
+            .send_to_shard(NodeId::Coordinator, 1, &Message::AdmissionWake)
+            .unwrap();
+        let (from, _, msg) = shards[1].recv_session().unwrap();
+        assert_eq!(from, NodeId::Coordinator);
+        assert_eq!(msg, Message::AdmissionWake);
+    }
+
+    #[test]
+    fn single_shard_registration_is_routing_identical_to_plain() {
+        let net = Network::new();
+        let shards = net.register_sharded(NodeId::Coordinator, 1);
+        let sender = net.register(NodeId::Institution(0));
+        for session in [CONTROL_SESSION, 1, 42, SessionId::MAX] {
+            sender
+                .send_session(NodeId::Coordinator, session, &Message::StudySubmitted)
+                .unwrap();
+            let (_, s, _) = shards[0].recv_session().unwrap();
+            assert_eq!(s, session);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_then_catch_all_registration_panics() {
+        let net = Network::new();
+        let _shards = net.register_sharded(NodeId::Coordinator, 2);
+        let _catch_all = net.register(NodeId::Coordinator);
+    }
+
+    #[test]
+    #[should_panic]
+    fn catch_all_then_sharded_registration_panics() {
+        let net = Network::new();
+        let _catch_all = net.register(NodeId::Coordinator);
+        let _shards = net.register_sharded(NodeId::Coordinator, 2);
     }
 }
 

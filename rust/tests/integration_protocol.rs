@@ -309,15 +309,22 @@ fn traffic_accounting_is_complete() {
     };
     let fit = privlr::coordinator::secure_fit(&ds, &cfg).unwrap();
     let tr = fit.metrics.traffic;
+    // The four classes partition every byte exactly: the paper's three
+    // protocol classes plus the control class (client-injected frames).
     assert_eq!(
         tr.total_bytes,
-        tr.submission_bytes + tr.central_bytes + tr.broadcast_bytes,
+        tr.submission_bytes + tr.central_bytes + tr.broadcast_bytes + tr.control_bytes,
         "all links must be classified"
+    );
+    assert!(
+        tr.control_bytes > 0,
+        "the StudySubmitted nudge and client Shutdown ride the control class"
     );
     // message count: 1 StudySubmitted nudge; per iter: S broadcasts +
     // S·w submissions + w requests + w responses; acknowledged teardown
     // of the session: (S+w) SessionClose + (S+w) CloseAck; engine
-    // shutdown: 1 client Shutdown + (S+w) worker shutdowns.
+    // shutdown: 1 client Shutdown to the (single) driver shard +
+    // (S+w) worker shutdowns.
     let (s, w) = (3u64, 5u64);
     let iters = fit.metrics.iterations as u64;
     let expected = iters * (s + s * w + w + w) + 3 * (s + w) + 2;

@@ -81,6 +81,7 @@ fn all_variants(rng: &mut SplitMix64) -> Vec<Message> {
             error: format!("err-{}", rng.next_u64()),
         },
         Message::StudySubmitted,
+        Message::AdmissionWake,
         Message::Shutdown,
     ]
 }

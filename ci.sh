@@ -4,6 +4,9 @@
 #   ./ci.sh            build + style gates + full test suite + explicit gates
 #   PRIVLR_CI_BENCH=1 ./ci.sh   additionally runs the fast benches and
 #                               refreshes BENCH_kernels.json
+#   PRIVLR_CHAOS=1 ./ci.sh      additionally re-runs the sharded
+#                               bit-identity gate under seeded random
+#                               fault plans (drop/delay/duplicate)
 #
 # The kernel-equivalence (tests/prop_kernels.rs) and session-engine
 # (tests/integration_sessions.rs) suites are run by `cargo test`
@@ -35,6 +38,15 @@ cargo test -q --test integration_lifecycle
 
 echo "== secure pipeline gate (fused share thread-invariance + zero-alloc) =="
 cargo test -q --test prop_secure_pipeline
+
+echo "== fault tolerance gate (kill/restart replay bit-identity, retry exhaustion, chaos transport) =="
+cargo test -q --test integration_faults
+if [ "${PRIVLR_CHAOS:-0}" = "1" ]; then
+    # Chaos mode: the sharded bit-identity gate re-runs under a seeded
+    # random FaultPlan (drops/delays/duplicates) at N ∈ {1,2,4} shards.
+    echo "== chaos mode (PRIVLR_CHAOS=1): seeded random fault plans =="
+    PRIVLR_CHAOS=1 cargo test -q --test integration_faults -- --ignored
+fi
 
 # Style gates run AFTER build/test on purpose: the repo has been
 # authored in toolchain-less containers, so the first real run must

@@ -184,4 +184,108 @@ fn main() {
     } else {
         println!("report section 'shard_scaling' written to {}", path.display());
     }
+
+    // ---- fault_recovery: throughput under worker churn at K=16 -----
+    // Same fixed workload (d=10, K=16), but a fraction of the sample's
+    // sessions experience a worker death: the bench thread kills a
+    // rotating institution mid-makespan and restarts it immediately,
+    // so affected sessions take the suspend → re-admit → replay path
+    // (RetryPolicy: 3 retries, 10ms backoff). The death rate maps to
+    // kill events per sample: 0% → 0, 5% → 1, 20% → 3 at K=16. The
+    // overhead column is the fits/sec ratio against the 0% cell — the
+    // price of recovery, not of faults (replay is bit-identical;
+    // sessions whose budget is exhausted anyway are counted aborted).
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut no_death_fits_per_sec = f64::NAN;
+    for death_rate in [0.0f64, 0.05, 0.20] {
+        let kills = (k as f64 * death_rate).round() as usize;
+        let engine = StudyEngine::with_options(
+            s,
+            cfg.num_centers,
+            EngineOptions {
+                retry: privlr::engine::RetryPolicy {
+                    max_retries: 3,
+                    backoff: std::time::Duration::from_millis(10),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .expect("engine");
+        let name = format!("multifit n={n} d={d} S={s} K={k} deaths={kills}");
+        let mut completed = 0u64;
+        let mut aborted = 0u64;
+        let summary: Summary = run_bench(&name, bcfg, || {
+            let handles: Vec<_> = (0..k)
+                .map(|_| {
+                    engine
+                        .submit_shared(&cfg, shards.clone(), SubmitOptions::default())
+                        .expect("submit")
+                })
+                .collect();
+            for i in 0..kills {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                let j = i % s;
+                engine.kill_institution(j).expect("kill");
+                engine.restart_institution(j).expect("restart");
+            }
+            let mut iters = 0u32;
+            for h in handles {
+                match h.join() {
+                    Ok(fit) => {
+                        completed += 1;
+                        iters += fit.metrics.iterations;
+                    }
+                    // A session can exhaust its budget when several
+                    // kills land on it; that is the policy working.
+                    Err(_) => aborted += 1,
+                }
+            }
+            iters
+        });
+        engine.shutdown().expect("shutdown");
+        let fits_per_sec = k as f64 / summary.mean_s;
+        if death_rate == 0.0 {
+            no_death_fits_per_sec = fits_per_sec;
+        }
+        let overhead = fits_per_sec / no_death_fits_per_sec;
+        rows.push(vec![
+            format!("{:.0}%", death_rate * 100.0),
+            format!("kills={kills}"),
+            format!("{:.3}s", summary.mean_s),
+            format!("{fits_per_sec:.2}"),
+            format!("{overhead:.2}x"),
+        ]);
+        let mut entry = summary_json(&summary);
+        if let Json::Obj(map) = &mut entry {
+            map.insert("death_rate".into(), json::num(death_rate));
+            map.insert("kills_per_sample".into(), json::num(kills as f64));
+            map.insert("concurrent_sessions".into(), json::num(k as f64));
+            map.insert("d".into(), json::num(d as f64));
+            map.insert("institutions".into(), json::num(s as f64));
+            map.insert("fits_per_sec".into(), json::num(fits_per_sec));
+            map.insert("vs_no_deaths".into(), json::num(overhead));
+            map.insert("completed".into(), json::num(completed as f64));
+            map.insert("aborted".into(), json::num(aborted as f64));
+        }
+        entries.push(entry);
+    }
+    print_kv_table(
+        "fault recovery throughput (S=4, d=10, K=16; kill+restart mid-makespan)",
+        &["deaths", "events", "makespan", "fits/sec", "vs 0%"],
+        &rows,
+    );
+    let report = json::obj(vec![
+        (
+            "note",
+            json::s("fits/sec of K=16 concurrent sessions while a rotating institution worker is killed and restarted mid-makespan at 0%/5%/20% death rates (RetryPolicy: 3 retries, 10ms backoff; recovered fits replay bit-identically)"),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    if let Err(e) = update_json_report(&path, "fault_recovery", report) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("report section 'fault_recovery' written to {}", path.display());
+    }
 }

@@ -47,6 +47,11 @@ struct IterState {
     /// buffered per institution, folded in id order at response time
     /// (f64 addition is order-sensitive; share folds above are not).
     h_plain_pending: Vec<(u16, Vec<f64>)>,
+    /// Institutions already folded this iteration. Makes the fold
+    /// idempotent: a duplicated submission frame (fault injection, or
+    /// a pre-suspension straggler racing a replayed round) is ignored
+    /// instead of double-counted into the accumulator.
+    seen: Vec<u16>,
     /// Pending aggregate request: expected submission count.
     pending_request: Option<u16>,
 }
@@ -80,6 +85,7 @@ impl CenterSession {
                     self.full_security,
                 ),
                 h_plain_pending: Vec::new(),
+                seen: Vec::new(),
                 pending_request: None,
             },
         }
@@ -89,6 +95,7 @@ impl CenterSession {
     fn recycle_iter_state(&mut self, mut st: IterState) {
         st.acc.reset();
         st.h_plain_pending.clear();
+        st.seen.clear();
         st.pending_request = None;
         self.free.push(st);
     }
@@ -114,6 +121,17 @@ pub fn run_center_worker(cfg: CenterWorkerConfig, ep: Endpoint) -> anyhow::Resul
         let (from, session, msg) = ep.recv_session()?;
         match msg {
             Message::Shutdown => return Ok(()),
+            Message::SessionReopen { .. } => {
+                // A suspended session is about to replay its current
+                // round: discard every trace of the interrupted
+                // attempt (partial accumulators included) so the
+                // replay re-opens lazily from the registry spec.
+                // Idempotent — never-opened sessions are a no-op, so
+                // duplicated reopen frames are harmless. No ack: the
+                // replayed round's own traffic follows on the same
+                // FIFO mailbox, behind this frame.
+                drop_session(&mut sessions, session);
+            }
             Message::SessionClose { .. } | Message::Abort { .. } => {
                 // State is freed BEFORE the ack goes out: once the
                 // driver has every ack, zero-leak is a fact, not a race.
@@ -198,6 +216,14 @@ fn handle_message(
                 cs.iters.insert(iter, st);
             }
             let st = cs.iters.get_mut(&iter).unwrap();
+            // Idempotent fold: a duplicate (institution, iter) frame
+            // carries bit-identical content (shares are a pure
+            // function of the spec's derived seed), so it is dropped
+            // rather than double-folded.
+            if st.seen.contains(&institution) {
+                return Ok(());
+            }
+            st.seen.push(institution);
             // Busy time is recorded BEFORE any send: the response's
             // arrival at the driver is what ends a round, so counter
             // updates must happen-before it for the per-session
@@ -613,6 +639,117 @@ mod tests {
             // g folded per session: (1 + 2 + 3)·session in the field.
             assert_eq!(g[0], Fp::new(6 * session as u64));
         }
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// A duplicated submission frame must not double-count: the
+    /// aggregate over {inst0, inst0-duplicate, inst1} equals the clean
+    /// two-institution aggregate.
+    #[test]
+    fn duplicate_submission_is_idempotent() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst0 = net.register(NodeId::Institution(0));
+        let inst1 = net.register(NodeId::Institution(1));
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![make_spec(4, 2, 1, 1, 1, false)]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        let submit = |ep: &crate::transport::Endpoint, j: u16, g: u64, h: f64| {
+            ep.send_session(
+                NodeId::Center(0),
+                4,
+                &Message::ShareSubmission {
+                    iter: 0,
+                    institution: j,
+                    hessian: HessianPayload::Plain(vec![h]),
+                    g_share: vec![Fp::new(g)],
+                    dev_share: Fp::new(g),
+                },
+            )
+            .unwrap();
+        };
+        submit(&inst0, 0, 5, 10.0);
+        submit(&inst0, 0, 5, 10.0); // duplicated frame, bit-identical
+        submit(&inst1, 1, 7, 20.0);
+        coord
+            .send_session(NodeId::Center(0), 4, &Message::AggregateRequest { iter: 0, expected: 2 })
+            .unwrap();
+        let (_, _, resp) = coord.recv_session().unwrap();
+        match resp {
+            Message::AggregateResponse { hessian, g_share, dev_share, .. } => {
+                assert_eq!(hessian, HessianPayload::Plain(vec![30.0]));
+                assert_eq!(g_share, vec![Fp::new(12)]);
+                assert_eq!(dev_share, Fp::new(12));
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// `SessionReopen` wipes the interrupted round's partial state so a
+    /// replay starts clean; unknown sessions are a silent no-op.
+    #[test]
+    fn session_reopen_clears_partial_state() {
+        use std::sync::atomic::AtomicUsize;
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        let cep = net.register(NodeId::Center(0));
+        let registry = registry_with(vec![make_spec(8, 2, 1, 1, 1, false)]);
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: gauge.clone() };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        // A partial fold from the interrupted attempt...
+        inst.send_session(
+            NodeId::Center(0),
+            8,
+            &Message::ShareSubmission {
+                iter: 0,
+                institution: 0,
+                hessian: HessianPayload::Plain(vec![999.0]),
+                g_share: vec![Fp::new(999)],
+                dev_share: Fp::new(999),
+            },
+        )
+        .unwrap();
+        // ...is wiped by the reopen (idempotent for session 77 which
+        // was never opened)...
+        coord
+            .send_session(NodeId::Center(0), 8, &Message::SessionReopen { iter: 0 })
+            .unwrap();
+        coord
+            .send_session(NodeId::Center(0), 77, &Message::SessionReopen { iter: 0 })
+            .unwrap();
+        // ...so the replayed round aggregates only its own frames.
+        for (j, g) in [(0u16, 5u64), (1, 7)] {
+            inst.send_session(
+                NodeId::Center(0),
+                8,
+                &Message::ShareSubmission {
+                    iter: 0,
+                    institution: j,
+                    hessian: HessianPayload::Plain(vec![g as f64]),
+                    g_share: vec![Fp::new(g)],
+                    dev_share: Fp::new(g),
+                },
+            )
+            .unwrap();
+        }
+        coord
+            .send_session(NodeId::Center(0), 8, &Message::AggregateRequest { iter: 0, expected: 2 })
+            .unwrap();
+        let (_, _, resp) = coord.recv_session().unwrap();
+        match resp {
+            Message::AggregateResponse { hessian, g_share, .. } => {
+                assert_eq!(hessian, HessianPayload::Plain(vec![12.0]));
+                assert_eq!(g_share, vec![Fp::new(12)]);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        assert_eq!(gauge.load(Ordering::Relaxed), 1, "reopened session is live again");
         coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }

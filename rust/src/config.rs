@@ -72,6 +72,37 @@ impl EngineKind {
     }
 }
 
+/// What the study engine does with a session whose crash-fault retry
+/// budget is exhausted (see `engine::RetryPolicy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnExhausted {
+    /// Abort the session: its handle resolves with the fault error and
+    /// the surviving workers drain their per-session state (default).
+    #[default]
+    Abort,
+    /// Park the session indefinitely (`Suspended` on the lifecycle
+    /// board) until the engine shuts down — for operators who want to
+    /// inspect a repeatedly failing consortium before losing the fit.
+    Park,
+}
+
+impl OnExhausted {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "abort" => Ok(OnExhausted::Abort),
+            "park" => Ok(OnExhausted::Park),
+            other => anyhow::bail!("unknown retry-exhausted policy '{other}' (abort|park)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OnExhausted::Abort => "abort",
+            OnExhausted::Park => "park",
+        }
+    }
+}
+
 /// Full specification of one secure-regression run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -126,6 +157,16 @@ pub struct ExperimentConfig {
     /// blocks, rejects, or sheds per its `engine::SubmitPolicy`
     /// (0 = unbounded lanes).
     pub lane_capacity: usize,
+    /// Crash-fault retry budget: how many worker-loss suspensions one
+    /// session may survive before the exhaustion policy applies
+    /// (0 = fail fast on the first loss). See `engine::RetryPolicy`.
+    pub retry_max: u32,
+    /// Backoff before a suspended session is re-admitted, in
+    /// milliseconds — the window in which a restarted worker can
+    /// re-register.
+    pub retry_backoff_ms: u64,
+    /// What exhaustion does with the session: abort (default) or park.
+    pub retry_on_exhausted: OnExhausted,
 }
 
 impl Default for ExperimentConfig {
@@ -153,6 +194,9 @@ impl Default for ExperimentConfig {
             auto_retire: 0,
             driver_shards: 1,
             lane_capacity: 0,
+            retry_max: 0,
+            retry_backoff_ms: 0,
+            retry_on_exhausted: OnExhausted::Abort,
         }
     }
 }
@@ -200,6 +244,9 @@ impl ExperimentConfig {
             ("auto_retire", json::num(self.auto_retire as f64)),
             ("driver_shards", json::num(self.driver_shards as f64)),
             ("lane_capacity", json::num(self.lane_capacity as f64)),
+            ("retry_max", json::num(self.retry_max as f64)),
+            ("retry_backoff_ms", json::num(self.retry_backoff_ms as f64)),
+            ("retry_on_exhausted", json::s(self.retry_on_exhausted.name())),
         ])
     }
 
@@ -279,6 +326,15 @@ impl ExperimentConfig {
         }
         if let Some(c) = v.get("lane_capacity").as_usize() {
             cfg.lane_capacity = c;
+        }
+        if let Some(r) = v.get("retry_max").as_u64() {
+            cfg.retry_max = r as u32;
+        }
+        if let Some(b) = v.get("retry_backoff_ms").as_u64() {
+            cfg.retry_backoff_ms = b;
+        }
+        if let Some(s) = v.get("retry_on_exhausted").as_str() {
+            cfg.retry_on_exhausted = OnExhausted::parse(s)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -363,6 +419,42 @@ mod tests {
         // Out-of-range shard counts are rejected at validation.
         let v = Json::parse(r#"{"driver_shards": 4096}"#).unwrap();
         assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_roundtrip_and_default() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.retry_max, 0, "fail fast on worker loss by default");
+        assert_eq!(cfg.retry_backoff_ms, 0);
+        assert_eq!(cfg.retry_on_exhausted, OnExhausted::Abort);
+        cfg.retry_max = 3;
+        cfg.retry_backoff_ms = 250;
+        cfg.retry_on_exhausted = OnExhausted::Park;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.retry_max, 3);
+        assert_eq!(back.retry_backoff_ms, 250);
+        assert_eq!(back.retry_on_exhausted, OnExhausted::Park);
+        let v = Json::parse(
+            r#"{"retry_max": 2, "retry_backoff_ms": 10, "retry_on_exhausted": "park"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.retry_max, 2);
+        assert_eq!(cfg.retry_backoff_ms, 10);
+        assert_eq!(cfg.retry_on_exhausted, OnExhausted::Park);
+        let v = Json::parse(r#"{"retry_on_exhausted": "retry-forever"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn on_exhausted_parse_and_names() {
+        assert_eq!(OnExhausted::parse("abort").unwrap(), OnExhausted::Abort);
+        assert_eq!(OnExhausted::parse("PARK").unwrap(), OnExhausted::Park);
+        assert!(OnExhausted::parse("panic").is_err());
+        for p in [OnExhausted::Abort, OnExhausted::Park] {
+            assert_eq!(OnExhausted::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(OnExhausted::default(), OnExhausted::Abort);
     }
 
     #[test]

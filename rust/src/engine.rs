@@ -18,7 +18,10 @@
 //!
 //! ```text
 //! Queued ──admit──▶ Admitted ──first response──▶ Running
-//!   │                                               │
+//!   │                  ▲   │                        │
+//!   │                  │   └──── worker died ──▶ Suspended
+//!   │                  │     (backoff, re-admit)    │
+//!   │                  └────────────────────────────┘
 //!   │ deadline expired                    Done / fatal error
 //!   ▼                                               ▼
 //! Aborted ◀──all CloseAcks (abort)── Draining ──all CloseAcks──▶ Closed
@@ -38,6 +41,18 @@
 //!   per-session state is freed does the session reach its terminal
 //!   state and its result reach the handle — leaks are therefore
 //!   provable, not hoped-for (`tests/integration_lifecycle.rs`).
+//! * **Suspended** — a worker in the session's consortium died
+//!   ([`Message::WorkerDown`](crate::protocol::Message::WorkerDown) or
+//!   an unreachable destination mid-round). The session leaves the
+//!   active set, releases its admission slot, and — while its
+//!   [`RetryPolicy`] budget lasts — re-enters its priority lane after
+//!   the configured backoff. Re-admission sends every participant a
+//!   `SessionReopen` (workers discard any partial per-session state
+//!   and lazily re-open from the registry spec) and then REPLAYS the
+//!   current Newton round from the coordinator's own state machine.
+//!   Replay is bit-deterministic: shares are pure functions of
+//!   `(spec, β, derive_seed(share seed, iter))`, so a crashed-and-
+//!   recovered fit produces byte-identical β̂ to an uninterrupted one.
 //! * **Closed / Aborted** — terminal; the auto-retire policy
 //!   ([`EngineOptions::auto_retire`]) folds sessions that finished N
 //!   completions ago into the network's retired-traffic aggregate so
@@ -79,6 +94,24 @@
 //! QUEUE, not concurrency — `max_in_flight` still governs how many
 //! admitted sessions run at once.
 //!
+//! # Fault tolerance
+//!
+//! The engine tolerates **crash faults** (fail-stop workers), not
+//! Byzantine ones. [`StudyEngine::kill_institution`] /
+//! [`StudyEngine::kill_center`] tear a worker's endpoint out of the
+//! transport (the fault-injection harness drives these), broadcast
+//! [`Message::WorkerDown`](crate::protocol::Message::WorkerDown) to
+//! every driver shard, and the owning shards suspend the affected
+//! sessions as above. [`StudyEngine::restart_institution`] /
+//! [`StudyEngine::restart_center`] re-register the node under its old
+//! id; the restarted worker rebuilds per-session state lazily from the
+//! shared [`SessionRegistry`] on first contact, so recovery needs no
+//! state transfer. A dedicated deadline timer wheel wakes the owning
+//! shard the moment a queued study's admission deadline lapses (even
+//! while the admission cap is saturated and no protocol frame would
+//! otherwise arrive) and paces suspended sessions' re-admission
+//! backoffs.
+//!
 //! Determinism: results of concurrent fits are **bit-identical** to
 //! the same fits run sequentially, under ANY priority assignment,
 //! admission cap, shard count, and backpressure policy — scheduling
@@ -92,7 +125,7 @@
 //! end: uncapped, capped + prioritized, and sharded (N ∈ {1, 2, 4})
 //! with bounded lanes.
 
-use crate::config::{EngineKind, ExperimentConfig};
+use crate::config::{EngineKind, ExperimentConfig, OnExhausted};
 use crate::coordinator::{RunMetrics, SecureFitResult};
 use crate::data::Dataset;
 use crate::fixed::FixedCodec;
@@ -103,7 +136,8 @@ use crate::session::{
 };
 use crate::shamir::ShamirParams;
 use crate::transport::{Endpoint, Injector, Network, TrafficSnapshot};
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -236,6 +270,17 @@ pub enum SubmitError {
         /// The evicted study's session id.
         session: SessionId,
     },
+    /// The study's admission deadline lapsed before a driver shard
+    /// could open it — either while queued in its priority lane (the
+    /// timer wheel wakes the owning shard the moment the deadline
+    /// fires) or while the submitting thread was blocked on a full
+    /// lane under [`SubmitPolicy::Block`].
+    Deadline {
+        /// The deadlined study's session id.
+        session: SessionId,
+        /// The admission deadline the study was submitted with.
+        deadline: Duration,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -249,6 +294,10 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Shed { session } => write!(
                 f,
                 "session {session} was shed from the bulk lane by a newer submission"
+            ),
+            SubmitError::Deadline { session, deadline } => write!(
+                f,
+                "session {session} missed its admission deadline ({deadline:?})"
             ),
         }
     }
@@ -312,6 +361,26 @@ impl SubmitOptions {
     }
 }
 
+/// Crash-fault retry policy: what a driver shard does with a session
+/// whose worker died ([`Message::WorkerDown`]) or became unreachable
+/// mid-round. The default fails fast — the first loss resolves the
+/// session per `on_exhausted` — which is the pre-fault-tolerance
+/// behavior for a consortium nobody restarts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetryPolicy {
+    /// How many suspensions one session may survive; suspension
+    /// `max_retries + 1` exhausts the budget. 0 = fail fast.
+    pub max_retries: u32,
+    /// How long a suspended session waits before re-entering its
+    /// priority lane — the window in which the dead worker can be
+    /// restarted ([`StudyEngine::restart_institution`] /
+    /// [`StudyEngine::restart_center`]).
+    pub backoff: Duration,
+    /// What exhaustion does with the session: abort it (default) or
+    /// park it on the lifecycle board as `Suspended` until shutdown.
+    pub on_exhausted: OnExhausted,
+}
+
 /// Engine-level control-plane knobs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineOptions {
@@ -340,6 +409,8 @@ pub struct EngineOptions {
     /// 0 = unbounded lanes (`submit` never blocks or rejects on
     /// queue depth — the pre-backpressure behavior).
     pub lane_capacity: usize,
+    /// Crash-fault retry policy for sessions that lose a worker.
+    pub retry: RetryPolicy,
 }
 
 /// Lifecycle states of one session (see the module docs for the
@@ -352,6 +423,11 @@ pub enum Lifecycle {
     Admitted,
     /// First center response arrived; the Newton loop is live.
     Running,
+    /// A worker in the session's consortium died; the session released
+    /// its admission slot and waits out its retry backoff (or, with
+    /// the budget exhausted under `OnExhausted::Park`, waits for the
+    /// engine to shut down). Re-admission replays the current round.
+    Suspended,
     /// Teardown frames out; counting `CloseAck`s.
     Draining,
     /// Terminal success: every worker acked state release.
@@ -367,6 +443,7 @@ impl Lifecycle {
             Lifecycle::Queued => "queued",
             Lifecycle::Admitted => "admitted",
             Lifecycle::Running => "running",
+            Lifecycle::Suspended => "suspended",
             Lifecycle::Draining => "draining",
             Lifecycle::Closed => "closed",
             Lifecycle::Aborted => "aborted",
@@ -500,13 +577,31 @@ impl AdmissionController {
     }
 }
 
+/// What a queued lane entry opens into: a fresh study (build the
+/// Newton machine, broadcast the first β) or a suspended session
+/// re-entering after its retry backoff (reopen the workers, replay the
+/// current round from the preserved state machine).
+enum StudyWork {
+    Fresh {
+        spec: Arc<SessionSpec>,
+        mode: crate::config::SecurityMode,
+        lambda: f64,
+        tol: f64,
+        max_iters: usize,
+    },
+    Resume {
+        /// The suspended session's Newton machine, β/iter intact.
+        state: SessionState,
+        /// Original queue wait, preserved across suspensions.
+        queue_secs: f64,
+        /// Suspensions survived so far (bounds the retry budget).
+        retries: u32,
+    },
+}
+
 /// A submitted-but-not-yet-admitted study, queued to the driver.
 struct PendingStudy {
-    spec: Arc<SessionSpec>,
-    mode: crate::config::SecurityMode,
-    lambda: f64,
-    tol: f64,
-    max_iters: usize,
+    work: StudyWork,
     priority: Priority,
     deadline: Option<Duration>,
     submitted: Instant,
@@ -514,6 +609,13 @@ struct PendingStudy {
 }
 
 impl PendingStudy {
+    fn session(&self) -> SessionId {
+        match &self.work {
+            StudyWork::Fresh { spec, .. } => spec.session,
+            StudyWork::Resume { state, .. } => state.session(),
+        }
+    }
+
     fn expired(&self) -> bool {
         self.deadline.is_some_and(|d| self.submitted.elapsed() >= d)
     }
@@ -608,6 +710,108 @@ impl ShardQueues {
     }
 }
 
+/// Shared half of the deadline timer wheel: a min-heap of
+/// `(fire-at, shard)` entries scheduled by the submit path (admission
+/// deadlines) and the driver shards (suspension backoffs).
+struct TimerShared {
+    state: Mutex<TimerState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct TimerState {
+    deadlines: BinaryHeap<Reverse<(Instant, usize)>>,
+    shutdown: bool,
+}
+
+impl TimerShared {
+    fn schedule(&self, at: Instant, shard: usize) {
+        self.state.lock().unwrap().deadlines.push(Reverse((at, shard)));
+        self.cv.notify_all();
+    }
+}
+
+/// The engine's deadline timer wheel: one thread that sleeps until the
+/// earliest scheduled instant and then fires an `AdmissionWake` at the
+/// owning driver shard (plus a lane-condvar broadcast for blocked
+/// submitters). Drivers block indefinitely on their mailbox, so
+/// without this a lapsed deadline on an otherwise idle shard — or a
+/// suspended session's elapsed backoff — would only be noticed when
+/// some unrelated frame happened to arrive.
+struct TimerWheel {
+    shared: Arc<TimerShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TimerWheel {
+    fn spawn(injector: Injector, queues: Vec<Arc<ShardQueues>>) -> anyhow::Result<TimerWheel> {
+        let shared = Arc::new(TimerShared {
+            state: Mutex::new(TimerState::default()),
+            cv: Condvar::new(),
+        });
+        let tick = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("deadline-timer".to_string())
+            .spawn(move || {
+                let mut st = tick.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    let now = Instant::now();
+                    let mut fired = Vec::new();
+                    while st.deadlines.peek().is_some_and(|r| (r.0).0 <= now) {
+                        let Reverse((_, shard)) = st.deadlines.pop().unwrap();
+                        fired.push(shard);
+                    }
+                    if !fired.is_empty() {
+                        drop(st);
+                        for shard in fired {
+                            // Best-effort: a shard that already exited
+                            // has nothing left to deadline.
+                            let _ = injector.send_to_shard(
+                                NodeId::Coordinator,
+                                shard,
+                                &Message::AdmissionWake,
+                            );
+                            if let Some(q) = queues.get(shard) {
+                                q.space.notify_all();
+                            }
+                        }
+                        st = tick.state.lock().unwrap();
+                        continue;
+                    }
+                    st = match st.deadlines.peek() {
+                        Some(r) => {
+                            let at = (r.0).0;
+                            tick.cv
+                                .wait_timeout(st, at.saturating_duration_since(now))
+                                .unwrap()
+                                .0
+                        }
+                        None => tick.cv.wait(st).unwrap(),
+                    };
+                }
+            })?;
+        Ok(TimerWheel {
+            shared,
+            handle: Some(handle),
+        })
+    }
+
+    fn schedule(&self, at: Instant, shard: usize) {
+        self.shared.schedule(at, shard);
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Persistent study network: S institution workers, W center workers,
 /// and N coordinator driver shards multiplexing concurrent fit
 /// sessions behind the shared admission controller and per-shard
@@ -619,7 +823,12 @@ pub struct StudyEngine {
     shard_queues: Vec<Arc<ShardQueues>>,
     injector: Injector,
     drivers: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
-    workers: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+    /// Live worker threads by node id. Killed workers leave the map
+    /// (their threads are joined by the kill path); restarted workers
+    /// re-enter under their old id.
+    worker_handles: Mutex<HashMap<NodeId, std::thread::JoinHandle<anyhow::Result<()>>>>,
+    /// Deadline/backoff timer wheel serving every driver shard.
+    timer: TimerWheel,
     next_session: AtomicU32,
     institutions: usize,
     centers: usize,
@@ -693,6 +902,11 @@ impl StudyEngine {
             auto_retire: cfg.auto_retire,
             driver_shards: cfg.driver_shards,
             lane_capacity: cfg.lane_capacity,
+            retry: RetryPolicy {
+                max_retries: cfg.retry_max,
+                backoff: Duration::from_millis(cfg.retry_backoff_ms),
+                on_exhausted: cfg.retry_on_exhausted,
+            },
         };
         StudyEngine::with_compute(ds.num_institutions(), cfg.num_centers, compute, guard, opts)
     }
@@ -723,7 +937,7 @@ impl StudyEngine {
         let net = Network::new();
         let registry = SessionRegistry::new();
         let coord_shards = net.register_sharded(NodeId::Coordinator, driver_shards);
-        let mut workers = Vec::with_capacity(institutions + centers);
+        let mut worker_handles = HashMap::with_capacity(institutions + centers);
         let mut worker_gauges = Vec::with_capacity(institutions + centers);
         for c in 0..centers {
             let ep = net.register(NodeId::Center(c as u16));
@@ -734,7 +948,8 @@ impl StudyEngine {
                 registry: registry.clone(),
                 live_sessions: gauge,
             };
-            workers.push(
+            worker_handles.insert(
+                NodeId::Center(c as u16),
                 std::thread::Builder::new()
                     .name(format!("center-{c}"))
                     .spawn(move || crate::center::run_center_worker(cfg, ep))?,
@@ -750,7 +965,8 @@ impl StudyEngine {
                 engine: compute.clone(),
                 live_sessions: gauge,
             };
-            workers.push(
+            worker_handles.insert(
+                NodeId::Institution(j as u16),
                 std::thread::Builder::new()
                     .name(format!("institution-{j}"))
                     .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
@@ -758,6 +974,7 @@ impl StudyEngine {
         }
         let shard_queues: Vec<Arc<ShardQueues>> =
             (0..driver_shards).map(|_| ShardQueues::new()).collect();
+        let timer = TimerWheel::spawn(net.injector(NodeId::Coordinator), shard_queues.clone())?;
         let injector = net.injector(NodeId::Client);
         let board = Arc::new(LifecycleBoard::default());
         let admission = Arc::new(AdmissionController::new(opts.max_in_flight));
@@ -773,8 +990,10 @@ impl StudyEngine {
                 board: board.clone(),
                 admission: admission.clone(),
                 opts,
+                timer: timer.shared.clone(),
                 ready: Default::default(),
                 sessions: HashMap::new(),
+                parked: Vec::new(),
                 completed: VecDeque::new(),
                 submissions_open: true,
             };
@@ -790,7 +1009,8 @@ impl StudyEngine {
             shard_queues,
             injector,
             drivers,
-            workers,
+            worker_handles: Mutex::new(worker_handles),
+            timer,
             next_session: AtomicU32::new(1),
             institutions,
             centers,
@@ -898,6 +1118,109 @@ impl StudyEngine {
             .collect()
     }
 
+    /// Crash-fault injection: kill institution `j`'s worker. Its
+    /// endpoint is torn out of the transport (in-flight frames to it
+    /// are dropped, later sends fail), the thread is joined, its live
+    /// gauge reset (the per-session state died with the thread), and
+    /// every driver shard is told via [`Message::WorkerDown`] so it
+    /// can suspend the affected sessions under the [`RetryPolicy`].
+    pub fn kill_institution(&self, j: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(j < self.institutions, "no institution {j}");
+        self.kill_worker(NodeId::Institution(j as u16), self.centers + j)
+    }
+
+    /// [`StudyEngine::kill_institution`] for center `c`.
+    pub fn kill_center(&self, c: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(c < self.centers, "no center {c}");
+        self.kill_worker(NodeId::Center(c as u16), c)
+    }
+
+    fn kill_worker(&self, id: NodeId, gauge_idx: usize) -> anyhow::Result<()> {
+        let handle = self.worker_handles.lock().unwrap().remove(&id);
+        let Some(handle) = handle else {
+            anyhow::bail!("{id} is not running");
+        };
+        self.net.kill(id);
+        // The worker drains what was already in its mailbox, then its
+        // recv fails (sender gone) and the thread exits with a
+        // disconnect error — expected for a killed worker, discard.
+        let _ = handle.join();
+        self.worker_gauges[gauge_idx].store(0, Ordering::Relaxed);
+        let (node, is_center) = match id {
+            NodeId::Center(c) => (c, true),
+            NodeId::Institution(j) => (j, false),
+            other => anyhow::bail!("{other} is not a worker"),
+        };
+        for shard in 0..self.driver_shards {
+            let _ = self.injector.send_to_shard(
+                NodeId::Coordinator,
+                shard,
+                &Message::WorkerDown { node, is_center },
+            );
+        }
+        Ok(())
+    }
+
+    /// Restart a killed institution under its old node id. The worker
+    /// re-registers on the transport and rebuilds per-session state
+    /// lazily from the shared registry on first contact — suspended
+    /// sessions replaying through it recover bit-identically because
+    /// shares derive from `(spec, β, iteration)` alone.
+    pub fn restart_institution(&self, j: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(j < self.institutions, "no institution {j}");
+        let id = NodeId::Institution(j as u16);
+        let mut handles = self.worker_handles.lock().unwrap();
+        anyhow::ensure!(!handles.contains_key(&id), "{id} is already running");
+        let ep = self.net.reregister(id);
+        let cfg = crate::institution::InstitutionWorkerConfig {
+            institution_id: j as u16,
+            registry: self.registry.clone(),
+            engine: self.compute.clone(),
+            live_sessions: self.worker_gauges[self.centers + j].clone(),
+        };
+        handles.insert(
+            id,
+            std::thread::Builder::new()
+                .name(format!("institution-{j}"))
+                .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
+        );
+        Ok(())
+    }
+
+    /// Install a [`FaultPlan`] over this engine's transport fabric:
+    /// subsequent frames are dropped / duplicated / delayed per its
+    /// rules. Shard-directed control frames bypass the plan, so the
+    /// engine stays shut-downable under any plan.
+    pub fn install_faults(&self, plan: crate::transport::FaultPlan) {
+        self.net.install_faults(plan);
+    }
+
+    /// Remove all installed fault rules and discard delayed frames.
+    pub fn clear_faults(&self) {
+        self.net.clear_faults();
+    }
+
+    /// [`StudyEngine::restart_institution`] for center `c`.
+    pub fn restart_center(&self, c: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(c < self.centers, "no center {c}");
+        let id = NodeId::Center(c as u16);
+        let mut handles = self.worker_handles.lock().unwrap();
+        anyhow::ensure!(!handles.contains_key(&id), "{id} is already running");
+        let ep = self.net.reregister(id);
+        let cfg = crate::center::CenterWorkerConfig {
+            center_id: c as u16,
+            registry: self.registry.clone(),
+            live_sessions: self.worker_gauges[c].clone(),
+        };
+        handles.insert(
+            id,
+            std::thread::Builder::new()
+                .name(format!("center-{c}"))
+                .spawn(move || crate::center::run_center_worker(cfg, ep))?,
+        );
+        Ok(())
+    }
+
     /// Submit one study: `cfg` provides the solver/scheme parameters,
     /// `ds` the partitioned data (its shards map onto this engine's
     /// institutions), `opts` the scheduling class and admission
@@ -967,15 +1290,25 @@ impl StudyEngine {
         self.registry.insert(spec.clone());
         self.board.set(session, Lifecycle::Queued);
         let (result_tx, result_rx) = channel();
+        let submitted = Instant::now();
+        // Arm the timer wheel BEFORE the study can queue: when the
+        // deadline fires, the owning shard is woken to sweep its lanes
+        // even if it is saturated or idle, and blocked submitters on
+        // this shard's lanes are re-woken to observe the lapse.
+        if let Some(dl) = opts.deadline {
+            self.timer.schedule(submitted + dl, shard);
+        }
         let pending = PendingStudy {
-            spec,
-            mode: cfg.mode,
-            lambda: cfg.lambda,
-            tol: cfg.tol,
-            max_iters: cfg.max_iters,
+            work: StudyWork::Fresh {
+                spec,
+                mode: cfg.mode,
+                lambda: cfg.lambda,
+                tol: cfg.tol,
+                max_iters: cfg.max_iters,
+            },
             priority: opts.priority,
             deadline: opts.deadline,
-            submitted: Instant::now(),
+            submitted,
             result_tx,
         };
         // Queue first (through the backpressure gate), nudge second: a
@@ -1044,8 +1377,25 @@ impl StudyEngine {
                             }
                             .into());
                         }
-                        let old = st.lanes[lane].pop_front().expect("full lane is non-empty");
-                        st.shed_completions.push(old.spec.session);
+                        // Never shed a resumed (suspended) session: it
+                        // is mid-fit and surviving workers still hold
+                        // its per-session state, which only a proper
+                        // drain releases. Evict the oldest FRESH bulk
+                        // study instead; if every entry is a resume,
+                        // fall back to rejecting the newcomer.
+                        let idx = st.lanes[lane]
+                            .iter()
+                            .position(|p| matches!(p.work, StudyWork::Fresh { .. }));
+                        let Some(idx) = idx else {
+                            return Err(SubmitError::LaneFull {
+                                priority: pending.priority,
+                                capacity: cap,
+                                shard,
+                            }
+                            .into());
+                        };
+                        let old = st.lanes[lane].remove(idx).expect("index from position");
+                        st.shed_completions.push(old.session());
                         victim = Some(old);
                         // Exactly one slot freed; re-check admits us.
                     }
@@ -1053,13 +1403,13 @@ impl StudyEngine {
                         None => st = q.space.wait(st).unwrap(),
                         Some(dl) => {
                             let elapsed = pending.submitted.elapsed();
-                            anyhow::ensure!(
-                                elapsed < dl,
-                                "session {} missed its admission deadline ({dl:?} in the \
-                                 {} lane) while blocked on the full lane",
-                                pending.spec.session,
-                                pending.priority.name()
-                            );
+                            if elapsed >= dl {
+                                return Err(SubmitError::Deadline {
+                                    session: pending.session(),
+                                    deadline: dl,
+                                }
+                                .into());
+                            }
                             let (guard, _) = q.space.wait_timeout(st, dl - elapsed).unwrap();
                             st = guard;
                         }
@@ -1069,7 +1419,7 @@ impl StudyEngine {
             st.lanes[lane].push_back(pending);
         }
         if let Some(old) = victim {
-            let shed_session = old.spec.session;
+            let shed_session = old.session();
             self.registry.remove(shed_session);
             self.board.set(shed_session, Lifecycle::Aborted);
             let _ = old
@@ -1126,6 +1476,11 @@ impl StudyEngine {
                 }
             }
         };
+        // The timer goes first: by the time drivers process Shutdown
+        // they abort anything still suspended, so nobody depends on a
+        // further backoff wake (and a late fire into a drained shard
+        // would be a harmless failed send anyway).
+        self.timer.shutdown();
         if !self.drivers.is_empty() {
             for shard in 0..self.driver_shards {
                 let _ = self
@@ -1136,19 +1491,19 @@ impl StudyEngine {
                 note(d.join(), "study driver");
             }
         }
-        if !self.workers.is_empty() {
+        let workers: Vec<(NodeId, std::thread::JoinHandle<anyhow::Result<()>>)> =
+            self.worker_handles.lock().unwrap().drain().collect();
+        if !workers.is_empty() {
             // Worker teardown frames originate from the coordinator
             // role (not the client injector) so their bytes keep the
             // same broadcast/central traffic classes the single-driver
-            // engine always reported.
+            // engine always reported. Killed-and-never-restarted
+            // workers are absent from the map — nothing to tear down.
             let coord_injector = self.net.injector(NodeId::Coordinator);
-            for j in 0..self.institutions {
-                let _ = coord_injector.send(NodeId::Institution(j as u16), &Message::Shutdown);
+            for (id, _) in &workers {
+                let _ = coord_injector.send(*id, &Message::Shutdown);
             }
-            for c in 0..self.centers {
-                let _ = coord_injector.send(NodeId::Center(c as u16), &Message::Shutdown);
-            }
-            for w in self.workers.drain(..) {
+            for (_, w) in workers {
                 note(w.join(), "worker");
             }
         }
@@ -1193,9 +1548,29 @@ struct Active {
     /// A computed next round waiting for its weighted-fair dispatch
     /// slot.
     pending_round: Option<Vec<(NodeId, Message)>>,
-    /// Outstanding `CloseAck`s while `Draining`.
-    acks_pending: usize,
+    /// Workers whose `CloseAck` is still outstanding while `Draining`,
+    /// as `(is_center, node)` — keyed so a worker that dies mid-drain
+    /// can be struck off (its state died with it; no ack is owed) and
+    /// a duplicated ack frame cannot double-count.
+    acks_pending: HashSet<(bool, u16)>,
+    /// Suspensions this session has survived (see [`RetryPolicy`]).
+    retries: u32,
     fate: Option<Fate>,
+}
+
+/// A suspended session waiting out its retry backoff (or, with the
+/// budget exhausted under `OnExhausted::Park`, waiting for engine
+/// shutdown). Holds everything needed to re-enter the priority lanes:
+/// the Newton machine itself (β, iteration, deviance intact) and the
+/// bookkeeping that must survive the round trip.
+struct Parked {
+    state: SessionState,
+    result_tx: Sender<anyhow::Result<SecureFitResult>>,
+    priority: Priority,
+    queue_secs: f64,
+    retries: u32,
+    /// When to re-enter the lanes; `None` = parked until shutdown.
+    resume_at: Option<Instant>,
 }
 
 /// One coordinator driver shard: admits studies from ITS priority
@@ -1220,9 +1595,14 @@ struct Driver {
     board: Arc<LifecycleBoard>,
     admission: Arc<AdmissionController>,
     opts: EngineOptions,
+    /// The engine's timer wheel (suspension backoffs are scheduled
+    /// here so the wake arrives the moment they elapse).
+    timer: Arc<TimerShared>,
     /// Sessions with a `pending_round` awaiting dispatch, by lane.
     ready: [VecDeque<SessionId>; 3],
     sessions: HashMap<SessionId, Active>,
+    /// Suspended sessions owned by this shard.
+    parked: Vec<Parked>,
     /// Terminal sessions in completion order (this shard's auto-retire
     /// window).
     completed: VecDeque<SessionId>,
@@ -1245,9 +1625,17 @@ impl Driver {
         // shard took with it. (Worker teardown belongs to the engine,
         // which joins EVERY driver shard first.)
         for p in self.queues.close() {
-            self.registry.remove(p.spec.session);
-            self.board.set(p.spec.session, Lifecycle::Aborted);
+            self.registry.remove(p.session());
+            self.board.set(p.session(), Lifecycle::Aborted);
             // `p` drops here: its result sender resolves the handle.
+        }
+        // Parked sessions released their admission slot at suspension;
+        // they only need registry/board cleanup before their senders
+        // drop (clean exits already drained them at Shutdown).
+        for p in self.parked.drain(..) {
+            let session = p.state.session();
+            self.registry.remove(session);
+            self.board.set(session, Lifecycle::Aborted);
         }
         let stranded = self.sessions.len();
         for session in self.sessions.keys().copied().collect::<Vec<_>>() {
@@ -1264,12 +1652,18 @@ impl Driver {
 
     fn event_loop(&mut self) -> anyhow::Result<()> {
         loop {
-            if !self.submissions_open && self.sessions.is_empty() && !self.queues.has_queued() {
+            if !self.submissions_open
+                && self.sessions.is_empty()
+                && self.parked.is_empty()
+                && !self.queues.has_queued()
+            {
                 return Ok(());
             }
             // ONE unified channel: submissions arrive as StudySubmitted
             // frames alongside protocol traffic, so this receive blocks
             // with no timeout — an idle driver costs nothing at any K.
+            // (The timer wheel injects AdmissionWake frames for lapsed
+            // deadlines and elapsed suspension backoffs.)
             let frame = self.coord.recv_session()?;
             self.handle(frame)?;
             // Drain whatever else already arrived before scheduling:
@@ -1279,8 +1673,9 @@ impl Driver {
             while let Some(frame) = self.coord.recv_session_timeout(Duration::ZERO)? {
                 self.handle(frame)?;
             }
-            self.dispatch_ready()?;
-            self.admit()?;
+            self.resume_parked();
+            self.dispatch_ready();
+            self.admit();
         }
     }
 
@@ -1303,7 +1698,24 @@ impl Driver {
                 anyhow::ensure!(from == NodeId::Client, "shutdown frame from {from}");
                 // Run anything still queued, then finish in-flight
                 // sessions and exit once the last one fully closes.
+                // Suspended sessions cannot be waited out — their
+                // recovery depends on a worker restart that may never
+                // come — so they resolve with an error now.
                 self.submissions_open = false;
+                for p in std::mem::take(&mut self.parked) {
+                    let session = p.state.session();
+                    self.registry.remove(session);
+                    self.board.set(session, Lifecycle::Aborted);
+                    let _ = p.result_tx.send(Err(anyhow::anyhow!(
+                        "engine shut down while session {session} was suspended \
+                         awaiting worker recovery"
+                    )));
+                    self.note_completion(session);
+                }
+            }
+            Message::WorkerDown { node, is_center } => {
+                anyhow::ensure!(from == NodeId::Client, "worker-down frame from {from}");
+                self.on_worker_down(node, is_center);
             }
             Message::AggregateResponse {
                 iter,
@@ -1351,14 +1763,37 @@ impl Driver {
                     active.phase == Phase::Draining,
                     "close ack from {from} for non-draining session {session}"
                 );
-                active.acks_pending -= 1;
-                if active.acks_pending == 0 {
+                let key = match from {
+                    NodeId::Center(c) => (true, c),
+                    NodeId::Institution(j) => (false, j),
+                    other => anyhow::bail!("close ack from non-worker {other}"),
+                };
+                // Keyed removal: a duplicated ack frame (fault
+                // injection) removes nothing the second time.
+                let done = active.acks_pending.remove(&key) && active.acks_pending.is_empty();
+                if done {
                     self.finalize(session);
                 }
             }
             Message::NodeError { node, is_center, error } => {
                 let who = if is_center { "center" } else { "institution" };
-                self.abort_session(session, anyhow::anyhow!("{who}-{node} failed: {error}"));
+                let err = anyhow::anyhow!("{who}-{node} failed: {error}");
+                // With a retry budget, a node failure is treated as a
+                // crash fault and the session suspends for replay —
+                // a worker mid-kill surfaces as send failures at its
+                // peers (NodeError) racing the WorkerDown broadcast,
+                // and either arrival order must reach the same
+                // suspension. Deterministic errors simply exhaust the
+                // budget and abort with this same message. A Park
+                // policy routes through suspension even with a zero
+                // budget — exhaustion must park, not abort.
+                if self.opts.retry.max_retries > 0
+                    || self.opts.retry.on_exhausted == OnExhausted::Park
+                {
+                    self.suspend_active(session, &format!("{err:#}"));
+                } else {
+                    self.abort_session(session, err);
+                }
             }
             other => anyhow::bail!("driver got unexpected {} from {from}", other.kind()),
         }
@@ -1416,7 +1851,7 @@ impl Driver {
     /// in priority order, so when a backlog made several sessions ready
     /// at once, interactive rounds hit the wire first (4:2:1) while
     /// bulk still progresses every cycle — no starvation.
-    fn dispatch_ready(&mut self) -> anyhow::Result<()> {
+    fn dispatch_ready(&mut self) {
         loop {
             let mut dispatched = false;
             for p in Priority::ALL {
@@ -1424,23 +1859,27 @@ impl Driver {
                     let Some(sid) = self.ready[p.lane()].pop_front() else {
                         break;
                     };
-                    // A session may have been aborted (→ Draining) or
-                    // even finalized after its round was parked; its
-                    // entry here is then stale — drop the round, never
-                    // send protocol traffic into a drain.
+                    // A session may have been aborted (→ Draining),
+                    // suspended, or even finalized after its round was
+                    // parked; its entry here is then stale — drop the
+                    // round, never send protocol traffic into a drain.
+                    let mut round = None;
                     if let Some(active) = self.sessions.get_mut(&sid) {
-                        let round = active.pending_round.take();
+                        let parked_round = active.pending_round.take();
                         if active.phase != Phase::Draining {
-                            if let Some(outgoing) = round {
-                                send_all(&self.coord, sid, outgoing)?;
-                            }
+                            round = parked_round;
+                        }
+                    }
+                    if let Some(outgoing) = round {
+                        if !self.try_send_round(sid, outgoing) {
+                            self.suspend_active(sid, "worker unreachable at round dispatch");
                         }
                     }
                     dispatched = true;
                 }
             }
             if !dispatched {
-                return Ok(());
+                return;
             }
         }
     }
@@ -1452,7 +1891,7 @@ impl Driver {
     /// while the cap is saturated (the saturating sessions' protocol
     /// frames are what wake the driver, so the sweep runs at round
     /// granularity).
-    fn admit(&mut self) -> anyhow::Result<()> {
+    fn admit(&mut self) {
         let (expired, shed) = self.sweep_queues();
         for p in expired {
             self.reject(p);
@@ -1462,14 +1901,14 @@ impl Driver {
         }
         loop {
             if !self.queues.has_queued() {
-                return Ok(());
+                return;
             }
             // Claim a global slot BEFORE popping: with the cap
             // saturated by other shards the queue must stay intact for
             // a later pass (an `AdmissionWake` re-runs this loop when
             // a peer frees a slot).
             if !self.admission.try_acquire() {
-                return Ok(());
+                return;
             }
             let mut opened = false;
             while let Some(p) = self.pop_next_queued() {
@@ -1478,7 +1917,7 @@ impl Driver {
                     self.reject(p);
                     continue;
                 }
-                self.open_session(p)?;
+                self.open_session(p);
                 opened = true;
                 break;
             }
@@ -1491,7 +1930,7 @@ impl Driver {
                 // would otherwise be a lost wakeup.
                 self.admission.release();
                 self.wake_starved_peers();
-                return Ok(());
+                return;
             }
         }
     }
@@ -1502,44 +1941,99 @@ impl Driver {
     /// per-session traffic entries (the `StudySubmitted` nudge bytes)
     /// are bounded too.
     fn reject(&mut self, p: PendingStudy) {
-        let session = p.spec.session;
+        let session = p.session();
         self.registry.remove(session);
         self.board.set(session, Lifecycle::Aborted);
-        let _ = p.result_tx.send(Err(anyhow::anyhow!(
-            "session {session} missed its admission deadline \
-             ({:?} in the {} lane)",
-            p.deadline.unwrap(),
-            p.priority.name()
-        )));
+        let _ = p.result_tx.send(Err(SubmitError::Deadline {
+            session,
+            deadline: p.deadline.expect("rejected study has a deadline"),
+        }
+        .into()));
         self.note_completion(session);
     }
 
-    /// `Queued → Admitted`: build the Newton machine and open the
-    /// session on the wire. The caller already holds the admission
-    /// slot this session occupies until `finalize`.
-    fn open_session(&mut self, p: PendingStudy) -> anyhow::Result<()> {
+    /// `Queued → Admitted`: open the session on the wire — a fresh
+    /// study builds its Newton machine and broadcasts the first β; a
+    /// resumed one reopens every participant (idempotent state drop +
+    /// lazy re-open from the registry spec) and replays its current
+    /// round. The caller already holds the admission slot this session
+    /// occupies until `finalize`. An unreachable destination suspends
+    /// the session again under the retry policy.
+    fn open_session(&mut self, p: PendingStudy) {
         let queue_wait = p.submitted.elapsed();
-        let state = SessionState::new(p.spec, p.mode, p.lambda, p.tol, p.max_iters);
-        let session = state.session();
-        let outgoing = state.begin();
-        self.sessions.insert(
-            session,
-            Active {
-                state,
-                result_tx: p.result_tx,
-                priority: p.priority,
-                phase: Phase::Admitted,
-                queue_secs: queue_wait.as_secs_f64(),
-                pending_round: None,
-                acks_pending: 0,
-                fate: None,
-            },
-        );
-        self.board.set(session, Lifecycle::Admitted);
-        self.board.set_queue_wait(session, queue_wait);
-        self.board.record_admission(session);
-        self.admission.record_peak();
-        send_all(&self.coord, session, outgoing)
+        match p.work {
+            StudyWork::Fresh { spec, mode, lambda, tol, max_iters } => {
+                let state = SessionState::new(spec, mode, lambda, tol, max_iters);
+                let session = state.session();
+                let outgoing = state.begin();
+                self.sessions.insert(
+                    session,
+                    Active {
+                        state,
+                        result_tx: p.result_tx,
+                        priority: p.priority,
+                        phase: Phase::Admitted,
+                        queue_secs: queue_wait.as_secs_f64(),
+                        pending_round: None,
+                        acks_pending: HashSet::new(),
+                        retries: 0,
+                        fate: None,
+                    },
+                );
+                self.board.set(session, Lifecycle::Admitted);
+                self.board.set_queue_wait(session, queue_wait);
+                self.board.record_admission(session);
+                self.admission.record_peak();
+                if !self.try_send_round(session, outgoing) {
+                    self.suspend_active(session, "worker unreachable at session open");
+                }
+            }
+            StudyWork::Resume { mut state, queue_secs, retries } => {
+                let session = state.session();
+                let spec = state.spec().clone();
+                let iter = state.current_iter();
+                // Clears the coordinator's partial responses and hands
+                // back the current round's β broadcast.
+                let outgoing = state.replay_messages();
+                self.sessions.insert(
+                    session,
+                    Active {
+                        state,
+                        result_tx: p.result_tx,
+                        priority: p.priority,
+                        phase: Phase::Admitted,
+                        queue_secs,
+                        pending_round: None,
+                        acks_pending: HashSet::new(),
+                        retries,
+                        fate: None,
+                    },
+                );
+                self.board.set(session, Lifecycle::Admitted);
+                self.admission.record_peak();
+                // Reopen BEFORE replaying: each worker's mailbox is one
+                // FIFO channel, so the reopen (drop any pre-crash
+                // partial state, re-open lazily from the spec) is
+                // processed ahead of every replayed frame.
+                let mut ok = true;
+                for j in 0..spec.num_institutions() {
+                    let to = NodeId::Institution(j as u16);
+                    let msg = Message::SessionReopen { iter };
+                    ok &= self.coord.send_session(to, session, &msg).is_ok();
+                }
+                for c in 0..spec.num_centers() {
+                    let to = NodeId::Center(c as u16);
+                    let msg = Message::SessionReopen { iter };
+                    ok &= self.coord.send_session(to, session, &msg).is_ok();
+                }
+                if ok {
+                    ok = self.try_send_round(session, outgoing);
+                }
+                if !ok {
+                    self.suspend_active(session, "worker unreachable during replay");
+                }
+            }
+        }
     }
 
     /// `→ Draining`: send the teardown frames (already built for the
@@ -1557,18 +2051,27 @@ impl Driver {
         // keeps the spec alive through its `Arc` for the final
         // metrics.)
         self.registry.remove(session);
-        let active = self.sessions.get_mut(&session).expect("draining unknown session");
-        let mut acks_expected = 0;
+        let mut acks = HashSet::new();
         for (to, msg) in outgoing {
             if self.coord.send_session(to, session, &msg).is_ok() {
-                acks_expected += 1;
+                match to {
+                    NodeId::Center(c) => {
+                        acks.insert((true, c));
+                    }
+                    NodeId::Institution(j) => {
+                        acks.insert((false, j));
+                    }
+                    _ => {}
+                }
             }
         }
+        let active = self.sessions.get_mut(&session).expect("draining unknown session");
         active.phase = Phase::Draining;
-        active.acks_pending = acks_expected;
+        let drained = acks.is_empty();
+        active.acks_pending = acks;
         active.fate = Some(fate);
         self.board.set(session, Lifecycle::Draining);
-        if acks_expected == 0 {
+        if drained {
             self.finalize(session);
         }
     }
@@ -1602,6 +2105,141 @@ impl Driver {
         self.begin_drain(session, outgoing, Fate::Failure(err));
     }
 
+    /// Send one round's frames; `false` when any destination was
+    /// unreachable (its worker died). Partial delivery is safe: the
+    /// eventual replay re-sends the full round, workers idempotently
+    /// reopen, and centers dedup per-(institution, iteration).
+    fn try_send_round(&mut self, session: SessionId, outgoing: Vec<(NodeId, Message)>) -> bool {
+        let mut ok = true;
+        for (to, msg) in outgoing {
+            ok &= self.coord.send_session(to, session, &msg).is_ok();
+        }
+        ok
+    }
+
+    /// A worker died: strike its ack off every draining session (its
+    /// state died with its thread — no ack is owed) and suspend every
+    /// other active session whose consortium includes it.
+    fn on_worker_down(&mut self, node: u16, is_center: bool) {
+        let key = (is_center, node);
+        for session in self.sessions.keys().copied().collect::<Vec<_>>() {
+            let Some(active) = self.sessions.get_mut(&session) else {
+                continue;
+            };
+            let spec = active.state.spec();
+            let in_spec = if is_center {
+                (node as usize) < spec.num_centers()
+            } else {
+                (node as usize) < spec.num_institutions()
+            };
+            if !in_spec {
+                continue;
+            }
+            if active.phase == Phase::Draining {
+                let done = active.acks_pending.remove(&key) && active.acks_pending.is_empty();
+                if done {
+                    self.finalize(session);
+                }
+            } else {
+                let who = if is_center { "center" } else { "institution" };
+                self.suspend_active(session, &format!("{who}-{node} went down"));
+            }
+        }
+    }
+
+    /// `Admitted/Running → Suspended`: pull the session out of the
+    /// active set, release its admission slot, and — while the retry
+    /// budget lasts — park it for re-admission after the backoff (the
+    /// timer wheel wakes this shard when it elapses). Exhaustion
+    /// resolves the session per [`RetryPolicy::on_exhausted`]. The
+    /// spec deliberately STAYS in the registry: surviving workers keep
+    /// their (stale) state until the reopen, and the replay re-opens
+    /// the restarted worker lazily from that same spec.
+    fn suspend_active(&mut self, session: SessionId, why: &str) {
+        let Some(active) = self.sessions.get_mut(&session) else {
+            return;
+        };
+        if active.phase == Phase::Draining {
+            return;
+        }
+        let mut active = self.sessions.remove(&session).expect("present above");
+        active.retries += 1;
+        active.pending_round = None;
+        let policy = self.opts.retry;
+        if active.retries > policy.max_retries || !self.submissions_open {
+            if policy.on_exhausted == OnExhausted::Park && self.submissions_open {
+                self.board.set(session, Lifecycle::Suspended);
+                self.parked.push(Parked {
+                    state: active.state,
+                    result_tx: active.result_tx,
+                    priority: active.priority,
+                    queue_secs: active.queue_secs,
+                    retries: active.retries,
+                    resume_at: None,
+                });
+                self.admission.release();
+                self.wake_starved_peers();
+                return;
+            }
+            let err = anyhow::anyhow!(
+                "session {session} lost a worker ({why}) and its retry budget \
+                 ({} retries) is exhausted",
+                policy.max_retries
+            );
+            self.sessions.insert(session, active);
+            self.abort_session(session, err);
+            return;
+        }
+        let resume_at = Instant::now() + policy.backoff;
+        self.board.set(session, Lifecycle::Suspended);
+        self.parked.push(Parked {
+            state: active.state,
+            result_tx: active.result_tx,
+            priority: active.priority,
+            queue_secs: active.queue_secs,
+            retries: active.retries,
+            resume_at: Some(resume_at),
+        });
+        self.timer.schedule(resume_at, self.shard);
+        self.admission.release();
+        self.wake_starved_peers();
+    }
+
+    /// Move every suspended session whose backoff has elapsed back
+    /// into its priority lane (`Suspended → Queued`); the admission
+    /// pass that follows re-opens it under the global cap. Driver-
+    /// initiated re-entries deliberately bypass the lane-capacity
+    /// gate — backpressure bounds NEW work, not recovery.
+    fn resume_parked(&mut self) {
+        if self.parked.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].resume_at.is_some_and(|t| t <= now) {
+                let p = self.parked.swap_remove(i);
+                let session = p.state.session();
+                self.board.set(session, Lifecycle::Queued);
+                let pending = PendingStudy {
+                    priority: p.priority,
+                    deadline: None,
+                    submitted: now,
+                    result_tx: p.result_tx,
+                    work: StudyWork::Resume {
+                        state: p.state,
+                        queue_secs: p.queue_secs,
+                        retries: p.retries,
+                    },
+                };
+                let lane = pending.priority.lane();
+                self.queues.state.lock().unwrap().lanes[lane].push_back(pending);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// `Draining → Closed | Aborted`: every ack arrived, so the
     /// session's traffic attribution is final (teardown and ack bytes
     /// included) and the result can carry it. Releases the session's
@@ -1610,7 +2248,7 @@ impl Driver {
     /// finished `auto_retire` completions ago.
     fn finalize(&mut self, session: SessionId) {
         let active = self.sessions.remove(&session).expect("finalizing unknown session");
-        debug_assert_eq!(active.acks_pending, 0);
+        debug_assert!(active.acks_pending.is_empty());
         let (result, terminal) = match active.fate.expect("draining session without a fate") {
             Fate::Success(outcome) => (
                 Ok(finish_session(
@@ -1666,17 +2304,6 @@ impl Driver {
             self.board.remove(old);
         }
     }
-}
-
-fn send_all(
-    coord: &Endpoint,
-    session: SessionId,
-    outgoing: Vec<(NodeId, Message)>,
-) -> anyhow::Result<()> {
-    for (to, msg) in outgoing {
-        coord.send_session(to, session, &msg)?;
-    }
-    Ok(())
 }
 
 /// Assemble the per-session metrics: wall time from the driver-side
@@ -2032,6 +2659,7 @@ mod tests {
     #[test]
     fn lifecycle_names_and_terminality() {
         assert_eq!(Lifecycle::Queued.name(), "queued");
+        assert_eq!(Lifecycle::Suspended.name(), "suspended");
         assert_eq!(Lifecycle::Draining.name(), "draining");
         assert!(Lifecycle::Closed.is_terminal());
         assert!(Lifecycle::Aborted.is_terminal());
@@ -2039,6 +2667,7 @@ mod tests {
             Lifecycle::Queued,
             Lifecycle::Admitted,
             Lifecycle::Running,
+            Lifecycle::Suspended,
             Lifecycle::Draining,
         ] {
             assert!(!s.is_terminal(), "{}", s.name());
@@ -2097,6 +2726,11 @@ mod tests {
             err.to_string().contains("deadline"),
             "unexpected error: {err:#}"
         );
+        // The rejection is typed for callers with retry logic.
+        assert!(matches!(
+            err.downcast_ref::<SubmitError>(),
+            Some(SubmitError::Deadline { session, .. }) if *session == late_session
+        ));
         assert_eq!(engine.lifecycle(late_session), Some(Lifecycle::Aborted));
         h_run.join().unwrap();
         // The rejected study never touched a worker and left no spec.
@@ -2135,5 +2769,132 @@ mod tests {
         let final_snap = engine.shutdown().unwrap();
         let live: u64 = final_snap.per_session.iter().map(|&(_, b)| b).sum();
         assert_eq!(live + final_snap.retired_bytes, final_snap.total_bytes);
+    }
+
+    #[test]
+    fn killed_worker_fails_fast_by_default() {
+        // Default RetryPolicy: max_retries = 0 → the first worker loss
+        // exhausts the budget and the session aborts cleanly, leaking
+        // nothing at the survivors.
+        let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 51);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        engine.kill_institution(0).unwrap();
+        assert!(engine.kill_institution(0).is_err(), "double kill must fail");
+        let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let session = h.session_id();
+        let err = h.join().unwrap_err();
+        assert!(
+            err.to_string().contains("retry budget"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(engine.lifecycle(session), Some(Lifecycle::Aborted));
+        assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+        assert_eq!(engine.live_specs(), 0);
+        // Restart under the old id; the engine serves studies again.
+        engine.restart_institution(0).unwrap();
+        assert!(engine.restart_institution(0).is_err(), "double restart must fail");
+        let fit = engine
+            .submit(&cfg, &ds, SubmitOptions::default())
+            .unwrap()
+            .join()
+            .unwrap();
+        assert!(fit.metrics.iterations > 1);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn crashed_session_recovers_bit_identically_after_restart() {
+        let ds = synthetic("t", 400, 4, 2, 0.0, 1.0, 52);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        // Uninterrupted baseline on a pristine engine.
+        let baseline = StudyEngine::new(2, 3).unwrap();
+        let beta_base = baseline
+            .submit(&cfg, &ds, SubmitOptions::default())
+            .unwrap()
+            .join()
+            .unwrap()
+            .beta;
+        baseline.shutdown().unwrap();
+        // Crash-and-recover run: the institution is dead at admission,
+        // so the session suspends and retries until the restart lands.
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions {
+                retry: RetryPolicy {
+                    max_retries: 200,
+                    backoff: Duration::from_millis(5),
+                    on_exhausted: OnExhausted::Abort,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        engine.kill_institution(0).unwrap();
+        let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let session = h.session_id();
+        // Wait until the driver has actually suspended the session so
+        // the recovery provably exercises the replay path.
+        let t0 = Instant::now();
+        while engine.lifecycle(session) != Some(Lifecycle::Suspended) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "session never suspended (lifecycle: {:?})",
+                engine.lifecycle(session)
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        engine.restart_institution(0).unwrap();
+        let fit = h.join().unwrap();
+        assert_eq!(
+            fit.beta, beta_base,
+            "crash-and-replay recovery must be bit-identical"
+        );
+        assert_eq!(engine.lifecycle(session), Some(Lifecycle::Closed));
+        assert!(engine.worker_live_sessions().iter().all(|&n| n == 0));
+        assert_eq!(engine.live_specs(), 0);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn park_policy_holds_exhausted_session_until_shutdown() {
+        let ds = synthetic("t", 300, 3, 2, 0.0, 1.0, 53);
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions {
+                retry: RetryPolicy {
+                    max_retries: 0,
+                    backoff: Duration::ZERO,
+                    on_exhausted: OnExhausted::Park,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        engine.kill_institution(0).unwrap();
+        let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let session = h.session_id();
+        let t0 = Instant::now();
+        while engine.lifecycle(session) != Some(Lifecycle::Suspended) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "session never parked (lifecycle: {:?})",
+                engine.lifecycle(session)
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Parked sessions resolve only at shutdown.
+        engine.shutdown().unwrap();
+        let err = h.join().unwrap_err();
+        assert!(err.to_string().contains("suspended"), "unexpected: {err:#}");
     }
 }

@@ -155,6 +155,14 @@ pub fn run_institution_worker(
                     },
                 );
             }
+            Message::SessionReopen { .. } => {
+                // A suspended session is about to replay its current
+                // round: drop this worker's state for it so the
+                // replayed broadcast re-opens lazily from the registry
+                // spec (same share seed, hence bit-identical shares).
+                // Idempotent and un-acked — see the center's twin arm.
+                drop_session(&mut sessions, session);
+            }
             Message::Shutdown => return Ok(()),
             other => {
                 // Unexpected traffic aborts the offending session, not
@@ -550,6 +558,48 @@ mod tests {
         // The worker is still alive and shuts down cleanly.
         coord.send(NodeId::Institution(2), &Message::Shutdown).unwrap();
         th.join().unwrap();
+    }
+
+    /// `SessionReopen` drops the session's state; the replayed
+    /// broadcast lazily re-opens it and must reproduce bit-identical
+    /// submissions (the share stream is a pure function of the
+    /// `(master seed, session, institution, iteration)` tuple).
+    #[test]
+    fn reopen_then_replay_is_bit_identical() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let center = net.register(NodeId::Center(0));
+        let iep = net.register(NodeId::Institution(0));
+        let registry = SessionRegistry::new();
+        registry.insert(make_spec(6, vec![shard(12, 3, 9)], 1, 1, false));
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let cfg = InstitutionWorkerConfig {
+            institution_id: 0,
+            registry,
+            engine: ComputeHandle::rust(),
+            live_sessions: gauge.clone(),
+        };
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
+        let beta = vec![0.25, -0.5, 0.125];
+        let broadcast = Message::BetaBroadcast { iter: 0, beta: beta.clone() };
+        coord.send_session(NodeId::Institution(0), 6, &broadcast).unwrap();
+        let (_, _, first) = center.recv_session().unwrap();
+        // Crash-and-replay: reopen wipes state (gauge-visible), the
+        // identical broadcast regenerates the identical submission.
+        coord
+            .send_session(NodeId::Institution(0), 6, &Message::SessionReopen { iter: 0 })
+            .unwrap();
+        coord.send_session(NodeId::Institution(0), 6, &broadcast).unwrap();
+        let (_, _, second) = center.recv_session().unwrap();
+        assert_eq!(first, second, "replayed submission must be bit-identical");
+        assert_eq!(gauge.load(Ordering::Relaxed), 1, "reopened lazily on replay");
+        // Reopen for a session this worker never opened is a no-op.
+        coord
+            .send_session(NodeId::Institution(0), 88, &Message::SessionReopen { iter: 0 })
+            .unwrap();
+        coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+        assert_eq!(gauge.load(Ordering::Relaxed), 1, "shutdown leaves gauge as-is");
     }
 
     /// Sessions of EQUAL dimension share one pooled kernel workspace;

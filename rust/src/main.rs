@@ -69,6 +69,12 @@ MULTIFIT FLAGS:
                          lanes apply --policy (0 = unbounded)       [0]
     --policy <p>         full-lane behavior: block | reject | shed
                          (shed = newest-wins bulk ring)         [block]
+    --retry-max <n>      worker-loss retries before a session is
+                         resolved per --retry-exhausted             [0]
+    --retry-backoff-ms <n>  delay before a suspended session is
+                         re-admitted for replay                     [0]
+    --retry-exhausted <p>  abort | park: fate of a session whose
+                         retry budget is spent                  [abort]
 
 CV FLAGS:
     --lambdas <grid>     comma-separated λ candidates    [0.01,0.1,1,10]
@@ -204,6 +210,11 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
     cfg.auto_retire = args.get_usize("auto-retire", cfg.auto_retire)?;
     cfg.driver_shards = args.get_usize("driver-shards", cfg.driver_shards)?;
     cfg.lane_capacity = args.get_usize("lane-capacity", cfg.lane_capacity)?;
+    cfg.retry_max = args.get_usize("retry-max", cfg.retry_max as usize)? as u32;
+    cfg.retry_backoff_ms = args.get_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
+    if let Some(p) = args.get("retry-exhausted") {
+        cfg.retry_on_exhausted = privlr::config::OnExhausted::parse(p)?;
+    }
     cfg.validate()?;
     let ds = cfg.dataset.load(cfg.seed)?;
     println!(

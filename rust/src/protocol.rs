@@ -180,6 +180,23 @@ pub enum Message {
     /// under a `max_in_flight` cap.
     AdmissionWake,
 
+    /// Fault layer / engine front end → every coordinator driver
+    /// shard: a worker endpoint was torn down (crash-fault simulation
+    /// or a real thread death). Each driver moves the affected
+    /// non-draining sessions to `Suspended` and re-admits them under
+    /// its retry policy; draining sessions stop waiting for the dead
+    /// node's `CloseAck`.
+    WorkerDown { node: u16, is_center: bool },
+
+    /// Coordinator → every node of one suspended session, immediately
+    /// before the session's current Newton round is replayed: discard
+    /// ALL per-session state (partial center accumulators, institution
+    /// workspaces) so the replayed round starts from a clean slate and
+    /// re-opens lazily from the registry spec. Idempotent — a node
+    /// that never held state for the session simply ignores it, so
+    /// duplicated reopen frames are harmless.
+    SessionReopen { iter: u32 },
+
     /// Orderly teardown of node threads.
     Shutdown,
 }
@@ -198,6 +215,8 @@ impl Message {
             Message::NodeError { .. } => "node_error",
             Message::StudySubmitted => "study_submitted",
             Message::AdmissionWake => "admission_wake",
+            Message::WorkerDown { .. } => "worker_down",
+            Message::SessionReopen { .. } => "session_reopen",
             Message::Shutdown => "shutdown",
         }
     }
@@ -346,20 +365,32 @@ impl<'a> Reader<'a> {
     }
 }
 
-const TAG_BETA: u8 = 1;
-const TAG_SUBMIT: u8 = 2;
-const TAG_AGG_REQ: u8 = 3;
-const TAG_AGG_RESP: u8 = 4;
+// Message tag bytes are public so the fault-injection transport
+// ([`crate::transport::FaultRule`]) can target one frame kind without
+// decoding bodies.
+pub const TAG_BETA: u8 = 1;
+pub const TAG_SUBMIT: u8 = 2;
+pub const TAG_AGG_REQ: u8 = 3;
+pub const TAG_AGG_RESP: u8 = 4;
 // Tag 5 was the pre-lifecycle `Finished` teardown frame, retired when
 // acknowledged close replaced fire-and-forget teardown; kept reserved
 // so stale captures decode to an UnknownTag error, not a wrong frame.
-const TAG_SHUTDOWN: u8 = 6;
-const TAG_NODE_ERROR: u8 = 7;
-const TAG_STUDY_SUBMITTED: u8 = 8;
-const TAG_SESSION_CLOSE: u8 = 9;
-const TAG_CLOSE_ACK: u8 = 10;
-const TAG_ABORT: u8 = 11;
-const TAG_ADMISSION_WAKE: u8 = 12;
+pub const TAG_SHUTDOWN: u8 = 6;
+pub const TAG_NODE_ERROR: u8 = 7;
+pub const TAG_STUDY_SUBMITTED: u8 = 8;
+pub const TAG_SESSION_CLOSE: u8 = 9;
+pub const TAG_CLOSE_ACK: u8 = 10;
+pub const TAG_ABORT: u8 = 11;
+pub const TAG_ADMISSION_WAKE: u8 = 12;
+pub const TAG_WORKER_DOWN: u8 = 13;
+pub const TAG_SESSION_REOPEN: u8 = 14;
+
+/// Message tag byte of an encoded wire frame (`None` for frames
+/// shorter than header + tag). The fault layer matches per-tag rules
+/// on this without decoding bodies.
+pub fn frame_tag(bytes: &[u8]) -> Option<u8> {
+    bytes.get(SESSION_HEADER_LEN).copied()
+}
 
 const HTAG_PLAIN: u8 = 0;
 const HTAG_SHARED: u8 = 1;
@@ -456,6 +487,15 @@ pub fn encode(msg: &Message) -> Vec<u8> {
         }
         Message::StudySubmitted => w.u8(TAG_STUDY_SUBMITTED),
         Message::AdmissionWake => w.u8(TAG_ADMISSION_WAKE),
+        Message::WorkerDown { node, is_center } => {
+            w.u8(TAG_WORKER_DOWN);
+            w.u16(*node);
+            w.u8(u8::from(*is_center));
+        }
+        Message::SessionReopen { iter } => {
+            w.u8(TAG_SESSION_REOPEN);
+            w.u32(*iter);
+        }
         Message::Shutdown => w.u8(TAG_SHUTDOWN),
     }
     w.buf
@@ -505,6 +545,11 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
         TAG_SHUTDOWN => Message::Shutdown,
         TAG_STUDY_SUBMITTED => Message::StudySubmitted,
         TAG_ADMISSION_WAKE => Message::AdmissionWake,
+        TAG_WORKER_DOWN => Message::WorkerDown {
+            node: r.u16()?,
+            is_center: r.u8()? != 0,
+        },
+        TAG_SESSION_REOPEN => Message::SessionReopen { iter: r.u32()? },
         TAG_NODE_ERROR => {
             let node = r.u16()?;
             let is_center = r.u8()? != 0;
@@ -745,6 +790,16 @@ mod tests {
         });
         roundtrip(Message::StudySubmitted);
         roundtrip(Message::AdmissionWake);
+        roundtrip(Message::WorkerDown {
+            node: 2,
+            is_center: false,
+        });
+        roundtrip(Message::WorkerDown {
+            node: 0,
+            is_center: true,
+        });
+        roundtrip(Message::SessionReopen { iter: 0 });
+        roundtrip(Message::SessionReopen { iter: u32::MAX });
         roundtrip(Message::Shutdown);
     }
 
@@ -869,6 +924,21 @@ mod tests {
         );
         assert_eq!(Message::Abort { reason: String::new() }.kind(), "abort");
         assert_eq!(Message::AdmissionWake.kind(), "admission_wake");
+        assert_eq!(
+            Message::WorkerDown { node: 1, is_center: false }.kind(),
+            "worker_down"
+        );
+        assert_eq!(Message::SessionReopen { iter: 3 }.kind(), "session_reopen");
+    }
+
+    #[test]
+    fn frame_tag_reads_the_body_tag() {
+        let bytes = encode_frame(9, &Message::SessionReopen { iter: 1 });
+        assert_eq!(frame_tag(&bytes), Some(TAG_SESSION_REOPEN));
+        let bytes = encode_frame(9, &Message::WorkerDown { node: 0, is_center: true });
+        assert_eq!(frame_tag(&bytes), Some(TAG_WORKER_DOWN));
+        // a bare header has no tag byte
+        assert_eq!(frame_tag(&9u32.to_le_bytes()), None);
     }
 
     #[test]

@@ -315,6 +315,25 @@ impl SessionState {
         self.round_messages()
     }
 
+    /// The Newton iteration currently in flight.
+    pub fn current_iter(&self) -> u32 {
+        self.iter
+    }
+
+    /// Re-open the current round after a suspension (worker death +
+    /// retry): discard any partial responses and re-emit this round's
+    /// messages. β, the deviance history and the iteration counter are
+    /// untouched, and every institution's shares for iteration `iter`
+    /// are a pure function of `(spec, β, derive_seed(share_seed, iter))`
+    /// — so the replayed round is bit-identical to the one the crash
+    /// interrupted, and stragglers from the interrupted attempt are
+    /// harmless duplicates (deduped per center in
+    /// [`SessionState::on_aggregate_response`]).
+    pub fn replay_messages(&mut self) -> Vec<(NodeId, Message)> {
+        self.responses.clear();
+        self.round_messages()
+    }
+
     /// Broadcast β + aggregate requests for the current iteration.
     fn round_messages(&self) -> Vec<(NodeId, Message)> {
         let s = self.spec.num_institutions();
@@ -383,12 +402,29 @@ impl SessionState {
         dev_share: Fp,
         riter: u32,
     ) -> anyhow::Result<SessionStep> {
-        anyhow::ensure!(
-            riter == self.iter,
-            "session {}: stale response for iter {riter} (at {})",
-            self.spec.session,
-            self.iter
-        );
+        // A response from a PAST round is a harmless straggler (a
+        // duplicated central frame, or the tail of a round a crash
+        // interrupted and a replay has since completed — by share
+        // determinism its content matches what was already folded);
+        // ignore it. A response from a FUTURE round can only be a
+        // protocol bug.
+        if riter != self.iter {
+            anyhow::ensure!(
+                riter < self.iter,
+                "session {}: response for future iter {riter} (at {})",
+                self.spec.session,
+                self.iter
+            );
+            return Ok(SessionStep::Pending);
+        }
+        // Idempotent fold: a center that already answered this round
+        // (duplicate frame, or a pre-suspension straggler racing the
+        // replay) is ignored — its duplicate carries bit-identical
+        // content, and double-pushing would hand the Lagrange
+        // reconstruction a repeated x-coordinate.
+        if self.responses.iter().any(|(c, ..)| *c == center) {
+            return Ok(SessionStep::Pending);
+        }
         self.responses.push((center, hessian, g_share, dev_share));
         let w = self.spec.num_centers();
         if self.responses.len() < w {
@@ -559,11 +595,58 @@ mod tests {
     }
 
     #[test]
-    fn stale_iteration_is_rejected() {
+    fn future_iteration_is_rejected() {
         let mut st =
             SessionState::new(spec(1, 2, 3, 2, 3), SecurityMode::Pragmatic, 1.0, 1e-10, 10);
         let err = st.on_aggregate_response(0, HessianPayload::Absent, vec![], Fp::ZERO, 5);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn duplicate_center_response_is_ignored() {
+        // w = 3 centers: responses from centers {1, 1, 2} must stay
+        // Pending — without per-center dedup the third push would
+        // trigger a reconstruction over a repeated x-coordinate.
+        let mut st =
+            SessionState::new(spec(1, 2, 3, 2, 3), SecurityMode::Pragmatic, 1.0, 1e-10, 10);
+        for center in [1u16, 1, 2] {
+            let step = st
+                .on_aggregate_response(
+                    center,
+                    HessianPayload::Absent,
+                    vec![Fp::ZERO; 3],
+                    Fp::ZERO,
+                    0,
+                )
+                .unwrap();
+            assert!(matches!(step, SessionStep::Pending));
+        }
+    }
+
+    #[test]
+    fn replay_reemits_the_current_round_and_clears_partials() {
+        let mut st =
+            SessionState::new(spec(1, 3, 5, 3, 4), SecurityMode::Pragmatic, 1.0, 1e-10, 10);
+        let opening = st.begin();
+        // A partial round is in flight when the worker dies...
+        let step = st
+            .on_aggregate_response(2, HessianPayload::Absent, vec![Fp::ZERO; 4], Fp::ZERO, 0)
+            .unwrap();
+        assert!(matches!(step, SessionStep::Pending));
+        // ...replay discards it and re-emits the identical round.
+        assert_eq!(st.current_iter(), 0);
+        let replay = st.replay_messages();
+        assert_eq!(replay.len(), opening.len());
+        for ((to_a, m_a), (to_b, m_b)) in opening.iter().zip(&replay) {
+            assert_eq!(to_a, to_b);
+            assert_eq!(m_a, m_b);
+        }
+        // The discarded partial no longer counts toward the quorum:
+        // center 2 can answer the replayed round afresh.
+        let step = st
+            .on_aggregate_response(2, HessianPayload::Absent, vec![Fp::ZERO; 4], Fp::ZERO, 0)
+            .unwrap();
+        assert!(matches!(step, SessionStep::Pending));
     }
 
     #[test]

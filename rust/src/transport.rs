@@ -29,10 +29,23 @@
 //! reach one specific shard regardless of their session tag (per-shard
 //! shutdown, cross-shard admission wakes) use the shard-directed sends
 //! ([`Endpoint::send_to_shard`], [`Injector::send_to_shard`]).
+//!
+//! **Fault injection** (crash-fault testing, not an adversary model):
+//! an installed [`FaultPlan`] evaluates every session-routed frame
+//! against ordered [`FaultRule`]s that drop, duplicate, or delay
+//! matching frames per `(destination, session, tag)`, with per-rule
+//! budgets; [`Network::kill`] tears a node's mailboxes down (its
+//! blocked receive observes `Disconnected`, senders get
+//! `UnknownDestination`) and [`Network::reregister`] restores the
+//! route for a restarted worker under its old `NodeId`. Dropped frames
+//! are never counted and duplicates are counted once, so every traffic
+//! sum invariant survives any plan.
 
-use crate::protocol::{decode_frame, encode_frame, Message, NodeId, SessionId, CONTROL_SESSION};
+use crate::protocol::{
+    decode_frame, encode_frame, frame_tag, Message, NodeId, SessionId, CONTROL_SESSION,
+};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -306,6 +319,135 @@ impl From<crate::protocol::CodecError> for TransportError {
     }
 }
 
+// ---- fault injection -----------------------------------------------------
+
+/// What a matched fault rule does to the frame it matched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Swallow the frame: never delivered, never counted — models a
+    /// lost packet. (Traffic counters attribute only frames that reach
+    /// a mailbox, so a dropped frame leaves every sum invariant
+    /// intact.)
+    Drop,
+    /// Deliver the frame twice, back to back. Counted ONCE: the
+    /// duplicate models a retransmission artifact the receiver must
+    /// tolerate, not new protocol traffic, so byte accounting must not
+    /// double-count it.
+    Duplicate,
+    /// Hold the frame back until `n` further frames have been routed
+    /// through the network, then deliver (and count) it. Deterministic
+    /// reordering: the release point is a frame count, not a clock.
+    Delay(u32),
+}
+
+/// One fault-injection rule: matches frames by destination, session
+/// and/or message tag (`None` = wildcard), applies its action to the
+/// first `budget` matching frames, then goes inert.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRule {
+    /// Destination filter (`None` matches every node).
+    pub to: Option<NodeId>,
+    /// Session filter from the frame header (`None` matches all).
+    pub session: Option<SessionId>,
+    /// Message-tag filter (see `protocol::TAG_*`; `None` matches all).
+    pub tag: Option<u8>,
+    pub action: FaultAction,
+    /// Frames this rule still applies to; decremented per match.
+    pub budget: u32,
+}
+
+impl FaultRule {
+    fn matches(&self, to: NodeId, session: SessionId, tag: Option<u8>) -> bool {
+        self.budget > 0
+            && self.to.map_or(true, |t| t == to)
+            && self.session.map_or(true, |s| s == session)
+            && self.tag.map_or(true, |t| tag == Some(t))
+    }
+}
+
+/// An ordered set of [`FaultRule`]s installed over a [`Network`]
+/// (`Network::install_faults`). The first matching rule with budget
+/// remaining wins per frame. Shard-directed control sends (per-shard
+/// shutdown, cross-shard admission wakes) bypass the plan, so an
+/// engine can always be shut down under any plan.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Builder-style rule append.
+    pub fn rule(mut self, rule: FaultRule) -> FaultPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Seeded random chaos plan over a `(institutions, centers)`
+    /// topology: `n` duplicate/delay rules with small budgets spread
+    /// across worker-bound and coordinator-bound links. Only
+    /// *liveness-preserving* faults are drawn — no drops — so any fit
+    /// must still complete, bit-identically, under the plan; that is
+    /// the chaos gate's invariant.
+    pub fn seeded_chaos(seed: u64, n: usize, institutions: u16, centers: u16) -> FaultPlan {
+        use crate::util::rng::{Rng, SplitMix64};
+        let mut rng = SplitMix64::new(seed);
+        let mut plan = FaultPlan::new();
+        for _ in 0..n {
+            let to = match rng.next_below(3) {
+                0 => Some(NodeId::Institution(rng.next_below(institutions.max(1) as u64) as u16)),
+                1 => Some(NodeId::Center(rng.next_below(centers.max(1) as u64) as u16)),
+                _ => Some(NodeId::Coordinator),
+            };
+            // Delays release on subsequent routed frames. Worker-bound
+            // delays always tick free (the acked-close fan-out alone
+            // routes more frames than the max delay), but a delayed
+            // coordinator-bound TAIL frame — the drain's final
+            // CloseAck — may have no follow-on traffic at all, so
+            // coordinator links only ever draw duplicates.
+            let action = if to == Some(NodeId::Coordinator) || rng.next_bernoulli(0.5) {
+                FaultAction::Duplicate
+            } else {
+                FaultAction::Delay(1 + rng.next_below(3) as u32)
+            };
+            plan.rules.push(FaultRule {
+                to,
+                session: None,
+                tag: None,
+                action,
+                budget: 1 + rng.next_below(3) as u32,
+            });
+        }
+        plan
+    }
+}
+
+/// A frame held back by a [`FaultAction::Delay`] rule.
+struct DelayedFrame {
+    from: NodeId,
+    to: NodeId,
+    session: SessionId,
+    bytes: Vec<u8>,
+    /// Frames still to pass through the network before release.
+    remaining: u32,
+}
+
+/// Live fault state: the installed rules plus the delayed-frame queue.
+#[derive(Default)]
+struct FaultState {
+    rules: Vec<FaultRule>,
+    delayed: Vec<DelayedFrame>,
+}
+
+/// Routing verdict for one frame that survived fault evaluation.
+enum FaultVerdict {
+    Deliver,
+    Duplicate,
+}
+
 /// Routing key: session-scoped mailboxes (`session: Some(..)`) take
 /// precedence over a node's catch-all mailbox (`session: None`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -322,6 +464,11 @@ pub struct Network {
     /// frame by `protocol::shard_of(session, N)` (see the module docs
     /// for routing precedence).
     sharded: Mutex<HashMap<NodeId, Vec<Sender<Frame>>>>,
+    /// Fast-path guard: `route_with` only takes the fault lock when a
+    /// plan has been installed, so fault-free runs pay one relaxed
+    /// atomic load per frame.
+    faults_active: AtomicBool,
+    faults: Mutex<FaultState>,
     pub counters: TrafficCounters,
 }
 
@@ -330,8 +477,63 @@ impl Network {
         Arc::new(Network {
             senders: Mutex::new(HashMap::new()),
             sharded: Mutex::new(HashMap::new()),
+            faults_active: AtomicBool::new(false),
+            faults: Mutex::new(FaultState::default()),
             counters: TrafficCounters::default(),
         })
+    }
+
+    /// Install (append) a fault plan's rules. Frames routed from now
+    /// on are evaluated against the rules in order; the first match
+    /// with budget remaining wins and spends one budget unit.
+    pub fn install_faults(&self, plan: FaultPlan) {
+        let mut st = self.faults.lock().unwrap();
+        st.rules.extend(plan.rules);
+        self.faults_active.store(true, Ordering::Relaxed);
+    }
+
+    /// Remove every fault rule and discard any still-delayed frames.
+    pub fn clear_faults(&self) {
+        let mut st = self.faults.lock().unwrap();
+        st.rules.clear();
+        st.delayed.clear();
+        self.faults_active.store(false, Ordering::Relaxed);
+    }
+
+    /// Kill a worker's endpoint: every mailbox registered for `id`
+    /// (catch-all, session-scoped and sharded) is torn down. Frames
+    /// already queued in the mailbox drain normally; once empty the
+    /// node's blocked `recv_session` returns `Disconnected` and its
+    /// worker thread exits. Subsequent sends to `id` fail with
+    /// `UnknownDestination` until [`Network::reregister`].
+    pub fn kill(&self, id: NodeId) {
+        self.senders.lock().unwrap().retain(|k, _| k.node != id);
+        self.sharded.lock().unwrap().remove(&id);
+        // Frames a Delay rule was holding for the dead node can never
+        // be delivered; drop them so the flush path does not keep
+        // erroring against a tombstone.
+        self.faults
+            .lock()
+            .unwrap()
+            .delayed
+            .retain(|d| d.to != id);
+    }
+
+    /// Re-register a previously killed (or never-registered) node's
+    /// catch-all mailbox under its old `NodeId`, without the duplicate
+    /// panic of [`Network::register`] — the restart path for a crashed
+    /// worker. Any stale catch-all sender is replaced.
+    pub fn reregister(self: &Arc<Network>, id: NodeId) -> Endpoint {
+        let (tx, rx) = channel();
+        self.senders
+            .lock()
+            .unwrap()
+            .insert(RouteKey { node: id, session: None }, tx);
+        Endpoint {
+            id,
+            net: Arc::clone(self),
+            inbox: rx,
+        }
     }
 
     /// Register a node's catch-all mailbox (serves every session that
@@ -442,6 +644,98 @@ impl Network {
         bytes: Vec<u8>,
         shard_override: Option<usize>,
     ) -> Result<(), TransportError> {
+        // Fault evaluation first: shard-directed control frames bypass
+        // it (shutdown/wake delivery must stay reliable under any
+        // plan), everything else consults the installed rules.
+        if self.faults_active.load(Ordering::Relaxed) && shard_override.is_none() {
+            match self.apply_faults(from, to, session, bytes)? {
+                None => return Ok(()),
+                Some((bytes, FaultVerdict::Duplicate)) => {
+                    self.deliver(from, to, session, bytes.clone(), None, true)?;
+                    // Second copy: best-effort (the first delivery
+                    // proved the route), never counted.
+                    let _ = self.deliver(from, to, session, bytes, None, false);
+                    return Ok(());
+                }
+                Some((bytes, _)) => return self.deliver(from, to, session, bytes, None, true),
+            }
+        }
+        self.deliver(from, to, session, bytes, shard_override, true)
+    }
+
+    /// Evaluate the fault rules for one frame and tick the delayed
+    /// queue. Returns `None` when the frame was swallowed (dropped or
+    /// parked for delayed delivery), otherwise the frame plus its
+    /// verdict. Frames released by the tick are delivered (and
+    /// counted) before the current frame, best-effort — their
+    /// destination may have been killed in the meantime.
+    #[allow(clippy::type_complexity)]
+    fn apply_faults(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        session: SessionId,
+        bytes: Vec<u8>,
+    ) -> Result<Option<(Vec<u8>, FaultVerdict)>, TransportError> {
+        let tag = frame_tag(&bytes);
+        let mut st = self.faults.lock().unwrap();
+        // Tick: every routed frame ages the delayed queue by one.
+        let mut due = Vec::new();
+        for d in st.delayed.iter_mut() {
+            d.remaining = d.remaining.saturating_sub(1);
+        }
+        let mut i = 0;
+        while i < st.delayed.len() {
+            if st.delayed[i].remaining == 0 {
+                due.push(st.delayed.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        let verdict = match st
+            .rules
+            .iter_mut()
+            .find(|r| r.matches(to, session, tag))
+            .map(|r| {
+                r.budget -= 1;
+                r.action
+            }) {
+            Some(FaultAction::Drop) => None,
+            Some(FaultAction::Duplicate) => Some(FaultVerdict::Duplicate),
+            Some(FaultAction::Delay(n)) => {
+                st.delayed.push(DelayedFrame {
+                    from,
+                    to,
+                    session,
+                    bytes: bytes.clone(),
+                    remaining: n,
+                });
+                None
+            }
+            None => Some(FaultVerdict::Deliver),
+        };
+        drop(st);
+        for d in due {
+            let _ = self.deliver(d.from, d.to, d.session, d.bytes, None, true);
+        }
+        match verdict {
+            None => Ok(None),
+            Some(v) => Ok(Some((bytes, v))),
+        }
+    }
+
+    /// Final delivery + (optional) byte accounting — the pre-fault
+    /// routing body, unchanged: session-scoped > sharded-by-hash >
+    /// catch-all, with `shard_override` forcing one shard mailbox.
+    fn deliver(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        session: SessionId,
+        bytes: Vec<u8>,
+        shard_override: Option<usize>,
+        count: bool,
+    ) -> Result<(), TransportError> {
         let n = bytes.len() as u64;
         let delivered = 'deliver: {
             if shard_override.is_none() {
@@ -474,7 +768,9 @@ impl Network {
                 .map_err(|_| TransportError::Disconnected(to))
         };
         delivered?;
-        self.counters.record(from, to, session, n);
+        if count {
+            self.counters.record(from, to, session, n);
+        }
         Ok(())
     }
 }
@@ -1079,6 +1375,204 @@ mod tests {
         let net = Network::new();
         let _catch_all = net.register(NodeId::Coordinator);
         let _shards = net.register_sharded(NodeId::Coordinator, 2);
+    }
+
+    #[test]
+    fn kill_unroutes_and_disconnects_then_reregister_restores() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        coord
+            .send_session(NodeId::Institution(0), 1, &Message::Shutdown)
+            .unwrap();
+        net.kill(NodeId::Institution(0));
+        // Buffered frames drain, then the receiver observes the death.
+        assert!(inst.recv_session().is_ok());
+        assert!(matches!(
+            inst.recv_session(),
+            Err(TransportError::Disconnected(_))
+        ));
+        // Senders see a tombstone until restart.
+        assert!(matches!(
+            coord.send(NodeId::Institution(0), &Message::Shutdown),
+            Err(TransportError::UnknownDestination(_))
+        ));
+        // Restart: same NodeId, fresh mailbox, routing restored.
+        let inst2 = net.reregister(NodeId::Institution(0));
+        coord
+            .send_session(NodeId::Institution(0), 2, &Message::Shutdown)
+            .unwrap();
+        let (_, s, _) = inst2.recv_session().unwrap();
+        assert_eq!(s, 2);
+    }
+
+    #[test]
+    fn drop_rule_swallows_without_counting() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        net.install_faults(FaultPlan::new().rule(FaultRule {
+            to: Some(NodeId::Institution(0)),
+            session: Some(7),
+            tag: Some(crate::protocol::TAG_SHUTDOWN),
+            action: FaultAction::Drop,
+            budget: 1,
+        }));
+        // Matched: swallowed, not delivered, not counted.
+        coord
+            .send_session(NodeId::Institution(0), 7, &Message::Shutdown)
+            .unwrap();
+        assert!(inst.recv_timeout(Duration::from_millis(20)).unwrap().is_none());
+        assert_eq!(coord.counters().total_messages, 0);
+        // Budget spent: the next identical frame sails through.
+        coord
+            .send_session(NodeId::Institution(0), 7, &Message::Shutdown)
+            .unwrap();
+        assert!(inst.recv_timeout(Duration::from_millis(200)).unwrap().is_some());
+        let snap = coord.counters();
+        assert_eq!(snap.total_messages, 1);
+        assert_eq!(snap.session_bytes(7), snap.total_bytes);
+    }
+
+    #[test]
+    fn duplicate_rule_delivers_twice_counts_once() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        net.install_faults(FaultPlan::new().rule(FaultRule {
+            to: Some(NodeId::Institution(0)),
+            session: None,
+            tag: None,
+            action: FaultAction::Duplicate,
+            budget: 1,
+        }));
+        let msg = Message::BetaBroadcast { iter: 0, beta: vec![1.0] };
+        coord.send_session(NodeId::Institution(0), 3, &msg).unwrap();
+        let (_, s1, m1) = inst.recv_session().unwrap();
+        let (_, s2, m2) = inst.recv_session().unwrap();
+        assert_eq!((s1, s2), (3, 3));
+        assert_eq!(m1, msg);
+        assert_eq!(m2, msg);
+        // One frame's worth of bytes despite two deliveries.
+        let snap = coord.counters();
+        assert_eq!(snap.total_messages, 1);
+        assert_eq!(
+            snap.total_bytes,
+            crate::protocol::encode_frame(3, &msg).len() as u64
+        );
+    }
+
+    #[test]
+    fn delay_rule_reorders_deterministically() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        net.install_faults(FaultPlan::new().rule(FaultRule {
+            to: Some(NodeId::Institution(0)),
+            session: Some(1),
+            tag: None,
+            action: FaultAction::Delay(2),
+            budget: 1,
+        }));
+        // Frame A (session 1) is parked for 2 network frames.
+        let a = Message::BetaBroadcast { iter: 10, beta: vec![] };
+        coord.send_session(NodeId::Institution(0), 1, &a).unwrap();
+        assert!(inst.recv_timeout(Duration::from_millis(20)).unwrap().is_none());
+        // B ticks the queue (remaining 1) and arrives first.
+        coord
+            .send_session(NodeId::Institution(0), 2, &Message::Shutdown)
+            .unwrap();
+        let (_, s, _) = inst.recv_session().unwrap();
+        assert_eq!(s, 2);
+        // C ticks it to 0: A is released (and only then counted)
+        // BEFORE C delivers, preserving a deterministic order.
+        coord
+            .send_session(NodeId::Institution(0), 3, &Message::Shutdown)
+            .unwrap();
+        let (_, s_a, m_a) = inst.recv_session().unwrap();
+        assert_eq!(s_a, 1);
+        assert_eq!(m_a, a);
+        let (_, s_c, _) = inst.recv_session().unwrap();
+        assert_eq!(s_c, 3);
+        // All three frames counted exactly once.
+        let snap = coord.counters();
+        assert_eq!(snap.total_messages, 3);
+        let sum: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
+        assert_eq!(sum, snap.total_bytes);
+    }
+
+    #[test]
+    fn clear_faults_discards_rules_and_parked_frames() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst = net.register(NodeId::Institution(0));
+        net.install_faults(FaultPlan::new().rule(FaultRule {
+            to: None,
+            session: None,
+            tag: None,
+            action: FaultAction::Delay(5),
+            budget: u32::MAX,
+        }));
+        coord
+            .send_session(NodeId::Institution(0), 1, &Message::Shutdown)
+            .unwrap();
+        net.clear_faults();
+        // The parked frame is gone; new traffic flows untouched.
+        coord
+            .send_session(NodeId::Institution(0), 2, &Message::Shutdown)
+            .unwrap();
+        let (_, s, _) = inst.recv_session().unwrap();
+        assert_eq!(s, 2);
+        assert!(inst.recv_timeout(Duration::from_millis(20)).unwrap().is_none());
+    }
+
+    #[test]
+    fn shard_directed_sends_bypass_fault_rules() {
+        let net = Network::new();
+        let shards = net.register_sharded(NodeId::Coordinator, 2);
+        let inj = net.injector(NodeId::Client);
+        net.install_faults(FaultPlan::new().rule(FaultRule {
+            to: Some(NodeId::Coordinator),
+            session: None,
+            tag: None,
+            action: FaultAction::Drop,
+            budget: u32::MAX,
+        }));
+        // Session-routed frames are dropped...
+        inj.send_session(NodeId::Coordinator, 5, &Message::StudySubmitted)
+            .unwrap();
+        // ...but shard-directed control delivery is exempt.
+        inj.send_to_shard(NodeId::Coordinator, 1, &Message::Shutdown).unwrap();
+        let (_, _, msg) = shards[1].recv_session().unwrap();
+        assert_eq!(msg, Message::Shutdown);
+        let owner = crate::protocol::shard_of(5, 2);
+        assert!(shards[owner]
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn seeded_chaos_is_deterministic_and_liveness_preserving() {
+        let a = FaultPlan::seeded_chaos(42, 8, 3, 5);
+        let b = FaultPlan::seeded_chaos(42, 8, 3, 5);
+        assert_eq!(a.rules.len(), 8);
+        for (ra, rb) in a.rules.iter().zip(&b.rules) {
+            assert_eq!(ra.to, rb.to);
+            assert_eq!(ra.action, rb.action);
+            assert_eq!(ra.budget, rb.budget);
+            // chaos plans never drop frames — fits must still finish
+            assert_ne!(ra.action, FaultAction::Drop);
+            assert!(ra.budget >= 1);
+        }
+        let c = FaultPlan::seeded_chaos(43, 8, 3, 5);
+        assert!(
+            a.rules
+                .iter()
+                .zip(&c.rules)
+                .any(|(x, y)| x.to != y.to || x.action != y.action || x.budget != y.budget),
+            "different seeds should draw different plans"
+        );
     }
 }
 

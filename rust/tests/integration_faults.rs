@@ -1,0 +1,385 @@
+//! Fault-tolerance gates: crash-fault injection over the in-memory
+//! transport, worker restart under the old `NodeId`, suspended-session
+//! re-admission with replay, and the deadline timer wheel.
+//!
+//! The headline invariant is **replay bit-identity**: a fit that loses
+//! a worker mid-protocol and recovers through suspend → re-admit →
+//! `SessionReopen` → replay produces a β̂ byte-identical to an
+//! uninterrupted fit. That holds because every share is a pure
+//! function of `(session spec, β, derive_seed(share_seed, iter))`,
+//! share-domain folds are exact field arithmetic, and reconstruction
+//! from any t-quorum is exact — there is no hidden accumulator state
+//! to lose.
+//!
+//! The chaos gate (`#[ignore]`, run via `PRIVLR_CHAOS=1 ./ci.sh`)
+//! re-proves the sharded bit-identity invariant under seeded random
+//! duplicate/delay fault plans at N ∈ {1, 2, 4} driver shards.
+
+use privlr::config::{ExperimentConfig, OnExhausted, SecurityMode};
+use privlr::data::synthetic;
+use privlr::engine::{
+    EngineOptions, Lifecycle, RetryPolicy, StudyEngine, SubmitError, SubmitOptions, SubmitPolicy,
+};
+use privlr::protocol::{NodeId, TAG_AGG_RESP, TAG_BETA, TAG_SUBMIT};
+use privlr::transport::{FaultAction, FaultPlan, FaultRule};
+use std::time::{Duration, Instant};
+
+fn cfg_3c() -> ExperimentConfig {
+    ExperimentConfig {
+        num_centers: 3,
+        threshold: 2,
+        max_iters: 30,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// A config heavy enough that its fit reliably outlives the test
+/// thread's kill/submit interleavings (full security: shared Hessian).
+fn heavy_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        mode: SecurityMode::Full,
+        ..cfg_3c()
+    }
+}
+
+/// Poll the lifecycle board until `sid` reaches `want` (bounded).
+fn await_lifecycle(engine: &StudyEngine, sid: u32, want: Lifecycle) {
+    let t0 = Instant::now();
+    while engine.lifecycle(sid) != Some(want) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "session {sid} never reached {want:?} (now {:?})",
+            engine.lifecycle(sid)
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Every-worker-clean postcondition: gauges zero, no spec distributed.
+fn assert_no_leaks(engine: &StudyEngine) {
+    assert!(
+        engine.worker_live_sessions().iter().all(|&n| n == 0),
+        "worker state leaked: {:?}",
+        engine.worker_live_sessions()
+    );
+    assert_eq!(engine.live_specs(), 0, "session specs leaked");
+}
+
+/// Kill one worker while a fit is mid-round, restart it, and require
+/// the recovered fit to be byte-identical to an uninterrupted one —
+/// at every driver-shard count, for an institution AND a center crash.
+#[test]
+fn mid_fit_worker_crash_recovers_bit_identically_across_shards() {
+    let ds = synthetic("crash", 4000, 5, 2, 0.0, 1.0, 701);
+    let cfg = heavy_cfg();
+    // Uninterrupted baseline (shard count does not move numerics —
+    // that is already gated by integration_sessions).
+    let clean = StudyEngine::new(2, 3).unwrap();
+    let beta_base = clean
+        .submit(&cfg, &ds, SubmitOptions::default())
+        .unwrap()
+        .join()
+        .unwrap()
+        .beta;
+    clean.shutdown().unwrap();
+
+    for (shards, kill_center) in [(1usize, false), (2, true), (4, false)] {
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions {
+                driver_shards: shards,
+                retry: RetryPolicy {
+                    max_retries: 500,
+                    backoff: Duration::from_millis(2),
+                    on_exhausted: OnExhausted::Abort,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+        let sid = h.session_id();
+        await_lifecycle(&engine, sid, Lifecycle::Running);
+        if kill_center {
+            engine.kill_center(1).unwrap();
+            engine.restart_center(1).unwrap();
+        } else {
+            engine.kill_institution(1).unwrap();
+            engine.restart_institution(1).unwrap();
+        }
+        let fit = h.join().unwrap();
+        assert_eq!(
+            fit.beta, beta_base,
+            "replay after a {} crash must be bit-identical (shards={shards})",
+            if kill_center { "center" } else { "institution" }
+        );
+        assert_eq!(engine.lifecycle(sid), Some(Lifecycle::Closed));
+        assert_no_leaks(&engine);
+        engine.shutdown().unwrap();
+    }
+}
+
+/// A dead worker that never comes back exhausts the retry budget: the
+/// session resolves `Aborted` through the acknowledged drain, the
+/// survivors hold zero per-session state, and — after a restart — the
+/// same engine serves studies again.
+#[test]
+fn exhausted_retry_budget_aborts_cleanly_with_zero_leaks() {
+    let ds = synthetic("exhaust", 300, 3, 2, 0.0, 1.0, 702);
+    let cfg = cfg_3c();
+    let engine = StudyEngine::with_options(
+        2,
+        3,
+        EngineOptions {
+            retry: RetryPolicy {
+                max_retries: 1,
+                backoff: Duration::from_millis(1),
+                on_exhausted: OnExhausted::Abort,
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    engine.kill_institution(0).unwrap();
+    let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let sid = h.session_id();
+    let err = h.join().unwrap_err();
+    assert!(
+        err.to_string().contains("retry budget"),
+        "expected retry exhaustion, got: {err:#}"
+    );
+    assert_eq!(engine.lifecycle(sid), Some(Lifecycle::Aborted));
+    assert_no_leaks(&engine);
+    // Recovery: the restarted worker serves fresh sessions.
+    engine.restart_institution(0).unwrap();
+    let fit = engine
+        .submit(&cfg, &ds, SubmitOptions::default())
+        .unwrap()
+        .join()
+        .unwrap();
+    assert!(fit.metrics.iterations > 1);
+    assert_no_leaks(&engine);
+    engine.shutdown().unwrap();
+}
+
+/// Duplicated and delayed frames neither move the numbers nor the
+/// byte accounting: a fit under a duplicate/delay plan yields the same
+/// β̂ AND the same per-session traffic bytes as a fault-free fit —
+/// duplicates are delivered but counted once (center- and driver-side
+/// dedup absorbs them), delays only reorder.
+#[test]
+fn duplicated_and_delayed_frames_neither_corrupt_nor_double_count() {
+    let ds = synthetic("dup", 600, 4, 2, 0.0, 1.0, 703);
+    let cfg = cfg_3c();
+    let engine = StudyEngine::new(2, 3).unwrap();
+    let h1 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let s1 = h1.session_id();
+    let beta_clean = h1.join().unwrap().beta;
+    let clean_bytes = engine.traffic().session_bytes(s1);
+    assert!(clean_bytes > 0);
+
+    // Duplicate share submissions into a center (its per-(iter,
+    // institution) `seen` set must dedup), duplicate aggregate
+    // responses back to the driver (its per-center dedup must), and
+    // delay β broadcasts to institution 1 by one routed frame
+    // (institution 0's independent traffic ticks them free).
+    engine.install_faults(
+        FaultPlan::new()
+            .rule(FaultRule {
+                to: Some(NodeId::Center(0)),
+                session: None,
+                tag: Some(TAG_SUBMIT),
+                action: FaultAction::Duplicate,
+                budget: 3,
+            })
+            .rule(FaultRule {
+                to: Some(NodeId::Coordinator),
+                session: None,
+                tag: Some(TAG_AGG_RESP),
+                action: FaultAction::Duplicate,
+                budget: 3,
+            })
+            .rule(FaultRule {
+                to: Some(NodeId::Institution(1)),
+                session: None,
+                tag: Some(TAG_BETA),
+                action: FaultAction::Delay(1),
+                budget: 2,
+            }),
+    );
+    let h2 = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let s2 = h2.session_id();
+    let beta_faulted = h2.join().unwrap().beta;
+    engine.clear_faults();
+
+    assert_eq!(beta_faulted, beta_clean, "duplicates/delays moved the numerics");
+    let snap = engine.traffic();
+    assert_eq!(
+        snap.session_bytes(s2),
+        clean_bytes,
+        "a duplicated delivery must be counted once"
+    );
+    let live: u64 = snap.per_session.iter().map(|&(_, b)| b).sum();
+    assert_eq!(live + snap.retired_bytes, snap.total_bytes, "traffic invariant");
+    assert_no_leaks(&engine);
+    engine.shutdown().unwrap();
+}
+
+/// The deadline timer wheel: a study queued on an otherwise IDLE
+/// driver shard (no protocol frames ever reach it — the running study
+/// lives on the other shard) must still observe its lapsed deadline
+/// promptly. Only the timer wheel's injected `AdmissionWake` can wake
+/// that driver, so a prompt typed rejection proves the wheel fires.
+#[test]
+fn timer_wheel_fires_deadline_on_idle_shard_under_saturated_cap() {
+    let ds_heavy = synthetic("heavy", 6000, 6, 2, 0.0, 1.0, 704);
+    let ds_light = synthetic("light", 300, 3, 2, 0.0, 1.0, 705);
+    let engine = StudyEngine::with_options(
+        2,
+        3,
+        EngineOptions { max_in_flight: 1, driver_shards: 2, ..Default::default() },
+    )
+    .unwrap();
+    let h_heavy = engine.submit(&heavy_cfg(), &ds_heavy, SubmitOptions::bulk()).unwrap();
+    let busy_shard = engine.shard_of(h_heavy.session_id());
+    await_lifecycle(&engine, h_heavy.session_id(), Lifecycle::Running);
+    // Queue short-deadline studies until one lands on the idle shard
+    // (session → shard is a hash; a handful of submissions covers both
+    // shards with overwhelming probability).
+    let mut handles = Vec::new();
+    let mut idle_handle = None;
+    for _ in 0..16 {
+        let h = engine
+            .submit(
+                &cfg_3c(),
+                &ds_light,
+                SubmitOptions::default().deadline(Duration::from_millis(60)),
+            )
+            .unwrap();
+        if engine.shard_of(h.session_id()) != busy_shard {
+            idle_handle = Some(h);
+            break;
+        }
+        handles.push(h);
+    }
+    let idle_handle = idle_handle.expect("16 hashed sessions never hit the second shard");
+    let t0 = Instant::now();
+    let err = idle_handle.join().unwrap_err();
+    let waited = t0.elapsed();
+    assert!(
+        matches!(err.downcast_ref::<SubmitError>(), Some(SubmitError::Deadline { .. })),
+        "expected typed Deadline, got: {err:#}"
+    );
+    // Fired by the wheel shortly after the 60ms deadline — NOT when
+    // the heavy study eventually completes and frees the slot.
+    assert!(
+        waited < Duration::from_secs(2),
+        "deadline on the idle shard took {waited:?} — timer wheel never fired"
+    );
+    // Soundness of the proof: the slot was never released while we
+    // waited (peer wakes happen only on slot release), so nothing but
+    // the timer's AdmissionWake could have woken the idle driver.
+    assert_eq!(
+        engine.lifecycle(h_heavy.session_id()),
+        Some(Lifecycle::Running),
+        "heavy study finished before the deadline fired — timer proof inconclusive"
+    );
+    for h in handles {
+        // Same-shard stragglers also reject at their deadlines.
+        let err = h.join().unwrap_err();
+        assert!(err.to_string().contains("deadline"), "got: {err:#}");
+    }
+    h_heavy.join().unwrap();
+    assert_no_leaks(&engine);
+    engine.shutdown().unwrap();
+}
+
+/// `SubmitPolicy::Block` + deadline: a submitter blocked on a full
+/// lane is cut loose with the TYPED deadline error — downcastable,
+/// carrying the session id and the configured deadline.
+#[test]
+fn blocked_submitter_observes_typed_deadline_error() {
+    let ds_heavy = synthetic("heavy", 6000, 6, 2, 0.0, 1.0, 706);
+    let ds_light = synthetic("light", 300, 3, 2, 0.0, 1.0, 707);
+    let engine = StudyEngine::with_options(
+        2,
+        3,
+        EngineOptions { max_in_flight: 1, lane_capacity: 1, ..Default::default() },
+    )
+    .unwrap();
+    let h_heavy = engine.submit(&heavy_cfg(), &ds_heavy, SubmitOptions::bulk()).unwrap();
+    let h_fill = engine.submit(&cfg_3c(), &ds_light, SubmitOptions::bulk()).unwrap();
+    let err = engine
+        .submit(
+            &cfg_3c(),
+            &ds_light,
+            SubmitOptions::bulk()
+                .policy(SubmitPolicy::Block)
+                .deadline(Duration::from_millis(40)),
+        )
+        .unwrap_err();
+    match err.downcast_ref::<SubmitError>() {
+        Some(SubmitError::Deadline { session, deadline }) => {
+            assert!(*session > 0);
+            assert_eq!(*deadline, Duration::from_millis(40));
+        }
+        other => panic!("expected typed Deadline, got {other:?} ({err:#})"),
+    }
+    h_heavy.join().unwrap();
+    h_fill.join().unwrap();
+    assert_no_leaks(&engine);
+    engine.shutdown().unwrap();
+}
+
+/// Chaos gate (run via `PRIVLR_CHAOS=1 ./ci.sh`): seeded random
+/// duplicate/delay fault plans over every link, at N ∈ {1, 2, 4}
+/// driver shards — every fit completes and every β̂ stays
+/// byte-identical to the fault-free baseline. Liveness-preserving by
+/// construction: `seeded_chaos` draws no drops and no coordinator-
+/// bound delays.
+#[test]
+#[ignore = "chaos mode: run via PRIVLR_CHAOS=1 ./ci.sh"]
+fn chaos_fault_plans_preserve_sharded_bit_identity() {
+    let ds = synthetic("chaos", 800, 4, 2, 0.0, 1.0, 708);
+    let cfg = cfg_3c();
+    let clean = StudyEngine::new(2, 3).unwrap();
+    let beta_base = clean
+        .submit(&cfg, &ds, SubmitOptions::default())
+        .unwrap()
+        .join()
+        .unwrap()
+        .beta;
+    clean.shutdown().unwrap();
+    let shards_data = privlr::session::ShardData::split(&ds);
+    for shards in [1usize, 2, 4] {
+        let engine = StudyEngine::with_options(
+            2,
+            3,
+            EngineOptions { driver_shards: shards, ..Default::default() },
+        )
+        .unwrap();
+        engine.install_faults(FaultPlan::seeded_chaos(
+            0xC0FF_EE00 + shards as u64,
+            12,
+            2,
+            3,
+        ));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                engine
+                    .submit_shared(&cfg, shards_data.clone(), SubmitOptions::default())
+                    .unwrap()
+            })
+            .collect();
+        for h in handles {
+            let fit = h.join().unwrap();
+            assert_eq!(
+                fit.beta, beta_base,
+                "chaos plan moved the numerics at {shards} shard(s)"
+            );
+        }
+        assert_no_leaks(&engine);
+        engine.shutdown().unwrap();
+    }
+}

@@ -39,6 +39,16 @@ cargo test -q --test integration_lifecycle
 echo "== secure pipeline gate (fused share thread-invariance + zero-alloc) =="
 cargo test -q --test prop_secure_pipeline
 
+echo "== feature matrix: --features simd (vector kernels, bit-identity gates) =="
+# The simd feature compiles the AVX2 kernel bodies; at runtime they are
+# taken only on CPUs with AVX2 (resolve(Auto)), so these gates are the
+# real vector-vs-scalar bit-identity proof on such hosts and a no-op
+# re-run of the scalar reference elsewhere. Both outcomes must be green.
+cargo build --release --features simd
+cargo test -q --features simd
+cargo test -q --features simd --test prop_kernels
+cargo test -q --features simd --test prop_secure_pipeline
+
 echo "== fault tolerance gate (kill/restart replay bit-identity, retry exhaustion, chaos transport) =="
 cargo test -q --test integration_faults
 if [ "${PRIVLR_CHAOS:-0}" = "1" ]; then
@@ -62,6 +72,7 @@ fi
 echo "== style: cargo clippy -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
+    cargo clippy --all-targets --features simd -- -D warnings
 else
     echo "SKIP: clippy component not installed"
 fi

@@ -8,17 +8,18 @@ use privlr::bench::{
     black_box, default_report_path, print_kv_table, print_table, run_bench, run_micro,
     summary_json, update_json_report, BenchConfig, Summary,
 };
-use privlr::config::{ExperimentConfig, SecurityMode};
+use privlr::config::{ExperimentConfig, KernelIsa, SecurityMode};
 use privlr::coordinator::secure_fit;
 use privlr::field::{add_assign_slice, Fp};
 use privlr::fixed::FixedCodec;
 use privlr::linalg::Matrix;
 use privlr::model::{local_stats, local_stats_into, local_stats_reference, LocalStats, Workspace};
-use privlr::secure::{encode_share_into, ShareContext, SharePool};
+use privlr::secure::{encode_share_into, encode_share_into_isa, ShareContext, SharePool};
 use privlr::shamir::{
-    lagrange_at_zero, reconstruct_batch, reconstruct_batch_with, share_batch, share_batch_horner,
-    share_batch_with, ShamirParams, VandermondeTable,
+    lagrange_at_zero, reconstruct_batch, reconstruct_batch_with, reconstruct_batch_with_isa,
+    share_batch, share_batch_horner, share_batch_with, ShamirParams, VandermondeTable,
 };
+use privlr::simd::{self, Isa};
 use privlr::util::json::{self, Json};
 use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
 
@@ -236,6 +237,217 @@ fn bench_secure_pipeline(cfg: BenchConfig) -> Json {
     ])
 }
 
+/// ISA ablation for the f64 kernels (the SIMD-PR acceptance numbers):
+/// scalar `local_stats` vs the `resolve(Auto)` ISA at 1/2/4 threads on
+/// the same workload as `bench_kernels`. When the build lacks the
+/// `simd` feature or the CPU lacks AVX2 the resolved ISA is `scalar`
+/// and every speedup is ~1.0 — the section records which case ran.
+/// Returns the `kernels_simd` section for BENCH_kernels.json.
+fn bench_kernels_simd(cfg: BenchConfig) -> Json {
+    let fast = std::env::var("PRIVLR_BENCH_FAST").as_deref() == Ok("1");
+    let (n, d) = if fast { (20_000usize, 32usize) } else { (100_000, 64) };
+    let resolved = simd::resolve(KernelIsa::Auto);
+    let mut rng = SplitMix64::new(0xBE5);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+        for j in 1..d {
+            x[(i, j)] = rng.next_gaussian();
+        }
+    }
+    let y: Vec<f64> = (0..n).map(|_| f64::from(rng.next_bernoulli(0.35))).collect();
+    let beta: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-0.5, 0.5)).collect();
+
+    let mut rows: Vec<Summary> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut scalar_ws = Workspace::with_isa(d, 1, Isa::Scalar);
+    let mut out = LocalStats::zeros(d);
+    let scalar = run_bench(
+        &format!("local_stats scalar isa {n}x{d}, 1 thread"),
+        cfg,
+        || {
+            local_stats_into(&mut scalar_ws, &x, &y, &beta, &mut out);
+            out.dev
+        },
+    );
+    rows.push(scalar.clone());
+    let mut se = summary_json(&scalar);
+    if let Json::Obj(m) = &mut se {
+        m.insert("isa".into(), json::s(Isa::Scalar.name()));
+        m.insert("threads".into(), json::num(1.0));
+    }
+    entries.push(se);
+    for threads in [1usize, 2, 4] {
+        let mut ws = Workspace::with_isa(d, threads, resolved);
+        let s = run_bench(
+            &format!(
+                "local_stats {} isa {n}x{d}, {threads} thread(s)",
+                resolved.name()
+            ),
+            cfg,
+            || {
+                local_stats_into(&mut ws, &x, &y, &beta, &mut out);
+                out.dev
+            },
+        );
+        rows.push(s.clone());
+        let mut e = summary_json(&s);
+        if let Json::Obj(m) = &mut e {
+            m.insert("isa".into(), json::s(resolved.name()));
+            m.insert("threads".into(), json::num(threads as f64));
+            m.insert("speedup_vs_scalar".into(), json::num(scalar.mean_s / s.mean_s));
+        }
+        entries.push(e);
+    }
+
+    print_table("kernels: ISA ablation (scalar vs resolved SIMD)", &rows);
+    println!(
+        "\nresolved ISA: {} (feature simd: {}, avx2 detected: {})",
+        resolved.name(),
+        cfg!(feature = "simd"),
+        simd::simd_available()
+    );
+
+    json::obj(vec![
+        ("workload", json::s(&format!("local_stats {n}x{d}, ISA ablation"))),
+        ("fast_mode", Json::Bool(fast)),
+        ("resolved_isa", json::s(resolved.name())),
+        ("feature_simd", Json::Bool(cfg!(feature = "simd"))),
+        ("avx2_detected", Json::Bool(simd::simd_available())),
+        ("results", json::arr(entries)),
+    ])
+}
+
+/// ISA ablation for the 4-lane Mersenne share arithmetic: scalar
+/// fused encode+share and cached-λ reconstruction vs the
+/// `resolve(Auto)` ISA, share sweep at 1/2/4 threads, at the d=85
+/// full-mode summary size. Returns the `secure_pipeline_simd` section
+/// for BENCH_kernels.json.
+fn bench_secure_pipeline_simd(cfg: BenchConfig) -> Json {
+    let d = 85usize;
+    let k = d + 1 + d * (d + 1) / 2; // 3741
+    let resolved = simd::resolve(KernelIsa::Auto);
+    let params = ShamirParams::new(3, 5).unwrap();
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    let mut rng = SplitMix64::new(0x5EC);
+    let values: Vec<f64> = (0..k).map(|_| rng.next_range_f64(-100.0, 100.0)).collect();
+
+    let mut rows: Vec<Summary> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+
+    // Scalar baseline: fused pooled sweep, 1 thread (the bit-identity
+    // reference the SIMD lanes are gated against).
+    let mut seed = 0u64;
+    let mut scalar_pool = SharePool::new();
+    encode_share_into(&ctx, &codec, &values, 0, 1, &mut scalar_pool).unwrap(); // warm
+    let scalar_share = run_bench(
+        &format!("encode+share scalar isa, {k} elts, 1 thread"),
+        cfg,
+        || {
+            seed += 1;
+            encode_share_into(&ctx, &codec, &values, seed, 1, &mut scalar_pool).unwrap();
+            scalar_pool.holder(0)[0]
+        },
+    );
+    rows.push(scalar_share.clone());
+    let mut se = summary_json(&scalar_share);
+    if let Json::Obj(m) = &mut se {
+        m.insert("isa".into(), json::s(Isa::Scalar.name()));
+        m.insert("threads".into(), json::num(1.0));
+    }
+    entries.push(se);
+
+    for threads in [1usize, 2, 4] {
+        let mut pool = SharePool::new();
+        encode_share_into_isa(&ctx, &codec, &values, 0, threads, resolved, &mut pool).unwrap();
+        let s = run_bench(
+            &format!(
+                "encode+share {} isa, {k} elts, {threads} thread(s)",
+                resolved.name()
+            ),
+            cfg,
+            || {
+                seed += 1;
+                encode_share_into_isa(&ctx, &codec, &values, seed, threads, resolved, &mut pool)
+                    .unwrap();
+                pool.holder(0)[0]
+            },
+        );
+        rows.push(s.clone());
+        let mut e = summary_json(&s);
+        if let Json::Obj(m) = &mut e {
+            m.insert("isa".into(), json::s(resolved.name()));
+            m.insert("threads".into(), json::num(threads as f64));
+            m.insert(
+                "speedup_vs_scalar".into(),
+                json::num(scalar_share.mean_s / s.mean_s),
+            );
+        }
+        entries.push(e);
+    }
+
+    // Reconstruction: cached λ, pooled out, scalar vs resolved ISA.
+    let mut pool = SharePool::new();
+    encode_share_into(&ctx, &codec, &values, 42, 1, &mut pool).unwrap();
+    let quorum: Vec<(usize, &[Fp])> = [0usize, 2, 4]
+        .iter()
+        .map(|&c| (c, pool.holder(c)))
+        .collect();
+    let lambdas = lagrange_at_zero(params, &[0, 2, 4]).unwrap();
+    let mut out = vec![Fp::ZERO; k];
+    let scalar_rec = run_bench(
+        &format!("reconstruct scalar isa (cached λ), {k} elts"),
+        cfg,
+        || {
+            reconstruct_batch_with(&lambdas, &quorum, &mut out).unwrap();
+            out[0]
+        },
+    );
+    rows.push(scalar_rec.clone());
+    let mut re = summary_json(&scalar_rec);
+    if let Json::Obj(m) = &mut re {
+        m.insert("isa".into(), json::s(Isa::Scalar.name()));
+    }
+    entries.push(re);
+    let isa_rec = run_bench(
+        &format!("reconstruct {} isa (cached λ), {k} elts", resolved.name()),
+        cfg,
+        || {
+            reconstruct_batch_with_isa(&lambdas, &quorum, &mut out, resolved).unwrap();
+            out[0]
+        },
+    );
+    rows.push(isa_rec.clone());
+    let mut e = summary_json(&isa_rec);
+    if let Json::Obj(m) = &mut e {
+        m.insert("isa".into(), json::s(resolved.name()));
+        m.insert(
+            "speedup_vs_scalar".into(),
+            json::num(scalar_rec.mean_s / isa_rec.mean_s),
+        );
+    }
+    entries.push(e);
+
+    print_table(
+        "secure pipeline: ISA ablation (4-lane Mersenne share arithmetic)",
+        &rows,
+    );
+
+    json::obj(vec![
+        (
+            "workload",
+            json::s(&format!(
+                "ISA ablation: fused encode+share + cached-λ reconstruct, {k} elts (d=85), 3-of-5"
+            )),
+        ),
+        ("resolved_isa", json::s(resolved.name())),
+        ("feature_simd", Json::Bool(cfg!(feature = "simd"))),
+        ("avx2_detected", Json::Bool(simd::simd_available())),
+        ("results", json::arr(entries)),
+    ])
+}
+
 fn main() {
     let cfg = BenchConfig::from_env();
 
@@ -249,6 +461,18 @@ fn main() {
     let secure_pipeline = bench_secure_pipeline(cfg);
     match update_json_report(&report, "secure_pipeline", secure_pipeline) {
         Ok(()) => println!("wrote secure_pipeline section to {}", report.display()),
+        Err(e) => eprintln!("could not write {}: {e}", report.display()),
+    }
+
+    let kernels_simd = bench_kernels_simd(cfg);
+    match update_json_report(&report, "kernels_simd", kernels_simd) {
+        Ok(()) => println!("wrote kernels_simd section to {}", report.display()),
+        Err(e) => eprintln!("could not write {}: {e}", report.display()),
+    }
+
+    let secure_pipeline_simd = bench_secure_pipeline_simd(cfg);
+    match update_json_report(&report, "secure_pipeline_simd", secure_pipeline_simd) {
+        Ok(()) => println!("wrote secure_pipeline_simd section to {}", report.display()),
         Err(e) => eprintln!("could not write {}: {e}", report.display()),
     }
 

@@ -359,6 +359,7 @@ mod tests {
             FixedCodec::default(),
             full,
             1,
+            crate::simd::Isa::Scalar,
             7,
         ))
     }

@@ -103,6 +103,46 @@ impl OnExhausted {
     }
 }
 
+/// Which instruction-set path the hot kernels run on (SYRK tiles,
+/// fused local-stats pass, Shamir share/reconstruct sweeps).
+///
+/// The resolved choice is made ONCE per submission by
+/// [`crate::simd::resolve`]; every path is gated bit-identical to the
+/// scalar reference, so this knob trades nothing but speed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Use the SIMD kernels when the CPU supports them (AVX2, detected
+    /// at runtime), scalar otherwise (default).
+    #[default]
+    Auto,
+    /// Force the scalar reference kernels.
+    Scalar,
+    /// Request the SIMD kernels; silently falls back to scalar when
+    /// the binary was built without `--features simd` or the CPU
+    /// lacks AVX2 (the fallback is bit-identical, so requesting an
+    /// absent ISA is safe, never an error).
+    Simd,
+}
+
+impl KernelIsa {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelIsa::Auto),
+            "scalar" => Ok(KernelIsa::Scalar),
+            "simd" => Ok(KernelIsa::Simd),
+            other => anyhow::bail!("unknown kernel isa '{other}' (auto|scalar|simd)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Auto => "auto",
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Simd => "simd",
+        }
+    }
+}
+
 /// Full specification of one secure-regression run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -134,6 +174,13 @@ pub struct ExperimentConfig {
     /// simulation already runs all S institutions concurrently on one
     /// machine; deployments (one institution per machine) set 0.
     pub kernel_threads: usize,
+    /// Instruction-set selection for the hot kernels: `auto` (default)
+    /// uses SIMD when compiled in (`--features simd`) and the CPU has
+    /// AVX2, `scalar` forces the reference path, `simd` requests the
+    /// vector path (safe scalar fallback when absent). Every SIMD
+    /// kernel is bit-identical to its scalar reference, so this
+    /// composes freely with `kernel_threads`.
+    pub kernel_isa: KernelIsa,
     /// PJRT compute-service worker threads (0 = auto: cores/2, max 8).
     pub pjrt_workers: usize,
     /// Directory with AOT artifacts + manifest.json.
@@ -188,6 +235,7 @@ impl Default for ExperimentConfig {
             frac_bits: crate::fixed::DEFAULT_FRAC_BITS,
             parallel_local: true,
             kernel_threads: 1,
+            kernel_isa: KernelIsa::Auto,
             pjrt_workers: 0,
             artifacts_dir: "artifacts".to_string(),
             max_in_flight: 0,
@@ -238,6 +286,7 @@ impl ExperimentConfig {
             ("frac_bits", json::num(self.frac_bits as f64)),
             ("parallel_local", Json::Bool(self.parallel_local)),
             ("kernel_threads", json::num(self.kernel_threads as f64)),
+            ("kernel_isa", json::s(self.kernel_isa.name())),
             ("pjrt_workers", json::num(self.pjrt_workers as f64)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("max_in_flight", json::num(self.max_in_flight as f64)),
@@ -308,6 +357,9 @@ impl ExperimentConfig {
         }
         if let Some(k) = v.get("kernel_threads").as_usize() {
             cfg.kernel_threads = k;
+        }
+        if let Some(s) = v.get("kernel_isa").as_str() {
+            cfg.kernel_isa = KernelIsa::parse(s)?;
         }
         if let Some(k) = v.get("pjrt_workers").as_usize() {
             cfg.pjrt_workers = k;
@@ -466,6 +518,34 @@ mod tests {
         assert_eq!(back.kernel_threads, 0);
         let v = Json::parse(r#"{"kernel_threads": 4}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&v).unwrap().kernel_threads, 4);
+    }
+
+    #[test]
+    fn kernel_isa_roundtrip_and_default() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.kernel_isa, KernelIsa::Auto, "auto-detect by default");
+        cfg.kernel_isa = KernelIsa::Scalar;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.kernel_isa, KernelIsa::Scalar);
+        let v = Json::parse(r#"{"kernel_isa": "simd"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.kernel_isa, KernelIsa::Simd);
+        // Unknown ISA strings are a typed config error, never a silent
+        // fallback.
+        let v = Json::parse(r#"{"kernel_isa": "avx512"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn kernel_isa_parse_and_names() {
+        assert_eq!(KernelIsa::parse("auto").unwrap(), KernelIsa::Auto);
+        assert_eq!(KernelIsa::parse("SCALAR").unwrap(), KernelIsa::Scalar);
+        assert_eq!(KernelIsa::parse("Simd").unwrap(), KernelIsa::Simd);
+        assert!(KernelIsa::parse("sse2").is_err());
+        for i in [KernelIsa::Auto, KernelIsa::Scalar, KernelIsa::Simd] {
+            assert_eq!(KernelIsa::parse(i.name()).unwrap(), i);
+        }
+        assert_eq!(KernelIsa::default(), KernelIsa::Auto);
     }
 
     #[test]

@@ -1282,6 +1282,10 @@ impl StudyEngine {
             FixedCodec::new(cfg.frac_bits),
             cfg.mode.is_full(),
             cfg.kernel_threads,
+            // Resolve auto|scalar|simd ONCE per submission (the cpuid
+            // probe is cached); workers read the concrete choice from
+            // the spec.
+            crate::simd::resolve(cfg.kernel_isa),
             cfg.seed,
         ));
         // Register first: workers look specs up lazily on first

@@ -17,7 +17,15 @@
 pub const P: u64 = (1u64 << 61) - 1;
 
 /// An element of F_p, always canonical (`0 <= value < P`).
+///
+/// `#[repr(transparent)]` is a load-bearing layout guarantee, not
+/// style: the SIMD kernels ([`crate::simd`]) view `&[Fp]` as `&[u64]`
+/// (see [`as_u64s`]) to vector-load 4 elements per `__m256i` without
+/// per-element copies. Every constructor keeps the invariant
+/// `0 <= value < P`; code writing through the mutable u64 view
+/// (crate-private `as_u64s_mut`) must store only canonical values.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(transparent)]
 pub struct Fp(u64);
 
 impl std::fmt::Debug for Fp {
@@ -286,6 +294,39 @@ pub fn mul_add_slice(dst: &mut [Fp], src: &[Fp], c: Fp) {
     }
 }
 
+/// [`mul_add_slice`] with explicit ISA dispatch: the scalar reference
+/// above, or the 4-lane AVX2 sweep (`simd::fp_mul_add_slice`), which
+/// is gated bit-identical to it.
+#[inline]
+pub fn mul_add_slice_isa(dst: &mut [Fp], src: &[Fp], c: Fp, isa: crate::simd::Isa) {
+    match isa {
+        crate::simd::Isa::Scalar => mul_add_slice(dst, src, c),
+        crate::simd::Isa::Simd => crate::simd::fp_mul_add_slice(dst, src, c),
+    }
+}
+
+// ---- raw u64 views (SIMD loads/stores) ----------------------------------
+
+/// View a slice of field elements as raw canonical `u64`s — sound
+/// because `Fp` is `#[repr(transparent)]` over `u64`.
+#[inline]
+pub fn as_u64s(s: &[Fp]) -> &[u64] {
+    // SAFETY: Fp is repr(transparent) over u64, so layout and
+    // alignment match element-for-element.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u64, s.len()) }
+}
+
+/// Mutable raw view of a field-element slice. Callers MUST store only
+/// canonical values (`< P`) — the type invariant is on them for the
+/// lifetime of the borrow; the SIMD kernels canonicalize every lane
+/// before storing.
+#[inline]
+pub(crate) fn as_u64s_mut(s: &mut [Fp]) -> &mut [u64] {
+    // SAFETY: layout per repr(transparent); canonicality is the
+    // caller's obligation, documented above.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u64, s.len()) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,6 +449,20 @@ mod tests {
         for i in 0..100 {
             assert_eq!(dst[i], base[i] + c * src[i]);
         }
+    }
+
+    #[test]
+    fn u64_views_are_element_exact() {
+        let mut rng = SplitMix64::new(12);
+        let mut xs: Vec<Fp> = (0..33).map(|_| Fp::random(&mut rng)).collect();
+        let raw = as_u64s(&xs);
+        for (f, &u) in xs.iter().zip(raw) {
+            assert_eq!(f.to_u64(), u);
+        }
+        // Writing canonical values through the mut view is the SIMD
+        // store contract.
+        as_u64s_mut(&mut xs)[7] = P - 1;
+        assert_eq!(xs[7], Fp::new(P - 1));
     }
 
     #[test]

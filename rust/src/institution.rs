@@ -18,7 +18,7 @@
 //! back to the driver — on that session's `SessionClose`/`Abort`,
 //! while everything reusable is owned by the worker itself and shared
 //! across sessions: the Vandermonde share tables cached per `(t, w)`
-//! scheme, the kernel [`Workspace`]s pooled per `(d, threads)` shape
+//! scheme, the kernel [`Workspace`]s pooled per `(d, threads, isa)` shape
 //! (sessions of equal dimension share one workspace instead of paying
 //! per-session scratch), and the fused encode+share buffers
 //! ([`SharePool`]). A new session with a familiar topology therefore
@@ -40,7 +40,7 @@ use crate::protocol::{
     encode_share_submission, pack_upper_into, packed_len, HessianRef, Message, NodeId, SessionId,
 };
 use crate::runtime::ComputeHandle;
-use crate::secure::{encode_share_into, ShareContext, SharePool};
+use crate::secure::{encode_share_into_isa, ShareContext, SharePool};
 use crate::session::{SessionRegistry, SessionSpec};
 use crate::transport::Endpoint;
 use crate::util::rng::derive_seed;
@@ -92,12 +92,13 @@ pub fn run_institution_worker(
     let mut sessions: HashMap<SessionId, InstSession> = HashMap::new();
     // Vandermonde power tables cached per (t, w), shared across sessions.
     let mut share_tables: HashMap<(usize, usize), Rc<ShareContext>> = HashMap::new();
-    // Kernel workspaces pooled per (d, threads): sessions of equal
-    // dimension share ONE workspace — its buffers are scratch that
+    // Kernel workspaces pooled per (d, threads, isa): sessions of
+    // equal shape share ONE workspace — its buffers are scratch that
     // `local_stats_into` fully overwrites per call, so sharing cannot
     // couple sessions numerically (the cross-session amortization item
-    // the ROADMAP left open after PR 2).
-    let mut workspaces: HashMap<(usize, usize), Workspace> = HashMap::new();
+    // the ROADMAP left open after PR 2). The ISA is in the key because
+    // a workspace's scratches carry their kernel dispatch.
+    let mut workspaces: HashMap<(usize, usize, crate::simd::Isa), Workspace> = HashMap::new();
     // Fused encode+share buffers, shared across ALL sessions on this
     // worker (capacity grows to the largest dimension ever served and
     // stays — the ROADMAP's cross-session amortization item).
@@ -193,7 +194,7 @@ fn handle_broadcast(
     ep: &Endpoint,
     sessions: &mut HashMap<SessionId, InstSession>,
     share_tables: &mut HashMap<(usize, usize), Rc<ShareContext>>,
-    workspaces: &mut HashMap<(usize, usize), Workspace>,
+    workspaces: &mut HashMap<(usize, usize, crate::simd::Isa), Workspace>,
     pool: &mut SharePool,
     summary: &mut Vec<f64>,
     session: SessionId,
@@ -249,8 +250,8 @@ fn handle_broadcast(
     // overwritten per call, so every session of this shape shares one.
     let d = shard.x.cols;
     let ws = workspaces
-        .entry((d, spec.kernel_threads))
-        .or_insert_with(|| Workspace::new(d, spec.kernel_threads));
+        .entry((d, spec.kernel_threads, spec.kernel_isa))
+        .or_insert_with(|| Workspace::with_isa(d, spec.kernel_threads, spec.kernel_isa));
     let compute_secs =
         cfg.engine
             .local_stats_timed_into(&shard.x, &shard.y, beta, ws, &mut st.stats)?;
@@ -269,12 +270,13 @@ fn handle_broadcast(
     if spec.full_security {
         summary[d + 1..].copy_from_slice(&st.h_packed);
     }
-    encode_share_into(
+    encode_share_into_isa(
         &st.share_ctx,
         &spec.codec,
         &summary[..n_summary],
         derive_seed(st.share_seed, iter as u64),
         spec.kernel_threads,
+        spec.kernel_isa,
         pool,
     )?;
     // Telemetry lands BEFORE the submissions: a submission causally
@@ -352,6 +354,7 @@ mod tests {
             FixedCodec::default(),
             full,
             1,
+            crate::simd::Isa::Scalar,
             7,
         ))
     }

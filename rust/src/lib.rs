@@ -64,5 +64,6 @@ pub mod runtime;
 pub mod secure;
 pub mod session;
 pub mod shamir;
+pub mod simd;
 pub mod transport;
 pub mod util;

@@ -299,6 +299,55 @@ pub fn syrk_upper_tile(h: &mut Matrix, a_tile: &[f64], x: &Matrix, row0: usize, 
     }
 }
 
+/// [`syrk_upper_tile`] with explicit ISA dispatch. The SIMD variant
+/// keeps the identical quad/remainder structure and row order but
+/// runs each output row through the 4-lane kernels
+/// (`simd::syrk_quad_row`, `simd::axpy`), which vectorize across the
+/// independent output columns — gated bit-identical to the scalar
+/// reference above.
+pub fn syrk_upper_tile_isa(
+    h: &mut Matrix,
+    a_tile: &[f64],
+    x: &Matrix,
+    row0: usize,
+    tile: usize,
+    isa: crate::simd::Isa,
+) {
+    if isa == crate::simd::Isa::Scalar {
+        syrk_upper_tile(h, a_tile, x, row0, tile);
+        return;
+    }
+    let d = h.cols;
+    debug_assert_eq!(h.rows, d);
+    debug_assert_eq!(x.cols, d);
+    debug_assert!(a_tile.len() >= tile * d);
+    debug_assert!(row0 + tile <= x.rows);
+    let quads = tile / 4;
+    for q in 0..quads {
+        let t = q * 4;
+        let (a0, rest) = a_tile[t * d..(t + 4) * d].split_at(d);
+        let (a1, rest) = rest.split_at(d);
+        let (a2, a3) = rest.split_at(d);
+        let b0 = x.row(row0 + t);
+        let b1 = x.row(row0 + t + 1);
+        let b2 = x.row(row0 + t + 2);
+        let b3 = x.row(row0 + t + 3);
+        for i in 0..d {
+            let c = [a0[i], a1[i], a2[i], a3[i]];
+            let hrow = &mut h.data[i * d + i..(i + 1) * d];
+            crate::simd::syrk_quad_row(hrow, &b0[i..], &b1[i..], &b2[i..], &b3[i..], c);
+        }
+    }
+    for t in quads * 4..tile {
+        let a = &a_tile[t * d..(t + 1) * d];
+        let b = x.row(row0 + t);
+        for i in 0..d {
+            let hrow = &mut h.data[i * d + i..(i + 1) * d];
+            crate::simd::axpy(a[i], &b[i..], hrow);
+        }
+    }
+}
+
 /// Blocked weighted SYRK over a row range: `h_upper += Σ_{i∈[lo,hi)}
 /// w[i]·x_i x_iᵀ`, accumulating `d`×`d` tiles of the upper triangle
 /// from [`SYRK_ROW_TILE`]-row blocks.
@@ -340,6 +389,42 @@ pub fn syrk_upper_blocked(
             }
         }
         syrk_upper_tile(h, scratch, x, r0, tile);
+        r0 += tile;
+    }
+}
+
+/// [`syrk_upper_blocked`] with explicit ISA dispatch: the SIMD
+/// variant fills the scaled tile with `simd::scale_into` and updates
+/// through [`syrk_upper_tile_isa`]; bit-identical to the scalar path.
+pub fn syrk_upper_blocked_isa(
+    h: &mut Matrix,
+    x: &Matrix,
+    w: &[f64],
+    lo: usize,
+    hi: usize,
+    scratch: &mut Vec<f64>,
+    isa: crate::simd::Isa,
+) {
+    if isa == crate::simd::Isa::Scalar {
+        syrk_upper_blocked(h, x, w, lo, hi, scratch);
+        return;
+    }
+    let d = x.cols;
+    assert_eq!(h.rows, d);
+    assert_eq!(h.cols, d);
+    assert_eq!(w.len(), x.rows);
+    assert!(lo <= hi && hi <= x.rows);
+    let mut r0 = lo;
+    while r0 < hi {
+        let tile = SYRK_ROW_TILE.min(hi - r0);
+        if scratch.len() < tile * d {
+            scratch.resize(tile * d, 0.0);
+        }
+        for t in 0..tile {
+            let dst = &mut scratch[t * d..(t + 1) * d];
+            crate::simd::scale_into(dst, x.row(r0 + t), w[r0 + t]);
+        }
+        syrk_upper_tile_isa(h, scratch, x, r0, tile, isa);
         r0 += tile;
     }
 }

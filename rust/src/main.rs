@@ -13,7 +13,7 @@
 //! Run `privlr help` for flag documentation.
 
 use privlr::baseline::centralized_fit;
-use privlr::config::{EngineKind, ExperimentConfig, SecurityMode};
+use privlr::config::{EngineKind, ExperimentConfig, KernelIsa, SecurityMode};
 use privlr::coordinator::secure_fit;
 use privlr::data::DatasetSpec;
 use privlr::util::cli::Args;
@@ -48,6 +48,9 @@ COMMON FLAGS (fit/compare):
     --threads <n>        worker threads for the local-stats kernel AND
                          the fused encode+share sweep (0 = all cores;
                          results are identical at any count) [1]
+    --kernel-isa <i>     auto | scalar | simd — SIMD hot kernels when
+                         built with --features simd and the CPU has
+                         AVX2; bit-identical to scalar           [auto]
     --artifacts <dir>    AOT artifact directory                     [artifacts]
     --seed <n>           RNG seed                                   [42]
     --config <path>      load flags from a config JSON instead
@@ -117,6 +120,9 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     cfg.max_iters = args.get_usize("max-iters", cfg.max_iters)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.kernel_threads = args.get_usize("threads", cfg.kernel_threads)?;
+    if let Some(i) = args.get("kernel-isa") {
+        cfg.kernel_isa = KernelIsa::parse(i)?;
+    }
     if let Some(m) = args.get("mode") {
         cfg.mode = SecurityMode::parse(m)?;
     }

@@ -98,15 +98,20 @@ struct ThreadScratch {
     h: Matrix,
     g: Vec<f64>,
     dev: f64,
+    /// Resolved kernel ISA for this worker's inner loops (dot, tile
+    /// fill, axpy, SYRK tile). Carried per scratch so the fan-out
+    /// needs no shared state; every value is bit-identical.
+    isa: crate::simd::Isa,
 }
 
 impl ThreadScratch {
-    fn new(d: usize) -> Self {
+    fn new(d: usize, isa: crate::simd::Isa) -> Self {
         Self {
             a_tile: vec![0.0; crate::linalg::SYRK_ROW_TILE * d],
             h: Matrix::zeros(d, d),
             g: vec![0.0; d],
             dev: 0.0,
+            isa,
         }
     }
 
@@ -120,8 +125,17 @@ impl ThreadScratch {
 impl Workspace {
     /// `threads == 0` means "one worker per available core". Shards too
     /// small to amortize a fan-out run single-threaded regardless (see
-    /// [`Workspace::effective_threads`]).
+    /// [`Workspace::effective_threads`]). Kernels run on the scalar
+    /// reference ISA; [`Workspace::with_isa`] selects explicitly.
     pub fn new(d: usize, threads: usize) -> Self {
+        Self::with_isa(d, threads, crate::simd::Isa::Scalar)
+    }
+
+    /// [`Workspace::new`] with an explicit resolved kernel ISA for the
+    /// inner loops (see `simd::resolve`). ISA choice composes freely
+    /// with the thread count: each worker's scratch carries it, and
+    /// every SIMD kernel is bit-identical to its scalar reference.
+    pub fn with_isa(d: usize, threads: usize, isa: crate::simd::Isa) -> Self {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
         } else {
@@ -130,7 +144,7 @@ impl Workspace {
         Self {
             d,
             threads,
-            per_thread: (0..threads).map(|_| ThreadScratch::new(d)).collect(),
+            per_thread: (0..threads).map(|_| ThreadScratch::new(d, isa)).collect(),
         }
     }
 
@@ -280,19 +294,33 @@ fn local_stats_range(
         for t in 0..tile {
             let i = r0 + t;
             let xi = x.row(i);
-            let z = crate::linalg::dot(xi, beta);
+            let z = match sc.isa {
+                crate::simd::Isa::Scalar => crate::linalg::dot(xi, beta),
+                crate::simd::Isa::Simd => crate::simd::dot(xi, beta),
+            };
+            // sigmoid/log_sigmoid stay scalar on every ISA: libm exp
+            // has no bit-identical vector twin, and they are O(n)
+            // against the O(n·d) vectorized work around them.
             let p = sigmoid(z);
             let w = p * (1.0 - p);
             let arow = &mut sc.a_tile[t * d..(t + 1) * d];
-            for (a, &v) in arow.iter_mut().zip(xi) {
-                *a = w * v;
+            match sc.isa {
+                crate::simd::Isa::Scalar => {
+                    for (a, &v) in arow.iter_mut().zip(xi) {
+                        *a = w * v;
+                    }
+                }
+                crate::simd::Isa::Simd => crate::simd::scale_into(arow, xi, w),
             }
             let r = y[i] - p;
-            crate::linalg::axpy(r, xi, &mut sc.g);
+            match sc.isa {
+                crate::simd::Isa::Scalar => crate::linalg::axpy(r, xi, &mut sc.g),
+                crate::simd::Isa::Simd => crate::simd::axpy(r, xi, &mut sc.g),
+            }
             sc.dev += -2.0 * (y[i] * log_sigmoid(z) + (1.0 - y[i]) * log_sigmoid(-z));
         }
         // Pass 2: H_upper += Aᵀ·X_tile (rank-4 blocked update).
-        crate::linalg::syrk_upper_tile(&mut sc.h, &sc.a_tile, x, r0, tile);
+        crate::linalg::syrk_upper_tile_isa(&mut sc.h, &sc.a_tile, x, r0, tile, sc.isa);
         r0 += tile;
     }
 }

@@ -18,7 +18,7 @@
 use crate::field::{add_assign_slice, mul_scalar_slice, Fp};
 use crate::fixed::{FixedCodec, FixedError};
 use crate::shamir::{
-    eval_shares_chunk, share_batch_with, ShamirParams, ShareBatch, VandermondeTable, SHARE_CHUNK,
+    share_batch_with, ShamirParams, ShareBatch, VandermondeTable, SHARE_CHUNK,
 };
 use crate::util::rng::{derive_seed, ChaCha20Rng, Rng};
 
@@ -275,6 +275,25 @@ pub fn encode_share_into(
     threads: usize,
     pool: &mut SharePool,
 ) -> anyhow::Result<()> {
+    encode_share_into_isa(ctx, codec, values, seed, threads, crate::simd::Isa::Scalar, pool)
+}
+
+/// [`encode_share_into`] with explicit ISA dispatch for the
+/// per-(chunk, holder) share evaluation
+/// ([`crate::shamir::eval_shares_chunk_isa`]). Chunking, RNG streams
+/// and thread fan-out are untouched, so the output remains a pure
+/// function of `(values, seed, scheme)` — bit-identical across BOTH
+/// thread counts and ISAs (the encode step and coefficient draw are
+/// ISA-independent; the evaluation kernel is gated bit-identical).
+pub fn encode_share_into_isa(
+    ctx: &ShareContext,
+    codec: &FixedCodec,
+    values: &[f64],
+    seed: u64,
+    threads: usize,
+    isa: crate::simd::Isa,
+    pool: &mut SharePool,
+) -> anyhow::Result<()> {
     let params = ctx.params();
     let (t, w) = (params.threshold, params.num_holders);
     let table = ctx.table();
@@ -307,11 +326,12 @@ pub fn encode_share_into(
             prepare_chunk(t, codec, &values[lo..hi], derive_seed(seed, c as u64), sc)
                 .map_err(anyhow::Error::new)?;
             for (j, h) in per_holder.iter_mut().take(w).enumerate() {
-                eval_shares_chunk(
+                crate::shamir::eval_shares_chunk_isa(
                     table.holder_powers(j),
                     &sc.enc[..len],
                     &sc.coeffs[..(t - 1) * len],
                     &mut h[lo..hi],
+                    isa,
                 );
             }
             lo = hi;
@@ -363,11 +383,12 @@ pub fn encode_share_into(
                         return;
                     }
                     for (j, out) in view.iter_mut().enumerate() {
-                        eval_shares_chunk(
+                        crate::shamir::eval_shares_chunk_isa(
                             table.holder_powers(j),
                             &sc.enc[..len],
                             &sc.coeffs[..(t - 1) * len],
                             &mut out[off..off + len],
+                            isa,
                         );
                     }
                     off += len;

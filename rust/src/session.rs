@@ -28,7 +28,7 @@ use crate::linalg::Matrix;
 use crate::model::{converged, newton_update};
 use crate::protocol::{packed_len, unpack_upper_into, HessianPayload, Message, NodeId, SessionId};
 use crate::shamir::{
-    reconstruct_batch_with, reconstruct_scalar_with, LagrangeCache, ShamirParams,
+    reconstruct_batch_with_isa, reconstruct_scalar_with, LagrangeCache, ShamirParams,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -93,6 +93,12 @@ pub struct SessionSpec {
     pub full_security: bool,
     /// Worker threads for the blocked local-stats kernel (0 = cores).
     pub kernel_threads: usize,
+    /// Resolved kernel ISA for this session's hot loops (local stats,
+    /// share evaluation, reconstruction) — produced once per
+    /// submission by `simd::resolve`, so workers never re-probe the
+    /// CPU. Bit-identical across values; composes with
+    /// `kernel_threads`.
+    pub kernel_isa: crate::simd::Isa,
     /// The experiment's master seed; all per-session randomness is
     /// derived from `(master_seed, session)` — see
     /// [`SessionSpec::institution_share_seed`].
@@ -114,6 +120,7 @@ impl SessionSpec {
         codec: FixedCodec,
         full_security: bool,
         kernel_threads: usize,
+        kernel_isa: crate::simd::Isa,
         master_seed: u64,
     ) -> SessionSpec {
         let s = shards.len();
@@ -125,6 +132,7 @@ impl SessionSpec {
             codec,
             full_security,
             kernel_threads,
+            kernel_isa,
             master_seed,
             center_busy_ns: (0..w).map(|_| Arc::new(AtomicU64::new(0))).collect(),
             inst_metrics: (0..s).map(|_| Arc::new(InstMetricCells::default())).collect(),
@@ -450,7 +458,7 @@ impl SessionState {
             .iter()
             .map(|(c, _, g, _)| (*c as usize, g.as_slice()))
             .collect();
-        reconstruct_batch_with(lambdas, &g_quorum, &mut self.g_fp)?;
+        reconstruct_batch_with_isa(lambdas, &g_quorum, &mut self.g_fp, self.spec.kernel_isa)?;
         codec.decode_slice_into(&self.g_fp, &mut self.g_f64);
         self.dev_buf.clear();
         self.dev_buf.extend(quorum.iter().map(|(_, _, _, dv)| *dv));
@@ -477,7 +485,8 @@ impl SessionState {
                         _ => Err(anyhow::anyhow!("expected shared hessian")),
                     })
                     .collect::<anyhow::Result<_>>()?;
-                reconstruct_batch_with(lambdas, &h_quorum, &mut self.h_fp)?;
+                let isa = self.spec.kernel_isa;
+                reconstruct_batch_with_isa(lambdas, &h_quorum, &mut self.h_fp, isa)?;
                 codec.decode_slice_into(&self.h_fp, &mut self.h_f64);
                 unpack_upper_into(&self.h_f64, &mut self.h_mat);
             }
@@ -545,6 +554,7 @@ mod tests {
             FixedCodec::default(),
             false,
             1,
+            crate::simd::Isa::Scalar,
             42,
         ))
     }

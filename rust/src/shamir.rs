@@ -152,6 +152,25 @@ pub fn eval_shares_chunk(powers: &[Fp], enc: &[Fp], coeffs_cm: &[Fp], out: &mut 
     }
 }
 
+/// [`eval_shares_chunk`] with explicit ISA dispatch: the scalar
+/// reference above, or the 4-lane AVX2 sweep
+/// (`simd::eval_shares_chunk`), which is gated bit-identical to it.
+/// This is the per-(chunk, holder) inner call of the fused
+/// encode+share sweep (`secure::encode_share_into_isa`).
+#[inline]
+pub fn eval_shares_chunk_isa(
+    powers: &[Fp],
+    enc: &[Fp],
+    coeffs_cm: &[Fp],
+    out: &mut [Fp],
+    isa: crate::simd::Isa,
+) {
+    match isa {
+        crate::simd::Isa::Scalar => eval_shares_chunk(powers, enc, coeffs_cm, out),
+        crate::simd::Isa::Simd => crate::simd::eval_shares_chunk(powers, enc, coeffs_cm, out),
+    }
+}
+
 /// Split a batch of secrets into per-holder share vectors.
 ///
 /// The polynomial coefficients come from `rng`, which MUST be
@@ -374,6 +393,19 @@ pub fn reconstruct_batch_with(
     quorum: &[(usize, &[Fp])],
     out: &mut [Fp],
 ) -> anyhow::Result<()> {
+    reconstruct_batch_with_isa(lambdas, quorum, out, crate::simd::Isa::Scalar)
+}
+
+/// [`reconstruct_batch_with`] with explicit ISA dispatch: shared
+/// validation, then the scalar reference core or the 4-lane AVX2
+/// core (`simd::reconstruct_batch`), which is gated bit-identical
+/// to it.
+pub fn reconstruct_batch_with_isa(
+    lambdas: &[Fp],
+    quorum: &[(usize, &[Fp])],
+    out: &mut [Fp],
+    isa: crate::simd::Isa,
+) -> anyhow::Result<()> {
     anyhow::ensure!(!quorum.is_empty(), "empty quorum");
     anyhow::ensure!(
         lambdas.len() == quorum.len(),
@@ -385,6 +417,17 @@ pub fn reconstruct_batch_with(
     for (_, v) in quorum {
         anyhow::ensure!(v.len() == n, "ragged share vectors in quorum");
     }
+    match isa {
+        crate::simd::Isa::Scalar => reconstruct_batch_scalar(lambdas, quorum, out),
+        crate::simd::Isa::Simd => crate::simd::reconstruct_batch(lambdas, quorum, out),
+    }
+    Ok(())
+}
+
+/// Validation-free scalar core of [`reconstruct_batch_with`] — the
+/// bit-identity reference the SIMD core is gated against (also its
+/// fallback when AVX2 is unavailable).
+pub(crate) fn reconstruct_batch_scalar(lambdas: &[Fp], quorum: &[(usize, &[Fp])], out: &mut [Fp]) {
     for (k, o) in out.iter_mut().enumerate() {
         let mut acc: u128 = 0;
         for (j, (_, shares)) in quorum.iter().enumerate() {
@@ -395,7 +438,6 @@ pub fn reconstruct_batch_with(
         }
         *o = reduce_lazy(acc);
     }
-    Ok(())
 }
 
 /// Scalar companion of [`reconstruct_batch_with`]: one lazy dot over

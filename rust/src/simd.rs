@@ -1,0 +1,638 @@
+//! SIMD kernel layer with runtime ISA dispatch.
+//!
+//! The two substrates the whole system's throughput rests on — the
+//! blocked f64 SYRK tile under `model::local_stats_into` and the
+//! Mersenne-field share/reconstruct sweeps under `secure` — get
+//! 4-lane AVX2 implementations here, behind one rule: **every vector
+//! path is bit-identical to the scalar reference it replaces**, and
+//! the scalar path stays in the tree as that reference (gated by the
+//! prop-test suites).
+//!
+//! ## Dispatch
+//!
+//! Users pick [`crate::config::KernelIsa`] (`auto | scalar | simd`,
+//! CLI `--kernel-isa`). [`resolve`] collapses that to a concrete
+//! [`Isa`] exactly once per engine submission: `Simd` only when the
+//! crate was built with `--features simd` on x86-64 AND the CPU
+//! reports AVX2 at runtime (cached `is_x86_feature_detected!`).
+//! Requesting `simd` where it is unavailable falls back to `Scalar`
+//! silently — the fallback is bit-identical, so there is nothing to
+//! warn about. The resolved [`Isa`] travels explicitly (session spec →
+//! workspace/share pool), never through global state, and composes
+//! with `kernel_threads` (each worker thread's scratch carries it).
+//!
+//! ## Field lanes: limb-split Mersenne multiply
+//!
+//! `Fp` is `#[repr(transparent)]` over a canonical `u64 < p = 2^61−1`,
+//! so `&[Fp]` reinterprets as `&[u64]` and one `__m256i` holds 4
+//! elements. AVX2 has no 64×64→128 multiply; instead each product
+//! `a·b` is assembled from 32-bit limbs via `_mm256_mul_epu32`
+//! (`hi(x) = x >> 32 < 2^29` because inputs are canonical):
+//!
+//! ```text
+//! a·b = ll + 2^32·cross + 2^64·hh,   ll = lo·lo   (< 2^64)
+//!                                    cross = lo·hi + hi·lo (< 2^62)
+//!                                    hh = hi·hi  (< 2^58)
+//! ```
+//!
+//! and reduced per term with `2^61 ≡ 1 (mod p)` into a *residual*
+//! `r ≡ a·b` with `r < 3·2^61 + 2^34` — small enough that an u64 lane
+//! accumulates [`SIMD_FOLD_EVERY`] residuals between folds without
+//! overflow. The final per-lane value is folded and canonicalized
+//! (one vector conditional subtract), so outputs are exactly the
+//! scalar results: field arithmetic is exact, and two accumulation
+//! schedules that preserve congruence mod p agree bit-for-bit after
+//! canonicalization.
+//!
+//! ## f64 lanes: order-preserving vectorization
+//!
+//! Floating point is NOT associative, so the f64 kernels vectorize
+//! only across *independent* output elements (SYRK row columns, axpy
+//! elements) or map the scalar kernel's existing 4 independent
+//! partial sums onto the 4 lanes (`dot`), summing them in the scalar
+//! order. No FMA is used anywhere — the scalar references round after
+//! every multiply, and bit-identity beats the last ulp. `sigmoid` /
+//! `log_sigmoid` stay scalar (libm `exp` has no vector twin with
+//! identical rounding).
+
+use crate::config::KernelIsa;
+use crate::field::Fp;
+
+/// A concrete, resolved instruction-set choice — what
+/// [`crate::config::KernelIsa`] (which still contains `Auto`)
+/// becomes after [`resolve`]. Carried by session specs, workspaces
+/// and share pools; part of workspace pool keys, hence `Hash`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// The scalar reference kernels (always available; the
+    /// bit-identity ground truth).
+    #[default]
+    Scalar,
+    /// The AVX2 4-lane kernels. Only ever produced by [`resolve`]
+    /// when [`simd_available`] is true.
+    Simd,
+}
+
+impl Isa {
+    /// Stable lowercase name (bench report labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Simd => "simd",
+        }
+    }
+}
+
+/// Whether the SIMD kernels can run here: compiled with
+/// `--features simd` on x86-64 AND the CPU reports AVX2. The cpuid
+/// probe runs once and is cached.
+pub fn simd_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        static AVAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVAIL.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Collapse a user-facing ISA request to a concrete dispatch choice.
+/// `Auto` and `Simd` both yield [`Isa::Simd`] exactly when
+/// [`simd_available`]; everything else (including `Simd` on a machine
+/// without AVX2 or a build without the feature) is [`Isa::Scalar`] —
+/// a safe, bit-identical fallback rather than an error.
+pub fn resolve(requested: KernelIsa) -> Isa {
+    match requested {
+        KernelIsa::Scalar => Isa::Scalar,
+        KernelIsa::Auto | KernelIsa::Simd => {
+            if simd_available() {
+                Isa::Simd
+            } else {
+                Isa::Scalar
+            }
+        }
+    }
+}
+
+/// Fold cadence of the u64-lane field accumulators: fold after every
+/// this-many accumulated mul residuals. The vector analogue of the
+/// scalar `field::LAZY_FOLD_EVERY` (32, for a u128 accumulator):
+/// a u64 lane holds a folded value (< 2^61 + 8) plus at most two
+/// residuals (< 3·2^61 + 2^34 each) without overflowing — a third
+/// would not fit — so the cadence is 2. The differing cadence is
+/// invisible in the output: both schedules preserve the residue mod p
+/// and both canonicalize at the end.
+pub const SIMD_FOLD_EVERY: usize = 2;
+
+/// 4-lane `dst[k] = c·src[k] + dst[k]` over canonical `Fp` slices;
+/// bit-identical to `field::mul_add_slice` (the scalar reference, to
+/// which this falls back when SIMD is unavailable).
+pub fn fp_mul_add_slice(dst: &mut [Fp], src: &[Fp], c: Fp) {
+    assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::fp_mul_add_slice(dst, src, c) };
+        return;
+    }
+    crate::field::mul_add_slice(dst, src, c);
+}
+
+/// 4-lane fused share evaluation for one chunk: same contract as
+/// `shamir::eval_shares_chunk` (the scalar reference, to which this
+/// falls back when SIMD is unavailable). Vectorizes across secrets
+/// `k` — 4 per vector, the holder power broadcast — with the
+/// sub-quad tail handled by the verbatim scalar body.
+pub fn eval_shares_chunk(powers: &[Fp], enc: &[Fp], coeffs_cm: &[Fp], out: &mut [Fp]) {
+    let len = enc.len();
+    let tm1 = powers.len() - 1;
+    assert_eq!(out.len(), len);
+    assert_eq!(coeffs_cm.len(), tm1 * len);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked; lengths checked above.
+        unsafe { avx2::eval_shares_chunk(powers, enc, coeffs_cm, out) };
+        return;
+    }
+    crate::shamir::eval_shares_chunk(powers, enc, coeffs_cm, out);
+}
+
+/// 4-lane batch reconstruction core: `out[k] = Σ_j λ_j·q_j[k]`, the
+/// vector twin of the loop inside `shamir::reconstruct_batch_with`.
+/// Validation-free — `shamir::reconstruct_batch_with_isa` checks the
+/// quorum shape before dispatching here. Falls back to the scalar
+/// core when SIMD is unavailable.
+pub fn reconstruct_batch(lambdas: &[Fp], quorum: &[(usize, &[Fp])], out: &mut [Fp]) {
+    debug_assert_eq!(lambdas.len(), quorum.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked; caller validated shapes.
+        unsafe { avx2::reconstruct_batch(lambdas, quorum, out) };
+        return;
+    }
+    crate::shamir::reconstruct_batch_scalar(lambdas, quorum, out);
+}
+
+/// 4-lane dot product, bit-identical to `linalg::dot`: the scalar
+/// kernel's four independent partial sums map one-to-one onto the
+/// vector lanes, summed in the same `((s0+s1)+s2)+s3` order, with the
+/// identical scalar remainder loop.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { avx2::dot(a, b) };
+    }
+    crate::linalg::dot(a, b)
+}
+
+/// 4-lane `y[i] += alpha·x[i]`, bit-identical to `linalg::axpy`
+/// (elementwise: every output depends on exactly one input pair, so
+/// lane order cannot change rounding). Also serves the SYRK rank-1
+/// remainder rows, whose scalar body is the same update.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::axpy(alpha, x, y) };
+        return;
+    }
+    crate::linalg::axpy(alpha, x, y);
+}
+
+/// 4-lane `dst[i] = w·src[i]` — the A-tile fill of the fused
+/// local-stats pass. Elementwise, hence trivially bit-identical.
+pub fn scale_into(dst: &mut [f64], src: &[f64], w: f64) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::scale_into(dst, src, w) };
+        return;
+    }
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = w * v;
+    }
+}
+
+/// 4-lane rank-4 SYRK row update:
+/// `hrow[j] = hrow[j] + c[0]·v0[j] + c[1]·v1[j] + c[2]·v2[j] + c[3]·v3[j]`
+/// for all `j`, in exactly that left-associated order per element —
+/// the inner loop of `linalg::syrk_upper_tile`'s quad pass. Columns
+/// are independent outputs, so vectorizing across `j` preserves each
+/// element's rounding sequence (multiply then add, no FMA).
+pub fn syrk_quad_row(
+    hrow: &mut [f64],
+    v0: &[f64],
+    v1: &[f64],
+    v2: &[f64],
+    v3: &[f64],
+    c: [f64; 4],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_available() {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { avx2::syrk_quad_row(hrow, v0, v1, v2, v3, c) };
+        return;
+    }
+    for ((((hv, &a), &b), &e), &f) in hrow.iter_mut().zip(v0).zip(v1).zip(v2).zip(v3) {
+        *hv = *hv + c[0] * a + c[1] * b + c[2] * e + c[3] * f;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! The actual AVX2 kernels. Everything here is `unsafe fn` gated
+    //! on `#[target_feature(enable = "avx2")]`; the safe wrappers
+    //! above verify availability before calling in.
+
+    use super::SIMD_FOLD_EVERY;
+    use crate::field::{self, fold_lazy, reduce_lazy, Fp, LAZY_FOLD_EVERY, P};
+    use std::arch::x86_64::*;
+
+    /// Low 29 bits — the mask for the `2^32·cross` term's fold.
+    const M29: u64 = (1u64 << 29) - 1;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn splat(v: u64) -> __m256i {
+        _mm256_set1_epi64x(v as i64)
+    }
+
+    /// Per-lane Mersenne multiply residual: for canonical `a, b < 2^61`
+    /// in each u64 lane, returns `r ≡ a·b (mod p)` with
+    /// `r < 3·2^61 + 2^34` (derivation in the module docs: the three
+    /// 32-bit limb products folded with `2^61 ≡ 1`, i.e.
+    /// `2^32·cross ≡ 2^32·(cross & M29) + (cross >> 29)` and
+    /// `2^64·hh ≡ 8·hh`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_residual(a: __m256i, b: __m256i) -> __m256i {
+        let a_hi = _mm256_srli_epi64(a, 32); // < 2^29
+        let b_hi = _mm256_srli_epi64(b, 32); // < 2^29
+        let ll = _mm256_mul_epu32(a, b); // lo·lo, full u64
+        let lh = _mm256_mul_epu32(a, b_hi); // lo·hi < 2^61
+        let hl = _mm256_mul_epu32(a_hi, b); // hi·lo < 2^61
+        let hh = _mm256_mul_epu32(a_hi, b_hi); // hi·hi < 2^58
+        let cross = _mm256_add_epi64(lh, hl); // < 2^62
+        let m61 = splat(P);
+        let m29 = splat(M29);
+        let r = _mm256_add_epi64(_mm256_and_si256(ll, m61), _mm256_srli_epi64(ll, 61));
+        let r = _mm256_add_epi64(
+            r,
+            _mm256_slli_epi64(_mm256_and_si256(cross, m29), 32),
+        );
+        let r = _mm256_add_epi64(r, _mm256_srli_epi64(cross, 29));
+        _mm256_add_epi64(r, _mm256_slli_epi64(hh, 3))
+    }
+
+    /// One lazy fold per lane: for `x < 2^64`, returns
+    /// `(x & p) + (x >> 61) < 2^61 + 8`, congruent to `x` mod p.
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold61(x: __m256i) -> __m256i {
+        _mm256_add_epi64(_mm256_and_si256(x, splat(P)), _mm256_srli_epi64(x, 61))
+    }
+
+    /// Canonicalize lanes known to be `< 2p` (true of any freshly
+    /// folded value): one conditional subtract of p. The signed
+    /// 64-bit compare is sound because both operands are `< 2^62`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn canonical(x: __m256i) -> __m256i {
+        let ge = _mm256_cmpgt_epi64(x, splat(P - 1));
+        _mm256_sub_epi64(x, _mm256_and_si256(ge, splat(P)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn load(src: &[u64], at: usize) -> __m256i {
+        debug_assert!(at + 4 <= src.len());
+        _mm256_loadu_si256(src.as_ptr().add(at) as *const __m256i)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn store(dst: &mut [u64], at: usize, v: __m256i) {
+        debug_assert!(at + 4 <= dst.len());
+        _mm256_storeu_si256(dst.as_mut_ptr().add(at) as *mut __m256i, v)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fp_mul_add_slice(dst: &mut [Fp], src: &[Fp], c: Fp) {
+        let n = dst.len();
+        let quads = n / 4;
+        let c4 = splat(c.to_u64());
+        let src_u = field::as_u64s(src);
+        let dst_u = field::as_u64s_mut(dst);
+        for q in 0..quads {
+            let k = q * 4;
+            // residual (< 3·2^61 + 2^34) + canonical dst (< 2^61)
+            // fits u64; fold + canonicalize lands in [0, p).
+            let r = _mm256_add_epi64(mul_residual(c4, load(src_u, k)), load(dst_u, k));
+            store(dst_u, k, canonical(fold61(r)));
+        }
+        for k in quads * 4..n {
+            dst[k] = c.mul_add(src[k], dst[k]);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn eval_shares_chunk(powers: &[Fp], enc: &[Fp], coeffs_cm: &[Fp], out: &mut [Fp]) {
+        let len = enc.len();
+        let tm1 = powers.len() - 1;
+        let enc_u = field::as_u64s(enc);
+        let coeffs_u = field::as_u64s(coeffs_cm);
+        let quads = len / 4;
+        {
+            let out_u = field::as_u64s_mut(out);
+            for q in 0..quads {
+                let k = q * 4;
+                let mut acc = load(enc_u, k); // canonical start, < 2^61
+                for i in 0..tm1 {
+                    let pw = splat(powers[i + 1].to_u64());
+                    let cf = load(coeffs_u, i * len + k);
+                    acc = _mm256_add_epi64(acc, mul_residual(pw, cf));
+                    if (i + 1) % SIMD_FOLD_EVERY == 0 {
+                        acc = fold61(acc);
+                    }
+                }
+                store(out_u, k, canonical(fold61(acc)));
+            }
+        }
+        // Sub-quad tail: the scalar reference body verbatim (the
+        // coefficient-major stride spans the FULL chunk, so the tail
+        // cannot simply recurse on subslices).
+        for k in quads * 4..len {
+            let mut acc = enc[k].to_u64() as u128;
+            for i in 0..tm1 {
+                acc += powers[i + 1].to_u64() as u128 * coeffs_cm[i * len + k].to_u64() as u128;
+                if (i + 1) % LAZY_FOLD_EVERY == 0 {
+                    acc = fold_lazy(acc);
+                }
+            }
+            out[k] = reduce_lazy(acc);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn reconstruct_batch(lambdas: &[Fp], quorum: &[(usize, &[Fp])], out: &mut [Fp]) {
+        let n = out.len();
+        let quads = n / 4;
+        {
+            let out_u = field::as_u64s_mut(out);
+            for q in 0..quads {
+                let k = q * 4;
+                let mut acc = _mm256_setzero_si256();
+                for (j, (_, shares)) in quorum.iter().enumerate() {
+                    let l4 = splat(lambdas[j].to_u64());
+                    let sv = load(field::as_u64s(shares), k);
+                    acc = _mm256_add_epi64(acc, mul_residual(l4, sv));
+                    if (j + 1) % SIMD_FOLD_EVERY == 0 {
+                        acc = fold61(acc);
+                    }
+                }
+                store(out_u, k, canonical(fold61(acc)));
+            }
+        }
+        // Sub-quad tail: scalar reference body verbatim.
+        for (k, o) in out.iter_mut().enumerate().skip(quads * 4) {
+            let mut acc: u128 = 0;
+            for (j, (_, shares)) in quorum.iter().enumerate() {
+                acc += lambdas[j].to_u64() as u128 * shares[k].to_u64() as u128;
+                if (j + 1) % LAZY_FOLD_EVERY == 0 {
+                    acc = fold_lazy(acc);
+                }
+            }
+            *o = reduce_lazy(acc);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        // One vector accumulator whose 4 lanes ARE the scalar
+        // kernel's s0..s3; mul then add (no FMA) matches its
+        // per-term rounding exactly.
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = c * 4;
+            let av = _mm256_loadu_pd(a.as_ptr().add(i));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let quads = n / 4;
+        let a4 = _mm256_set1_pd(alpha);
+        for q in 0..quads {
+            let i = q * 4;
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(
+                y.as_mut_ptr().add(i),
+                _mm256_add_pd(yv, _mm256_mul_pd(a4, xv)),
+            );
+        }
+        for i in quads * 4..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_into(dst: &mut [f64], src: &[f64], w: f64) {
+        let n = dst.len();
+        let quads = n / 4;
+        let w4 = _mm256_set1_pd(w);
+        for q in 0..quads {
+            let i = q * 4;
+            let sv = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_mul_pd(w4, sv));
+        }
+        for i in quads * 4..n {
+            dst[i] = w * src[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn syrk_quad_row(
+        hrow: &mut [f64],
+        v0: &[f64],
+        v1: &[f64],
+        v2: &[f64],
+        v3: &[f64],
+        c: [f64; 4],
+    ) {
+        let n = hrow.len();
+        let quads = n / 4;
+        let c0 = _mm256_set1_pd(c[0]);
+        let c1 = _mm256_set1_pd(c[1]);
+        let c2 = _mm256_set1_pd(c[2]);
+        let c3 = _mm256_set1_pd(c[3]);
+        for q in 0..quads {
+            let i = q * 4;
+            let mut h = _mm256_loadu_pd(hrow.as_ptr().add(i));
+            h = _mm256_add_pd(h, _mm256_mul_pd(c0, _mm256_loadu_pd(v0.as_ptr().add(i))));
+            h = _mm256_add_pd(h, _mm256_mul_pd(c1, _mm256_loadu_pd(v1.as_ptr().add(i))));
+            h = _mm256_add_pd(h, _mm256_mul_pd(c2, _mm256_loadu_pd(v2.as_ptr().add(i))));
+            h = _mm256_add_pd(h, _mm256_mul_pd(c3, _mm256_loadu_pd(v3.as_ptr().add(i))));
+            _mm256_storeu_pd(hrow.as_mut_ptr().add(i), h);
+        }
+        for i in quads * 4..n {
+            hrow[i] = hrow[i] + c[0] * v0[i] + c[1] * v1[i] + c[2] * v2[i] + c[3] * v3[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::P;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    // On hosts without AVX2 (or builds without `--features simd`) the
+    // wrappers ARE the scalar references and these tests pass
+    // trivially; with the feature + hardware they are the direct
+    // vector-vs-scalar bit-identity gate (the prop suites add the
+    // pipeline-level ones).
+
+    /// Boundary values first (the Mersenne fold's edge cases), then
+    /// uniform random fill.
+    fn fp_values(n: usize, rng: &mut SplitMix64) -> Vec<Fp> {
+        let boundary = [P - 1, P - 2, 0, 1, P / 2, P / 2 + 1];
+        (0..n)
+            .map(|i| {
+                if i < boundary.len() {
+                    Fp::new(boundary[i])
+                } else {
+                    Fp::random(rng)
+                }
+            })
+            .collect()
+    }
+
+    const LANE_STRADDLE: [usize; 9] = [1, 3, 4, 5, 7, 8, 31, 32, 33];
+
+    #[test]
+    fn resolve_respects_availability() {
+        assert_eq!(resolve(KernelIsa::Scalar), Isa::Scalar);
+        for req in [KernelIsa::Auto, KernelIsa::Simd] {
+            let isa = resolve(req);
+            if simd_available() {
+                assert_eq!(isa, Isa::Simd);
+            } else {
+                assert_eq!(isa, Isa::Scalar, "absent ISA must fall back, not fail");
+            }
+        }
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Simd.name(), "simd");
+        assert_eq!(Isa::default(), Isa::Scalar);
+    }
+
+    #[test]
+    fn fp_mul_add_slice_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(0x51D0_0001);
+        for &n in &LANE_STRADDLE {
+            let src = fp_values(n, &mut rng);
+            let base = fp_values(n, &mut rng);
+            for c in [Fp::new(P - 1), Fp::new(1), Fp::random(&mut rng)] {
+                let mut simd = base.clone();
+                let mut scalar = base.clone();
+                fp_mul_add_slice(&mut simd, &src, c);
+                crate::field::mul_add_slice(&mut scalar, &src, c);
+                assert_eq!(simd, scalar, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_shares_chunk_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(0x51D0_0002);
+        for &len in &LANE_STRADDLE {
+            for t in [2usize, 3, 4, 6] {
+                let powers: Vec<Fp> = (0..t).map(|_| Fp::random(&mut rng)).collect();
+                let enc = fp_values(len, &mut rng);
+                let coeffs = fp_values((t - 1) * len, &mut rng);
+                let mut simd = vec![Fp::new(0); len];
+                let mut scalar = vec![Fp::new(0); len];
+                eval_shares_chunk(&powers, &enc, &coeffs, &mut simd);
+                crate::shamir::eval_shares_chunk(&powers, &enc, &coeffs, &mut scalar);
+                assert_eq!(simd, scalar, "len={len} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruct_batch_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(0x51D0_0003);
+        for &n in &LANE_STRADDLE {
+            for t in [1usize, 2, 3, 5] {
+                let lambdas: Vec<Fp> = (0..t).map(|_| Fp::random(&mut rng)).collect();
+                let shares: Vec<Vec<Fp>> = (0..t).map(|_| fp_values(n, &mut rng)).collect();
+                let quorum: Vec<(usize, &[Fp])> =
+                    shares.iter().enumerate().map(|(j, s)| (j, s.as_slice())).collect();
+                let mut simd = vec![Fp::new(0); n];
+                let mut scalar = vec![Fp::new(0); n];
+                reconstruct_batch(&lambdas, &quorum, &mut simd);
+                crate::shamir::reconstruct_batch_with(&lambdas, &quorum, &mut scalar).unwrap();
+                assert_eq!(simd, scalar, "n={n} t={t}");
+            }
+        }
+    }
+
+    fn f64_values(n: usize, rng: &mut SplitMix64) -> Vec<f64> {
+        (0..n)
+            .map(|_| (rng.next_u64() as f64 / u64::MAX as f64) * 4.0 - 2.0)
+            .collect()
+    }
+
+    #[test]
+    fn f64_kernels_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(0x51D0_0004);
+        for &n in &LANE_STRADDLE {
+            let a = f64_values(n, &mut rng);
+            let b = f64_values(n, &mut rng);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                crate::linalg::dot(&a, &b).to_bits(),
+                "dot n={n}"
+            );
+
+            let mut y_simd = f64_values(n, &mut rng);
+            let mut y_scalar = y_simd.clone();
+            axpy(0.37, &a, &mut y_simd);
+            crate::linalg::axpy(0.37, &a, &mut y_scalar);
+            assert_eq!(y_simd, y_scalar, "axpy n={n}");
+
+            let mut d_simd = vec![0.0; n];
+            let mut d_scalar = vec![0.0; n];
+            scale_into(&mut d_simd, &a, -1.75);
+            for (d, &v) in d_scalar.iter_mut().zip(&a) {
+                *d = -1.75 * v;
+            }
+            assert_eq!(d_simd, d_scalar, "scale_into n={n}");
+
+            let (v0, v1) = (f64_values(n, &mut rng), f64_values(n, &mut rng));
+            let (v2, v3) = (f64_values(n, &mut rng), f64_values(n, &mut rng));
+            let c = [0.25, -1.5, 3.0, 0.125];
+            let mut h_simd = f64_values(n, &mut rng);
+            let mut h_scalar = h_simd.clone();
+            syrk_quad_row(&mut h_simd, &v0, &v1, &v2, &v3, c);
+            for ((((hv, &p), &q), &r), &s) in
+                h_scalar.iter_mut().zip(&v0).zip(&v1).zip(&v2).zip(&v3)
+            {
+                *hv = *hv + c[0] * p + c[1] * q + c[2] * r + c[3] * s;
+            }
+            assert_eq!(h_simd, h_scalar, "syrk_quad_row n={n}");
+        }
+    }
+}

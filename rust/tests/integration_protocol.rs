@@ -44,6 +44,7 @@ fn make_spec(
         FixedCodec::default(),
         false,
         1,
+        privlr::simd::Isa::Scalar,
         1000,
     ))
 }

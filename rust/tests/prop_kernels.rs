@@ -9,19 +9,25 @@
 //!   deterministically;
 //! * Vandermonde `shamir::share_batch` ≡ per-secret Horner
 //!   `shamir::share_batch_horner` on the same RNG stream (identical
-//!   shares — field arithmetic is exact).
+//!   shares — field arithmetic is exact);
+//! * ISA invariance: the `simd::resolve(Auto)`-dispatched f64 kernels
+//!   (`syrk_upper_blocked_isa`, SIMD `Workspace`) ≡ scalar, bitwise,
+//!   at lane-straddling dimensions and across kernel_threads ∈
+//!   {1, 2, 4}.
 //!
 //! Sizes deliberately straddle the kernels' block boundaries (n and
 //! batch not multiples of the tile; batch sizes 0, 1, tile±1), per the
 //! regression checklist.
 
+use privlr::config::KernelIsa;
 use privlr::field::Fp;
-use privlr::linalg::{syrk_upper_blocked, Matrix, SYRK_ROW_TILE};
+use privlr::linalg::{syrk_upper_blocked, syrk_upper_blocked_isa, Matrix, SYRK_ROW_TILE};
 use privlr::model::{self, LocalStats, Workspace};
 use privlr::shamir::{
     reconstruct_batch, share_batch, share_batch_horner, share_batch_with, ShamirParams,
     VandermondeTable,
 };
+use privlr::simd::{resolve, Isa};
 use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
 
 /// Run `prop` for `cases` seeded iterations, reporting the seed on panic.
@@ -138,6 +144,89 @@ fn prop_local_stats_multithreaded_matches_reference() {
             assert_eq!(got.h.data, again.h.data);
             assert_eq!(got.g, again.g);
             assert_eq!(got.dev, again.dev);
+        }
+    });
+}
+
+// ---- ISA invariance (scalar ≡ simd, bitwise) ----------------------------
+//
+// `resolve(Auto)` yields Simd exactly when this host can run the AVX2
+// kernels; on hosts where it yields Scalar these properties compare
+// the reference against itself and pass trivially — the same tests
+// become the real vector-vs-scalar gate on AVX2 hardware, with no
+// cfg-juggling in the suite.
+
+#[test]
+fn prop_syrk_isa_dispatch_bit_identical_to_scalar() {
+    let isa = resolve(KernelIsa::Auto);
+    forall("syrk isa ≡ scalar", 10, |rng| {
+        // d straddles the 4-wide f64 lanes; n straddles the row tile.
+        for d in [1usize, 3, 4, 5, 7, 8, 17] {
+            for n in straddling_sizes(SYRK_ROW_TILE, rng) {
+                let mut x = Matrix::zeros(n, d);
+                for v in x.data.iter_mut() {
+                    *v = if rng.next_bernoulli(0.1) {
+                        0.0
+                    } else {
+                        rng.next_gaussian()
+                    };
+                }
+                let w: Vec<f64> = (0..n).map(|_| rng.next_range_f64(-1.5, 1.5)).collect();
+                let mut scalar = Matrix::zeros(d, d);
+                let mut scratch = Vec::new();
+                syrk_upper_blocked(&mut scalar, &x, &w, 0, n, &mut scratch);
+                let mut dispatched = Matrix::zeros(d, d);
+                let mut scratch2 = Vec::new();
+                syrk_upper_blocked_isa(&mut dispatched, &x, &w, 0, n, &mut scratch2, isa);
+                assert_eq!(dispatched.data, scalar.data, "n={n} d={d} isa={isa:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_local_stats_isa_lane_straddling_dims_match_reference() {
+    // Single-worker SIMD workspace ≡ the scalar ground truth, bitwise,
+    // at dimensions that straddle the 4-wide lanes (dot, tile fill,
+    // axpy and SYRK all see ragged tails here).
+    let isa = resolve(KernelIsa::Auto);
+    forall("local_stats isa ≡ reference", 8, |rng| {
+        for d in [1usize, 3, 4, 5, 7, 8] {
+            for n in [1usize, 5, SYRK_ROW_TILE - 1, SYRK_ROW_TILE + 1] {
+                let (x, y, beta) = random_shard(n, d, rng);
+                let reference = model::local_stats_reference(&x, &y, &beta);
+                let mut ws = Workspace::with_isa(d, 1, isa);
+                let mut got = LocalStats::zeros(d);
+                model::local_stats_into(&mut ws, &x, &y, &beta, &mut got);
+                assert_eq!(got.h.data, reference.h.data, "H: n={n} d={d} isa={isa:?}");
+                assert_eq!(got.g, reference.g, "g: n={n} d={d}");
+                assert_eq!(got.dev, reference.dev, "dev: n={n} d={d}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_local_stats_isa_invariant_across_thread_counts() {
+    // ISA composes with kernel_threads: at EVERY thread count the
+    // SIMD workspace is bit-identical to the scalar workspace with
+    // the same count (identical partition, per-range kernels
+    // bit-identical, ordered merge).
+    let isa = resolve(KernelIsa::Auto);
+    forall("local_stats isa ≡ scalar × threads", 5, |rng| {
+        let d = 2 + rng.next_below(8) as usize;
+        let n = 8 * SYRK_ROW_TILE + 1 + rng.next_below(256) as usize;
+        let (x, y, beta) = random_shard(n, d, rng);
+        for threads in [1usize, 2, 4] {
+            let mut ws_scalar = Workspace::with_isa(d, threads, Isa::Scalar);
+            let mut ws_isa = Workspace::with_isa(d, threads, isa);
+            let mut a = LocalStats::zeros(d);
+            let mut b = LocalStats::zeros(d);
+            model::local_stats_into(&mut ws_scalar, &x, &y, &beta, &mut a);
+            model::local_stats_into(&mut ws_isa, &x, &y, &beta, &mut b);
+            assert_eq!(a.h.data, b.h.data, "H: threads={threads} isa={isa:?}");
+            assert_eq!(a.g, b.g, "g: threads={threads}");
+            assert_eq!(a.dev, b.dev, "dev: threads={threads}");
         }
     });
 }

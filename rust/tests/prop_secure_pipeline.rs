@@ -14,15 +14,21 @@
 //! * after warm-up, one full single-threaded pipeline iteration
 //!   (encode+share, per-center fold, cached-λ reconstruction, decode)
 //!   performs **zero heap allocations** — verified with a counting
-//!   global allocator, not by inspection.
+//!   global allocator, not by inspection;
+//! * ISA invariance: the `simd::resolve(Auto)`-dispatched share
+//!   evaluation and reconstruction are **bit-identical** to the scalar
+//!   reference at lane- and chunk-straddling lengths, near-P and
+//!   max-headroom values, across `kernel_threads ∈ {1, 2, 4}`.
 
+use privlr::config::KernelIsa;
 use privlr::field::{add_assign_slice, Fp, P};
 use privlr::fixed::FixedCodec;
-use privlr::secure::{encode_share_into, ShareContext, SharePool};
+use privlr::secure::{encode_share_into, encode_share_into_isa, ShareContext, SharePool};
 use privlr::shamir::{
-    lagrange_at_zero, reconstruct_batch, reconstruct_batch_with, reconstruct_scalar_with,
-    LagrangeCache, ShamirParams, SHARE_CHUNK,
+    lagrange_at_zero, reconstruct_batch, reconstruct_batch_with, reconstruct_batch_with_isa,
+    reconstruct_scalar_with, LagrangeCache, ShamirParams, SHARE_CHUNK,
 };
+use privlr::simd::resolve;
 use privlr::util::rng::{ChaCha20Rng, Rng, SplitMix64};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -276,6 +282,101 @@ fn warm_pipeline_iteration_is_allocation_free() {
     for (i, v) in f64_out.iter().enumerate() {
         let expect = 2.0 * values[i];
         assert!((v - expect).abs() <= 2.0 * codec.epsilon(), "element {i}");
+    }
+}
+
+// ---- Gate 5: ISA invariance (scalar ≡ simd, bitwise) --------------------
+//
+// `simd::resolve(Auto)` yields Simd exactly when this host can run the
+// AVX2 kernels; where it yields Scalar these gates compare the
+// reference against itself and pass trivially. On AVX2 hardware the
+// same gates are the vector-vs-scalar bit-identity proof for the
+// 4-lane Mersenne share arithmetic, with no cfg-juggling here.
+
+/// Gate 5a: the ISA-dispatched fused share sweep produces exactly the
+/// scalar reference's holder buffers — at lane-straddling lengths
+/// (1..=33) and chunk-straddling lengths (`SHARE_CHUNK`±1), with
+/// max-headroom encodings mixed in so lane residues sit near P, across
+/// `kernel_threads ∈ {1, 2, 4}`.
+#[test]
+fn isa_share_evaluation_bit_identical_to_scalar() {
+    let isa = resolve(KernelIsa::Auto);
+    let params = scheme(3, 5);
+    let ctx = ShareContext::new(params);
+    let codec = FixedCodec::default();
+    for k in [
+        1usize,
+        3,
+        4,
+        5,
+        7,
+        8,
+        31,
+        32,
+        33,
+        SHARE_CHUNK - 1,
+        SHARE_CHUNK,
+        SHARE_CHUNK + 1,
+    ] {
+        let mut rng = SplitMix64::new(0x15A_0000 + k as u64);
+        let mut values: Vec<f64> = (0..k).map(|_| rng.next_range_f64(-1e5, 1e5)).collect();
+        values[0] = codec.max_abs();
+        if k > 1 {
+            values[k - 1] = -codec.max_abs();
+        }
+        let mut scalar_pool = SharePool::new();
+        encode_share_into(&ctx, &codec, &values, 0x5EED, 1, &mut scalar_pool).unwrap();
+        for threads in [1usize, 2, 4] {
+            let mut pool = SharePool::new();
+            encode_share_into_isa(&ctx, &codec, &values, 0x5EED, threads, isa, &mut pool)
+                .unwrap();
+            for j in 0..5 {
+                assert_eq!(
+                    scalar_pool.holder(j),
+                    pool.holder(j),
+                    "k={k} threads={threads} holder={j} isa={isa:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Gate 5b: the ISA-dispatched batch reconstruction is bit-identical
+/// to the scalar lazy-fold reference at the same lengths, with the
+/// leading elements pinned to the field-boundary values near P (the
+/// SIMD accumulator's worst case for deferred folds).
+#[test]
+fn isa_reconstruction_bit_identical_to_scalar() {
+    let isa = resolve(KernelIsa::Auto);
+    let params = scheme(4, 9);
+    let idx = [0usize, 3, 5, 8];
+    let lambdas = lagrange_at_zero(params, &idx).unwrap();
+    let boundary = [P - 1, P - 2, 1, 0, P / 2, P / 2 + 1];
+    for k in [1usize, 3, 4, 5, 7, 8, 31, 32, 33, SHARE_CHUNK + 1] {
+        let mut rng = SplitMix64::new(0x15A_1000 + k as u64);
+        let shares: Vec<Vec<Fp>> = (0..4u64)
+            .map(|j| {
+                (0..k)
+                    .map(|i| {
+                        if i < boundary.len() {
+                            Fp::new(boundary[i].wrapping_add(j))
+                        } else {
+                            Fp::new(rng.next_below(P))
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let quorum: Vec<(usize, &[Fp])> = idx
+            .iter()
+            .zip(&shares)
+            .map(|(&j, s)| (j, s.as_slice()))
+            .collect();
+        let mut scalar_out = vec![Fp::ZERO; k];
+        reconstruct_batch_with(&lambdas, &quorum, &mut scalar_out).unwrap();
+        let mut isa_out = vec![Fp::ZERO; k];
+        reconstruct_batch_with_isa(&lambdas, &quorum, &mut isa_out, isa).unwrap();
+        assert_eq!(scalar_out, isa_out, "k={k} isa={isa:?}");
     }
 }
 

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verify + style gates + kernel/session-engine equivalence gates.
 #
-#   ./ci.sh            build + style gates + full test suite + explicit gates
+#   ./ci.sh            build + style gates + full test suite + explicit
+#                      gates + feature matrix (simd, net, net+simd)
 #   PRIVLR_CI_BENCH=1 ./ci.sh   additionally runs the fast benches and
 #                               refreshes BENCH_kernels.json
 #   PRIVLR_CHAOS=1 ./ci.sh      additionally re-runs the sharded
@@ -49,6 +50,21 @@ cargo test -q --features simd
 cargo test -q --features simd --test prop_kernels
 cargo test -q --features simd --test prop_secure_pipeline
 
+echo "== feature matrix: --features net (TCP transport, hardened framing) =="
+# The net feature adds the std::net fabric + `privlr serve`; the default
+# build stays socket-free. The named gate proves loopback-TCP ≡
+# in-memory bit-identity, mid-fit socket-kill replay recovery, and
+# hostile-frame rejection without session poisoning.
+cargo build --release --features net
+cargo test -q --features net
+
+echo "== network transport gate (loopback-TCP bit-identity, socket-kill replay, hostile frames) =="
+cargo test -q --features net --test integration_net
+
+echo "== feature matrix: --features net,simd (combined) =="
+cargo build --release --features net,simd
+cargo test -q --features net,simd --test integration_net
+
 echo "== fault tolerance gate (kill/restart replay bit-identity, retry exhaustion, chaos transport) =="
 cargo test -q --test integration_faults
 if [ "${PRIVLR_CHAOS:-0}" = "1" ]; then
@@ -73,6 +89,8 @@ echo "== style: cargo clippy -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
     cargo clippy --all-targets --features simd -- -D warnings
+    cargo clippy --all-targets --features net -- -D warnings
+    cargo clippy --all-targets --features net,simd -- -D warnings
 else
     echo "SKIP: clippy component not installed"
 fi
@@ -83,6 +101,8 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 if [ "${PRIVLR_CI_BENCH:-0}" = "1" ]; then
     echo "== fast benches (refresh BENCH_kernels.json) =="
     PRIVLR_BENCH_FAST=1 cargo bench --bench micro_substrates
+    # session_throughput also sweeps shard_scaling, fault_recovery, and
+    # wan_consortium (fits/sec at 0/20/80 ms injected RTT, K=16, d=10).
     PRIVLR_BENCH_FAST=1 cargo bench --bench session_throughput
 fi
 

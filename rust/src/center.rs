@@ -135,7 +135,13 @@ pub fn run_center_worker(cfg: CenterWorkerConfig, ep: Endpoint) -> anyhow::Resul
             Message::SessionClose { .. } | Message::Abort { .. } => {
                 // State is freed BEFORE the ack goes out: once the
                 // driver has every ack, zero-leak is a fact, not a race.
+                // The registry entry is purged too (remote mode gives
+                // every process its own registry copy; in shared mode
+                // the driver's own purge at retirement makes this a
+                // benign double-remove). NOT done on `SessionReopen` —
+                // the spec must survive for the replay to re-open from.
                 drop_session(&mut sessions, session);
+                cfg.registry.remove(session);
                 let _ = ep.send_session(
                     NodeId::Coordinator,
                     session,

@@ -214,6 +214,21 @@ pub struct ExperimentConfig {
     pub retry_backoff_ms: u64,
     /// What exhaustion does with the session: abort (default) or park.
     pub retry_on_exhausted: OnExhausted,
+    /// TCP transport (`--features net`): hard bound on one link frame,
+    /// in bytes. A length prefix above this kills the connection BEFORE
+    /// any allocation — the defense against hostile/corrupt peers.
+    pub net_max_frame_len: usize,
+    /// TCP transport: heartbeat (PING) interval per live link, ms.
+    pub net_heartbeat_ms: u64,
+    /// TCP transport: a link silent (no frames, no heartbeats) this
+    /// long is declared dead and flows into the worker-loss path.
+    /// Must exceed `net_heartbeat_ms`.
+    pub net_heartbeat_timeout_ms: u64,
+    /// TCP transport: first reconnect backoff delay, ms (doubles per
+    /// attempt).
+    pub net_reconnect_base_ms: u64,
+    /// TCP transport: reconnect backoff ceiling, ms.
+    pub net_reconnect_cap_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -245,6 +260,11 @@ impl Default for ExperimentConfig {
             retry_max: 0,
             retry_backoff_ms: 0,
             retry_on_exhausted: OnExhausted::Abort,
+            net_max_frame_len: 64 << 20,
+            net_heartbeat_ms: 500,
+            net_heartbeat_timeout_ms: 2000,
+            net_reconnect_base_ms: 50,
+            net_reconnect_cap_ms: 2000,
         }
     }
 }
@@ -296,6 +316,20 @@ impl ExperimentConfig {
             ("retry_max", json::num(self.retry_max as f64)),
             ("retry_backoff_ms", json::num(self.retry_backoff_ms as f64)),
             ("retry_on_exhausted", json::s(self.retry_on_exhausted.name())),
+            ("net_max_frame_len", json::num(self.net_max_frame_len as f64)),
+            ("net_heartbeat_ms", json::num(self.net_heartbeat_ms as f64)),
+            (
+                "net_heartbeat_timeout_ms",
+                json::num(self.net_heartbeat_timeout_ms as f64),
+            ),
+            (
+                "net_reconnect_base_ms",
+                json::num(self.net_reconnect_base_ms as f64),
+            ),
+            (
+                "net_reconnect_cap_ms",
+                json::num(self.net_reconnect_cap_ms as f64),
+            ),
         ])
     }
 
@@ -388,6 +422,21 @@ impl ExperimentConfig {
         if let Some(s) = v.get("retry_on_exhausted").as_str() {
             cfg.retry_on_exhausted = OnExhausted::parse(s)?;
         }
+        if let Some(n) = v.get("net_max_frame_len").as_usize() {
+            cfg.net_max_frame_len = n;
+        }
+        if let Some(h) = v.get("net_heartbeat_ms").as_u64() {
+            cfg.net_heartbeat_ms = h;
+        }
+        if let Some(t) = v.get("net_heartbeat_timeout_ms").as_u64() {
+            cfg.net_heartbeat_timeout_ms = t;
+        }
+        if let Some(b) = v.get("net_reconnect_base_ms").as_u64() {
+            cfg.net_reconnect_base_ms = b;
+        }
+        if let Some(c) = v.get("net_reconnect_cap_ms").as_u64() {
+            cfg.net_reconnect_cap_ms = c;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -421,6 +470,30 @@ impl ExperimentConfig {
             self.driver_shards <= 1024,
             "driver_shards {} out of range (max 1024)",
             self.driver_shards
+        );
+        // A frame bound below one small control frame would wedge the
+        // link on its own heartbeats; 1 KiB is far under any real frame.
+        anyhow::ensure!(
+            self.net_max_frame_len >= 1024,
+            "net_max_frame_len {} too small (min 1024)",
+            self.net_max_frame_len
+        );
+        anyhow::ensure!(self.net_heartbeat_ms >= 1, "net_heartbeat_ms must be >= 1");
+        anyhow::ensure!(
+            self.net_heartbeat_timeout_ms > self.net_heartbeat_ms,
+            "net_heartbeat_timeout_ms {} must exceed net_heartbeat_ms {}",
+            self.net_heartbeat_timeout_ms,
+            self.net_heartbeat_ms
+        );
+        anyhow::ensure!(
+            self.net_reconnect_base_ms >= 1,
+            "net_reconnect_base_ms must be >= 1"
+        );
+        anyhow::ensure!(
+            self.net_reconnect_cap_ms >= self.net_reconnect_base_ms,
+            "net_reconnect_cap_ms {} below net_reconnect_base_ms {}",
+            self.net_reconnect_cap_ms,
+            self.net_reconnect_base_ms
         );
         Ok(())
     }
@@ -495,6 +568,38 @@ mod tests {
         assert_eq!(cfg.retry_backoff_ms, 10);
         assert_eq!(cfg.retry_on_exhausted, OnExhausted::Park);
         let v = Json::parse(r#"{"retry_on_exhausted": "retry-forever"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn net_knobs_roundtrip_default_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.net_max_frame_len, 64 << 20, "64 MiB frame bound");
+        assert_eq!(cfg.net_heartbeat_ms, 500);
+        assert_eq!(cfg.net_heartbeat_timeout_ms, 2000);
+        assert_eq!(cfg.net_reconnect_base_ms, 50);
+        assert_eq!(cfg.net_reconnect_cap_ms, 2000);
+        cfg.net_max_frame_len = 1 << 20;
+        cfg.net_heartbeat_ms = 100;
+        cfg.net_heartbeat_timeout_ms = 450;
+        cfg.net_reconnect_base_ms = 10;
+        cfg.net_reconnect_cap_ms = 640;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.net_max_frame_len, 1 << 20);
+        assert_eq!(back.net_heartbeat_ms, 100);
+        assert_eq!(back.net_heartbeat_timeout_ms, 450);
+        assert_eq!(back.net_reconnect_base_ms, 10);
+        assert_eq!(back.net_reconnect_cap_ms, 640);
+        let v = Json::parse(r#"{"net_heartbeat_ms": 1000, "net_heartbeat_timeout_ms": 800}"#)
+            .unwrap();
+        assert!(
+            ExperimentConfig::from_json(&v).is_err(),
+            "timeout at or below the heartbeat interval is a config error"
+        );
+        let v = Json::parse(r#"{"net_max_frame_len": 64}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+        let v = Json::parse(r#"{"net_reconnect_base_ms": 500, "net_reconnect_cap_ms": 100}"#)
+            .unwrap();
         assert!(ExperimentConfig::from_json(&v).is_err());
     }
 

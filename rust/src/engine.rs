@@ -252,7 +252,7 @@ impl SubmitPolicy {
 /// (inside `anyhow::Error`) by `submit`/`submit_shared` for
 /// [`SubmitError::LaneFull`], and delivered through an evicted study's
 /// [`StudyHandle::join`] for [`SubmitError::Shed`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The study's priority lane already holds `capacity` queued
     /// studies and the submit policy does not wait.
@@ -281,6 +281,17 @@ pub enum SubmitError {
         /// The admission deadline the study was submitted with.
         deadline: Duration,
     },
+    /// The study was aborted after socket-level failures exhausted its
+    /// retry budget: the last network error observed while its worker
+    /// links were failing. Only produced when the engine runs over a
+    /// remote transport (`--features net`); in-memory worker losses
+    /// keep their plain exhaustion message.
+    Net {
+        /// The aborted study's session id.
+        session: SessionId,
+        /// The last socket-facing failure on the session's path.
+        error: crate::transport::NetError,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -298,6 +309,10 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Deadline { session, deadline } => write!(
                 f,
                 "session {session} missed its admission deadline ({deadline:?})"
+            ),
+            SubmitError::Net { session, error } => write!(
+                f,
+                "session {session} lost its network path: {error}"
             ),
         }
     }
@@ -842,6 +857,10 @@ pub struct StudyEngine {
     /// (the leak gate reads these through
     /// [`StudyEngine::worker_live_sessions`]).
     worker_gauges: Vec<Arc<AtomicUsize>>,
+    /// Workers live in other processes behind a [`RemoteGateway`]
+    /// (built via [`StudyEngine::with_remote_workers`]): shutdown must
+    /// ship them `Shutdown` frames instead of joining local threads.
+    remote_workers: bool,
     _compute_guard: Option<ComputeServiceGuard>,
 }
 
@@ -919,6 +938,35 @@ impl StudyEngine {
         compute_guard: Option<ComputeServiceGuard>,
         opts: EngineOptions,
     ) -> anyhow::Result<StudyEngine> {
+        StudyEngine::build(institutions, centers, compute, compute_guard, opts, true)
+    }
+
+    /// Build a coordinator-only engine whose institution/center workers
+    /// live in OTHER processes behind a [`RemoteGateway`] (the TCP
+    /// transport, `--features net`): the full control plane — driver
+    /// shards, admission, lifecycle, timer wheel — spawns locally, but
+    /// no worker threads do and no worker mailboxes are registered, so
+    /// every worker-bound frame resolves through the gateway. Attach
+    /// the fabric to [`StudyEngine::network`] before submitting;
+    /// [`StudyEngine::shutdown`] sends each remote worker node a
+    /// `Shutdown` frame (best-effort) so remote serve processes can
+    /// exit their worker loops.
+    pub fn with_remote_workers(
+        institutions: usize,
+        centers: usize,
+        opts: EngineOptions,
+    ) -> anyhow::Result<StudyEngine> {
+        StudyEngine::build(institutions, centers, ComputeHandle::rust(), None, opts, false)
+    }
+
+    fn build(
+        institutions: usize,
+        centers: usize,
+        compute: ComputeHandle,
+        compute_guard: Option<ComputeServiceGuard>,
+        opts: EngineOptions,
+        spawn_workers: bool,
+    ) -> anyhow::Result<StudyEngine> {
         anyhow::ensure!(
             institutions >= 1 && institutions <= u16::MAX as usize,
             "bad institution count {institutions}"
@@ -939,38 +987,40 @@ impl StudyEngine {
         let coord_shards = net.register_sharded(NodeId::Coordinator, driver_shards);
         let mut worker_handles = HashMap::with_capacity(institutions + centers);
         let mut worker_gauges = Vec::with_capacity(institutions + centers);
-        for c in 0..centers {
-            let ep = net.register(NodeId::Center(c as u16));
-            let gauge = Arc::new(AtomicUsize::new(0));
-            worker_gauges.push(gauge.clone());
-            let cfg = crate::center::CenterWorkerConfig {
-                center_id: c as u16,
-                registry: registry.clone(),
-                live_sessions: gauge,
-            };
-            worker_handles.insert(
-                NodeId::Center(c as u16),
-                std::thread::Builder::new()
-                    .name(format!("center-{c}"))
-                    .spawn(move || crate::center::run_center_worker(cfg, ep))?,
-            );
-        }
-        for j in 0..institutions {
-            let ep = net.register(NodeId::Institution(j as u16));
-            let gauge = Arc::new(AtomicUsize::new(0));
-            worker_gauges.push(gauge.clone());
-            let cfg = crate::institution::InstitutionWorkerConfig {
-                institution_id: j as u16,
-                registry: registry.clone(),
-                engine: compute.clone(),
-                live_sessions: gauge,
-            };
-            worker_handles.insert(
-                NodeId::Institution(j as u16),
-                std::thread::Builder::new()
-                    .name(format!("institution-{j}"))
-                    .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
-            );
+        if spawn_workers {
+            for c in 0..centers {
+                let ep = net.register(NodeId::Center(c as u16));
+                let gauge = Arc::new(AtomicUsize::new(0));
+                worker_gauges.push(gauge.clone());
+                let cfg = crate::center::CenterWorkerConfig {
+                    center_id: c as u16,
+                    registry: registry.clone(),
+                    live_sessions: gauge,
+                };
+                worker_handles.insert(
+                    NodeId::Center(c as u16),
+                    std::thread::Builder::new()
+                        .name(format!("center-{c}"))
+                        .spawn(move || crate::center::run_center_worker(cfg, ep))?,
+                );
+            }
+            for j in 0..institutions {
+                let ep = net.register(NodeId::Institution(j as u16));
+                let gauge = Arc::new(AtomicUsize::new(0));
+                worker_gauges.push(gauge.clone());
+                let cfg = crate::institution::InstitutionWorkerConfig {
+                    institution_id: j as u16,
+                    registry: registry.clone(),
+                    engine: compute.clone(),
+                    live_sessions: gauge,
+                };
+                worker_handles.insert(
+                    NodeId::Institution(j as u16),
+                    std::thread::Builder::new()
+                        .name(format!("institution-{j}"))
+                        .spawn(move || crate::institution::run_institution_worker(cfg, ep))?,
+                );
+            }
         }
         let shard_queues: Vec<Arc<ShardQueues>> =
             (0..driver_shards).map(|_| ShardQueues::new()).collect();
@@ -1020,8 +1070,37 @@ impl StudyEngine {
             board,
             admission,
             worker_gauges,
+            remote_workers: !spawn_workers,
             _compute_guard: compute_guard,
         })
+    }
+
+    /// The transport fabric this engine routes over — the attachment
+    /// point for a [`RemoteGateway`] (TCP transport), a
+    /// [`FaultPlan`](crate::transport::FaultPlan), or a
+    /// [`WanPlan`](crate::transport::WanPlan).
+    pub fn network(&self) -> Arc<Network> {
+        self.net.clone()
+    }
+
+    /// The shared session-spec registry (serve processes pre-derive
+    /// specs into their own registries; the engine's own copy is what
+    /// its local drivers and any local workers read).
+    pub fn registry(&self) -> Arc<SessionRegistry> {
+        self.registry.clone()
+    }
+
+    /// Install a [`WanPlan`](crate::transport::WanPlan) over this
+    /// engine's transport: matching frames pay wall-clock latency /
+    /// jitter / serialization delay — the geo-distributed-consortium
+    /// harness behind the `wan_consortium` bench.
+    pub fn install_wan(&self, plan: crate::transport::WanPlan) {
+        self.net.install_wan(plan);
+    }
+
+    /// Remove the WAN plan, flushing still-parked frames immediately.
+    pub fn clear_wan(&self) {
+        self.net.clear_wan();
     }
 
     /// Number of institution workers in the persistent topology.
@@ -1495,6 +1574,19 @@ impl StudyEngine {
                 note(d.join(), "study driver");
             }
         }
+        if self.remote_workers {
+            // Remote serve processes exit their worker loops on a
+            // Shutdown frame exactly as local threads would; delivery
+            // is best-effort — a link that is already down has nothing
+            // left to tear down on this side.
+            let coord_injector = self.net.injector(NodeId::Coordinator);
+            for c in 0..self.centers {
+                let _ = coord_injector.send(NodeId::Center(c as u16), &Message::Shutdown);
+            }
+            for j in 0..self.institutions {
+                let _ = coord_injector.send(NodeId::Institution(j as u16), &Message::Shutdown);
+            }
+        }
         let workers: Vec<(NodeId, std::thread::JoinHandle<anyhow::Result<()>>)> =
             self.worker_handles.lock().unwrap().drain().collect();
         if !workers.is_empty() {
@@ -1559,6 +1651,11 @@ struct Active {
     acks_pending: HashSet<(bool, u16)>,
     /// Suspensions this session has survived (see [`RetryPolicy`]).
     retries: u32,
+    /// Last socket-level failure seen while sending this session's
+    /// frames (remote transport only). If the retry budget runs out,
+    /// the abort surfaces it as a downcastable [`SubmitError::Net`]
+    /// instead of a plain exhaustion message.
+    last_net_error: Option<crate::transport::NetError>,
     fate: Option<Fate>,
 }
 
@@ -1981,6 +2078,7 @@ impl Driver {
                         pending_round: None,
                         acks_pending: HashSet::new(),
                         retries: 0,
+                        last_net_error: None,
                         fate: None,
                     },
                 );
@@ -2010,6 +2108,7 @@ impl Driver {
                         pending_round: None,
                         acks_pending: HashSet::new(),
                         retries,
+                        last_net_error: None,
                         fate: None,
                     },
                 );
@@ -2020,15 +2119,22 @@ impl Driver {
                 // partial state, re-open lazily from the spec) is
                 // processed ahead of every replayed frame.
                 let mut ok = true;
+                let mut reopens = Vec::with_capacity(spec.num_institutions() + spec.num_centers());
                 for j in 0..spec.num_institutions() {
-                    let to = NodeId::Institution(j as u16);
-                    let msg = Message::SessionReopen { iter };
-                    ok &= self.coord.send_session(to, session, &msg).is_ok();
+                    reopens.push(NodeId::Institution(j as u16));
                 }
                 for c in 0..spec.num_centers() {
-                    let to = NodeId::Center(c as u16);
+                    reopens.push(NodeId::Center(c as u16));
+                }
+                for to in reopens {
                     let msg = Message::SessionReopen { iter };
-                    ok &= self.coord.send_session(to, session, &msg).is_ok();
+                    match self.coord.send_session(to, session, &msg) {
+                        Ok(()) => {}
+                        Err(e) => {
+                            ok = false;
+                            self.record_net_error(session, e);
+                        }
+                    }
                 }
                 if ok {
                     ok = self.try_send_round(session, outgoing);
@@ -2116,9 +2222,27 @@ impl Driver {
     fn try_send_round(&mut self, session: SessionId, outgoing: Vec<(NodeId, Message)>) -> bool {
         let mut ok = true;
         for (to, msg) in outgoing {
-            ok &= self.coord.send_session(to, session, &msg).is_ok();
+            match self.coord.send_session(to, session, &msg) {
+                Ok(()) => {}
+                Err(e) => {
+                    ok = false;
+                    self.record_net_error(session, e);
+                }
+            }
         }
         ok
+    }
+
+    /// Keep the latest socket-level failure on the session so a later
+    /// retry-exhaustion abort can surface it typed. In-memory losses
+    /// (`UnknownDestination`/`Disconnected` from a killed worker) are
+    /// not network errors and are deliberately not recorded.
+    fn record_net_error(&mut self, session: SessionId, e: crate::transport::TransportError) {
+        if let crate::transport::TransportError::Net(err) = e {
+            if let Some(active) = self.sessions.get_mut(&session) {
+                active.last_net_error = Some(err);
+            }
+        }
     }
 
     /// A worker died: strike its ack off every draining session (its
@@ -2185,11 +2309,17 @@ impl Driver {
                 self.wake_starved_peers();
                 return;
             }
-            let err = anyhow::anyhow!(
-                "session {session} lost a worker ({why}) and its retry budget \
-                 ({} retries) is exhausted",
-                policy.max_retries
-            );
+            // With a socket-level failure on record the abort is a
+            // typed, downcastable `SubmitError::Net`; otherwise the
+            // in-memory exhaustion message is kept verbatim.
+            let err = match active.last_net_error.take() {
+                Some(error) => anyhow::Error::new(SubmitError::Net { session, error }),
+                None => anyhow::anyhow!(
+                    "session {session} lost a worker ({why}) and its retry budget \
+                     ({} retries) is exhausted",
+                    policy.max_retries
+                ),
+            };
             self.sessions.insert(session, active);
             self.abort_session(session, err);
             return;

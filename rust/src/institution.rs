@@ -146,7 +146,13 @@ pub fn run_institution_worker(
                 // already dropped after an error). A deployment would
                 // persist the final β carried by `SessionClose` here;
                 // the simulation reports it through the study handle.
+                // The registry entry goes too: in remote mode each
+                // process owns its registry copy, and a closed session
+                // must leave zero state behind (shared-registry mode
+                // makes this a benign double-remove — the driver purges
+                // the same entry at retirement).
                 drop_session(&mut sessions, session);
+                cfg.registry.remove(session);
                 let _ = ep.send_session(
                     NodeId::Coordinator,
                     session,

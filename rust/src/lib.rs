@@ -59,6 +59,8 @@ pub mod model;
 pub mod modelio;
 pub mod mpc;
 pub mod mpc_solve;
+#[cfg(feature = "net")]
+pub mod net;
 pub mod protocol;
 pub mod runtime;
 pub mod secure;

@@ -28,6 +28,7 @@ USAGE:
 COMMANDS:
     fit        run the secure distributed protocol (--save <path> to persist)
     multifit   run K concurrent fits on one persistent study network
+    serve      run ONE consortium member over real TCP (--features net)
     compare    secure vs centralized gold standard (accuracy check)
     cv         secure k-fold cross-validation over a λ grid
     predict    score a CSV with a saved model
@@ -78,6 +79,18 @@ MULTIFIT FLAGS:
                          re-admitted for replay                     [0]
     --retry-exhausted <p>  abort | park: fate of a session whose
                          retry budget is spent                  [abort]
+
+SERVE FLAGS (requires a build with --features net):
+    --role <r>           coordinator | institution | center  (required)
+    --id <n>             institution/center index of this process   [0]
+    --listen <addr>      host:port to bind (0 picks a port) [127.0.0.1:0]
+    --peers <a,b,…>      comma-separated peer addresses to dial;
+                         convention: institutions dial the coordinator
+                         and every center, centers dial the coordinator
+    --sessions <K>       study sessions — every process must agree    [1]
+    (multifit control-plane flags — --driver-shards, --max-in-flight,
+     --retry-max, --retry-backoff-ms, --retry-exhausted — apply to the
+     coordinator role; net_* config keys tune framing and heartbeats)
 
 CV FLAGS:
     --lambdas <grid>     comma-separated λ candidates    [0.01,0.1,1,10]
@@ -311,6 +324,53 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `privlr serve`: run ONE consortium member process over real TCP.
+/// The multifit control-plane flags tune the coordinator's engine; the
+/// worker roles only need the shared experiment config (from which
+/// they derive their session specs — specs never cross the wire).
+#[cfg(feature = "net")]
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = config_from_args(args)?;
+    cfg.max_in_flight = args.get_usize("max-in-flight", cfg.max_in_flight)?;
+    cfg.driver_shards = args.get_usize("driver-shards", cfg.driver_shards)?;
+    cfg.retry_max = args.get_usize("retry-max", cfg.retry_max as usize)? as u32;
+    cfg.retry_backoff_ms = args.get_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
+    if let Some(p) = args.get("retry-exhausted") {
+        cfg.retry_on_exhausted = privlr::config::OnExhausted::parse(p)?;
+    }
+    cfg.validate()?;
+    let role = privlr::net::Role::parse(
+        args.get("role").ok_or_else(|| {
+            anyhow::anyhow!("--role is required (coordinator|institution|center)")
+        })?,
+        args.get_usize("id", 0)? as u16,
+    )?;
+    let sc = privlr::net::ServeConfig {
+        role,
+        listen: args.get_or("listen", "127.0.0.1:0").to_string(),
+        peers: args
+            .get("peers")
+            .map(|p| {
+                p.split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default(),
+        sessions: args.get_usize("sessions", 1)? as u32,
+    };
+    privlr::net::serve(&cfg, &sc)?;
+    Ok(())
+}
+
+#[cfg(not(feature = "net"))]
+fn cmd_serve(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`privlr serve` needs the TCP transport — rebuild with `cargo build --features net`"
+    )
+}
+
 fn cmd_cv(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
     let ds = cfg.dataset.load(cfg.seed)?;
@@ -467,6 +527,7 @@ fn main() {
     let result = match cmd.as_str() {
         "fit" => cmd_fit(&args),
         "multifit" => cmd_multifit(&args),
+        "serve" => cmd_serve(&args),
         "compare" => cmd_compare(&args),
         "cv" => cmd_cv(&args),
         "predict" => cmd_predict(&args),

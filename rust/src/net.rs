@@ -1,0 +1,1176 @@
+//! TCP transport (`--features net`): the consortium over real sockets.
+//!
+//! Everything below the engine is unchanged — the wire format is still
+//! [`protocol::encode_frame`](crate::protocol::encode_frame) (u32 LE
+//! session header + tagged body), routing is still the in-memory
+//! [`Network`]'s job, and the crash-fault machinery (suspension,
+//! retry/backoff, `SessionReopen` replay) is reused verbatim. This
+//! module adds exactly one thing: a [`TcpFabric`] that grafts REMOTE
+//! processes onto a local `Network` through the ungated
+//! [`RemoteGateway`] trait. Frames addressed to nodes a live link
+//! claims are forwarded over TCP; everything else routes locally.
+//!
+//! ## Link protocol
+//!
+//! A connection opens with a 5-byte preamble `b"PLRN\x01"` (protocol +
+//! version), then carries length-prefixed link frames both ways:
+//!
+//! ```text
+//! [u32 le len] [u8 kind] [payload…]        (len covers kind+payload)
+//!
+//! kind 1 HELLO  u16 le count, then count × 3-byte node addresses —
+//!               the nodes this peer serves. Sent by both sides right
+//!               after the preamble; repeatable (reconnect re-HELLOs).
+//! kind 2 FRAME  3-byte from, 3-byte to, then one wire frame
+//!               (session header + body) exactly as encode_frame
+//!               produced it.
+//! kind 3 PING / kind 4 PONG   heartbeats, empty payload.
+//!
+//! node address: kind byte (0 coordinator, 1 institution, 2 center,
+//!               3 client) + u16 le id.
+//! ```
+//!
+//! ## Robustness posture (the headline, not an afterthought)
+//!
+//! * **Hostile length prefixes** never allocate: a prefix above
+//!   [`NetOptions::max_frame_len`] kills the link with
+//!   [`NetError::FrameTooLarge`] *before* any buffer is reserved, and
+//!   the frame body is only read after the bound check.
+//! * **Garbage frame bodies** are validated at the fabric edge with
+//!   [`protocol::decode_frame`](crate::protocol::decode_frame) before
+//!   touching local routing: a `CodecError` drops that one frame
+//!   (`rejected_frames` counts it) and KEEPS the connection — framing
+//!   stays aligned, so one corrupt frame cannot poison live sessions.
+//! * **Dead links** are detected two ways — socket EOF/error, or
+//!   heartbeat silence past [`NetOptions::heartbeat_timeout`] — and
+//!   flow into the EXISTING fault path: the supervisor emits
+//!   [`Message::WorkerDown`] for every node the link claimed, so the
+//!   engine suspends affected sessions under its `RetryPolicy` and
+//!   replays them through `SessionReopen` once the peer returns.
+//! * **Reconnect** is capped-exponential: dialed links retry from
+//!   [`NetOptions::reconnect_base`] doubling to
+//!   [`NetOptions::reconnect_cap`]; a successful redial re-HELLOs and
+//!   re-registers routes, and the idempotent session re-open absorbs
+//!   stragglers from before the cut.
+//! * **No unwrap on the I/O path**: every socket-facing failure is a
+//!   typed [`NetError`] threaded through
+//!   [`TransportError::Net`](crate::transport::TransportError::Net)
+//!   into engine results.
+//!
+//! TLS/authentication are explicitly out of scope for now (see the
+//! top-level README threat model): links are crash-fault, not
+//! Byzantine — a hostile peer can be disconnected but not
+//! impersonated-against. The privacy argument does NOT rest on link
+//! secrecy: frames carry secret shares (and, pragmatic mode, plaintext
+//! Hessians that are safe alone); raw records never leave their
+//! institution, and `privlr serve` processes derive session specs
+//! locally ([`session::spec_for_consortium`]
+//! (crate::session::spec_for_consortium)) so specs never cross the
+//! wire either.
+
+use crate::protocol::{Message, NodeId};
+use crate::transport::{NetError, Network, RemoteGateway};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Protocol preamble: magic + version. A peer opening with anything
+/// else is rejected as [`NetError::BadHandshake`].
+pub const PREAMBLE: [u8; 5] = *b"PLRN\x01";
+
+const KIND_HELLO: u8 = 1;
+const KIND_FRAME: u8 = 2;
+const KIND_PING: u8 = 3;
+const KIND_PONG: u8 = 4;
+
+/// Encoded size of one on-wire node address.
+const NODE_WIRE_LEN: usize = 3;
+
+/// Tuning knobs for one [`TcpFabric`]. The defaults match
+/// `ExperimentConfig`'s `net_*` fields; [`NetOptions::from_config`]
+/// maps a config through.
+#[derive(Clone, Copy, Debug)]
+pub struct NetOptions {
+    /// Hard bound on one link frame (kind + payload), bytes. Checked
+    /// BEFORE allocation; an oversized prefix kills the link.
+    pub max_frame_len: usize,
+    /// PING cadence per live link.
+    pub heartbeat_interval: Duration,
+    /// A link with no inbound traffic for this long is declared dead.
+    pub heartbeat_timeout: Duration,
+    /// First redial delay for a failed dialed link (doubles per try).
+    pub reconnect_base: Duration,
+    /// Redial delay ceiling.
+    pub reconnect_cap: Duration,
+    /// Redial attempt budget; 0 = keep trying until shutdown.
+    pub reconnect_max: u32,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            max_frame_len: 64 << 20,
+            heartbeat_interval: Duration::from_millis(500),
+            heartbeat_timeout: Duration::from_millis(2000),
+            reconnect_base: Duration::from_millis(50),
+            reconnect_cap: Duration::from_millis(2000),
+            reconnect_max: 0,
+        }
+    }
+}
+
+impl NetOptions {
+    /// Map an experiment config's `net_*` knobs into fabric options.
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> NetOptions {
+        NetOptions {
+            max_frame_len: cfg.net_max_frame_len,
+            heartbeat_interval: Duration::from_millis(cfg.net_heartbeat_ms),
+            heartbeat_timeout: Duration::from_millis(cfg.net_heartbeat_timeout_ms),
+            reconnect_base: Duration::from_millis(cfg.net_reconnect_base_ms),
+            reconnect_cap: Duration::from_millis(cfg.net_reconnect_cap_ms),
+            reconnect_max: 0,
+        }
+    }
+}
+
+/// Monotonic counters for one fabric — all loads are `Relaxed`
+/// snapshots, suitable for assertions after a quiesce.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Wire frames shipped to remote peers.
+    pub frames_out: u64,
+    /// Wire frames received, validated, and delivered into routing.
+    pub frames_in: u64,
+    /// Wire-frame payload bytes out/in (framing overhead excluded).
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+    /// Received frames whose body failed protocol decoding — dropped,
+    /// link kept.
+    pub rejected_frames: u64,
+    /// Length prefixes above the bound — link killed, nothing
+    /// allocated.
+    pub oversized_frames: u64,
+    /// Established links lost (EOF, I/O error, heartbeat timeout).
+    pub disconnects: u64,
+    /// Successful redials of a lost dialed link.
+    pub reconnects: u64,
+    /// Connections dropped during the preamble/hello phase.
+    pub handshake_failures: u64,
+}
+
+/// One TCP connection to a peer process. The link is bidirectional:
+/// both sides send their HELLO and both can originate frames, so a
+/// consortium needs one connection per process pair, dialed by either
+/// side.
+struct Link {
+    id: u64,
+    /// Serialized writer: one link frame per `write_all`, so concurrent
+    /// forwards never interleave bytes.
+    writer: Mutex<TcpStream>,
+    /// Clone used for `shutdown()` without taking the writer lock.
+    closer: TcpStream,
+    /// Set when this side dialed — the reconnect supervisor redials
+    /// here after a failure.
+    dial_addr: Option<String>,
+    /// Nodes the peer's HELLO claimed.
+    nodes: Mutex<Vec<NodeId>>,
+    /// Milliseconds since the fabric epoch of the last inbound frame.
+    last_rx_ms: AtomicU64,
+    alive: AtomicBool,
+}
+
+struct FabricInner {
+    /// The local network frames are delivered into (and whose injector
+    /// carries `WorkerDown`). Weak: the network owns a strong ref to
+    /// this gateway, and fabric threads must not keep a dead network
+    /// alive.
+    net: Weak<Network>,
+    opts: NetOptions,
+    /// Nodes this process serves — the HELLO sent on every link.
+    local_nodes: Vec<NodeId>,
+    epoch: Instant,
+    routes: Mutex<HashMap<NodeId, Arc<Link>>>,
+    links: Mutex<Vec<Arc<Link>>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    shutdown: AtomicBool,
+    /// Driver-shard count of the supervised engine; 0 = this process
+    /// runs no driver, so link loss emits no `WorkerDown`.
+    driver_shards: AtomicUsize,
+    next_link_id: AtomicU64,
+    frames_out: AtomicU64,
+    frames_in: AtomicU64,
+    bytes_out: AtomicU64,
+    bytes_in: AtomicU64,
+    rejected_frames: AtomicU64,
+    oversized_frames: AtomicU64,
+    disconnects: AtomicU64,
+    reconnects: AtomicU64,
+    handshake_failures: AtomicU64,
+}
+
+/// The TCP transport: owns the listener/link/heartbeat threads and
+/// implements [`RemoteGateway`] over the local [`Network`]. Clone is
+/// cheap (shared inner). Call [`TcpFabric::shutdown`] when done — it
+/// detaches the gateway (breaking the `Network` ↔ fabric cycle),
+/// closes every socket, and joins the threads.
+#[derive(Clone)]
+pub struct TcpFabric {
+    inner: Arc<FabricInner>,
+}
+
+// ---- node & hello wire helpers -------------------------------------------
+
+fn node_to_wire(n: NodeId) -> [u8; NODE_WIRE_LEN] {
+    let (kind, id) = match n {
+        NodeId::Coordinator => (0u8, 0u16),
+        NodeId::Institution(j) => (1, j),
+        NodeId::Center(c) => (2, c),
+        NodeId::Client => (3, 0),
+    };
+    let id = id.to_le_bytes();
+    [kind, id[0], id[1]]
+}
+
+fn node_from_wire(b: &[u8]) -> Result<NodeId, NetError> {
+    let id = u16::from_le_bytes([b[1], b[2]]);
+    match b[0] {
+        0 => Ok(NodeId::Coordinator),
+        1 => Ok(NodeId::Institution(id)),
+        2 => Ok(NodeId::Center(id)),
+        3 => Ok(NodeId::Client),
+        k => Err(NetError::BadNode(k)),
+    }
+}
+
+fn encode_hello(nodes: &[NodeId]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + nodes.len() * NODE_WIRE_LEN);
+    out.extend_from_slice(&(nodes.len() as u16).to_le_bytes());
+    for n in nodes {
+        out.extend_from_slice(&node_to_wire(*n));
+    }
+    out
+}
+
+fn parse_hello(payload: &[u8]) -> Result<Vec<NodeId>, NetError> {
+    if payload.len() < 2 {
+        return Err(NetError::BadHandshake {
+            detail: format!("hello of {} bytes", payload.len()),
+        });
+    }
+    let count = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    if payload.len() != 2 + count * NODE_WIRE_LEN {
+        return Err(NetError::BadHandshake {
+            detail: format!(
+                "hello claims {count} nodes in {} payload bytes",
+                payload.len()
+            ),
+        });
+    }
+    let mut nodes = Vec::with_capacity(count);
+    for i in 0..count {
+        nodes.push(node_from_wire(&payload[2 + i * NODE_WIRE_LEN..])?);
+    }
+    Ok(nodes)
+}
+
+/// `read_exact` that reports HOW the stream died: a clean close at a
+/// frame boundary and a mid-frame cut get distinct typed errors, and
+/// `Interrupted` reads are retried.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), NetError> {
+    let wanted = buf.len();
+    let mut got = 0;
+    while got < wanted {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(NetError::MidFrameEof { got, wanted }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(NetError::Io {
+                    detail: e.to_string(),
+                })
+            }
+        }
+    }
+    Ok(())
+}
+
+impl TcpFabric {
+    /// Build a fabric over `net` claiming `local_nodes` in its HELLOs,
+    /// and install it as the network's [`RemoteGateway`]. No sockets
+    /// yet — follow with [`TcpFabric::listen`] and/or
+    /// [`TcpFabric::connect`].
+    pub fn new(net: &Arc<Network>, local_nodes: Vec<NodeId>, opts: NetOptions) -> TcpFabric {
+        let inner = Arc::new(FabricInner {
+            net: Arc::downgrade(net),
+            opts,
+            local_nodes,
+            epoch: Instant::now(),
+            routes: Mutex::new(HashMap::new()),
+            links: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+            driver_shards: AtomicUsize::new(0),
+            next_link_id: AtomicU64::new(1),
+            frames_out: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            rejected_frames: AtomicU64::new(0),
+            oversized_frames: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            handshake_failures: AtomicU64::new(0),
+        });
+        net.set_gateway(inner.clone());
+        let hb = inner.clone();
+        inner.spawn("net-heartbeat", move || hb.heartbeat_loop());
+        TcpFabric { inner }
+    }
+
+    /// Bind and start accepting peer connections; returns the bound
+    /// address (so `127.0.0.1:0` works in tests).
+    pub fn listen(&self, addr: &str) -> Result<SocketAddr, NetError> {
+        let listener = TcpListener::bind(addr).map_err(|e| NetError::Connect {
+            addr: addr.to_string(),
+            detail: e.to_string(),
+        })?;
+        let bound = listener.local_addr().map_err(|e| NetError::Io {
+            detail: e.to_string(),
+        })?;
+        // Non-blocking accept loop: the listener must observe shutdown
+        // without an interrupting poison connection.
+        listener.set_nonblocking(true).map_err(|e| NetError::Io {
+            detail: e.to_string(),
+        })?;
+        let inner = self.inner.clone();
+        self.inner.spawn("net-accept", move || loop {
+            if inner.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // Accepted sockets inherit non-blocking on some
+                    // platforms; link reads must block.
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let _ = inner.adopt(stream, None);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        });
+        Ok(bound)
+    }
+
+    /// Dial a peer. The connection is supervised: if it later fails, a
+    /// capped-exponential redial loop re-establishes it (unless
+    /// [`NetOptions::reconnect_max`] is exhausted).
+    pub fn connect(&self, addr: &str) -> Result<(), NetError> {
+        self.inner.connect(addr)
+    }
+
+    /// Tell the fabric this process runs the study driver with
+    /// `driver_shards` shards: from now on a lost link emits
+    /// [`Message::WorkerDown`] for each claimed worker node to every
+    /// shard — the exact frames `StudyEngine::kill_institution`
+    /// injects, so remote loss takes the local crash-fault path.
+    pub fn supervise_for_engine(&self, driver_shards: usize) {
+        self.inner
+            .driver_shards
+            .store(driver_shards, Ordering::Relaxed);
+    }
+
+    /// Block until every node in `peers` is claimed by a live link, or
+    /// fail with [`NetError::PeerUnknown`] naming a missing one after
+    /// `timeout`.
+    pub fn await_peers(&self, peers: &[NodeId], timeout: Duration) -> Result<(), NetError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let missing = {
+                let routes = self.inner.routes.lock().unwrap();
+                peers.iter().copied().find(|p| !routes.contains_key(p))
+            };
+            match missing {
+                None => return Ok(()),
+                Some(p) if Instant::now() >= deadline => return Err(NetError::PeerUnknown(p)),
+                Some(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> FabricStats {
+        let i = &self.inner;
+        FabricStats {
+            frames_out: i.frames_out.load(Ordering::Relaxed),
+            frames_in: i.frames_in.load(Ordering::Relaxed),
+            bytes_out: i.bytes_out.load(Ordering::Relaxed),
+            bytes_in: i.bytes_in.load(Ordering::Relaxed),
+            rejected_frames: i.rejected_frames.load(Ordering::Relaxed),
+            oversized_frames: i.oversized_frames.load(Ordering::Relaxed),
+            disconnects: i.disconnects.load(Ordering::Relaxed),
+            reconnects: i.reconnects.load(Ordering::Relaxed),
+            handshake_failures: i.handshake_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Detach from the network, close every socket, join every thread.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        if self.inner.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(net) = self.inner.net.upgrade() {
+            net.clear_gateway();
+        }
+        self.inner.routes.lock().unwrap().clear();
+        for link in self.inner.links.lock().unwrap().drain(..) {
+            link.alive.store(false, Ordering::Relaxed);
+            let _ = link.closer.shutdown(std::net::Shutdown::Both);
+        }
+        let threads: Vec<_> = self.inner.threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl FabricInner {
+    fn spawn<F: FnOnce() + Send + 'static>(self: &Arc<Self>, name: &str, f: F) {
+        if let Ok(h) = std::thread::Builder::new().name(name.to_string()).spawn(f) {
+            self.threads.lock().unwrap().push(h);
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn connect(self: &Arc<Self>, addr: &str) -> Result<(), NetError> {
+        let stream = TcpStream::connect(addr).map_err(|e| NetError::Connect {
+            addr: addr.to_string(),
+            detail: e.to_string(),
+        })?;
+        self.adopt(stream, Some(addr.to_string()))
+    }
+
+    /// Take ownership of a fresh connection (dialed or accepted): send
+    /// our preamble + HELLO synchronously, then hand the read side to a
+    /// dedicated link thread.
+    fn adopt(self: &Arc<Self>, stream: TcpStream, dial_addr: Option<String>) -> Result<(), NetError> {
+        let _ = stream.set_nodelay(true);
+        let closer = stream.try_clone().map_err(|e| NetError::Io {
+            detail: e.to_string(),
+        })?;
+        let mut writer = stream.try_clone().map_err(|e| NetError::Io {
+            detail: e.to_string(),
+        })?;
+        writer.write_all(&PREAMBLE).map_err(|e| NetError::Io {
+            detail: e.to_string(),
+        })?;
+        let link = Arc::new(Link {
+            id: self.next_link_id.fetch_add(1, Ordering::Relaxed),
+            writer: Mutex::new(writer),
+            closer,
+            dial_addr,
+            nodes: Mutex::new(Vec::new()),
+            last_rx_ms: AtomicU64::new(self.now_ms()),
+            alive: AtomicBool::new(true),
+        });
+        self.write_link_frame(&link, KIND_HELLO, &encode_hello(&self.local_nodes))?;
+        self.links.lock().unwrap().push(link.clone());
+        let inner = self.clone();
+        self.spawn("net-link", move || {
+            let mut stream = stream;
+            if let Err(e) = inner.link_loop(&link, &mut stream) {
+                inner.fail_link(&link, e);
+            }
+        });
+        Ok(())
+    }
+
+    /// One serialized link frame: `[len][kind][payload]` in a single
+    /// `write_all` under the writer lock.
+    fn write_link_frame(&self, link: &Link, kind: u8, payload: &[u8]) -> Result<(), NetError> {
+        let len = 1 + payload.len();
+        let mut buf = Vec::with_capacity(4 + len);
+        buf.extend_from_slice(&(len as u32).to_le_bytes());
+        buf.push(kind);
+        buf.extend_from_slice(payload);
+        link.writer
+            .lock()
+            .unwrap()
+            .write_all(&buf)
+            .map_err(|e| NetError::Io {
+                detail: e.to_string(),
+            })
+    }
+
+    /// The per-link read loop: preamble, then frames until death.
+    fn link_loop(self: &Arc<Self>, link: &Arc<Link>, stream: &mut TcpStream) -> Result<(), NetError> {
+        let mut preamble = [0u8; PREAMBLE.len()];
+        read_full(stream, &mut preamble)?;
+        if preamble != PREAMBLE {
+            return Err(NetError::BadHandshake {
+                detail: format!("preamble {preamble:02x?}"),
+            });
+        }
+        let mut header = [0u8; 4];
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            read_full(stream, &mut header)?;
+            let len = u32::from_le_bytes(header) as usize;
+            if len == 0 {
+                return Err(NetError::Io {
+                    detail: "zero-length link frame".to_string(),
+                });
+            }
+            // THE bound: checked before any allocation, so a hostile
+            // 0xFFFFFFFF prefix costs nothing and kills the link.
+            if len > self.opts.max_frame_len {
+                self.oversized_frames.fetch_add(1, Ordering::Relaxed);
+                return Err(NetError::FrameTooLarge {
+                    len,
+                    max: self.opts.max_frame_len,
+                });
+            }
+            let mut frame = vec![0u8; len];
+            read_full(stream, &mut frame)?;
+            link.last_rx_ms.store(self.now_ms(), Ordering::Relaxed);
+            let (kind, payload) = (frame[0], &frame[1..]);
+            match kind {
+                KIND_HELLO => {
+                    let nodes = parse_hello(payload)?;
+                    let mut routes = self.routes.lock().unwrap();
+                    let mut claimed = link.nodes.lock().unwrap();
+                    for n in nodes {
+                        routes.insert(n, link.clone());
+                        if !claimed.contains(&n) {
+                            claimed.push(n);
+                        }
+                    }
+                }
+                KIND_FRAME => {
+                    if payload.len() < 2 * NODE_WIRE_LEN {
+                        // A runt FRAME is a framing-layer violation,
+                        // not a bad protocol body: kill the link.
+                        return Err(NetError::Io {
+                            detail: format!("runt FRAME of {} bytes", payload.len()),
+                        });
+                    }
+                    let from = node_from_wire(&payload[..NODE_WIRE_LEN])?;
+                    let to = node_from_wire(&payload[NODE_WIRE_LEN..2 * NODE_WIRE_LEN])?;
+                    let body = &payload[2 * NODE_WIRE_LEN..];
+                    // Validate at the edge: a corrupt body rejects THIS
+                    // frame only — the length prefix already told us
+                    // where the next frame starts, so the link
+                    // survives.
+                    if crate::protocol::decode_frame(body).is_err() {
+                        self.rejected_frames.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    self.frames_in.fetch_add(1, Ordering::Relaxed);
+                    self.bytes_in.fetch_add(body.len() as u64, Ordering::Relaxed);
+                    if let Some(net) = self.net.upgrade() {
+                        // Best-effort: a frame for a node that died
+                        // locally mid-fit is dropped, exactly like the
+                        // in-memory transport drops sends to killed
+                        // endpoints.
+                        let _ = net.deliver_wire(from, to, body.to_vec());
+                    }
+                }
+                KIND_PING => {
+                    self.write_link_frame(link, KIND_PONG, &[])?;
+                }
+                KIND_PONG => {}
+                k => {
+                    return Err(NetError::Io {
+                        detail: format!("unknown link frame kind {k}"),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Tear down a dead link exactly once: routes out, stats counted,
+    /// `WorkerDown` emitted (when supervising), redial scheduled (when
+    /// we dialed). The `err` is what killed it — used only for
+    /// classification and logging, the engine sees `WorkerDown`.
+    fn fail_link(self: &Arc<Self>, link: &Arc<Link>, err: NetError) {
+        if !link.alive.swap(false, Ordering::SeqCst) {
+            return;
+        }
+        let _ = link.closer.shutdown(std::net::Shutdown::Both);
+        let claimed: Vec<NodeId> = link.nodes.lock().unwrap().clone();
+        {
+            let mut routes = self.routes.lock().unwrap();
+            routes.retain(|_, l| l.id != link.id);
+        }
+        self.links.lock().unwrap().retain(|l| l.id != link.id);
+        if self.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if claimed.is_empty() {
+            // Never got a valid HELLO: a scanner, a garbage peer, or a
+            // wrong-version client — not a worker loss.
+            self.handshake_failures.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+        let shards = self.driver_shards.load(Ordering::Relaxed);
+        if shards > 0 {
+            if let Some(net) = self.net.upgrade() {
+                let injector = net.injector(NodeId::Client);
+                for n in &claimed {
+                    let (node, is_center) = match n {
+                        NodeId::Institution(j) => (*j, false),
+                        NodeId::Center(c) => (*c, true),
+                        _ => continue,
+                    };
+                    for shard in 0..shards {
+                        let _ = injector.send_to_shard(
+                            NodeId::Coordinator,
+                            shard,
+                            &Message::WorkerDown { node, is_center },
+                        );
+                    }
+                }
+            }
+        }
+        if let Some(addr) = link.dial_addr.clone() {
+            let inner = self.clone();
+            self.spawn("net-redial", move || inner.redial_loop(addr, err));
+        }
+    }
+
+    /// Capped-exponential redial of a lost dialed link. Runs until
+    /// success, budget exhaustion, or shutdown; sleeps in short slices
+    /// so shutdown is never blocked behind a backoff.
+    fn redial_loop(self: &Arc<Self>, addr: String, _cause: NetError) {
+        let mut delay = self.opts.reconnect_base;
+        let mut attempts = 0u32;
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            if self.opts.reconnect_max != 0 && attempts >= self.opts.reconnect_max {
+                return;
+            }
+            attempts += 1;
+            match self.connect(&addr) {
+                Ok(()) => {
+                    self.reconnects.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(_) => {
+                    let deadline = Instant::now() + delay;
+                    while Instant::now() < deadline {
+                        if self.shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    delay = (delay * 2).min(self.opts.reconnect_cap);
+                }
+            }
+        }
+    }
+
+    /// PING every live link on the configured cadence and declare links
+    /// silent past the timeout dead — the detection path for a peer
+    /// that vanished without a FIN (power loss, partition).
+    fn heartbeat_loop(self: Arc<Self>) {
+        loop {
+            let deadline = Instant::now() + self.opts.heartbeat_interval;
+            while Instant::now() < deadline {
+                if self.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            let links: Vec<Arc<Link>> = self.links.lock().unwrap().clone();
+            let now = self.now_ms();
+            let timeout_ms = self.opts.heartbeat_timeout.as_millis() as u64;
+            for link in links {
+                if !link.alive.load(Ordering::Relaxed) {
+                    continue;
+                }
+                let silent_ms = now.saturating_sub(link.last_rx_ms.load(Ordering::Relaxed));
+                if silent_ms > timeout_ms {
+                    let peer = link
+                        .nodes
+                        .lock()
+                        .unwrap()
+                        .first()
+                        .copied()
+                        .unwrap_or(NodeId::Client);
+                    self.fail_link(&link, NetError::HeartbeatTimeout { peer, silent_ms });
+                } else if let Err(e) = self.write_link_frame(&link, KIND_PING, &[]) {
+                    self.fail_link(&link, e);
+                }
+            }
+        }
+    }
+}
+
+impl RemoteGateway for FabricInner {
+    fn owns(&self, to: NodeId) -> bool {
+        self.routes.lock().unwrap().contains_key(&to)
+    }
+
+    fn forward(&self, from: NodeId, to: NodeId, bytes: &[u8]) -> Result<(), NetError> {
+        let link = self
+            .routes
+            .lock()
+            .unwrap()
+            .get(&to)
+            .cloned()
+            .ok_or(NetError::PeerUnknown(to))?;
+        let mut payload = Vec::with_capacity(2 * NODE_WIRE_LEN + bytes.len());
+        payload.extend_from_slice(&node_to_wire(from));
+        payload.extend_from_slice(&node_to_wire(to));
+        payload.extend_from_slice(bytes);
+        // This is called from driver/worker send paths: a write failure
+        // fails THIS send (typed, so the engine can suspend the
+        // session) and poisons the socket; the link's own reader thread
+        // observes the closed socket and runs the full teardown
+        // (routes, `WorkerDown`, redial) with its `Arc` handle.
+        match self.write_link_frame(&link, KIND_FRAME, &payload) {
+            Ok(()) => {
+                self.frames_out.fetch_add(1, Ordering::Relaxed);
+                self.bytes_out.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                let _ = link.closer.shutdown(std::net::Shutdown::Both);
+                Err(e)
+            }
+        }
+    }
+}
+
+// ---- serve: one consortium process ---------------------------------------
+
+/// Which consortium member this OS process is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// The study driver: submits K sessions, reconstructs β̂.
+    Coordinator,
+    /// Data-owning institution `j`: computes local stats, ships shares.
+    Institution(u16),
+    /// Share-holding computation center `c`.
+    Center(u16),
+}
+
+impl Role {
+    /// Parse `--role <coordinator|institution|center>` with `--id <n>`.
+    pub fn parse(role: &str, id: u16) -> anyhow::Result<Role> {
+        match role.to_ascii_lowercase().as_str() {
+            "coordinator" => Ok(Role::Coordinator),
+            "institution" => Ok(Role::Institution(id)),
+            "center" => Ok(Role::Center(id)),
+            other => anyhow::bail!("unknown role {other:?} (coordinator|institution|center)"),
+        }
+    }
+
+    fn node(self) -> NodeId {
+        match self {
+            Role::Coordinator => NodeId::Coordinator,
+            Role::Institution(j) => NodeId::Institution(j),
+            Role::Center(c) => NodeId::Center(c),
+        }
+    }
+}
+
+/// `privlr serve` inputs beyond the experiment config.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub role: Role,
+    /// Address to bind (`host:port`; port 0 picks one).
+    pub listen: String,
+    /// Peer addresses to dial. Convention: institutions dial the
+    /// coordinator and every center; centers dial the coordinator; the
+    /// coordinator dials no one (everyone reaches it). Any mesh whose
+    /// links cover coordinator↔worker and institution→center pairs
+    /// works — connections are bidirectional.
+    pub peers: Vec<String>,
+    /// Number of study sessions (K). Every process must agree: the
+    /// engine numbers sessions 1..=K in submission order and workers
+    /// pre-register specs under exactly those ids.
+    pub sessions: u32,
+}
+
+/// Run one consortium process until its work completes: workers serve
+/// until the coordinator's engine ships them `Shutdown`, the
+/// coordinator runs K fits and prints each β̂. Returns the fitted betas
+/// on the coordinator (empty vec on workers) so callers/tests can
+/// assert on them.
+///
+/// Data never crosses the wire: every process derives the dataset from
+/// the shared config (simulation convention — a deployment points each
+/// institution at its own records) and registers session specs locally
+/// via [`spec_for_consortium`](crate::session::spec_for_consortium);
+/// only protocol frames travel. The coordinator holds zero-row shards,
+/// so β̂ is reconstructed purely from the centers' aggregate shares —
+/// bit-identical to the in-memory transport because every share stream
+/// derives from `(seed, session, institution)` alone.
+pub fn serve(
+    cfg: &crate::config::ExperimentConfig,
+    sc: &ServeConfig,
+) -> anyhow::Result<Vec<Vec<f64>>> {
+    cfg.validate()?;
+    anyhow::ensure!(sc.sessions >= 1, "--sessions must be >= 1");
+    let ds = cfg.dataset.load(cfg.seed)?;
+    let institutions = ds.num_institutions();
+    let centers = cfg.num_centers;
+    let d = ds.d();
+    let opts = NetOptions::from_config(cfg);
+    match sc.role {
+        Role::Coordinator => {
+            let engine = crate::engine::StudyEngine::with_remote_workers(
+                institutions,
+                centers,
+                crate::engine::EngineOptions {
+                    max_in_flight: cfg.max_in_flight,
+                    auto_retire: cfg.auto_retire,
+                    driver_shards: cfg.driver_shards,
+                    lane_capacity: cfg.lane_capacity,
+                    retry: crate::engine::RetryPolicy {
+                        max_retries: cfg.retry_max,
+                        backoff: Duration::from_millis(cfg.retry_backoff_ms),
+                        on_exhausted: cfg.retry_on_exhausted,
+                    },
+                },
+            )?;
+            let fabric = TcpFabric::new(&engine.network(), vec![NodeId::Coordinator], opts);
+            let bound = fabric.listen(&sc.listen).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!(
+                "coordinator listening on {bound} — {institutions} institutions, \
+                 {centers} centers, K={} sessions",
+                sc.sessions
+            );
+            for p in &sc.peers {
+                fabric.connect(p).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            fabric.supervise_for_engine(engine.driver_shards());
+            let mut workers: Vec<NodeId> = (0..institutions)
+                .map(|j| NodeId::Institution(j as u16))
+                .collect();
+            workers.extend((0..centers).map(|c| NodeId::Center(c as u16)));
+            fabric
+                .await_peers(&workers, Duration::from_secs(120))
+                .map_err(|e| anyhow::anyhow!("waiting for consortium peers: {e}"))?;
+            let shards = crate::session::consortium_shards(institutions, d, None);
+            let handles: Vec<_> = (0..sc.sessions)
+                .map(|_| {
+                    engine.submit_shared(
+                        cfg,
+                        shards.clone(),
+                        crate::engine::SubmitOptions::batch(),
+                    )
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let mut betas = Vec::with_capacity(handles.len());
+            for h in handles {
+                let session = h.session_id();
+                let fit = h.join()?;
+                println!("session {session}: {} iterations", fit.metrics.iterations);
+                for (i, b) in fit.beta.iter().enumerate() {
+                    println!("  β_{i} = {b:+.8}");
+                }
+                betas.push(fit.beta);
+            }
+            engine.shutdown()?;
+            fabric.shutdown();
+            Ok(betas)
+        }
+        Role::Institution(_) | Role::Center(_) => {
+            let node = sc.role.node();
+            let registry = crate::session::SessionRegistry::new();
+            // Only an institution materializes shard data — centers
+            // register topology-only specs (all zero-row shards).
+            let own_shard = match sc.role {
+                Role::Institution(j) => {
+                    anyhow::ensure!(
+                        (j as usize) < institutions,
+                        "institution {j} outside topology of {institutions}"
+                    );
+                    Some((
+                        j as usize,
+                        crate::session::ShardData::split(&ds)[j as usize].clone(),
+                    ))
+                }
+                _ => None,
+            };
+            for s in 1..=sc.sessions {
+                registry.insert(crate::session::spec_for_consortium(
+                    s,
+                    cfg,
+                    crate::session::consortium_shards(institutions, d, own_shard.clone()),
+                )?);
+            }
+            let net = Network::new();
+            let ep = net.register(node);
+            let fabric = TcpFabric::new(&net, vec![node], opts);
+            let bound = fabric.listen(&sc.listen).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("{node} listening on {bound} — K={} sessions pre-registered", sc.sessions);
+            for p in &sc.peers {
+                fabric.connect(p).map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            let gauge = Arc::new(AtomicUsize::new(0));
+            let served = match sc.role {
+                Role::Institution(j) => crate::institution::run_institution_worker(
+                    crate::institution::InstitutionWorkerConfig {
+                        institution_id: j,
+                        registry,
+                        engine: crate::runtime::ComputeHandle::rust(),
+                        live_sessions: gauge,
+                    },
+                    ep,
+                ),
+                Role::Center(c) => crate::center::run_center_worker(
+                    crate::center::CenterWorkerConfig {
+                        center_id: c,
+                        registry,
+                        live_sessions: gauge,
+                    },
+                    ep,
+                ),
+                Role::Coordinator => unreachable!(),
+            };
+            fabric.shutdown();
+            served?;
+            Ok(Vec::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::CONTROL_SESSION;
+
+    #[test]
+    fn node_wire_roundtrip_and_bad_kind() {
+        for n in [
+            NodeId::Coordinator,
+            NodeId::Institution(0),
+            NodeId::Institution(513),
+            NodeId::Center(7),
+            NodeId::Client,
+        ] {
+            assert_eq!(node_from_wire(&node_to_wire(n)).unwrap(), n);
+        }
+        assert_eq!(
+            node_from_wire(&[9, 0, 0]).unwrap_err(),
+            NetError::BadNode(9)
+        );
+    }
+
+    #[test]
+    fn hello_roundtrip_and_bounds() {
+        let nodes = vec![NodeId::Institution(2), NodeId::Center(1)];
+        assert_eq!(parse_hello(&encode_hello(&nodes)).unwrap(), nodes);
+        assert_eq!(parse_hello(&encode_hello(&[])).unwrap(), vec![]);
+        // A count that disagrees with the payload length is typed.
+        let mut bad = encode_hello(&nodes);
+        bad[0] = 200;
+        assert!(matches!(
+            parse_hello(&bad).unwrap_err(),
+            NetError::BadHandshake { .. }
+        ));
+        assert!(parse_hello(&[1]).is_err());
+    }
+
+    /// Two in-process "processes" over loopback TCP: a control frame
+    /// sent on network B to a node owned by network A crosses the
+    /// fabric and lands in A's mailbox with sender intact.
+    #[test]
+    fn loopback_forward_delivers_to_remote_endpoint() {
+        let net_a = Network::new();
+        let ep = net_a.register(NodeId::Institution(0));
+        let fabric_a = TcpFabric::new(&net_a, vec![NodeId::Institution(0)], NetOptions::default());
+        let addr = fabric_a.listen("127.0.0.1:0").unwrap();
+
+        let net_b = Network::new();
+        let fabric_b = TcpFabric::new(&net_b, vec![NodeId::Coordinator], NetOptions::default());
+        fabric_b.connect(&addr.to_string()).unwrap();
+        fabric_b
+            .await_peers(&[NodeId::Institution(0)], Duration::from_secs(10))
+            .unwrap();
+
+        net_b
+            .injector(NodeId::Coordinator)
+            .send(NodeId::Institution(0), &Message::Shutdown)
+            .unwrap();
+        let (from, session, msg) = ep.recv_session().unwrap();
+        assert_eq!(from, NodeId::Coordinator);
+        assert_eq!(session, CONTROL_SESSION);
+        assert_eq!(msg, Message::Shutdown);
+        assert_eq!(fabric_b.stats().frames_out, 1);
+        // The receive side counts it too (poll: delivery is async).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fabric_a.stats().frames_in < 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(fabric_a.stats().frames_in, 1);
+        fabric_b.shutdown();
+        fabric_a.shutdown();
+    }
+
+    fn wait_for(mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "condition never held");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// A hostile length prefix kills the link before any allocation and
+    /// the fabric keeps serving other peers.
+    #[test]
+    fn oversized_length_prefix_kills_link_without_allocating() {
+        let net = Network::new();
+        let fabric = TcpFabric::new(&net, vec![NodeId::Coordinator], NetOptions::default());
+        let addr = fabric.listen("127.0.0.1:0").unwrap();
+
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&PREAMBLE).unwrap();
+        raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        wait_for(|| fabric.stats().oversized_frames == 1);
+        // The killed link reads back as EOF on the raw side.
+        let mut sink = [0u8; 64];
+        loop {
+            match raw.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+        // The fabric is not poisoned: a well-behaved peer still works.
+        let net_b = Network::new();
+        let fabric_b = TcpFabric::new(&net_b, vec![NodeId::Institution(1)], NetOptions::default());
+        fabric_b.connect(&addr.to_string()).unwrap();
+        wait_for(|| fabric.inner.routes.lock().unwrap().contains_key(&NodeId::Institution(1)));
+        fabric_b.shutdown();
+        fabric.shutdown();
+    }
+
+    /// A garbage FRAME body is dropped (typed, counted) while the link
+    /// stays up — proven by a PING answered afterwards.
+    #[test]
+    fn garbage_frame_body_is_rejected_but_link_survives() {
+        let net = Network::new();
+        let fabric = TcpFabric::new(&net, vec![NodeId::Coordinator], NetOptions::default());
+        let addr = fabric.listen("127.0.0.1:0").unwrap();
+
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&PREAMBLE).unwrap();
+        // Consume the fabric's own preamble + HELLO so later reads see
+        // only our PONG.
+        let mut buf = [0u8; PREAMBLE.len()];
+        raw.read_exact(&mut buf).unwrap();
+        assert_eq!(buf, PREAMBLE);
+        let mut hdr = [0u8; 4];
+        raw.read_exact(&mut hdr).unwrap();
+        let mut hello = vec![0u8; u32::from_le_bytes(hdr) as usize];
+        raw.read_exact(&mut hello).unwrap();
+        assert_eq!(hello[0], KIND_HELLO);
+
+        // FRAME with plausible from/to but a garbage wire body.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&node_to_wire(NodeId::Institution(0)));
+        payload.extend_from_slice(&node_to_wire(NodeId::Coordinator));
+        payload.extend_from_slice(&[0xAB; 16]);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&((1 + payload.len()) as u32).to_le_bytes());
+        frame.push(KIND_FRAME);
+        frame.extend_from_slice(&payload);
+        raw.write_all(&frame).unwrap();
+        wait_for(|| fabric.stats().rejected_frames == 1);
+
+        // Link alive: PING comes back PONG. The fabric's own heartbeat
+        // PINGs may interleave on the wire — skip them.
+        raw.write_all(&1u32.to_le_bytes()).unwrap();
+        raw.write_all(&[KIND_PING]).unwrap();
+        loop {
+            let mut hdr = [0u8; 4];
+            raw.read_exact(&mut hdr).unwrap();
+            let mut body = vec![0u8; u32::from_le_bytes(hdr) as usize];
+            raw.read_exact(&mut body).unwrap();
+            if body[0] == KIND_PONG {
+                break;
+            }
+            assert_eq!(body[0], KIND_PING, "only heartbeats may interleave");
+        }
+        assert_eq!(fabric.stats().disconnects, 0);
+        fabric.shutdown();
+    }
+
+    /// A wrong preamble is a handshake failure, not a worker loss.
+    #[test]
+    fn bad_preamble_counts_handshake_failure() {
+        let net = Network::new();
+        let fabric = TcpFabric::new(&net, vec![NodeId::Coordinator], NetOptions::default());
+        let addr = fabric.listen("127.0.0.1:0").unwrap();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"HTTP/").unwrap();
+        wait_for(|| fabric.stats().handshake_failures == 1);
+        assert_eq!(fabric.stats().disconnects, 0);
+        fabric.shutdown();
+    }
+
+    /// Losing an established link emits `WorkerDown` for every claimed
+    /// node to every driver shard — the exact frames `kill_institution`
+    /// injects, so the engine's crash-fault path is reused unchanged.
+    #[test]
+    fn disconnect_emits_worker_down_to_every_driver_shard() {
+        let net_a = Network::new();
+        let shards = net_a.register_sharded(NodeId::Coordinator, 2);
+        let fabric_a = TcpFabric::new(&net_a, vec![NodeId::Coordinator], NetOptions::default());
+        fabric_a.supervise_for_engine(2);
+        let addr = fabric_a.listen("127.0.0.1:0").unwrap();
+
+        let net_b = Network::new();
+        let fabric_b = TcpFabric::new(&net_b, vec![NodeId::Institution(3)], NetOptions::default());
+        fabric_b.connect(&addr.to_string()).unwrap();
+        wait_for(|| fabric_a.inner.routes.lock().unwrap().contains_key(&NodeId::Institution(3)));
+
+        fabric_b.shutdown();
+        for ep in &shards {
+            let (from, session, msg) = ep
+                .recv_session_timeout(Duration::from_secs(10))
+                .unwrap()
+                .expect("driver shard should hear about the lost worker");
+            assert_eq!(from, NodeId::Client);
+            assert_eq!(session, CONTROL_SESSION);
+            assert_eq!(
+                msg,
+                Message::WorkerDown {
+                    node: 3,
+                    is_center: false
+                }
+            );
+        }
+        assert_eq!(fabric_a.stats().disconnects, 1);
+        assert!(!fabric_a.inner.owns(NodeId::Institution(3)));
+        fabric_a.shutdown();
+    }
+
+    /// Role parsing for the serve CLI.
+    #[test]
+    fn role_parse() {
+        assert_eq!(Role::parse("coordinator", 0).unwrap(), Role::Coordinator);
+        assert_eq!(Role::parse("Institution", 2).unwrap(), Role::Institution(2));
+        assert_eq!(Role::parse("center", 1).unwrap(), Role::Center(1));
+        assert!(Role::parse("auditor", 0).is_err());
+    }
+}

@@ -223,7 +223,7 @@ impl Message {
 }
 
 /// Codec errors.
-#[derive(Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CodecError {
     /// The buffer ended before the message did.
     Truncated {
@@ -338,8 +338,24 @@ impl<'a> Reader<'a> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    /// Bound-check a declared element count against the bytes actually
+    /// present BEFORE allocating. A hostile length prefix (u32::MAX in
+    /// a 20-byte frame) must fail as `Truncated`, not reserve ~32 GiB:
+    /// untrusted sockets hand us these buffers verbatim, so allocation
+    /// is only ever proportional to the received frame, never to a
+    /// claimed length.
+    fn check_len(&self, n: usize, elem_size: usize) -> Result<(), CodecError> {
+        let remaining = self.buf.len() - self.pos;
+        let need = n.saturating_mul(elem_size);
+        if need > remaining {
+            return Err(CodecError::Truncated { at: self.pos, wanted: need - remaining });
+        }
+        Ok(())
+    }
+
     fn f64s(&mut self) -> Result<Vec<f64>, CodecError> {
         let n = self.u32()? as usize;
+        self.check_len(n, 8)?;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.f64()?);
@@ -357,6 +373,7 @@ impl<'a> Reader<'a> {
 
     fn fps(&mut self) -> Result<Vec<Fp>, CodecError> {
         let n = self.u32()? as usize;
+        self.check_len(n, 8)?;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.fp()?);
@@ -816,6 +833,34 @@ mod tests {
         let mut extended = bytes.clone();
         extended.push(0);
         assert!(decode(&extended).is_err());
+    }
+
+    /// A hostile length prefix must fail the pre-allocation bound
+    /// check, not drive `Vec::with_capacity` toward the claimed size.
+    /// Both vector readers (f64s via BetaBroadcast, fps via a shared
+    /// submission) are exercised with a u32::MAX count in a tiny frame.
+    #[test]
+    fn decode_rejects_hostile_length_prefix_without_allocating() {
+        // BetaBroadcast: tag, iter, then a claimed 4 Gi-element vector.
+        let mut bytes = vec![TAG_BETA];
+        bytes.extend_from_slice(&7u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]); // far fewer than claimed
+        match decode(&bytes) {
+            Err(CodecError::Truncated { at, wanted }) => {
+                assert_eq!(at, bytes.len() - 16);
+                assert_eq!(wanted, (u32::MAX as usize) * 8 - 16);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+
+        // ShareSubmission g_share (fps reader): same hostile count.
+        let mut bytes = vec![TAG_SUBMIT];
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // iter
+        bytes.extend_from_slice(&0u16.to_le_bytes()); // institution
+        bytes.push(2); // HTAG_ABSENT
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // g_share len
+        assert!(matches!(decode(&bytes), Err(CodecError::Truncated { .. })));
     }
 
     #[test]

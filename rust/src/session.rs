@@ -56,6 +56,70 @@ impl ShardData {
             })
             .collect()
     }
+
+    /// A zero-row shard of dimension `d` — the placeholder a remote
+    /// consortium process uses for every institution whose data it does
+    /// NOT hold (see [`consortium_shards`]). It carries the model
+    /// dimension (`SessionSpec::d` reads the first shard's column
+    /// count) but no records, keeping the privacy invariant structural:
+    /// a process physically cannot leak rows it never loaded.
+    pub fn empty(d: usize) -> Arc<ShardData> {
+        Arc::new(ShardData {
+            x: Matrix::zeros(0, d),
+            y: Vec::new(),
+        })
+    }
+}
+
+/// The shard vector one remote consortium process (`privlr serve`)
+/// registers for a session: institution `own`'s real shard in its slot,
+/// zero-row placeholders of the same dimension everywhere else — or all
+/// placeholders for processes holding no data (coordinator, centers).
+/// Every process's spec then agrees on topology (`num_institutions`,
+/// `d`) while raw records never leave the institution that owns them;
+/// β̂ stays bit-identical to the in-memory run because shares derive
+/// from `(master_seed, session, institution)` alone, never from which
+/// process evaluated them.
+pub fn consortium_shards(
+    total: usize,
+    d: usize,
+    own: Option<(usize, Arc<ShardData>)>,
+) -> Vec<Arc<ShardData>> {
+    let mut shards: Vec<Arc<ShardData>> = (0..total).map(|_| ShardData::empty(d)).collect();
+    if let Some((j, shard)) = own {
+        assert!(j < total, "institution {j} outside topology of {total}");
+        assert_eq!(shard.x.cols, d, "own shard dimension mismatch");
+        shards[j] = shard;
+    }
+    shards
+}
+
+/// Derive the [`SessionSpec`] a `privlr serve` process registers for
+/// one session of a remote consortium — the exact mirror of what
+/// `StudyEngine::submit_shared` builds on the coordinator, minus the
+/// data: sessions are numbered 1..=K in submission order (the engine's
+/// counter starts at 1), and every field is a pure function of the
+/// shared [`ExperimentConfig`](crate::config::ExperimentConfig), so
+/// specs never cross the wire. Workers fold shares bit-identically
+/// because the share seed ([`SessionSpec::institution_share_seed`])
+/// depends only on `(cfg.seed, session, institution)`.
+pub fn spec_for_consortium(
+    session: SessionId,
+    cfg: &crate::config::ExperimentConfig,
+    shards: Vec<Arc<ShardData>>,
+) -> anyhow::Result<Arc<SessionSpec>> {
+    cfg.validate()?;
+    let params = ShamirParams::new(cfg.threshold, cfg.num_centers)?;
+    Ok(Arc::new(SessionSpec::new(
+        session,
+        shards,
+        params,
+        FixedCodec::new(cfg.frac_bits),
+        cfg.mode.is_full(),
+        cfg.kernel_threads,
+        crate::simd::resolve(cfg.kernel_isa),
+        cfg.seed,
+    )))
 }
 
 /// Out-of-band per-institution telemetry cells (nanosecond totals);

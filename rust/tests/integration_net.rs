@@ -1,0 +1,405 @@
+//! TCP-transport gates (`--features net`): the consortium over real
+//! loopback sockets, one "process" per worker (its own `Network`,
+//! `SessionRegistry`, and `TcpFabric` — nothing shared with the
+//! coordinator but the wire).
+//!
+//! Three invariants:
+//!
+//! * **Bit-identity** — a loopback-TCP consortium fit reconstructs a β̂
+//!   byte-identical to the in-memory transport, at 1 AND 2 driver
+//!   shards. Specs never cross the wire: each worker derives its own
+//!   from the shared config via `spec_for_consortium`, holding only its
+//!   own shard's rows.
+//! * **Crash-fault reuse** — killing an institution's sockets mid-fit
+//!   flows through `WorkerDown` → `Suspended` → retry/backoff →
+//!   `SessionReopen` replay exactly like a local worker crash, and a
+//!   freshly attached replacement process finishes the fit with the
+//!   same bytes. Zero session-state leaks on every survivor.
+//! * **Hostile peers are inert** — raw sockets feeding garbage frame
+//!   bodies and hostile length prefixes at a coordinator mid-fit are
+//!   rejected (typed, counted, nothing allocated) without poisoning the
+//!   live session or miscounting as worker loss.
+
+#![cfg(feature = "net")]
+
+use privlr::config::{ExperimentConfig, OnExhausted, SecurityMode};
+use privlr::data::{synthetic, Dataset};
+use privlr::engine::{EngineOptions, Lifecycle, RetryPolicy, StudyEngine, SubmitOptions};
+use privlr::net::{NetOptions, TcpFabric, PREAMBLE};
+use privlr::protocol::{Message, NodeId};
+use privlr::session::{consortium_shards, spec_for_consortium, SessionRegistry, ShardData};
+use privlr::transport::Network;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// Link-frame kinds as documented in `net.rs`'s module doc — the raw
+// hostile peers below speak the protocol off the documentation, as an
+// attacker would.
+const KIND_HELLO: u8 = 1;
+const KIND_FRAME: u8 = 2;
+
+fn cfg_3c() -> ExperimentConfig {
+    ExperimentConfig {
+        num_centers: 3,
+        threshold: 2,
+        max_iters: 30,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Full-security config: the shared-Hessian fit is heavy enough that
+/// mid-fit interference (socket kills, hostile frames) reliably lands
+/// while the session is still running.
+fn heavy_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        mode: SecurityMode::Full,
+        ..cfg_3c()
+    }
+}
+
+fn await_lifecycle(engine: &StudyEngine, sid: u32, want: Lifecycle) {
+    let t0 = Instant::now();
+    while engine.lifecycle(sid) != Some(want) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "session {sid} never reached {want:?} (now {:?})",
+            engine.lifecycle(sid)
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// One worker "process": its own network, registry, fabric, and worker
+/// loop thread — reachable only through TCP.
+struct RemoteWorker {
+    node: NodeId,
+    addr: SocketAddr,
+    net: Arc<Network>,
+    fabric: TcpFabric,
+    gauge: Arc<AtomicUsize>,
+    thread: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+impl RemoteWorker {
+    /// Derive specs for sessions `1..=sessions` locally (own shard
+    /// only), listen, dial `dial`, and run the worker loop on a thread.
+    fn spawn(
+        node: NodeId,
+        cfg: &ExperimentConfig,
+        ds: &Dataset,
+        sessions: u32,
+        dial: &[SocketAddr],
+    ) -> RemoteWorker {
+        let institutions = ds.num_institutions();
+        let d = ds.d();
+        let own = match node {
+            NodeId::Institution(j) => {
+                Some((j as usize, ShardData::split(ds)[j as usize].clone()))
+            }
+            _ => None,
+        };
+        let registry = SessionRegistry::new();
+        for s in 1..=sessions {
+            registry.insert(
+                spec_for_consortium(s, cfg, consortium_shards(institutions, d, own.clone()))
+                    .unwrap(),
+            );
+        }
+        let net = Network::new();
+        let ep = net.register(node);
+        let fabric = TcpFabric::new(&net, vec![node], NetOptions::default());
+        let addr = fabric.listen("127.0.0.1:0").unwrap();
+        for a in dial {
+            fabric.connect(&a.to_string()).unwrap();
+        }
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let g = gauge.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("test-worker-{node}"))
+            .spawn(move || match node {
+                NodeId::Institution(j) => privlr::institution::run_institution_worker(
+                    privlr::institution::InstitutionWorkerConfig {
+                        institution_id: j,
+                        registry,
+                        engine: privlr::runtime::ComputeHandle::rust(),
+                        live_sessions: g,
+                    },
+                    ep,
+                ),
+                NodeId::Center(c) => privlr::center::run_center_worker(
+                    privlr::center::CenterWorkerConfig {
+                        center_id: c,
+                        registry,
+                        live_sessions: g,
+                    },
+                    ep,
+                ),
+                other => panic!("not a worker role: {other}"),
+            })
+            .unwrap();
+        RemoteWorker { node, addr, net, fabric, gauge, thread }
+    }
+
+    /// Stop the worker loop even when its TCP links are long gone: the
+    /// engine's over-the-wire `Shutdown` is best-effort, so inject one
+    /// locally too (harmless duplicate when the wire one landed).
+    fn stop(self) -> anyhow::Result<()> {
+        let _ = self
+            .net
+            .injector(NodeId::Coordinator)
+            .send(self.node, &Message::Shutdown);
+        let res = self.thread.join().expect("worker thread panicked");
+        self.fabric.shutdown();
+        res
+    }
+}
+
+/// A coordinator-side consortium: remote-worker engine + fabric, with
+/// every worker process spawned, dialed in, and awaited. Topology
+/// mirrors `privlr serve`: centers and the coordinator listen,
+/// institutions dial the coordinator and every center, centers dial the
+/// coordinator.
+struct Consortium {
+    engine: StudyEngine,
+    fabric: TcpFabric,
+    coord_addr: SocketAddr,
+    center_addrs: Vec<SocketAddr>,
+    workers: Vec<RemoteWorker>,
+}
+
+impl Consortium {
+    fn start(cfg: &ExperimentConfig, ds: &Dataset, driver_shards: usize, sessions: u32) -> Consortium {
+        let institutions = ds.num_institutions();
+        let centers = cfg.num_centers;
+        let engine = StudyEngine::with_remote_workers(
+            institutions,
+            centers,
+            EngineOptions {
+                driver_shards,
+                retry: RetryPolicy {
+                    max_retries: 500,
+                    backoff: Duration::from_millis(20),
+                    on_exhausted: OnExhausted::Abort,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fabric = TcpFabric::new(&engine.network(), vec![NodeId::Coordinator], NetOptions::default());
+        let coord_addr = fabric.listen("127.0.0.1:0").unwrap();
+        fabric.supervise_for_engine(engine.driver_shards());
+
+        let mut workers = Vec::new();
+        let mut center_addrs = Vec::new();
+        for c in 0..centers {
+            let w = RemoteWorker::spawn(NodeId::Center(c as u16), cfg, ds, sessions, &[coord_addr]);
+            center_addrs.push(w.addr);
+            workers.push(w);
+        }
+        for j in 0..institutions {
+            let mut dial = vec![coord_addr];
+            dial.extend(center_addrs.iter().copied());
+            workers.push(RemoteWorker::spawn(
+                NodeId::Institution(j as u16),
+                cfg,
+                ds,
+                sessions,
+                &dial,
+            ));
+        }
+        let expected: Vec<NodeId> = workers.iter().map(|w| w.node).collect();
+        fabric
+            .await_peers(&expected, Duration::from_secs(60))
+            .expect("consortium never fully connected");
+        Consortium { engine, fabric, coord_addr, center_addrs, workers }
+    }
+
+    /// Leak gates + orderly teardown. `skip_gauge` names workers whose
+    /// gauge must NOT be asserted (a killed process legitimately holds
+    /// the state its replacement replayed past).
+    fn finish(self, skip_gauge: &[NodeId]) {
+        assert_eq!(self.engine.live_specs(), 0, "coordinator leaked session specs");
+        // Ships `Shutdown` to every remote worker over the live links.
+        self.engine.shutdown().unwrap();
+        for w in self.workers {
+            if !skip_gauge.contains(&w.node) {
+                assert_eq!(
+                    w.gauge.load(Ordering::Relaxed),
+                    0,
+                    "worker {} leaked session state",
+                    w.node
+                );
+            }
+            w.stop().unwrap();
+        }
+        self.fabric.shutdown();
+    }
+}
+
+/// In-memory reference: K sequential submissions on a fresh engine get
+/// session ids 1..=K — the same ids the consortium workers pre-register
+/// — so every share stream derives from identical `(seed, session,
+/// institution)` triples.
+fn baseline_betas(cfg: &ExperimentConfig, ds: &Dataset, sessions: u32) -> Vec<Vec<f64>> {
+    let engine = StudyEngine::new(ds.num_institutions(), cfg.num_centers).unwrap();
+    let handles: Vec<_> = (0..sessions)
+        .map(|_| engine.submit(cfg, ds, SubmitOptions::batch()).unwrap())
+        .collect();
+    let betas = handles.into_iter().map(|h| h.join().unwrap().beta).collect();
+    engine.shutdown().unwrap();
+    betas
+}
+
+/// Loopback-TCP ≡ in-memory, bitwise, at 1 and 2 driver shards.
+#[test]
+fn loopback_tcp_fit_is_bit_identical_to_in_memory() {
+    let ds = synthetic("net-bitid", 600, 4, 2, 0.0, 1.0, 901);
+    let cfg = cfg_3c();
+    let base = baseline_betas(&cfg, &ds, 2);
+    for driver_shards in [1usize, 2] {
+        let consortium = Consortium::start(&cfg, &ds, driver_shards, 2);
+        let shards = consortium_shards(ds.num_institutions(), ds.d(), None);
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                consortium
+                    .engine
+                    .submit_shared(&cfg, shards.clone(), SubmitOptions::batch())
+                    .unwrap()
+            })
+            .collect();
+        let betas: Vec<Vec<f64>> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().beta)
+            .collect();
+        assert_eq!(
+            betas, base,
+            "TCP transport moved the numerics at {driver_shards} driver shard(s)"
+        );
+        let stats = consortium.fabric.stats();
+        assert!(stats.frames_out > 0 && stats.frames_in > 0, "fit never used the wire");
+        assert_eq!(stats.rejected_frames, 0);
+        assert_eq!(stats.disconnects, 0);
+        consortium.finish(&[]);
+    }
+}
+
+/// Kill every socket of one institution process mid-fit, attach a
+/// fresh replacement process, and require the recovered β̂ to be
+/// byte-identical to an uninterrupted in-memory fit — the remote link
+/// loss must ride the exact `Suspended` → `SessionReopen` replay path
+/// a local worker crash does.
+#[test]
+fn mid_fit_socket_kill_recovers_bit_identically_via_replay() {
+    let ds = synthetic("net-kill", 4000, 5, 2, 0.0, 1.0, 902);
+    let cfg = heavy_cfg();
+    let base = baseline_betas(&cfg, &ds, 1);
+
+    let mut consortium = Consortium::start(&cfg, &ds, 1, 1);
+    let shards = consortium_shards(ds.num_institutions(), ds.d(), None);
+    let h = consortium
+        .engine
+        .submit_shared(&cfg, shards, SubmitOptions::batch())
+        .unwrap();
+    let sid = h.session_id();
+    await_lifecycle(&consortium.engine, sid, Lifecycle::Running);
+
+    // Yank institution 1's sockets out from under the live fit.
+    let pos = consortium
+        .workers
+        .iter()
+        .position(|w| w.node == NodeId::Institution(1))
+        .unwrap();
+    let victim = consortium.workers.remove(pos);
+    victim.fabric.shutdown();
+
+    // A replacement process dials in; the driver's retry loop keeps
+    // re-sending `SessionReopen` (typed `PeerUnknown` failures in
+    // between) until the new HELLO restores the route, then replays.
+    let mut dial = vec![consortium.coord_addr];
+    dial.extend(consortium.center_addrs.iter().copied());
+    let replacement = RemoteWorker::spawn(NodeId::Institution(1), &cfg, &ds, 1, &dial);
+    consortium.workers.push(replacement);
+
+    let fit = h.join().expect("fit must survive the socket kill");
+    assert_eq!(fit.beta, base[0], "replay over TCP moved the numerics");
+    assert_eq!(consortium.engine.lifecycle(sid), Some(Lifecycle::Closed));
+    assert!(
+        consortium.fabric.stats().disconnects >= 1,
+        "the supervisor never classified the socket kill as a worker loss"
+    );
+    consortium.finish(&[]);
+    // The dead process still holds whatever state the cut stranded;
+    // stop its blocked loop via the local injector.
+    victim.stop().unwrap();
+}
+
+/// Hostile raw peers mid-fit: garbage frame bodies are dropped (typed,
+/// counted, link kept), a hostile length prefix kills only its own
+/// link before any allocation, and the live session's β̂ comes out
+/// byte-identical — no poisoning, and none of it counts as worker loss.
+#[test]
+fn hostile_raw_frames_do_not_poison_live_sessions() {
+    let ds = synthetic("net-hostile", 2000, 4, 2, 0.0, 1.0, 903);
+    let cfg = heavy_cfg();
+    let base = baseline_betas(&cfg, &ds, 1);
+
+    let consortium = Consortium::start(&cfg, &ds, 1, 1);
+    let shards = consortium_shards(ds.num_institutions(), ds.d(), None);
+    let h = consortium
+        .engine
+        .submit_shared(&cfg, shards, SubmitOptions::batch())
+        .unwrap();
+    await_lifecycle(&consortium.engine, h.session_id(), Lifecycle::Running);
+
+    // Attacker 1 completes the handshake (empty HELLO — claims no
+    // nodes) and ships FRAMEs whose wire bodies are garbage.
+    let mut attacker = TcpStream::connect(consortium.coord_addr).unwrap();
+    attacker.write_all(&PREAMBLE).unwrap();
+    let mut hello = Vec::new();
+    hello.extend_from_slice(&3u32.to_le_bytes());
+    hello.push(KIND_HELLO);
+    hello.extend_from_slice(&0u16.to_le_bytes());
+    attacker.write_all(&hello).unwrap();
+    for _ in 0..3 {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&[1, 0, 0]); // from: Institution(0)
+        payload.extend_from_slice(&[0, 0, 0]); // to: Coordinator
+        payload.extend_from_slice(&[0xAB; 32]); // body: not a wire frame
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&((1 + payload.len()) as u32).to_le_bytes());
+        frame.push(KIND_FRAME);
+        frame.extend_from_slice(&payload);
+        attacker.write_all(&frame).unwrap();
+    }
+
+    // Attacker 2 sends a hostile length prefix straight after the
+    // preamble — must die before any allocation happens.
+    let mut attacker2 = TcpStream::connect(consortium.coord_addr).unwrap();
+    attacker2.write_all(&PREAMBLE).unwrap();
+    attacker2.write_all(&u32::MAX.to_le_bytes()).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while (consortium.fabric.stats().rejected_frames < 3
+        || consortium.fabric.stats().oversized_frames < 1)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = consortium.fabric.stats();
+    assert_eq!(stats.rejected_frames, 3, "garbage bodies must be dropped and counted");
+    assert_eq!(stats.oversized_frames, 1, "hostile prefix must be rejected pre-allocation");
+
+    let fit = h.join().expect("hostile peers must not break the fit");
+    assert_eq!(fit.beta, base[0], "hostile frames poisoned a live session");
+    assert_eq!(
+        consortium.fabric.stats().disconnects,
+        0,
+        "hostile peers must not be classified as worker loss"
+    );
+    drop(attacker);
+    drop(attacker2);
+    consortium.finish(&[]);
+}

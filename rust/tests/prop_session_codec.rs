@@ -193,6 +193,80 @@ fn zero_copy_submission_encoder_matches_message_codec() {
     }
 }
 
+/// Decode-hardening fuzz gate: `decode_frame` is the first thing that
+/// touches bytes arriving off a real socket (`net.rs` link loop), so it
+/// must hold up against arbitrary input. The `Result<_, CodecError>`
+/// return type already guarantees rejections are *typed*; these tests
+/// prove the other two properties — no panic, and no allocation driven
+/// by a hostile length prefix beyond the actual buffer size (the
+/// `check_len` guard in `Reader::f64s`/`fps`).
+#[test]
+fn arbitrary_byte_strings_never_panic() {
+    let mut rng = SplitMix64::new(0xF00D);
+    for _ in 0..4096 {
+        let len = (rng.next_u64() % 512) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Must return Ok or a typed CodecError — never panic, never hang.
+        let _ = decode_frame(&bytes);
+        let _ = decode(&bytes);
+    }
+}
+
+#[test]
+fn bit_flipped_frames_never_panic_and_truncations_stay_typed() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    for msg in all_variants(&mut rng) {
+        let frame = encode_frame(9, &msg);
+        // Flip every bit of the header and tag, then a random sample of
+        // payload bits — exhaustive over the region that steers control
+        // flow, sampled over the region that only carries data.
+        let dense = (SESSION_HEADER_LEN + 1).min(frame.len());
+        for byte in 0..dense {
+            for bit in 0..8 {
+                let mut bad = frame.clone();
+                bad[byte] ^= 1 << bit;
+                let _ = decode_frame(&bad);
+            }
+        }
+        for _ in 0..256 {
+            let mut bad = frame.clone();
+            let byte = (rng.next_u64() as usize) % bad.len();
+            bad[byte] ^= 1 << (rng.next_u64() % 8);
+            let _ = decode_frame(&bad);
+            // ... and a truncated prefix of the corrupted frame.
+            let cut = (rng.next_u64() as usize) % (bad.len() + 1);
+            let _ = decode_frame(&bad[..cut]);
+        }
+    }
+}
+
+/// A hostile length prefix inside the body (e.g. a vector count of
+/// u32::MAX followed by no data) must be rejected as `Truncated`
+/// *before* any proportional allocation happens. If the guard ever
+/// regressed to `Vec::with_capacity(claimed)`, this test would attempt
+/// a ~32 GiB allocation and the suite would OOM instead of passing.
+#[test]
+fn hostile_vector_length_prefixes_are_rejected_without_allocation() {
+    let tags: Vec<u8> = {
+        let mut rng = SplitMix64::new(11);
+        all_variants(&mut rng)
+            .iter()
+            .map(|m| encode(m)[0])
+            .collect()
+    };
+    for tag in tags {
+        // session header + tag + a u32 field (iter/node slot for most
+        // variants) + a claimed element count of u32::MAX, then nothing.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&3u32.to_le_bytes());
+        frame.push(tag);
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&frame);
+        assert!(err.is_err(), "tag {tag} accepted a hostile length prefix");
+    }
+}
+
 #[test]
 fn out_of_range_field_elements_are_rejected_in_frames() {
     let msg = Message::ShareSubmission {

@@ -40,6 +40,10 @@ cargo test -q --test integration_lifecycle
 echo "== secure pipeline gate (fused share thread-invariance + zero-alloc) =="
 cargo test -q --test prop_secure_pipeline
 
+echo "== gwas-screen gate (score-test bit-identity + zero-alloc share path + screening ≡ exhaustive decisions) =="
+cargo test -q --test prop_score_screen
+cargo test -q --test integration_gwas
+
 echo "== feature matrix: --features simd (vector kernels, bit-identity gates) =="
 # The simd feature compiles the AVX2 kernel bodies; at runtime they are
 # taken only on CPUs with AVX2 (resolve(Auto)), so these gates are the
@@ -49,6 +53,7 @@ cargo build --release --features simd
 cargo test -q --features simd
 cargo test -q --features simd --test prop_kernels
 cargo test -q --features simd --test prop_secure_pipeline
+cargo test -q --features simd --test prop_score_screen
 
 echo "== feature matrix: --features net (TCP transport, hardened framing) =="
 # The net feature adds the std::net fabric + `privlr serve`; the default

@@ -1,125 +1,127 @@
-//! Genetic-consortium scenario: wide data, feature selection via the
-//! regularization path, and the privacy failure mode that motivates
-//! the paper.
+//! Genetic-consortium scenario: GWAS at scale — one shared covariate
+//! block, 10⁴ SNP columns, secure score-test screening with a cached
+//! null model, and full Newton fits only for the hits.
 //!
 //!     cargo run --release --example consortium_gwas
 //!
-//! A GWAS-like consortium has FEW samples per site and MANY genetic
-//! covariates — exactly the regime where a leaked per-site gradient
-//! lets an attacker solve for every participant's case/control status
-//! (the inference attacks of [13, 25, 26]). This example:
+//! A GWAS tests every SNP against the same phenotype and the same
+//! clinical covariates. Fitting 10⁴ full secure regressions would run
+//! 10⁴ × O(iters) rounds of `[g | dev | H]` traffic; the score test
+//! needs NO per-SNP Newton iterations at all. The consortium:
 //!
-//!  1. fits an L2 path (λ sweep) securely and reports the effect-size
-//!     ranking a geneticist would read off;
-//!  2. runs the gradient inversion attack against a DataSHIELD-style
-//!     plaintext exchange of the same study — full recovery;
-//!  3. shows the secure protocol's shares are useless to the attacker.
+//!  1. fits the covariate-only null model ONCE, securely, and caches
+//!     β̂₀ + the factorized Fisher block ([`privlr::model::NullModelCache`]);
+//!  2. streams every SNP through single-round `ScoreScreen` sessions —
+//!     O(d) wire payload each, bounded in-flight window, O(1) memory
+//!     per retired SNP;
+//!  3. promotes SNPs with χ² above the threshold to full
+//!     interactive-lane Newton fits of `[covariates | g]` —
+//!     bit-identical to fitting that SNP standalone.
+//!
+//! The screen leaks nothing a full fit would not: per-SNP summaries
+//! cross the wire Shamir-shared exactly like gradient frames, and the
+//! coordinator reconstructs only consortium totals (U, b, q).
 
-use privlr::attack::{center_view_gradient_error, response_recovery_accuracy};
-use privlr::baseline::datashield_fit;
 use privlr::config::ExperimentConfig;
-use privlr::data::synthetic;
-use privlr::engine::{StudyEngine, SubmitOptions};
-use privlr::fixed::FixedCodec;
-use privlr::shamir::ShamirParams;
-use privlr::util::rng::ChaCha20Rng;
+use privlr::data::synthetic_panel;
+use privlr::engine::{StudyEngine, SubmitOptions, SubmitPolicy};
+use privlr::model::NullModelCache;
+use std::sync::Arc;
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    // 4 sites × 12 participants, 16 variant covariates: wide data.
-    let mut ds = synthetic("gwas", 48, 16, 4, 0.0, 1.0, 2024);
-    ds.partition(4);
+    // 4 sites, 2 000 participants, 6 shared clinical covariates
+    // (intercept included), 10 000 SNPs of which 20 carry a planted
+    // log-odds effect of 0.6 per allele.
+    let (n, d, sites, snps, causal, effect) = (2_000, 6, 4, 10_000, 20, 0.6);
+    let panel = Arc::new(synthetic_panel("gwas", n, d, sites, snps, causal, effect, 2024));
     println!(
-        "consortium: {} participants across {} sites, {} covariates\n",
-        ds.n(),
-        ds.num_institutions(),
-        ds.d()
+        "consortium: {n} participants across {sites} sites, {d} shared covariates, {snps} SNPs \
+         ({causal} causal, effect {effect})\n"
     );
 
-    // ---- 1. secure regularization path ----
-    // The consortium is a standing network: the five λ-studies run as
-    // five CONCURRENT sessions on one persistent StudyEngine (same
-    // institutions and centers, session-multiplexed protocol), instead
-    // of building and tearing down a network per fit. Results are
-    // bit-identical to running the fits one at a time.
-    println!("secure λ-path (effect-size shrinkage, 5 concurrent sessions):");
-    println!("{:>8}  {:>10}  {:>6}", "λ", "‖β‖₂", "iters");
-    let base_cfg = ExperimentConfig {
+    let cfg = ExperimentConfig {
         max_iters: 60,
         ..Default::default()
     };
-    let engine = StudyEngine::for_experiment(&ds, &base_cfg)?;
-    // Split the consortium data once; all five sessions share the
-    // Arc'd shards (zero copies per additional study).
-    let shards = privlr::session::ShardData::split(&ds);
-    let lambdas = [10.0, 3.0, 1.0, 0.3, 0.1];
-    // A λ sweep is classic bulk work: it rides the bulk lane so an
-    // interactive study submitted to the same engine would be admitted
-    // and scheduled ahead of it.
-    let handles: Vec<_> = lambdas
-        .iter()
-        .map(|&lambda| {
-            engine.submit_shared(
-                &ExperimentConfig { lambda, ..base_cfg.clone() },
-                shards.clone(),
-                SubmitOptions::bulk(),
-            )
-        })
-        .collect::<anyhow::Result<_>>()?;
-    let mut last_beta = Vec::new();
-    for (&lambda, handle) in lambdas.iter().zip(handles) {
-        let fit = handle.join()?;
-        let norm = fit.beta.iter().map(|b| b * b).sum::<f64>().sqrt();
-        println!("{lambda:>8}  {norm:>10.4}  {:>6}", fit.metrics.iterations);
-        last_beta = fit.beta;
-    }
-    let traffic = engine.shutdown()?;
-    println!(
-        "  (one network served all {} sessions: {} bytes total, attributed per study)",
-        lambdas.len(),
-        traffic.total_bytes
-    );
-    // Rank top effects at the loosest penalty.
-    let mut ranked: Vec<(usize, f64)> = last_beta
-        .iter()
-        .enumerate()
-        .skip(1) // intercept
-        .map(|(i, b)| (i, b.abs()))
-        .collect();
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    println!("\ntop-5 variants by |effect| at λ=0.1:");
-    for (i, mag) in ranked.iter().take(5) {
-        println!("  variant {i:>2}: |β| = {mag:.4}");
-    }
+    let engine = StudyEngine::for_experiment(&panel.covariates, &cfg)?;
 
-    // ---- 2. the leak the paper prevents ----
-    println!("\n--- plaintext-summary exchange (DataSHIELD-style [6]) ---");
-    let (_, leaks) = datashield_fit(&ds, 1.0, 1e-10, 2)?;
-    let mut recovered_total = 0.0;
-    for site in 0..4 {
-        let (x, y) = ds.shard_data(site);
-        // 12 rows ≤ 16 covariates → the gradient is invertible.
-        let leak = &leaks[site];
-        let acc = response_recovery_accuracy(leak, &x, &y)?;
-        recovered_total += acc;
+    // ---- 1. the null model: ONE secure fit, cached for the sweep ----
+    let t = Instant::now();
+    let null_fit = engine
+        .submit_shared(
+            &cfg,
+            panel.shard_data().to_vec(),
+            SubmitOptions::interactive(),
+        )?
+        .join()?;
+    let null = Arc::new(NullModelCache::new(
+        null_fit.beta.clone(),
+        null_fit.fisher.as_ref().expect("full fit carries fisher"),
+        cfg.lambda,
+    )?);
+    println!(
+        "null model: {} secure Newton iterations in {:.2}s — β̂₀ and the factorized covariate \
+         Fisher block now serve every SNP",
+        null_fit.metrics.iterations,
+        t.elapsed().as_secs_f64()
+    );
+
+    // ---- 2. the streamed screen: 10⁴ single-round sessions ----
+    // Bulk lane + newest-wins shedding is the sweep configuration: an
+    // interactive study submitted to the same engine would preempt the
+    // screen's round dispatch 4:1. The window caps in-flight handles —
+    // the sweep's footprint is O(window), not O(snps).
+    let t = Instant::now();
+    let report = engine.screen_sweep(
+        &cfg,
+        &panel,
+        &null,
+        10.83, // χ²(1) at p = 10⁻³
+        64,
+        SubmitOptions::bulk().policy(SubmitPolicy::ShedOldestBulk),
+    )?;
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "\nscreened {} SNPs ({} shed) in {:.2}s → {:.0} SNPs/sec",
+        report.screened,
+        report.shed,
+        secs,
+        report.screened as f64 / secs
+    );
+
+    // ---- 3. the hit table: full secure fits of the promoted SNPs ----
+    println!(
+        "\n{} hits promoted to full interactive-lane fits:",
+        report.hits.len()
+    );
+    println!(
+        "{:>8} {:>12} {:>12} {:>14} {:>8}",
+        "SNP", "score χ²", "p-value", "full-fit β̂", "causal?"
+    );
+    for h in &report.hits {
         println!(
-            "  site {site}: attacker recovers {:.0}% of participants' case/control status",
-            acc * 100.0
+            "{:>8} {:>12.2} {:>12.3e} {:>+14.6} {:>8}",
+            h.snp,
+            h.chi2,
+            h.p_value,
+            h.fit.beta.last().copied().unwrap_or(f64::NAN),
+            if panel.causal.contains(&(h.snp as usize)) { "yes" } else { "no" },
         );
     }
-    assert!(recovered_total / 4.0 > 0.99, "attack should succeed");
-
-    // ---- 3. the same attacker against THIS protocol ----
-    println!("\n--- Shamir-protected exchange (this work) ---");
-    let params = ShamirParams::new(3, 5)?;
-    let codec = FixedCodec::default();
-    let mut rng = ChaCha20Rng::seed_from_u64(7);
-    let (x0, y0) = ds.shard_data(0);
-    let g0 = privlr::model::local_stats(&x0, &y0, &vec![0.0; ds.d()]).g;
-    let err = center_view_gradient_error(params, &codec, &g0, &mut rng);
+    let found = report
+        .hits
+        .iter()
+        .filter(|h| panel.causal.contains(&(h.snp as usize)))
+        .count();
+    let traffic = engine.shutdown()?;
     println!(
-        "  curious center's best estimate of site 0's gradient is off by {err:.3e}\n  \
-         (a uniform field element — carries zero information below the 3-center threshold)"
+        "\nrecovered {found}/{causal} planted causal SNPs; {} bytes total wire traffic for the \
+         whole campaign (null fit + {} screens + {} full fits)",
+        traffic.total_bytes,
+        report.screened,
+        report.hits.len()
     );
-    println!("\nOK — identical science, none of the leakage.");
+    println!("\nOK — exome-scale screening, none of the leakage.");
     Ok(())
 }

@@ -23,9 +23,11 @@ use privlr::bench::{
     Summary,
 };
 use privlr::config::ExperimentConfig;
-use privlr::data::synthetic;
-use privlr::engine::{EngineOptions, StudyEngine, SubmitOptions};
+use privlr::data::{synthetic, synthetic_panel};
+use privlr::engine::{EngineOptions, StudyEngine, SubmitOptions, SubmitPolicy};
+use privlr::model::NullModelCache;
 use privlr::util::json::{self, Json};
+use std::sync::Arc;
 
 fn main() {
     let bcfg = BenchConfig::from_env();
@@ -371,5 +373,111 @@ fn main() {
         eprintln!("warning: could not write {}: {e}", path.display());
     } else {
         println!("report section 'wan_consortium' written to {}", path.display());
+    }
+
+    // ---- gwas_screen: SNPs/sec of the score-test screening sweep ---
+    // The GWAS fast path: one cached null model, then a streamed sweep
+    // of single-round `ScoreScreen` sessions (window 64, bulk lane).
+    // The promotion threshold is +∞ so the cell measures PURE screen
+    // throughput — no full fits mixed into the makespan; decision
+    // parity is gated by tests/integration_gwas.rs, not timed here.
+    // Swept over panel size {10³, 10⁴} SNPs (FAST: {200, 1000}) and
+    // driver_shards ∈ {1, 4}: at 10⁴ single-round sessions the control
+    // plane itself is the bottleneck, which is what sharding buys.
+    let gwas_n = if fast { 1_000 } else { 4_000 };
+    let gwas_d = 6usize;
+    let snp_counts: [usize; 2] = if fast { [200, 1_000] } else { [1_000, 10_000] };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    for num_snps in snp_counts {
+        let panel = Arc::new(synthetic_panel(
+            "bench-gwas",
+            gwas_n,
+            gwas_d,
+            s,
+            num_snps,
+            (num_snps / 100).max(1),
+            0.5,
+            42,
+        ));
+        let mut one_shard_snps_per_sec = f64::NAN;
+        for driver_shards in [1usize, 4] {
+            let engine = StudyEngine::with_options(
+                s,
+                cfg.num_centers,
+                EngineOptions { driver_shards, ..Default::default() },
+            )
+            .expect("engine");
+            // The null fit is per-consortium setup, outside the timer.
+            let null_fit = engine
+                .submit_shared(&cfg, panel.shard_data().to_vec(), SubmitOptions::interactive())
+                .expect("submit null")
+                .join()
+                .expect("null fit");
+            let null = Arc::new(
+                NullModelCache::new(
+                    null_fit.beta.clone(),
+                    null_fit.fisher.as_ref().expect("fisher"),
+                    cfg.lambda,
+                )
+                .expect("null cache"),
+            );
+            let name = format!("gwas_screen n={gwas_n} d={gwas_d} S={s} snps={num_snps} shards={driver_shards}");
+            let summary: Summary = run_bench(&name, bcfg, || {
+                let report = engine
+                    .screen_sweep(
+                        &cfg,
+                        &panel,
+                        &null,
+                        f64::INFINITY,
+                        64,
+                        SubmitOptions::bulk().policy(SubmitPolicy::ShedOldestBulk),
+                    )
+                    .expect("sweep");
+                assert_eq!(report.shed, 0, "unbounded lanes must not shed");
+                report.screened as u32
+            });
+            engine.shutdown().expect("shutdown");
+            let snps_per_sec = num_snps as f64 / summary.mean_s;
+            if driver_shards == 1 {
+                one_shard_snps_per_sec = snps_per_sec;
+            }
+            let speedup = snps_per_sec / one_shard_snps_per_sec;
+            rows.push(vec![
+                format!("snps={num_snps}"),
+                format!("shards={driver_shards}"),
+                format!("{:.3}s", summary.mean_s),
+                format!("{snps_per_sec:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut entry = summary_json(&summary);
+            if let Json::Obj(map) = &mut entry {
+                map.insert("num_snps".into(), json::num(num_snps as f64));
+                map.insert("driver_shards".into(), json::num(driver_shards as f64));
+                map.insert("n".into(), json::num(gwas_n as f64));
+                map.insert("d".into(), json::num(gwas_d as f64));
+                map.insert("institutions".into(), json::num(s as f64));
+                map.insert("snps_per_sec".into(), json::num(snps_per_sec));
+                map.insert("speedup_vs_1shard".into(), json::num(speedup));
+            }
+            entries.push(entry);
+        }
+    }
+    print_kv_table(
+        "GWAS screen throughput (S=4, d=6; streamed single-round score tests, window 64)",
+        &["panel", "shards", "makespan", "SNPs/sec", "vs 1 shard"],
+        &rows,
+    );
+    let report = json::obj(vec![
+        (
+            "note",
+            json::s("SNPs/sec of the streamed secure score-test screen (cached null model, single-round O(d) sessions, bulk lane, in-flight window 64, threshold +∞ so no full fits are timed) at panel sizes {1e3, 1e4} SNPs x driver_shards {1, 4}"),
+        ),
+        ("results", Json::Arr(entries)),
+    ]);
+    if let Err(e) = update_json_report(&path, "gwas_screen", report) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("report section 'gwas_screen' written to {}", path.display());
     }
 }

@@ -58,9 +58,18 @@ struct IterState {
 
 /// Per-session center state.
 struct CenterSession {
+    /// Length of the shared statistic vector (`SessionSpec::stat_len`):
+    /// d for Newton fits, d+1 for score screens. The center sums shares
+    /// obliviously — it sizes the accumulator without knowing which
+    /// statistic it is aggregating.
     d: usize,
     packed_h: usize,
     full_security: bool,
+    /// Score-screen session: no Hessian exists in ANY mode, so the
+    /// response carries `HessianPayload::Absent` even from the lead
+    /// center (whose pragmatic-mode plaintext-count check would
+    /// otherwise reject the round).
+    screen: bool,
     /// This session's secure-aggregation busy counter for this center.
     busy_ns: Arc<AtomicU64>,
     iters: HashMap<u32, IterState>,
@@ -189,12 +198,15 @@ fn handle_message(
             cfg.center_id
         );
         let d = spec.d();
+        let screen = spec.screen.is_some();
         sessions.insert(
             session,
             CenterSession {
-                d,
-                packed_h: d * (d + 1) / 2,
-                full_security: spec.full_security,
+                d: spec.stat_len(),
+                packed_h: if screen { 0 } else { d * (d + 1) / 2 },
+                // Screens never carry Hessians, whatever the mode.
+                full_security: spec.full_security && !screen,
+                screen,
                 busy_ns: spec.center_busy_ns[cfg.center_id as usize].clone(),
                 iters: HashMap::new(),
                 free: Vec::new(),
@@ -289,7 +301,11 @@ fn maybe_respond(
         return Ok(());
     }
     let t = std::time::Instant::now();
-    let hessian = if full {
+    let hessian = if cs.screen {
+        // Score screen: [U | b] and q are the whole payload; there is
+        // no Hessian to aggregate on this path, lead center included.
+        HessianPayload::Absent
+    } else if full {
         HessianPayload::Shared(st.acc.h_shared.clone().unwrap())
     } else if cfg.center_id == 0 {
         // Pragmatic mode: only the lead center carries the plaintext H,
@@ -443,6 +459,77 @@ mod tests {
                     }
                     _ => panic!("expected plain hessian"),
                 }
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// A screen session's lead center must answer with an ABSENT
+    /// Hessian in pragmatic mode (no plaintext Hessians ever arrive on
+    /// the screen path) and size its accumulator at stat_len = d+1.
+    #[test]
+    fn screen_session_lead_center_responds_absent() {
+        let panel = Arc::new(crate::data::synthetic_panel("t", 24, 3, 2, 4, 1, 1.0, 3));
+        let ds = &panel.covariates;
+        let fit = crate::model::damped_newton_fit(&ds.x, &ds.y, 1e-3, 1e-10, 50, 20).unwrap();
+        let stats = crate::model::local_stats(&ds.x, &ds.y, &fit.beta);
+        let null = Arc::new(
+            crate::model::NullModelCache::new(fit.beta.clone(), &stats.h, 1e-3).unwrap(),
+        );
+        let mut spec = SessionSpec::new(
+            5,
+            panel.shard_data().to_vec(),
+            ShamirParams::new(1, 1).unwrap(),
+            FixedCodec::default(),
+            false,
+            1,
+            crate::simd::Isa::Scalar,
+            7,
+        );
+        spec.screen = Some(Arc::new(crate::session::ScreenTask { panel, null, snp: 1 }));
+        assert_eq!(spec.stat_len(), 4);
+        let registry = registry_with(vec![Arc::new(spec)]);
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst0 = net.register(NodeId::Institution(0));
+        let inst1 = net.register(NodeId::Institution(1));
+        let cep = net.register(NodeId::Center(0));
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        let codec = FixedCodec::default();
+        // [U | b] (4 elements) + q, Absent hessian, from both institutions.
+        for (j, ep) in [(0u16, &inst0), (1, &inst1)] {
+            let enc: Vec<Fp> =
+                [1.0, 2.0, 3.0, 4.0].iter().map(|v| codec.encode(*v).unwrap()).collect();
+            ep.send_session(
+                NodeId::Center(0),
+                5,
+                &Message::ShareSubmission {
+                    iter: 0,
+                    institution: j,
+                    hessian: HessianPayload::Absent,
+                    g_share: enc,
+                    dev_share: codec.encode(0.5).unwrap(),
+                },
+            )
+            .unwrap();
+        }
+        coord
+            .send_session(NodeId::Center(0), 5, &Message::AggregateRequest { iter: 0, expected: 2 })
+            .unwrap();
+        let (_, session, resp) = coord.recv_session().unwrap();
+        assert_eq!(session, 5);
+        match resp {
+            Message::AggregateResponse { hessian, g_share, dev_share, .. } => {
+                assert!(matches!(hessian, HessianPayload::Absent), "lead center, screen: Absent");
+                assert_eq!(g_share.len(), 4);
+                let g = codec.decode_slice(&g_share);
+                for (got, want) in g.iter().zip(&[2.0, 4.0, 6.0, 8.0]) {
+                    assert!((got - want).abs() < 1e-4);
+                }
+                assert!((codec.decode(dev_share) - 1.0).abs() < 1e-4);
             }
             other => panic!("unexpected {}", other.kind()),
         }

@@ -63,6 +63,15 @@ pub struct RunMetrics {
 pub struct SecureFitResult {
     pub beta: Vec<f64>,
     pub metrics: RunMetrics,
+    /// The final reconstructed (unpenalized) aggregate Fisher block of
+    /// a full Newton fit — what seeds a GWAS null-model cache
+    /// ([`crate::model::NullModelCache`]); the coordinator already
+    /// reconstructs it every round, so surfacing it reveals nothing
+    /// new. `None` for screen sessions.
+    pub fisher: Option<crate::linalg::Matrix>,
+    /// `Some` iff the session was a score screen: the per-SNP
+    /// statistic. Empty `beta` in that case.
+    pub screen: Option<crate::session::ScreenStat>,
 }
 
 /// Fit L2-regularized logistic regression securely across the

@@ -376,6 +376,188 @@ impl DatasetSpec {
     }
 }
 
+// ---- GWAS SNP panels ----------------------------------------------------
+
+/// Process-global panel id allocator. Worker-side caches (the
+/// institutions' per-consortium screen state) key on this id rather
+/// than on `Arc` pointer identity, which an allocator may reuse after a
+/// panel is dropped; ids are never reused within a process.
+static NEXT_PANEL_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// A GWAS panel: ONE shared covariate block plus per-SNP genotype
+/// columns, the submit-by-reference dataset shape of the score-test
+/// screening fast path.
+///
+/// A sweep of 10⁵–10⁶ screen sessions references this single panel —
+/// the covariate shards are split into `Arc<ShardData>` exactly once at
+/// construction and every screen session's spec clones those `Arc`s,
+/// while the genotype matrix is addressed per SNP by column view
+/// ([`SnpPanel::snp_column`]); nothing per-SNP is ever copied on the
+/// screening path. Full Newton re-fits of hits are the only place a
+/// per-SNP design matrix is materialized ([`SnpPanel::full_fit_dataset`]).
+pub struct SnpPanel {
+    /// Panel name (prefixes per-SNP full-fit dataset names).
+    pub name: String,
+    panel_id: u64,
+    /// Shared covariate block `[1 | covariates]` with its institution
+    /// partition — the null model's dataset.
+    pub covariates: Dataset,
+    /// Covariate shards split once, shared by every screen session.
+    shard_data: Vec<std::sync::Arc<crate::session::ShardData>>,
+    /// Genotype columns stored one SNP per row (`num_snps × n`), so
+    /// `snps.row(s)` is SNP `s`'s full length-n column — contiguous for
+    /// the per-SNP kernels, sliceable per institution row range.
+    pub snps: Matrix,
+    /// Indices of planted causal SNPs (synthetic panels; empty for
+    /// panels assembled from real data).
+    pub causal: Vec<usize>,
+}
+
+impl SnpPanel {
+    /// Assemble a panel from a covariate dataset and a `num_snps × n`
+    /// genotype matrix (one SNP per row, aligned with the dataset's
+    /// row order).
+    pub fn new(covariates: Dataset, snps: Matrix, causal: Vec<usize>) -> SnpPanel {
+        assert_eq!(
+            snps.cols,
+            covariates.n(),
+            "genotype columns must align with covariate rows"
+        );
+        let shard_data = crate::session::ShardData::split(&covariates);
+        SnpPanel {
+            name: covariates.name.clone(),
+            panel_id: NEXT_PANEL_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            covariates,
+            shard_data,
+            snps,
+            causal,
+        }
+    }
+
+    /// Process-unique panel id — what worker-side screen caches key on.
+    pub fn panel_id(&self) -> u64 {
+        self.panel_id
+    }
+
+    /// Number of records (rows of the covariate block).
+    pub fn n(&self) -> usize {
+        self.covariates.n()
+    }
+
+    /// Covariate dimension (intercept included) — the null model's d.
+    pub fn d(&self) -> usize {
+        self.covariates.d()
+    }
+
+    /// Number of SNPs in the panel.
+    pub fn num_snps(&self) -> usize {
+        self.snps.rows
+    }
+
+    /// Number of participating institutions.
+    pub fn num_institutions(&self) -> usize {
+        self.covariates.num_institutions()
+    }
+
+    /// SNP `s`'s full genotype column (length n).
+    pub fn snp_column(&self, s: usize) -> &[f64] {
+        self.snps.row(s)
+    }
+
+    /// SNP `s`'s genotype slice for institution `j`'s row range.
+    pub fn snp_shard(&self, s: usize, j: usize) -> &[f64] {
+        let sh = self.covariates.shards[j];
+        &self.snps.row(s)[sh.start..sh.end]
+    }
+
+    /// The covariate shards, split once at construction — screen
+    /// session specs clone these `Arc`s instead of re-copying rows.
+    pub fn shard_data(&self) -> &[std::sync::Arc<crate::session::ShardData>] {
+        &self.shard_data
+    }
+
+    /// Materialize the per-SNP design `[covariates | g_s]` as a
+    /// partitioned dataset for a full interactive-lane Newton re-fit of
+    /// a screening hit. This copies the covariate block — deliberately
+    /// reserved for hits, never used on the screening path.
+    pub fn full_fit_dataset(&self, s: usize) -> Dataset {
+        let n = self.n();
+        let d = self.d();
+        let g = self.snp_column(s);
+        let mut x = Matrix::zeros(n, d + 1);
+        for i in 0..n {
+            let row = &self.covariates.x.row(i)[..d];
+            x.data[i * (d + 1)..i * (d + 1) + d].copy_from_slice(row);
+            x[(i, d)] = g[i];
+        }
+        Dataset {
+            name: format!("{}:snp{}", self.name, s),
+            x,
+            y: self.covariates.y.clone(),
+            shards: self.covariates.shards.clone(),
+        }
+    }
+}
+
+/// Synthetic GWAS panel with planted effects (the screening parity
+/// gates' ground truth): Algorithm-3 covariates plus `num_snps`
+/// genotype columns in additive 0/1/2 coding with per-SNP minor-allele
+/// frequencies ~ U(0.1, 0.5). `num_causal` SNPs (spread evenly across
+/// the panel) enter the Bernoulli response with coefficient `effect`;
+/// the rest are pure noise.
+pub fn synthetic_panel(
+    name: &str,
+    n: usize,
+    d: usize,
+    institutions: usize,
+    num_snps: usize,
+    num_causal: usize,
+    effect: f64,
+    seed: u64,
+) -> SnpPanel {
+    assert!(d >= 1, "need at least the intercept column");
+    assert!(num_causal <= num_snps);
+    let mut rng = SplitMix64::new(seed);
+    let beta: Vec<f64> = (0..d).map(|_| rng.next_range_f64(-1.0, 1.0)).collect();
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+        for j in 1..d {
+            x[(i, j)] = rng.next_gaussian();
+        }
+    }
+    // Genotypes: two Bernoulli(maf) allele draws per (snp, record).
+    let mut snps = Matrix::zeros(num_snps, n);
+    for s in 0..num_snps {
+        let maf = rng.next_range_f64(0.1, 0.5);
+        for i in 0..n {
+            let a = u64::from(rng.next_bernoulli(maf));
+            let b = u64::from(rng.next_bernoulli(maf));
+            snps[(s, i)] = (a + b) as f64;
+        }
+    }
+    // Causal SNPs spread evenly so every driver shard sees hits.
+    let causal: Vec<usize> = (0..num_causal)
+        .map(|k| k * num_snps / num_causal.max(1))
+        .collect();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut z = crate::linalg::dot(x.row(i), &beta);
+        for &s in &causal {
+            z += effect * snps[(s, i)];
+        }
+        y[i] = if rng.next_bernoulli(sigmoid(z)) { 1.0 } else { 0.0 };
+    }
+    let mut covariates = Dataset {
+        name: name.to_string(),
+        x,
+        y,
+        shards: Vec::new(),
+    };
+    covariates.partition(institutions);
+    SnpPanel::new(covariates, snps, causal)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,5 +663,54 @@ mod tests {
         assert_eq!(a.y, b.y);
         let c = synthetic("t", 100, 5, 2, 0.0, 1.0, 100);
         assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn snp_panel_shape_and_ids() {
+        let p = synthetic_panel("gwas", 120, 4, 3, 16, 2, 1.0, 7);
+        assert_eq!(p.n(), 120);
+        assert_eq!(p.d(), 4);
+        assert_eq!(p.num_snps(), 16);
+        assert_eq!(p.num_institutions(), 3);
+        assert_eq!(p.shard_data().len(), 3);
+        assert_eq!(p.causal, vec![0, 8]);
+        assert_eq!(p.snp_column(3).len(), 120);
+        // Genotypes are additive 0/1/2 coded.
+        assert!(p.snps.data.iter().all(|&g| g == 0.0 || g == 1.0 || g == 2.0));
+        // Shard slices concatenate back to the full column.
+        let full: Vec<f64> = (0..3).flat_map(|j| p.snp_shard(5, j).to_vec()).collect();
+        assert_eq!(full, p.snp_column(5));
+        // Ids are process-unique.
+        let q = synthetic_panel("gwas", 40, 3, 2, 4, 1, 1.0, 8);
+        assert_ne!(p.panel_id(), q.panel_id());
+        // Shards were split once; specs share them by Arc.
+        assert_eq!(p.shard_data()[0].x.cols, 4);
+        let rows: usize = p.shard_data().iter().map(|s| s.x.rows).sum();
+        assert_eq!(rows, 120);
+    }
+
+    #[test]
+    fn snp_panel_is_deterministic() {
+        let a = synthetic_panel("gwas", 80, 3, 2, 8, 1, 0.8, 42);
+        let b = synthetic_panel("gwas", 80, 3, 2, 8, 1, 0.8, 42);
+        assert_eq!(a.covariates.x.data, b.covariates.x.data);
+        assert_eq!(a.covariates.y, b.covariates.y);
+        assert_eq!(a.snps.data, b.snps.data);
+    }
+
+    #[test]
+    fn full_fit_dataset_appends_snp_column() {
+        let p = synthetic_panel("gwas", 60, 3, 2, 6, 1, 1.0, 5);
+        let ds = p.full_fit_dataset(4);
+        assert_eq!(ds.name, "gwas:snp4");
+        assert_eq!(ds.n(), 60);
+        assert_eq!(ds.d(), 4);
+        assert_eq!(ds.shards, p.covariates.shards);
+        assert_eq!(ds.y, p.covariates.y);
+        let g = p.snp_column(4);
+        for i in 0..60 {
+            assert_eq!(&ds.x.row(i)[..3], p.covariates.x.row(i));
+            assert_eq!(ds.x[(i, 3)], g[i]);
+        }
     }
 }

@@ -664,6 +664,58 @@ impl StudyHandle {
     }
 }
 
+/// Compact per-SNP sink entry of a [`StudyEngine::screen_sweep`]: four
+/// words per retired SNP, regardless of n, d, or the session's wire
+/// traffic. The full [`SecureFitResult`] (metrics, traffic snapshot,
+/// deviance trace) is dropped the moment the screen session retires —
+/// a 10⁵-SNP sweep's resident footprint is this record times the panel
+/// plus the bounded in-flight window.
+#[derive(Clone, Copy, Debug)]
+pub struct ScreenRecord {
+    /// Index of the SNP in its panel.
+    pub snp: u32,
+    /// Score-test statistic χ² = U²/V (1 df).
+    pub chi2: f64,
+    /// Two-sided p-value of the statistic.
+    pub p_value: f64,
+    /// `chi2 >= threshold` — the SNP was promoted to a full fit.
+    pub hit: bool,
+}
+
+/// One promoted SNP of a sweep: its screen statistic plus the full
+/// interactive-lane Newton fit of `[covariates | g]` — bit-identical
+/// to submitting that design standalone.
+#[derive(Clone, Debug)]
+pub struct ScreenHit {
+    /// Index of the SNP in its panel.
+    pub snp: u32,
+    /// Score-test statistic that promoted it.
+    pub chi2: f64,
+    /// Two-sided p-value of the statistic.
+    pub p_value: f64,
+    /// The full secure fit (d+1 coefficients, last one the SNP's).
+    pub fit: SecureFitResult,
+}
+
+/// Result of a [`StudyEngine::screen_sweep`]: the compact per-SNP sink
+/// plus the promoted hits' full fits.
+#[derive(Clone, Debug)]
+pub struct ScreenSweepReport {
+    /// One [`ScreenRecord`] per successfully screened SNP, in SNP
+    /// order.
+    pub records: Vec<ScreenRecord>,
+    /// Full fits of the SNPs whose χ² met the threshold, in SNP order.
+    pub hits: Vec<ScreenHit>,
+    /// SNPs screened (`records.len()`; `screened + shed` = panel
+    /// SNPs).
+    pub screened: usize,
+    /// SNPs whose screen session was shed, deadlined, or rejected by
+    /// the backpressure policy. Never fatal — sweeps under
+    /// [`SubmitPolicy::ShedOldestBulk`] trade completeness for
+    /// liveness by design, and the caller can re-screen the gap.
+    pub shed: usize,
+}
+
 /// One driver shard's priority lanes, shared between the submit path
 /// (pushes, backpressure checks, shed evictions) and the shard's
 /// driver (admission pops, deadline sweeps). Pending studies travel
@@ -1413,6 +1465,200 @@ impl StudyEngine {
         Ok(StudyHandle {
             session,
             rx: result_rx,
+        })
+    }
+
+    /// Submit one [`ScoreScreen`](crate::session::ScreenTask) session:
+    /// a single-round score test of SNP `snp` against the panel's
+    /// cached null model. The session flows through the same lanes,
+    /// backpressure policies, deadlines and lifecycle accounting as a
+    /// full fit; its wire payload is O(d) per institution (summary
+    /// vector `[U | b | q]`, no Hessian) and its handle resolves to a
+    /// [`SecureFitResult`] whose `screen` field carries the statistic
+    /// (empty `beta`).
+    ///
+    /// Data is never copied: the spec holds the panel's pre-split
+    /// covariate shard `Arc`s, and institutions slice the SNP column
+    /// out of the shared panel by reference.
+    pub fn submit_screen(
+        &self,
+        cfg: &ExperimentConfig,
+        panel: &Arc<crate::data::SnpPanel>,
+        null: &Arc<crate::model::NullModelCache>,
+        snp: u32,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<StudyHandle> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            panel.num_institutions() == self.institutions,
+            "panel has {} institutions, engine topology has {}",
+            panel.num_institutions(),
+            self.institutions
+        );
+        anyhow::ensure!(
+            cfg.num_centers == self.centers,
+            "config wants {} centers, engine topology has {}",
+            cfg.num_centers,
+            self.centers
+        );
+        anyhow::ensure!(
+            (snp as usize) < panel.num_snps(),
+            "snp {snp} out of range (panel has {})",
+            panel.num_snps()
+        );
+        anyhow::ensure!(
+            null.d() == panel.d(),
+            "null model has d = {}, panel has d = {}",
+            null.d(),
+            panel.d()
+        );
+        let params = ShamirParams::new(cfg.threshold, cfg.num_centers)?;
+        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let shard = self.shard_of(session);
+        let mut spec = SessionSpec::new(
+            session,
+            panel.shard_data().to_vec(),
+            params,
+            FixedCodec::new(cfg.frac_bits),
+            cfg.mode.is_full(),
+            cfg.kernel_threads,
+            crate::simd::resolve(cfg.kernel_isa),
+            cfg.seed,
+        );
+        spec.screen = Some(Arc::new(crate::session::ScreenTask {
+            panel: panel.clone(),
+            null: null.clone(),
+            snp,
+        }));
+        let spec = Arc::new(spec);
+        self.registry.insert(spec.clone());
+        self.board.set(session, Lifecycle::Queued);
+        let (result_tx, result_rx) = channel();
+        let submitted = Instant::now();
+        if let Some(dl) = opts.deadline {
+            self.timer.schedule(submitted + dl, shard);
+        }
+        let pending = PendingStudy {
+            work: StudyWork::Fresh {
+                spec,
+                mode: cfg.mode,
+                lambda: cfg.lambda,
+                tol: cfg.tol,
+                max_iters: 1,
+            },
+            priority: opts.priority,
+            deadline: opts.deadline,
+            submitted,
+            result_tx,
+        };
+        if let Err(e) = self.enqueue_with_backpressure(shard, opts.policy, pending) {
+            self.registry.remove(session);
+            self.board.remove(session);
+            return Err(e);
+        }
+        self.injector
+            .send_session(NodeId::Coordinator, session, &Message::StudySubmitted)
+            .map_err(|_| anyhow::anyhow!("study engine driver is down"))?;
+        Ok(StudyHandle {
+            session,
+            rx: result_rx,
+        })
+    }
+
+    /// Screen every SNP of `panel` against the cached null model and
+    /// full-fit the hits — the GWAS-at-scale fast path.
+    ///
+    /// This is a **bounded streaming generator**: at most `window`
+    /// screen sessions are in flight at once (submitted but not yet
+    /// joined), so a 10⁵-SNP sweep holds O(window) handles and O(1)
+    /// state per retired SNP — never 10⁵ handles, specs, or fit
+    /// results. Each retired SNP collapses to a 4-word
+    /// [`ScreenRecord`]; the covariate shard `Arc`s and the null-model
+    /// factorization are shared by every session in the sweep.
+    ///
+    /// Screen sessions are submitted with `opts` (a bulk lane +
+    /// [`SubmitPolicy::ShedOldestBulk`] is the intended sweep
+    /// configuration); sessions the engine sheds or deadlines are
+    /// *counted*, not fatal — the sweep keeps going and reports them
+    /// in [`ScreenSweepReport::shed`]. SNPs whose χ² meets
+    /// `threshold` are re-submitted as **interactive-lane full Newton
+    /// fits** (the only point where a `[covariates | g]` design matrix
+    /// is materialized), bit-identical to fitting that SNP standalone.
+    pub fn screen_sweep(
+        &self,
+        cfg: &ExperimentConfig,
+        panel: &Arc<crate::data::SnpPanel>,
+        null: &Arc<crate::model::NullModelCache>,
+        threshold: f64,
+        window: usize,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<ScreenSweepReport> {
+        let window = if window == 0 { 64 } else { window };
+        let mut records: Vec<ScreenRecord> = Vec::with_capacity(panel.num_snps());
+        let mut shed = 0usize;
+        let mut in_flight: VecDeque<(u32, StudyHandle)> = VecDeque::with_capacity(window);
+        // Retire the oldest in-flight screen into the compact sink.
+        // Joins happen in submission order — the engine may complete
+        // them in any order, but the handle channel buffers the result,
+        // so ordered retirement costs nothing and keeps the sink
+        // deterministic.
+        let retire = |h: (u32, StudyHandle), records: &mut Vec<ScreenRecord>, shed: &mut usize| {
+            let (snp, handle) = h;
+            match handle.join() {
+                Ok(fit) => {
+                    let st = fit
+                        .screen
+                        .expect("screen session resolved without a statistic");
+                    records.push(ScreenRecord {
+                        snp,
+                        chi2: st.chi2,
+                        p_value: st.p_value,
+                        hit: st.chi2 >= threshold,
+                    });
+                }
+                // Shed / deadlined / aborted sessions are part of the
+                // sweep contract under ShedOldestBulk — count and move
+                // on; the caller decides whether the coverage is
+                // acceptable.
+                Err(_) => *shed += 1,
+            }
+        };
+        for snp in 0..panel.num_snps() as u32 {
+            if in_flight.len() >= window {
+                let h = in_flight.pop_front().expect("window is non-empty");
+                retire(h, &mut records, &mut shed);
+            }
+            match self.submit_screen(cfg, panel, null, snp, opts) {
+                Ok(handle) => in_flight.push_back((snp, handle)),
+                // A rejected submission (full lane under Reject, or a
+                // blocked submit whose deadline lapsed) sheds this SNP
+                // only.
+                Err(_) => shed += 1,
+            }
+        }
+        for h in in_flight {
+            retire(h, &mut records, &mut shed);
+        }
+        // Full-fit pass over the hits: interactive lane, materialized
+        // [covariates | g_s] design — O(hits), not O(panel).
+        let mut hits: Vec<ScreenHit> = Vec::new();
+        for rec in records.iter().filter(|r| r.hit) {
+            let ds = panel.full_fit_dataset(rec.snp as usize);
+            let fit = self
+                .submit_shared(cfg, ShardData::split(&ds), SubmitOptions::interactive())?
+                .join()?;
+            hits.push(ScreenHit {
+                snp: rec.snp,
+                chi2: rec.chi2,
+                p_value: rec.p_value,
+                fit,
+            });
+        }
+        Ok(ScreenSweepReport {
+            screened: records.len(),
+            shed,
+            records,
+            hits,
         })
     }
 
@@ -2487,6 +2733,8 @@ fn finish_session(
             traffic: net.counters.session_snapshot(spec.session),
             deviance_trace: outcome.deviance_trace,
         },
+        fisher: outcome.fisher,
+        screen: outcome.screen,
     }
 }
 
@@ -3030,5 +3278,150 @@ mod tests {
         engine.shutdown().unwrap();
         let err = h.join().unwrap_err();
         assert!(err.to_string().contains("suspended"), "unexpected: {err:#}");
+    }
+
+    /// Panel + config + null-model cache for the screen tests: the
+    /// null fit itself runs through the secure engine, so the cache is
+    /// seeded exactly the way a consortium would seed it (from
+    /// `SecureFitResult::fisher`), not from a plaintext shortcut.
+    fn screen_fixture(
+        engine: &StudyEngine,
+        cfg: &ExperimentConfig,
+    ) -> (
+        Arc<crate::data::SnpPanel>,
+        Arc<crate::model::NullModelCache>,
+    ) {
+        let panel = Arc::new(crate::data::synthetic_panel("p", 400, 3, 2, 12, 2, 1.5, 31));
+        let null_fit = engine
+            .submit_shared(cfg, panel.shard_data().to_vec(), SubmitOptions::default())
+            .unwrap()
+            .join()
+            .unwrap();
+        let fisher = null_fit.fisher.as_ref().expect("full fit carries fisher");
+        let null = Arc::new(
+            crate::model::NullModelCache::new(null_fit.beta.clone(), fisher, cfg.lambda).unwrap(),
+        );
+        (panel, null)
+    }
+
+    #[test]
+    fn screen_session_matches_plaintext_score_test() {
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        let (panel, null) = screen_fixture(&engine, &cfg);
+        for snp in [0u32, 5, 11] {
+            // Plaintext reference: per-shard scalar stats, summed in
+            // institution order (they are additive), through the same
+            // cached factorization.
+            let (mut u, mut b, mut q) = (0.0f64, vec![0.0f64; panel.d()], 0.0f64);
+            for j in 0..panel.num_institutions() {
+                let sh = &panel.shard_data()[j];
+                let scr = crate::model::ScreenShard::build(
+                    &sh.x,
+                    &sh.y,
+                    &null.beta,
+                    crate::simd::Isa::Scalar,
+                );
+                let (uj, bj, qj) = crate::model::snp_screen_stats_reference(
+                    &sh.x,
+                    &scr,
+                    panel.snp_shard(snp as usize, j),
+                );
+                u += uj;
+                q += qj;
+                for (acc, v) in b.iter_mut().zip(&bj) {
+                    *acc += v;
+                }
+            }
+            let (chi2_ref, p_ref) = null.score_test(u, &b, q);
+            let fit = engine
+                .submit_screen(&cfg, &panel, &null, snp, SubmitOptions::default())
+                .unwrap()
+                .join()
+                .unwrap();
+            let st = fit.screen.expect("screen session carries a statistic");
+            assert!(fit.beta.is_empty());
+            assert!(fit.fisher.is_none());
+            assert_eq!(fit.metrics.iterations, 1);
+            assert_eq!(st.snp, snp);
+            // The secure path quantizes [U | b | q] through the fixed
+            // codec once; the statistic agrees to codec precision.
+            let tol = 1e-2 * chi2_ref.abs().max(1.0);
+            assert!(
+                (st.chi2 - chi2_ref).abs() < tol,
+                "snp {snp}: secure {} vs plaintext {chi2_ref}",
+                st.chi2
+            );
+            assert!((st.p_value - p_ref).abs() < 1e-2);
+        }
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_screen_validates_inputs() {
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        let (panel, null) = screen_fixture(&engine, &cfg);
+        // SNP index out of range.
+        assert!(engine
+            .submit_screen(&cfg, &panel, &null, 12, SubmitOptions::default())
+            .is_err());
+        // Panel topology must match the engine.
+        let wide = Arc::new(crate::data::synthetic_panel("w", 120, 3, 3, 4, 1, 1.0, 32));
+        assert!(engine
+            .submit_screen(&cfg, &wide, &null, 0, SubmitOptions::default())
+            .is_err());
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn screen_sweep_streams_bounded_and_promotes_hits() {
+        let mut cfg = base_cfg();
+        cfg.num_centers = 3;
+        cfg.threshold = 2;
+        let engine = StudyEngine::new(2, 3).unwrap();
+        let (panel, null) = screen_fixture(&engine, &cfg);
+        let report = engine
+            .screen_sweep(&cfg, &panel, &null, 3.84, 3, SubmitOptions::bulk())
+            .unwrap();
+        // Unbounded lanes: nothing sheds, every SNP retires in order.
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.screened, panel.num_snps());
+        let snps: Vec<u32> = report.records.iter().map(|r| r.snp).collect();
+        assert_eq!(snps, (0..panel.num_snps() as u32).collect::<Vec<_>>());
+        // The planted causal SNPs (effect 1.5 at n = 400) must be hits.
+        let hit_snps: Vec<u32> = report.hits.iter().map(|h| h.snp).collect();
+        for &c in &panel.causal {
+            assert!(hit_snps.contains(&(c as u32)), "causal {c} not in {hit_snps:?}");
+        }
+        // Hits mirror the record flags and carry full d+1 fits…
+        assert_eq!(
+            hit_snps,
+            report
+                .records
+                .iter()
+                .filter(|r| r.hit)
+                .map(|r| r.snp)
+                .collect::<Vec<_>>()
+        );
+        for h in &report.hits {
+            assert_eq!(h.fit.beta.len(), panel.d() + 1);
+        }
+        // …bit-identical to fitting the promoted design standalone.
+        let probe = &report.hits[0];
+        let ds = panel.full_fit_dataset(probe.snp as usize);
+        let standalone = engine
+            .submit(&cfg, &ds, SubmitOptions::default())
+            .unwrap()
+            .join()
+            .unwrap();
+        for (a, b) in probe.fit.beta.iter().zip(&standalone.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        engine.shutdown().unwrap();
     }
 }

@@ -104,6 +104,14 @@ pub fn run_institution_worker(
     // stays — the ROADMAP's cross-session amortization item).
     let mut pool = SharePool::new();
     let mut summary: Vec<f64> = Vec::new();
+    // GWAS screening null-state cache, keyed by PANEL id (not session:
+    // a sweep's 10⁵ screen sessions all share one panel and this worker
+    // opens NO per-session state for them). The entry holds the
+    // residual/weight vectors under the sweep's β̂₀ and is rebuilt on a
+    // β̂₀ mismatch (re-fit null model ⇒ stale cache). Entries live for
+    // the worker's lifetime — bounded by the number of distinct panels
+    // served, not by SNPs or sessions.
+    let mut screen_shards: HashMap<u64, crate::model::ScreenShard> = HashMap::new();
     let drop_session = |sessions: &mut HashMap<SessionId, InstSession>, session| {
         if sessions.remove(&session).is_some() {
             cfg.live_sessions.fetch_sub(1, Ordering::Relaxed);
@@ -161,6 +169,33 @@ pub fn run_institution_worker(
                         is_center: false,
                     },
                 );
+            }
+            Message::ScreenRequest { snp } => {
+                // Score-screen fast path: fully stateless per session
+                // (no `sessions` entry, so teardown is a free ack and a
+                // 10⁵-session sweep holds O(1) memory here). Errors are
+                // session-tagged like the broadcast path's.
+                if let Err(e) = handle_screen(
+                    &cfg,
+                    &ep,
+                    &mut share_tables,
+                    &mut screen_shards,
+                    &mut pool,
+                    &mut summary,
+                    session,
+                    from,
+                    snp,
+                ) {
+                    let _ = ep.send_session(
+                        NodeId::Coordinator,
+                        session,
+                        &Message::NodeError {
+                            node: cfg.institution_id,
+                            is_center: false,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                }
             }
             Message::SessionReopen { .. } => {
                 // A suspended session is about to replay its current
@@ -316,6 +351,141 @@ fn handle_broadcast(
         };
         let frame =
             encode_share_submission(session, iter, j, hessian, &holder[..d], holder[d]);
+        ep.send_frame(NodeId::Center(c as u16), session, frame)?;
+    }
+    Ok(())
+}
+
+/// One SNP's screen round: compute the institution's additive share of
+/// the score statistics and submit `[U | b]` / `q` to every center —
+/// Hessian Absent, a single round, iteration fixed at 0.
+///
+/// Steady-state allocation audit (the `prop_score_screen` counting-
+/// allocator gate): with a warm `ScreenShard` cache and `SharePool`,
+/// the statistic kernel, the summary fill, and the fused
+/// encode+share sweep allocate NOTHING; the only allocation per
+/// submission is the exact-capacity wire frame itself
+/// ([`encode_share_submission`]) — identical to the full-fit path,
+/// and excluded from the gate for the same reason.
+#[allow(clippy::too_many_arguments)]
+fn handle_screen(
+    cfg: &InstitutionWorkerConfig,
+    ep: &Endpoint,
+    share_tables: &mut HashMap<(usize, usize), Rc<ShareContext>>,
+    screen_shards: &mut HashMap<u64, crate::model::ScreenShard>,
+    pool: &mut SharePool,
+    summary: &mut Vec<f64>,
+    session: SessionId,
+    from: NodeId,
+    snp: u32,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        from == NodeId::Coordinator,
+        "screen request from non-coordinator {from}"
+    );
+    let j = cfg.institution_id;
+    let spec = cfg
+        .registry
+        .get(session)
+        .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+    let task = spec
+        .screen
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("screen request for non-screen session {session}"))?;
+    anyhow::ensure!(
+        (j as usize) < spec.num_institutions(),
+        "institution {j} not part of session {session}"
+    );
+    anyhow::ensure!(
+        (snp as usize) < task.panel.num_snps(),
+        "snp {snp} out of range for panel of {}",
+        task.panel.num_snps()
+    );
+    let shard = &spec.shards[j as usize];
+    let d = shard.x.cols;
+    anyhow::ensure!(
+        task.null.d() == d,
+        "null model dimension {} != shard dimension {d}",
+        task.null.d()
+    );
+
+    // ---- local compute phase ----
+    // Residuals/weights under β̂₀ come from the panel-keyed cache —
+    // built once per (panel, β̂₀), amortized over the whole sweep.
+    let t_compute = std::time::Instant::now();
+    let scr = match screen_shards.entry(task.panel.panel_id()) {
+        Entry::Occupied(e) => {
+            let e = e.into_mut();
+            if !e.is_for(&task.null.beta) {
+                *e = crate::model::ScreenShard::build(
+                    &shard.x,
+                    &shard.y,
+                    &task.null.beta,
+                    spec.kernel_isa,
+                );
+            }
+            e
+        }
+        Entry::Vacant(v) => v.insert(crate::model::ScreenShard::build(
+            &shard.x,
+            &shard.y,
+            &task.null.beta,
+            spec.kernel_isa,
+        )),
+    };
+    let g_local = task.panel.snp_shard(snp as usize, j as usize);
+    anyhow::ensure!(
+        g_local.len() == shard.x.rows,
+        "panel shard rows {} != covariate shard rows {}",
+        g_local.len(),
+        shard.x.rows
+    );
+    // Summary layout: [U, b_0..b_{d-1}, q] — shared and split on the
+    // wire as g_share = [U | b] (d+1 elements) + dev_share = q.
+    summary.resize(d + 2, 0.0);
+    let (u, q) = {
+        let (_, rest) = summary.split_at_mut(1);
+        crate::model::snp_screen_stats(&shard.x, scr, g_local, spec.kernel_isa, &mut rest[..d])
+    };
+    summary[0] = u;
+    summary[d + 1] = q;
+    let compute_secs = t_compute.elapsed().as_secs_f64();
+
+    // ---- protection + submission phase ----
+    let t = std::time::Instant::now();
+    let key = (spec.params.threshold, spec.params.num_holders);
+    let share_ctx = share_tables
+        .entry(key)
+        .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
+        .clone();
+    let share_seed = spec.institution_share_seed(j);
+    encode_share_into_isa(
+        &share_ctx,
+        &spec.codec,
+        &summary[..d + 2],
+        derive_seed(share_seed, 0),
+        spec.kernel_threads,
+        spec.kernel_isa,
+        pool,
+    )?;
+    let cells = &spec.inst_metrics[j as usize];
+    cells
+        .compute_ns
+        .fetch_add((compute_secs * 1e9) as u64, Ordering::Relaxed);
+    cells
+        .protect_ns
+        .fetch_add((t.elapsed().as_secs_f64() * 1e9) as u64, Ordering::Relaxed);
+    cells.iterations.fetch_add(1, Ordering::Relaxed);
+    for c in 0..spec.num_centers() {
+        let holder = pool.holder(c);
+        let frame = encode_share_submission(
+            session,
+            0,
+            j,
+            HessianRef::Absent,
+            &holder[..d + 1],
+            holder[d + 1],
+        );
         ep.send_frame(NodeId::Center(c as u16), session, frame)?;
     }
     Ok(())
@@ -566,6 +736,88 @@ mod tests {
         assert!(matches!(msg, Message::NodeError { .. }));
         // The worker is still alive and shuts down cleanly.
         coord.send(NodeId::Institution(2), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// Screen requests are served STATELESSLY: shares of [U|b] and q
+    /// reach every center with an Absent Hessian, the live-session
+    /// gauge never moves, and with t=1 the shares decode to the
+    /// plaintext reference statistics.
+    #[test]
+    fn screen_request_submits_score_stats_statelessly() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let center = net.register(NodeId::Center(0));
+        let iep = net.register(NodeId::Institution(0));
+        let registry = SessionRegistry::new();
+        let panel = Arc::new(crate::data::synthetic_panel("t", 40, 3, 1, 6, 1, 1.0, 13));
+        let ds = &panel.covariates;
+        let fit = crate::model::damped_newton_fit(&ds.x, &ds.y, 1e-3, 1e-10, 50, 20).unwrap();
+        let stats = crate::model::local_stats(&ds.x, &ds.y, &fit.beta);
+        let null = Arc::new(
+            crate::model::NullModelCache::new(fit.beta.clone(), &stats.h, 1e-3).unwrap(),
+        );
+        let mut spec = SessionSpec::new(
+            3,
+            panel.shard_data().to_vec(),
+            ShamirParams::new(1, 1).unwrap(),
+            FixedCodec::default(),
+            false,
+            1,
+            crate::simd::Isa::Scalar,
+            7,
+        );
+        spec.screen = Some(Arc::new(crate::session::ScreenTask {
+            panel: panel.clone(),
+            null: null.clone(),
+            snp: 4,
+        }));
+        registry.insert(Arc::new(spec));
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let cfg = InstitutionWorkerConfig {
+            institution_id: 0,
+            registry,
+            engine: ComputeHandle::rust(),
+            live_sessions: gauge.clone(),
+        };
+        let th = std::thread::spawn(move || run_institution_worker(cfg, iep).unwrap());
+        coord
+            .send_session(NodeId::Institution(0), 3, &Message::ScreenRequest { snp: 4 })
+            .unwrap();
+        let (from, session, msg) = center.recv_session().unwrap();
+        assert_eq!(from, NodeId::Institution(0));
+        assert_eq!(session, 3);
+        let codec = FixedCodec::default();
+        match msg {
+            Message::ShareSubmission { iter, institution, hessian, g_share, dev_share } => {
+                assert_eq!(iter, 0, "screens are single-round");
+                assert_eq!(institution, 0);
+                assert!(matches!(hessian, HessianPayload::Absent));
+                assert_eq!(g_share.len(), 4, "[U | b] is d+1 elements");
+                // t=1 ⇒ shares are the encoded secrets: compare against
+                // the plaintext reference statistics.
+                let sh = crate::model::ScreenShard::build(
+                    &ds.x, &ds.y, &fit.beta, crate::simd::Isa::Scalar,
+                );
+                let (u, b, q) =
+                    crate::model::snp_screen_stats_reference(&ds.x, &sh, panel.snp_column(4));
+                assert!((codec.decode(g_share[0]) - u).abs() < 1e-4);
+                for (gs, want) in g_share[1..].iter().zip(&b) {
+                    assert!((codec.decode(*gs) - want).abs() < 1e-4);
+                }
+                assert!((codec.decode(dev_share) - q).abs() < 1e-4);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "screens open NO session state");
+        // Teardown of a never-opened session still acks (free close).
+        coord
+            .send_session(NodeId::Institution(0), 3, &Message::SessionClose { iter: 0, beta: vec![] })
+            .unwrap();
+        let (_, session, msg) = coord.recv_session().unwrap();
+        assert_eq!(session, 3);
+        assert_eq!(msg, Message::CloseAck { node: 0, is_center: false });
+        coord.send(NodeId::Institution(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }
 

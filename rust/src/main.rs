@@ -28,6 +28,7 @@ USAGE:
 COMMANDS:
     fit        run the secure distributed protocol (--save <path> to persist)
     multifit   run K concurrent fits on one persistent study network
+    gwas       screen a SNP panel with secure score tests, full-fit hits
     serve      run ONE consortium member over real TCP (--features net)
     compare    secure vs centralized gold standard (accuracy check)
     cv         secure k-fold cross-validation over a λ grid
@@ -79,6 +80,21 @@ MULTIFIT FLAGS:
                          re-admitted for replay                     [0]
     --retry-exhausted <p>  abort | park: fate of a session whose
                          retry budget is spent                  [abort]
+
+GWAS FLAGS (plus the multifit control-plane flags):
+    --n <n>              panel records                            [5000]
+    --d <n>              shared covariates (incl. intercept)         [6]
+    --institutions <n>   consortium institutions                     [5]
+    --snps <n>           SNP columns to screen                    [1000]
+    --causal <n>         planted causal SNPs                        [10]
+    --effect <f>         planted per-allele log-odds effect        [0.5]
+    --screen-threshold <f>  χ²(1) promotion threshold; hits are
+                         re-fitted as full interactive-lane Newton
+                         sessions (29.72 ≈ genome-wide p = 5·10⁻⁸,
+                         10.83 ≈ p = 10⁻³)                      [10.83]
+    --window <n>         max screen sessions in flight at once — the
+                         sweep streams, it never materializes one
+                         handle per SNP (0 = 64)                    [0]
 
 SERVE FLAGS (requires a build with --features net):
     --role <r>           coordinator | institution | center  (required)
@@ -324,6 +340,118 @@ fn cmd_multifit(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `privlr gwas`: the GWAS-at-scale fast path — one secure null fit
+/// on the shared covariate block, then a streamed score-test screen of
+/// every SNP (single-round sessions, O(d) wire payload each), with
+/// hits above the χ² threshold promoted to full interactive-lane
+/// Newton fits of `[covariates | g]`.
+fn cmd_gwas(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = config_from_args(args)?;
+    cfg.max_in_flight = args.get_usize("max-in-flight", cfg.max_in_flight)?;
+    cfg.auto_retire = args.get_usize("auto-retire", cfg.auto_retire)?;
+    cfg.driver_shards = args.get_usize("driver-shards", cfg.driver_shards)?;
+    cfg.lane_capacity = args.get_usize("lane-capacity", cfg.lane_capacity)?;
+    let policy = match args.get("policy") {
+        Some(p) => privlr::engine::SubmitPolicy::parse(p)?,
+        None => privlr::engine::SubmitPolicy::default(),
+    };
+    cfg.validate()?;
+    let n = args.get_usize("n", 5000)?;
+    let d = args.get_usize("d", 6)?;
+    let institutions = args.get_usize("institutions", 5)?;
+    let num_snps = args.get_usize("snps", 1000)?;
+    let causal = args.get_usize("causal", 10)?;
+    let effect = args.get_f64("effect", 0.5)?;
+    let threshold = args.get_f64("screen-threshold", 10.83)?;
+    let window = args.get_usize("window", 0)?;
+    let panel = std::sync::Arc::new(privlr::data::synthetic_panel(
+        "gwas", n, d, institutions, num_snps, causal, effect, cfg.seed,
+    ));
+    println!(
+        "panel: {} records × {} covariates × {} SNPs across {} institutions | centers={} t={} \
+         screen threshold χ² ≥ {threshold}",
+        n, d, num_snps, institutions, cfg.num_centers, cfg.threshold,
+    );
+    let engine = privlr::engine::StudyEngine::for_experiment(&panel.covariates, &cfg)?;
+    // Null model: ONE full secure fit of the shared covariate block;
+    // its β̂₀ and reconstructed Fisher block seed the per-consortium
+    // cache every screen session reuses.
+    let t_null = std::time::Instant::now();
+    let null_fit = engine
+        .submit_shared(
+            &cfg,
+            panel.shard_data().to_vec(),
+            privlr::engine::SubmitOptions::interactive(),
+        )?
+        .join()?;
+    let fisher = null_fit
+        .fisher
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("null fit returned no fisher block"))?;
+    let null = std::sync::Arc::new(privlr::model::NullModelCache::new(
+        null_fit.beta.clone(),
+        fisher,
+        cfg.lambda,
+    )?);
+    println!(
+        "null model: {} iterations in {} (cached: β̂₀, sigmoid weights, factorized Fisher block)",
+        null_fit.metrics.iterations,
+        fmt_duration(t_null.elapsed().as_secs_f64()),
+    );
+    let t_screen = std::time::Instant::now();
+    let report = engine.screen_sweep(
+        &cfg,
+        &panel,
+        &null,
+        threshold,
+        window,
+        privlr::engine::SubmitOptions::bulk().policy(policy),
+    )?;
+    let screen_secs = t_screen.elapsed().as_secs_f64();
+    let traffic = engine.shutdown()?;
+    println!(
+        "\nscreened {} SNPs ({} shed) in {} → {:.0} SNPs/sec; {} promoted to full fits",
+        report.screened,
+        report.shed,
+        fmt_duration(screen_secs),
+        report.screened as f64 / screen_secs,
+        report.hits.len(),
+    );
+    println!(
+        "traffic: {} total ({} sessions incl. null fit and promotions)",
+        fmt_bytes(traffic.total_bytes),
+        traffic.per_session.len().saturating_sub(1),
+    );
+    println!(
+        "\n{:>8} {:>12} {:>12} {:>14} {:>8}",
+        "SNP", "score χ²", "p-value", "full-fit β̂", "causal?"
+    );
+    for h in &report.hits {
+        println!(
+            "{:>8} {:>12.2} {:>12.3e} {:>+14.6} {:>8}",
+            h.snp,
+            h.chi2,
+            h.p_value,
+            h.fit.beta.last().copied().unwrap_or(f64::NAN),
+            if panel.causal.contains(&(h.snp as usize)) {
+                "yes"
+            } else {
+                "no"
+            },
+        );
+    }
+    let found = report
+        .hits
+        .iter()
+        .filter(|h| panel.causal.contains(&(h.snp as usize)))
+        .count();
+    println!(
+        "\nrecovered {found}/{} planted causal SNPs at this threshold",
+        panel.causal.len()
+    );
+    Ok(())
+}
+
 /// `privlr serve`: run ONE consortium member process over real TCP.
 /// The multifit control-plane flags tune the coordinator's engine; the
 /// worker roles only need the shared experiment config (from which
@@ -527,6 +655,7 @@ fn main() {
     let result = match cmd.as_str() {
         "fit" => cmd_fit(&args),
         "multifit" => cmd_multifit(&args),
+        "gwas" => cmd_gwas(&args),
         "serve" => cmd_serve(&args),
         "compare" => cmd_compare(&args),
         "cv" => cmd_cv(&args),

@@ -197,6 +197,16 @@ pub enum Message {
     /// duplicated reopen frames are harmless.
     SessionReopen { iter: u32 },
 
+    /// Coordinator → institutions: screen SNP `snp` of the session's
+    /// panel (score-test fast path). The institution answers with ONE
+    /// [`Message::ShareSubmission`] per center carrying its shares of
+    /// the O(d) score statistics `[U | b]` in `g_share` and `q` in
+    /// `dev_share`, `hessian` Absent — a single round, no β broadcast
+    /// and no per-SNP Hessian ever exists. Stateless on the receiver:
+    /// institutions never open per-session state for screens, so a
+    /// 10⁵-session sweep holds O(1) worker memory.
+    ScreenRequest { snp: u32 },
+
     /// Orderly teardown of node threads.
     Shutdown,
 }
@@ -217,6 +227,7 @@ impl Message {
             Message::AdmissionWake => "admission_wake",
             Message::WorkerDown { .. } => "worker_down",
             Message::SessionReopen { .. } => "session_reopen",
+            Message::ScreenRequest { .. } => "screen_request",
             Message::Shutdown => "shutdown",
         }
     }
@@ -401,6 +412,7 @@ pub const TAG_ABORT: u8 = 11;
 pub const TAG_ADMISSION_WAKE: u8 = 12;
 pub const TAG_WORKER_DOWN: u8 = 13;
 pub const TAG_SESSION_REOPEN: u8 = 14;
+pub const TAG_SCREEN_REQ: u8 = 15;
 
 /// Message tag byte of an encoded wire frame (`None` for frames
 /// shorter than header + tag). The fault layer matches per-tag rules
@@ -513,6 +525,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u8(TAG_SESSION_REOPEN);
             w.u32(*iter);
         }
+        Message::ScreenRequest { snp } => {
+            w.u8(TAG_SCREEN_REQ);
+            w.u32(*snp);
+        }
         Message::Shutdown => w.u8(TAG_SHUTDOWN),
     }
     w.buf
@@ -567,6 +583,7 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
             is_center: r.u8()? != 0,
         },
         TAG_SESSION_REOPEN => Message::SessionReopen { iter: r.u32()? },
+        TAG_SCREEN_REQ => Message::ScreenRequest { snp: r.u32()? },
         TAG_NODE_ERROR => {
             let node = r.u16()?;
             let is_center = r.u8()? != 0;
@@ -817,7 +834,33 @@ mod tests {
         });
         roundtrip(Message::SessionReopen { iter: 0 });
         roundtrip(Message::SessionReopen { iter: u32::MAX });
+        roundtrip(Message::ScreenRequest { snp: 0 });
+        roundtrip(Message::ScreenRequest { snp: u32::MAX });
         roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn screen_request_wire_shape() {
+        // tag + u32 snp: fixed 5-byte body, truncation rejected.
+        let bytes = encode(&Message::ScreenRequest { snp: 123_456 });
+        assert_eq!(bytes.len(), 1 + 4);
+        assert_eq!(bytes[0], TAG_SCREEN_REQ);
+        assert!(matches!(
+            decode(&bytes[..bytes.len() - 1]),
+            Err(CodecError::Truncated { .. })
+        ));
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(matches!(
+            decode(&trailing),
+            Err(CodecError::Truncated { wanted: 0, .. })
+        ));
+        let bytes = encode_frame(42, &Message::ScreenRequest { snp: 7 });
+        assert_eq!(frame_tag(&bytes), Some(TAG_SCREEN_REQ));
+        let (s, back) = decode_frame(&bytes).unwrap();
+        assert_eq!(s, 42);
+        assert_eq!(back, Message::ScreenRequest { snp: 7 });
+        assert_eq!(back.kind(), "screen_request");
     }
 
     #[test]

@@ -147,6 +147,34 @@ impl InstMetricCells {
     }
 }
 
+/// The screening attachment of a session spec: which SNP of which
+/// panel to score-test against which cached null model. Everything in
+/// here is `Arc`-shared across the whole sweep — a spec carries column
+/// REFERENCES, never copied covariate or genotype blocks, which is what
+/// lets 10⁵+ screen sessions reference one panel.
+pub struct ScreenTask {
+    /// The shared panel (covariate shards + genotype columns).
+    pub panel: Arc<crate::data::SnpPanel>,
+    /// The consortium's null-model cache (β̂₀ + factorized F₀+λI),
+    /// built once from the covariate-only secure fit.
+    pub null: Arc<crate::model::NullModelCache>,
+    /// The SNP this session screens.
+    pub snp: u32,
+}
+
+/// One SNP's screening result (the compact per-SNP record — O(1)
+/// retention per retired session).
+#[derive(Clone, Copy, Debug)]
+pub struct ScreenStat {
+    pub snp: u32,
+    /// Reconstructed score numerator U = gᵀ(y−μ̂₀).
+    pub u: f64,
+    /// Score statistic χ² = U²/V ~ χ²(1) under H₀.
+    pub chi2: f64,
+    /// Two-sided p-value.
+    pub p_value: f64,
+}
+
 /// Everything the persistent workers need to serve one session.
 pub struct SessionSpec {
     pub session: SessionId,
@@ -171,6 +199,11 @@ pub struct SessionSpec {
     pub center_busy_ns: Vec<Arc<AtomicU64>>,
     /// Per-institution timing cells for THIS session.
     pub inst_metrics: Vec<Arc<InstMetricCells>>,
+    /// `Some` makes this a score-screen session: ONE round of O(d)
+    /// statistics instead of iterated Newton over `[g|dev|H]`. `None`
+    /// (the default from [`SessionSpec::new`]) is a full fit; the
+    /// engine's `submit_screen` sets it before publishing the spec.
+    pub screen: Option<Arc<ScreenTask>>,
 }
 
 impl SessionSpec {
@@ -200,12 +233,25 @@ impl SessionSpec {
             master_seed,
             center_busy_ns: (0..w).map(|_| Arc::new(AtomicU64::new(0))).collect(),
             inst_metrics: (0..s).map(|_| Arc::new(InstMetricCells::default())).collect(),
+            screen: None,
         }
     }
 
     /// Model dimension (columns of every shard's design matrix).
     pub fn d(&self) -> usize {
         self.shards.first().map_or(0, |sh| sh.x.cols)
+    }
+
+    /// Length of the secret-shared statistic vector on the wire: `d`
+    /// (the gradient) for Newton fits, `d+1` (`[U | b]`) for screens.
+    /// Centers size their accumulators from this without knowing which
+    /// statistic they are summing.
+    pub fn stat_len(&self) -> usize {
+        if self.screen.is_some() {
+            self.d() + 1
+        } else {
+            self.d()
+        }
     }
 
     /// Number of participating institutions (S).
@@ -287,6 +333,15 @@ pub struct SessionOutcome {
     /// Coordinator-side reconstruction + Newton seconds (the centers'
     /// share of central time lives in the spec's busy counters).
     pub central_secs: f64,
+    /// The final reconstructed (unpenalized) aggregate Fisher block —
+    /// the Hessian the coordinator already reconstructs every round,
+    /// cloned once at completion. This is what seeds a
+    /// [`crate::model::NullModelCache`] for GWAS screening, so caching
+    /// it leaks nothing a full fit does not already reveal. `None` for
+    /// screen sessions (no Hessian ever exists on that path).
+    pub fisher: Option<Matrix>,
+    /// `Some` iff this was a screen session: the SNP's score statistic.
+    pub screen: Option<ScreenStat>,
 }
 
 /// What the driver should do after feeding a response to the machine.
@@ -346,7 +401,11 @@ impl SessionState {
         let d = spec.d();
         let w = spec.num_centers();
         let t = spec.params.threshold;
-        let packed = if mode.is_full() { packed_len(d) } else { 0 };
+        // Screens never carry a Hessian in any mode; their shared
+        // statistic vector is [U | b] of length d+1 (see `stat_len`).
+        let screen = spec.screen.is_some();
+        let packed = if !screen && mode.is_full() { packed_len(d) } else { 0 };
+        let sl = spec.stat_len();
         SessionState {
             spec,
             mode,
@@ -364,8 +423,8 @@ impl SessionState {
             lagrange: LagrangeCache::new(),
             idx_buf: Vec::with_capacity(t),
             dev_buf: Vec::with_capacity(t),
-            g_fp: vec![Fp::ZERO; d],
-            g_f64: vec![0.0; d],
+            g_fp: vec![Fp::ZERO; sl],
+            g_f64: vec![0.0; sl],
             h_fp: vec![Fp::ZERO; packed],
             h_f64: vec![0.0; packed],
             h_mat: Matrix::zeros(d, d),
@@ -406,19 +465,23 @@ impl SessionState {
         self.round_messages()
     }
 
-    /// Broadcast β + aggregate requests for the current iteration.
+    /// Broadcast β + aggregate requests for the current iteration. A
+    /// screen session sends [`Message::ScreenRequest`] instead of a β
+    /// broadcast — the institutions already hold β̂₀ through the spec's
+    /// [`ScreenTask`]; only the 4-byte SNP index crosses the wire.
     fn round_messages(&self) -> Vec<(NodeId, Message)> {
         let s = self.spec.num_institutions();
         let w = self.spec.num_centers();
         let mut out = Vec::with_capacity(s + w);
         for j in 0..s {
-            out.push((
-                NodeId::Institution(j as u16),
-                Message::BetaBroadcast {
+            let msg = match &self.spec.screen {
+                Some(task) => Message::ScreenRequest { snp: task.snp },
+                None => Message::BetaBroadcast {
                     iter: self.iter,
                     beta: self.beta.clone(),
                 },
-            ));
+            };
+            out.push((NodeId::Institution(j as u16), msg));
         }
         for c in 0..w {
             out.push((
@@ -442,12 +505,19 @@ impl SessionState {
         let s = self.spec.num_institutions();
         let w = self.spec.num_centers();
         let mut out = Vec::with_capacity(s + w);
+        // Screens close with an empty β (there is no per-SNP model to
+        // distribute, and 10⁵ closes × d floats would be pure waste).
+        let close_beta = if self.spec.screen.is_some() {
+            Vec::new()
+        } else {
+            self.beta.clone()
+        };
         for j in 0..s {
             out.push((
                 NodeId::Institution(j as u16),
                 Message::SessionClose {
                     iter: self.iterations - 1,
-                    beta: self.beta.clone(),
+                    beta: close_beta.clone(),
                 },
             ));
         }
@@ -527,6 +597,37 @@ impl SessionState {
         self.dev_buf.clear();
         self.dev_buf.extend(quorum.iter().map(|(_, _, _, dv)| *dv));
         let dev_total = codec.decode(reconstruct_scalar_with(lambdas, &self.dev_buf));
+
+        if let Some(task) = self.spec.screen.clone() {
+            // Screen round: the reconstructed vector is [U | b] and the
+            // scalar slot carries q. One round, no Hessian, no Newton —
+            // the variance correction runs against the cached null
+            // factorization and the session completes immediately.
+            let u = self.g_f64[0];
+            let b = &self.g_f64[1..];
+            let q = dev_total;
+            let (chi2, p_value) = task.null.score_test(u, b, q);
+            self.central_secs += t_central.elapsed().as_secs_f64();
+            self.responses.clear();
+            let outgoing = self.finish_messages();
+            return Ok(SessionStep::Done {
+                outgoing,
+                outcome: SessionOutcome {
+                    beta: Vec::new(),
+                    iterations: 1,
+                    deviance_trace: Vec::new(),
+                    central_secs: self.central_secs,
+                    fisher: None,
+                    screen: Some(ScreenStat {
+                        snp: task.snp,
+                        u,
+                        chi2,
+                        p_value,
+                    }),
+                },
+            });
+        }
+
         match self.mode {
             SecurityMode::Pragmatic => {
                 // Lead center (id 0) carries the plaintext aggregate.
@@ -585,6 +686,11 @@ impl SessionState {
                     iterations: self.iterations,
                     deviance_trace: std::mem::take(&mut self.deviance_trace),
                     central_secs: self.central_secs,
+                    // The Hessian reconstructed in the final round (at
+                    // the last β the institutions evaluated) — the seed
+                    // of the GWAS null-model cache.
+                    fisher: Some(self.h_mat.clone()),
+                    screen: None,
                 },
             });
         }
@@ -666,6 +772,91 @@ mod tests {
             .count();
         assert_eq!(broadcasts, 3);
         assert_eq!(requests, 5);
+    }
+
+    fn screen_spec(session: SessionId, w: usize, t: usize) -> Arc<SessionSpec> {
+        let panel = Arc::new(crate::data::synthetic_panel("t", 48, 3, 2, 4, 1, 1.0, 9));
+        let ds = &panel.covariates;
+        let fit = crate::model::damped_newton_fit(&ds.x, &ds.y, 1e-3, 1e-10, 50, 20).unwrap();
+        let stats = crate::model::local_stats(&ds.x, &ds.y, &fit.beta);
+        let null = Arc::new(
+            crate::model::NullModelCache::new(fit.beta.clone(), &stats.h, 1e-3).unwrap(),
+        );
+        let mut spec = SessionSpec::new(
+            session,
+            panel.shard_data().to_vec(),
+            ShamirParams::new(t, w).unwrap(),
+            FixedCodec::default(),
+            false,
+            1,
+            crate::simd::Isa::Scalar,
+            42,
+        );
+        spec.screen = Some(Arc::new(ScreenTask {
+            panel: panel.clone(),
+            null,
+            snp: 2,
+        }));
+        Arc::new(spec)
+    }
+
+    #[test]
+    fn screen_spec_stat_len_and_round_shape() {
+        let sp = screen_spec(9, 3, 2);
+        assert_eq!(sp.d(), 3);
+        assert_eq!(sp.stat_len(), 4, "screen stats are [U | b]");
+        assert_eq!(spec(9, 2, 3, 2, 3).stat_len(), 3, "Newton stats are g");
+        let st = SessionState::new(sp, SecurityMode::Pragmatic, 1e-3, 1e-10, 10);
+        let msgs = st.begin();
+        assert_eq!(msgs.len(), 2 + 3);
+        for (to, m) in &msgs {
+            match to {
+                NodeId::Institution(_) => {
+                    assert_eq!(m, &Message::ScreenRequest { snp: 2 });
+                }
+                NodeId::Center(_) => {
+                    assert!(matches!(m, Message::AggregateRequest { iter: 0, expected: 2 }));
+                }
+                other => panic!("unexpected recipient {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn screen_session_completes_in_one_round() {
+        // All-zero shares reconstruct to U=0, b=0, q=0 — a degenerate
+        // statistic — which must still complete the session in ONE
+        // round with χ²=0, p=1 and an empty β (the state-machine shape;
+        // real shares are gated in tests/prop_score_screen.rs).
+        let sp = screen_spec(4, 3, 2);
+        let mut st = SessionState::new(sp, SecurityMode::Pragmatic, 1e-3, 1e-10, 10);
+        let _ = st.begin();
+        for center in 0..2u16 {
+            let step = st
+                .on_aggregate_response(center, HessianPayload::Absent, vec![Fp::ZERO; 4], Fp::ZERO, 0)
+                .unwrap();
+            assert!(matches!(step, SessionStep::Pending));
+        }
+        let step = st
+            .on_aggregate_response(2, HessianPayload::Absent, vec![Fp::ZERO; 4], Fp::ZERO, 0)
+            .unwrap();
+        match step {
+            SessionStep::Done { outgoing, outcome } => {
+                assert!(outcome.beta.is_empty());
+                assert!(outcome.fisher.is_none());
+                let stat = outcome.screen.expect("screen outcome");
+                assert_eq!(stat.snp, 2);
+                assert_eq!(stat.chi2, 0.0);
+                assert_eq!(stat.p_value, 1.0);
+                assert_eq!(outcome.iterations, 1);
+                // Teardown closes every node with an EMPTY β.
+                assert_eq!(outgoing.len(), 2 + 3);
+                for (_, m) in &outgoing {
+                    assert!(matches!(m, Message::SessionClose { beta, .. } if beta.is_empty()));
+                }
+            }
+            _ => panic!("screen session must finish after one round"),
+        }
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! End-to-end acceptance gate for the GWAS screening fast path:
+//! secure score-test screening + full-fit-on-hits must reach exactly
+//! the decisions exhaustive full fitting reaches — same hit set,
+//! bit-identical β̂ on every hit — on a synthetic panel with planted
+//! effects, across driver shard counts {1, 2, 4}.
+//!
+//! The promotion threshold is placed in the middle of the gap between
+//! the strongest non-hit and the weakest hit of the PLAINTEXT score
+//! statistics, so the codec-precision difference between the secure
+//! statistic and the plaintext one cannot flip a decision — the gate
+//! then demands exact hit-set equality, not approximate agreement.
+
+use privlr::config::ExperimentConfig;
+use privlr::data::{synthetic_panel, SnpPanel};
+use privlr::engine::{StudyEngine, SubmitOptions, SubmitPolicy};
+use privlr::model::{snp_screen_stats_reference, NullModelCache, ScreenShard};
+use privlr::session::ShardData;
+use privlr::simd::Isa;
+use std::sync::Arc;
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        max_iters: 50,
+        num_centers: 3,
+        threshold: 2,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn panel() -> Arc<SnpPanel> {
+    Arc::new(synthetic_panel("gwas-gate", 600, 4, 2, 24, 3, 1.2, 77))
+}
+
+/// Plaintext score statistics for every SNP: per-shard reference
+/// kernels summed in institution order through the given null cache.
+fn plaintext_stats(panel: &SnpPanel, null: &NullModelCache) -> Vec<f64> {
+    let d = panel.d();
+    let shards: Vec<ScreenShard> = panel
+        .shard_data()
+        .iter()
+        .map(|sh| ScreenShard::build(&sh.x, &sh.y, &null.beta, Isa::Scalar))
+        .collect();
+    (0..panel.num_snps())
+        .map(|s| {
+            let (mut u, mut b, mut q) = (0.0f64, vec![0.0f64; d], 0.0f64);
+            for (j, scr) in shards.iter().enumerate() {
+                let (uj, bj, qj) =
+                    snp_screen_stats_reference(&panel.shard_data()[j].x, scr, panel.snp_shard(s, j));
+                u += uj;
+                q += qj;
+                for (acc, v) in b.iter_mut().zip(&bj) {
+                    *acc += v;
+                }
+            }
+            null.score_test(u, &b, q).0
+        })
+        .collect()
+}
+
+/// Fit the null model securely on `engine` and build the cache from
+/// the fit's reconstructed Fisher block — the deployment path, no
+/// plaintext shortcut.
+fn secure_null(engine: &StudyEngine, cfg: &ExperimentConfig, panel: &SnpPanel) -> Arc<NullModelCache> {
+    let fit = engine
+        .submit_shared(cfg, panel.shard_data().to_vec(), SubmitOptions::interactive())
+        .unwrap()
+        .join()
+        .unwrap();
+    let fisher = fit.fisher.as_ref().expect("full fit carries fisher");
+    Arc::new(NullModelCache::new(fit.beta.clone(), fisher, cfg.lambda).unwrap())
+}
+
+#[test]
+fn screening_reaches_exhaustive_full_fit_decisions_across_shards() {
+    let panel = panel();
+    let cfg = base_cfg();
+
+    // ---- exhaustive arm (single-shard engine, ground truth) ----
+    let engine = StudyEngine::for_experiment(&panel.covariates, &cfg).unwrap();
+    let null = secure_null(&engine, &cfg, &panel);
+
+    // Place the threshold mid-gap between the 3rd and 4th strongest
+    // plaintext statistics: the hit set is exactly the top 3, with a
+    // decision margin far beyond codec precision. A *plaintext* cache
+    // twin (same β̂₀/Fisher, both from the secure null fit) keyed the
+    // statistics, so the two arms share one decision rule.
+    let stats = plaintext_stats(&panel, &null);
+    let mut sorted = stats.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let threshold = 0.5 * (sorted[2] + sorted[3]);
+    assert!(
+        sorted[2] - sorted[3] > 1.0,
+        "degenerate fixture: no decision gap ({} vs {})",
+        sorted[2],
+        sorted[3]
+    );
+    // Sanity: the planted causal SNPs are the top 3.
+    let mut expected_hits: Vec<u32> = stats
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c >= threshold)
+        .map(|(s, _)| s as u32)
+        .collect();
+    expected_hits.sort_unstable();
+    assert_eq!(
+        expected_hits,
+        panel.causal.iter().map(|&c| c as u32).collect::<Vec<_>>(),
+        "planted effects must dominate the screen"
+    );
+
+    // Exhaustively full-fit EVERY SNP; keep β̂ of the expected hits.
+    let mut exhaustive_betas: Vec<Vec<f64>> = Vec::new();
+    for s in 0..panel.num_snps() {
+        let ds = panel.full_fit_dataset(s);
+        let fit = engine
+            .submit_shared(&cfg, ShardData::split(&ds), SubmitOptions::default())
+            .unwrap()
+            .join()
+            .unwrap();
+        assert_eq!(fit.beta.len(), panel.d() + 1);
+        if expected_hits.contains(&(s as u32)) {
+            exhaustive_betas.push(fit.beta);
+        }
+    }
+    engine.shutdown().unwrap();
+
+    // ---- screening arm, at driver shards ∈ {1, 2, 4} ----
+    for shards in [1usize, 2, 4] {
+        let mut cfg = base_cfg();
+        cfg.driver_shards = shards;
+        let engine = StudyEngine::for_experiment(&panel.covariates, &cfg).unwrap();
+        let null = secure_null(&engine, &cfg, &panel);
+        let report = engine
+            .screen_sweep(
+                &cfg,
+                &panel,
+                &null,
+                threshold,
+                4,
+                SubmitOptions::bulk().policy(SubmitPolicy::ShedOldestBulk),
+            )
+            .unwrap();
+        engine.shutdown().unwrap();
+        // Unbounded lanes: full coverage, nothing shed.
+        assert_eq!(report.shed, 0, "shards={shards}");
+        assert_eq!(report.screened, panel.num_snps(), "shards={shards}");
+        // Identical hit set…
+        let hit_snps: Vec<u32> = report.hits.iter().map(|h| h.snp).collect();
+        assert_eq!(hit_snps, expected_hits, "shards={shards}");
+        // …and bit-identical β̂ on every hit vs the exhaustive arm.
+        for (h, exhaustive) in report.hits.iter().zip(&exhaustive_betas) {
+            assert_eq!(h.fit.beta.len(), exhaustive.len());
+            for (a, b) in h.fit.beta.iter().zip(exhaustive) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "shards={shards} snp={} β̂ diverged",
+                    h.snp
+                );
+            }
+        }
+    }
+}
+
+/// The screen's traffic invariant: a score-screen session moves O(d)
+/// per institution per center — never a packed Hessian — and its
+/// per-session bytes are attributed exactly like a fit's.
+#[test]
+fn screen_sessions_are_o_d_on_the_wire() {
+    let panel = panel();
+    let cfg = base_cfg();
+    let engine = StudyEngine::for_experiment(&panel.covariates, &cfg).unwrap();
+    let null = secure_null(&engine, &cfg, &panel);
+    let screen_fit = engine
+        .submit_screen(&cfg, &panel, &null, 0, SubmitOptions::default())
+        .unwrap()
+        .join()
+        .unwrap();
+    let full = panel.full_fit_dataset(0);
+    let full_fit = engine
+        .submit_shared(&cfg, ShardData::split(&full), SubmitOptions::default())
+        .unwrap()
+        .join()
+        .unwrap();
+    engine.shutdown().unwrap();
+    // One screen round moves far less than one full fit (which carries
+    // a packed (d+1)(d+2)/2 Hessian per institution per center per
+    // iteration). The screen's whole session — submissions, aggregate,
+    // teardown — must stay under a single full-fit iteration's
+    // submission traffic.
+    let screen_bytes = screen_fit.metrics.traffic.total_bytes;
+    let full_bytes = full_fit.metrics.traffic.total_bytes;
+    assert!(
+        screen_bytes * 4 < full_bytes,
+        "screen session moved {screen_bytes} bytes vs full fit {full_bytes}"
+    );
+    assert!(screen_fit.screen.is_some());
+    assert_eq!(screen_fit.metrics.iterations, 1);
+}

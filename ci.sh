@@ -44,6 +44,10 @@ echo "== gwas-screen gate (score-test bit-identity + zero-alloc share path + scr
 cargo test -q --test prop_score_screen
 cargo test -q --test integration_gwas
 
+echo "== dp-release gate (noise-share determinism + field-exact folds + accountant exhaustion + attack closure) =="
+cargo test -q --test prop_dp
+cargo test -q --test integration_attack
+
 echo "== feature matrix: --features simd (vector kernels, bit-identity gates) =="
 # The simd feature compiles the AVX2 kernel bodies; at runtime they are
 # taken only on CPUs with AVX2 (resolve(Auto)), so these gates are the
@@ -54,6 +58,7 @@ cargo test -q --features simd
 cargo test -q --features simd --test prop_kernels
 cargo test -q --features simd --test prop_secure_pipeline
 cargo test -q --features simd --test prop_score_screen
+cargo test -q --features simd --test prop_dp
 
 echo "== feature matrix: --features net (TCP transport, hardened framing) =="
 # The net feature adds the std::net fabric + `privlr serve`; the default
@@ -65,6 +70,9 @@ cargo test -q --features net
 
 echo "== network transport gate (loopback-TCP bit-identity, socket-kill replay, hostile frames) =="
 cargo test -q --features net --test integration_net
+
+echo "== multi-process serve gate (real subprocesses over loopback TCP, DP release across processes) =="
+cargo test -q --features net --test integration_serve
 
 echo "== feature matrix: --features net,simd (combined) =="
 cargo build --release --features net,simd
@@ -106,8 +114,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 if [ "${PRIVLR_CI_BENCH:-0}" = "1" ]; then
     echo "== fast benches (refresh BENCH_kernels.json) =="
     PRIVLR_BENCH_FAST=1 cargo bench --bench micro_substrates
-    # session_throughput also sweeps shard_scaling, fault_recovery, and
-    # wan_consortium (fits/sec at 0/20/80 ms injected RTT, K=16, d=10).
+    # session_throughput also sweeps shard_scaling, fault_recovery,
+    # wan_consortium (fits/sec at 0/20/80 ms injected RTT, K=16, d=10),
+    # and dp_release (DP-on vs DP-off fit cost + accountant overhead).
     PRIVLR_BENCH_FAST=1 cargo bench --bench session_throughput
 fi
 

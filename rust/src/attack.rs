@@ -17,6 +17,13 @@
 //! 3. [`below_threshold_views_are_uniform`] — fewer than t Shamir
 //!    shares are statistically indistinguishable from uniform: the
 //!    same attacks get *nothing* from the secure protocol.
+//! 4. [`released_beta_response_attack`] — the protocol's OWN final
+//!    output leaks: an exact released β̂ satisfies the stationarity
+//!    condition Xᵀy = Xᵀp(β̂) + λβ̂, which an attacker holding the
+//!    covariates of a small (n ≤ d) shard solves for every private
+//!    response — the closure argument for the differentially private
+//!    release layer ([`crate::dp`]), whose calibrated noise reduces
+//!    this attack to chance.
 
 use crate::baseline::{ObfuscatedExchange, PlaintextLeak};
 use crate::field::{Fp, P};
@@ -117,6 +124,81 @@ pub fn response_recovery_accuracy(
         }
     }
     Ok(correct as f64 / n as f64)
+}
+
+/// Attack 4 — response recovery from the RELEASED model itself.
+///
+/// The fitted β̂ minimizes G(β) = Σᵢ ℓᵢ(β) + (λ/2)‖β‖², so at the
+/// optimum `Xᵀ(p(β̂) − y) + λβ̂ = 0`, i.e. `Xᵀy = Xᵀp(β̂) + λβ̂`: the
+/// exact released coefficients pin down d linear constraints on the
+/// private response vector. An attacker who knows the covariates of a
+/// small consortium (n ≤ d — the wide-GWAS regime of attack 1) solves
+/// them exactly, record by record. Nothing in the secret-sharing
+/// protocol prevents this — the leak is *through the agreed output*,
+/// which is why closing it needs calibrated release noise
+/// ([`crate::dp`]) rather than more cryptography.
+///
+/// Returns the attacker's per-record response estimates ŷ (round to
+/// {0,1} to read off the private bits). Tolerates the released β̂
+/// being a converged-to-tolerance iterate rather than the exact
+/// optimum: the residual gradient perturbs ŷ by O(tol·cond), far
+/// inside the rounding margin — but DP release noise of magnitude
+/// Δ₂/ε swamps it.
+pub fn released_beta_response_attack(
+    beta_released: &[f64],
+    x_consortium: &Matrix,
+    lambda: f64,
+) -> anyhow::Result<Vec<f64>> {
+    let n = x_consortium.rows;
+    let d = x_consortium.cols;
+    anyhow::ensure!(d == beta_released.len(), "β̂ has {} coefficients, X has {d} columns", beta_released.len());
+    anyhow::ensure!(
+        n <= d,
+        "attack needs an over-determined transpose (n={n} ≤ d={d})"
+    );
+    // c = Xᵀ p(β̂) + λ β̂ — what stationarity says Xᵀy must equal.
+    let mut c = vec![0.0; d];
+    for i in 0..n {
+        let p = sigmoid(crate::linalg::dot(x_consortium.row(i), beta_released));
+        for (ck, xik) in c.iter_mut().zip(x_consortium.row(i)) {
+            *ck += xik * p;
+        }
+    }
+    for (ck, bk) in c.iter_mut().zip(beta_released) {
+        *ck += lambda * bk;
+    }
+    // Solve Xᵀy = c through the n×n gram system (X Xᵀ) y = X c, the
+    // same reduction as attack 1.
+    let mut gram = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            gram[(i, j)] = crate::linalg::dot(x_consortium.row(i), x_consortium.row(j));
+        }
+    }
+    let rhs: Vec<f64> = (0..n)
+        .map(|i| crate::linalg::dot(x_consortium.row(i), &c))
+        .collect();
+    Ok(Lu::factor(&gram)?.solve(&rhs))
+}
+
+/// [`released_beta_response_attack`] scored against the true
+/// responses: the fraction of private bits the attacker reads off
+/// correctly after rounding. 1.0 = total breach; ≈ max(class rate,
+/// 0.5) = the attack learned nothing beyond the base rate.
+pub fn released_beta_attack_accuracy(
+    beta_released: &[f64],
+    x_consortium: &Matrix,
+    lambda: f64,
+    y_true: &[f64],
+) -> anyhow::Result<f64> {
+    let y_hat = released_beta_response_attack(beta_released, x_consortium, lambda)?;
+    anyhow::ensure!(y_hat.len() == y_true.len(), "shape mismatch");
+    let correct = y_hat
+        .iter()
+        .zip(y_true)
+        .filter(|(a, b)| (a.round() - **b).abs() < 0.5)
+        .count();
+    Ok(correct as f64 / y_true.len() as f64)
 }
 
 /// Attack 2 — collusion against Wu et al. [23] additive obfuscation.
@@ -270,6 +352,37 @@ mod tests {
         );
         let acc = response_recovery_accuracy(leak, &x0, &y0).unwrap();
         assert_eq!(acc, 1.0, "every private response recovered");
+    }
+
+    #[test]
+    fn released_beta_leaks_responses_and_dp_noise_closes_it() {
+        // Wide regime the paper worries about: 6 records, 8 features,
+        // covariates known to the attacker. The exact minimizer of the
+        // summed penalized objective is the release.
+        let ds = synthetic("wide", 6, 8, 1, 0.0, 1.0, 36);
+        let lambda = 1.0;
+        let fit = crate::model::damped_newton_fit(&ds.x, &ds.y, lambda, 1e-12, 100, 20).unwrap();
+        let acc = released_beta_attack_accuracy(&fit.beta, &ds.x, lambda, &ds.y).unwrap();
+        assert_eq!(acc, 1.0, "exact release leaks every private response");
+        // The same attack against a DP release: perturb β̂ with the
+        // Gaussian noise the dp module calibrates for (ε=1, δ=1e-6,
+        // clip=1) and watch the stationarity system collapse.
+        let p = crate::dp::DpConfig::default()
+            .params_for_fit(ds.x.rows, lambda, 1)
+            .unwrap();
+        let sigma = p.gaussian_sigma();
+        assert!(sigma > 1.0, "calibrated noise should dominate: σ = {sigma}");
+        let mut rng = ChaCha20Rng::seed_from_u64(37);
+        let noisy: Vec<f64> = fit
+            .beta
+            .iter()
+            .map(|b| b + rng.next_gaussian_with(0.0, sigma))
+            .collect();
+        let acc_dp = released_beta_attack_accuracy(&noisy, &ds.x, lambda, &ds.y).unwrap();
+        assert!(
+            acc_dp < 0.5,
+            "DP-calibrated noise must reduce the attack to (below-)chance, got {acc_dp}"
+        );
     }
 
     #[test]

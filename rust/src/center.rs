@@ -54,6 +54,13 @@ struct IterState {
     seen: Vec<u16>,
     /// Pending aggregate request: expected submission count.
     pending_request: Option<u16>,
+    /// This iteration aggregates DP noise shares, not Newton
+    /// statistics. No Hessian exists on that round in ANY mode, so the
+    /// response must carry `HessianPayload::Absent` even from the
+    /// pragmatic lead center (whose plaintext-count check would
+    /// otherwise reject the round). Set by the first
+    /// `DpNoiseSubmission` folded into this iteration.
+    dp: bool,
 }
 
 /// Per-session center state.
@@ -96,6 +103,7 @@ impl CenterSession {
                 h_plain_pending: Vec::new(),
                 seen: Vec::new(),
                 pending_request: None,
+                dp: false,
             },
         }
     }
@@ -106,6 +114,7 @@ impl CenterSession {
         st.h_plain_pending.clear();
         st.seen.clear();
         st.pending_request = None;
+        st.dp = false;
         self.free.push(st);
     }
 }
@@ -260,6 +269,47 @@ fn handle_message(
                 .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
             maybe_respond(cfg, ep, session, cs, iter)?;
         }
+        Message::DpNoiseSubmission {
+            iter,
+            institution,
+            noise_share,
+            mask_share,
+        } => {
+            anyhow::ensure!(
+                matches!(from, NodeId::Institution(_)),
+                "dp noise submission from non-institution {from}"
+            );
+            anyhow::ensure!(
+                noise_share.len() == cs.d,
+                "dp noise share length {} != {}",
+                noise_share.len(),
+                cs.d
+            );
+            if !cs.iters.contains_key(&iter) {
+                let st = cs.take_iter_state();
+                cs.iters.insert(iter, st);
+            }
+            let st = cs.iters.get_mut(&iter).unwrap();
+            // Same idempotence argument as the Newton fold: the noise
+            // share is a pure function of the spec's derived seed
+            // streams, so a duplicated frame (fault injection, crash
+            // replay) is bit-identical and dropped, never double-added.
+            if st.seen.contains(&institution) {
+                return Ok(());
+            }
+            st.seen.push(institution);
+            st.dp = true;
+            let t = std::time::Instant::now();
+            // Fold directly in the share domain. `SecureAccumulator::
+            // fold` would demand a Hessian payload in full mode, and a
+            // DP noise round never carries one in any mode.
+            crate::secure::secure_add(&mut st.acc.g, &noise_share);
+            st.acc.dev = st.acc.dev + mask_share;
+            st.acc.count += 1;
+            cs.busy_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            maybe_respond(cfg, ep, session, cs, iter)?;
+        }
         Message::AggregateRequest { iter, expected } => {
             anyhow::ensure!(
                 from == NodeId::Coordinator,
@@ -301,9 +351,9 @@ fn maybe_respond(
         return Ok(());
     }
     let t = std::time::Instant::now();
-    let hessian = if cs.screen {
-        // Score screen: [U | b] and q are the whole payload; there is
-        // no Hessian to aggregate on this path, lead center included.
+    let hessian = if cs.screen || st.dp {
+        // Score screens ([U | b], q) and DP noise rounds ([η | 0])
+        // carry no Hessian in any mode, lead center included.
         HessianPayload::Absent
     } else if full {
         HessianPayload::Shared(st.acc.h_shared.clone().unwrap())
@@ -844,6 +894,102 @@ mod tests {
             other => panic!("unexpected {}", other.kind()),
         }
         assert_eq!(gauge.load(Ordering::Relaxed), 1, "reopened session is live again");
+        coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
+        th.join().unwrap();
+    }
+
+    /// A DP noise round folds `DpNoiseSubmission` shares exactly like
+    /// gradient shares, dedups duplicated frames, and answers with an
+    /// ABSENT Hessian even from the pragmatic lead center (whose
+    /// plaintext-count check would otherwise reject the round).
+    #[test]
+    fn dp_noise_round_folds_and_responds_absent() {
+        let net = Network::new();
+        let coord = net.register(NodeId::Coordinator);
+        let inst0 = net.register(NodeId::Institution(0));
+        let inst1 = net.register(NodeId::Institution(1));
+        let cep = net.register(NodeId::Center(0));
+        let mut spec = make_spec(12, 2, 2, 1, 1, false);
+        Arc::get_mut(&mut spec).unwrap().dp = Some(crate::dp::DpParams {
+            mechanism: crate::dp::DpMechanism::Gaussian,
+            epsilon: 1.0,
+            delta: 1e-6,
+            sensitivity: 2.0,
+            num_partials: 2,
+            rows: 8,
+        });
+        let registry = registry_with(vec![spec]);
+        let cfg = CenterWorkerConfig { center_id: 0, registry, live_sessions: Arc::new(AtomicUsize::new(0)) };
+        let th = std::thread::spawn(move || run_center_worker(cfg, cep).unwrap());
+        let submit = |ep: &crate::transport::Endpoint, j: u16, a: u64, b: u64| {
+            ep.send_session(
+                NodeId::Center(0),
+                12,
+                &Message::DpNoiseSubmission {
+                    iter: 3,
+                    institution: j,
+                    noise_share: vec![Fp::new(a), Fp::new(b)],
+                    mask_share: Fp::new(a + b),
+                },
+            )
+            .unwrap();
+        };
+        submit(&inst0, 0, 5, 6);
+        submit(&inst0, 0, 5, 6); // duplicated frame, bit-identical → dropped
+        submit(&inst1, 1, 7, 8);
+        coord
+            .send_session(NodeId::Center(0), 12, &Message::AggregateRequest { iter: 3, expected: 2 })
+            .unwrap();
+        let (_, session, resp) = coord.recv_session().unwrap();
+        assert_eq!(session, 12);
+        match resp {
+            Message::AggregateResponse { iter, hessian, g_share, dev_share, .. } => {
+                assert_eq!(iter, 3);
+                assert!(matches!(hessian, HessianPayload::Absent), "dp round: Absent everywhere");
+                assert_eq!(g_share, vec![Fp::new(12), Fp::new(14)]);
+                assert_eq!(dev_share, Fp::new(26));
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        // The recycled state must not leak the dp flag into a Newton
+        // round: a plain-Hessian iteration through the same session
+        // pool still answers with the plaintext sum.
+        inst0
+            .send_session(
+                NodeId::Center(0),
+                12,
+                &Message::ShareSubmission {
+                    iter: 4,
+                    institution: 0,
+                    hessian: HessianPayload::Plain(vec![9.0, 9.0, 9.0]),
+                    g_share: vec![Fp::new(1), Fp::new(2)],
+                    dev_share: Fp::new(3),
+                },
+            )
+            .unwrap();
+        inst1
+            .send_session(
+                NodeId::Center(0),
+                12,
+                &Message::ShareSubmission {
+                    iter: 4,
+                    institution: 1,
+                    hessian: HessianPayload::Plain(vec![1.0, 1.0, 1.0]),
+                    g_share: vec![Fp::new(1), Fp::new(2)],
+                    dev_share: Fp::new(3),
+                },
+            )
+            .unwrap();
+        coord
+            .send_session(NodeId::Center(0), 12, &Message::AggregateRequest { iter: 4, expected: 2 })
+            .unwrap();
+        let (_, _, resp) = coord.recv_session().unwrap();
+        match resp {
+            Message::AggregateResponse { hessian, .. } => {
+                assert_eq!(hessian, HessianPayload::Plain(vec![10.0, 10.0, 10.0]));
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
         coord.send(NodeId::Center(0), &Message::Shutdown).unwrap();
         th.join().unwrap();
     }

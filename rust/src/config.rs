@@ -229,6 +229,13 @@ pub struct ExperimentConfig {
     pub net_reconnect_base_ms: u64,
     /// TCP transport: reconnect backoff ceiling, ms.
     pub net_reconnect_cap_ms: u64,
+    /// Differentially private release mode: `Some` makes every fit /
+    /// screen submitted under this config an (ε, δ)-DP release —
+    /// institutions jointly sample output-perturbation noise as Shamir
+    /// shares, so the coordinator only ever reconstructs β̂ + η — and
+    /// charges the engine's consortium accountant. `None` (default)
+    /// keeps every protocol path bit-identical to the non-DP build.
+    pub dp: Option<crate::dp::DpConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -265,6 +272,7 @@ impl Default for ExperimentConfig {
             net_heartbeat_timeout_ms: 2000,
             net_reconnect_base_ms: 50,
             net_reconnect_cap_ms: 2000,
+            dp: None,
         }
     }
 }
@@ -293,7 +301,7 @@ impl ExperimentConfig {
                 ("institutions", json::num(*institutions as f64)),
             ]),
         };
-        json::obj(vec![
+        let mut fields = vec![
             ("dataset", dataset),
             ("num_centers", json::num(self.num_centers as f64)),
             ("threshold", json::num(self.threshold as f64)),
@@ -330,7 +338,23 @@ impl ExperimentConfig {
                 "net_reconnect_cap_ms",
                 json::num(self.net_reconnect_cap_ms as f64),
             ),
-        ])
+        ];
+        if let Some(dp) = &self.dp {
+            fields.push((
+                "dp",
+                json::obj(vec![
+                    ("epsilon", json::num(dp.epsilon)),
+                    ("delta", json::num(dp.delta)),
+                    ("mechanism", json::s(dp.mechanism.name())),
+                    ("clip", json::num(dp.clip)),
+                    ("budget_epsilon", json::num(dp.budget_epsilon)),
+                    ("budget_delta", json::num(dp.budget_delta)),
+                    ("composition", json::s(dp.composition.name())),
+                    ("total_rows", json::num(dp.total_rows as f64)),
+                ]),
+            ));
+        }
+        json::obj(fields)
     }
 
     /// Parse from JSON (missing keys fall back to defaults).
@@ -437,6 +461,35 @@ impl ExperimentConfig {
         if let Some(c) = v.get("net_reconnect_cap_ms").as_u64() {
             cfg.net_reconnect_cap_ms = c;
         }
+        let dpv = v.get("dp");
+        if dpv != &Json::Null {
+            let mut dp = crate::dp::DpConfig::default();
+            if let Some(e) = dpv.get("epsilon").as_f64() {
+                dp.epsilon = e;
+            }
+            if let Some(d) = dpv.get("delta").as_f64() {
+                dp.delta = d;
+            }
+            if let Some(s) = dpv.get("mechanism").as_str() {
+                dp.mechanism = crate::dp::DpMechanism::parse(s)?;
+            }
+            if let Some(c) = dpv.get("clip").as_f64() {
+                dp.clip = c;
+            }
+            if let Some(b) = dpv.get("budget_epsilon").as_f64() {
+                dp.budget_epsilon = b;
+            }
+            if let Some(b) = dpv.get("budget_delta").as_f64() {
+                dp.budget_delta = b;
+            }
+            if let Some(s) = dpv.get("composition").as_str() {
+                dp.composition = crate::dp::DpComposition::parse(s)?;
+            }
+            if let Some(r) = dpv.get("total_rows").as_usize() {
+                dp.total_rows = r;
+            }
+            cfg.dp = Some(dp);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -495,6 +548,15 @@ impl ExperimentConfig {
             self.net_reconnect_cap_ms,
             self.net_reconnect_base_ms
         );
+        if let Some(dp) = &self.dp {
+            dp.validate()?;
+            // Output-perturbation sensitivity is 2·clip/λ: the release
+            // is undefined for an unregularized fit.
+            anyhow::ensure!(
+                self.lambda > 0.0,
+                "dp release requires lambda > 0 (sensitivity is 2*clip/lambda)"
+            );
+        }
         Ok(())
     }
 }
@@ -600,6 +662,43 @@ mod tests {
         assert!(ExperimentConfig::from_json(&v).is_err());
         let v = Json::parse(r#"{"net_reconnect_base_ms": 500, "net_reconnect_cap_ms": 100}"#)
             .unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn dp_knobs_roundtrip_default_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.dp.is_none(), "DP is opt-in");
+        // A config without a "dp" key parses back to None.
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.dp.is_none());
+        cfg.dp = Some(crate::dp::DpConfig {
+            epsilon: 0.5,
+            delta: 1e-7,
+            mechanism: crate::dp::DpMechanism::Laplace,
+            clip: 2.0,
+            budget_epsilon: 4.0,
+            budget_delta: 1e-5,
+            composition: crate::dp::DpComposition::Advanced,
+            total_rows: 12_000,
+        });
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.dp, cfg.dp);
+        // Partial dp objects inherit DpConfig defaults for the rest.
+        let v = Json::parse(r#"{"dp": {"epsilon": 2.0}}"#).unwrap();
+        let parsed = ExperimentConfig::from_json(&v).unwrap().dp.unwrap();
+        assert_eq!(parsed.epsilon, 2.0);
+        assert_eq!(parsed.mechanism, crate::dp::DpMechanism::Gaussian);
+        // Invalid mechanism names and invalid parameters are rejected.
+        let v = Json::parse(r#"{"dp": {"mechanism": "staircase"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+        let v = Json::parse(r#"{"dp": {"epsilon": -1.0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+        // Gaussian needs delta > 0.
+        let v = Json::parse(r#"{"dp": {"delta": 0.0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+        // DP over an unregularized objective has unbounded sensitivity.
+        let v = Json::parse(r#"{"lambda": 0.0, "dp": {"epsilon": 1.0}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&v).is_err());
     }
 

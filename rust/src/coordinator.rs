@@ -72,6 +72,12 @@ pub struct SecureFitResult {
     /// `Some` iff the session was a score screen: the per-SNP
     /// statistic. Empty `beta` in that case.
     pub screen: Option<crate::session::ScreenStat>,
+    /// `Some` iff `beta` is a differentially private release: the
+    /// calibrated mechanism parameters the noise was drawn under. A DP
+    /// release ships `fisher: None` — standard errors derived from a
+    /// noisy β̂ against the *exact* Fisher information would be both
+    /// statistically wrong and a side channel on the noise magnitude.
+    pub dp: Option<crate::dp::DpParams>,
 }
 
 /// Fit L2-regularized logistic regression securely across the

@@ -1,0 +1,780 @@
+//! Differentially private release layer: output perturbation sampled
+//! *inside* the secure domain, plus per-consortium (ε, δ) accounting.
+//!
+//! Secure aggregation hides the computation, but the released β̂ is
+//! itself a function of every record — `crate::attack` demonstrates
+//! exact response recovery from a released ridge-logistic fit. This
+//! module closes that gap with Chaudhuri-style **output perturbation**:
+//! the consortium releases β̂ + η where η is calibrated to the strong
+//! convexity of the penalized objective.
+//!
+//! # Sensitivity derivation
+//!
+//! The repo minimizes the SUMMED objective G(β) = Σᵢ ℓ(β; xᵢ, yᵢ) +
+//! (λ/2)‖β‖², i.e. n · [ (1/n)Σ ℓ + (λ̄/2)‖β‖² ] with the per-record
+//! penalty λ̄ = λ/n. For a per-record loss whose gradient is bounded by
+//! the feature clip ‖x‖₂ ≤ C (logistic loss: ‖∇ℓ‖ ≤ ‖x‖), Chaudhuri,
+//! Monteleoni & Sarwate (JMLR 2011) bound the ℓ₂ sensitivity of the
+//! exact minimizer under one-record replacement by
+//!
+//! ```text
+//!   Δ₂ = 2·C / (n·λ̄) = 2·C / λ
+//! ```
+//!
+//! — the `2/(nλ)` of the normalized formulation, written through the
+//! (n, λ) the session spec carries. The n cancels algebraically, so
+//! the implementation computes `2·C/λ` directly: the value is then
+//! bit-identical however the consortium's rows are sharded, which is
+//! what lets remote `privlr serve` processes derive it locally from
+//! the shared config.
+//!
+//! # Distributed noise
+//!
+//! No single party may see the non-private β̂, so no single party may
+//! sample η. Instead each institution j samples a seeded **partial**
+//! ηⱼ and Shamir-shares it through the same pooled zero-alloc pipeline
+//! as its gradients; the centers fold the shares and the coordinator's
+//! quorum reconstruction yields Σⱼ ηⱼ = η — added to a release base
+//! that never appeared on the wire.
+//!
+//! * **Gaussian**: ηⱼ ~ N(0, σ²/S) per coordinate, so Σⱼ ηⱼ ~ N(0, σ²)
+//!   with σ = Δ₂·√(2 ln(1.25/δ))/ε — the classic (ε, δ) calibration.
+//! * **Laplace**: Laplace is infinitely divisible — per coordinate,
+//!   Lap(b) = Σⱼ (G¹ⱼ − G²ⱼ) with G ~ Gamma(1/S, b) — so each
+//!   institution contributes a gamma difference (Marsaglia–Tsang
+//!   sampler with the U^(1/α) boost for shape < 1). Calibrated to the
+//!   ℓ₁ sensitivity Δ₁ ≤ √d·Δ₂ at b = Δ₁/ε for pure ε-DP.
+//!
+//! Partials are sampled sequentially per institution from the
+//! dedicated stream [`DP_NOISE_STREAM`] of the session share seed —
+//! never chunked across kernel threads — so the sampled values are
+//! bit-identical at every `kernel_threads` count and ISA; the share
+//! *encoding* then rides the already-thread/ISA-invariant
+//! `secure::encode_share_into_isa`. Seeds are per-(session,
+//! institution), NOT per-iteration: a crash replay of the release
+//! round resamples byte-identical noise, so recovery cannot
+//! double-apply or re-randomize the release.
+//!
+//! Quantization caveat: shares travel through the fixed-point codec,
+//! so the reconstructed η is the noise rounded to the codec grid
+//! (2⁻ᶠ resolution). At the default 30 fractional bits the gap to the
+//! real-valued mechanism is ~1e-9 per coordinate — negligible against
+//! any practical σ, but stated here rather than hidden.
+//!
+//! # Accounting
+//!
+//! A consortium releases MANY statistics — a GWAS sweep is thousands
+//! of screen sessions plus full fits on hits. [`DpAccountant`] is the
+//! engine-level ledger: every DP submission charges its (ε, δ) before
+//! a session id ever reaches a worker, and the composed total is
+//! checked against the configured budget under **basic** (ε = Σεᵢ,
+//! δ = Σδᵢ) or **advanced** (heterogeneous: ε = √(2 ln(1/δ′)·Σεᵢ²) +
+//! Σεᵢ(eᵉᵖˢ−1), δ = Σδᵢ + δ′, with δ′ = half the δ budget)
+//! composition. Both are symmetric in the spend multiset (order-
+//! invariant) and term-wise non-negative (monotone); exhaustion
+//! surfaces as the typed `SubmitError::DpBudgetExhausted`.
+
+use crate::protocol::SessionId;
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Sub-stream of the per-(session, institution) share seed that the
+/// DP noise VALUES are drawn from (`derive_seed(share_seed,
+/// DP_NOISE_STREAM)`). Disjoint from the per-iteration gradient-share
+/// streams (small iteration indices) and from [`DP_SHARE_STREAM`].
+pub const DP_NOISE_STREAM: u64 = 0x4450_4E4F_4953_4531; // "DPNOISE1"
+
+/// Sub-stream the noise-share POLYNOMIALS are drawn from — the
+/// masking randomness of the Shamir encoding, independent of the
+/// noise values themselves.
+pub const DP_SHARE_STREAM: u64 = 0x4450_5348_4152_4531; // "DPSHARE1"
+
+/// Per-coordinate dosage bound of a genotype column (0/1/2 copies of
+/// the minor allele) — the clip behind the screen-statistic
+/// sensitivity.
+pub const SCREEN_DOSAGE_MAX: f64 = 2.0;
+
+/// Which output-perturbation mechanism calibrates the release noise.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DpMechanism {
+    /// (ε, δ)-DP spherical Gaussian noise at
+    /// σ = Δ₂·√(2 ln(1.25/δ))/ε. Requires δ > 0.
+    #[default]
+    Gaussian,
+    /// Pure ε-DP per-coordinate Laplace noise at b = Δ₁/ε with
+    /// Δ₁ = √d·Δ₂ (a configured δ still participates in budget
+    /// accounting, e.g. as advanced-composition slack).
+    Laplace,
+}
+
+impl DpMechanism {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" => Ok(DpMechanism::Gaussian),
+            "laplace" => Ok(DpMechanism::Laplace),
+            other => anyhow::bail!("unknown dp mechanism '{other}' (gaussian|laplace)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DpMechanism::Gaussian => "gaussian",
+            DpMechanism::Laplace => "laplace",
+        }
+    }
+}
+
+/// How the accountant composes per-session (ε, δ) spends into the
+/// consortium total.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DpComposition {
+    /// ε = Σεᵢ, δ = Σδᵢ — tight for few releases.
+    #[default]
+    Basic,
+    /// Heterogeneous advanced composition (Dwork–Rothblum–Vadhan /
+    /// Kairouz et al. form): ε = √(2 ln(1/δ′)·Σεᵢ²) + Σεᵢ(e^εᵢ − 1),
+    /// δ = Σδᵢ + δ′. The slack δ′ is pinned to HALF the δ budget
+    /// (1e-9 when the δ budget is unbounded), which keeps the
+    /// composed value a pure function of the spend multiset.
+    Advanced,
+}
+
+impl DpComposition {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "basic" => Ok(DpComposition::Basic),
+            "advanced" => Ok(DpComposition::Advanced),
+            other => anyhow::bail!("unknown dp composition '{other}' (basic|advanced)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DpComposition::Basic => "basic",
+            DpComposition::Advanced => "advanced",
+        }
+    }
+}
+
+/// Opt-in DP release configuration, carried as
+/// `ExperimentConfig::dp: Option<DpConfig>`. `None` (the default)
+/// leaves every existing path bit-identical to the pre-DP engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpConfig {
+    /// Per-release privacy parameter ε (> 0).
+    pub epsilon: f64,
+    /// Per-release δ (Gaussian requires δ > 0; Laplace may run at 0).
+    pub delta: f64,
+    pub mechanism: DpMechanism,
+    /// ℓ₂ clip bound C on one record's feature vector, the Lipschitz
+    /// constant of the per-record loss gradient in the sensitivity
+    /// Δ₂ = 2C/(nλ̄) = 2C/λ. The caller is responsible for the data
+    /// actually respecting it (row normalization); 1.0 assumes
+    /// unit-norm rows.
+    pub clip: f64,
+    /// Total (ε) budget across ALL DP sessions of the engine; 0 =
+    /// unbounded (no exhaustion, accounting still recorded).
+    pub budget_epsilon: f64,
+    /// Total (δ) budget; 0 = unbounded.
+    pub budget_delta: f64,
+    pub composition: DpComposition,
+    /// Consortium-wide record count n used in the documented
+    /// sensitivity derivation and operator reporting. Remote `serve`
+    /// processes derive session specs from config alone (their shard
+    /// placeholders carry no rows), so a deployment sets this to the
+    /// agreed consortium n; 0 lets local submission paths count the
+    /// actual shard rows.
+    pub total_rows: usize,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        DpConfig {
+            epsilon: 1.0,
+            delta: 1e-6,
+            mechanism: DpMechanism::Gaussian,
+            clip: 1.0,
+            budget_epsilon: 0.0,
+            budget_delta: 0.0,
+            composition: DpComposition::Basic,
+            total_rows: 0,
+        }
+    }
+}
+
+impl DpConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.epsilon.is_finite() && self.epsilon > 0.0,
+            "dp epsilon must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.delta.is_finite() && self.delta >= 0.0 && self.delta < 1.0,
+            "dp delta must be in [0, 1)"
+        );
+        if self.mechanism == DpMechanism::Gaussian {
+            anyhow::ensure!(
+                self.delta > 0.0,
+                "the gaussian mechanism requires dp delta > 0 (use laplace for pure ε-DP)"
+            );
+        }
+        anyhow::ensure!(
+            self.clip.is_finite() && self.clip > 0.0,
+            "dp clip must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.budget_epsilon.is_finite() && self.budget_epsilon >= 0.0,
+            "dp budget_epsilon must be non-negative and finite"
+        );
+        anyhow::ensure!(
+            self.budget_delta.is_finite() && self.budget_delta >= 0.0 && self.budget_delta < 1.0,
+            "dp budget_delta must be in [0, 1)"
+        );
+        if self.budget_epsilon > 0.0 {
+            anyhow::ensure!(
+                self.epsilon <= self.budget_epsilon,
+                "dp epsilon {} exceeds its own budget_epsilon {} — no session could ever run",
+                self.epsilon,
+                self.budget_epsilon
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolved release parameters for a full Newton fit over
+    /// `shard_rows` records across `num_institutions` institutions
+    /// (`total_rows`, when set, overrides the counted rows — see its
+    /// field docs).
+    pub fn params_for_fit(
+        &self,
+        shard_rows: usize,
+        lambda: f64,
+        num_institutions: usize,
+    ) -> anyhow::Result<DpParams> {
+        self.validate()?;
+        anyhow::ensure!(
+            lambda > 0.0,
+            "dp output perturbation needs λ > 0 (sensitivity 2C/λ is unbounded at λ = 0)"
+        );
+        anyhow::ensure!(num_institutions >= 1, "dp release needs at least one institution");
+        let n = if self.total_rows > 0 { self.total_rows } else { shard_rows };
+        // Δ₂ = 2C/(n·λ̄) with λ̄ = λ/n — computed as 2C/λ so the value
+        // cannot depend on how n was counted (see module docs).
+        let sensitivity = 2.0 * self.clip / lambda;
+        Ok(DpParams {
+            mechanism: self.mechanism,
+            epsilon: self.epsilon,
+            delta: self.delta,
+            sensitivity,
+            num_partials: num_institutions,
+            rows: n,
+        })
+    }
+
+    /// Resolved release parameters for a single-round score screen:
+    /// the released statistic is the scalar score U = Σᵢ gᵢ(yᵢ − pᵢ)
+    /// with dosage |g| ≤ 2 and |y − p| ≤ 1, so one-record replacement
+    /// moves U by at most 2·[`SCREEN_DOSAGE_MAX`]. This is the
+    /// statistic's own sensitivity (an approximation for the
+    /// downstream χ² = U²/V decision, documented as such in the
+    /// README): the noise is added to the U slot before sharing, by
+    /// share linearity — no extra protocol round.
+    pub fn params_for_screen(&self, num_institutions: usize) -> anyhow::Result<DpParams> {
+        self.validate()?;
+        anyhow::ensure!(num_institutions >= 1, "dp release needs at least one institution");
+        Ok(DpParams {
+            mechanism: self.mechanism,
+            epsilon: self.epsilon,
+            delta: self.delta,
+            sensitivity: 2.0 * SCREEN_DOSAGE_MAX,
+            num_partials: num_institutions,
+            rows: self.total_rows,
+        })
+    }
+}
+
+/// Resolved per-session DP release parameters, carried in the
+/// `SessionSpec` so institutions, centers and the coordinator agree on
+/// the mechanism without any of it crossing the wire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpParams {
+    pub mechanism: DpMechanism,
+    pub epsilon: f64,
+    pub delta: f64,
+    /// ℓ₂ sensitivity Δ₂ of the released statistic (for screens: the
+    /// scalar score's replacement bound).
+    pub sensitivity: f64,
+    /// Number of institutions jointly sampling partial noise (S).
+    pub num_partials: usize,
+    /// Consortium record count behind the sensitivity derivation
+    /// (reporting only — the calibrated scales do not read it).
+    pub rows: usize,
+}
+
+impl DpParams {
+    /// Gaussian-mechanism scale σ = Δ₂·√(2 ln(1.25/δ))/ε.
+    pub fn gaussian_sigma(&self) -> f64 {
+        self.sensitivity * (2.0 * (1.25 / self.delta).ln()).sqrt() / self.epsilon
+    }
+
+    /// Laplace-mechanism per-coordinate scale b = Δ₁/ε over `d`
+    /// released coordinates, with Δ₁ bounded by √d·Δ₂.
+    pub fn laplace_b(&self, d: usize) -> f64 {
+        self.sensitivity * (d as f64).sqrt() / self.epsilon
+    }
+
+    /// Marginal standard deviation of ONE party's partial noise per
+    /// coordinate (operator reporting; the exact partial laws are in
+    /// [`sample_partial_noise`]).
+    pub fn partial_sigma(&self, d: usize) -> f64 {
+        match self.mechanism {
+            DpMechanism::Gaussian => self.gaussian_sigma() / (self.num_partials as f64).sqrt(),
+            DpMechanism::Laplace => {
+                // Var(G¹ − G²) = 2·(1/S)·b² per partial.
+                let b = self.laplace_b(d);
+                (2.0 * b * b / self.num_partials as f64).sqrt()
+            }
+        }
+    }
+}
+
+/// Marsaglia–Tsang Gamma(shape, scale) sampler on the crate's seeded
+/// [`Rng`] streams, with the U^(1/α) boost for shape < 1 (the regime
+/// distributed Laplace always runs in: shape = 1/S).
+pub fn sample_gamma<R: Rng>(rng: &mut R, shape: f64, scale: f64) -> f64 {
+    debug_assert!(shape > 0.0 && scale > 0.0);
+    if shape < 1.0 {
+        // G(α) = G(α+1) · U^(1/α); reject U = 0 (probability 2⁻⁵³).
+        let boost = loop {
+            let u = rng.next_f64();
+            if u > 0.0 {
+                break u.powf(1.0 / shape);
+            }
+        };
+        return sample_gamma(rng, shape + 1.0, scale) * boost;
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.next_gaussian();
+        let t = 1.0 + c * x;
+        if t <= 0.0 {
+            continue;
+        }
+        let v = t * t * t;
+        let u = rng.next_f64();
+        // Squeeze first (accepts ~98%), log test as the fallback.
+        if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+            return d * v * scale;
+        }
+        if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v * scale;
+        }
+    }
+}
+
+/// Fill `out` with ONE institution's partial release noise over `d`
+/// coordinates, drawn sequentially from `rng` (which the caller seeds
+/// from `derive_seed(share_seed, DP_NOISE_STREAM)` — per-(session,
+/// institution), replay-stable). Summing the S institutions' partials
+/// yields exactly the calibrated mechanism's law.
+pub fn sample_partial_noise<R: Rng>(p: &DpParams, d: usize, rng: &mut R, out: &mut [f64]) {
+    debug_assert!(out.len() >= d);
+    match p.mechanism {
+        DpMechanism::Gaussian => {
+            let sigma = p.gaussian_sigma() / (p.num_partials as f64).sqrt();
+            for slot in out[..d].iter_mut() {
+                *slot = rng.next_gaussian_with(0.0, sigma);
+            }
+        }
+        DpMechanism::Laplace => {
+            let b = p.laplace_b(d);
+            let shape = 1.0 / p.num_partials as f64;
+            for slot in out[..d].iter_mut() {
+                *slot = sample_gamma(rng, shape, b) - sample_gamma(rng, shape, b);
+            }
+        }
+    }
+}
+
+/// Why a DP submission was refused: admitting it would push the
+/// composed spend past the configured budget. The engine wraps this
+/// in the typed `SubmitError::DpBudgetExhausted`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpBudgetExceeded {
+    /// Composed (ε, δ) INCLUDING the refused charge.
+    pub would_spend_epsilon: f64,
+    pub would_spend_delta: f64,
+    pub budget_epsilon: f64,
+    pub budget_delta: f64,
+}
+
+impl std::fmt::Display for DpBudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "admitting this release would spend (ε = {:.4}, δ = {:.2e}) of a \
+             (ε = {:.4}, δ = {:.2e}) budget",
+            self.would_spend_epsilon, self.would_spend_delta, self.budget_epsilon, self.budget_delta
+        )
+    }
+}
+
+/// Engine-level (ε, δ) ledger: one entry per admitted DP session,
+/// composed on every charge against the submitting config's budget.
+/// The ledger is charged BEFORE a session is queued and refunded if
+/// the submission is rejected for any non-budget reason, so the
+/// composed spend counts exactly the sessions that reached a worker.
+#[derive(Debug, Default)]
+pub struct DpAccountant {
+    spends: Mutex<Vec<(SessionId, f64, f64)>>,
+}
+
+impl DpAccountant {
+    pub fn new() -> DpAccountant {
+        DpAccountant::default()
+    }
+
+    /// The advanced-composition slack δ′ for a given δ budget (see
+    /// [`DpComposition::Advanced`]).
+    pub fn delta_prime(budget_delta: f64) -> f64 {
+        if budget_delta > 0.0 {
+            budget_delta / 2.0
+        } else {
+            1e-9
+        }
+    }
+
+    /// Compose a spend multiset — a pure function (order-invariant by
+    /// construction), exposed so tests and operators can compute the
+    /// exhaustion bound independently of the ledger.
+    pub fn compose(
+        spends: &[(f64, f64)],
+        composition: DpComposition,
+        budget_delta: f64,
+    ) -> (f64, f64) {
+        if spends.is_empty() {
+            return (0.0, 0.0);
+        }
+        match composition {
+            DpComposition::Basic => {
+                let eps: f64 = spends.iter().map(|&(e, _)| e).sum();
+                let delta: f64 = spends.iter().map(|&(_, d)| d).sum();
+                (eps, delta)
+            }
+            DpComposition::Advanced => {
+                let dp = DpAccountant::delta_prime(budget_delta);
+                let sum_sq: f64 = spends.iter().map(|&(e, _)| e * e).sum();
+                let slack: f64 = spends.iter().map(|&(e, _)| e * (e.exp() - 1.0)).sum();
+                let eps = (2.0 * (1.0 / dp).ln() * sum_sq).sqrt() + slack;
+                let delta: f64 = spends.iter().map(|&(_, d)| d).sum::<f64>() + dp;
+                (eps, delta)
+            }
+        }
+    }
+
+    /// Composed (ε, δ) of everything charged so far, under `cfg`'s
+    /// composition rule and δ budget.
+    pub fn spent(&self, cfg: &DpConfig) -> (f64, f64) {
+        let spends = self.spends.lock().unwrap();
+        let flat: Vec<(f64, f64)> = spends.iter().map(|&(_, e, d)| (e, d)).collect();
+        DpAccountant::compose(&flat, cfg.composition, cfg.budget_delta)
+    }
+
+    /// Number of DP sessions on the ledger.
+    pub fn charges(&self) -> usize {
+        self.spends.lock().unwrap().len()
+    }
+
+    /// Charge one session's (ε, δ) against `cfg`'s budget. On success
+    /// the spend is recorded; on refusal the ledger is untouched and
+    /// the error carries the would-be composed totals. A budget of 0
+    /// on an axis leaves that axis unbounded.
+    pub fn try_charge(
+        &self,
+        session: SessionId,
+        cfg: &DpConfig,
+    ) -> Result<(), DpBudgetExceeded> {
+        let mut spends = self.spends.lock().unwrap();
+        let mut flat: Vec<(f64, f64)> = spends.iter().map(|&(_, e, d)| (e, d)).collect();
+        flat.push((cfg.epsilon, cfg.delta));
+        let (eps, delta) = DpAccountant::compose(&flat, cfg.composition, cfg.budget_delta);
+        let over_eps = cfg.budget_epsilon > 0.0 && eps > cfg.budget_epsilon;
+        let over_delta = cfg.budget_delta > 0.0 && delta > cfg.budget_delta;
+        if over_eps || over_delta {
+            return Err(DpBudgetExceeded {
+                would_spend_epsilon: eps,
+                would_spend_delta: delta,
+                budget_epsilon: cfg.budget_epsilon,
+                budget_delta: cfg.budget_delta,
+            });
+        }
+        spends.push((session, cfg.epsilon, cfg.delta));
+        Ok(())
+    }
+
+    /// Remove a session's charge — the rollback for submissions that
+    /// were charged but then rejected before reaching a worker (full
+    /// lane, deadline). Idempotent.
+    pub fn refund(&self, session: SessionId) {
+        let mut spends = self.spends.lock().unwrap();
+        if let Some(idx) = spends.iter().position(|&(s, ..)| s == session) {
+            spends.remove(idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::ChaCha20Rng;
+
+    fn base() -> DpConfig {
+        DpConfig::default()
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for m in [DpMechanism::Gaussian, DpMechanism::Laplace] {
+            assert_eq!(DpMechanism::parse(m.name()).unwrap(), m);
+        }
+        assert!(DpMechanism::parse("exponential").is_err());
+        for c in [DpComposition::Basic, DpComposition::Advanced] {
+            assert_eq!(DpComposition::parse(c.name()).unwrap(), c);
+        }
+        assert!(DpComposition::parse("renyi").is_err());
+        assert_eq!(DpMechanism::parse("GAUSSIAN").unwrap(), DpMechanism::Gaussian);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(base().validate().is_ok());
+        let mut c = base();
+        c.epsilon = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.delta = 0.0; // gaussian needs δ > 0
+        assert!(c.validate().is_err());
+        c.mechanism = DpMechanism::Laplace; // laplace runs at δ = 0
+        assert!(c.validate().is_ok());
+        let mut c = base();
+        c.clip = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.budget_epsilon = 0.5;
+        c.epsilon = 1.0; // one release already over budget
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sensitivity_is_two_clip_over_lambda_and_shard_invariant() {
+        let mut c = base();
+        c.clip = 1.5;
+        let p1 = c.params_for_fit(1000, 0.5, 4).unwrap();
+        assert!((p1.sensitivity - 6.0).abs() < 1e-15);
+        // total_rows only changes the REPORTED n, never the scale —
+        // remote serve processes must agree bit-for-bit.
+        c.total_rows = 777;
+        let p2 = c.params_for_fit(0, 0.5, 4).unwrap();
+        assert_eq!(p1.sensitivity.to_bits(), p2.sensitivity.to_bits());
+        assert_eq!(p2.rows, 777);
+        assert!(c.params_for_fit(1000, 0.0, 4).is_err(), "λ = 0 is unbounded");
+    }
+
+    #[test]
+    fn gaussian_sigma_matches_calibration() {
+        let mut c = base();
+        c.epsilon = 2.0;
+        c.delta = 1e-5;
+        let p = c.params_for_fit(100, 1.0, 3).unwrap();
+        let expect = p.sensitivity * (2.0f64 * (1.25 / 1e-5f64).ln()).sqrt() / 2.0;
+        assert!((p.gaussian_sigma() - expect).abs() < 1e-12);
+        // S partials of σ/√S sum to variance σ².
+        let partial = p.partial_sigma(4);
+        assert!((partial * partial * 3.0 - p.gaussian_sigma().powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn laplace_scale_uses_l1_sensitivity() {
+        let mut c = base();
+        c.mechanism = DpMechanism::Laplace;
+        c.epsilon = 0.5;
+        let p = c.params_for_fit(100, 2.0, 5).unwrap();
+        // Δ₂ = 2·1/2 = 1; Δ₁ = √d; b = √d/ε.
+        assert!((p.laplace_b(9) - 3.0 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_sampler_matches_moments() {
+        // Gamma(k, θ): mean kθ, var kθ² — check both regimes of the
+        // sampler (shape < 1 via the boost, shape ≥ 1 direct).
+        for &(shape, scale) in &[(0.25f64, 2.0f64), (3.5, 0.5)] {
+            let mut rng = ChaCha20Rng::seed_from_u64(0xD0D0 + shape.to_bits() % 97);
+            let n = 20_000;
+            let mut sum = 0.0;
+            let mut sumsq = 0.0;
+            for _ in 0..n {
+                let g = sample_gamma(&mut rng, shape, scale);
+                assert!(g > 0.0 && g.is_finite());
+                sum += g;
+                sumsq += g * g;
+            }
+            let mean = sum / n as f64;
+            let var = sumsq / n as f64 - mean * mean;
+            assert!(
+                (mean - shape * scale).abs() < 0.05 * (shape * scale).max(0.2),
+                "gamma({shape},{scale}) mean {mean}"
+            );
+            assert!(
+                (var - shape * scale * scale).abs() < 0.12 * (shape * scale * scale).max(0.2),
+                "gamma({shape},{scale}) var {var}"
+            );
+        }
+    }
+
+    #[test]
+    fn summed_partials_match_mechanism_variance() {
+        // S institutions' partials must sum to the calibrated law:
+        // check the empirical variance of the sum for both mechanisms.
+        let d = 1usize;
+        for mech in [DpMechanism::Gaussian, DpMechanism::Laplace] {
+            let mut c = base();
+            c.mechanism = mech;
+            if mech == DpMechanism::Laplace {
+                c.delta = 0.0;
+            }
+            let p = c.params_for_fit(500, 1.0, 4).unwrap();
+            let target_var = match mech {
+                DpMechanism::Gaussian => p.gaussian_sigma().powi(2),
+                DpMechanism::Laplace => 2.0 * p.laplace_b(d).powi(2),
+            };
+            let trials = 8_000;
+            let mut sumsq = 0.0;
+            for t in 0..trials {
+                let mut total = 0.0;
+                for j in 0..4u64 {
+                    let mut rng = ChaCha20Rng::seed_from_u64(0xBEEF + t as u64 * 31 + j * 7919);
+                    let mut out = [0.0f64; 1];
+                    sample_partial_noise(&p, d, &mut rng, &mut out);
+                    total += out[0];
+                }
+                sumsq += total * total;
+            }
+            let var = sumsq / trials as f64;
+            assert!(
+                (var - target_var).abs() < 0.1 * target_var,
+                "{mech:?}: summed var {var} vs calibrated {target_var}"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_sampling_is_seed_deterministic() {
+        let p = base().params_for_fit(100, 1.0, 3).unwrap();
+        let mut a = [0.0f64; 6];
+        let mut b = [0.0f64; 6];
+        let mut r1 = ChaCha20Rng::seed_from_u64(42);
+        let mut r2 = ChaCha20Rng::seed_from_u64(42);
+        sample_partial_noise(&p, 6, &mut r1, &mut a);
+        sample_partial_noise(&p, 6, &mut r2, &mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let mut r3 = ChaCha20Rng::seed_from_u64(43);
+        let mut c3 = [0.0f64; 6];
+        sample_partial_noise(&p, 6, &mut r3, &mut c3);
+        assert_ne!(a[0].to_bits(), c3[0].to_bits());
+    }
+
+    #[test]
+    fn accountant_basic_composition_and_exhaustion() {
+        let mut cfg = base();
+        cfg.epsilon = 1.0;
+        cfg.delta = 1e-6;
+        cfg.budget_epsilon = 3.5;
+        cfg.budget_delta = 1e-3;
+        let acc = DpAccountant::new();
+        for s in 1..=3u32 {
+            acc.try_charge(s, &cfg).unwrap();
+        }
+        let (eps, delta) = acc.spent(&cfg);
+        assert!((eps - 3.0).abs() < 1e-12);
+        assert!((delta - 3e-6).abs() < 1e-15);
+        // The 4th release would compose to ε = 4.0 > 3.5.
+        let err = acc.try_charge(4, &cfg).unwrap_err();
+        assert!((err.would_spend_epsilon - 4.0).abs() < 1e-12);
+        assert_eq!(acc.charges(), 3, "a refused charge must not be recorded");
+        // Refund makes room for exactly one more.
+        acc.refund(2);
+        acc.try_charge(5, &cfg).unwrap();
+        assert!(acc.try_charge(6, &cfg).is_err());
+    }
+
+    #[test]
+    fn accountant_exhausts_exactly_at_the_composed_bound() {
+        for comp in [DpComposition::Basic, DpComposition::Advanced] {
+            let mut cfg = base();
+            cfg.epsilon = 0.3;
+            cfg.delta = 1e-7;
+            cfg.budget_epsilon = 4.0;
+            cfg.budget_delta = 1e-4;
+            cfg.composition = comp;
+            // Independent prediction from the pure composer.
+            let mut k_max = 0usize;
+            loop {
+                let spends = vec![(cfg.epsilon, cfg.delta); k_max + 1];
+                let (e, d) = DpAccountant::compose(&spends, comp, cfg.budget_delta);
+                if e > cfg.budget_epsilon || d > cfg.budget_delta {
+                    break;
+                }
+                k_max += 1;
+            }
+            assert!(k_max >= 1, "degenerate bound for {comp:?}");
+            let acc = DpAccountant::new();
+            let mut admitted = 0usize;
+            for s in 0..(k_max + 5) as u32 {
+                if acc.try_charge(s, &cfg).is_ok() {
+                    admitted += 1;
+                }
+            }
+            assert_eq!(admitted, k_max, "{comp:?} must exhaust exactly at the bound");
+        }
+    }
+
+    #[test]
+    fn composition_is_order_invariant_and_monotone() {
+        let spends = [(0.5, 1e-6), (0.1, 0.0), (0.9, 1e-7), (0.3, 1e-8)];
+        for comp in [DpComposition::Basic, DpComposition::Advanced] {
+            let (e1, d1) = DpAccountant::compose(&spends, comp, 1e-4);
+            let mut rev = spends;
+            rev.reverse();
+            let (e2, d2) = DpAccountant::compose(&rev, comp, 1e-4);
+            assert_eq!(e1.to_bits(), e2.to_bits(), "{comp:?} ε order-dependent");
+            assert_eq!(d1.to_bits(), d2.to_bits(), "{comp:?} δ order-dependent");
+            // Monotone: every prefix spends no more than the whole.
+            for k in 1..spends.len() {
+                let (ek, dk) = DpAccountant::compose(&spends[..k], comp, 1e-4);
+                assert!(ek <= e1 + 1e-12 && dk <= d1 + 1e-15, "{comp:?} not monotone");
+            }
+        }
+    }
+
+    #[test]
+    fn advanced_beats_basic_for_many_small_releases() {
+        let spends = vec![(0.05f64, 1e-9f64); 400];
+        let (basic_eps, _) = DpAccountant::compose(&spends, DpComposition::Basic, 1e-4);
+        let (adv_eps, _) = DpAccountant::compose(&spends, DpComposition::Advanced, 1e-4);
+        assert!(
+            adv_eps < basic_eps,
+            "advanced ({adv_eps}) should beat basic ({basic_eps}) at 400 × ε = 0.05"
+        );
+    }
+
+    #[test]
+    fn screen_params_use_the_dosage_bound() {
+        let p = base().params_for_screen(5).unwrap();
+        assert!((p.sensitivity - 2.0 * SCREEN_DOSAGE_MAX).abs() < 1e-15);
+        assert_eq!(p.num_partials, 5);
+    }
+}

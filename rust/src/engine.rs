@@ -292,6 +292,21 @@ pub enum SubmitError {
         /// The last socket-facing failure on the session's path.
         error: crate::transport::NetError,
     },
+    /// Admitting this DP release would push the consortium's composed
+    /// (ε, δ) past the configured privacy budget
+    /// ([`DpConfig::budget_epsilon`](crate::dp::DpConfig)/`budget_delta`).
+    /// Raised at submission time — before any frame is sent, so a
+    /// rejected study spends nothing. The figures live in a
+    /// pre-formatted string because this enum is `Eq` (f64 fields
+    /// would break the derive); callers branching on the variant
+    /// match on its shape, not its numbers.
+    DpBudgetExhausted {
+        /// The rejected study's session id.
+        session: SessionId,
+        /// Human-readable would-spend vs budget figures, from
+        /// [`DpBudgetExceeded`](crate::dp::DpBudgetExceeded).
+        detail: String,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -313,6 +328,10 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Net { session, error } => write!(
                 f,
                 "session {session} lost its network path: {error}"
+            ),
+            SubmitError::DpBudgetExhausted { session, detail } => write!(
+                f,
+                "session {session} rejected: differential-privacy budget exhausted ({detail})"
             ),
         }
     }
@@ -913,6 +932,13 @@ pub struct StudyEngine {
     /// (built via [`StudyEngine::with_remote_workers`]): shutdown must
     /// ship them `Shutdown` frames instead of joining local threads.
     remote_workers: bool,
+    /// Consortium-level (ε, δ) ledger: every DP submission through
+    /// this engine is charged here at admission, under the composition
+    /// rule the submission's own [`DpConfig`](crate::dp::DpConfig)
+    /// selects. Charges are refunded only when the submission never
+    /// queued; a shed or aborted DP study keeps its charge — the
+    /// conservative direction for a privacy ledger.
+    dp_accountant: Arc<crate::dp::DpAccountant>,
     _compute_guard: Option<ComputeServiceGuard>,
 }
 
@@ -1123,6 +1149,7 @@ impl StudyEngine {
             admission,
             worker_gauges,
             remote_workers: !spawn_workers,
+            dp_accountant: Arc::new(crate::dp::DpAccountant::new()),
             _compute_guard: compute_guard,
         })
     }
@@ -1133,6 +1160,14 @@ impl StudyEngine {
     /// [`WanPlan`](crate::transport::WanPlan).
     pub fn network(&self) -> Arc<Network> {
         self.net.clone()
+    }
+
+    /// The consortium's (ε, δ) privacy ledger. Read it to report
+    /// cumulative spend (`spent`) or the per-session charge list
+    /// (`charges`); the engine itself charges it on every DP
+    /// submission.
+    pub fn dp_accountant(&self) -> &Arc<crate::dp::DpAccountant> {
+        &self.dp_accountant
     }
 
     /// The shared session-spec registry (serve processes pre-derive
@@ -1406,7 +1441,7 @@ impl StudyEngine {
         let params = ShamirParams::new(cfg.threshold, cfg.num_centers)?;
         let session = self.next_session.fetch_add(1, Ordering::Relaxed);
         let shard = self.shard_of(session);
-        let spec = Arc::new(SessionSpec::new(
+        let mut spec = SessionSpec::new(
             session,
             shards,
             params,
@@ -1418,7 +1453,21 @@ impl StudyEngine {
             // the spec.
             crate::simd::resolve(cfg.kernel_isa),
             cfg.seed,
-        ));
+        );
+        if let Some(dcfg) = &cfg.dp {
+            let rows: usize = spec.shards.iter().map(|sh| sh.x.rows).sum();
+            spec.dp = Some(dcfg.params_for_fit(rows, cfg.lambda, spec.shards.len())?);
+            // Charge the consortium ledger BEFORE any frame exists for
+            // this session: a budget rejection must leave no trace on
+            // the wire. Refunded below if the study never queues.
+            self.dp_accountant
+                .try_charge(session, dcfg)
+                .map_err(|e| SubmitError::DpBudgetExhausted {
+                    session,
+                    detail: e.to_string(),
+                })?;
+        }
+        let spec = Arc::new(spec);
         // Register first: workers look specs up lazily on first
         // contact, so the spec must be in place before any frame can
         // reference the session. A rejected submission undoes this.
@@ -1455,6 +1504,9 @@ impl StudyEngine {
         // nudge fails and the queued entry is simply dropped with the
         // engine.
         if let Err(e) = self.enqueue_with_backpressure(shard, opts.policy, pending) {
+            if cfg.dp.is_some() {
+                self.dp_accountant.refund(session);
+            }
             self.registry.remove(session);
             self.board.remove(session);
             return Err(e);
@@ -1530,6 +1582,18 @@ impl StudyEngine {
             null: null.clone(),
             snp,
         }));
+        if let Some(dcfg) = &cfg.dp {
+            // Distinct session ids give every screened SNP an
+            // independent noise stream, so each screen is its own
+            // (ε, δ) release and is charged individually.
+            spec.dp = Some(dcfg.params_for_screen(spec.shards.len())?);
+            self.dp_accountant
+                .try_charge(session, dcfg)
+                .map_err(|e| SubmitError::DpBudgetExhausted {
+                    session,
+                    detail: e.to_string(),
+                })?;
+        }
         let spec = Arc::new(spec);
         self.registry.insert(spec.clone());
         self.board.set(session, Lifecycle::Queued);
@@ -1552,6 +1616,9 @@ impl StudyEngine {
             result_tx,
         };
         if let Err(e) = self.enqueue_with_backpressure(shard, opts.policy, pending) {
+            if cfg.dp.is_some() {
+                self.dp_accountant.refund(session);
+            }
             self.registry.remove(session);
             self.board.remove(session);
             return Err(e);
@@ -1630,10 +1697,27 @@ impl StudyEngine {
             }
             match self.submit_screen(cfg, panel, null, snp, opts) {
                 Ok(handle) => in_flight.push_back((snp, handle)),
-                // A rejected submission (full lane under Reject, or a
-                // blocked submit whose deadline lapsed) sheds this SNP
-                // only.
-                Err(_) => shed += 1,
+                Err(e) => {
+                    // An exhausted privacy budget is a hard stop, not a
+                    // shed: every remaining SNP would be rejected for
+                    // the identical reason, and silently counting 10⁵
+                    // budget rejections as "shed" would report a sweep
+                    // that privately covered almost nothing. Drain the
+                    // in-flight window (those screens were charged and
+                    // will release), then surface the typed error.
+                    if e.downcast_ref::<SubmitError>()
+                        .is_some_and(|s| matches!(s, SubmitError::DpBudgetExhausted { .. }))
+                    {
+                        for h in in_flight {
+                            retire(h, &mut records, &mut shed);
+                        }
+                        return Err(e);
+                    }
+                    // Any other rejected submission (full lane under
+                    // Reject, or a blocked submit whose deadline
+                    // lapsed) sheds this SNP only.
+                    shed += 1;
+                }
             }
         }
         for h in in_flight {
@@ -2735,6 +2819,7 @@ fn finish_session(
         },
         fisher: outcome.fisher,
         screen: outcome.screen,
+        dp: outcome.dp,
     }
 }
 

@@ -12,6 +12,15 @@
 //!
 //! The normal CDF is computed from an Abramowitz–Stegun style `erfc`
 //! approximation (7.1.26), accurate to ~1.5e-7 — ample for p-values.
+//!
+//! **Differentially private releases carry no inference summary.** A
+//! DP fit ([`crate::dp`]) deliberately ships `fisher: None`: Wald SEs
+//! computed from the *exact* Fisher information at a *noisy* β̂ would
+//! be statistically wrong (they ignore the injected noise variance)
+//! and reconstructing the exact information at the released point is
+//! itself a side channel on the noise realization. Consortia that
+//! need private inference should budget separate (ε, δ) releases for
+//! the variance terms.
 
 use crate::linalg::{Cholesky, LinalgError, Matrix};
 

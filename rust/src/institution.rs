@@ -197,6 +197,34 @@ pub fn run_institution_worker(
                     );
                 }
             }
+            Message::DpNoiseRequest { iter } => {
+                // DP release round: sample this institution's partial
+                // output-perturbation noise and Shamir-share it to the
+                // centers. Stateless like the screen path (a replayed
+                // request after a crash re-derives byte-identical
+                // shares from the seed streams); errors are
+                // session-tagged like the broadcast path's.
+                if let Err(e) = handle_dp_noise(
+                    &cfg,
+                    &ep,
+                    &mut share_tables,
+                    &mut pool,
+                    &mut summary,
+                    session,
+                    from,
+                    iter,
+                ) {
+                    let _ = ep.send_session(
+                        NodeId::Coordinator,
+                        session,
+                        &Message::NodeError {
+                            node: cfg.institution_id,
+                            is_center: false,
+                            error: format!("{e:#}"),
+                        },
+                    );
+                }
+            }
             Message::SessionReopen { .. } => {
                 // A suspended session is about to replay its current
                 // round: drop this worker's state for it so the
@@ -459,6 +487,21 @@ fn handle_screen(
         .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
         .clone();
     let share_seed = spec.institution_share_seed(j);
+    if let Some(dp) = spec.dp {
+        // DP screen release: add this institution's partial noise to
+        // the U slot BEFORE sharing — by share linearity the
+        // reconstructed statistic is U + Σⱼ ηⱼ, with no extra protocol
+        // round. Same per-(session, institution) seed stream as the
+        // full-fit release, so replays stay byte-identical; distinct
+        // session ids give every SNP independent noise.
+        let mut rng = crate::util::rng::ChaCha20Rng::seed_from_u64(derive_seed(
+            share_seed,
+            crate::dp::DP_NOISE_STREAM,
+        ));
+        let mut eta = [0.0f64];
+        crate::dp::sample_partial_noise(&dp, 1, &mut rng, &mut eta);
+        summary[0] += eta[0];
+    }
     encode_share_into_isa(
         &share_ctx,
         &spec.codec,
@@ -485,6 +528,90 @@ fn handle_screen(
             HessianRef::Absent,
             &holder[..d + 1],
             holder[d + 1],
+        );
+        ep.send_frame(NodeId::Center(c as u16), session, frame)?;
+    }
+    Ok(())
+}
+
+/// One DP release round: sample this institution's partial noise ηⱼ
+/// from its dedicated seed stream and Shamir-share `[ηⱼ | 0]` to every
+/// center through the same pooled zero-alloc pipeline as gradients.
+///
+/// Stateless per session (no `sessions` entry), and — deliberately —
+/// a pure function of `(spec, j)`: the noise VALUES come from
+/// `derive_seed(share_seed, DP_NOISE_STREAM)` and the share
+/// POLYNOMIALS from `derive_seed(share_seed, DP_SHARE_STREAM)`, both
+/// per-(session, institution) and NOT per-iteration, so a crash
+/// replay of the release round reproduces byte-identical frames —
+/// recovery can neither re-randomize nor double-apply the release.
+#[allow(clippy::too_many_arguments)]
+fn handle_dp_noise(
+    cfg: &InstitutionWorkerConfig,
+    ep: &Endpoint,
+    share_tables: &mut HashMap<(usize, usize), Rc<ShareContext>>,
+    pool: &mut SharePool,
+    summary: &mut Vec<f64>,
+    session: SessionId,
+    from: NodeId,
+    iter: u32,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        from == NodeId::Coordinator,
+        "dp noise request from non-coordinator {from}"
+    );
+    let j = cfg.institution_id;
+    let spec = cfg
+        .registry
+        .get(session)
+        .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+    let dp = spec
+        .dp
+        .ok_or_else(|| anyhow::anyhow!("dp noise request for non-dp session {session}"))?;
+    anyhow::ensure!(
+        (j as usize) < spec.num_institutions(),
+        "institution {j} not part of session {session}"
+    );
+    let d = spec.d();
+
+    let t = std::time::Instant::now();
+    // Summary layout: [η_0..η_{d-1} | 0.0] — the zero rides the
+    // deviance slot so the release round has the same share geometry
+    // as a gradient round and centers fold it with the same code.
+    summary.resize(d + 1, 0.0);
+    let share_seed = spec.institution_share_seed(j);
+    let mut rng = crate::util::rng::ChaCha20Rng::seed_from_u64(derive_seed(
+        share_seed,
+        crate::dp::DP_NOISE_STREAM,
+    ));
+    crate::dp::sample_partial_noise(&dp, d, &mut rng, &mut summary[..d]);
+    summary[d] = 0.0;
+    let key = (spec.params.threshold, spec.params.num_holders);
+    let share_ctx = share_tables
+        .entry(key)
+        .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
+        .clone();
+    encode_share_into_isa(
+        &share_ctx,
+        &spec.codec,
+        &summary[..d + 1],
+        derive_seed(share_seed, crate::dp::DP_SHARE_STREAM),
+        spec.kernel_threads,
+        spec.kernel_isa,
+        pool,
+    )?;
+    let cells = &spec.inst_metrics[j as usize];
+    cells
+        .protect_ns
+        .fetch_add((t.elapsed().as_secs_f64() * 1e9) as u64, Ordering::Relaxed);
+    for c in 0..spec.num_centers() {
+        let holder = pool.holder(c);
+        let frame = crate::protocol::encode_dp_noise_submission(
+            session,
+            iter,
+            j,
+            &holder[..d],
+            holder[d],
         );
         ep.send_frame(NodeId::Center(c as u16), session, frame)?;
     }

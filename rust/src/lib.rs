@@ -50,6 +50,7 @@ pub mod coordinator;
 pub mod crossval;
 pub mod engine;
 pub mod data;
+pub mod dp;
 pub mod field;
 pub mod fixed;
 pub mod inference;

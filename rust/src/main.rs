@@ -57,6 +57,24 @@ COMMON FLAGS (fit/compare):
     --seed <n>           RNG seed                                   [42]
     --config <path>      load flags from a config JSON instead
 
+DP RELEASE FLAGS (fit/multifit/gwas/serve — opt-in, see rust/README §DP release):
+    --dp-epsilon <f>     per-release ε; presence of this flag turns the
+                         (ε, δ)-DP release layer ON: institutions jointly
+                         sample output-perturbation noise as Shamir
+                         shares, the coordinator only reconstructs β̂ + η
+    --dp-delta <f>       per-release δ (Gaussian requires δ > 0)  [1e-6]
+    --dp-mechanism <m>   gaussian | laplace                   [gaussian]
+    --dp-clip <f>        per-record gradient clip C in the sensitivity
+                         bound Δ₂ = 2C/λ                           [1.0]
+    --dp-budget-epsilon <f>  consortium ε budget; a submission whose
+                         composed spend would exceed it is rejected
+                         with DpBudgetExhausted (0 = unlimited)      [0]
+    --dp-budget-delta <f>    consortium δ budget (0 = unlimited)     [0]
+    --dp-composition <c> basic | advanced (accountant rule)      [basic]
+    example:
+        privlr gwas --snps 200 --dp-epsilon 0.5 --dp-budget-epsilon 25 \\
+            --dp-budget-delta 1e-4
+
 MULTIFIT FLAGS:
     --sessions <K>       concurrent study sessions                  [4]
     --priority <p>       scheduling lane: interactive | batch | bulk
@@ -161,6 +179,24 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts_dir = a.to_string();
     }
+    // --dp-epsilon is the opt-in switch: its presence (or a config
+    // file's "dp" object) enables the DP release layer; the remaining
+    // flags refine whatever the config file set.
+    if args.get("dp-epsilon").is_some() || cfg.dp.is_some() {
+        let mut dp = cfg.dp.unwrap_or_default();
+        dp.epsilon = args.get_f64("dp-epsilon", dp.epsilon)?;
+        dp.delta = args.get_f64("dp-delta", dp.delta)?;
+        if let Some(m) = args.get("dp-mechanism") {
+            dp.mechanism = privlr::dp::DpMechanism::parse(m)?;
+        }
+        dp.clip = args.get_f64("dp-clip", dp.clip)?;
+        dp.budget_epsilon = args.get_f64("dp-budget-epsilon", dp.budget_epsilon)?;
+        dp.budget_delta = args.get_f64("dp-budget-delta", dp.budget_delta)?;
+        if let Some(c) = args.get("dp-composition") {
+            dp.composition = privlr::dp::DpComposition::parse(c)?;
+        }
+        cfg.dp = Some(dp);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -181,6 +217,17 @@ fn cmd_fit(args: &Args) -> anyhow::Result<()> {
     );
     let fit = secure_fit(&ds, &cfg)?;
     let m = &fit.metrics;
+    if let Some(dp) = &fit.dp {
+        println!(
+            "\nDP release: {} mechanism, ε={}, δ={:.1e}, sensitivity Δ₂={:.3e}, noise jointly \
+             sampled by {} institutions — the β̂ below is the NOISY release",
+            dp.mechanism.name(),
+            dp.epsilon,
+            dp.delta,
+            dp.sensitivity,
+            dp.num_partials,
+        );
+    }
     println!("\nconverged in {} iterations", m.iterations);
     println!("  total runtime    : {}", fmt_duration(m.total_secs));
     println!(
@@ -375,11 +422,35 @@ fn cmd_gwas(args: &Args) -> anyhow::Result<()> {
     let engine = privlr::engine::StudyEngine::for_experiment(&panel.covariates, &cfg)?;
     // Null model: ONE full secure fit of the shared covariate block;
     // its β̂₀ and reconstructed Fisher block seed the per-consortium
-    // cache every screen session reuses.
+    // cache every screen session reuses. It runs WITHOUT the DP layer
+    // even when --dp-epsilon is set: the null model is consortium-
+    // internal state (it never leaves the coordinator — only per-SNP
+    // screen statistics and promoted fits are published), a DP fit
+    // would ship no Fisher block to cache, and exempting it spends no
+    // budget on an artifact that is not released.
+    let mut null_cfg = cfg.clone();
+    null_cfg.dp = None;
+    if let Some(dp) = &cfg.dp {
+        println!(
+            "DP screening: each SNP statistic is an independent ({}, {:.1e})-DP release under \
+             {} composition{}",
+            dp.epsilon,
+            dp.delta,
+            dp.composition.name(),
+            if dp.budget_epsilon > 0.0 || dp.budget_delta > 0.0 {
+                format!(
+                    " against budget (ε={}, δ={:.1e})",
+                    dp.budget_epsilon, dp.budget_delta
+                )
+            } else {
+                String::new()
+            },
+        );
+    }
     let t_null = std::time::Instant::now();
     let null_fit = engine
         .submit_shared(
-            &cfg,
+            &null_cfg,
             panel.shard_data().to_vec(),
             privlr::engine::SubmitOptions::interactive(),
         )?
@@ -399,15 +470,41 @@ fn cmd_gwas(args: &Args) -> anyhow::Result<()> {
         fmt_duration(t_null.elapsed().as_secs_f64()),
     );
     let t_screen = std::time::Instant::now();
-    let report = engine.screen_sweep(
+    let report = match engine.screen_sweep(
         &cfg,
         &panel,
         &null,
         threshold,
         window,
         privlr::engine::SubmitOptions::bulk().policy(policy),
-    )?;
+    ) {
+        Ok(report) => report,
+        // The accountant stopping the sweep is an expected outcome of
+        // a finite --dp-budget-*: report the composed spend so far and
+        // exit with a clear diagnosis instead of a bare error chain.
+        Err(e)
+            if e.downcast_ref::<privlr::engine::SubmitError>().is_some_and(|s| {
+                matches!(s, privlr::engine::SubmitError::DpBudgetExhausted { .. })
+            }) =>
+        {
+            let dcfg = cfg.dp.as_ref().expect("budget rejections imply a dp config");
+            let (eps, delta) = engine.dp_accountant().spent(dcfg);
+            let charges = engine.dp_accountant().charges();
+            engine.shutdown()?;
+            anyhow::bail!(
+                "privacy budget exhausted mid-sweep after {charges} charged releases \
+                 (composed spend ε={eps:.4}, δ={delta:.3e}): {e}\n\
+                 raise --dp-budget-epsilon/--dp-budget-delta, loosen --dp-epsilon, or screen \
+                 fewer SNPs"
+            );
+        }
+        Err(e) => return Err(e),
+    };
     let screen_secs = t_screen.elapsed().as_secs_f64();
+    let dp_spend = cfg
+        .dp
+        .as_ref()
+        .map(|d| (engine.dp_accountant().spent(d), engine.dp_accountant().charges()));
     let traffic = engine.shutdown()?;
     println!(
         "\nscreened {} SNPs ({} shed) in {} → {:.0} SNPs/sec; {} promoted to full fits",
@@ -417,6 +514,11 @@ fn cmd_gwas(args: &Args) -> anyhow::Result<()> {
         report.screened as f64 / screen_secs,
         report.hits.len(),
     );
+    if let Some(((eps, delta), charges)) = dp_spend {
+        println!(
+            "privacy ledger: {charges} releases charged, composed spend ε={eps:.4}, δ={delta:.3e}"
+        );
+    }
     println!(
         "traffic: {} total ({} sessions incl. null fit and promotions)",
         fmt_bytes(traffic.total_bytes),

@@ -885,7 +885,19 @@ pub fn serve(
                 let fit = h.join()?;
                 println!("session {session}: {} iterations", fit.metrics.iterations);
                 for (i, b) in fit.beta.iter().enumerate() {
-                    println!("  β_{i} = {b:+.8}");
+                    // `bits=` is the machine-readable form: the
+                    // multi-process smoke test compares it against an
+                    // in-memory fit, so it must stay bit-exact where
+                    // the decimal rendering rounds.
+                    println!("  β_{i} = {b:+.8} bits={:016x}", b.to_bits());
+                }
+                if let Some(dp) = fit.dp {
+                    println!(
+                        "  differentially private release: ε = {}, δ = {:.2e} ({})",
+                        dp.epsilon,
+                        dp.delta,
+                        dp.mechanism.name()
+                    );
                 }
                 betas.push(fit.beta);
             }

@@ -207,6 +207,31 @@ pub enum Message {
     /// 10⁵-session sweep holds O(1) worker memory.
     ScreenRequest { snp: u32 },
 
+    /// Coordinator → institutions: the session converged and its DP
+    /// release round `iter` is open — sample your partial output-
+    /// perturbation noise and Shamir-share it to the centers (see
+    /// [`crate::dp`]). Carries NO payload on purpose: the noise is
+    /// derived from the per-(session, institution) seed stream, so a
+    /// replayed request after a crash re-produces byte-identical
+    /// shares instead of fresh noise.
+    DpNoiseRequest { iter: u32 },
+
+    /// Institution → one center: that center's Shamir shares of the
+    /// institution's partial release noise ηⱼ for DP round `iter` —
+    /// same share geometry as a gradient submission (`noise_share` has
+    /// d elements, `mask_share` rides the deviance slot and encodes
+    /// 0), so centers fold it with the same `secure_add` and the
+    /// coordinator reconstructs Σⱼ ηⱼ through the normal quorum path.
+    /// Deduplicated per-(session, institution) at the center exactly
+    /// like gradient shares, which is what makes duplicated/delayed
+    /// frames unable to double-apply noise.
+    DpNoiseSubmission {
+        iter: u32,
+        institution: u16,
+        noise_share: Vec<Fp>,
+        mask_share: Fp,
+    },
+
     /// Orderly teardown of node threads.
     Shutdown,
 }
@@ -228,6 +253,8 @@ impl Message {
             Message::WorkerDown { .. } => "worker_down",
             Message::SessionReopen { .. } => "session_reopen",
             Message::ScreenRequest { .. } => "screen_request",
+            Message::DpNoiseRequest { .. } => "dp_noise_request",
+            Message::DpNoiseSubmission { .. } => "dp_noise_submission",
             Message::Shutdown => "shutdown",
         }
     }
@@ -413,6 +440,8 @@ pub const TAG_ADMISSION_WAKE: u8 = 12;
 pub const TAG_WORKER_DOWN: u8 = 13;
 pub const TAG_SESSION_REOPEN: u8 = 14;
 pub const TAG_SCREEN_REQ: u8 = 15;
+pub const TAG_DP_NOISE_REQ: u8 = 16;
+pub const TAG_DP_NOISE_SUB: u8 = 17;
 
 /// Message tag byte of an encoded wire frame (`None` for frames
 /// shorter than header + tag). The fault layer matches per-tag rules
@@ -529,6 +558,22 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u8(TAG_SCREEN_REQ);
             w.u32(*snp);
         }
+        Message::DpNoiseRequest { iter } => {
+            w.u8(TAG_DP_NOISE_REQ);
+            w.u32(*iter);
+        }
+        Message::DpNoiseSubmission {
+            iter,
+            institution,
+            noise_share,
+            mask_share,
+        } => {
+            w.u8(TAG_DP_NOISE_SUB);
+            w.u32(*iter);
+            w.u16(*institution);
+            w.fps(noise_share);
+            w.u64(mask_share.to_u64());
+        }
         Message::Shutdown => w.u8(TAG_SHUTDOWN),
     }
     w.buf
@@ -584,6 +629,13 @@ pub fn decode(bytes: &[u8]) -> Result<Message, CodecError> {
         },
         TAG_SESSION_REOPEN => Message::SessionReopen { iter: r.u32()? },
         TAG_SCREEN_REQ => Message::ScreenRequest { snp: r.u32()? },
+        TAG_DP_NOISE_REQ => Message::DpNoiseRequest { iter: r.u32()? },
+        TAG_DP_NOISE_SUB => Message::DpNoiseSubmission {
+            iter: r.u32()?,
+            institution: r.u16()?,
+            noise_share: r.fps()?,
+            mask_share: r.fp()?,
+        },
         TAG_NODE_ERROR => {
             let node = r.u16()?;
             let is_center = r.u8()? != 0;
@@ -693,6 +745,33 @@ pub fn encode_share_submission(
     }
     w.fps(g_share);
     w.u64(dev_share.to_u64());
+    debug_assert_eq!(w.buf.len(), cap, "frame capacity must be exact");
+    w.buf
+}
+
+/// Encode a complete [`Message::DpNoiseSubmission`] wire frame (session
+/// header included) directly from a borrowed pooled share slice —
+/// byte-identical to `encode_frame` over an owned message (gated by the
+/// codec tests) with exactly ONE allocation, keeping the DP release
+/// round on the same zero-copy footing as the per-iteration gradient
+/// path.
+pub fn encode_dp_noise_submission(
+    session: SessionId,
+    iter: u32,
+    institution: u16,
+    noise_share: &[Fp],
+    mask_share: Fp,
+) -> Vec<u8> {
+    let cap = SESSION_HEADER_LEN + 1 + 4 + 2 + (4 + 8 * noise_share.len()) + 8;
+    let mut w = Writer {
+        buf: Vec::with_capacity(cap),
+    };
+    w.buf.extend_from_slice(&session.to_le_bytes());
+    w.u8(TAG_DP_NOISE_SUB);
+    w.u32(iter);
+    w.u16(institution);
+    w.fps(noise_share);
+    w.u64(mask_share.to_u64());
     debug_assert_eq!(w.buf.len(), cap, "frame capacity must be exact");
     w.buf
 }
@@ -836,7 +915,78 @@ mod tests {
         roundtrip(Message::SessionReopen { iter: u32::MAX });
         roundtrip(Message::ScreenRequest { snp: 0 });
         roundtrip(Message::ScreenRequest { snp: u32::MAX });
+        roundtrip(Message::DpNoiseRequest { iter: 0 });
+        roundtrip(Message::DpNoiseRequest { iter: u32::MAX });
+        roundtrip(Message::DpNoiseSubmission {
+            iter: 6,
+            institution: 3,
+            noise_share: vec![Fp::new(21), Fp::new(0)],
+            mask_share: Fp::new(77),
+        });
+        roundtrip(Message::DpNoiseSubmission {
+            iter: 0,
+            institution: 0,
+            noise_share: vec![],
+            mask_share: Fp::new(0),
+        });
         roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn dp_noise_wire_shapes() {
+        // Request: tag + u32 iter, fixed 5-byte body.
+        let bytes = encode(&Message::DpNoiseRequest { iter: 9 });
+        assert_eq!(bytes.len(), 1 + 4);
+        assert_eq!(bytes[0], TAG_DP_NOISE_REQ);
+        assert!(matches!(
+            decode(&bytes[..bytes.len() - 1]),
+            Err(CodecError::Truncated { .. })
+        ));
+        // Submission: tag + iter + institution + fps(d) + mask.
+        let msg = Message::DpNoiseSubmission {
+            iter: 2,
+            institution: 1,
+            noise_share: vec![Fp::new(5); 4],
+            mask_share: Fp::new(9),
+        };
+        let bytes = encode(&msg);
+        assert_eq!(bytes.len(), 1 + 4 + 2 + (4 + 32) + 8);
+        // Out-of-range mask element must be rejected as BadField.
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(CodecError::BadField(_))));
+        // Hostile noise_share length prefix fails pre-allocation.
+        let mut hostile = vec![TAG_DP_NOISE_SUB];
+        hostile.extend_from_slice(&0u32.to_le_bytes());
+        hostile.extend_from_slice(&0u16.to_le_bytes());
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&hostile), Err(CodecError::Truncated { .. })));
+        // Frame tag is visible to the fault layer without decoding.
+        let framed = encode_frame(11, &msg);
+        assert_eq!(frame_tag(&framed), Some(TAG_DP_NOISE_SUB));
+        assert_eq!(msg.kind(), "dp_noise_submission");
+        assert_eq!(Message::DpNoiseRequest { iter: 0 }.kind(), "dp_noise_request");
+    }
+
+    #[test]
+    fn zero_copy_dp_noise_frame_matches_message_codec() {
+        let shares: Vec<Fp> = (0..9).map(|k| Fp::new(5000 + 3 * k)).collect();
+        let mask = Fp::new(31337);
+        let fast = encode_dp_noise_submission(0xFEED_0002, 7, 4, &shares, mask);
+        let slow = encode_frame(
+            0xFEED_0002,
+            &Message::DpNoiseSubmission {
+                iter: 7,
+                institution: 4,
+                noise_share: shares.clone(),
+                mask_share: mask,
+            },
+        );
+        assert_eq!(fast, slow, "zero-copy DP frame must be byte-identical");
+        let (session, back) = decode_frame(&fast).unwrap();
+        assert_eq!(session, 0xFEED_0002);
+        assert!(matches!(back, Message::DpNoiseSubmission { iter: 7, .. }));
     }
 
     #[test]

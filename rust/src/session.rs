@@ -110,7 +110,7 @@ pub fn spec_for_consortium(
 ) -> anyhow::Result<Arc<SessionSpec>> {
     cfg.validate()?;
     let params = ShamirParams::new(cfg.threshold, cfg.num_centers)?;
-    Ok(Arc::new(SessionSpec::new(
+    let mut spec = SessionSpec::new(
         session,
         shards,
         params,
@@ -119,7 +119,16 @@ pub fn spec_for_consortium(
         cfg.kernel_threads,
         crate::simd::resolve(cfg.kernel_isa),
         cfg.seed,
-    )))
+    );
+    if let Some(dcfg) = &cfg.dp {
+        // Remote processes hold only their own shard (placeholders are
+        // zero-row), but the calibrated scales are row-count-free —
+        // see `dp::DpConfig::params_for_fit` — so every process derives
+        // the identical DpParams from the shared config alone.
+        let rows: usize = spec.shards.iter().map(|sh| sh.x.rows).sum();
+        spec.dp = Some(dcfg.params_for_fit(rows, cfg.lambda, spec.shards.len())?);
+    }
+    Ok(Arc::new(spec))
 }
 
 /// Out-of-band per-institution telemetry cells (nanosecond totals);
@@ -204,6 +213,16 @@ pub struct SessionSpec {
     /// (the default from [`SessionSpec::new`]) is a full fit; the
     /// engine's `submit_screen` sets it before publishing the spec.
     pub screen: Option<Arc<ScreenTask>>,
+    /// `Some` makes this a DP release session: at convergence the
+    /// machine opens one extra round in which institutions jointly
+    /// sample output-perturbation noise as Shamir shares (see
+    /// [`crate::dp`]) and the coordinator reconstructs β̂ + η — the
+    /// non-private β̂ never appears in any transcript. For screen
+    /// sessions the partial noise is added to the statistic slot
+    /// before sharing instead (share linearity; no extra round).
+    /// `None` (the default from [`SessionSpec::new`]) keeps every
+    /// path bit-identical to the pre-DP engine.
+    pub dp: Option<crate::dp::DpParams>,
 }
 
 impl SessionSpec {
@@ -234,6 +253,7 @@ impl SessionSpec {
             center_busy_ns: (0..w).map(|_| Arc::new(AtomicU64::new(0))).collect(),
             inst_metrics: (0..s).map(|_| Arc::new(InstMetricCells::default())).collect(),
             screen: None,
+            dp: None,
         }
     }
 
@@ -342,6 +362,13 @@ pub struct SessionOutcome {
     pub fisher: Option<Matrix>,
     /// `Some` iff this was a screen session: the SNP's score statistic.
     pub screen: Option<ScreenStat>,
+    /// `Some` iff the reported `beta` (or screen statistic) is a
+    /// DIFFERENTIALLY PRIVATE release — β̂ + η, never the raw fit.
+    /// Carries the release calibration so downstream consumers can
+    /// report (ε, δ) and can never confuse private and non-private
+    /// results. Private fits deliberately ship `fisher: None`: no
+    /// standard errors are derivable from a noisy release.
+    pub dp: Option<crate::dp::DpParams>,
 }
 
 /// What the driver should do after feeding a response to the machine.
@@ -371,6 +398,12 @@ pub struct SessionState {
     iterations: u32,
     responses: Vec<(u16, HessianPayload, Vec<Fp>, Fp)>,
     central_secs: f64,
+    /// `Some` once the Newton loop has converged under a DP spec: the
+    /// release base β̂ — held HERE and only here, never assigned to
+    /// `self.beta` and never broadcast, so no transcript at any party
+    /// contains it. The machine is then in its release round, waiting
+    /// for the centers to aggregate the institutions' noise shares.
+    dp_base: Option<Vec<f64>>,
     /// When the driver admitted the session (total-time epoch; queue
     /// wait before admission is reported separately).
     pub started: Instant,
@@ -419,6 +452,7 @@ impl SessionState {
             iterations: 1,
             responses: Vec::with_capacity(w),
             central_secs: 0.0,
+            dp_base: None,
             started: Instant::now(),
             lagrange: LagrangeCache::new(),
             idx_buf: Vec::with_capacity(t),
@@ -474,12 +508,19 @@ impl SessionState {
         let w = self.spec.num_centers();
         let mut out = Vec::with_capacity(s + w);
         for j in 0..s {
-            let msg = match &self.spec.screen {
-                Some(task) => Message::ScreenRequest { snp: task.snp },
-                None => Message::BetaBroadcast {
-                    iter: self.iter,
-                    beta: self.beta.clone(),
-                },
+            // In the DP release round institutions receive a bare
+            // noise request — crucially NOT a β broadcast: the release
+            // base stays inside the coordinator until noised.
+            let msg = if self.dp_base.is_some() {
+                Message::DpNoiseRequest { iter: self.iter }
+            } else {
+                match &self.spec.screen {
+                    Some(task) => Message::ScreenRequest { snp: task.snp },
+                    None => Message::BetaBroadcast {
+                        iter: self.iter,
+                        beta: self.beta.clone(),
+                    },
+                }
             };
             out.push((NodeId::Institution(j as u16), msg));
         }
@@ -598,6 +639,38 @@ impl SessionState {
         self.dev_buf.extend(quorum.iter().map(|(_, _, _, dv)| *dv));
         let dev_total = codec.decode(reconstruct_scalar_with(lambdas, &self.dev_buf));
 
+        if let Some(base) = self.dp_base.take() {
+            // DP release round: the reconstructed vector is the SUM of
+            // the institutions' noise partials η = Σⱼ ηⱼ (the scalar
+            // slot carries a zero mask). Release β̂ + η; only the noisy
+            // vector ever reaches `self.beta`, so the SessionClose
+            // teardown — the one β-bearing frame of this phase —
+            // carries the private release.
+            let released: Vec<f64> = base
+                .iter()
+                .zip(&self.g_f64)
+                .map(|(b, eta)| b + eta)
+                .collect();
+            self.beta = released.clone();
+            self.central_secs += t_central.elapsed().as_secs_f64();
+            self.responses.clear();
+            let outgoing = self.finish_messages();
+            return Ok(SessionStep::Done {
+                outgoing,
+                outcome: SessionOutcome {
+                    beta: released,
+                    iterations: self.iterations,
+                    deviance_trace: std::mem::take(&mut self.deviance_trace),
+                    central_secs: self.central_secs,
+                    // Deliberately no Fisher block: standard errors
+                    // must not be derivable from a private release.
+                    fisher: None,
+                    screen: None,
+                    dp: self.spec.dp,
+                },
+            });
+        }
+
         if let Some(task) = self.spec.screen.clone() {
             // Screen round: the reconstructed vector is [U | b] and the
             // scalar slot carries q. One round, no Hessian, no Newton —
@@ -624,6 +697,7 @@ impl SessionState {
                         chi2,
                         p_value,
                     }),
+                    dp: self.spec.dp,
                 },
             });
         }
@@ -678,6 +752,19 @@ impl SessionState {
         self.responses.clear();
 
         if done || self.iterations as usize >= self.max_iters {
+            if self.spec.dp.is_some() {
+                // Converged under a DP spec: instead of closing, park
+                // the final Newton step as the release base (it was
+                // never assigned to `self.beta`, hence never broadcast
+                // — `!done` guards that assignment above) and open the
+                // noise round. A crash replay of this round re-derives
+                // byte-identical noise shares from the per-(session,
+                // institution) seed streams, so recovery can neither
+                // re-randomize nor double-apply the release.
+                self.dp_base = Some(step.beta_new);
+                self.iter += 1;
+                return Ok(SessionStep::Continue(self.round_messages()));
+            }
             let outgoing = self.finish_messages();
             return Ok(SessionStep::Done {
                 outgoing,
@@ -691,6 +778,7 @@ impl SessionState {
                     // of the GWAS null-model cache.
                     fisher: Some(self.h_mat.clone()),
                     screen: None,
+                    dp: None,
                 },
             });
         }

@@ -475,6 +475,11 @@ impl FaultRule {
 /// remaining wins per frame. Shard-directed control sends (per-shard
 /// shutdown, cross-shard admission wakes) bypass the plan, so an
 /// engine can always be shut down under any plan.
+///
+/// Rules with `tag: None` match every frame kind — including message
+/// tags added after a plan was written, so [`FaultPlan::seeded_chaos`]
+/// automatically exercises new protocol rounds (the DP noise frames,
+/// tags 16/17, included) without being updated.
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     pub rules: Vec<FaultRule>,

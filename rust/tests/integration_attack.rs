@@ -118,3 +118,57 @@ fn secure_fit_leaks_nothing_but_still_fits() {
     let err = center_view_gradient_error(params, &codec, &g0, &mut rng);
     assert!(err > 1e6, "single-center view must be uninformative: {err}");
 }
+
+/// Attack 4 and its closure, end-to-end through the real protocol: the
+/// *released* β̂ of a wide consortium (n ≤ d) pins down every private
+/// response bit via the stationarity condition — secret sharing cannot
+/// help, because the leak is through the agreed output. The same fit
+/// with the DP release layer enabled reduces the attacker to chance,
+/// ships the mechanism parameters in the result, and withholds the
+/// Fisher block.
+#[test]
+fn released_beta_attack_closed_by_dp_release() {
+    let ds = synthetic("wide", 10, 12, 2, 0.0, 1.0, 207);
+    let cfg = ExperimentConfig {
+        max_iters: 60,
+        lambda: 1.0,
+        ..Default::default()
+    };
+
+    // Without DP the exact coefficients are published and the gram
+    // solve reads the response bits straight off.
+    let fit = secure_fit(&ds, &cfg).unwrap();
+    assert!(fit.dp.is_none(), "DP off must report no release params");
+    assert!(fit.fisher.is_some(), "plain fit keeps its Fisher block");
+    let acc = released_beta_attack_accuracy(&fit.beta, &ds.x, cfg.lambda, &ds.y).unwrap();
+    assert!(acc >= 0.9, "plain release must leak responses: acc {acc}");
+
+    // With DP: identical Newton trajectory, then one joint noise round.
+    let mut dp_cfg = cfg.clone();
+    dp_cfg.dp = Some(privlr::dp::DpConfig::default());
+    let fit_dp = secure_fit(&ds, &dp_cfg).unwrap();
+    let params = fit_dp.dp.expect("DP fit must report its release params");
+    assert_eq!(params.epsilon, 1.0);
+    assert_eq!(params.num_partials, 2, "one partial noise term per institution");
+    // sensitivity is 2·clip/λ of the SUMMED objective = 2·1/1
+    assert!((params.sensitivity - 2.0).abs() < 1e-12, "Δ₂ {}", params.sensitivity);
+    assert!(
+        fit_dp.fisher.is_none(),
+        "a DP release must not ship the exact Fisher information"
+    );
+    // The coordinator really did add noise: at ε=1, δ=1e-6 the
+    // calibrated σ ≈ 10.6, so the released vector moves far from the
+    // non-private optimum.
+    let max_diff = fit
+        .beta
+        .iter()
+        .zip(&fit_dp.beta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff > 1e-2, "DP β̂ must differ from the plain β̂: {max_diff}");
+    let acc_dp = released_beta_attack_accuracy(&fit_dp.beta, &ds.x, cfg.lambda, &ds.y).unwrap();
+    assert!(
+        acc_dp <= 0.5,
+        "DP release must close the attack to ≤ chance: acc {acc_dp} (plain was {acc})"
+    );
+}

@@ -226,6 +226,94 @@ fn duplicated_and_delayed_frames_neither_corrupt_nor_double_count() {
     engine.shutdown().unwrap();
 }
 
+/// DP noise-share frames (TAG 17) cannot double-apply noise. The
+/// release round's partial noise is a pure replay-stable function of
+/// `(session, institution)` and centers dedup submissions per
+/// `(iter, institution)`, so transport-duplicated and delayed noise
+/// frames — and even a duplicated noise REQUEST that makes an
+/// institution resample and re-send from scratch — leave the released
+/// β̂ byte-identical to a fault-free DP fit.
+#[test]
+fn dp_noise_frames_survive_duplication_and_delay() {
+    use privlr::protocol::{TAG_DP_NOISE_REQ, TAG_DP_NOISE_SUB};
+    let ds = synthetic("dpfault", 600, 4, 2, 0.0, 1.0, 709);
+    let mut cfg = cfg_3c();
+    cfg.dp = Some(privlr::dp::DpConfig::default());
+
+    // Fault-free DP baseline. The noise stream is keyed by
+    // (master_seed, session, institution), so the comparison runs must
+    // land on the same session id — fresh engines assign ids from the
+    // same counter; asserted below to keep the premise explicit.
+    let clean = StudyEngine::new(2, 3).unwrap();
+    let h = clean.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let sid_clean = h.session_id();
+    let fit_clean = h.join().unwrap();
+    let clean_bytes = clean.traffic().session_bytes(sid_clean);
+    clean.shutdown().unwrap();
+    assert!(fit_clean.dp.is_some() && fit_clean.fisher.is_none());
+
+    // Transport-level duplicate + delay of the noise submissions:
+    // center 0's per-(iter, institution) `seen` set must absorb the
+    // duplicates, center 1's delayed folds must still reach the
+    // t-quorum, and the duplicated delivery is counted once.
+    let engine = StudyEngine::new(2, 3).unwrap();
+    engine.install_faults(
+        FaultPlan::new()
+            .rule(FaultRule {
+                to: Some(NodeId::Center(0)),
+                session: None,
+                tag: Some(TAG_DP_NOISE_SUB),
+                action: FaultAction::Duplicate,
+                budget: 3,
+            })
+            .rule(FaultRule {
+                to: Some(NodeId::Center(1)),
+                session: None,
+                tag: Some(TAG_DP_NOISE_SUB),
+                action: FaultAction::Delay(1),
+                budget: 2,
+            }),
+    );
+    let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    assert_eq!(h.session_id(), sid_clean, "session ids must match for seed parity");
+    let fit_faulted = h.join().unwrap();
+    engine.clear_faults();
+    assert_eq!(
+        fit_faulted.beta, fit_clean.beta,
+        "duplicated/delayed noise shares double-applied noise"
+    );
+    assert_eq!(
+        engine.traffic().session_bytes(sid_clean),
+        clean_bytes,
+        "a duplicated noise delivery must be counted once"
+    );
+    assert_no_leaks(&engine);
+    engine.shutdown().unwrap();
+
+    // A duplicated noise REQUEST makes institution 1 resample and
+    // re-send real frames; replay-stability makes them bit-identical
+    // and the center dedup drops them — β̂ unchanged. (Byte accounting
+    // legitimately differs here: the re-sent frames are real traffic.)
+    let engine = StudyEngine::new(2, 3).unwrap();
+    engine.install_faults(FaultPlan::new().rule(FaultRule {
+        to: Some(NodeId::Institution(1)),
+        session: None,
+        tag: Some(TAG_DP_NOISE_REQ),
+        action: FaultAction::Duplicate,
+        budget: 2,
+    }));
+    let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    assert_eq!(h.session_id(), sid_clean, "session ids must match for seed parity");
+    let fit_resent = h.join().unwrap();
+    engine.clear_faults();
+    assert_eq!(
+        fit_resent.beta, fit_clean.beta,
+        "a re-sent noise round moved the released β̂"
+    );
+    assert_no_leaks(&engine);
+    engine.shutdown().unwrap();
+}
+
 /// The deadline timer wheel: a study queued on an otherwise IDLE
 /// driver shard (no protocol frames ever reach it — the running study
 /// lives on the other shard) must still observe its lapsed deadline

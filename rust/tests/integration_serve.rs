@@ -1,0 +1,217 @@
+//! Multi-process smoke test for `privlr serve` (`--features net`):
+//! REAL subprocesses of the built binary — one coordinator, three
+//! centers, two institutions — wired over loopback TCP, each deriving
+//! its session specs locally from the shared CLI config (specs never
+//! cross the wire).
+//!
+//! Two gates:
+//!
+//! * **Bit-identity** — the coordinator process's released β̂ (parsed
+//!   from its machine-readable `bits=` output) is byte-identical to an
+//!   in-memory fit of the same config, across K=2 sessions.
+//! * **DP across processes** — with `--dp-epsilon` the six processes
+//!   jointly sample release noise as shares; the released β̂ is STILL
+//!   bit-identical to an in-memory DP fit (the noise streams are pure
+//!   functions of `(seed, session, institution)`), and differs from
+//!   the non-private β̂.
+
+#![cfg(feature = "net")]
+
+use privlr::config::{DatasetSpec, ExperimentConfig};
+use privlr::engine::{StudyEngine, SubmitOptions};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Reserve a loopback address: bind an ephemeral listener, read the
+/// port, release it. (The usual pre-agreed-port trick; the tiny reuse
+/// race is acceptable for a smoke test.)
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let a = l.local_addr().unwrap();
+    drop(l);
+    a.to_string()
+}
+
+fn shared_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetSpec::Synthetic { n: 600, d: 4, institutions: 2 },
+        num_centers: 3,
+        threshold: 2,
+        max_iters: 30,
+        seed: 904,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The CLI flags encoding [`shared_cfg`] — every process derives the
+/// same specs from these.
+fn shared_flags(sessions: u32, dp: bool) -> Vec<String> {
+    let mut f: Vec<String> = [
+        "--dataset",
+        "synthetic:600:4:2",
+        "--centers",
+        "3",
+        "--threshold",
+        "2",
+        "--max-iters",
+        "30",
+        "--seed",
+        "904",
+        "--engine",
+        "rust",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    f.push("--sessions".into());
+    f.push(sessions.to_string());
+    if dp {
+        f.push("--dp-epsilon".into());
+        f.push("1.0".into());
+    }
+    f
+}
+
+fn spawn_member(role: &str, id: usize, listen: &str, peers: &[String], flags: &[String]) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_privlr"));
+    cmd.arg("serve")
+        .arg("--role")
+        .arg(role)
+        .arg("--id")
+        .arg(id.to_string())
+        .arg("--listen")
+        .arg(listen)
+        .args(flags)
+        .stdin(Stdio::null())
+        .stderr(Stdio::inherit());
+    if !peers.is_empty() {
+        cmd.arg("--peers").arg(peers.join(","));
+    }
+    // Workers' stdout is uninteresting; the coordinator's is parsed.
+    cmd.stdout(if role == "coordinator" { Stdio::piped() } else { Stdio::null() });
+    cmd.spawn().unwrap_or_else(|e| panic!("spawning {role} {id}: {e}"))
+}
+
+/// Reap a worker with a bound: the coordinator's engine shutdown ships
+/// `Shutdown` over the wire, so workers exit on their own shortly
+/// after — a worker still alive after the grace period is a bug (and
+/// gets killed so the test run never leaks processes).
+fn reap(mut child: Child, what: &str) {
+    let t0 = Instant::now();
+    loop {
+        match child.try_wait().unwrap() {
+            Some(status) => {
+                assert!(status.success(), "{what} exited with {status}");
+                return;
+            }
+            None if t0.elapsed() > Duration::from_secs(30) => {
+                child.kill().ok();
+                child.wait().ok();
+                panic!("{what} never observed the over-the-wire shutdown");
+            }
+            None => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Launch the six-process consortium, run `sessions` fits, and return
+/// each session's β̂ recovered from the coordinator's `bits=` output.
+fn run_consortium(sessions: u32, dp: bool, d: usize) -> Vec<Vec<f64>> {
+    let flags = shared_flags(sessions, dp);
+    let coord_addr = free_addr();
+    let center_addrs: Vec<String> = (0..3).map(|_| free_addr()).collect();
+
+    let coordinator = spawn_member("coordinator", 0, &coord_addr, &[], &flags);
+    let mut workers = Vec::new();
+    for (c, addr) in center_addrs.iter().enumerate() {
+        workers.push(spawn_member("center", c, addr, &[coord_addr.clone()], &flags));
+    }
+    for j in 0..2 {
+        let mut peers = vec![coord_addr.clone()];
+        peers.extend(center_addrs.iter().cloned());
+        workers.push(spawn_member("institution", j, "127.0.0.1:0", &peers, &flags));
+    }
+
+    // The coordinator blocks until every peer dials in (bounded
+    // in-process at 120s), runs the sessions, ships Shutdown, exits.
+    let out = coordinator.wait_with_output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    if !out.status.success() {
+        for w in workers {
+            let mut w = w;
+            w.kill().ok();
+            w.wait().ok();
+        }
+        panic!("coordinator failed ({}):\n{stdout}", out.status);
+    }
+    for (i, w) in workers.into_iter().enumerate() {
+        reap(w, &format!("worker {i}"));
+    }
+
+    // Recover the released coefficients bit-exactly from the
+    // machine-readable output.
+    let bits: Vec<f64> = stdout
+        .lines()
+        .filter_map(|l| l.split("bits=").nth(1))
+        .map(|hex| f64::from_bits(u64::from_str_radix(hex.trim(), 16).unwrap()))
+        .collect();
+    assert_eq!(
+        bits.len(),
+        sessions as usize * d,
+        "expected {sessions}×{d} coefficient lines in:\n{stdout}"
+    );
+    bits.chunks(d).map(<[f64]>::to_vec).collect()
+}
+
+/// In-memory reference fits: session ids 1..=K on a fresh engine — the
+/// same ids the serve workers pre-register, so every share and noise
+/// stream derives from identical `(seed, session, institution)` triples.
+fn in_memory_betas(cfg: &ExperimentConfig, sessions: u32) -> Vec<Vec<f64>> {
+    let ds = cfg.dataset.load(cfg.seed).unwrap();
+    let engine = StudyEngine::new(ds.num_institutions(), cfg.num_centers).unwrap();
+    let handles: Vec<_> = (0..sessions)
+        .map(|_| engine.submit(cfg, &ds, SubmitOptions::batch()).unwrap())
+        .collect();
+    let betas = handles.into_iter().map(|h| h.join().unwrap().beta).collect();
+    engine.shutdown().unwrap();
+    betas
+}
+
+/// Six real processes over loopback TCP reconstruct the same bytes the
+/// in-memory transport does — K=2 sessions, plain release.
+#[test]
+fn serve_processes_fit_bit_identically_to_in_memory() {
+    let cfg = shared_cfg();
+    let base = in_memory_betas(&cfg, 2);
+    let served = run_consortium(2, false, 4);
+    for (s, (a, b)) in served.iter().zip(&base).enumerate() {
+        let same = a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "session {}: serve β̂ {a:?} != in-memory β̂ {b:?}", s + 1);
+    }
+}
+
+/// The DP release round works across REAL process boundaries: the six
+/// processes jointly sample the noise as shares, the released β̂ is
+/// bit-identical to an in-memory DP fit of the same session id, and
+/// carries calibrated noise (≠ the non-private β̂).
+#[test]
+fn serve_processes_release_dp_beta_bit_identically() {
+    let mut cfg = shared_cfg();
+    let plain = in_memory_betas(&cfg, 1);
+    cfg.dp = Some(privlr::dp::DpConfig::default());
+    let base_dp = in_memory_betas(&cfg, 1);
+    let served = run_consortium(1, true, 4);
+    let same = served[0]
+        .iter()
+        .zip(&base_dp[0])
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(
+        same,
+        "DP serve β̂ {:?} != in-memory DP β̂ {:?}",
+        served[0], base_dp[0]
+    );
+    assert_ne!(
+        served[0], plain[0],
+        "the DP release must differ from the non-private β̂"
+    );
+}

@@ -1,0 +1,431 @@
+//! Acceptance gates for the DP release layer ([`privlr::dp`]):
+//!
+//! * the institution-side noise path is **replay-stable and bitwise
+//!   deterministic**: the same `(session, institution)` seed produces
+//!   the same partial noise vector and the same share frames across
+//!   `kernel_threads ∈ {1, 2, 4}` and ISA scalar/auto — a duplicated
+//!   or re-sent noise frame is indistinguishable from the original;
+//! * the value stream and the share-coefficient stream are domain
+//!   separated — re-keying one never perturbs the other;
+//! * center-side folds of partial-noise shares are **field-exact**:
+//!   any t-quorum reconstructs exactly Σⱼ encode(ηⱼ), no drift;
+//! * summed partials follow the calibrated mechanism's law (Gaussian
+//!   σ, Laplace 2b² variance), checked empirically;
+//! * the [`privlr::dp::DpAccountant`] is monotone, order-invariant,
+//!   and exhausts **exactly** at the composed budget bound — with
+//!   refunds restoring capacity;
+//! * after warm-up, one full institution-side noise round (sample +
+//!   encode + share) performs **zero heap allocations** — measured
+//!   with a counting global allocator, for both mechanisms.
+
+use privlr::config::KernelIsa;
+use privlr::dp::{
+    sample_partial_noise, DpAccountant, DpComposition, DpConfig, DpMechanism, DpParams,
+    DP_NOISE_STREAM, DP_SHARE_STREAM,
+};
+use privlr::field::Fp;
+use privlr::fixed::FixedCodec;
+use privlr::secure::{encode_share_into, encode_share_into_isa, secure_add, ShareContext, SharePool};
+use privlr::shamir::{reconstruct_batch, ShamirParams};
+use privlr::simd::resolve;
+use privlr::util::rng::{derive_seed, ChaCha20Rng};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---- thread-local allocation counter (same pattern as
+// prop_secure_pipeline: counts THIS thread only, Cell has no
+// destructor so TLS access cannot recurse into the allocator) --------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---- helpers ------------------------------------------------------------
+
+fn params(mechanism: DpMechanism, s: usize) -> DpParams {
+    DpParams {
+        mechanism,
+        epsilon: 1.0,
+        delta: 1e-6,
+        sensitivity: 2.0,
+        num_partials: s,
+        rows: 100,
+    }
+}
+
+/// One institution's noise round exactly as `handle_dp_noise` runs it:
+/// value stream keyed by `DP_NOISE_STREAM`, share coefficients by
+/// `DP_SHARE_STREAM`, summary layout `[η | 0.0]`.
+fn noise_round(
+    p: &DpParams,
+    d: usize,
+    share_seed: u64,
+    threads: usize,
+    isa: privlr::simd::Isa,
+    ctx: &ShareContext,
+    codec: &FixedCodec,
+    summary: &mut [f64],
+    pool: &mut SharePool,
+) {
+    let mut rng = ChaCha20Rng::seed_from_u64(derive_seed(share_seed, DP_NOISE_STREAM));
+    sample_partial_noise(p, d, &mut rng, &mut summary[..d]);
+    summary[d] = 0.0;
+    encode_share_into_isa(
+        ctx,
+        codec,
+        summary,
+        derive_seed(share_seed, DP_SHARE_STREAM),
+        threads,
+        isa,
+        pool,
+    )
+    .unwrap();
+}
+
+/// Gate 1: replay stability and thread/ISA invariance. A crash-replayed
+/// or fault-duplicated noise frame must be BIT-identical to the
+/// original, regardless of the worker's thread pool or ISA — otherwise
+/// deduplication by `(iter, institution)` would not be sound.
+#[test]
+fn noise_round_bit_identical_across_threads_and_isa() {
+    let d = 37usize; // straddles SIMD lanes
+    let scheme = ShamirParams::new(3, 5).unwrap();
+    let ctx = ShareContext::new(scheme);
+    let codec = FixedCodec::default();
+    let auto = resolve(KernelIsa::Auto);
+    let scalar = resolve(KernelIsa::Scalar);
+    for mech in [DpMechanism::Gaussian, DpMechanism::Laplace] {
+        let p = params(mech, 3);
+        for share_seed in [1u64, 0xDEAD_BEEF, u64::MAX - 7] {
+            let mut ref_summary = vec![0.0; d + 1];
+            let mut ref_pool = SharePool::new();
+            noise_round(&p, d, share_seed, 1, scalar, &ctx, &codec, &mut ref_summary, &mut ref_pool);
+            for threads in [1usize, 2, 4] {
+                for isa in [scalar, auto] {
+                    let mut summary = vec![0.0; d + 1];
+                    let mut pool = SharePool::new();
+                    noise_round(&p, d, share_seed, threads, isa, &ctx, &codec, &mut summary, &mut pool);
+                    // noise values bitwise equal (compare the bits: NaN-safe
+                    // and stricter than ==)
+                    for (a, b) in ref_summary.iter().zip(&summary) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{mech:?} seed={share_seed}");
+                    }
+                    for holder in 0..5 {
+                        assert_eq!(
+                            ref_pool.holder(holder),
+                            pool.holder(holder),
+                            "{mech:?} seed={share_seed} threads={threads} isa={isa:?} holder={holder}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gate 1b: the value stream and the share-coefficient stream are
+/// domain separated — distinct derived seeds, and distinct noise
+/// across institutions of the same session.
+#[test]
+fn noise_and_share_streams_are_domain_separated() {
+    assert_ne!(DP_NOISE_STREAM, DP_SHARE_STREAM);
+    for share_seed in [0u64, 1, 42, u64::MAX] {
+        assert_ne!(
+            derive_seed(share_seed, DP_NOISE_STREAM),
+            derive_seed(share_seed, DP_SHARE_STREAM),
+            "seed {share_seed}"
+        );
+    }
+    // different institutions (different share seeds) draw different noise
+    let p = params(DpMechanism::Gaussian, 2);
+    let mut a = vec![0.0; 8];
+    let mut b = vec![0.0; 8];
+    let mut rng_a = ChaCha20Rng::seed_from_u64(derive_seed(11, DP_NOISE_STREAM));
+    let mut rng_b = ChaCha20Rng::seed_from_u64(derive_seed(12, DP_NOISE_STREAM));
+    sample_partial_noise(&p, 8, &mut rng_a, &mut a);
+    sample_partial_noise(&p, 8, &mut rng_b, &mut b);
+    assert_ne!(a, b);
+}
+
+/// Gate 2: center-side folds of partial-noise shares are field-exact.
+/// For every t-quorum, reconstructing the folded accumulators yields
+/// EXACTLY Σⱼ encode(ηⱼ) in 𝔽ₚ — share arithmetic adds no error on
+/// top of the one fixed-point quantization per institution.
+#[test]
+fn folded_noise_shares_reconstruct_to_exact_field_sum() {
+    let d = 19usize;
+    let s = 4usize; // institutions
+    let scheme = ShamirParams::new(3, 5).unwrap();
+    let ctx = ShareContext::new(scheme);
+    let codec = FixedCodec::default();
+    for mech in [DpMechanism::Gaussian, DpMechanism::Laplace] {
+        let p = params(mech, s);
+        let mut accs: Vec<Vec<Fp>> = (0..5).map(|_| vec![Fp::ZERO; d + 1]).collect();
+        let mut expect = vec![Fp::ZERO; d + 1];
+        let mut pool = SharePool::new();
+        for j in 0..s as u64 {
+            let mut summary = vec![0.0; d + 1];
+            let mut rng = ChaCha20Rng::seed_from_u64(derive_seed(100 + j, DP_NOISE_STREAM));
+            sample_partial_noise(&p, d, &mut rng, &mut summary[..d]);
+            summary[d] = 0.0;
+            let enc = codec.encode_slice(&summary).unwrap();
+            secure_add(&mut expect, &enc);
+            encode_share_into(
+                &ctx,
+                &codec,
+                &summary,
+                derive_seed(100 + j, DP_SHARE_STREAM),
+                1,
+                &mut pool,
+            )
+            .unwrap();
+            for (c, acc) in accs.iter_mut().enumerate() {
+                secure_add(acc, pool.holder(c));
+            }
+        }
+        for quorum_idx in [[0usize, 1, 2], [2, 3, 4], [0, 2, 4]] {
+            let quorum: Vec<(usize, &[Fp])> = quorum_idx
+                .iter()
+                .map(|&c| (c, accs[c].as_slice()))
+                .collect();
+            let rec = reconstruct_batch(scheme, &quorum).unwrap();
+            assert_eq!(rec, expect, "{mech:?} quorum {quorum_idx:?}");
+            // the deviance slot carried η = 0 from every institution
+            assert_eq!(rec[d], Fp::ZERO);
+        }
+    }
+}
+
+/// Gate 3: summed partials follow the calibrated mechanism's law. S
+/// institutions' Gaussian partials sum to N(0, σ²); gamma-difference
+/// partials sum to Laplace(b) with variance 2b². Empirical moments
+/// over many independent streams.
+#[test]
+fn summed_partials_match_mechanism_law() {
+    let s = 3usize;
+    let trials = 20_000usize;
+
+    let gp = params(DpMechanism::Gaussian, s);
+    let sigma = gp.gaussian_sigma();
+    let mut sum = 0.0;
+    let mut sum_sq = 0.0;
+    for trial in 0..trials {
+        let mut total = 0.0;
+        for j in 0..s {
+            let mut rng = ChaCha20Rng::seed_from_u64(
+                derive_seed((trial * s + j) as u64, DP_NOISE_STREAM),
+            );
+            let mut eta = [0.0];
+            sample_partial_noise(&gp, 1, &mut rng, &mut eta);
+            total += eta[0];
+        }
+        sum += total;
+        sum_sq += total * total;
+    }
+    let mean = sum / trials as f64;
+    let var = sum_sq / trials as f64 - mean * mean;
+    assert!(mean.abs() < 0.05 * sigma, "gaussian mean {mean} vs σ {sigma}");
+    assert!(
+        (var.sqrt() - sigma).abs() < 0.05 * sigma,
+        "gaussian std {} vs σ {sigma}",
+        var.sqrt()
+    );
+
+    let lp = params(DpMechanism::Laplace, s);
+    let b = lp.laplace_b(1);
+    let mut sum = 0.0;
+    let mut sum_sq = 0.0;
+    for trial in 0..trials {
+        let mut total = 0.0;
+        for j in 0..s {
+            let mut rng = ChaCha20Rng::seed_from_u64(
+                derive_seed(0xBAD_0000 + (trial * s + j) as u64, DP_NOISE_STREAM),
+            );
+            let mut eta = [0.0];
+            sample_partial_noise(&lp, 1, &mut rng, &mut eta);
+            total += eta[0];
+        }
+        sum += total;
+        sum_sq += total * total;
+    }
+    let mean = sum / trials as f64;
+    let var = sum_sq / trials as f64 - mean * mean;
+    assert!(mean.abs() < 0.1 * b, "laplace mean {mean} vs b {b}");
+    assert!(
+        (var - 2.0 * b * b).abs() < 0.15 * (2.0 * b * b),
+        "laplace var {var} vs 2b² {}",
+        2.0 * b * b
+    );
+}
+
+/// Gate 4a: the accountant's composed spend is monotone in the number
+/// of charges, under BOTH composition rules read from the same ledger.
+#[test]
+fn accountant_spend_is_monotone() {
+    let acct = DpAccountant::new();
+    let basic = DpConfig {
+        epsilon: 0.25,
+        delta: 2f64.powi(-20),
+        ..DpConfig::default()
+    };
+    let advanced = DpConfig {
+        composition: DpComposition::Advanced,
+        budget_delta: 2f64.powi(-10),
+        ..basic
+    };
+    let (mut last_b, mut last_a) = (0.0, 0.0);
+    for session in 0..32u32 {
+        acct.try_charge(session, &basic).unwrap();
+        let (eb, _) = acct.spent(&basic);
+        let (ea, da) = acct.spent(&advanced);
+        assert!(eb >= last_b, "basic ε must be monotone: {eb} < {last_b}");
+        assert!(ea >= last_a, "advanced ε must be monotone: {ea} < {last_a}");
+        assert!(da > 0.0 && da <= advanced.budget_delta);
+        last_b = eb;
+        last_a = ea;
+    }
+    assert_eq!(acct.charges(), 32);
+    // 32 × ε=0.25 in exact f64 arithmetic
+    assert_eq!(last_b, 8.0);
+    // advanced composition beats basic for many small charges
+    assert!(last_a < last_b, "advanced {last_a} should beat basic {last_b}");
+}
+
+/// Gate 4b: composition is order-invariant — a permuted spend multiset
+/// composes to the same totals (exactly for basic over dyadic spends;
+/// to 1e-12 relative for advanced, whose slack terms are transcendental).
+#[test]
+fn accountant_composition_is_order_invariant() {
+    let spends = [
+        (0.5, 2f64.powi(-22)),
+        (0.25, 2f64.powi(-20)),
+        (1.0, 2f64.powi(-24)),
+        (0.125, 2f64.powi(-21)),
+        (2.0, 2f64.powi(-23)),
+    ];
+    let perms: [[usize; 5]; 4] = [[0, 1, 2, 3, 4], [4, 3, 2, 1, 0], [2, 0, 4, 1, 3], [1, 4, 0, 3, 2]];
+    let reference_basic = DpAccountant::compose(&spends, DpComposition::Basic, 0.0);
+    let reference_adv = DpAccountant::compose(&spends, DpComposition::Advanced, 2f64.powi(-10));
+    for perm in perms {
+        let shuffled: Vec<(f64, f64)> = perm.iter().map(|&i| spends[i]).collect();
+        let b = DpAccountant::compose(&shuffled, DpComposition::Basic, 0.0);
+        assert_eq!(b, reference_basic, "basic perm {perm:?}");
+        let a = DpAccountant::compose(&shuffled, DpComposition::Advanced, 2f64.powi(-10));
+        assert!(
+            (a.0 - reference_adv.0).abs() <= 1e-12 * reference_adv.0.abs(),
+            "advanced ε perm {perm:?}: {} vs {}",
+            a.0,
+            reference_adv.0
+        );
+        assert!((a.1 - reference_adv.1).abs() <= 1e-12 * reference_adv.1.abs());
+    }
+}
+
+/// Gate 4c: exhaustion is EXACT. With ε budget = k·ε (dyadic, so the
+/// sums are exact in f64), exactly k charges are admitted; the k+1-th
+/// is refused with the would-be totals; a refund restores exactly one
+/// slot. The δ axis exhausts the same way.
+#[test]
+fn accountant_exhausts_exactly_at_the_budget_bound() {
+    // ε axis: budget 1.0 at ε=0.25 per release → exactly 4 admits.
+    let acct = DpAccountant::new();
+    let cfg = DpConfig {
+        epsilon: 0.25,
+        delta: 2f64.powi(-20),
+        budget_epsilon: 1.0,
+        ..DpConfig::default()
+    };
+    for session in 0..4u32 {
+        acct.try_charge(session, &cfg)
+            .unwrap_or_else(|e| panic!("charge {session} within budget refused: {e}"));
+    }
+    let err = acct.try_charge(99, &cfg).unwrap_err();
+    assert_eq!(err.would_spend_epsilon, 1.25);
+    assert_eq!(err.budget_epsilon, 1.0);
+    assert_eq!(acct.charges(), 4, "refused charge must not touch the ledger");
+    assert_eq!(acct.spent(&cfg), (1.0, 4.0 * 2f64.powi(-20)));
+    // a refund restores exactly one admit
+    acct.refund(2);
+    assert_eq!(acct.charges(), 3);
+    acct.try_charge(100, &cfg).unwrap();
+    assert!(acct.try_charge(101, &cfg).is_err());
+    // refunding an unknown session is a no-op
+    acct.refund(12345);
+    assert_eq!(acct.charges(), 4);
+
+    // δ axis: budget 4·2⁻²⁰ at δ=2⁻²⁰ per release, ε unbounded.
+    let acct = DpAccountant::new();
+    let cfg = DpConfig {
+        epsilon: 0.25,
+        delta: 2f64.powi(-20),
+        budget_delta: 2f64.powi(-18),
+        ..DpConfig::default()
+    };
+    for session in 0..4u32 {
+        acct.try_charge(session, &cfg).unwrap();
+    }
+    let err = acct.try_charge(99, &cfg).unwrap_err();
+    assert_eq!(err.would_spend_delta, 5.0 * 2f64.powi(-20));
+    assert_eq!(err.budget_delta, 2f64.powi(-18));
+}
+
+/// Gate 5: after warm-up, one full institution-side noise round —
+/// ChaCha re-key, partial-noise draw, fused encode+share into the
+/// warmed pool — allocates NOTHING, for both mechanisms. The DP
+/// release round inherits the hot path's zero-allocation guarantee.
+#[test]
+fn warm_noise_round_is_allocation_free() {
+    let d = 64usize;
+    let scheme = ShamirParams::new(3, 5).unwrap();
+    let ctx = ShareContext::new(scheme);
+    let codec = FixedCodec::default();
+    let scalar = resolve(KernelIsa::Scalar);
+    for mech in [DpMechanism::Gaussian, DpMechanism::Laplace] {
+        let p = params(mech, 3);
+        let mut summary = vec![0.0; d + 1];
+        let mut pool = SharePool::new();
+        // Warm-up: grows the pool's holder buffers for this length.
+        for seed in 0..3u64 {
+            noise_round(&p, d, seed, 1, scalar, &ctx, &codec, &mut summary, &mut pool);
+        }
+        let before = allocs_here();
+        for seed in 100..104u64 {
+            noise_round(&p, d, seed, 1, scalar, &ctx, &codec, &mut summary, &mut pool);
+        }
+        let allocated = allocs_here() - before;
+        assert_eq!(
+            allocated, 0,
+            "warm {mech:?} noise rounds must not allocate"
+        );
+    }
+}

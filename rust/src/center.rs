@@ -916,6 +916,7 @@ mod tests {
             delta: 1e-6,
             sensitivity: 2.0,
             num_partials: 2,
+            num_honest: 2,
             rows: 8,
         });
         let registry = registry_with(vec![spec]);

@@ -351,6 +351,7 @@ impl ExperimentConfig {
                     ("budget_delta", json::num(dp.budget_delta)),
                     ("composition", json::s(dp.composition.name())),
                     ("total_rows", json::num(dp.total_rows as f64)),
+                    ("min_honest", json::num(dp.min_honest as f64)),
                 ]),
             ));
         }
@@ -487,6 +488,9 @@ impl ExperimentConfig {
             }
             if let Some(r) = dpv.get("total_rows").as_usize() {
                 dp.total_rows = r;
+            }
+            if let Some(h) = dpv.get("min_honest").as_usize() {
+                dp.min_honest = h;
             }
             cfg.dp = Some(dp);
         }
@@ -681,9 +685,13 @@ mod tests {
             budget_delta: 1e-5,
             composition: crate::dp::DpComposition::Advanced,
             total_rows: 12_000,
+            min_honest: 3,
         });
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.dp, cfg.dp);
+        // A zero collusion threshold is meaningless and rejected.
+        let v = Json::parse(r#"{"dp": {"min_honest": 0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
         // Partial dp objects inherit DpConfig defaults for the rest.
         let v = Json::parse(r#"{"dp": {"epsilon": 2.0}}"#).unwrap();
         let parsed = ExperimentConfig::from_json(&v).unwrap().dp.unwrap();

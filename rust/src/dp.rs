@@ -28,32 +28,85 @@
 //! what lets remote `privlr serve` processes derive it locally from
 //! the shared config.
 //!
-//! # Distributed noise
+//! # Calibration: the analytic Gaussian mechanism
+//!
+//! The Gaussian scale comes from the **analytic Gaussian mechanism**
+//! (Balle & Wang, ICML 2018): [`analytic_gaussian_sigma`] returns the
+//! minimal σ whose exact (ε, δ) trade-off curve
+//!
+//! ```text
+//!   δ(σ) = Φ(Δ₂/(2σ) − εσ/Δ₂) − e^ε · Φ(−Δ₂/(2σ) − εσ/Δ₂)
+//! ```
+//!
+//! satisfies δ(σ) ≤ δ. Unlike the classical σ = Δ₂·√(2 ln(1.25/δ))/ε
+//! — which is only proven (ε, δ)-DP for ε ≤ 1 — the analytic curve is
+//! exact at EVERY ε > 0, so high-ε sweeps are never under-noised, and
+//! at ε ≤ 1 the analytic σ is strictly smaller (less noise for the
+//! same guarantee). The curve is evaluated with a purpose-built
+//! high-precision `erfc` (positive-term series below 1.25, Lentz
+//! continued fraction above) and a log-domain Φ so the e^ε·Φ(·) term
+//! cannot underflow; the bisection returns the guarantee-satisfying
+//! side of its final bracket.
+//!
+//! # Distributed noise and the collusion margin
 //!
 //! No single party may see the non-private β̂, so no single party may
-//! sample η. Instead each institution j samples a seeded **partial**
+//! sample η. Instead each institution j samples a secret **partial**
 //! ηⱼ and Shamir-shares it through the same pooled zero-alloc pipeline
 //! as its gradients; the centers fold the shares and the coordinator's
 //! quorum reconstruction yields Σⱼ ηⱼ = η — added to a release base
 //! that never appeared on the wire.
 //!
-//! * **Gaussian**: ηⱼ ~ N(0, σ²/S) per coordinate, so Σⱼ ηⱼ ~ N(0, σ²)
-//!   with σ = Δ₂·√(2 ln(1.25/δ))/ε — the classic (ε, δ) calibration.
+//! Partials are calibrated to the collusion threshold
+//! [`DpConfig::min_honest`] = h: the guarantee must survive the other
+//! S − h institutions pooling their partials and subtracting them from
+//! the release, so the h honest partials ALONE must reach the
+//! calibrated mechanism.
+//!
+//! * **Gaussian**: ηⱼ ~ N(0, σ²/h) per coordinate — any h honest
+//!   partials sum to N(0, σ²), and the S − h partials colluders cannot
+//!   subtract only ADD variance (post-processing; the release is, if
+//!   anything, more private against outsiders).
 //! * **Laplace**: Laplace is infinitely divisible — per coordinate,
-//!   Lap(b) = Σⱼ (G¹ⱼ − G²ⱼ) with G ~ Gamma(1/S, b) — so each
-//!   institution contributes a gamma difference (Marsaglia–Tsang
-//!   sampler with the U^(1/α) boost for shape < 1). Calibrated to the
+//!   Lap(b) = Σⱼ (G¹ⱼ − G²ⱼ) with G ~ Gamma(1/h, b) — so any h honest
+//!   gamma-difference partials (Marsaglia–Tsang sampler with the
+//!   U^(1/α) boost for shape < 1) sum to exactly Lap(b); extra honest
+//!   partials again only add independent noise. Calibrated to the
 //!   ℓ₁ sensitivity Δ₁ ≤ √d·Δ₂ at b = Δ₁/ε for pure ε-DP.
 //!
-//! Partials are sampled sequentially per institution from the
-//! dedicated stream [`DP_NOISE_STREAM`] of the session share seed —
-//! never chunked across kernel threads — so the sampled values are
-//! bit-identical at every `kernel_threads` count and ISA; the share
-//! *encoding* then rides the already-thread/ISA-invariant
-//! `secure::encode_share_into_isa`. Seeds are per-(session,
-//! institution), NOT per-iteration: a crash replay of the release
-//! round resamples byte-identical noise, so recovery cannot
-//! double-apply or re-randomize the release.
+//! The default h = 1 assumes nothing: each institution's own partial
+//! already carries the full calibrated mechanism, so the guarantee
+//! holds even if every OTHER participant colludes. Larger h trades
+//! that margin for utility (total release variance is S·σ²/h) under
+//! an explicit ≥ h-honest-institutions assumption, which the operator
+//! opts into per config.
+//!
+//! # Noise secrecy: nonces, not config seeds
+//!
+//! Partial VALUES must be unpredictable to every other party — noise
+//! that any participant can recompute can be subtracted from β̂ + η,
+//! un-closing the very attack this layer exists to close. Each
+//! institution therefore keys its partial from a per-(session,
+//! institution) **nonce drawn from its own OS entropy**
+//! ([`SessionSpec::dp_noise_seed`](crate::session::SessionSpec::dp_noise_seed)),
+//! never from the shared experiment seed: the nonce lives only in that
+//! institution's spec cell (in `privlr serve`, only in that
+//! institution's process) and never crosses the wire. The noise
+//! values are drawn from `derive_seed(nonce, DP_NOISE_STREAM)` and the
+//! masking share polynomials from `derive_seed(nonce,
+//! DP_SHARE_STREAM)` — the polynomials must be secret for the same
+//! reason, or a single shareholder could strip the mask and read ηⱼ
+//! off the wire.
+//!
+//! Partials are sampled sequentially per institution — never chunked
+//! across kernel threads — so the sampled values are bit-identical at
+//! every `kernel_threads` count and ISA; the share *encoding* then
+//! rides the already-thread/ISA-invariant
+//! `secure::encode_share_into_isa`. Nonces are per-(session,
+//! institution), NOT per-iteration, and persist in the institution's
+//! spec across worker restarts: a crash replay of the release round
+//! resamples byte-identical noise, so recovery cannot double-apply or
+//! re-randomize the release.
 //!
 //! Quantization caveat: shares travel through the fixed-point codec,
 //! so the reconstructed η is the noise rounded to the codec grid
@@ -78,15 +131,19 @@ use crate::protocol::SessionId;
 use crate::util::rng::Rng;
 use std::sync::Mutex;
 
-/// Sub-stream of the per-(session, institution) share seed that the
-/// DP noise VALUES are drawn from (`derive_seed(share_seed,
-/// DP_NOISE_STREAM)`). Disjoint from the per-iteration gradient-share
-/// streams (small iteration indices) and from [`DP_SHARE_STREAM`].
+/// Sub-stream of the institution's SECRET per-session DP nonce that
+/// the noise VALUES are drawn from (`derive_seed(nonce,
+/// DP_NOISE_STREAM)` — see
+/// [`SessionSpec::dp_noise_seed`](crate::session::SessionSpec::dp_noise_seed)).
+/// Disjoint from [`DP_SHARE_STREAM`] so re-keying one stream never
+/// perturbs the other.
 pub const DP_NOISE_STREAM: u64 = 0x4450_4E4F_4953_4531; // "DPNOISE1"
 
-/// Sub-stream the noise-share POLYNOMIALS are drawn from — the
-/// masking randomness of the Shamir encoding, independent of the
-/// noise values themselves.
+/// Sub-stream of the same secret nonce that the noise-share
+/// POLYNOMIALS are drawn from — the masking randomness of the Shamir
+/// encoding. Keyed from the nonce (NOT the shared config seed): a
+/// party that could regenerate the polynomial could subtract it from
+/// its share and read the partial noise value off the wire.
 pub const DP_SHARE_STREAM: u64 = 0x4450_5348_4152_4531; // "DPSHARE1"
 
 /// Per-coordinate dosage bound of a genotype column (0/1/2 copies of
@@ -97,8 +154,9 @@ pub const SCREEN_DOSAGE_MAX: f64 = 2.0;
 /// Which output-perturbation mechanism calibrates the release noise.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum DpMechanism {
-    /// (ε, δ)-DP spherical Gaussian noise at
-    /// σ = Δ₂·√(2 ln(1.25/δ))/ε. Requires δ > 0.
+    /// (ε, δ)-DP spherical Gaussian noise, calibrated on the exact
+    /// analytic trade-off curve ([`analytic_gaussian_sigma`]) — valid
+    /// at every ε > 0. Requires δ > 0.
     #[default]
     Gaussian,
     /// Pure ε-DP per-coordinate Laplace noise at b = Δ₁/ε with
@@ -185,6 +243,15 @@ pub struct DpConfig {
     /// agreed consortium n; 0 lets local submission paths count the
     /// actual shard rows.
     pub total_rows: usize,
+    /// Collusion threshold h: the number of institutions assumed
+    /// honest (not pooling their noise partials with an adversary).
+    /// Partials are calibrated so any h honest partials alone reach
+    /// the full mechanism — see the module docs. The default 1 makes
+    /// no assumption (the guarantee survives all-but-one collusion) at
+    /// the cost of S·σ²/h total release variance; values above the
+    /// institution count are clamped to it (the all-honest, least-
+    /// noise assumption). Must be ≥ 1.
+    pub min_honest: usize,
 }
 
 impl Default for DpConfig {
@@ -198,6 +265,7 @@ impl Default for DpConfig {
             budget_delta: 0.0,
             composition: DpComposition::Basic,
             total_rows: 0,
+            min_honest: 1,
         }
     }
 }
@@ -238,6 +306,10 @@ impl DpConfig {
                 self.budget_epsilon
             );
         }
+        anyhow::ensure!(
+            self.min_honest >= 1,
+            "dp min_honest must be at least 1 (at least one institution samples honest noise)"
+        );
         Ok(())
     }
 
@@ -267,27 +339,41 @@ impl DpConfig {
             delta: self.delta,
             sensitivity,
             num_partials: num_institutions,
+            num_honest: self.min_honest.min(num_institutions),
             rows: n,
         })
     }
 
-    /// Resolved release parameters for a single-round score screen:
-    /// the released statistic is the scalar score U = Σᵢ gᵢ(yᵢ − pᵢ)
-    /// with dosage |g| ≤ 2 and |y − p| ≤ 1, so one-record replacement
-    /// moves U by at most 2·[`SCREEN_DOSAGE_MAX`]. This is the
-    /// statistic's own sensitivity (an approximation for the
-    /// downstream χ² = U²/V decision, documented as such in the
-    /// README): the noise is added to the U slot before sharing, by
-    /// share linearity — no extra protocol round.
+    /// Resolved release parameters for a single-round score screen.
+    /// The coordinator's view — and hence the released `ScreenStat` —
+    /// is the ENTIRE reconstructed summary `[U | b | q]`: χ² =
+    /// (U²)/(q − bᵀ(F₀+λI)⁻¹b) reads every slot, so every slot must be
+    /// noised and the charge must cover the joint release. One-record
+    /// replacement with dosage |g| ≤ [`SCREEN_DOSAGE_MAX`], clipped
+    /// features ‖x‖₂ ≤ C and logistic weights w = p(1−p) ≤ 1/4 moves
+    ///
+    /// * U = Σᵢ gᵢ(yᵢ − pᵢ)   by ≤ 2·max|g(y−p)|  = 2·G,
+    /// * b = Σᵢ wᵢ gᵢ xᵢ      by ≤ 2·max‖wgx‖₂    = C·G/2,
+    /// * q = Σᵢ wᵢ gᵢ²        by ≤ 2·max|wg²|     = G²/2,
+    ///
+    /// with G = [`SCREEN_DOSAGE_MAX`]; the joint ℓ₂ sensitivity is the
+    /// Euclidean norm of those three bounds. All d + 2 slots are then
+    /// noised with ONE mechanism draw before sharing (by share
+    /// linearity — no extra protocol round) and the downstream χ² and
+    /// p-value are post-processing of the noised vector.
     pub fn params_for_screen(&self, num_institutions: usize) -> anyhow::Result<DpParams> {
         self.validate()?;
         anyhow::ensure!(num_institutions >= 1, "dp release needs at least one institution");
+        let du = 2.0 * SCREEN_DOSAGE_MAX;
+        let db = self.clip * SCREEN_DOSAGE_MAX / 2.0;
+        let dq = SCREEN_DOSAGE_MAX * SCREEN_DOSAGE_MAX / 2.0;
         Ok(DpParams {
             mechanism: self.mechanism,
             epsilon: self.epsilon,
             delta: self.delta,
-            sensitivity: 2.0 * SCREEN_DOSAGE_MAX,
+            sensitivity: (du * du + db * db + dq * dq).sqrt(),
             num_partials: num_institutions,
+            num_honest: self.min_honest.min(num_institutions),
             rows: self.total_rows,
         })
     }
@@ -302,19 +388,25 @@ pub struct DpParams {
     pub epsilon: f64,
     pub delta: f64,
     /// ℓ₂ sensitivity Δ₂ of the released statistic (for screens: the
-    /// scalar score's replacement bound).
+    /// joint `[U | b | q]` replacement bound).
     pub sensitivity: f64,
     /// Number of institutions jointly sampling partial noise (S).
     pub num_partials: usize,
+    /// Collusion threshold h ≤ S the partials are calibrated to: any
+    /// h honest partials alone sum to the full mechanism (see
+    /// [`DpConfig::min_honest`]).
+    pub num_honest: usize,
     /// Consortium record count behind the sensitivity derivation
     /// (reporting only — the calibrated scales do not read it).
     pub rows: usize,
 }
 
 impl DpParams {
-    /// Gaussian-mechanism scale σ = Δ₂·√(2 ln(1.25/δ))/ε.
+    /// Gaussian-mechanism scale: the minimal σ satisfying the exact
+    /// (ε, δ) trade-off of the analytic Gaussian mechanism — see
+    /// [`analytic_gaussian_sigma`]. Valid at every ε > 0.
     pub fn gaussian_sigma(&self) -> f64 {
-        self.sensitivity * (2.0 * (1.25 / self.delta).ln()).sqrt() / self.epsilon
+        analytic_gaussian_sigma(self.sensitivity, self.epsilon, self.delta)
     }
 
     /// Laplace-mechanism per-coordinate scale b = Δ₁/ε over `d`
@@ -328,19 +420,145 @@ impl DpParams {
     /// [`sample_partial_noise`]).
     pub fn partial_sigma(&self, d: usize) -> f64 {
         match self.mechanism {
-            DpMechanism::Gaussian => self.gaussian_sigma() / (self.num_partials as f64).sqrt(),
+            DpMechanism::Gaussian => self.gaussian_sigma() / (self.num_honest as f64).sqrt(),
             DpMechanism::Laplace => {
-                // Var(G¹ − G²) = 2·(1/S)·b² per partial.
+                // Var(G¹ − G²) = 2·(1/h)·b² per partial.
                 let b = self.laplace_b(d);
-                (2.0 * b * b / self.num_partials as f64).sqrt()
+                (2.0 * b * b / self.num_honest as f64).sqrt()
             }
         }
     }
 }
 
+// ---- analytic Gaussian calibration (Balle & Wang 2018) ------------------
+
+/// Complementary error function to near-machine precision. The crate's
+/// inference-side `erf` (Abramowitz–Stegun 7.1.26, |err| ≈ 1.5e-7) is
+/// far too coarse for calibrating against δ ~ 1e-6; this one uses the
+/// positive-term confluent-hypergeometric series below 1.25 and the
+/// Lentz continued fraction above. The crossover sits where BOTH are
+/// near machine precision: higher and the series' 1 − erf subtraction
+/// loses relative accuracy as erfc shrinks; lower and the continued
+/// fraction needs too many terms.
+fn erfc_precise(x: f64) -> f64 {
+    if x < 0.0 {
+        2.0 - erfc_precise(-x)
+    } else if x < 1.25 {
+        1.0 - erf_series(x)
+    } else {
+        erfcx_cf(x) * (-x * x).exp()
+    }
+}
+
+/// erf(x) = (2x/√π)·e^{−x²}·Σₙ (2x²)ⁿ/(1·3⋯(2n+1)) for small x —
+/// every term positive, so the sum carries no cancellation error.
+fn erf_series(x: f64) -> f64 {
+    let xx = 2.0 * x * x;
+    let mut term = 1.0f64;
+    let mut sum = 1.0f64;
+    let mut n = 0u32;
+    while term > 1e-18 * sum {
+        n += 1;
+        term *= xx / f64::from(2 * n + 1);
+        sum += term;
+    }
+    2.0 * x * (-x * x).exp() / std::f64::consts::PI.sqrt() * sum
+}
+
+/// Scaled complement erfcx(x) = e^{x²}·erfc(x) for x ≥ 1.25, via the
+/// classical continued fraction √π·e^{x²}·erfc(x) =
+/// 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + ⋯)))) — modified Lentz.
+fn erfcx_cf(x: f64) -> f64 {
+    const TINY: f64 = 1e-300;
+    let mut f = x;
+    let mut c = f;
+    let mut d = 0.0f64;
+    for n in 1..200u32 {
+        let a = f64::from(n) / 2.0;
+        d = x + a * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = x + a / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-17 {
+            break;
+        }
+    }
+    1.0 / (std::f64::consts::PI.sqrt() * f)
+}
+
+/// ln Φ(t) — log of the standard normal CDF, finite for t ≪ 0 where
+/// Φ(t) itself underflows (the scaled-tail form keeps the e^ε·Φ(·)
+/// term of the trade-off curve exact instead of 0·∞).
+fn ln_phi(t: f64) -> f64 {
+    let z = -t / std::f64::consts::SQRT_2; // Φ(t) = erfc(z)/2
+    if z >= 3.0 {
+        (0.5 * erfcx_cf(z)).ln() - z * z
+    } else {
+        (0.5 * erfc_precise(z)).ln()
+    }
+}
+
+/// The exact privacy curve of the Gaussian mechanism at scale σ
+/// (Balle & Wang 2018, Thm. 8): adding N(0, σ²I) to a Δ₂-sensitive
+/// vector is (ε, δ(σ))-DP with
+/// δ(σ) = Φ(Δ₂/(2σ) − εσ/Δ₂) − e^ε·Φ(−Δ₂/(2σ) − εσ/Δ₂), monotone
+/// decreasing in σ. Public so tests and operators can verify a scale
+/// against its claimed guarantee independently of the calibration.
+pub fn gaussian_delta_bound(sensitivity: f64, epsilon: f64, sigma: f64) -> f64 {
+    let r = sensitivity / sigma;
+    let a = 0.5 * r - epsilon / r;
+    let b = -0.5 * r - epsilon / r;
+    (ln_phi(a).exp() - (epsilon + ln_phi(b)).exp()).max(0.0)
+}
+
+/// Minimal σ such that N(0, σ²I) on a Δ₂-sensitive release is
+/// (ε, δ)-DP under the exact analytic trade-off — bracketing +
+/// bisection on [`gaussian_delta_bound`]'s monotone curve. The
+/// returned value is the guarantee-SATISFYING (upper) side of the
+/// final bracket, so floating-point termination error can only
+/// over-noise, never under-noise.
+pub fn analytic_gaussian_sigma(sensitivity: f64, epsilon: f64, delta: f64) -> f64 {
+    debug_assert!(sensitivity > 0.0 && epsilon > 0.0 && delta > 0.0 && delta < 1.0);
+    // The classical scale is a convenient starting point: exact order
+    // of magnitude, wrong constant.
+    let start = sensitivity * (2.0 * (1.25 / delta).ln()).sqrt().max(1.0) / epsilon;
+    let mut hi = start;
+    while gaussian_delta_bound(sensitivity, epsilon, hi) > delta {
+        hi *= 2.0;
+    }
+    let mut lo = hi;
+    while gaussian_delta_bound(sensitivity, epsilon, lo * 0.5) <= delta {
+        lo *= 0.5;
+        if lo < sensitivity * 1e-12 {
+            break;
+        }
+    }
+    lo *= 0.5;
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if gaussian_delta_bound(sensitivity, epsilon, mid) <= delta {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= 1e-12 * hi {
+            break;
+        }
+    }
+    hi
+}
+
 /// Marsaglia–Tsang Gamma(shape, scale) sampler on the crate's seeded
 /// [`Rng`] streams, with the U^(1/α) boost for shape < 1 (the regime
-/// distributed Laplace always runs in: shape = 1/S).
+/// distributed Laplace runs in whenever the collusion threshold h > 1:
+/// shape = 1/h).
 pub fn sample_gamma<R: Rng>(rng: &mut R, shape: f64, scale: f64) -> f64 {
     debug_assert!(shape > 0.0 && scale > 0.0);
     if shape < 1.0 {
@@ -375,21 +593,25 @@ pub fn sample_gamma<R: Rng>(rng: &mut R, shape: f64, scale: f64) -> f64 {
 
 /// Fill `out` with ONE institution's partial release noise over `d`
 /// coordinates, drawn sequentially from `rng` (which the caller seeds
-/// from `derive_seed(share_seed, DP_NOISE_STREAM)` — per-(session,
-/// institution), replay-stable). Summing the S institutions' partials
-/// yields exactly the calibrated mechanism's law.
+/// from `derive_seed(nonce, DP_NOISE_STREAM)` of its SECRET
+/// per-(session, institution) nonce — replay-stable, config-
+/// underivable). Partials are calibrated to the collusion threshold
+/// `p.num_honest` = h: any h of them sum to exactly the calibrated
+/// mechanism's law, and further partials add only independent noise
+/// (post-processing — the release never gets less private).
 pub fn sample_partial_noise<R: Rng>(p: &DpParams, d: usize, rng: &mut R, out: &mut [f64]) {
     debug_assert!(out.len() >= d);
+    debug_assert!(p.num_honest >= 1 && p.num_honest <= p.num_partials);
     match p.mechanism {
         DpMechanism::Gaussian => {
-            let sigma = p.gaussian_sigma() / (p.num_partials as f64).sqrt();
+            let sigma = p.gaussian_sigma() / (p.num_honest as f64).sqrt();
             for slot in out[..d].iter_mut() {
                 *slot = rng.next_gaussian_with(0.0, sigma);
             }
         }
         DpMechanism::Laplace => {
             let b = p.laplace_b(d);
-            let shape = 1.0 / p.num_partials as f64;
+            let shape = 1.0 / p.num_honest as f64;
             for slot in out[..d].iter_mut() {
                 *slot = sample_gamma(rng, shape, b) - sample_gamma(rng, shape, b);
             }
@@ -564,6 +786,9 @@ mod tests {
         c.budget_epsilon = 0.5;
         c.epsilon = 1.0; // one release already over budget
         assert!(c.validate().is_err());
+        let mut c = base();
+        c.min_honest = 0; // nobody honest — no calibration possible
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -582,16 +807,98 @@ mod tests {
     }
 
     #[test]
-    fn gaussian_sigma_matches_calibration() {
+    fn erfc_matches_reference_values() {
+        // Reference values to 15 significant digits (Wolfram/A&S
+        // tables); the calibration needs ~1e-12 relative accuracy so
+        // δ ~ 1e-6 guarantees are meaningful.
+        for &(x, want) in &[
+            (0.0f64, 1.0f64),
+            (0.5, 0.479_500_122_186_953_5),
+            (1.0, 0.157_299_207_050_285_13),
+            (2.0, 4.677_734_981_047_265e-3),
+            (3.0, 2.209_049_699_858_543_8e-5),
+            (5.0, 1.537_459_794_428_035_1e-12),
+            (10.0, 2.088_487_583_762_545e-45),
+        ] {
+            let got = erfc_precise(x);
+            let tol = if want == 1.0 { 1e-15 } else { 5e-13 * want };
+            assert!((got - want).abs() <= tol, "erfc({x}) = {got}, want {want}");
+            // symmetry erfc(−x) = 2 − erfc(x)
+            assert!((erfc_precise(-x) - (2.0 - want)).abs() < 1e-12);
+        }
+        // ln Φ stays finite and correct deep in the tail.
+        assert!((ln_phi(0.0) - 0.5f64.ln()).abs() < 1e-15);
+        let lp = ln_phi(-10.0);
+        assert!((lp - (7.619_853_024_160_53e-24f64).ln()).abs() < 1e-9, "lnΦ(−10) = {lp}");
+        assert!(ln_phi(-40.0).is_finite());
+    }
+
+    #[test]
+    fn analytic_sigma_is_minimal_on_the_tradeoff_curve() {
+        // At every ε — including ε > 1, where the classical formula is
+        // unproven — the returned σ satisfies the exact guarantee and
+        // 0.99·σ violates it (minimality up to the bisection tolerance).
+        for &eps in &[0.1f64, 0.5, 1.0, 2.0, 5.0] {
+            for &delta in &[1e-5f64, 1e-6, 1e-9] {
+                let sigma = analytic_gaussian_sigma(2.0, eps, delta);
+                assert!(sigma.is_finite() && sigma > 0.0);
+                let at = gaussian_delta_bound(2.0, eps, sigma);
+                assert!(at <= delta, "ε={eps} δ={delta}: δ(σ*) = {at} > {delta}");
+                let below = gaussian_delta_bound(2.0, eps, 0.99 * sigma);
+                assert!(below > delta, "ε={eps} δ={delta}: σ* not minimal ({below} ≤ {delta})");
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_sigma_beats_classical_at_low_epsilon() {
+        // For ε ≤ 1 the classical calibration is valid but loose: the
+        // analytic σ must be no larger (less noise, same guarantee),
+        // and the curve must certify the classical scale too.
+        for &eps in &[0.25f64, 0.5, 1.0] {
+            let delta = 1e-6;
+            let classical = 2.0 * (2.0 * (1.25f64 / delta).ln()).sqrt() / eps;
+            let analytic = analytic_gaussian_sigma(2.0, eps, delta);
+            assert!(
+                analytic <= classical,
+                "ε={eps}: analytic {analytic} > classical {classical}"
+            );
+            assert!(gaussian_delta_bound(2.0, eps, classical) <= delta);
+        }
+    }
+
+    #[test]
+    fn gaussian_sigma_satisfies_its_guarantee_at_high_epsilon() {
+        // ε = 2 — the config the review flagged as under-noised under
+        // the classical formula — must calibrate against the exact
+        // curve through DpParams::gaussian_sigma.
         let mut c = base();
         c.epsilon = 2.0;
         c.delta = 1e-5;
         let p = c.params_for_fit(100, 1.0, 3).unwrap();
-        let expect = p.sensitivity * (2.0f64 * (1.25 / 1e-5f64).ln()).sqrt() / 2.0;
-        assert!((p.gaussian_sigma() - expect).abs() < 1e-12);
-        // S partials of σ/√S sum to variance σ².
+        let sigma = p.gaussian_sigma();
+        assert!(gaussian_delta_bound(p.sensitivity, 2.0, sigma) <= 1e-5);
+        assert!(gaussian_delta_bound(p.sensitivity, 2.0, 0.99 * sigma) > 1e-5);
+        // Default h = 1: each partial alone carries the full σ.
+        assert_eq!(p.num_honest, 1);
+        assert!((p.partial_sigma(4) - sigma).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partials_calibrate_to_the_collusion_threshold() {
+        // h honest partials must reach variance σ² on their own; the
+        // full S-partial sum then carries S·σ²/h.
+        let mut c = base();
+        c.min_honest = 3;
+        let p = c.params_for_fit(100, 1.0, 5).unwrap();
+        assert_eq!(p.num_honest, 3);
+        let sigma = p.gaussian_sigma();
         let partial = p.partial_sigma(4);
-        assert!((partial * partial * 3.0 - p.gaussian_sigma().powi(2)).abs() < 1e-9);
+        assert!((partial * partial * 3.0 - sigma * sigma).abs() < 1e-9);
+        // min_honest above S clamps to S (the all-honest assumption).
+        c.min_honest = 99;
+        let p = c.params_for_fit(100, 1.0, 5).unwrap();
+        assert_eq!(p.num_honest, 5);
     }
 
     #[test]
@@ -634,16 +941,19 @@ mod tests {
 
     #[test]
     fn summed_partials_match_mechanism_variance() {
-        // S institutions' partials must sum to the calibrated law:
-        // check the empirical variance of the sum for both mechanisms.
+        // Under the all-honest assumption (h = S) the S partials must
+        // sum to exactly the calibrated law: check the empirical
+        // variance of the sum for both mechanisms.
         let d = 1usize;
         for mech in [DpMechanism::Gaussian, DpMechanism::Laplace] {
             let mut c = base();
             c.mechanism = mech;
+            c.min_honest = 4;
             if mech == DpMechanism::Laplace {
                 c.delta = 0.0;
             }
             let p = c.params_for_fit(500, 1.0, 4).unwrap();
+            assert_eq!(p.num_honest, 4);
             let target_var = match mech {
                 DpMechanism::Gaussian => p.gaussian_sigma().powi(2),
                 DpMechanism::Laplace => 2.0 * p.laplace_b(d).powi(2),
@@ -666,6 +976,35 @@ mod tests {
                 "{mech:?}: summed var {var} vs calibrated {target_var}"
             );
         }
+    }
+
+    #[test]
+    fn honest_subset_of_partials_reaches_full_variance() {
+        // h = 2 of S = 4: ANY 2 partials must already carry variance
+        // ≥ σ² — the margin that survives 2 colluders subtracting
+        // their own partials from the release.
+        let mut c = base();
+        c.min_honest = 2;
+        let p = c.params_for_fit(500, 1.0, 4).unwrap();
+        let sigma = p.gaussian_sigma();
+        let trials = 8_000;
+        let mut sumsq = 0.0;
+        for t in 0..trials {
+            let mut total = 0.0;
+            for j in 0..2u64 {
+                let mut rng = ChaCha20Rng::seed_from_u64(0xFACE + t as u64 * 37 + j * 104729);
+                let mut out = [0.0f64; 1];
+                sample_partial_noise(&p, 1, &mut rng, &mut out);
+                total += out[0];
+            }
+            sumsq += total * total;
+        }
+        let var = sumsq / f64::from(trials);
+        assert!(
+            (var - sigma * sigma).abs() < 0.1 * sigma * sigma,
+            "2 honest partials: var {var} vs σ² {}",
+            sigma * sigma
+        );
     }
 
     #[test]
@@ -772,9 +1111,18 @@ mod tests {
     }
 
     #[test]
-    fn screen_params_use_the_dosage_bound() {
+    fn screen_params_cover_the_joint_release() {
+        // Joint [U | b | q] sensitivity at clip C:
+        // √((2G)² + (CG/2)² + (G²/2)²) = √(20 + C²) at G = 2.
         let p = base().params_for_screen(5).unwrap();
-        assert!((p.sensitivity - 2.0 * SCREEN_DOSAGE_MAX).abs() < 1e-15);
+        assert!((p.sensitivity - 21.0f64.sqrt()).abs() < 1e-12);
         assert_eq!(p.num_partials, 5);
+        assert_eq!(p.num_honest, 1);
+        let mut c = base();
+        c.clip = 3.0;
+        c.min_honest = 2;
+        let p = c.params_for_screen(5).unwrap();
+        assert!((p.sensitivity - 29.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(p.num_honest, 2);
     }
 }

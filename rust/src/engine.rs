@@ -1425,6 +1425,63 @@ impl StudyEngine {
         shards: Vec<Arc<ShardData>>,
         opts: SubmitOptions,
     ) -> anyhow::Result<StudyHandle> {
+        self.submit_shared_inner(cfg, shards, opts, None)
+    }
+
+    /// [`StudyEngine::submit`] with the per-institution DP noise nonces
+    /// pinned to caller-chosen values instead of drawn from OS entropy.
+    ///
+    /// **Simulation/test escape hatch only.** In a deployment every
+    /// institution must keep its nonce secret ([`SessionSpec::dp_noise_seed`]);
+    /// pinning nonces from one place recreates exactly the
+    /// derivable-noise attack the secret nonces exist to close. This
+    /// entry point exists so fault-injection tests can run the SAME
+    /// nonces through two engines and assert byte-identical DP
+    /// releases.
+    pub fn submit_with_dp_nonces(
+        &self,
+        cfg: &ExperimentConfig,
+        ds: &Dataset,
+        opts: SubmitOptions,
+        dp_nonces: &[u64],
+    ) -> anyhow::Result<StudyHandle> {
+        anyhow::ensure!(
+            ds.num_institutions() == self.institutions,
+            "dataset has {} institutions, engine topology has {}",
+            ds.num_institutions(),
+            self.institutions
+        );
+        self.submit_shared_with_dp_nonces(cfg, ShardData::split(ds), opts, dp_nonces)
+    }
+
+    /// [`StudyEngine::submit_with_dp_nonces`] over pre-split shards.
+    pub fn submit_shared_with_dp_nonces(
+        &self,
+        cfg: &ExperimentConfig,
+        shards: Vec<Arc<ShardData>>,
+        opts: SubmitOptions,
+        dp_nonces: &[u64],
+    ) -> anyhow::Result<StudyHandle> {
+        anyhow::ensure!(
+            cfg.dp.is_some(),
+            "dp noise nonces supplied for a non-dp config"
+        );
+        anyhow::ensure!(
+            dp_nonces.len() == shards.len(),
+            "got {} dp nonces for {} institutions",
+            dp_nonces.len(),
+            shards.len()
+        );
+        self.submit_shared_inner(cfg, shards, opts, Some(dp_nonces))
+    }
+
+    fn submit_shared_inner(
+        &self,
+        cfg: &ExperimentConfig,
+        shards: Vec<Arc<ShardData>>,
+        opts: SubmitOptions,
+        dp_nonces: Option<&[u64]>,
+    ) -> anyhow::Result<StudyHandle> {
         cfg.validate()?;
         anyhow::ensure!(
             shards.len() == self.institutions,
@@ -1466,6 +1523,14 @@ impl StudyEngine {
                     session,
                     detail: e.to_string(),
                 })?;
+        }
+        if let Some(nonces) = dp_nonces {
+            // Test-only determinism: pin each institution's noise cell
+            // before the spec is published (first write wins, so the
+            // lazy OS-entropy draw in the workers never fires).
+            for (j, nonce) in nonces.iter().enumerate() {
+                spec.preset_dp_nonce(j as u16, *nonce);
+            }
         }
         let spec = Arc::new(spec);
         // Register first: workers look specs up lazily on first

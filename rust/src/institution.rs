@@ -486,27 +486,45 @@ fn handle_screen(
         .entry(key)
         .or_insert_with(|| Rc::new(ShareContext::new(spec.params)))
         .clone();
-    let share_seed = spec.institution_share_seed(j);
+    let mut poly_seed = derive_seed(spec.institution_share_seed(j), 0);
     if let Some(dp) = spec.dp {
-        // DP screen release: add this institution's partial noise to
-        // the U slot BEFORE sharing — by share linearity the
-        // reconstructed statistic is U + Σⱼ ηⱼ, with no extra protocol
-        // round. Same per-(session, institution) seed stream as the
-        // full-fit release, so replays stay byte-identical; distinct
-        // session ids give every SNP independent noise.
+        // DP screen release: the released χ² = U²/(q − bᵀ(F₀+λI)⁻¹b)
+        // and p-value read EVERY slot of the reconstructed summary, so
+        // every slot of [U | b | q] gets this institution's partial
+        // noise BEFORE sharing — by share linearity the coordinator
+        // reconstructs the jointly noised (d+2)-vector with no extra
+        // protocol round, and the downstream χ²/p are post-processing
+        // of it (the charged (ε, δ) covers the whole release through
+        // the joint sensitivity in `DpConfig::params_for_screen`).
+        //
+        // Both the noise values and the masking share polynomial are
+        // keyed from the institution's SECRET per-session nonce —
+        // never the shared config seed, which any participant could
+        // replay to strip the noise; a config-derived polynomial would
+        // likewise let a single shareholder unmask its share and read
+        // the partial off the wire. Nonces are per-session, so crash
+        // replays stay byte-identical and distinct SNPs (distinct
+        // session ids) draw independent noise.
+        let nonce = spec.dp_noise_seed(j)?;
         let mut rng = crate::util::rng::ChaCha20Rng::seed_from_u64(derive_seed(
-            share_seed,
+            nonce,
             crate::dp::DP_NOISE_STREAM,
         ));
-        let mut eta = [0.0f64];
-        crate::dp::sample_partial_noise(&dp, 1, &mut rng, &mut eta);
-        summary[0] += eta[0];
+        // The partial rides the tail of the reused summary buffer so
+        // the warm per-SNP path stays allocation-free.
+        summary.resize(2 * (d + 2), 0.0);
+        let (stat, eta) = summary.split_at_mut(d + 2);
+        crate::dp::sample_partial_noise(&dp, d + 2, &mut rng, eta);
+        for (slot, e) in stat.iter_mut().zip(eta.iter()) {
+            *slot += e;
+        }
+        poly_seed = derive_seed(nonce, crate::dp::DP_SHARE_STREAM);
     }
     encode_share_into_isa(
         &share_ctx,
         &spec.codec,
         &summary[..d + 2],
-        derive_seed(share_seed, 0),
+        poly_seed,
         spec.kernel_threads,
         spec.kernel_isa,
         pool,
@@ -535,16 +553,22 @@ fn handle_screen(
 }
 
 /// One DP release round: sample this institution's partial noise ηⱼ
-/// from its dedicated seed stream and Shamir-share `[ηⱼ | 0]` to every
-/// center through the same pooled zero-alloc pipeline as gradients.
+/// and Shamir-share `[ηⱼ | 0]` to every center through the same pooled
+/// zero-alloc pipeline as gradients.
 ///
-/// Stateless per session (no `sessions` entry), and — deliberately —
-/// a pure function of `(spec, j)`: the noise VALUES come from
-/// `derive_seed(share_seed, DP_NOISE_STREAM)` and the share
-/// POLYNOMIALS from `derive_seed(share_seed, DP_SHARE_STREAM)`, both
-/// per-(session, institution) and NOT per-iteration, so a crash
-/// replay of the release round reproduces byte-identical frames —
-/// recovery can neither re-randomize nor double-apply the release.
+/// Stateless per session (no `sessions` entry). The noise is keyed
+/// from the institution's SECRET per-session nonce
+/// ([`SessionSpec::dp_noise_seed`], drawn once from OS entropy — never
+/// from the shared config seed, which every participant knows and
+/// could replay to recompute η and strip it from the release): the
+/// noise VALUES come from `derive_seed(nonce, DP_NOISE_STREAM)` and
+/// the share POLYNOMIALS from `derive_seed(nonce, DP_SHARE_STREAM)` —
+/// a config-derived polynomial would let a single shareholder
+/// regenerate the mask and read ηⱼ off its own share. Both streams are
+/// per-(session, institution) and NOT per-iteration, and the nonce
+/// lives in the registry-held spec, so a crash replay of the release
+/// round reproduces byte-identical frames — recovery can neither
+/// re-randomize nor double-apply the release.
 #[allow(clippy::too_many_arguments)]
 fn handle_dp_noise(
     cfg: &InstitutionWorkerConfig,
@@ -579,9 +603,9 @@ fn handle_dp_noise(
     // deviance slot so the release round has the same share geometry
     // as a gradient round and centers fold it with the same code.
     summary.resize(d + 1, 0.0);
-    let share_seed = spec.institution_share_seed(j);
+    let nonce = spec.dp_noise_seed(j)?;
     let mut rng = crate::util::rng::ChaCha20Rng::seed_from_u64(derive_seed(
-        share_seed,
+        nonce,
         crate::dp::DP_NOISE_STREAM,
     ));
     crate::dp::sample_partial_noise(&dp, d, &mut rng, &mut summary[..d]);
@@ -595,7 +619,7 @@ fn handle_dp_noise(
         &share_ctx,
         &spec.codec,
         &summary[..d + 1],
-        derive_seed(share_seed, crate::dp::DP_SHARE_STREAM),
+        derive_seed(nonce, crate::dp::DP_SHARE_STREAM),
         spec.kernel_threads,
         spec.kernel_isa,
         pool,

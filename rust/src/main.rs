@@ -71,6 +71,11 @@ DP RELEASE FLAGS (fit/multifit/gwas/serve — opt-in, see rust/README §DP relea
                          with DpBudgetExhausted (0 = unlimited)      [0]
     --dp-budget-delta <f>    consortium δ budget (0 = unlimited)     [0]
     --dp-composition <c> basic | advanced (accountant rule)      [basic]
+    --dp-min-honest <n>  collusion threshold: partials are calibrated so
+                         any n honest institutions alone supply the full
+                         mechanism noise (1 = guarantee survives
+                         all-but-one collusion, at the cost of S× the
+                         nominal noise variance in the release)      [1]
     example:
         privlr gwas --snps 200 --dp-epsilon 0.5 --dp-budget-epsilon 25 \\
             --dp-budget-delta 1e-4
@@ -195,6 +200,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
         if let Some(c) = args.get("dp-composition") {
             dp.composition = privlr::dp::DpComposition::parse(c)?;
         }
+        dp.min_honest = args.get_f64("dp-min-honest", dp.min_honest as f64)? as usize;
         cfg.dp = Some(dp);
     }
     cfg.validate()?;
@@ -220,12 +226,14 @@ fn cmd_fit(args: &Args) -> anyhow::Result<()> {
     if let Some(dp) = &fit.dp {
         println!(
             "\nDP release: {} mechanism, ε={}, δ={:.1e}, sensitivity Δ₂={:.3e}, noise jointly \
-             sampled by {} institutions — the β̂ below is the NOISY release",
+             sampled by {} institutions (guarantee holds if ≥ {} are honest) — the β̂ below is \
+             the NOISY release",
             dp.mechanism.name(),
             dp.epsilon,
             dp.delta,
             dp.sensitivity,
             dp.num_partials,
+            dp.num_honest,
         );
     }
     println!("\nconverged in {} iterations", m.iterations);

@@ -77,9 +77,12 @@ impl ShardData {
 /// placeholders for processes holding no data (coordinator, centers).
 /// Every process's spec then agrees on topology (`num_institutions`,
 /// `d`) while raw records never leave the institution that owns them;
-/// β̂ stays bit-identical to the in-memory run because shares derive
-/// from `(master_seed, session, institution)` alone, never from which
-/// process evaluated them.
+/// a plain fit's β̂ stays bit-identical to the in-memory run because
+/// gradient shares derive from `(master_seed, session, institution)`
+/// alone, never from which process evaluated them. (A DP release is
+/// deliberately NOT reproducible from the config: its noise is keyed
+/// from each institution's secret local nonce —
+/// [`SessionSpec::dp_noise_seed`].)
 pub fn consortium_shards(
     total: usize,
     d: usize,
@@ -98,11 +101,15 @@ pub fn consortium_shards(
 /// one session of a remote consortium — the exact mirror of what
 /// `StudyEngine::submit_shared` builds on the coordinator, minus the
 /// data: sessions are numbered 1..=K in submission order (the engine's
-/// counter starts at 1), and every field is a pure function of the
-/// shared [`ExperimentConfig`](crate::config::ExperimentConfig), so
-/// specs never cross the wire. Workers fold shares bit-identically
+/// counter starts at 1), and every AGREED field is a pure function of
+/// the shared [`ExperimentConfig`](crate::config::ExperimentConfig),
+/// so specs never cross the wire. Workers fold shares bit-identically
 /// because the share seed ([`SessionSpec::institution_share_seed`])
-/// depends only on `(cfg.seed, session, institution)`.
+/// depends only on `(cfg.seed, session, institution)`. The one
+/// deliberate exception is the DP noise nonce
+/// ([`SessionSpec::dp_noise_seed`]): each process's spec copy fills
+/// its own institution's cell from local OS entropy, so DP releases
+/// are NOT reproducible from the config — by design.
 pub fn spec_for_consortium(
     session: SessionId,
     cfg: &crate::config::ExperimentConfig,
@@ -218,11 +225,25 @@ pub struct SessionSpec {
     /// sample output-perturbation noise as Shamir shares (see
     /// [`crate::dp`]) and the coordinator reconstructs β̂ + η — the
     /// non-private β̂ never appears in any transcript. For screen
-    /// sessions the partial noise is added to the statistic slot
-    /// before sharing instead (share linearity; no extra round).
-    /// `None` (the default from [`SessionSpec::new`]) keeps every
-    /// path bit-identical to the pre-DP engine.
+    /// sessions the partial noise is added to the `[U | b | q]`
+    /// summary before sharing instead (share linearity; no extra
+    /// round). `None` (the default from [`SessionSpec::new`]) keeps
+    /// every path bit-identical to the pre-DP engine.
     pub dp: Option<crate::dp::DpParams>,
+    /// Per-institution DP noise nonces — the SECRET seeds the release
+    /// noise derives from, one cell per institution, lazily filled
+    /// from the owning institution's OS entropy on its first noise
+    /// draw ([`SessionSpec::dp_noise_seed`]). Deliberately NOT a
+    /// function of `master_seed`: noise any participant could
+    /// recompute from the shared config could be subtracted from the
+    /// released β̂ + η, re-enabling the response-recovery attack the
+    /// DP layer closes. The cells live in the spec — which outlives
+    /// worker threads in the shared [`SessionRegistry`] — so a crash
+    /// replay of the release round re-reads the SAME nonce and stays
+    /// bit-identical; in multi-process `privlr serve` each process
+    /// owns its spec copy, so only institution j's process ever fills
+    /// (or sees) cell j and nonces never cross the wire.
+    dp_nonces: Vec<std::sync::OnceLock<u64>>,
 }
 
 impl SessionSpec {
@@ -254,6 +275,7 @@ impl SessionSpec {
             inst_metrics: (0..s).map(|_| Arc::new(InstMetricCells::default())).collect(),
             screen: None,
             dp: None,
+            dp_nonces: (0..s).map(|_| std::sync::OnceLock::new()).collect(),
         }
     }
 
@@ -288,10 +310,58 @@ impl SessionSpec {
     /// `(master_seed, session)`, then of the institution id — fully
     /// determined by the pair, so a session produces identical share
     /// streams whether it runs alone or among K concurrent fits.
-    /// (Simulation reproducibility; deployments use OS entropy.)
+    /// (Simulation reproducibility; deployments use OS entropy. DP
+    /// release noise is NEVER keyed from this — see
+    /// [`SessionSpec::dp_noise_seed`].)
     pub fn institution_share_seed(&self, institution: u16) -> u64 {
         let session_seed = crate::util::rng::derive_seed(self.master_seed, self.session as u64);
         crate::util::rng::derive_seed(session_seed, 0x5EED_0000 + institution as u64)
+    }
+
+    /// One institution's SECRET per-session DP noise nonce, drawn from
+    /// the OS entropy pool on first use and pinned for the session's
+    /// lifetime. Properties the DP layer's guarantee rests on:
+    ///
+    /// * **underivable** — independent of `master_seed` and every
+    ///   other config field, so no participant can recompute another
+    ///   institution's noise and subtract it from the release;
+    /// * **replay-stable** — the cell lives in the registry-held spec,
+    ///   which outlives worker threads, so a restarted worker or a
+    ///   duplicated `DpNoiseRequest` re-derives byte-identical noise
+    ///   frames and center-side dedup stays sound;
+    /// * **local** — each `privlr serve` process holds its own spec
+    ///   copy, so cell j is only ever touched inside institution j's
+    ///   process and the nonce never crosses the wire.
+    ///
+    /// Errors only if the platform entropy source fails.
+    pub fn dp_noise_seed(&self, institution: u16) -> anyhow::Result<u64> {
+        let cell = self
+            .dp_nonces
+            .get(institution as usize)
+            .ok_or_else(|| anyhow::anyhow!("institution {institution} outside session topology"))?;
+        if let Some(v) = cell.get() {
+            return Ok(*v);
+        }
+        let mut rng = crate::util::rng::ChaCha20Rng::from_os_entropy()
+            .map_err(|e| anyhow::anyhow!("drawing dp noise nonce from OS entropy: {e}"))?;
+        let fresh = crate::util::rng::Rng::next_u64(&mut rng);
+        // Two worker threads racing the first draw: one wins the cell,
+        // both read the winner — the losing draw is discarded.
+        let _ = cell.set(fresh);
+        Ok(*cell.get().expect("dp nonce cell just initialized"))
+    }
+
+    /// Pre-seed one institution's DP noise nonce — the determinism
+    /// escape hatch for SIMULATION and fault-injection tests that need
+    /// two engines to produce byte-identical DP releases. A deployment
+    /// never calls this: the nonce would otherwise be chosen by
+    /// whoever builds the spec, voiding the secrecy argument of
+    /// [`SessionSpec::dp_noise_seed`]. No effect if the cell was
+    /// already initialized (first write wins).
+    pub fn preset_dp_nonce(&self, institution: u16, nonce: u64) {
+        if let Some(cell) = self.dp_nonces.get(institution as usize) {
+            let _ = cell.set(nonce);
+        }
     }
 }
 
@@ -825,6 +895,38 @@ mod tests {
         assert_ne!(a.institution_share_seed(0), b.institution_share_seed(0));
         assert_ne!(a.institution_share_seed(0), a.institution_share_seed(1));
         assert_eq!(a.institution_share_seed(2), spec(1, 3, 5, 3, 4).institution_share_seed(2));
+    }
+
+    #[test]
+    fn dp_nonce_is_stable_per_spec_but_underivable_across_specs() {
+        let a = spec(1, 3, 5, 3, 4);
+        // Replay-stable: repeated draws on one spec return one value —
+        // the property center-side dedup of re-sent noise frames needs.
+        let first = a.dp_noise_seed(0).unwrap();
+        assert_eq!(first, a.dp_noise_seed(0).unwrap());
+        // Institutions draw independent nonces (2⁻⁶⁴ false-failure).
+        assert_ne!(a.dp_noise_seed(0).unwrap(), a.dp_noise_seed(1).unwrap());
+        // The attack surface the review closed: an IDENTICAL spec —
+        // same session id, same master seed, same topology, i.e.
+        // everything a config-reading adversary knows — must NOT
+        // reproduce the nonce. (Unlike institution_share_seed, which
+        // is config-pure by design.)
+        let twin = spec(1, 3, 5, 3, 4);
+        assert_ne!(first, twin.dp_noise_seed(0).unwrap());
+        // Out-of-topology institutions are rejected.
+        assert!(a.dp_noise_seed(99).is_err());
+    }
+
+    #[test]
+    fn dp_nonce_preset_pins_the_cell_first_write_wins() {
+        let a = spec(7, 2, 3, 2, 4);
+        a.preset_dp_nonce(0, 0xD00D);
+        assert_eq!(a.dp_noise_seed(0).unwrap(), 0xD00D);
+        // A later preset cannot move an initialized cell...
+        a.preset_dp_nonce(0, 0xBEEF);
+        assert_eq!(a.dp_noise_seed(0).unwrap(), 0xD00D);
+        // ...and presetting one cell leaves the others on OS entropy.
+        assert_ne!(a.dp_noise_seed(1).unwrap(), 0xD00D);
     }
 
     #[test]

@@ -150,6 +150,10 @@ fn released_beta_attack_closed_by_dp_release() {
     let params = fit_dp.dp.expect("DP fit must report its release params");
     assert_eq!(params.epsilon, 1.0);
     assert_eq!(params.num_partials, 2, "one partial noise term per institution");
+    assert_eq!(
+        params.num_honest, 1,
+        "default threat model: the guarantee survives all-but-one collusion"
+    );
     // sensitivity is 2·clip/λ of the SUMMED objective = 2·1/1
     assert!((params.sensitivity - 2.0).abs() < 1e-12, "Δ₂ {}", params.sensitivity);
     assert!(
@@ -157,8 +161,9 @@ fn released_beta_attack_closed_by_dp_release() {
         "a DP release must not ship the exact Fisher information"
     );
     // The coordinator really did add noise: at ε=1, δ=1e-6 the
-    // calibrated σ ≈ 10.6, so the released vector moves far from the
-    // non-private optimum.
+    // analytically calibrated σ ≈ 8.45 (and each institution alone
+    // supplies the full σ under min_honest = 1), so the released
+    // vector moves far from the non-private optimum.
     let max_diff = fit
         .beta
         .iter()

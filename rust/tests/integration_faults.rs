@@ -227,8 +227,8 @@ fn duplicated_and_delayed_frames_neither_corrupt_nor_double_count() {
 }
 
 /// DP noise-share frames (TAG 17) cannot double-apply noise. The
-/// release round's partial noise is a pure replay-stable function of
-/// `(session, institution)` and centers dedup submissions per
+/// release round's partial noise is a replay-stable function of the
+/// institution's per-session nonce and centers dedup submissions per
 /// `(iter, institution)`, so transport-duplicated and delayed noise
 /// frames — and even a duplicated noise REQUEST that makes an
 /// institution resample and re-send from scratch — leave the released
@@ -239,13 +239,20 @@ fn dp_noise_frames_survive_duplication_and_delay() {
     let ds = synthetic("dpfault", 600, 4, 2, 0.0, 1.0, 709);
     let mut cfg = cfg_3c();
     cfg.dp = Some(privlr::dp::DpConfig::default());
+    // In a deployment each institution draws its noise nonce from
+    // local OS entropy, which would make cross-engine β̂ comparison
+    // meaningless; the comparison runs here pin the SAME nonces through
+    // the test-only entry point so the byte-identity oracle is exact.
+    // They must also land on the same session id (fresh engines assign
+    // ids from the same counter; asserted below to keep the premise
+    // explicit), since the noise stream is keyed per session.
+    let nonces: [u64; 2] = [0xA1A1_0001, 0xB2B2_0002];
 
-    // Fault-free DP baseline. The noise stream is keyed by
-    // (master_seed, session, institution), so the comparison runs must
-    // land on the same session id — fresh engines assign ids from the
-    // same counter; asserted below to keep the premise explicit.
+    // Fault-free DP baseline.
     let clean = StudyEngine::new(2, 3).unwrap();
-    let h = clean.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let h = clean
+        .submit_with_dp_nonces(&cfg, &ds, SubmitOptions::default(), &nonces)
+        .unwrap();
     let sid_clean = h.session_id();
     let fit_clean = h.join().unwrap();
     let clean_bytes = clean.traffic().session_bytes(sid_clean);
@@ -274,7 +281,9 @@ fn dp_noise_frames_survive_duplication_and_delay() {
                 budget: 2,
             }),
     );
-    let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let h = engine
+        .submit_with_dp_nonces(&cfg, &ds, SubmitOptions::default(), &nonces)
+        .unwrap();
     assert_eq!(h.session_id(), sid_clean, "session ids must match for seed parity");
     let fit_faulted = h.join().unwrap();
     engine.clear_faults();
@@ -302,7 +311,9 @@ fn dp_noise_frames_survive_duplication_and_delay() {
         action: FaultAction::Duplicate,
         budget: 2,
     }));
-    let h = engine.submit(&cfg, &ds, SubmitOptions::default()).unwrap();
+    let h = engine
+        .submit_with_dp_nonces(&cfg, &ds, SubmitOptions::default(), &nonces)
+        .unwrap();
     assert_eq!(h.session_id(), sid_clean, "session ids must match for seed parity");
     let fit_resent = h.join().unwrap();
     engine.clear_faults();

@@ -10,10 +10,13 @@
 //!   from its machine-readable `bits=` output) is byte-identical to an
 //!   in-memory fit of the same config, across K=2 sessions.
 //! * **DP across processes** — with `--dp-epsilon` the six processes
-//!   jointly sample release noise as shares; the released β̂ is STILL
-//!   bit-identical to an in-memory DP fit (the noise streams are pure
-//!   functions of `(seed, session, institution)`), and differs from
-//!   the non-private β̂.
+//!   jointly sample release noise as shares; the released β̂ carries
+//!   calibrated noise (within the mechanism's envelope of the plain
+//!   β̂) yet is NOT reproducible from the shared config — each
+//!   institution keys its partial from its own OS entropy, so an
+//!   in-memory DP fit of the identical config yields a different
+//!   release. Config-derivable noise would let any participant strip
+//!   it.
 
 #![cfg(feature = "net")]
 
@@ -191,27 +194,45 @@ fn serve_processes_fit_bit_identically_to_in_memory() {
 }
 
 /// The DP release round works across REAL process boundaries: the six
-/// processes jointly sample the noise as shares, the released β̂ is
-/// bit-identical to an in-memory DP fit of the same session id, and
-/// carries calibrated noise (≠ the non-private β̂).
+/// processes jointly sample the noise as shares and the released β̂
+/// carries calibrated noise. Because every institution keys its
+/// partial from its own OS entropy, the release must differ BOTH from
+/// the non-private β̂ AND from an in-memory DP fit of the identical
+/// config — a release reproducible from config alone would mean any
+/// participant could recompute the noise and subtract it.
 #[test]
-fn serve_processes_release_dp_beta_bit_identically() {
+fn serve_processes_release_dp_beta_with_underivable_noise() {
     let mut cfg = shared_cfg();
     let plain = in_memory_betas(&cfg, 1);
     cfg.dp = Some(privlr::dp::DpConfig::default());
-    let base_dp = in_memory_betas(&cfg, 1);
+    let local_dp = in_memory_betas(&cfg, 1);
     let served = run_consortium(1, true, 4);
-    let same = served[0]
-        .iter()
-        .zip(&base_dp[0])
-        .all(|(x, y)| x.to_bits() == y.to_bits());
-    assert!(
-        same,
-        "DP serve β̂ {:?} != in-memory DP β̂ {:?}",
-        served[0], base_dp[0]
-    );
+
+    // Calibrated envelope: each of the S = 2 institutions alone
+    // supplies the full N(0, σ²) partial under the default
+    // min_honest = 1, so the summed noise has std σ·√2; 12 of those
+    // per coordinate bounds the release without flaking (false-failure
+    // ≈ 1e-32 per coordinate).
+    let sigma = privlr::dp::DpConfig::default()
+        .params_for_fit(600, cfg.lambda, 2)
+        .unwrap()
+        .gaussian_sigma();
+    let envelope = 12.0 * sigma * 2f64.sqrt();
+    for (k, (&s, &p)) in served[0].iter().zip(&plain[0]).enumerate() {
+        assert!(s.is_finite(), "released coordinate {k} not finite: {s}");
+        assert!(
+            (s - p).abs() <= envelope,
+            "coordinate {k}: |served − plain| = {} outside the {envelope:.1} noise envelope",
+            (s - p).abs()
+        );
+    }
     assert_ne!(
         served[0], plain[0],
         "the DP release must differ from the non-private β̂"
+    );
+    assert_ne!(
+        served[0], local_dp[0],
+        "a DP release reproducible from the shared config alone means every participant \
+         can recompute and strip the noise — the nonces must come from local entropy"
     );
 }

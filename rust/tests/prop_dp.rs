@@ -1,10 +1,12 @@
 //! Acceptance gates for the DP release layer ([`privlr::dp`]):
 //!
 //! * the institution-side noise path is **replay-stable and bitwise
-//!   deterministic**: the same `(session, institution)` seed produces
-//!   the same partial noise vector and the same share frames across
+//!   deterministic**: the same secret per-session nonce produces the
+//!   same partial noise vector and the same share frames across
 //!   `kernel_threads ∈ {1, 2, 4}` and ISA scalar/auto — a duplicated
-//!   or re-sent noise frame is indistinguishable from the original;
+//!   or re-sent noise frame is indistinguishable from the original —
+//!   while the nonce itself is NOT derivable from the shared config
+//!   (two specs built from identical config draw distinct nonces);
 //! * the value stream and the share-coefficient stream are domain
 //!   separated — re-keying one never perturbs the other;
 //! * center-side folds of partial-noise shares are **field-exact**:
@@ -79,17 +81,24 @@ fn params(mechanism: DpMechanism, s: usize) -> DpParams {
         delta: 1e-6,
         sensitivity: 2.0,
         num_partials: s,
+        // All-honest calibration: each gate below reasons about the
+        // sum of ALL S partials, so the partial scale must target
+        // exactly that sum. Collusion-threshold calibration (h < S)
+        // has its own unit gates in `privlr::dp`.
+        num_honest: s,
         rows: 100,
     }
 }
 
 /// One institution's noise round exactly as `handle_dp_noise` runs it:
 /// value stream keyed by `DP_NOISE_STREAM`, share coefficients by
-/// `DP_SHARE_STREAM`, summary layout `[η | 0.0]`.
+/// `DP_SHARE_STREAM` — both derived from the institution's secret
+/// per-session nonce (pinned here so the gates are deterministic) —
+/// summary layout `[η | 0.0]`.
 fn noise_round(
     p: &DpParams,
     d: usize,
-    share_seed: u64,
+    nonce: u64,
     threads: usize,
     isa: privlr::simd::Isa,
     ctx: &ShareContext,
@@ -97,14 +106,14 @@ fn noise_round(
     summary: &mut [f64],
     pool: &mut SharePool,
 ) {
-    let mut rng = ChaCha20Rng::seed_from_u64(derive_seed(share_seed, DP_NOISE_STREAM));
+    let mut rng = ChaCha20Rng::seed_from_u64(derive_seed(nonce, DP_NOISE_STREAM));
     sample_partial_noise(p, d, &mut rng, &mut summary[..d]);
     summary[d] = 0.0;
     encode_share_into_isa(
         ctx,
         codec,
         summary,
-        derive_seed(share_seed, DP_SHARE_STREAM),
+        derive_seed(nonce, DP_SHARE_STREAM),
         threads,
         isa,
         pool,
@@ -126,25 +135,25 @@ fn noise_round_bit_identical_across_threads_and_isa() {
     let scalar = resolve(KernelIsa::Scalar);
     for mech in [DpMechanism::Gaussian, DpMechanism::Laplace] {
         let p = params(mech, 3);
-        for share_seed in [1u64, 0xDEAD_BEEF, u64::MAX - 7] {
+        for nonce in [1u64, 0xDEAD_BEEF, u64::MAX - 7] {
             let mut ref_summary = vec![0.0; d + 1];
             let mut ref_pool = SharePool::new();
-            noise_round(&p, d, share_seed, 1, scalar, &ctx, &codec, &mut ref_summary, &mut ref_pool);
+            noise_round(&p, d, nonce, 1, scalar, &ctx, &codec, &mut ref_summary, &mut ref_pool);
             for threads in [1usize, 2, 4] {
                 for isa in [scalar, auto] {
                     let mut summary = vec![0.0; d + 1];
                     let mut pool = SharePool::new();
-                    noise_round(&p, d, share_seed, threads, isa, &ctx, &codec, &mut summary, &mut pool);
+                    noise_round(&p, d, nonce, threads, isa, &ctx, &codec, &mut summary, &mut pool);
                     // noise values bitwise equal (compare the bits: NaN-safe
                     // and stricter than ==)
                     for (a, b) in ref_summary.iter().zip(&summary) {
-                        assert_eq!(a.to_bits(), b.to_bits(), "{mech:?} seed={share_seed}");
+                        assert_eq!(a.to_bits(), b.to_bits(), "{mech:?} nonce={nonce}");
                     }
                     for holder in 0..5 {
                         assert_eq!(
                             ref_pool.holder(holder),
                             pool.holder(holder),
-                            "{mech:?} seed={share_seed} threads={threads} isa={isa:?} holder={holder}"
+                            "{mech:?} nonce={nonce} threads={threads} isa={isa:?} holder={holder}"
                         );
                     }
                 }
@@ -166,7 +175,7 @@ fn noise_and_share_streams_are_domain_separated() {
             "seed {share_seed}"
         );
     }
-    // different institutions (different share seeds) draw different noise
+    // different institutions (different nonces) draw different noise
     let p = params(DpMechanism::Gaussian, 2);
     let mut a = vec![0.0; 8];
     let mut b = vec![0.0; 8];
@@ -175,6 +184,49 @@ fn noise_and_share_streams_are_domain_separated() {
     sample_partial_noise(&p, 8, &mut rng_a, &mut a);
     sample_partial_noise(&p, 8, &mut rng_b, &mut b);
     assert_ne!(a, b);
+}
+
+/// Gate 1c: the noise nonce is stable within a spec (so crash replay
+/// reproduces byte-identical frames) but NOT a function of the shared
+/// config — two specs constructed from IDENTICAL (session, shards,
+/// scheme, seed) draw distinct nonces, so no participant can recompute
+/// another institution's noise stream from the config it already
+/// knows. This is the property that closes the noise-stripping attack.
+#[test]
+fn dp_nonce_is_not_derivable_from_the_shared_config() {
+    use privlr::linalg::Matrix;
+    use privlr::session::{SessionSpec, ShardData};
+    use std::sync::Arc;
+    let shard = || Arc::new(ShardData { x: Matrix::zeros(4, 2), y: vec![0.0; 4] });
+    let make = || {
+        SessionSpec::new(
+            7,
+            vec![shard(), shard()],
+            ShamirParams::new(2, 3).unwrap(),
+            FixedCodec::default(),
+            false,
+            1,
+            resolve(KernelIsa::Scalar),
+            424242,
+        )
+    };
+    let a = make();
+    let b = make();
+    for j in 0..2u16 {
+        let n_a = a.dp_noise_seed(j).unwrap();
+        assert_eq!(
+            n_a,
+            a.dp_noise_seed(j).unwrap(),
+            "replay within a spec must be stable"
+        );
+        assert_ne!(
+            n_a,
+            b.dp_noise_seed(j).unwrap(),
+            "twin specs from identical config must not share institution {j}'s nonce"
+        );
+    }
+    // Out-of-topology institutions are refused, not silently seeded.
+    assert!(a.dp_noise_seed(9).is_err());
 }
 
 /// Gate 2: center-side folds of partial-noise shares are field-exact.
